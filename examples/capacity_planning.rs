@@ -1,0 +1,87 @@
+//! Capacity planning with the analytic model (no serving involved):
+//! for a given model mix, sweep the offered load and print how the
+//! optimal configuration, predicted latency, and processor utilizations
+//! evolve — the "what can this box sustain?" question an operator asks
+//! before deployment.
+//!
+//! ```bash
+//! cargo run --release --example capacity_planning
+//! ```
+
+use swapless::alloc;
+use swapless::analytic::{AnalyticModel, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::model::Manifest;
+use swapless::tpu::CostModel;
+
+const MIX: [&str; 2] = ["efficientnet", "inceptionv4"];
+
+fn main() -> Result<(), String> {
+    let manifest = Manifest::load("artifacts")?;
+    let hw = HardwareSpec::default();
+    let am = AnalyticModel::new(CostModel::new(hw.clone()));
+
+    println!("capacity plan for mix {MIX:?} (equal request split)\n");
+    println!(
+        "{:>9}  {:<12} {:<10} {:>9} {:>9} {:>11} {:>10}",
+        "total RPS", "partitions", "cores", "ρ(TPU)", "mean ms", "objective", "evals"
+    );
+
+    let mut saturation = None;
+    for step in 1..=24 {
+        let total = step as f64 * 0.5;
+        let tenants: Vec<Tenant> = MIX
+            .iter()
+            .map(|n| {
+                Ok(Tenant {
+                    model: manifest.get(n)?.clone(),
+                    rate: total / MIX.len() as f64,
+                })
+            })
+            .collect::<Result<_, String>>()?;
+        let plan = alloc::hill_climb(&am, &tenants, hw.cpu_cores);
+        let mean = am.mean_latency(&tenants, &plan.config);
+        let rho = am.tpu_utilization(&tenants, &plan.config);
+        if !mean.is_finite() {
+            saturation = Some(total);
+            println!("{total:>9.1}  -- infeasible: no stable configuration --");
+            break;
+        }
+        println!(
+            "{:>9.1}  {:<12} {:<10} {:>9.2} {:>9.1} {:>11.4} {:>10}",
+            total,
+            format!("{:?}", plan.config.partitions),
+            format!("{:?}", plan.config.cores),
+            rho,
+            mean * 1e3,
+            plan.predicted_objective,
+            plan.evaluations
+        );
+    }
+    match saturation {
+        Some(rate) => println!("\nsaturation: the mix cannot sustain {rate:.1} RPS on this hardware."),
+        None => println!("\nno saturation within the swept range."),
+    }
+
+    // What-if: double the SRAM (a hypothetical next-gen Edge TPU).
+    let mut hw2 = hw.clone();
+    hw2.sram_bytes *= 2;
+    let am2 = AnalyticModel::new(CostModel::new(hw2));
+    let tenants: Vec<Tenant> = MIX
+        .iter()
+        .map(|n| {
+            Ok(Tenant {
+                model: manifest.get(n)?.clone(),
+                rate: 2.0,
+            })
+        })
+        .collect::<Result<_, String>>()?;
+    let base = alloc::hill_climb(&am, &tenants, hw.cpu_cores);
+    let doubled = alloc::hill_climb(&am2, &tenants, hw.cpu_cores);
+    println!(
+        "\nwhat-if @4 RPS total: 8 MB SRAM -> {:.1} ms | 16 MB SRAM -> {:.1} ms",
+        am.mean_latency(&tenants, &base.config) * 1e3,
+        am2.mean_latency(&tenants, &doubled.config) * 1e3
+    );
+    Ok(())
+}

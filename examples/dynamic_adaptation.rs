@@ -1,0 +1,134 @@
+//! Live dynamic adaptation (the Fig. 8 scenario at compressed timescale):
+//! two models served through the real stack while the request mix shifts;
+//! the online re-allocator detects the change from its sliding window and
+//! re-partitions on the fly. Watch the config flips in the output.
+//!
+//! ```bash
+//! cargo run --release --example dynamic_adaptation
+//! ```
+
+use std::time::{Duration, Instant};
+
+use swapless::alloc;
+use swapless::analytic::Tenant;
+use swapless::config::{HardwareSpec, RuntimeConfig};
+use swapless::coordinator::{Server, ServerOptions};
+use swapless::model::Manifest;
+use swapless::tpu::CostModel;
+use swapless::util::rng::Rng;
+
+const MODELS: [&str; 2] = ["mnasnet", "squeezenet"];
+/// Three phases of (mnasnet, squeezenet) RPS — squeezenet ramps up.
+const PHASES: [(f64, f64); 3] = [(6.0, 1.0), (6.0, 8.0), (1.0, 12.0)];
+const PHASE_S: f64 = 6.0;
+
+fn main() -> Result<(), String> {
+    let manifest = Manifest::load("artifacts")?;
+    let hw = HardwareSpec::default();
+    let cost = CostModel::new(hw.clone());
+    let am = swapless::analytic::AnalyticModel::new(cost.clone());
+    let names: Vec<String> = MODELS.iter().map(|s| s.to_string()).collect();
+    let tenants: Vec<Tenant> = MODELS
+        .iter()
+        .zip([PHASES[0].0, PHASES[0].1])
+        .map(|(n, r)| {
+            Ok(Tenant {
+                model: manifest.get(n)?.clone(),
+                rate: r,
+            })
+        })
+        .collect::<Result<_, String>>()?;
+
+    let initial = alloc::hill_climb(&am, &tenants, hw.cpu_cores).config;
+    println!(
+        "initial plan: P={:?} K={:?}",
+        initial.partitions, initial.cores
+    );
+
+    let server = Server::start(
+        &manifest,
+        &names,
+        cost,
+        initial,
+        ServerOptions {
+            adaptive: true,
+            runtime: RuntimeConfig {
+                rate_window_s: 4.0,
+                realloc_period_s: 1.0,
+                realloc_threshold: 0.3,
+            },
+            ..Default::default()
+        },
+    )
+    .map_err(|e| e.to_string())?;
+
+    let mut rng = Rng::new(11);
+    let t0 = Instant::now();
+    let mut last_cfg = server.current_config();
+    let mut pending = Vec::new();
+    for (phase, (r0, r1)) in PHASES.iter().enumerate() {
+        println!("\n-- phase {phase}: rates = ({r0}, {r1}) rps --");
+        let phase_end = (phase as f64 + 1.0) * PHASE_S;
+        let rates = [*r0, *r1];
+        let mut next_at = [
+            t0.elapsed().as_secs_f64() + rng.exponential(rates[0]),
+            t0.elapsed().as_secs_f64() + rng.exponential(rates[1]),
+        ];
+        loop {
+            let now = t0.elapsed().as_secs_f64();
+            if now >= phase_end {
+                break;
+            }
+            let m = if next_at[0] <= next_at[1] { 0 } else { 1 };
+            if next_at[m] > phase_end {
+                std::thread::sleep(Duration::from_secs_f64(
+                    (phase_end - now).max(0.0).min(0.05),
+                ));
+                continue;
+            }
+            if next_at[m] > now {
+                std::thread::sleep(Duration::from_secs_f64(next_at[m] - now));
+            }
+            let n_in: usize = server.tenants()[m].model.input_shape.iter().product();
+            pending.push(server.submit(m, vec![0.5; n_in]));
+            next_at[m] += rng.exponential(rates[m]);
+
+            let cfg = server.current_config();
+            if cfg != last_cfg {
+                println!(
+                    "  t={:.1}s reconfigured: P={:?} K={:?}",
+                    t0.elapsed().as_secs_f64(),
+                    cfg.partitions,
+                    cfg.cores
+                );
+                last_cfg = cfg;
+            }
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv();
+    }
+    let stats = server.stats();
+    println!("\nserved {} requests total", stats.completed);
+    for (i, h) in stats.per_model.iter().enumerate() {
+        if h.count() > 0 {
+            println!(
+                "  {:<12} n={:<5} mean {:>6.1} ms  p95 {:>6.1} ms",
+                MODELS[i],
+                h.count(),
+                h.mean() * 1e3,
+                h.percentile(95.0) * 1e3
+            );
+        }
+    }
+    println!(
+        "reconfigurations: {}; allocator decisions recorded: {} (max {:.0} µs)",
+        stats.reconfigs,
+        stats.decision_micros.len(),
+        stats
+            .decision_micros
+            .iter()
+            .fold(0.0f64, |a, b| a.max(*b))
+    );
+    Ok(())
+}

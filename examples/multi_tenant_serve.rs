@@ -1,0 +1,137 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): serve a multi-tenant mix of
+//! real models through the full three-layer stack — Pallas-kernel HLO
+//! artifacts executed via PJRT, SwapLess partitioning, per-model CPU
+//! pools — under open-loop Poisson load, and report latency/throughput
+//! for the SwapLess plan vs the Edge-TPU-compiler baseline.
+//!
+//! ```bash
+//! cargo run --release --example multi_tenant_serve
+//! ```
+
+use std::time::{Duration, Instant};
+
+use swapless::alloc;
+use swapless::analytic::{AnalyticModel, Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::coordinator::{Server, ServerOptions};
+use swapless::model::Manifest;
+use swapless::tpu::CostModel;
+use swapless::util::rng::Rng;
+
+const MODELS: [&str; 3] = ["mobilenetv2", "squeezenet", "efficientnet"];
+const RATES: [f64; 3] = [8.0, 6.0, 4.0]; // requests/second, open loop
+const DURATION_S: f64 = 12.0;
+
+fn main() -> Result<(), String> {
+    let manifest = Manifest::load("artifacts")?;
+    let hw = HardwareSpec::default();
+    let cost = CostModel::new(hw.clone());
+    let am = AnalyticModel::new(cost.clone());
+    let names: Vec<String> = MODELS.iter().map(|s| s.to_string()).collect();
+
+    let tenants: Vec<Tenant> = MODELS
+        .iter()
+        .zip(RATES)
+        .map(|(n, r)| {
+            Ok(Tenant {
+                model: manifest.get(n)?.clone(),
+                rate: r,
+            })
+        })
+        .collect::<Result<_, String>>()?;
+
+    let swapless_plan = alloc::hill_climb(&am, &tenants, hw.cpu_cores);
+    let compiler_plan = alloc::edge_tpu_compiler(&am, &tenants);
+    println!("workload: {MODELS:?} @ {RATES:?} rps, {DURATION_S}s each config");
+    println!(
+        "swapless plan: P={:?} K={:?}",
+        swapless_plan.config.partitions, swapless_plan.config.cores
+    );
+    println!(
+        "compiler plan: P={:?} K={:?}",
+        compiler_plan.config.partitions, compiler_plan.config.cores
+    );
+
+    for (label, cfg) in [
+        ("edge-tpu-compiler", compiler_plan.config),
+        ("swapless", swapless_plan.config),
+    ] {
+        run_config(&manifest, &names, &cost, cfg, label)?;
+    }
+    Ok(())
+}
+
+fn run_config(
+    manifest: &Manifest,
+    names: &[String],
+    cost: &CostModel,
+    cfg: Config,
+    label: &str,
+) -> Result<(), String> {
+    let server = Server::start(
+        manifest,
+        names,
+        cost.clone(),
+        cfg,
+        ServerOptions {
+            adaptive: false,
+            ..Default::default()
+        },
+    )
+    .map_err(|e| e.to_string())?;
+
+    // Open-loop Poisson generator per model (merged, single thread).
+    let mut rng = Rng::new(7);
+    let mut next_at: Vec<f64> = RATES
+        .iter()
+        .enumerate()
+        .map(|(m, r)| rng.fork(m as u64).exponential(*r))
+        .collect();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut issued = 0usize;
+    while t0.elapsed().as_secs_f64() < DURATION_S {
+        let now = t0.elapsed().as_secs_f64();
+        let (m, t_next) = next_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, t)| (i, *t))
+            .unwrap();
+        if t_next > DURATION_S {
+            break;
+        }
+        if t_next > now {
+            std::thread::sleep(Duration::from_secs_f64(t_next - now));
+        }
+        let n_in: usize = server.tenants()[m].model.input_shape.iter().product();
+        pending.push(server.submit(m, vec![0.5; n_in]));
+        issued += 1;
+        next_at[m] += rng.exponential(RATES[m]);
+    }
+    // Drain.
+    let mut errors = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => {}
+            _ => errors += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!("\n[{label}] {issued} issued, {} completed, {errors} errors, {:.1} req/s", stats.completed, stats.completed as f64 / wall);
+    for (i, h) in stats.per_model.iter().enumerate() {
+        if h.count() > 0 {
+            println!(
+                "  {:<14} n={:<5} mean {:>7.1} ms   p50 {:>7.1}   p95 {:>7.1}   max {:>7.1}",
+                names[i],
+                h.count(),
+                h.mean() * 1e3,
+                h.percentile(50.0) * 1e3,
+                h.percentile(95.0) * 1e3,
+                h.max() * 1e3
+            );
+        }
+    }
+    Ok(())
+}

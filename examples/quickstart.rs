@@ -1,0 +1,71 @@
+//! Quickstart: load one model's AOT artifacts, plan a partition with the
+//! analytic model, and serve a few requests through the full stack.
+//!
+//! ```bash
+//! make artifacts            # once
+//! cargo run --release --example quickstart
+//! ```
+
+use swapless::alloc;
+use swapless::analytic::{AnalyticModel, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::coordinator::{Server, ServerOptions};
+use swapless::model::Manifest;
+use swapless::tpu::CostModel;
+
+fn main() -> Result<(), String> {
+    // 1. Load the artifact manifest produced by `python -m compile.aot`.
+    let manifest = Manifest::load("artifacts")?;
+    let model = "mobilenetv2";
+    let meta = manifest.get(model)?;
+    println!(
+        "{model}: {} segments, {:.1} MB (Table II scale), input {:?}",
+        meta.partition_points, meta.table_size_mb, meta.input_shape
+    );
+
+    // 2. Ask the analytic queueing model for the best partition at 3 RPS.
+    let hw = HardwareSpec::default();
+    let am = AnalyticModel::new(CostModel::new(hw.clone()));
+    let tenants = vec![Tenant {
+        model: meta.clone(),
+        rate: 3.0,
+    }];
+    let plan = alloc::hill_climb(&am, &tenants, hw.cpu_cores);
+    println!(
+        "plan @3 RPS: TPU prefix = {} of {} segments, {} CPU cores, predicted e2e {:.1} ms",
+        plan.config.partitions[0],
+        meta.partition_points,
+        plan.config.cores[0],
+        am.e2e_latency(&tenants, &plan.config, 0) * 1e3
+    );
+
+    // 3. Serve real requests through the PJRT runtime under that plan.
+    let server = Server::start(
+        &manifest,
+        &[model.to_string()],
+        CostModel::new(hw),
+        plan.config,
+        ServerOptions::default(),
+    )
+    .map_err(|e| e.to_string())?;
+
+    let n_in: usize = meta.input_shape.iter().product();
+    for i in 0..5 {
+        let out = server
+            .infer(0, vec![0.5; n_in])
+            .map_err(|e| e.to_string())?;
+        println!(
+            "request {i}: {} logits, first = {:.4}, latency {:.1} ms",
+            out.output.len(),
+            out.output[0],
+            out.latency_s * 1e3
+        );
+    }
+    let stats = server.stats();
+    println!(
+        "done: {} requests, mean {:.1} ms",
+        stats.completed,
+        stats.per_model[0].mean() * 1e3
+    );
+    Ok(())
+}

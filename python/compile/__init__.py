@@ -1,0 +1,6 @@
+"""SwapLess build-time Python: Pallas kernels (L1), JAX model zoo (L2), AOT.
+
+Nothing in this package is imported at serve time — ``aot.py`` lowers every
+model segment to an HLO-text artifact once, and the rust coordinator (L3)
+loads and executes the artifacts through PJRT.
+"""

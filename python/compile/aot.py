@@ -1,0 +1,115 @@
+"""AOT compile path: lower every model segment to an HLO-text artifact.
+
+Run once via ``make artifacts``; the rust binary is self-contained after.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs:
+  artifacts/<model>/seg<j>.hlo.txt   one per segment
+  artifacts/manifest.json            zoo metadata the rust side consumes
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import zoo
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path).
+
+    Two printer details matter for the rust loader:
+      * ``print_large_constants=True`` — the default printer elides big
+        literals as ``{...}``, which the XLA 0.5.1 text parser silently
+        reads back as *zeros* (all model weights would vanish);
+      * ``print_metadata=False`` — jax ≥0.5 emits ``source_end_line``-style
+        metadata attributes the 0.5.1 parser rejects outright.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    mod = xc._xla.HloModule.from_serialized_hlo_module_proto(
+        comp.as_serialized_hlo_module_proto()
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return mod.to_string(opts)
+
+
+def lower_segment(mdl: M.ModelDef, i: int, use_pallas: bool = True) -> str:
+    fn = M.segment_fn(mdl, i, use_pallas=use_pallas)
+    spec = jax.ShapeDtypeStruct(mdl.infos[i].in_shape, jax.numpy.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def compile_model(name: str, out_dir: str, use_pallas: bool = True, quiet: bool = False) -> dict:
+    mdl = M.build_model(name)
+    model_dir = os.path.join(out_dir, name)
+    os.makedirs(model_dir, exist_ok=True)
+    for i in range(mdl.num_segments):
+        t0 = time.time()
+        text = lower_segment(mdl, i, use_pallas=use_pallas)
+        path = os.path.join(model_dir, f"seg{i}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        if not quiet:
+            print(
+                f"  {name}/seg{i}: {len(text)} chars, "
+                f"in={mdl.infos[i].in_shape} out={mdl.infos[i].out_shape} "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return M.scaled_manifest_entry(mdl)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="SwapLess AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--models", default="all", help="comma list or 'all'")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference path instead of the Pallas kernels",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    names = zoo.model_names() if args.models == "all" else args.models.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "input_dtype": "f32",
+        "kernel_path": "ref" if args.no_pallas else "pallas",
+        "models": [],
+    }
+    t0 = time.time()
+    for name in names:
+        print(f"[aot] {name}", flush=True)
+        manifest["models"].append(
+            compile_model(name, args.out, use_pallas=not args.no_pallas, quiet=args.quiet)
+        )
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {path} ({time.time() - t0:.1f}s total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only; never on the request path).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and the
+real-TPU performance is estimated analytically (see DESIGN.md §8).
+
+Kernels:
+  - :mod:`matmul`    — MXU-tiled matmul with fused bias + activation epilogue.
+  - :mod:`conv2d`    — convolution as im2col + the tiled matmul kernel.
+  - :mod:`depthwise` — per-channel (depthwise) convolution.
+  - :mod:`ref`       — pure-jnp oracles every kernel is tested against.
+"""
+
+from . import matmul, conv2d, depthwise, ref  # noqa: F401

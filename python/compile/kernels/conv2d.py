@@ -1,0 +1,107 @@
+"""Convolution as im2col + the MXU-tiled Pallas matmul.
+
+This mirrors how the Edge TPU actually executes convolutions: the systolic
+array only multiplies matrices, so the compiler rewrites each conv into
+patch-extraction (data movement) followed by a weight-stationary matmul.
+The matmul — the hot-spot — is the Pallas kernel in :mod:`matmul`; patch
+extraction is pure data movement and stays in XLA where it fuses with the
+surrounding reshape/transpose ops.
+
+VMEM accounting (DESIGN.md §4): the matmul sees M = N*Ho*Wo rows and
+K = kh*kw*Cin contracting size. For every conv in the model zoo the chosen
+block shapes keep one (x, w, acc) block triple under the 8 MB budget —
+asserted by :func:`check_vmem` at AOT time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+# The Edge TPU analogue: on-chip scratchpad budget for one kernel step.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _out_dim(size: int, k: int, stride: int, padding: str) -> int:
+    if padding == "SAME":
+        return -(-size // stride)
+    return (size - k) // stride + 1
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str) -> jax.Array:
+    """f32[N,H,W,C] -> f32[N*Ho*Wo, kh*kw*C] patch matrix."""
+    n, h, w, c = x.shape
+    ho = _out_dim(h, kh, stride, padding)
+    wo = _out_dim(w, kw, stride, padding)
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # patches feature dim is ordered C * kh * kw (channel-major); reorder to
+    # kh*kw*C to match HWIO weight reshape.
+    patches = patches.reshape(n, ho, wo, c, kh * kw)
+    patches = jnp.swapaxes(patches, 3, 4)
+    return patches.reshape(n * ho * wo, kh * kw * c)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: str = "none",
+) -> jax.Array:
+    """NHWC convolution through the Pallas matmul kernel.
+
+    Args:
+      x: f32[N, H, W, Cin].
+      w: f32[kh, kw, Cin, Cout] (HWIO).
+      bias: optional f32[Cout], fused.
+      act: fused activation (``none | relu | relu6 | sigmoid``).
+    """
+    n, h, w_in, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    if wcin != cin:
+        raise ValueError(f"channel mismatch: x has {cin}, w has {wcin}")
+    ho = _out_dim(h, kh, stride, padding)
+    wo = _out_dim(w_in, kw, stride, padding)
+
+    cols = im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = mm.matmul(cols, wmat, bias, act=act)
+    return out.reshape(n, ho, wo, cout)
+
+
+def matmul_dims(in_shape, kh: int, kw: int, cout: int, stride: int, padding: str):
+    """(M, K, N) of the underlying matmul for cost/utilization estimates."""
+    n, h, w, cin = in_shape
+    ho = _out_dim(h, kh, stride, padding)
+    wo = _out_dim(w, kw, stride, padding)
+    return n * ho * wo, kh * kw * cin, cout
+
+
+def check_vmem(in_shape, kh: int, kw: int, cout: int, stride: int, padding: str) -> int:
+    """VMEM bytes for one kernel step; raises if over budget."""
+    m, k, n = matmul_dims(in_shape, kh, kw, cout, stride, padding)
+    bm = min(mm.BLOCK_M, max(8, m))
+    bn = min(mm.BLOCK_N, max(8, n))
+    bk = min(mm.BLOCK_K, max(8, k))
+    bytes_ = mm.vmem_bytes(bm, bn, bk)
+    if bytes_ > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"conv block ({bm},{bn},{bk}) needs {bytes_} B VMEM > {VMEM_BUDGET_BYTES}"
+        )
+    return bytes_
+
+
+def mxu_utilization(in_shape, kh: int, kw: int, cout: int, stride: int, padding: str) -> float:
+    """Systolic-array fill fraction of this conv — drives the TPU cost model."""
+    m, k, n = matmul_dims(in_shape, kh, kw, cout, stride, padding)
+    return mm.mxu_utilization(m, n, k)

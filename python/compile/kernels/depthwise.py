@@ -1,0 +1,118 @@
+"""Depthwise-convolution Pallas kernel.
+
+Depthwise convs have no cross-channel reuse, so on the Edge TPU they cannot
+fill the systolic array — they execute on the VPU-like elementwise path.
+That is exactly why the paper's Fig. 3 finds late / depthwise-heavy segments
+run as well on the CPU as on the TPU (the collaborative-processing
+opportunity). We keep the kernel faithful to that structure: a grid over
+channel blocks, each step doing kh*kw shifted multiply-accumulates — an
+elementwise schedule, not an MXU one.
+
+The mxu_utilization of a depthwise layer is therefore reported as the VPU
+fallback constant (~0.04 of MXU peak), which the rust TPU cost model uses
+to derive the Fig. 3 speedup shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Effective throughput vs MXU peak when a layer falls off the systolic array.
+VPU_FALLBACK_UTILIZATION = 0.04
+
+BLOCK_C = 128
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, stride, ho, wo, act):
+    """One channel-block: out[ho, wo, bc] = sum_ij x[i::s, j::s, :] * w[i, j, :]."""
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            window = jax.lax.dynamic_slice(
+                x, (i, j, 0), (1 + (ho - 1) * stride, 1 + (wo - 1) * stride, x.shape[2])
+            )
+            acc += window[::stride, ::stride, :] * w[i, j, :][None, None, :]
+    acc += b_ref[...][None, None, :]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act == "relu6":
+        acc = jnp.clip(acc, 0.0, 6.0)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "act", "block_c"))
+def depthwise_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    act: str = "none",
+    block_c: int = BLOCK_C,
+) -> jax.Array:
+    """Depthwise NHWC conv via Pallas. x: f32[N,H,W,C], w: f32[kh,kw,C]."""
+    n, h, w_in, c = x.shape
+    kh, kw, wc = w.shape
+    if wc != c:
+        raise ValueError(f"channel mismatch: x has {c}, w has {wc}")
+    if act not in ("none", "relu", "relu6"):
+        raise ValueError(f"unsupported fused activation {act!r}")
+
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w_in // stride)
+        pad_h = max(0, (ho - 1) * stride + kh - h)
+        pad_w = max(0, (wo - 1) * stride + kw - w_in)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+                (0, 0),
+            ),
+        )
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w_in - kw) // stride + 1
+    else:
+        raise ValueError(f"unknown padding {padding!r}")
+
+    bias = jnp.zeros((c,), jnp.float32) if bias is None else bias.astype(jnp.float32)
+
+    bc = min(block_c, c)
+    rem = (-c) % bc
+    if rem:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, rem)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, rem)))
+        bias = jnp.pad(bias, (0, rem))
+    cp = x.shape[-1]
+    hp, wp = x.shape[1], x.shape[2]
+
+    kern = functools.partial(
+        _dw_kernel, kh=kh, kw=kw, stride=stride, ho=ho, wo=wo, act=act
+    )
+
+    def one_image(xi):
+        return pl.pallas_call(
+            kern,
+            grid=(cp // bc,),
+            in_specs=[
+                pl.BlockSpec((hp, wp, bc), lambda i: (0, 0, i)),
+                pl.BlockSpec((kh, kw, bc), lambda i: (0, 0, i)),
+                pl.BlockSpec((bc,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((ho, wo, bc), lambda i: (0, 0, i)),
+            out_shape=jax.ShapeDtypeStruct((ho, wo, cp), jnp.float32),
+            interpret=True,
+        )(xi.astype(jnp.float32), w.astype(jnp.float32), bias)
+
+    out = jax.vmap(one_image)(x)
+    return out[..., :c]

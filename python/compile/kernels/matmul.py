@@ -1,0 +1,186 @@
+"""MXU-tiled matmul Pallas kernel with fused bias + activation epilogue.
+
+This is the compute hot-spot of every convolutional segment: on the Edge
+TPU the systolic array consumes weight tiles streamed from SRAM, and we
+express the identical schedule with a Pallas grid over (M, N, K) blocks.
+
+Hardware-adaptation notes (DESIGN.md §4):
+  * The MXU is a 128x128 systolic array — block sizes default to multiples
+    of (8, 128) so a real-TPU lowering would map one block per MXU pass.
+  * VMEM budget: one x-block (bm*bk), one w-block (bk*bn), one accumulator
+    (bm*bn) must fit in ~8 MB together with double-buffering headroom.
+    With the defaults (128, 128, 128) @ f32 that is 3 * 64 KiB per step,
+    leaving VMEM for the pipelined next tiles — the same "weights stream
+    through a small resident window" behaviour the Edge TPU's SRAM cache
+    exhibits for over-sized models.
+  * K is the innermost grid axis so the accumulator stays resident while
+    weight tiles stream — minimizing HBM↔VMEM traffic exactly like the
+    Edge TPU minimizes host↔SRAM swaps within one segment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned block shapes.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+_ACTIVATIONS = ("none", "relu", "relu6", "sigmoid")
+
+
+def _epilogue(acc, bias, act: str):
+    if bias is not None:
+        acc = acc + bias
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif act == "relu6":
+        acc = jnp.clip(acc, 0.0, 6.0)
+    elif act == "sigmoid":
+        acc = jax.nn.sigmoid(acc)
+    return acc
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int, act: str):
+    """Grid = (M/bm, N/bn, K/bk); accumulate into o_ref across the K axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    if act != "none":
+
+        @pl.when(pl.program_id(2) == nk - 1)
+        def _act():
+            o_ref[...] = _epilogue(o_ref[...], None, act)
+
+
+def _mm_bias_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _fused():
+        o_ref[...] = _epilogue(o_ref[...], b_ref[...][None, :], act)
+
+
+def _pad_to(x, multiple: int, axis: int):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "block_m", "block_n", "block_k")
+)
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    act: str = "none",
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+) -> jax.Array:
+    """``act(x @ w + bias)`` via a Pallas MXU-tiled kernel.
+
+    Args:
+      x: f32[M, K] activations.
+      w: f32[K, N] weights.
+      bias: optional f32[N], fused into the final K-step.
+      act: one of ``none | relu | relu6 | sigmoid`` — fused epilogue.
+
+    Shapes are zero-padded up to block multiples and the result sliced back,
+    so arbitrary (M, K, N) are accepted.
+    """
+    if act not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; want one of {_ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul wants rank-2 operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contracting dims differ: {x.shape} @ {w.shape}")
+
+    m, k = x.shape
+    _, n = w.shape
+    # Shrink blocks for small problems so the grid is never empty.
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    bk = min(block_k, max(8, k))
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), bk, 0), bn, 1)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+
+    if bias is None:
+        kern = functools.partial(_mm_kernel, nk=grid[2], act=act)
+        out = pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, wp)
+    else:
+        if bias.shape != (n,):
+            raise ValueError(f"bias shape {bias.shape} != ({n},)")
+        bp = _pad_to(bias.astype(jnp.float32), bn, 0)
+        b_spec = pl.BlockSpec((bn,), lambda i, j, kk: (j,))
+        kern = functools.partial(_mm_bias_kernel, nk=grid[2], act=act)
+        out = pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[x_spec, w_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=True,
+        )(xp, wp, bp)
+
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m: int = BLOCK_M, block_n: int = BLOCK_N, block_k: int = BLOCK_K) -> int:
+    """Estimated VMEM residency of one grid step (f32, double-buffered inputs)."""
+    x_blk = block_m * block_k * 4
+    w_blk = block_k * block_n * 4
+    acc = block_m * block_n * 4
+    return 2 * (x_blk + w_blk) + acc
+
+
+def mxu_utilization(m: int, n: int, k: int) -> float:
+    """Fraction of the 128x128 MXU a (m, n, k) matmul keeps busy.
+
+    Mirrors the Edge TPU's systolic-array behaviour: small N/M (late, narrow
+    layers) underfill the array — the root of Fig. 3's 'late layers run as
+    well on the CPU' observation.
+    """
+    fill_m = min(m, 128) / 128.0
+    fill_n = min(n, 128) / 128.0
+    # K only pipelines; below 128 the array drains early.
+    fill_k = min(k, 128) / 128.0
+    return max(1e-3, fill_m * fill_n * (0.5 + 0.5 * fill_k))

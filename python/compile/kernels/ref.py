@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+These implementations use only ``jax.numpy`` / ``jax.lax`` primitives and are
+deliberately written in the most obvious way possible. ``python/tests``
+asserts each Pallas kernel against these within float32 tolerance across
+hypothesis-generated shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(x, act: str):
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def matmul(x, w, bias=None, *, act: str = "none"):
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias[None, :]
+    return _act(out, act)
+
+
+def conv2d(x, w, bias=None, *, stride: int = 1, padding: str = "SAME", act: str = "none"):
+    """NHWC conv. x: f32[N,H,W,Cin], w: f32[kh,kw,Cin,Cout]."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        out = out + bias[None, None, None, :]
+    return _act(out, act)
+
+
+def depthwise_conv2d(x, w, bias=None, *, stride: int = 1, padding: str = "SAME", act: str = "none"):
+    """Depthwise NHWC conv. x: f32[N,H,W,C], w: f32[kh,kw,C]."""
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w[:, :, None, :].astype(jnp.float32),  # HWIO with I=1 per group
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    if bias is not None:
+        out = out + bias[None, None, None, :]
+    return _act(out, act)
+
+
+def avg_pool(x, *, window: int, stride: int, padding: str = "VALID"):
+    """NHWC average pool."""
+    out = jax.lax.reduce_window(
+        x.astype(jnp.float32),
+        0.0,
+        jax.lax.add,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding=padding,
+    )
+    return out / float(window * window)
+
+
+def max_pool(x, *, window: int, stride: int, padding: str = "VALID"):
+    """NHWC max pool."""
+    return jax.lax.reduce_window(
+        x.astype(jnp.float32),
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding=padding,
+    )
+
+
+def global_avg_pool(x):
+    return jnp.mean(x.astype(jnp.float32), axis=(1, 2))

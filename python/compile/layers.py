@@ -1,0 +1,350 @@
+"""Layer-2 building blocks for the model zoo.
+
+A tiny functional layer framework: every layer knows how to
+  * initialize its parameters (deterministic, seeded),
+  * apply itself through the Pallas kernels (or the jnp reference path),
+  * report FLOPs, parameter count, and MXU utilization for the manifest.
+
+Shape convention: NHWC activations; after :class:`GlobalAvgPool` the
+activation is (N, C) and only :class:`Dense` layers may follow.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as cv
+from .kernels import depthwise as dw
+from .kernels import matmul as mm
+from .kernels import ref
+from .kernels.depthwise import VPU_FALLBACK_UTILIZATION
+
+Shape = Tuple[int, ...]
+
+
+def _out_hw(h: int, w: int, k: int, stride: int, padding: str) -> Tuple[int, int]:
+    if padding == "SAME":
+        return -(-h // stride), -(-w // stride)
+    return (h - k) // stride + 1, (w - k) // stride + 1
+
+
+@dataclass
+class Conv:
+    """Standard NHWC convolution with fused bias + activation."""
+
+    kh: int
+    kw: int
+    cout: int
+    stride: int = 1
+    padding: str = "SAME"
+    act: str = "relu"
+
+    def init(self, key, in_shape: Shape):
+        n, h, w, cin = in_shape
+        kw_, kb = jax.random.split(key)
+        fan_in = self.kh * self.kw * cin
+        weight = jax.random.normal(kw_, (self.kh, self.kw, cin, self.cout), jnp.float32)
+        weight = weight * (2.0 / fan_in) ** 0.5
+        bias = 0.01 * jax.random.normal(kb, (self.cout,), jnp.float32)
+        ho, wo = _out_hw(h, w, self.kh, self.stride, self.padding)
+        return {"w": weight, "b": bias}, (n, ho, wo, self.cout)
+
+    def apply(self, params, x, use_pallas: bool = True):
+        fn = cv.conv2d if use_pallas else ref.conv2d
+        return fn(
+            x, params["w"], params["b"],
+            stride=self.stride, padding=self.padding, act=self.act,
+        )
+
+    def flops(self, in_shape: Shape) -> int:
+        n, h, w, cin = in_shape
+        ho, wo = _out_hw(h, w, self.kh, self.stride, self.padding)
+        return 2 * n * ho * wo * self.kh * self.kw * cin * self.cout
+
+    def param_count(self, in_shape: Shape) -> int:
+        cin = in_shape[-1]
+        return self.kh * self.kw * cin * self.cout + self.cout
+
+    def mxu_util(self, in_shape: Shape) -> float:
+        return cv.mxu_utilization(
+            in_shape, self.kh, self.kw, self.cout, self.stride, self.padding
+        )
+
+
+@dataclass
+class DWConv:
+    """Depthwise convolution — VPU path on the Edge TPU (no MXU reuse)."""
+
+    kh: int
+    kw: int
+    stride: int = 1
+    padding: str = "SAME"
+    act: str = "relu6"
+
+    def init(self, key, in_shape: Shape):
+        n, h, w, c = in_shape
+        kw_, kb = jax.random.split(key)
+        fan_in = self.kh * self.kw
+        weight = jax.random.normal(kw_, (self.kh, self.kw, c), jnp.float32)
+        weight = weight * (2.0 / fan_in) ** 0.5
+        bias = 0.01 * jax.random.normal(kb, (c,), jnp.float32)
+        ho, wo = _out_hw(h, w, self.kh, self.stride, self.padding)
+        return {"w": weight, "b": bias}, (n, ho, wo, c)
+
+    def apply(self, params, x, use_pallas: bool = True):
+        fn = dw.depthwise_conv2d if use_pallas else ref.depthwise_conv2d
+        return fn(
+            x, params["w"], params["b"],
+            stride=self.stride, padding=self.padding, act=self.act,
+        )
+
+    def flops(self, in_shape: Shape) -> int:
+        n, h, w, c = in_shape
+        ho, wo = _out_hw(h, w, self.kh, self.stride, self.padding)
+        return 2 * n * ho * wo * self.kh * self.kw * c
+
+    def param_count(self, in_shape: Shape) -> int:
+        c = in_shape[-1]
+        return self.kh * self.kw * c + c
+
+    def mxu_util(self, in_shape: Shape) -> float:
+        return VPU_FALLBACK_UTILIZATION
+
+
+@dataclass
+class Pool:
+    """Average or max pooling (pure data reduction — VPU path)."""
+
+    kind: str = "max"  # "max" | "avg"
+    window: int = 2
+    stride: int = 2
+    padding: str = "VALID"
+
+    def init(self, key, in_shape: Shape):
+        n, h, w, c = in_shape
+        ho, wo = _out_hw(h, w, self.window, self.stride, self.padding)
+        return {}, (n, ho, wo, c)
+
+    def apply(self, params, x, use_pallas: bool = True):
+        fn = ref.max_pool if self.kind == "max" else ref.avg_pool
+        return fn(x, window=self.window, stride=self.stride, padding=self.padding)
+
+    def flops(self, in_shape: Shape) -> int:
+        n, h, w, c = in_shape
+        ho, wo = _out_hw(h, w, self.window, self.stride, self.padding)
+        return n * ho * wo * c * self.window * self.window
+
+    def param_count(self, in_shape: Shape) -> int:
+        return 0
+
+    def mxu_util(self, in_shape: Shape) -> float:
+        return VPU_FALLBACK_UTILIZATION
+
+
+@dataclass
+class GlobalAvgPool:
+    """NHWC -> NC global average pooling."""
+
+    def init(self, key, in_shape: Shape):
+        n, h, w, c = in_shape
+        return {}, (n, c)
+
+    def apply(self, params, x, use_pallas: bool = True):
+        return ref.global_avg_pool(x)
+
+    def flops(self, in_shape: Shape) -> int:
+        n, h, w, c = in_shape
+        return n * h * w * c
+
+    def param_count(self, in_shape: Shape) -> int:
+        return 0
+
+    def mxu_util(self, in_shape: Shape) -> float:
+        return VPU_FALLBACK_UTILIZATION
+
+
+@dataclass
+class Dense:
+    """Fully connected layer on (N, C) activations."""
+
+    cout: int
+    act: str = "none"
+
+    def init(self, key, in_shape: Shape):
+        n, cin = in_shape
+        kw_, kb = jax.random.split(key)
+        weight = jax.random.normal(kw_, (cin, self.cout), jnp.float32)
+        weight = weight * (2.0 / cin) ** 0.5
+        bias = 0.01 * jax.random.normal(kb, (self.cout,), jnp.float32)
+        return {"w": weight, "b": bias}, (n, self.cout)
+
+    def apply(self, params, x, use_pallas: bool = True):
+        fn = mm.matmul if use_pallas else ref.matmul
+        return fn(x, params["w"], params["b"], act=self.act)
+
+    def flops(self, in_shape: Shape) -> int:
+        n, cin = in_shape
+        return 2 * n * cin * self.cout
+
+    def param_count(self, in_shape: Shape) -> int:
+        return in_shape[-1] * self.cout + self.cout
+
+    def mxu_util(self, in_shape: Shape) -> float:
+        n, cin = in_shape
+        # batch-1 inference: M=N → the array is almost empty (late-layer effect)
+        return mm.mxu_utilization(n, self.cout, cin)
+
+
+@dataclass
+class Residual:
+    """x + f(x). The inner sequence must preserve the activation shape."""
+
+    inner: List = field(default_factory=list)
+
+    def init(self, key, in_shape: Shape):
+        params, shape = init_sequence(key, self.inner, in_shape)
+        if shape != in_shape:
+            raise ValueError(f"residual inner changes shape {in_shape} -> {shape}")
+        return {"inner": params}, in_shape
+
+    def apply(self, params, x, use_pallas: bool = True):
+        return x + apply_sequence(self.inner, params["inner"], x, use_pallas)
+
+    def flops(self, in_shape: Shape) -> int:
+        total = int(jnp.prod(jnp.array(in_shape)))  # the add
+        return total + flops_sequence(self.inner, in_shape)
+
+    def param_count(self, in_shape: Shape) -> int:
+        return params_sequence(self.inner, in_shape)
+
+    def mxu_util(self, in_shape: Shape) -> float:
+        return util_sequence(self.inner, in_shape)
+
+
+@dataclass
+class Branch:
+    """Parallel branches combined by channel-concat or add (inception/fire)."""
+
+    branches: List[List] = field(default_factory=list)
+    combine: str = "concat"  # "concat" | "add"
+
+    def init(self, key, in_shape: Shape):
+        keys = jax.random.split(key, len(self.branches))
+        params, shapes = [], []
+        for k, br in zip(keys, self.branches):
+            p, s = init_sequence(k, br, in_shape)
+            params.append(p)
+            shapes.append(s)
+        if self.combine == "add":
+            if any(s != shapes[0] for s in shapes):
+                raise ValueError(f"add-combine with mismatched shapes {shapes}")
+            out = shapes[0]
+        else:
+            base = shapes[0][:-1]
+            if any(s[:-1] != base for s in shapes):
+                raise ValueError(f"concat-combine with mismatched spatial {shapes}")
+            out = base + (sum(s[-1] for s in shapes),)
+        return {"branches": params}, out
+
+    def apply(self, params, x, use_pallas: bool = True):
+        outs = [
+            apply_sequence(br, p, x, use_pallas)
+            for br, p in zip(self.branches, params["branches"])
+        ]
+        if self.combine == "add":
+            out = outs[0]
+            for o in outs[1:]:
+                out = out + o
+            return out
+        return jnp.concatenate(outs, axis=-1)
+
+    def flops(self, in_shape: Shape) -> int:
+        return sum(flops_sequence(br, in_shape) for br in self.branches)
+
+    def param_count(self, in_shape: Shape) -> int:
+        return sum(params_sequence(br, in_shape) for br in self.branches)
+
+    def mxu_util(self, in_shape: Shape) -> float:
+        return util_sequence_multi(self.branches, in_shape)
+
+    def out_shape(self, in_shape: Shape) -> Shape:
+        shapes = [shape_sequence(br, in_shape) for br in self.branches]
+        if self.combine == "add":
+            return shapes[0]
+        return shapes[0][:-1] + (sum(s[-1] for s in shapes),)
+
+
+# ---------------------------------------------------------------------------
+# Sequence helpers (used by segments, Residual, Branch)
+# ---------------------------------------------------------------------------
+
+def init_sequence(key, layers, in_shape: Shape):
+    params = []
+    shape = in_shape
+    keys = jax.random.split(key, max(1, len(layers)))
+    for k, layer in zip(keys, layers):
+        p, shape = layer.init(k, shape)
+        params.append(p)
+    return params, shape
+
+
+def apply_sequence(layers, params, x, use_pallas: bool = True):
+    for layer, p in zip(layers, params):
+        x = layer.apply(p, x, use_pallas)
+    return x
+
+
+def shape_sequence(layers, in_shape: Shape) -> Shape:
+    shape = in_shape
+    for layer in layers:
+        _, shape = layer.init(jax.random.PRNGKey(0), shape)
+    return shape
+
+
+def flops_sequence(layers, in_shape: Shape) -> int:
+    total = 0
+    shape = in_shape
+    for layer in layers:
+        total += layer.flops(shape)
+        _, shape = layer.init(jax.random.PRNGKey(0), shape)
+    return total
+
+
+def params_sequence(layers, in_shape: Shape) -> int:
+    total = 0
+    shape = in_shape
+    for layer in layers:
+        total += layer.param_count(shape)
+        _, shape = layer.init(jax.random.PRNGKey(0), shape)
+    return total
+
+
+def util_sequence(layers, in_shape: Shape) -> float:
+    """FLOP-weighted mean MXU utilization of a layer sequence."""
+    total_flops = 0
+    weighted = 0.0
+    shape = in_shape
+    for layer in layers:
+        f = layer.flops(shape)
+        weighted += f * layer.mxu_util(shape)
+        total_flops += f
+        _, shape = layer.init(jax.random.PRNGKey(0), shape)
+    if total_flops == 0:
+        return VPU_FALLBACK_UTILIZATION
+    return weighted / total_flops
+
+
+def util_sequence_multi(branches, in_shape: Shape) -> float:
+    total_flops = 0
+    weighted = 0.0
+    for br in branches:
+        f = flops_sequence(br, in_shape)
+        weighted += f * util_sequence(br, in_shape)
+        total_flops += f
+    if total_flops == 0:
+        return VPU_FALLBACK_UTILIZATION
+    return weighted / total_flops

@@ -1,0 +1,161 @@
+"""Layer-2 model construction: parameters, per-segment functions, metadata.
+
+A :class:`ModelDef` holds the segment list from :mod:`zoo`, deterministic
+parameters, and per-segment metadata (shapes, FLOPs, parameter counts, MXU
+utilization). ``segment_fn`` returns the closure that :mod:`aot` lowers to
+one HLO artifact per segment — weights are captured as constants so each
+artifact is self-contained (input: the activation tensor; output: the next
+activation), which is exactly what the rust runtime composes at serve time.
+"""
+
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import zoo
+
+Shape = Tuple[int, ...]
+
+
+@dataclass
+class SegmentInfo:
+    index: int
+    in_shape: Shape
+    out_shape: Shape
+    flops: int
+    param_count: int
+    mxu_util: float
+
+
+@dataclass
+class ModelDef:
+    name: str
+    segments: List[List]          # layer lists
+    params: List[List]            # per-segment parameter pytrees
+    infos: List[SegmentInfo]
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def input_shape(self) -> Shape:
+        return self.infos[0].in_shape
+
+    @property
+    def output_shape(self) -> Shape:
+        return self.infos[-1].out_shape
+
+    def apply_segment(self, i: int, x, use_pallas: bool = True):
+        return L.apply_sequence(self.segments[i], self.params[i], x, use_pallas)
+
+    def apply_range(self, a: int, b: int, x, use_pallas: bool = True):
+        """Apply segments [a, b) in order."""
+        for i in range(a, b):
+            x = self.apply_segment(i, x, use_pallas)
+        return x
+
+    def apply_full(self, x, use_pallas: bool = True):
+        return self.apply_range(0, self.num_segments, x, use_pallas)
+
+
+def build_model(name: str, seed: int = 0) -> ModelDef:
+    """Build + initialize a zoo model; deterministic for a given seed."""
+    segments = zoo.build(name)
+    # zlib.crc32 (not built-in hash(), which is salted per-process) so that
+    # weights are bit-identical across every python invocation.
+    name_id = zlib.crc32(name.encode()) % (2**31)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), name_id)
+    params: List[List] = []
+    infos: List[SegmentInfo] = []
+    shape: Shape = zoo.INPUT_SHAPE
+    for i, seg in enumerate(segments):
+        key, sub = jax.random.split(key)
+        in_shape = shape
+        p, shape = L.init_sequence(sub, seg, in_shape)
+        params.append(p)
+        infos.append(
+            SegmentInfo(
+                index=i,
+                in_shape=in_shape,
+                out_shape=shape,
+                flops=L.flops_sequence(seg, in_shape),
+                param_count=L.params_sequence(seg, in_shape),
+                mxu_util=L.util_sequence(seg, in_shape),
+            )
+        )
+    return ModelDef(name=name, segments=segments, params=params, infos=infos)
+
+
+def segment_fn(model: ModelDef, i: int, use_pallas: bool = True) -> Callable:
+    """A jit-lowerable function for segment ``i`` with captured weights.
+
+    Returns a 1-tuple (lowered with ``return_tuple=True``; the rust loader
+    unwraps with ``to_tuple1``).
+    """
+
+    def fn(x):
+        return (model.apply_segment(i, x, use_pallas),)
+
+    return fn
+
+
+def tensor_bytes(shape: Shape, dtype_bytes: int = 1) -> int:
+    """Simulated on-wire tensor size (int8, as the paper's quantized models)."""
+    total = 1
+    for d in shape:
+        total *= d
+    return total * dtype_bytes
+
+
+def scaled_manifest_entry(model: ModelDef) -> dict:
+    """Manifest entry mapping this (scaled) model onto the paper's Table II.
+
+    ``sim_*`` fields carry the Table II magnitudes, distributed across
+    segments proportionally to the real (scaled) model's per-segment
+    parameter counts / FLOPs — preserving the within-model shape that
+    drives partitioning decisions. ``real_*`` fields describe the actual
+    artifacts the runtime executes.
+    """
+    size_mb, flops_g, ppoints = zoo.TABLE_II[model.name]
+    total_params = sum(s.param_count for s in model.infos) or 1
+    total_flops = sum(s.flops for s in model.infos) or 1
+    sim_bytes_total = int(size_mb * 1e6)
+    sim_flops_total = int(flops_g * 1e9)
+
+    segs = []
+    for info in model.infos:
+        segs.append(
+            {
+                "index": info.index,
+                "artifact": f"{model.name}/seg{info.index}.hlo.txt",
+                "in_shape": list(info.in_shape),
+                "out_shape": list(info.out_shape),
+                "real_flops": info.flops,
+                "real_param_count": info.param_count,
+                "real_param_bytes": info.param_count * 4,
+                "sim_weight_bytes": int(
+                    sim_bytes_total * info.param_count / total_params
+                ),
+                "sim_flops": int(sim_flops_total * info.flops / total_flops),
+                "in_bytes": tensor_bytes(info.in_shape),
+                "out_bytes": tensor_bytes(info.out_shape),
+                "mxu_util": round(info.mxu_util, 6),
+            }
+        )
+
+    return {
+        "name": model.name,
+        "partition_points": ppoints,
+        "table_size_mb": size_mb,
+        "table_flops_g": flops_g,
+        "input_shape": list(model.input_shape),
+        "output_shape": list(model.output_shape),
+        "segments": segs,
+    }

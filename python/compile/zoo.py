@@ -1,0 +1,252 @@
+"""The nine-model CNN zoo mirroring the paper's Table II.
+
+Each architecture is expressed as a list of *segments* — the unit of
+TPU/CPU partitioning. Segment boundaries are the paper's candidate
+partition points: model ``i`` with ``P_i`` partition points has ``P_i``
+segments, a prefix ``[1:p]`` runs on the TPU and the suffix ``[p+1:P]``
+on the CPU (``p=0`` → all-CPU, ``p=P_i`` → all-TPU).
+
+The architectures are scaled-down analogues (64×64×3 inputs, reduced
+widths) of the real networks: the *structure* (fire modules, inverted
+residuals, dense blocks, inception branches, separable convs) is faithful,
+while absolute sizes are scaled so AOT + tests run in minutes on one CPU
+core. The manifest maps each model's real (scaled) per-segment FLOPs/bytes
+onto the paper's Table II totals — see :mod:`manifest`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .layers import Branch, Conv, DWConv, Dense, GlobalAvgPool, Pool, Residual
+
+INPUT_SHAPE = (1, 64, 64, 3)
+NUM_CLASSES = 10
+
+# Paper Table II: name -> (size MB, FLOPs G, partition points)
+TABLE_II: Dict[str, tuple] = {
+    "squeezenet": (1.4, 0.81, 2),
+    "mobilenetv2": (4.1, 0.30, 5),
+    "efficientnet": (6.7, 0.39, 6),
+    "mnasnet": (7.1, 0.31, 7),
+    "gpunet": (12.2, 0.62, 5),
+    "densenet201": (19.7, 4.32, 7),
+    "resnet50v2": (25.3, 4.49, 8),
+    "xception": (26.1, 8.38, 11),
+    "inceptionv4": (43.2, 12.27, 11),
+}
+
+
+def _head(classes: int = NUM_CLASSES) -> List:
+    return [GlobalAvgPool(), Dense(classes)]
+
+
+def _fire(squeeze: int, expand: int) -> List:
+    """SqueezeNet fire module: 1x1 squeeze then parallel 1x1/3x3 expand."""
+    return [
+        Conv(1, 1, squeeze),
+        Branch([[Conv(1, 1, expand)], [Conv(3, 3, expand)]], combine="concat"),
+    ]
+
+
+def _inverted_residual(cin: int, cout: int, t: int, stride: int = 1) -> List:
+    """MobileNetV2 inverted residual (expand -> depthwise -> project)."""
+    inner = [
+        Conv(1, 1, cin * t, act="relu6"),
+        DWConv(3, 3, stride=stride, act="relu6"),
+        Conv(1, 1, cout, act="none"),
+    ]
+    if stride == 1 and cin == cout:
+        return [Residual(inner)]
+    return inner
+
+
+def _bottleneck(c: int) -> List:
+    """ResNet50V2 bottleneck block (identity variant)."""
+    return [
+        Residual([
+            Conv(1, 1, c // 4),
+            Conv(3, 3, c // 4),
+            Conv(1, 1, c, act="none"),
+        ])
+    ]
+
+
+def _dense_layer(growth: int) -> List:
+    """DenseNet composite layer: concat(x, BN-relu-conv path)."""
+    return [
+        Branch([[], [Conv(1, 1, 4 * growth), Conv(3, 3, growth)]], combine="concat")
+    ]
+
+
+def _sep(cout: int, stride: int = 1) -> List:
+    """Xception separable conv: depthwise + pointwise."""
+    return [DWConv(3, 3, stride=stride, act="none"), Conv(1, 1, cout)]
+
+
+def _inception_a(c: int) -> List:
+    """Inception-style mixed block with four parallel branches."""
+    return [
+        Branch(
+            [
+                [Conv(1, 1, c)],
+                [Conv(1, 1, c), Conv(3, 3, c)],
+                [Conv(1, 1, c), Conv(3, 3, c), Conv(3, 3, c)],
+                [Pool("avg", 3, 1, "SAME"), Conv(1, 1, c)],
+            ],
+            combine="concat",
+        )
+    ]
+
+
+def squeezenet() -> List[List]:
+    """2 segments."""
+    return [
+        [Conv(3, 3, 24, stride=2), Pool("max", 3, 2, "SAME")] + _fire(8, 16) + _fire(8, 16),
+        _fire(16, 32) + [Conv(1, 1, NUM_CLASSES)] + [GlobalAvgPool()],
+    ]
+
+
+def mobilenetv2() -> List[List]:
+    """5 segments."""
+    return [
+        [Conv(3, 3, 16, stride=2, act="relu6")] + _inverted_residual(16, 16, 1),
+        _inverted_residual(16, 24, 4, stride=2) + _inverted_residual(24, 24, 4),
+        _inverted_residual(24, 32, 4, stride=2) + _inverted_residual(32, 32, 4),
+        _inverted_residual(32, 64, 4, stride=2) + _inverted_residual(64, 64, 4),
+        _inverted_residual(64, 96, 4) + [Conv(1, 1, 128, act="relu6")] + _head(),
+    ]
+
+
+def efficientnet() -> List[List]:
+    """6 segments."""
+    return [
+        [Conv(3, 3, 16, stride=2, act="relu6")] + _inverted_residual(16, 16, 1),
+        _inverted_residual(16, 24, 4, stride=2),
+        _inverted_residual(24, 24, 4) + _inverted_residual(24, 40, 4, stride=2),
+        _inverted_residual(40, 40, 4) + _inverted_residual(40, 80, 4, stride=2),
+        _inverted_residual(80, 80, 4) + _inverted_residual(80, 112, 4),
+        [Conv(1, 1, 160, act="relu6")] + _head(),
+    ]
+
+
+def mnasnet() -> List[List]:
+    """7 segments."""
+    return [
+        [Conv(3, 3, 16, stride=2), DWConv(3, 3), Conv(1, 1, 16, act="none")],
+        _inverted_residual(16, 24, 3, stride=2),
+        _inverted_residual(24, 24, 3) + _inverted_residual(24, 40, 3, stride=2),
+        _inverted_residual(40, 40, 3),
+        _inverted_residual(40, 80, 6, stride=2) + _inverted_residual(80, 80, 6),
+        _inverted_residual(80, 96, 6),
+        [Conv(1, 1, 160, act="relu6")] + _head(),
+    ]
+
+
+def gpunet() -> List[List]:
+    """5 segments — a wide, plain-conv GPU-friendly design."""
+    return [
+        [Conv(3, 3, 32, stride=2), Conv(3, 3, 32)],
+        [Conv(3, 3, 64, stride=2), Conv(3, 3, 64)],
+        [Conv(3, 3, 96, stride=2)] + _bottleneck(96),
+        [Conv(3, 3, 128, stride=2)] + _bottleneck(128),
+        [Conv(1, 1, 192)] + _head(),
+    ]
+
+
+def densenet201() -> List[List]:
+    """7 segments of dense blocks with transition layers."""
+    g = 12
+    trans = lambda c: [Conv(1, 1, c), Pool("avg", 2, 2)]
+    return [
+        [Conv(3, 3, 24, stride=2), Pool("max", 3, 2, "SAME")] + _dense_layer(g) + _dense_layer(g),
+        _dense_layer(g) + _dense_layer(g) + trans(32),
+        _dense_layer(g) + _dense_layer(g) + _dense_layer(g),
+        _dense_layer(g) + _dense_layer(g) + trans(48),
+        _dense_layer(g) + _dense_layer(g) + _dense_layer(g),
+        _dense_layer(g) + _dense_layer(g) + trans(64),
+        _dense_layer(g) + _dense_layer(g) + _head(),
+    ]
+
+
+def resnet50v2() -> List[List]:
+    """8 segments of bottleneck stacks."""
+    return [
+        [Conv(7, 7, 32, stride=2), Pool("max", 3, 2, "SAME")],
+        _bottleneck(32) + _bottleneck(32),
+        [Conv(3, 3, 64, stride=2)] + _bottleneck(64),
+        _bottleneck(64) + _bottleneck(64),
+        [Conv(3, 3, 96, stride=2)] + _bottleneck(96),
+        _bottleneck(96) + _bottleneck(96),
+        [Conv(3, 3, 128, stride=2)] + _bottleneck(128) + _bottleneck(128),
+        _bottleneck(128) + _head(),
+    ]
+
+
+def xception() -> List[List]:
+    """11 segments of separable-conv residual stacks."""
+    def block(c, stride=2):
+        return [Conv(1, 1, c, stride=stride, act="none")] + _sep(c) + _sep(c)
+
+    def res_block(c):
+        return [Residual(_sep(c) + _sep(c))]
+
+    return [
+        [Conv(3, 3, 16, stride=2), Conv(3, 3, 32)],
+        block(32),
+        block(48),
+        res_block(48),
+        res_block(48),
+        [Conv(1, 1, 64, stride=2, act="none")] + _sep(64),
+        res_block(64),
+        res_block(64),
+        res_block(64),
+        block(96, stride=2)[:3],
+        _sep(128) + _head(),
+    ]
+
+
+def inceptionv4() -> List[List]:
+    """11 segments: stem + inception-A/B stacks + reductions."""
+    return [
+        [Conv(3, 3, 16, stride=2), Conv(3, 3, 24), Pool("max", 3, 2, "SAME")],
+        [Conv(1, 1, 24), Conv(3, 3, 32)],
+        _inception_a(16),
+        _inception_a(16),
+        [Conv(3, 3, 64, stride=2)],  # reduction-A
+        _inception_a(24),
+        _inception_a(24),
+        _inception_a(24),
+        [Conv(3, 3, 96, stride=2)],  # reduction-B
+        _inception_a(32),
+        _inception_a(32) + _head(),
+    ]
+
+
+BUILDERS = {
+    "squeezenet": squeezenet,
+    "mobilenetv2": mobilenetv2,
+    "efficientnet": efficientnet,
+    "mnasnet": mnasnet,
+    "gpunet": gpunet,
+    "densenet201": densenet201,
+    "resnet50v2": resnet50v2,
+    "xception": xception,
+    "inceptionv4": inceptionv4,
+}
+
+
+def model_names() -> List[str]:
+    return list(BUILDERS)
+
+
+def build(name: str) -> List[List]:
+    if name not in BUILDERS:
+        raise KeyError(f"unknown model {name!r}; have {sorted(BUILDERS)}")
+    segments = BUILDERS[name]()
+    expected = TABLE_II[name][2]
+    if len(segments) != expected:
+        raise AssertionError(
+            f"{name}: built {len(segments)} segments, Table II says {expected}"
+        )
+    return segments

@@ -1,0 +1,85 @@
+"""AOT pipeline tests: HLO text properties the rust loader depends on."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import zoo
+
+
+@pytest.fixture(scope="module")
+def squeezenet():
+    return M.build_model("squeezenet")
+
+
+def test_hlo_text_no_elided_constants(squeezenet):
+    """'{...}' elision silently zeroes the weights in XLA 0.5.1's parser."""
+    text = aot.lower_segment(squeezenet, 0)
+    assert "{...}" not in text
+    assert text.startswith("HloModule")
+
+
+def test_hlo_text_no_new_metadata_attrs(squeezenet):
+    """jax>=0.5 metadata attrs crash the 0.5.1 text parser."""
+    text = aot.lower_segment(squeezenet, 0)
+    assert "source_end_line" not in text
+    assert "metadata=" not in text
+
+
+def test_hlo_entry_layout_matches_manifest(squeezenet):
+    text = aot.lower_segment(squeezenet, 0)
+    in_shape = squeezenet.infos[0].in_shape
+    out_shape = squeezenet.infos[0].out_shape
+    dims_in = ",".join(str(d) for d in in_shape)
+    dims_out = ",".join(str(d) for d in out_shape)
+    assert f"f32[{dims_in}]" in text.splitlines()[0]
+    assert f"f32[{dims_out}]" in text.splitlines()[0]
+
+
+def test_hlo_output_is_tuple(squeezenet):
+    """return_tuple=True — the rust side unwraps with to_tuple1."""
+    text = aot.lower_segment(squeezenet, 0)
+    first = text.splitlines()[0]
+    assert ")->(" in first.replace(" ", "")
+
+
+def test_ref_and_pallas_lower_to_same_signature(squeezenet):
+    a = aot.lower_segment(squeezenet, 0, use_pallas=True).splitlines()[0]
+    b = aot.lower_segment(squeezenet, 0, use_pallas=False).splitlines()[0]
+    assert a.split("entry_computation_layout")[1] == b.split("entry_computation_layout")[1]
+
+
+def test_compile_model_writes_artifacts(tmp_path):
+    entry = aot.compile_model("squeezenet", str(tmp_path), quiet=True)
+    assert entry["name"] == "squeezenet"
+    for seg in entry["segments"]:
+        assert os.path.exists(os.path.join(tmp_path, seg["artifact"]))
+
+
+def test_main_single_model(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--models", "squeezenet", "--quiet"])
+    assert rc == 0
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert manifest["kernel_path"] == "pallas"
+    assert len(manifest["models"]) == 1
+    assert manifest["models"][0]["partition_points"] == zoo.TABLE_II["squeezenet"][2]
+
+
+def test_repo_manifest_if_built():
+    """If `make artifacts` has run, sanity-check the committed manifest."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built yet")
+    manifest = json.load(open(path))
+    names = {m["name"] for m in manifest["models"]}
+    assert names == set(zoo.model_names())
+    for m in manifest["models"]:
+        assert len(m["segments"]) == zoo.TABLE_II[m["name"]][2]
+        for seg in m["segments"]:
+            apath = os.path.join(os.path.dirname(path), seg["artifact"])
+            assert os.path.exists(apath), f"missing artifact {seg['artifact']}"

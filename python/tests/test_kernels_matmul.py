@@ -1,0 +1,85 @@
+"""Hypothesis sweeps of the Pallas matmul kernel vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(mm.matmul(x, w), ref.matmul(x, w), **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    act=st.sampled_from(["none", "relu", "relu6", "sigmoid"]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_bias_act_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    np.testing.assert_allclose(
+        mm.matmul(x, w, b, act=act), ref.matmul(x, w, b, act=act), **TOL
+    )
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_block_shape_invariance(blocks):
+    """Result must not depend on the tiling choice."""
+    bm, bn, bk = blocks
+    x = _rand(3, (50, 33))
+    w = _rand(4, (33, 27))
+    out = mm.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(out, ref.matmul(x, w), **TOL)
+
+
+def test_matmul_multi_k_accumulation():
+    """K larger than block_k exercises the grid accumulation path."""
+    x = _rand(5, (17, 300))
+    w = _rand(6, (300, 19))
+    out = mm.matmul(x, w, block_k=64)
+    np.testing.assert_allclose(out, ref.matmul(x, w), **TOL)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = _rand(0, (4, 5))
+    w = _rand(1, (6, 3))
+    with pytest.raises(ValueError):
+        mm.matmul(x, w)
+    with pytest.raises(ValueError):
+        mm.matmul(x, _rand(1, (5, 3)), act="swish")
+
+
+def test_vmem_budget_default_blocks():
+    """Default MXU tiles must fit the Edge-TPU-analogue 8 MB scratchpad."""
+    assert mm.vmem_bytes() < 8 * 1024 * 1024
+
+
+def test_mxu_utilization_monotone():
+    """Bigger tiles fill the systolic array more."""
+    small = mm.mxu_utilization(1, 10, 64)
+    big = mm.mxu_utilization(1024, 128, 256)
+    assert 0.0 < small < big <= 1.0

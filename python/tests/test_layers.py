@@ -1,0 +1,125 @@
+"""Layer-framework tests: shapes, FLOPs/param accounting, composites."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+
+
+def _init(layer, in_shape, seed=0):
+    return layer.init(jax.random.PRNGKey(seed), in_shape)
+
+
+def test_conv_shape_same_and_valid():
+    _, s = _init(L.Conv(3, 3, 8, stride=2, padding="SAME"), (1, 9, 9, 3))
+    assert s == (1, 5, 5, 8)
+    _, s = _init(L.Conv(3, 3, 8, stride=1, padding="VALID"), (1, 9, 9, 3))
+    assert s == (1, 7, 7, 8)
+
+
+def test_conv_flops_and_params():
+    layer = L.Conv(3, 3, 8, stride=1, padding="SAME")
+    in_shape = (1, 4, 4, 2)
+    assert layer.flops(in_shape) == 2 * 16 * 9 * 2 * 8
+    assert layer.param_count(in_shape) == 9 * 2 * 8 + 8
+
+
+def test_dwconv_shape_and_params():
+    layer = L.DWConv(3, 3, stride=2)
+    _, s = _init(layer, (1, 8, 8, 6))
+    assert s == (1, 4, 4, 6)
+    assert layer.param_count((1, 8, 8, 6)) == 9 * 6 + 6
+
+
+def test_pool_and_gap_shapes():
+    _, s = _init(L.Pool("max", 2, 2), (1, 8, 8, 4))
+    assert s == (1, 4, 4, 4)
+    _, s = _init(L.GlobalAvgPool(), (1, 8, 8, 4))
+    assert s == (1, 4)
+
+
+def test_dense_after_gap():
+    gap = L.GlobalAvgPool()
+    dense = L.Dense(10)
+    p1, s1 = _init(gap, (1, 8, 8, 4))
+    p2, s2 = _init(dense, s1)
+    assert s2 == (1, 10)
+    x = jnp.ones((1, 8, 8, 4))
+    y = dense.apply(p2, gap.apply(p1, x, False), use_pallas=False)
+    assert y.shape == (1, 10)
+
+
+def test_residual_requires_shape_preservation():
+    good = L.Residual([L.Conv(3, 3, 4, act="none")])
+    _init(good, (1, 8, 8, 4))  # ok
+    bad = L.Residual([L.Conv(3, 3, 5, act="none")])
+    with pytest.raises(ValueError):
+        _init(bad, (1, 8, 8, 4))
+
+
+def test_residual_is_identity_plus_inner():
+    layer = L.Residual([L.Conv(1, 1, 3, act="none")])
+    params, _ = _init(layer, (1, 4, 4, 3))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 4, 3))
+    inner = L.apply_sequence(layer.inner, params["inner"], x, False)
+    np.testing.assert_allclose(
+        layer.apply(params, x, False), x + inner, rtol=1e-6
+    )
+
+
+def test_branch_concat_channels_add_up():
+    layer = L.Branch([[L.Conv(1, 1, 3)], [L.Conv(3, 3, 5)]], combine="concat")
+    _, s = _init(layer, (1, 6, 6, 2))
+    assert s == (1, 6, 6, 8)
+
+
+def test_branch_add_requires_same_shape():
+    bad = L.Branch([[L.Conv(1, 1, 3)], [L.Conv(1, 1, 4)]], combine="add")
+    with pytest.raises(ValueError):
+        _init(bad, (1, 6, 6, 2))
+
+
+def test_branch_empty_branch_is_identity():
+    """DenseNet-style concat(x, f(x)) uses an empty branch as identity."""
+    layer = L.Branch([[], [L.Conv(1, 1, 4)]], combine="concat")
+    params, s = _init(layer, (1, 5, 5, 3))
+    assert s == (1, 5, 5, 7)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 5, 5, 3))
+    y = layer.apply(params, x, False)
+    np.testing.assert_allclose(y[..., :3], x, rtol=1e-6)
+
+
+def test_sequence_flops_additive():
+    seq = [L.Conv(3, 3, 4), L.Pool("avg", 2, 2), L.Conv(1, 1, 8)]
+    in_shape = (1, 8, 8, 2)
+    total = L.flops_sequence(seq, in_shape)
+    s0 = seq[0].flops(in_shape)
+    _, sh1 = _init(seq[0], in_shape)
+    s1 = seq[1].flops(sh1)
+    _, sh2 = _init(seq[1], sh1)
+    s2 = seq[2].flops(sh2)
+    assert total == s0 + s1 + s2
+
+
+def test_util_sequence_is_flop_weighted():
+    heavy = L.Conv(3, 3, 64)  # high util, most flops
+    light = L.Dense(4)
+    seq = [heavy, L.GlobalAvgPool(), light]
+    in_shape = (1, 16, 16, 8)
+    u = L.util_sequence(seq, in_shape)
+    assert heavy.mxu_util(in_shape) >= u  # pulled down by the tail
+    assert u > 0
+
+
+def test_mxu_util_bounds_all_layers():
+    layers = [
+        L.Conv(3, 3, 8),
+        L.DWConv(3, 3),
+        L.Pool("max", 2, 2),
+        L.GlobalAvgPool(),
+    ]
+    for layer in layers:
+        u = layer.mxu_util((1, 16, 16, 8))
+        assert 0.0 < u <= 1.0, layer

@@ -1,0 +1,109 @@
+"""Model-zoo structural tests: shapes, composition, determinism, Table II."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import zoo
+
+TOL = dict(rtol=5e-4, atol=5e-4)
+
+SMALL = ["squeezenet", "mobilenetv2", "gpunet"]
+
+
+def test_zoo_has_nine_models():
+    assert len(zoo.model_names()) == 9
+    assert set(zoo.model_names()) == set(zoo.TABLE_II)
+
+
+@pytest.mark.parametrize("name", zoo.model_names())
+def test_segment_count_matches_table2(name):
+    segs = zoo.build(name)
+    assert len(segs) == zoo.TABLE_II[name][2]
+
+
+@pytest.mark.parametrize("name", zoo.model_names())
+def test_model_builds_and_shapes_chain(name):
+    m = M.build_model(name)
+    assert m.input_shape == zoo.INPUT_SHAPE
+    assert m.output_shape == (1, zoo.NUM_CLASSES)
+    for a, b in zip(m.infos[:-1], m.infos[1:]):
+        assert a.out_shape == b.in_shape
+    for info in m.infos:
+        assert info.flops > 0
+        assert 0.0 < info.mxu_util <= 1.0
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_segment_composition_equals_full(name):
+    """Running segments one-by-one must equal the full forward pass."""
+    m = M.build_model(name)
+    x = jax.random.normal(jax.random.PRNGKey(11), m.input_shape)
+    full = m.apply_full(x, use_pallas=False)
+    y = x
+    for i in range(m.num_segments):
+        y = m.apply_segment(i, y, use_pallas=False)
+    np.testing.assert_allclose(y, full, **TOL)
+
+
+@pytest.mark.parametrize("name", ["squeezenet", "mobilenetv2"])
+def test_pallas_path_equals_ref_path(name):
+    m = M.build_model(name)
+    x = jax.random.normal(jax.random.PRNGKey(5), m.input_shape)
+    np.testing.assert_allclose(
+        m.apply_full(x, use_pallas=True), m.apply_full(x, use_pallas=False), **TOL
+    )
+
+
+def test_build_model_deterministic():
+    a = M.build_model("squeezenet")
+    b = M.build_model("squeezenet")
+    x = jnp.full(a.input_shape, 0.3, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(a.apply_full(x, use_pallas=False)),
+        np.asarray(b.apply_full(x, use_pallas=False)),
+    )
+
+
+def test_build_model_seed_changes_weights():
+    a = M.build_model("squeezenet", seed=0)
+    b = M.build_model("squeezenet", seed=1)
+    x = jnp.full(a.input_shape, 0.3, jnp.float32)
+    ya = np.asarray(a.apply_full(x, use_pallas=False))
+    yb = np.asarray(b.apply_full(x, use_pallas=False))
+    assert not np.allclose(ya, yb)
+
+
+def test_manifest_entry_scaling():
+    m = M.build_model("squeezenet")
+    entry = M.scaled_manifest_entry(m)
+    size_mb, flops_g, pp = zoo.TABLE_II["squeezenet"]
+    assert entry["partition_points"] == pp
+    assert len(entry["segments"]) == pp
+    total_sim_bytes = sum(s["sim_weight_bytes"] for s in entry["segments"])
+    total_sim_flops = sum(s["sim_flops"] for s in entry["segments"])
+    assert abs(total_sim_bytes - size_mb * 1e6) / (size_mb * 1e6) < 0.01
+    assert abs(total_sim_flops - flops_g * 1e9) / (flops_g * 1e9) < 0.01
+    # within-model distribution follows real parameter distribution
+    reals = [s["real_param_bytes"] for s in entry["segments"]]
+    sims = [s["sim_weight_bytes"] for s in entry["segments"]]
+    order_real = np.argsort(reals)
+    order_sim = np.argsort(sims)
+    np.testing.assert_array_equal(order_real, order_sim)
+
+
+def test_manifest_io_bytes_are_int8_sized():
+    m = M.build_model("mobilenetv2")
+    entry = M.scaled_manifest_entry(m)
+    s0 = entry["segments"][0]
+    assert s0["in_bytes"] == int(np.prod(m.input_shape))
+    assert s0["out_bytes"] == int(np.prod(m.infos[0].out_shape))
+
+
+def test_late_segments_have_lower_mxu_util():
+    """The Fig. 3 opportunity: utilization decays towards the tail."""
+    m = M.build_model("inceptionv4")
+    utils = [s.mxu_util for s in m.infos]
+    assert utils[-1] < utils[0]

@@ -1,0 +1,60 @@
+//! Allocator decision-overhead bench — the paper claims the hill-climbing
+//! allocation runs in < 2 ms per invocation on an embedded CPU; verify we
+//! are far under that on every workload size, and measure the exhaustive
+//! NLIP reference for the ablation (why the heuristic is needed).
+
+use swapless::alloc;
+use swapless::analytic::{AnalyticModel, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::model::synthetic_model;
+use swapless::tpu::CostModel;
+use swapless::util::bench::{bench, print_header, print_row};
+
+fn tenants(n: usize) -> Vec<Tenant> {
+    (0..n)
+        .map(|i| Tenant {
+            model: synthetic_model(&format!("m{i}"), 8 + (i % 4), 3_000_000, 900_000_000),
+            rate: 1.0 + i as f64,
+        })
+        .collect()
+}
+
+fn main() {
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    print_header("allocator decision overhead (paper: < 2 ms)");
+
+    for n in [1, 2, 3, 4, 6, 9] {
+        let ts = tenants(n);
+        let s = bench(&format!("hill_climb n={n}"), 50, 300, || {
+            alloc::hill_climb(&am, &ts, 4)
+        });
+        print_row(&s);
+        assert!(
+            s.mean_ns < 2_000_000.0,
+            "hill climb exceeded the paper's 2 ms budget"
+        );
+    }
+
+    for n in [1, 2] {
+        let ts = tenants(n);
+        let s = bench(&format!("exhaustive_nlip n={n}"), 5, 500, || {
+            alloc::exhaustive_best(&am, &ts, 4)
+        });
+        print_row(&s);
+    }
+
+    let ts = tenants(4);
+    let s = bench("prop_alloc n=4", 100, 200, || {
+        alloc::prop_alloc(&am.cost, &ts, &[2, 3, 1, 0], 4)
+    });
+    print_row(&s);
+
+    let s = bench("objective_eval n=4", 100, 200, || {
+        let cfg = swapless::analytic::Config {
+            partitions: vec![4, 4, 4, 4],
+            cores: vec![1, 1, 1, 1],
+        };
+        am.objective(&ts, &cfg)
+    });
+    print_row(&s);
+}

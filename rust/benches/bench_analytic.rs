@@ -1,0 +1,64 @@
+//! Micro-benches of the analytic queueing model and the substrates it sits
+//! on (JSON, RNG, histograms) — the building blocks of the decision path.
+
+use swapless::analytic::{AnalyticModel, Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::metrics::LatencyHistogram;
+use swapless::model::synthetic_model;
+use swapless::tpu::CostModel;
+use swapless::util::bench::{bench, black_box, print_header, print_row};
+use swapless::util::json;
+use swapless::util::rng::Rng;
+
+fn main() {
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    let tenants: Vec<Tenant> = (0..3)
+        .map(|i| Tenant {
+            model: synthetic_model(&format!("m{i}"), 8, 3_000_000, 900_000_000),
+            rate: 2.0,
+        })
+        .collect();
+    let cfg = Config {
+        partitions: vec![4, 6, 2],
+        cores: vec![2, 0, 2],
+    };
+
+    print_header("analytic model & substrates");
+    let s = bench("e2e_latency (Eq. 4)", 200, 200, || {
+        am.e2e_latency(&tenants, &cfg, 0)
+    });
+    print_row(&s);
+    let s = bench("tpu_wait P-K (Eq. 1-2)", 200, 200, || {
+        am.tpu_wait(&tenants, &cfg)
+    });
+    print_row(&s);
+    let s = bench("alpha (Eq. 10)", 200, 200, || {
+        am.alpha(&tenants, &cfg, 1)
+    });
+    print_row(&s);
+
+    let manifest_like = r#"{"models": [{"name": "m", "segments": [{"index": 0, "in_shape": [1,64,64,3], "flops": 123456789, "util": 0.25}]}], "version": 1}"#;
+    let s = bench("json parse (manifest-like)", 200, 200, || {
+        json::parse(manifest_like).unwrap()
+    });
+    print_row(&s);
+
+    let s = bench("rng poisson stream x1000", 100, 200, || {
+        let mut r = Rng::new(5);
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += r.exponential(4.0);
+        }
+        black_box(acc)
+    });
+    print_row(&s);
+
+    let s = bench("histogram record x1000", 100, 200, || {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4);
+        }
+        black_box(h.percentile(95.0))
+    });
+    print_row(&s);
+}

@@ -1,0 +1,48 @@
+//! End-to-end figure-regeneration bench: one entry per paper table/figure,
+//! timing the full pipeline (workload gen → DES → statistics) behind each.
+//! Requires `make artifacts`.
+
+use swapless::config::HardwareSpec;
+use swapless::experiments as exp;
+use swapless::util::bench::{bench, print_header, print_row};
+
+fn main() {
+    let Ok(mut ctx) = exp::Ctx::load("artifacts", HardwareSpec::default()) else {
+        eprintln!("bench_figures: artifacts/ not built (run `make artifacts`); skipping");
+        return;
+    };
+    // Shorter horizon for benching — the figure CLIs use 2000 s.
+    ctx.horizon = 400.0;
+
+    print_header("figure/table regeneration (horizon 400 s)");
+    let s = bench("table2", 3, 200, || exp::table2::run(&ctx));
+    print_row(&s);
+    let s = bench("fig1 intra-model swap", 3, 2000, || {
+        exp::fig1::run(&ctx).unwrap()
+    });
+    print_row(&s);
+    let s = bench("fig2 inter-model swap", 3, 2000, || {
+        exp::fig2::run(&ctx).unwrap()
+    });
+    print_row(&s);
+    let s = bench("fig3 segment profile", 3, 500, || {
+        exp::fig3::run(&ctx, "inceptionv4").unwrap()
+    });
+    print_row(&s);
+    let s = bench("fig5 single-tenant validation", 2, 3000, || {
+        exp::fig5::run(&ctx, "inceptionv4", 0.2, &[1.0, 3.0, 5.0]).unwrap()
+    });
+    print_row(&s);
+    let s = bench("fig6 multi-tenant validation", 2, 3000, || {
+        exp::fig6::run(&ctx, 0.4, &[1.0, 2.0]).unwrap()
+    });
+    print_row(&s);
+    let s = bench("fig7 baseline comparison", 2, 5000, || {
+        exp::fig7::run(&ctx, &[0.2, 0.5]).unwrap()
+    });
+    print_row(&s);
+    let s = bench("fig8 dynamic adaptation", 2, 3000, || {
+        exp::fig8::run(&ctx).unwrap()
+    });
+    print_row(&s);
+}

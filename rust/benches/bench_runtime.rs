@@ -1,0 +1,38 @@
+//! PJRT runtime bench: HLO-artifact execution latency per segment — the
+//! real-compute hot path of the serving examples. Requires `make artifacts`.
+
+use swapless::model::Manifest;
+use swapless::runtime::Engine;
+use swapless::util::bench::{bench, print_header, print_row};
+
+fn main() {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("bench_runtime: artifacts/ not built (run `make artifacts`); skipping");
+        return;
+    };
+    let mut engine = Engine::new().expect("pjrt client");
+    let model = manifest.get("squeezenet").unwrap().clone();
+    engine.load_model(&manifest, &model).expect("load");
+
+    print_header("PJRT segment execution (squeezenet)");
+    for seg in &model.segments {
+        let n_in: usize = seg.in_shape.iter().product();
+        let input = vec![0.5f32; n_in];
+        let s = bench(
+            &format!("seg{} {:?}->{:?}", seg.index, seg.in_shape, seg.out_shape),
+            5,
+            1000,
+            || engine.execute_segment("squeezenet", seg.index, &input).unwrap(),
+        );
+        print_row(&s);
+    }
+
+    let n_in: usize = model.segments[0].in_shape.iter().product();
+    let input = vec![0.5f32; n_in];
+    let s = bench("full pipeline (all segments)", 5, 1500, || {
+        engine
+            .execute_range("squeezenet", 0, model.partition_points, &input)
+            .unwrap()
+    });
+    print_row(&s);
+}

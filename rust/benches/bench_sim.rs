@@ -1,0 +1,57 @@
+//! DES throughput bench: virtual-seconds simulated per wall-second and
+//! event-processing cost — the hot path behind every figure regeneration.
+
+use swapless::analytic::{Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::model::synthetic_model;
+use swapless::sim::{simulate, SimOptions};
+use swapless::tpu::{CostModel, SramCache};
+use swapless::util::bench::{bench, black_box, print_header, print_row};
+
+fn main() {
+    let cost = CostModel::new(HardwareSpec::default());
+    let tenants: Vec<Tenant> = (0..3)
+        .map(|i| Tenant {
+            model: synthetic_model(&format!("m{i}"), 8, 3_000_000, 900_000_000),
+            rate: 4.0,
+        })
+        .collect();
+    let cfg = Config {
+        partitions: vec![4, 4, 4],
+        cores: vec![2, 1, 1],
+    };
+
+    print_header("discrete-event simulator");
+    let opts = SimOptions {
+        horizon: 300.0,
+        warmup: 10.0,
+        seed: 3,
+        timeline_window: None,
+    };
+    // ~12 rps * 300 s = ~3600 requests, ~5 events each.
+    let s = bench("simulate 300s x3 models (~18k events)", 5, 1500, || {
+        simulate(&cost, &tenants, &cfg, opts.clone())
+    });
+    print_row(&s);
+    let virt_per_wall = 300.0 / (s.mean_ns / 1e9);
+    println!("  -> {virt_per_wall:.0} virtual-seconds per wall-second");
+
+    let s = bench("sram_cache access (hit)", 1000, 200, || {
+        let mut c = SramCache::new(8 * 1024 * 1024);
+        c.access(1, 4_000_000);
+        for _ in 0..100 {
+            black_box(c.access(1, 4_000_000));
+        }
+        c
+    });
+    print_row(&s);
+
+    let s = bench("sram_cache interleave (miss+evict)", 1000, 200, || {
+        let mut c = SramCache::new(8 * 1024 * 1024);
+        for i in 0..100 {
+            black_box(c.access(i % 2, 6_000_000));
+        }
+        c
+    });
+    print_row(&s);
+}

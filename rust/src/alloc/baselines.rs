@@ -1,0 +1,129 @@
+//! The paper's comparison baselines (Section V-A3).
+//!
+//! * **Edge TPU Compiler** — the industry default: every model compiled
+//!   fully onto the TPU (p = P, no cores), co-located models share SRAM
+//!   and pay inter-model swapping.
+//! * **Threshold-based Partitioning** — per-model heuristic: walk layers
+//!   from the last one and offload to the CPU while the layer's CPU time
+//!   is within 10% of its TPU time; ignores queuing and multi-tenancy.
+
+use crate::analytic::{Config, Tenant};
+use crate::tpu::CostModel;
+
+use super::{prop_alloc, Allocation};
+use crate::analytic::AnalyticModel;
+
+/// Baseline 1: default Edge TPU compiler co-compilation.
+pub fn edge_tpu_compiler(am: &AnalyticModel, tenants: &[Tenant]) -> Allocation {
+    let config = Config::all_tpu(tenants);
+    Allocation {
+        predicted_objective: am.objective(tenants, &config),
+        config,
+        evaluations: 1,
+    }
+}
+
+/// Baseline 2: threshold-based partitioning (10% rule), cores via PropAlloc.
+pub fn threshold_partitioning(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    k_max: usize,
+    threshold: f64,
+) -> Allocation {
+    let cost: &CostModel = &am.cost;
+    let mut partitions = Vec::with_capacity(tenants.len());
+    for t in tenants {
+        let pp = t.model.partition_points;
+        let mut p = pp;
+        // Walk backwards from the last segment; offload while CPU ≈ TPU.
+        while p > 0 {
+            let seg = &t.model.segments[p - 1];
+            let cpu = cost.cpu_segment_time(seg);
+            let tpu = cost.tpu_segment_time(&t.model, seg);
+            if cpu <= (1.0 + threshold) * tpu {
+                p -= 1;
+            } else {
+                break;
+            }
+        }
+        partitions.push(p);
+    }
+    let cores = prop_alloc(cost, tenants, &partitions, k_max);
+    let config = Config { partitions, cores };
+    Allocation {
+        predicted_objective: am.objective(tenants, &config),
+        config,
+        evaluations: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::AnalyticModel;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+    use crate::tpu::CostModel;
+
+    fn am() -> AnalyticModel {
+        AnalyticModel::new(CostModel::new(HardwareSpec::default()))
+    }
+
+    fn tenants() -> Vec<Tenant> {
+        vec![
+            Tenant {
+                model: synthetic_model("big", 10, 4_000_000, 1_200_000_000),
+                rate: 2.0,
+            },
+            Tenant {
+                model: synthetic_model("small", 5, 800_000, 100_000_000),
+                rate: 2.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn compiler_baseline_is_all_tpu() {
+        let am = am();
+        let t = tenants();
+        let a = edge_tpu_compiler(&am, &t);
+        assert_eq!(a.config.partitions, vec![10, 5]);
+        assert_eq!(a.config.cores, vec![0, 0]);
+    }
+
+    #[test]
+    fn threshold_offloads_trailing_layers() {
+        let am = am();
+        let t = tenants();
+        let a = threshold_partitioning(&am, &t, 4, 0.10);
+        // The synthetic util profile decays to ~parity at the tail, so at
+        // least the last segment must offload, but not the whole model.
+        assert!(a.config.partitions[0] < 10);
+        assert!(a.config.partitions[0] > 0);
+        // Offloaded models have cores; check constraint 8 holds.
+        crate::analytic::check_constraints(&t, &a.config, 4).unwrap();
+    }
+
+    #[test]
+    fn threshold_ignores_rates() {
+        // Same models, wildly different rates -> identical partitions
+        // (that's the baseline's blind spot the paper calls out).
+        let am = am();
+        let mut t = tenants();
+        let a1 = threshold_partitioning(&am, &t, 4, 0.10);
+        t[0].rate = 100.0;
+        let a2 = threshold_partitioning(&am, &t, 4, 0.10);
+        assert_eq!(a1.config.partitions, a2.config.partitions);
+    }
+
+    #[test]
+    fn swapless_never_worse_than_baselines() {
+        let am = am();
+        let t = tenants();
+        let hc = crate::alloc::hill_climb(&am, &t, 4);
+        let co = edge_tpu_compiler(&am, &t);
+        let th = threshold_partitioning(&am, &t, 4, 0.10);
+        assert!(hc.predicted_objective <= co.predicted_objective + 1e-12);
+        assert!(hc.predicted_objective <= th.predicted_objective + 1e-12);
+    }
+}

@@ -1,0 +1,168 @@
+//! Exhaustive NLIP reference solver (Eq. 5–9) for small instances.
+//!
+//! Enumerates every feasible `(P, K)` pair; used by tests to measure the
+//! hill-climb's optimality gap and by the ablation bench. Complexity is
+//! Π (P_i + 1) × compositions(K_max), so keep it to ≤ 3 models.
+
+use crate::analytic::{AnalyticModel, Config, Tenant};
+
+use super::Allocation;
+
+pub fn exhaustive_best(am: &AnalyticModel, tenants: &[Tenant], k_max: usize) -> Allocation {
+    let n = tenants.len();
+    assert!(n <= 4, "exhaustive solver is for small instances");
+    let mut best: Option<(f64, Config)> = None;
+    let mut evaluations = 0usize;
+
+    let mut partitions = vec![0usize; n];
+    enumerate_partitions(am, tenants, k_max, 0, &mut partitions, &mut best, &mut evaluations);
+
+    let (obj, config) = best.expect("at least one feasible configuration");
+    Allocation {
+        config,
+        predicted_objective: obj,
+        evaluations,
+    }
+}
+
+fn enumerate_partitions(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    k_max: usize,
+    i: usize,
+    partitions: &mut Vec<usize>,
+    best: &mut Option<(f64, Config)>,
+    evaluations: &mut usize,
+) {
+    let n = tenants.len();
+    if i == n {
+        let mut cores = vec![0usize; n];
+        enumerate_cores(am, tenants, k_max, 0, k_max, partitions, &mut cores, best, evaluations);
+        return;
+    }
+    for p in 0..=tenants[i].model.partition_points {
+        partitions[i] = p;
+        enumerate_partitions(am, tenants, k_max, i + 1, partitions, best, evaluations);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn enumerate_cores(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    k_max: usize,
+    i: usize,
+    remaining: usize,
+    partitions: &[usize],
+    cores: &mut Vec<usize>,
+    best: &mut Option<(f64, Config)>,
+    evaluations: &mut usize,
+) {
+    let n = tenants.len();
+    if i == n {
+        let cfg = Config {
+            partitions: partitions.to_vec(),
+            cores: cores.clone(),
+        };
+        if crate::analytic::check_constraints(tenants, &cfg, k_max).is_err() {
+            return;
+        }
+        let obj = am.objective(tenants, &cfg);
+        *evaluations += 1;
+        if best.as_ref().map(|(b, _)| obj < *b).unwrap_or(true) {
+            *best = Some((obj, cfg));
+        }
+        return;
+    }
+    if partitions[i] == tenants[i].model.partition_points {
+        cores[i] = 0;
+        enumerate_cores(am, tenants, k_max, i + 1, remaining, partitions, cores, best, evaluations);
+    } else {
+        for k in 1..=remaining {
+            cores[i] = k;
+            enumerate_cores(
+                am,
+                tenants,
+                k_max,
+                i + 1,
+                remaining - k,
+                partitions,
+                cores,
+                best,
+                evaluations,
+            );
+        }
+        cores[i] = 0; // reset for caller
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::hill_climb;
+    use crate::analytic::AnalyticModel;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+    use crate::tpu::CostModel;
+
+    fn tenant(name: &str, segs: usize, mb: f64, gflops: f64, rate: f64) -> Tenant {
+        Tenant {
+            model: synthetic_model(
+                name,
+                segs,
+                (mb * 1e6 / segs as f64) as u64,
+                (gflops * 1e9 / segs as f64) as u64,
+            ),
+            rate,
+        }
+    }
+
+    #[test]
+    fn finds_global_optimum_single_model() {
+        let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+        let tenants = vec![tenant("big", 8, 30.0, 8.0, 2.0)];
+        let ex = exhaustive_best(&am, &tenants, 4);
+        // brute-force sanity: every configuration is ≥ the reported best
+        for p in 0..=8usize {
+            for k in 0..=4usize {
+                let feasible = if p == 8 { k == 0 } else { k >= 1 };
+                if !feasible {
+                    continue;
+                }
+                let cfg = Config {
+                    partitions: vec![p],
+                    cores: vec![k],
+                };
+                assert!(am.objective(&tenants, &cfg) >= ex.predicted_objective - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn hill_climb_matches_exhaustive_on_easy_instances() {
+        let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+        for (mb, gf, rate) in [(4.0, 1.0, 2.0), (30.0, 8.0, 2.0), (16.0, 4.0, 5.0)] {
+            let tenants = vec![tenant("m", 8, mb, gf, rate)];
+            let ex = exhaustive_best(&am, &tenants, 4);
+            let hc = hill_climb(&am, &tenants, 4);
+            // Alg. 1 is a heuristic; on single-model instances it should be
+            // within a small factor of optimal (typically exact).
+            assert!(
+                hc.predicted_objective <= ex.predicted_objective * 1.25 + 1e-9,
+                "hc={} ex={} (mb={mb})",
+                hc.predicted_objective,
+                ex.predicted_objective
+            );
+        }
+    }
+
+    #[test]
+    fn two_model_optimality_gap_small() {
+        let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+        let tenants = vec![tenant("a", 6, 20.0, 5.0, 2.0), tenant("b", 5, 7.0, 0.4, 2.0)];
+        let ex = exhaustive_best(&am, &tenants, 4);
+        let hc = hill_climb(&am, &tenants, 4);
+        assert!(hc.predicted_objective <= ex.predicted_objective * 1.3 + 1e-9);
+        assert!(ex.evaluations > hc.evaluations, "exhaustive must search more");
+    }
+}

@@ -1,0 +1,201 @@
+//! Algorithm 1 — Greedy Hill-Climbing Resource Allocation.
+//!
+//! Starts all-CPU, then repeatedly evaluates moving one or two layers of
+//! each model from the CPU to the TPU (the 2-step lookahead lets the
+//! search hop over transient latency spikes at intermediate partition
+//! points), re-running `PropAlloc` for every candidate, and commits the
+//! single best move. Terminates when no move improves the objective.
+
+use crate::analytic::{AnalyticModel, Config, Tenant};
+
+use super::{prop_alloc, Allocation};
+
+/// Lexicographic score: (remaining suffix length over core-starved models,
+/// objective). When `K_max < n`, every all-CPU-ish configuration violates
+/// constraint (8) and evaluates to an infinite objective — the starvation
+/// measure decreases strictly as starved models migrate toward the TPU, so
+/// the climb escapes the infinite plateau instead of terminating on it.
+fn score(am: &AnalyticModel, tenants: &[Tenant], cfg: &Config) -> (usize, f64) {
+    let starvation: usize = tenants
+        .iter()
+        .enumerate()
+        .filter(|(i, t)| {
+            cfg.partitions[*i] < t.model.partition_points && cfg.cores[*i] == 0
+        })
+        .map(|(i, t)| t.model.partition_points - cfg.partitions[i])
+        .sum();
+    (starvation, am.objective(tenants, cfg))
+}
+
+fn lex_less(a: (usize, f64), b: (usize, f64)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+pub fn hill_climb(am: &AnalyticModel, tenants: &[Tenant], k_max: usize) -> Allocation {
+    let n = tenants.len();
+    let mut partitions = vec![0usize; n];
+    let mut cores = prop_alloc(&am.cost, tenants, &partitions, k_max);
+    let mut current = score(
+        am,
+        tenants,
+        &Config {
+            partitions: partitions.clone(),
+            cores: cores.clone(),
+        },
+    );
+    let mut evaluations = 1usize;
+
+    loop {
+        let mut best: Option<(usize, usize, (usize, f64), Vec<usize>)> = None;
+        for m in 0..n {
+            for h in 1..=2usize {
+                if partitions[m] + h > tenants[m].model.partition_points {
+                    continue;
+                }
+                let mut cand = partitions.clone();
+                cand[m] += h;
+                let cand_cores = prop_alloc(&am.cost, tenants, &cand, k_max);
+                let sc = score(
+                    am,
+                    tenants,
+                    &Config {
+                        partitions: cand.clone(),
+                        cores: cand_cores.clone(),
+                    },
+                );
+                evaluations += 1;
+                let better = match &best {
+                    None => true,
+                    Some((_, _, l, _)) => lex_less(sc, *l),
+                };
+                if better {
+                    best = Some((m, h, sc, cand_cores));
+                }
+            }
+        }
+        match best {
+            Some((m, h, sc, k_new)) if lex_less(sc, current) => {
+                partitions[m] += h;
+                cores = k_new;
+                current = sc;
+            }
+            _ => break,
+        }
+    }
+
+    Allocation {
+        config: Config { partitions, cores },
+        predicted_objective: current.1,
+        evaluations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::{check_constraints, AnalyticModel, Tenant};
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+    use crate::tpu::CostModel;
+
+    fn am() -> AnalyticModel {
+        AnalyticModel::new(CostModel::new(HardwareSpec::default()))
+    }
+
+    fn tenant(name: &str, segs: usize, mb_total: f64, gflops: f64, rate: f64) -> Tenant {
+        Tenant {
+            model: synthetic_model(
+                name,
+                segs,
+                (mb_total * 1e6 / segs as f64) as u64,
+                (gflops * 1e9 / segs as f64) as u64,
+            ),
+            rate,
+        }
+    }
+
+    #[test]
+    fn single_small_model_prefers_full_tpu() {
+        // Fits in SRAM, TPU much faster: the climb should reach p = P.
+        let am = am();
+        let tenants = vec![tenant("small", 5, 4.0, 1.0, 2.0)];
+        let a = hill_climb(&am, &tenants, 4);
+        assert_eq!(a.config.partitions[0], 5);
+        assert_eq!(a.config.cores[0], 0);
+        check_constraints(&tenants, &a.config, 4).unwrap();
+    }
+
+    #[test]
+    fn oversized_model_prefers_partial_offload() {
+        // 40 MB model: full-TPU pays heavy intra-swap; the climb should
+        // stop at a prefix that balances swap vs CPU time.
+        let am = am();
+        let tenants = vec![tenant("big", 10, 40.0, 12.0, 2.0)];
+        let a = hill_climb(&am, &tenants, 4);
+        let p = a.config.partitions[0];
+        assert!(p > 0, "should use the TPU at all");
+        assert!(p < 10, "should not pay full intra-model swapping");
+        assert!(a.config.cores[0] >= 1);
+        check_constraints(&tenants, &a.config, 4).unwrap();
+    }
+
+    #[test]
+    fn beats_all_cpu_and_all_tpu() {
+        let am = am();
+        let tenants = vec![tenant("big", 10, 40.0, 12.0, 2.0), tenant("small", 5, 4.0, 0.5, 2.0)];
+        let a = hill_climb(&am, &tenants, 4);
+        let all_cpu = Config {
+            partitions: vec![0, 0],
+            cores: prop_alloc(&am.cost, &tenants, &[0, 0], 4),
+        };
+        let all_tpu = Config {
+            partitions: vec![10, 5],
+            cores: vec![0, 0],
+        };
+        let best = am.objective(&tenants, &a.config);
+        assert!(best <= am.objective(&tenants, &all_cpu) + 1e-12);
+        assert!(best <= am.objective(&tenants, &all_tpu) + 1e-12);
+    }
+
+    #[test]
+    fn result_is_local_optimum_for_single_steps() {
+        let am = am();
+        let tenants = vec![tenant("a", 8, 20.0, 4.0, 3.0), tenant("b", 6, 12.0, 2.0, 1.0)];
+        let a = hill_climb(&am, &tenants, 4);
+        let base = am.objective(&tenants, &a.config);
+        // No single +1/+2 move may improve further (that's the loop exit).
+        for m in 0..2 {
+            for h in 1..=2 {
+                let mut p = a.config.partitions.clone();
+                if p[m] + h > tenants[m].model.partition_points {
+                    continue;
+                }
+                p[m] += h;
+                let k = prop_alloc(&am.cost, &tenants, &p, 4);
+                let obj = am.objective(&tenants, &Config { partitions: p, cores: k });
+                assert!(obj >= base - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn decision_overhead_is_bounded() {
+        // Paper: < 2 ms per invocation. Structurally: O(n · P · moves).
+        let am = am();
+        let tenants: Vec<Tenant> = (0..4)
+            .map(|i| tenant(&format!("m{i}"), 11, 20.0, 6.0, 1.0 + i as f64))
+            .collect();
+        let a = hill_climb(&am, &tenants, 4);
+        // Worst case: each of Σ P_i = 44 commits scans 4 models × 2 steps.
+        assert!(a.evaluations <= 1 + 44 * 8 + 8);
+    }
+
+    #[test]
+    fn zero_rate_models_dont_block() {
+        let am = am();
+        let tenants = vec![tenant("idle", 5, 4.0, 1.0, 0.0), tenant("busy", 5, 4.0, 1.0, 3.0)];
+        let a = hill_climb(&am, &tenants, 4);
+        check_constraints(&tenants, &a.config, 4).unwrap();
+        assert!(am.objective(&tenants, &a.config).is_finite());
+    }
+}

@@ -1,0 +1,167 @@
+//! Resource allocation: the paper's greedy hill-climbing search (Alg. 1),
+//! the proportional fair-share core allocator, an exhaustive NLIP reference
+//! solver for small instances, and the two baselines from Section V-A3.
+
+pub mod baselines;
+pub mod exhaustive;
+pub mod hill_climb;
+
+pub use baselines::{edge_tpu_compiler, threshold_partitioning};
+pub use exhaustive::exhaustive_best;
+pub use hill_climb::hill_climb;
+
+use crate::analytic::{Config, Tenant};
+use crate::tpu::CostModel;
+
+/// `PropAlloc` (Alg. 1, lines 2 & 10): distribute the `K_max` physical
+/// cores across models with CPU suffixes, proportionally to each model's
+/// CPU workload `λ_i · s^CPU_1core(suffix_i)`, with the constraint-(8)
+/// floor of one core per suffix-bearing model. Largest-remainder rounding
+/// keeps shares integral and the total ≤ `K_max`.
+///
+/// If more models need a core than cores exist, the lowest-workload models
+/// are left with zero cores — the resulting configuration evaluates to an
+/// infinite latency and the hill-climb moves those models off the CPU.
+pub fn prop_alloc(
+    cost: &CostModel,
+    tenants: &[Tenant],
+    partitions: &[usize],
+    k_max: usize,
+) -> Vec<usize> {
+    let n = tenants.len();
+    assert_eq!(partitions.len(), n);
+    // CPU workload per model (zero for full-TPU models).
+    let mut work = vec![0.0f64; n];
+    let mut eligible: Vec<usize> = Vec::new();
+    for i in 0..n {
+        if partitions[i] < tenants[i].model.partition_points {
+            // 1-core suffix service time × arrival rate = offered CPU load.
+            work[i] =
+                tenants[i].rate.max(1e-12) * cost.cpu_service(&tenants[i].model, partitions[i]);
+            eligible.push(i);
+        }
+    }
+    let mut cores = vec![0usize; n];
+    if eligible.is_empty() || k_max == 0 {
+        return cores;
+    }
+    if eligible.len() >= k_max {
+        // Not enough cores for the floor: give one core each to the
+        // heaviest-workload models.
+        let mut order = eligible.clone();
+        order.sort_by(|&a, &b| work[b].partial_cmp(&work[a]).unwrap());
+        for &i in order.iter().take(k_max) {
+            cores[i] = 1;
+        }
+        return cores;
+    }
+    // Floor of 1 core each; distribute the remainder proportionally.
+    let total_work: f64 = eligible.iter().map(|&i| work[i]).sum();
+    let spare = k_max - eligible.len();
+    let mut shares: Vec<(usize, usize, f64)> = Vec::new(); // (idx, floor, remainder)
+    let mut assigned = 0usize;
+    for &i in &eligible {
+        let frac = if total_work > 0.0 {
+            work[i] / total_work * spare as f64
+        } else {
+            spare as f64 / eligible.len() as f64
+        };
+        let fl = frac.floor() as usize;
+        shares.push((i, fl, frac - fl as f64));
+        assigned += fl;
+    }
+    // Largest remainders get the leftover cores.
+    shares.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    let mut leftover = spare - assigned;
+    for (idx, fl, _) in &shares {
+        let extra = if leftover > 0 {
+            leftover -= 1;
+            1
+        } else {
+            0
+        };
+        cores[*idx] = 1 + fl + extra;
+    }
+    cores
+}
+
+/// Convenience: a full named allocation result.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub config: Config,
+    pub predicted_objective: f64,
+    /// Number of candidate evaluations performed (decision-overhead metric).
+    pub evaluations: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::Tenant;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+
+    fn setup() -> (CostModel, Vec<Tenant>) {
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("heavy", 6, 2_000_000, 2_000_000_000),
+                rate: 4.0,
+            },
+            Tenant {
+                model: synthetic_model("light", 4, 500_000, 100_000_000),
+                rate: 1.0,
+            },
+        ];
+        (cost, tenants)
+    }
+
+    #[test]
+    fn prop_alloc_respects_cap_and_floor() {
+        let (cost, tenants) = setup();
+        let cores = prop_alloc(&cost, &tenants, &[0, 0], 4);
+        assert!(cores.iter().sum::<usize>() <= 4);
+        assert!(cores[0] >= 1 && cores[1] >= 1);
+        // heavier CPU workload gets more cores
+        assert!(cores[0] > cores[1]);
+    }
+
+    #[test]
+    fn prop_alloc_full_tpu_gets_zero() {
+        let (cost, tenants) = setup();
+        let cores = prop_alloc(&cost, &tenants, &[6, 0], 4);
+        assert_eq!(cores[0], 0);
+        assert!(cores[1] >= 1);
+    }
+
+    #[test]
+    fn prop_alloc_distributes_all_cores() {
+        let (cost, tenants) = setup();
+        let cores = prop_alloc(&cost, &tenants, &[3, 2], 4);
+        assert_eq!(cores.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn prop_alloc_more_models_than_cores() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants: Vec<Tenant> = (0..6)
+            .map(|i| Tenant {
+                model: synthetic_model(&format!("m{i}"), 3, 1_000_000, 500_000_000),
+                rate: (i + 1) as f64,
+            })
+            .collect();
+        let cores = prop_alloc(&cost, &tenants, &[0; 6], 4);
+        assert_eq!(cores.iter().sum::<usize>(), 4);
+        // the four highest-rate models get the cores
+        assert_eq!(cores[0], 0);
+        assert_eq!(cores[1], 0);
+        assert!(cores[2..].iter().all(|&k| k == 1));
+    }
+
+    #[test]
+    fn prop_alloc_zero_kmax() {
+        let (cost, tenants) = setup();
+        let cores = prop_alloc(&cost, &tenants, &[0, 0], 0);
+        assert_eq!(cores, vec![0, 0]);
+    }
+}

@@ -1,0 +1,813 @@
+//! The analytic queueing model (Section III-B): M/G/1/FCFS TPU with
+//! Pollaczek–Khinchine waiting (Eq. 1–2), M/D/k per-model CPU queues
+//! (Eq. 3), end-to-end latency (Eq. 4), the weighted objective (Eq. 5),
+//! and the weight-miss probability α (Eq. 10).
+//!
+//! All times are seconds; rates are requests/second. Unstable
+//! configurations (ρ ≥ 1 on either processor) evaluate to `f64::INFINITY`,
+//! which the allocator naturally avoids.
+
+use crate::model::ModelMeta;
+use crate::tpu::CostModel;
+
+/// One co-located model with its arrival rate (`λ_{M_i}`).
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub model: ModelMeta,
+    pub rate: f64,
+}
+
+/// A global configuration: partition vector `P` and core vector `K`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub partitions: Vec<usize>,
+    pub cores: Vec<usize>,
+}
+
+impl Config {
+    pub fn all_cpu(n: usize) -> Config {
+        Config {
+            partitions: vec![0; n],
+            cores: vec![0; n],
+        }
+    }
+
+    pub fn all_tpu(tenants: &[Tenant]) -> Config {
+        Config {
+            partitions: tenants.iter().map(|t| t.model.partition_points).collect(),
+            cores: vec![0; tenants.len()],
+        }
+    }
+}
+
+/// Per-model latency breakdown (useful for validation figures).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyBreakdown {
+    pub input_transfer: f64,
+    pub tpu_wait: f64,
+    pub tpu_reload: f64,
+    pub tpu_service: f64,
+    pub output_transfer: f64,
+    pub cpu_wait: f64,
+    pub cpu_service: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.input_transfer
+            + self.tpu_wait
+            + self.tpu_reload
+            + self.tpu_service
+            + self.output_transfer
+            + self.cpu_wait
+            + self.cpu_service
+    }
+}
+
+/// One-pass evaluation of a configuration (see [`AnalyticModel::evaluate`]).
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub alphas: Vec<f64>,
+    pub tpu_rate: f64,
+    pub tpu_utilization: f64,
+    pub tpu_wait: f64,
+    pub e2e: Vec<f64>,
+    pub objective: f64,
+}
+
+/// How the weight-miss probability α is estimated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlphaMode {
+    /// Eq. 10 — the paper's conservative bound: once the aggregate
+    /// footprint overflows, ANY intervening request evicts yours.
+    Conservative,
+    /// Extension (EXPERIMENTS.md §Ablations): only models whose resident
+    /// set cannot co-reside with yours (`r_i + r_j > C`) evict you, so
+    /// α_i = Λ_conflict / (λ_i + Λ_conflict). Reduces the over-prediction
+    /// Eq. 10 exhibits on mixed-size tenancies (small models co-residing
+    /// between rare big-model arrivals) while degenerating to Eq. 10 in
+    /// the all-conflicting two-model case.
+    Pairwise,
+    /// The paper's "SwapLess (α=0)" ablation baseline.
+    Zero,
+}
+
+#[derive(Debug, Clone)]
+pub struct AnalyticModel {
+    pub cost: CostModel,
+    pub alpha_mode: AlphaMode,
+}
+
+impl AnalyticModel {
+    pub fn new(cost: CostModel) -> AnalyticModel {
+        AnalyticModel {
+            cost,
+            alpha_mode: AlphaMode::Conservative,
+        }
+    }
+
+    pub fn with_alpha_zero(cost: CostModel) -> AnalyticModel {
+        AnalyticModel {
+            cost,
+            alpha_mode: AlphaMode::Zero,
+        }
+    }
+
+    pub fn with_alpha_mode(cost: CostModel, mode: AlphaMode) -> AnalyticModel {
+        AnalyticModel {
+            cost,
+            alpha_mode: mode,
+        }
+    }
+
+    /// Aggregate TPU arrival rate `λ^TPU = Σ 1(p_i > 0) λ_i`.
+    pub fn tpu_rate(&self, tenants: &[Tenant], cfg: &Config) -> f64 {
+        tenants
+            .iter()
+            .zip(&cfg.partitions)
+            .filter(|(_, p)| **p > 0)
+            .map(|(t, _)| t.rate)
+            .sum()
+    }
+
+    /// Weight-miss probability `α_{M_i}` (Eq. 10, or the pairwise refinement).
+    pub fn alpha(&self, tenants: &[Tenant], cfg: &Config, i: usize) -> f64 {
+        if self.alpha_mode == AlphaMode::Zero || cfg.partitions[i] == 0 || tenants[i].rate <= 0.0 {
+            return 0.0;
+        }
+        let active: Vec<usize> = (0..tenants.len())
+            .filter(|&j| cfg.partitions[j] > 0 && tenants[j].rate > 0.0)
+            .collect();
+        // Single-tenant regime: the driver keeps the resident set on-chip.
+        if active.len() <= 1 {
+            return 0.0;
+        }
+        // Aggregate footprint fits: steady state keeps everyone resident.
+        let total_footprint: u64 = (0..tenants.len())
+            .map(|j| self.cost.resident_bytes(&tenants[j].model, cfg.partitions[j]))
+            .sum();
+        if total_footprint <= self.cost.hw.sram_bytes {
+            return 0.0;
+        }
+        match self.alpha_mode {
+            AlphaMode::Conservative => {
+                let lam_tpu = self.tpu_rate(tenants, cfg);
+                if lam_tpu <= 0.0 {
+                    return 0.0;
+                }
+                1.0 - tenants[i].rate / lam_tpu
+            }
+            AlphaMode::Pairwise => self.alpha_pairwise(tenants, cfg, i, &active),
+            AlphaMode::Zero => unreachable!(),
+        }
+    }
+
+    /// Pairwise-conflict α: only peers whose resident set cannot co-reside
+    /// with model i's contribute to its eviction rate.
+    fn alpha_pairwise(&self, tenants: &[Tenant], cfg: &Config, i: usize, active: &[usize]) -> f64 {
+        let r_i = self.cost.resident_bytes(&tenants[i].model, cfg.partitions[i]);
+        let mut conflict_rate = 0.0;
+        for &j in active {
+            if j == i {
+                continue;
+            }
+            let r_j = self.cost.resident_bytes(&tenants[j].model, cfg.partitions[j]);
+            if r_i + r_j > self.cost.hw.sram_bytes {
+                conflict_rate += tenants[j].rate;
+            }
+        }
+        if conflict_rate <= 0.0 {
+            return 0.0;
+        }
+        conflict_rate / (tenants[i].rate + conflict_rate)
+    }
+
+    /// First and second moments of the TPU service-time mixture (Eq. 2).
+    ///
+    /// Per-request service for model i is `s_i + Bernoulli(α_i)·T_load,i`
+    /// (deterministic compute+intra-swap plus a probabilistic reload), so
+    ///   E[s]  = Σ (λi/λ) (αi·T + s)
+    ///   E[s²] = Σ (λi/λ) (αi·(T+s)² + (1-αi)·s²)
+    pub fn tpu_service_moments(&self, tenants: &[Tenant], cfg: &Config) -> (f64, f64) {
+        let lam_tpu = self.tpu_rate(tenants, cfg);
+        if lam_tpu <= 0.0 {
+            return (0.0, 0.0);
+        }
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        for (i, t) in tenants.iter().enumerate() {
+            let p = cfg.partitions[i];
+            if p == 0 || t.rate <= 0.0 {
+                continue;
+            }
+            let w = t.rate / lam_tpu;
+            let s = self.cost.tpu_service(&t.model, p);
+            let a = self.alpha(tenants, cfg, i);
+            let tl = self.cost.load_time(&t.model, p);
+            m1 += w * (a * tl + s);
+            m2 += w * (a * (tl + s) * (tl + s) + (1.0 - a) * s * s);
+        }
+        (m1, m2)
+    }
+
+    /// TPU utilization `ρ^TPU = λ^TPU · E[s^TPU]`.
+    pub fn tpu_utilization(&self, tenants: &[Tenant], cfg: &Config) -> f64 {
+        let lam = self.tpu_rate(tenants, cfg);
+        let (m1, _) = self.tpu_service_moments(tenants, cfg);
+        lam * m1
+    }
+
+    /// `E[W^TPU]` — Pollaczek–Khinchine mean wait (Eq. 1).
+    pub fn tpu_wait(&self, tenants: &[Tenant], cfg: &Config) -> f64 {
+        let lam = self.tpu_rate(tenants, cfg);
+        if lam <= 0.0 {
+            return 0.0;
+        }
+        let (m1, m2) = self.tpu_service_moments(tenants, cfg);
+        let rho = lam * m1;
+        if rho >= 1.0 {
+            return f64::INFINITY;
+        }
+        lam * m2 / (2.0 * (1.0 - rho))
+    }
+
+    /// `E[W^CPU_{M_i}]` — M/D/k approximation (Eq. 3).
+    pub fn cpu_wait(&self, tenant: &Tenant, p: usize, k: usize) -> f64 {
+        if p >= tenant.model.partition_points || tenant.rate <= 0.0 {
+            return 0.0;
+        }
+        if k == 0 {
+            return f64::INFINITY; // constraint (8) violated — no server
+        }
+        let s = self.cost.cpu_service(&tenant.model, p);
+        let mu = 1.0 / s;
+        let cap = k as f64 * mu;
+        if tenant.rate >= cap {
+            return f64::INFINITY;
+        }
+        0.5 * (1.0 / (cap - tenant.rate) - 1.0 / cap)
+    }
+
+    /// Full per-model latency breakdown under `(P, K)` (Eq. 4's terms).
+    pub fn breakdown(&self, tenants: &[Tenant], cfg: &Config, i: usize) -> LatencyBreakdown {
+        let t = &tenants[i];
+        let p = cfg.partitions[i];
+        let k = cfg.cores[i];
+        let mut b = LatencyBreakdown::default();
+        if p > 0 {
+            b.input_transfer = self.cost.input_transfer(&t.model);
+            b.tpu_wait = self.tpu_wait(tenants, cfg);
+            b.tpu_reload =
+                self.alpha(tenants, cfg, i) * self.cost.load_time(&t.model, p);
+            b.tpu_service = self.cost.tpu_service(&t.model, p);
+            b.output_transfer = self.cost.output_transfer(&t.model, p);
+        }
+        if p < t.model.partition_points {
+            b.cpu_wait = self.cpu_wait(t, p, k);
+            b.cpu_service = if k >= 1 {
+                self.cost.cpu_service(&t.model, p)
+            } else {
+                f64::INFINITY
+            };
+        }
+        b
+    }
+
+    /// `T^{e2e}_{M_i}(P, K)` (Eq. 4).
+    pub fn e2e_latency(&self, tenants: &[Tenant], cfg: &Config, i: usize) -> f64 {
+        self.breakdown(tenants, cfg, i).total()
+    }
+
+    /// Evaluate a whole configuration in one pass: α, the P-K wait, and
+    /// every model's e2e latency share common subexpressions (aggregate
+    /// rate, footprint, service moments), so computing them per-model —
+    /// as the naive `objective()` did — costs O(n³) per evaluation. The
+    /// hill climb calls this O(n·P) times per decision; this single-pass
+    /// version is what keeps the allocator inside the paper's 2 ms budget
+    /// (see EXPERIMENTS.md §Perf for before/after).
+    pub fn evaluate(&self, tenants: &[Tenant], cfg: &Config) -> Evaluation {
+        let n = tenants.len();
+        // Pass 1: aggregate rate + footprint (α's regime inputs).
+        let mut lam_tpu = 0.0;
+        let mut footprint: u64 = 0;
+        let mut active = 0usize;
+        for (i, t) in tenants.iter().enumerate() {
+            let p = cfg.partitions[i];
+            footprint += self.cost.resident_bytes(&t.model, p);
+            if p > 0 && t.rate > 0.0 {
+                lam_tpu += t.rate;
+                active += 1;
+            }
+        }
+        let overflow = self.alpha_mode != AlphaMode::Zero
+            && active > 1
+            && footprint > self.cost.hw.sram_bytes;
+
+        // Pass 2: α, per-model service terms, and the mixture moments.
+        let mut alphas = vec![0.0f64; n];
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        for (i, t) in tenants.iter().enumerate() {
+            let p = cfg.partitions[i];
+            if p == 0 || t.rate <= 0.0 {
+                continue;
+            }
+            if overflow && lam_tpu > 0.0 {
+                alphas[i] = match self.alpha_mode {
+                    AlphaMode::Conservative => 1.0 - t.rate / lam_tpu,
+                    AlphaMode::Pairwise => self.alpha(tenants, cfg, i),
+                    AlphaMode::Zero => 0.0,
+                };
+            }
+            let w = t.rate / lam_tpu;
+            let s = self.cost.tpu_service(&t.model, p);
+            let tl = self.cost.load_time(&t.model, p);
+            let a = alphas[i];
+            m1 += w * (a * tl + s);
+            m2 += w * (a * (tl + s) * (tl + s) + (1.0 - a) * s * s);
+        }
+        let rho = lam_tpu * m1;
+        let tpu_wait = if lam_tpu <= 0.0 {
+            0.0
+        } else if rho >= 1.0 {
+            f64::INFINITY
+        } else {
+            lam_tpu * m2 / (2.0 * (1.0 - rho))
+        };
+
+        // Pass 3: per-model e2e (Eq. 4) and the weighted objective (Eq. 5).
+        let mut e2e = vec![0.0f64; n];
+        let mut objective = 0.0;
+        for (i, t) in tenants.iter().enumerate() {
+            let p = cfg.partitions[i];
+            let k = cfg.cores[i];
+            let mut total = 0.0;
+            if p > 0 {
+                total += self.cost.input_transfer(&t.model)
+                    + tpu_wait
+                    + alphas[i] * self.cost.load_time(&t.model, p)
+                    + self.cost.tpu_service(&t.model, p)
+                    + self.cost.output_transfer(&t.model, p);
+            }
+            if p < t.model.partition_points {
+                total += self.cpu_wait(t, p, k);
+                total += if k >= 1 {
+                    self.cost.cpu_service(&t.model, p)
+                } else {
+                    f64::INFINITY
+                };
+            }
+            e2e[i] = total;
+            if t.rate > 0.0 {
+                objective += t.rate * total; // guard: 0 * INF would be NaN
+            }
+        }
+
+        Evaluation {
+            alphas,
+            tpu_rate: lam_tpu,
+            tpu_utilization: rho,
+            tpu_wait,
+            e2e,
+            objective,
+        }
+    }
+
+    /// The optimization objective `Σ λ_i · T_i` (Eq. 5).
+    ///
+    /// Allocation-free specialization of [`evaluate`](Self::evaluate) —
+    /// this is the innermost call of the hill climb (α is O(1) per model
+    /// given the aggregate rate, so no scratch vectors are needed).
+    pub fn objective(&self, tenants: &[Tenant], cfg: &Config) -> f64 {
+        let mut lam_tpu = 0.0;
+        let mut footprint: u64 = 0;
+        let mut active = 0usize;
+        for (i, t) in tenants.iter().enumerate() {
+            let p = cfg.partitions[i];
+            footprint += self.cost.resident_bytes(&t.model, p);
+            if p > 0 && t.rate > 0.0 {
+                lam_tpu += t.rate;
+                active += 1;
+            }
+        }
+        let overflow = self.alpha_mode != AlphaMode::Zero
+            && active > 1
+            && footprint > self.cost.hw.sram_bytes;
+        if overflow && self.alpha_mode == AlphaMode::Pairwise {
+            // pairwise α needs per-peer footprints — use the general path.
+            return self.evaluate(tenants, cfg).objective;
+        }
+        let alpha_of = |t: &Tenant| -> f64 {
+            if overflow {
+                1.0 - t.rate / lam_tpu
+            } else {
+                0.0
+            }
+        };
+
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        for (i, t) in tenants.iter().enumerate() {
+            let p = cfg.partitions[i];
+            if p == 0 || t.rate <= 0.0 {
+                continue;
+            }
+            let w = t.rate / lam_tpu;
+            let s = self.cost.tpu_service(&t.model, p);
+            let tl = self.cost.load_time(&t.model, p);
+            let a = alpha_of(t);
+            m1 += w * (a * tl + s);
+            m2 += w * (a * (tl + s) * (tl + s) + (1.0 - a) * s * s);
+        }
+        let rho = lam_tpu * m1;
+        let tpu_wait = if lam_tpu <= 0.0 {
+            0.0
+        } else if rho >= 1.0 {
+            return f64::INFINITY;
+        } else {
+            lam_tpu * m2 / (2.0 * (1.0 - rho))
+        };
+
+        let mut objective = 0.0;
+        for (i, t) in tenants.iter().enumerate() {
+            let p = cfg.partitions[i];
+            let k = cfg.cores[i];
+            let mut total = 0.0;
+            if p > 0 && t.rate > 0.0 {
+                total += self.cost.input_transfer(&t.model)
+                    + tpu_wait
+                    + alpha_of(t) * self.cost.load_time(&t.model, p)
+                    + self.cost.tpu_service(&t.model, p)
+                    + self.cost.output_transfer(&t.model, p);
+            } else if p > 0 {
+                // zero-rate models still contribute their (rate-weighted,
+                // hence zero) term; skip the wait computation entirely.
+                total += 0.0;
+            }
+            if p < t.model.partition_points {
+                total += self.cpu_wait(t, p, k);
+                total += if k >= 1 {
+                    self.cost.cpu_service(&t.model, p)
+                } else {
+                    f64::INFINITY
+                };
+            }
+            if t.rate > 0.0 {
+                objective += t.rate * total; // guard: 0 * INF would be NaN
+            }
+        }
+        objective
+    }
+
+    /// Request-weighted mean latency (what Fig. 7 plots).
+    pub fn mean_latency(&self, tenants: &[Tenant], cfg: &Config) -> f64 {
+        let lam: f64 = tenants.iter().map(|t| t.rate).sum();
+        if lam <= 0.0 {
+            return 0.0;
+        }
+        self.objective(tenants, cfg) / lam
+    }
+}
+
+/// Validate a configuration against constraints (6)–(9).
+pub fn check_constraints(
+    tenants: &[Tenant],
+    cfg: &Config,
+    k_max: usize,
+) -> Result<(), String> {
+    if cfg.partitions.len() != tenants.len() || cfg.cores.len() != tenants.len() {
+        return Err("config dimension mismatch".into());
+    }
+    let mut total_cores = 0;
+    for (i, t) in tenants.iter().enumerate() {
+        let p = cfg.partitions[i];
+        let k = cfg.cores[i];
+        if p > t.model.partition_points {
+            return Err(format!("p_{i}={p} out of range (6)"));
+        }
+        if k > k_max {
+            return Err(format!("k_{i}={k} out of range (7)"));
+        }
+        if p < t.model.partition_points && k < 1 {
+            return Err(format!("model {i} has a CPU suffix but no cores (8)"));
+        }
+        if p == t.model.partition_points && k != 0 {
+            return Err(format!("model {i} is full-TPU but holds cores (8)"));
+        }
+        total_cores += k;
+    }
+    if total_cores > k_max {
+        return Err(format!("Σk = {total_cores} > K_max = {k_max} (9)"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+
+    fn setup(n: usize) -> (AnalyticModel, Vec<Tenant>) {
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants: Vec<Tenant> = (0..n)
+            .map(|i| Tenant {
+                model: synthetic_model(&format!("m{i}"), 6, 2_000_000, 500_000_000),
+                rate: 2.0,
+            })
+            .collect();
+        (AnalyticModel::new(cost), tenants)
+    }
+
+    #[test]
+    fn alpha_zero_when_fits() {
+        // 2 models, prefix 1 segment each = 4 MB total < 8 MB.
+        let (am, tenants) = setup(2);
+        let cfg = Config {
+            partitions: vec![1, 1],
+            cores: vec![1, 1],
+        };
+        assert_eq!(am.alpha(&tenants, &cfg, 0), 0.0);
+    }
+
+    #[test]
+    fn alpha_zero_single_tenant_even_when_oversized() {
+        let (am, tenants) = setup(1);
+        let cfg = Config {
+            partitions: vec![6], // 12 MB > 8 MB
+            cores: vec![0],
+        };
+        assert_eq!(am.alpha(&tenants, &cfg, 0), 0.0);
+    }
+
+    #[test]
+    fn alpha_matches_rate_share_when_overflowing() {
+        let (am, mut tenants) = setup(2);
+        tenants[0].rate = 9.0;
+        tenants[1].rate = 1.0;
+        let cfg = Config {
+            partitions: vec![4, 4], // 8 MB + 8 MB > 8 MB
+            cores: vec![1, 1],
+        };
+        assert!((am.alpha(&tenants, &cfg, 0) - 0.1).abs() < 1e-12);
+        assert!((am.alpha(&tenants, &cfg, 1) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forced_alpha_zero() {
+        let (mut am, mut tenants) = setup(2);
+        am.alpha_mode = AlphaMode::Zero;
+        tenants[0].rate = 5.0;
+        let cfg = Config {
+            partitions: vec![6, 6],
+            cores: vec![0, 0],
+        };
+        assert_eq!(am.alpha(&tenants, &cfg, 0), 0.0);
+    }
+
+    #[test]
+    fn pk_wait_grows_with_load_and_diverges() {
+        let (am, mut tenants) = setup(1);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        tenants[0].rate = 1.0;
+        let w1 = am.tpu_wait(&tenants, &cfg);
+        tenants[0].rate = 5.0;
+        let w5 = am.tpu_wait(&tenants, &cfg);
+        assert!(w5 > w1 && w1 > 0.0);
+        tenants[0].rate = 1e6;
+        assert!(am.tpu_wait(&tenants, &cfg).is_infinite());
+    }
+
+    #[test]
+    fn pk_matches_md1_for_deterministic_single_model() {
+        // Single tenant, α=0 ⇒ deterministic service ⇒ M/D/1:
+        // E[W] = ρ s / (2 (1-ρ)).
+        let (am, mut tenants) = setup(1);
+        tenants[0].rate = 3.0;
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let s = am.cost.tpu_service(&tenants[0].model, 6);
+        let rho = 3.0 * s;
+        let expect = rho * s / (2.0 * (1.0 - rho));
+        let got = am.tpu_wait(&tenants, &cfg);
+        assert!((got - expect).abs() < 1e-12, "got {got} expect {expect}");
+    }
+
+    #[test]
+    fn cpu_wait_zero_load_and_divergence() {
+        let (am, mut tenants) = setup(1);
+        tenants[0].rate = 0.5;
+        let w = am.cpu_wait(&tenants[0], 0, 2);
+        assert!(w > 0.0 && w.is_finite());
+        tenants[0].rate = 1e9;
+        assert!(am.cpu_wait(&tenants[0], 0, 2).is_infinite());
+        // no cores => infinite
+        tenants[0].rate = 0.5;
+        assert!(am.cpu_wait(&tenants[0], 0, 0).is_infinite());
+    }
+
+    #[test]
+    fn cpu_wait_decreases_with_cores() {
+        let (am, tenants) = setup(1);
+        let w1 = am.cpu_wait(&tenants[0], 0, 1);
+        let w4 = am.cpu_wait(&tenants[0], 0, 4);
+        assert!(w4 < w1);
+    }
+
+    #[test]
+    fn e2e_full_tpu_has_no_cpu_terms() {
+        let (am, tenants) = setup(1);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let b = am.breakdown(&tenants, &cfg, 0);
+        assert_eq!(b.cpu_wait, 0.0);
+        assert_eq!(b.cpu_service, 0.0);
+        assert!(b.tpu_service > 0.0);
+        assert!(b.input_transfer > 0.0);
+    }
+
+    #[test]
+    fn e2e_full_cpu_has_no_tpu_terms() {
+        let (am, tenants) = setup(1);
+        let cfg = Config {
+            partitions: vec![0],
+            cores: vec![2],
+        };
+        let b = am.breakdown(&tenants, &cfg, 0);
+        assert_eq!(b.tpu_service, 0.0);
+        assert_eq!(b.input_transfer, 0.0);
+        assert!(b.cpu_service > 0.0);
+    }
+
+    #[test]
+    fn objective_weights_by_rate() {
+        let (am, mut tenants) = setup(2);
+        tenants[1].rate = 0.0;
+        let cfg = Config {
+            partitions: vec![6, 6],
+            cores: vec![0, 0],
+        };
+        let obj = am.objective(&tenants, &cfg);
+        let t0 = am.e2e_latency(&tenants, &cfg, 0);
+        assert!((obj - 2.0 * t0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constraints_checker() {
+        let (_, tenants) = setup(2);
+        let ok = Config {
+            partitions: vec![6, 3],
+            cores: vec![0, 2],
+        };
+        check_constraints(&tenants, &ok, 4).unwrap();
+        let bad_p = Config {
+            partitions: vec![7, 3],
+            cores: vec![0, 2],
+        };
+        assert!(check_constraints(&tenants, &bad_p, 4).is_err());
+        let bad_k = Config {
+            partitions: vec![3, 3],
+            cores: vec![0, 2],
+        };
+        assert!(check_constraints(&tenants, &bad_k, 4).is_err());
+        let over_k = Config {
+            partitions: vec![3, 3],
+            cores: vec![3, 3],
+        };
+        assert!(check_constraints(&tenants, &over_k, 4).is_err());
+        let full_tpu_with_cores = Config {
+            partitions: vec![6, 6],
+            cores: vec![1, 0],
+        };
+        assert!(check_constraints(&tenants, &full_tpu_with_cores, 4).is_err());
+    }
+
+    #[test]
+    fn evaluate_matches_per_call_apis() {
+        // The fused one-pass evaluation must agree exactly with the
+        // formula-by-formula methods it optimizes over.
+        let (am, mut tenants) = setup(3);
+        tenants[0].rate = 4.0;
+        tenants[2].rate = 0.5;
+        for cfg in [
+            Config {
+                partitions: vec![6, 3, 0],
+                cores: vec![0, 2, 2],
+            },
+            Config {
+                partitions: vec![6, 6, 6],
+                cores: vec![0, 0, 0],
+            },
+            Config {
+                partitions: vec![0, 0, 0],
+                cores: vec![2, 1, 1],
+            },
+        ] {
+            let ev = am.evaluate(&tenants, &cfg);
+            assert!((ev.tpu_wait - am.tpu_wait(&tenants, &cfg)).abs() < 1e-12 || (ev.tpu_wait.is_infinite() && am.tpu_wait(&tenants, &cfg).is_infinite()));
+            assert!((ev.tpu_rate - am.tpu_rate(&tenants, &cfg)).abs() < 1e-12);
+            for i in 0..3 {
+                assert!(
+                    (ev.alphas[i] - am.alpha(&tenants, &cfg, i)).abs() < 1e-12,
+                    "alpha {i}"
+                );
+                let direct = am.e2e_latency(&tenants, &cfg, i);
+                if direct.is_finite() {
+                    assert!((ev.e2e[i] - direct).abs() < 1e-12, "e2e {i}");
+                } else {
+                    assert!(ev.e2e[i].is_infinite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_alpha_degenerates_to_eq10_for_two_conflicting_models() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let cons = AnalyticModel::new(cost.clone());
+        let pair = AnalyticModel::with_alpha_mode(cost, AlphaMode::Pairwise);
+        let mut tenants: Vec<Tenant> = (0..2)
+            .map(|i| Tenant {
+                model: synthetic_model(&format!("m{i}"), 6, 1_200_000, 300_000_000),
+                rate: 1.0,
+            })
+            .collect();
+        tenants[0].rate = 3.0;
+        let cfg = Config {
+            partitions: vec![6, 6], // 7.2 MB each, both conflict
+            cores: vec![0, 0],
+        };
+        for i in 0..2 {
+            assert!(
+                (cons.alpha(&tenants, &cfg, i) - pair.alpha(&tenants, &cfg, i)).abs() < 1e-12,
+                "model {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn pairwise_alpha_spares_coresident_small_models() {
+        // small+small+big: the two small models fit together; only the big
+        // one evicts them. Pairwise α for a small model counts only the
+        // big model's rate; Eq. 10 counts everything.
+        let cost = CostModel::new(HardwareSpec::default());
+        let cons = AnalyticModel::new(cost.clone());
+        let pair = AnalyticModel::with_alpha_mode(cost, AlphaMode::Pairwise);
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("small_a", 4, 500_000, 100_000_000), // 2 MB
+                rate: 4.0,
+            },
+            Tenant {
+                model: synthetic_model("small_b", 4, 500_000, 100_000_000), // 2 MB
+                rate: 4.0,
+            },
+            Tenant {
+                model: synthetic_model("big", 6, 1_400_000, 500_000_000), // 8.4 MB -> resident 8 MB
+                rate: 0.5,
+            },
+        ];
+        let cfg = Config {
+            partitions: vec![4, 4, 6],
+            cores: vec![0, 0, 0],
+        };
+        let a_cons = cons.alpha(&tenants, &cfg, 0);
+        let a_pair = pair.alpha(&tenants, &cfg, 0);
+        assert!(a_pair < a_cons, "pairwise {a_pair} !< conservative {a_cons}");
+        // small_a is only evicted by big: α = 0.5 / (4 + 0.5)
+        assert!((a_pair - 0.5 / 4.5).abs() < 1e-12);
+        // the big model conflicts with everyone -> pairwise == Eq. 10
+        assert!(
+            (pair.alpha(&tenants, &cfg, 2) - cons.alpha(&tenants, &cfg, 2)).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn intermodel_swapping_raises_latency() {
+        // Two big prefixes that cannot co-reside: SwapLess-with-α must
+        // predict higher latency than the α=0 ablation.
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants: Vec<Tenant> = (0..2)
+            .map(|i| Tenant {
+                model: synthetic_model(&format!("m{i}"), 6, 2_000_000, 500_000_000),
+                rate: 1.0,
+            })
+            .collect();
+        let with_alpha = AnalyticModel::new(cost.clone());
+        let no_alpha = AnalyticModel::with_alpha_zero(cost);
+        let cfg = Config {
+            partitions: vec![6, 6],
+            cores: vec![0, 0],
+        };
+        assert!(
+            with_alpha.mean_latency(&tenants, &cfg) > no_alpha.mean_latency(&tenants, &cfg)
+        );
+    }
+}

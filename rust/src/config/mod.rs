@@ -1,0 +1,173 @@
+//! Configuration system: hardware spec, runtime knobs, and experiment
+//! parameters, loadable from JSON files and overridable from the CLI.
+//!
+//! The defaults model the paper's testbed (Coral USB Edge TPU + Raspberry
+//! Pi 5) and are calibrated so the motivation experiments land in the
+//! paper's reported ranges (Fig. 1: 20–62% intra-model swap overhead;
+//! Fig. 3: early segments several-fold faster on TPU, late segments
+//! comparable). See DESIGN.md §3 for the substitution rationale.
+
+use crate::util::json::Json;
+
+/// Hardware + cost-model parameters (Table I's hardware section).
+#[derive(Debug, Clone)]
+pub struct HardwareSpec {
+    /// TPU SRAM capacity `C` in bytes (Edge TPU: 8 MB).
+    pub sram_bytes: u64,
+    /// Host↔TPU bandwidth `B` in bytes/s (USB 3.0 effective).
+    pub bus_bytes_per_sec: f64,
+    /// Physical CPU cores `K_max` (Pi 5: quad-core A76).
+    pub cpu_cores: usize,
+    /// Effective per-core CPU throughput in FLOP/s for int8 CNN inference.
+    pub cpu_core_flops: f64,
+    /// Peak TPU speedup over one CPU core for a segment that fully fills
+    /// the MXU (Fig. 3 calibration: the first segment's advantage).
+    pub tpu_speedup_max: f64,
+    /// Floor on the TPU/CPU speedup for array-starved segments (late
+    /// layers run comparably — the collaborative-processing opportunity).
+    pub tpu_speedup_min: f64,
+    /// MXU utilization that earns the full `tpu_speedup_max` (global
+    /// anchor — models whose kernels underfill the array, e.g. DenseNet's
+    /// small growth convs, earn proportionally less; Fig. 1's spread).
+    pub mxu_util_anchor: f64,
+    /// Fixed per-inference TPU dispatch overhead (driver + USB turnaround).
+    pub tpu_dispatch_s: f64,
+    /// Fixed per-inference CPU dispatch overhead (thread handoff).
+    pub cpu_dispatch_s: f64,
+}
+
+impl Default for HardwareSpec {
+    fn default() -> Self {
+        HardwareSpec {
+            sram_bytes: 8 * 1024 * 1024,
+            bus_bytes_per_sec: 200e6,
+            cpu_cores: 4,
+            cpu_core_flops: 25e9,
+            tpu_speedup_max: 8.0,
+            tpu_speedup_min: 0.7,
+            mxu_util_anchor: 0.3,
+            tpu_dispatch_s: 1e-3,
+            cpu_dispatch_s: 0.5e-3,
+        }
+    }
+}
+
+impl HardwareSpec {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("sram_bytes", Json::Num(self.sram_bytes as f64)),
+            ("bus_bytes_per_sec", Json::Num(self.bus_bytes_per_sec)),
+            ("cpu_cores", Json::Num(self.cpu_cores as f64)),
+            ("cpu_core_flops", Json::Num(self.cpu_core_flops)),
+            ("tpu_speedup_max", Json::Num(self.tpu_speedup_max)),
+            ("tpu_speedup_min", Json::Num(self.tpu_speedup_min)),
+            ("mxu_util_anchor", Json::Num(self.mxu_util_anchor)),
+            ("tpu_dispatch_s", Json::Num(self.tpu_dispatch_s)),
+            ("cpu_dispatch_s", Json::Num(self.cpu_dispatch_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<HardwareSpec, String> {
+        let d = HardwareSpec::default();
+        let f = |key: &str, dflt: f64| -> f64 {
+            j.get(key).and_then(Json::as_f64).unwrap_or(dflt)
+        };
+        let spec = HardwareSpec {
+            sram_bytes: f("sram_bytes", d.sram_bytes as f64) as u64,
+            bus_bytes_per_sec: f("bus_bytes_per_sec", d.bus_bytes_per_sec),
+            cpu_cores: f("cpu_cores", d.cpu_cores as f64) as usize,
+            cpu_core_flops: f("cpu_core_flops", d.cpu_core_flops),
+            tpu_speedup_max: f("tpu_speedup_max", d.tpu_speedup_max),
+            tpu_speedup_min: f("tpu_speedup_min", d.tpu_speedup_min),
+            mxu_util_anchor: f("mxu_util_anchor", d.mxu_util_anchor),
+            tpu_dispatch_s: f("tpu_dispatch_s", d.tpu_dispatch_s),
+            cpu_dispatch_s: f("cpu_dispatch_s", d.cpu_dispatch_s),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sram_bytes == 0 {
+            return Err("sram_bytes must be positive".into());
+        }
+        if self.bus_bytes_per_sec <= 0.0 {
+            return Err("bus_bytes_per_sec must be positive".into());
+        }
+        if self.cpu_cores == 0 {
+            return Err("cpu_cores must be positive".into());
+        }
+        if self.cpu_core_flops <= 0.0 {
+            return Err("cpu_core_flops must be positive".into());
+        }
+        if self.tpu_speedup_max < self.tpu_speedup_min {
+            return Err("tpu_speedup_max < tpu_speedup_min".into());
+        }
+        if self.mxu_util_anchor <= 0.0 {
+            return Err("mxu_util_anchor must be positive".into());
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<HardwareSpec, String> {
+        let j = crate::util::json::parse_file(path)?;
+        HardwareSpec::from_json(&j)
+    }
+}
+
+/// Online-coordinator knobs (Section IV's implementation parameters).
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// Sliding-window length for request-rate estimation (seconds).
+    pub rate_window_s: f64,
+    /// Period between resource-allocation re-evaluations (seconds).
+    pub realloc_period_s: f64,
+    /// Minimum relative rate change that triggers reconfiguration.
+    pub realloc_threshold: f64,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            rate_window_s: 30.0,
+            realloc_period_s: 5.0,
+            realloc_threshold: 0.05,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        HardwareSpec::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = HardwareSpec::default();
+        let j = spec.to_json();
+        let back = HardwareSpec::from_json(&j).unwrap();
+        assert_eq!(back.sram_bytes, spec.sram_bytes);
+        assert_eq!(back.cpu_cores, spec.cpu_cores);
+        assert!((back.tpu_speedup_max - spec.tpu_speedup_max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = crate::util::json::parse(r#"{"cpu_cores": 8}"#).unwrap();
+        let spec = HardwareSpec::from_json(&j).unwrap();
+        assert_eq!(spec.cpu_cores, 8);
+        assert_eq!(spec.sram_bytes, 8 * 1024 * 1024);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let j = crate::util::json::parse(r#"{"cpu_cores": 0}"#).unwrap();
+        assert!(HardwareSpec::from_json(&j).is_err());
+        let j = crate::util::json::parse(r#"{"bus_bytes_per_sec": -1}"#).unwrap();
+        assert!(HardwareSpec::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! The online serving coordinator — the L3 request path.
+//!
+//! Architecture (Fig. 4 of the paper):
+//!
+//! ```text
+//!   clients ──submit()──► router ──► [TPU worker thread]  (FCFS queue,
+//!                            │        SRAM cache + swap emulation,
+//!                            │        executes prefix via PJRT)
+//!                            │              │ boundary tensor
+//!                            └──────────────▼
+//!                                  [per-model CPU pools]  (k_i-gated
+//!                                   workers execute the suffix via PJRT)
+//! ```
+//!
+//! A sliding-window rate monitor feeds the periodic re-allocator, which
+//! swaps the shared `Config` (partition points + core allocation) without
+//! stopping the pipeline — in-flight requests finish under their
+//! admission-time configuration, mirroring the paper's preloaded-partition
+//! switching.
+//!
+//! The Edge TPU itself is emulated: prefix *numerics* run through the real
+//! PJRT artifacts, while the device-time budget (compute at MXU speed,
+//! swap streams, bus transfers) comes from the shared `CostModel` and is
+//! enforced with virtual-time sleeps scaled by `time_scale` (DESIGN.md §3).
+
+pub mod pools;
+pub mod server;
+
+pub use pools::CpuPools;
+pub use server::{ServeStats, Server, ServerOptions};

@@ -1,0 +1,207 @@
+//! Per-model CPU executor pools with dynamically adjustable core gates.
+//!
+//! Each model owns an independent FCFS queue (the paper's performance-
+//! isolation design). A fixed set of `K_max` worker threads per model is
+//! spawned once; at any moment only `k_i` of them may be *active* — the
+//! core gate — so reallocation is a single atomic store, not a thread
+//! spawn/join (this is what makes <2 ms reconfiguration possible).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of CPU suffix work.
+pub struct CpuJob {
+    pub model: usize,
+    /// Partition point at admission time (suffix = segments [p, P)).
+    pub p: usize,
+    pub input: Vec<f32>,
+    /// Called with the final output on completion.
+    pub done: Box<dyn FnOnce(anyhow::Result<Vec<f32>>) + Send>,
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<CpuJob>>,
+    cv: Condvar,
+    /// Allowed concurrency (k_i) — the core gate.
+    allowed: AtomicUsize,
+    /// Currently executing workers.
+    active: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+pub struct CpuPools {
+    pools: Vec<Arc<PoolShared>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl CpuPools {
+    /// Spawn `k_max` workers per model. `exec` is invoked inside workers
+    /// to run the suffix (it submits to the PJRT executor thread).
+    pub fn start<F>(n_models: usize, k_max: usize, exec: F) -> CpuPools
+    where
+        F: Fn(usize, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + Send + Sync + 'static,
+    {
+        let exec = Arc::new(exec);
+        let mut pools = Vec::with_capacity(n_models);
+        let mut workers = Vec::new();
+        for m in 0..n_models {
+            let shared = Arc::new(PoolShared {
+                queue: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                allowed: AtomicUsize::new(0),
+                active: AtomicUsize::new(0),
+                shutdown: AtomicBool::new(false),
+            });
+            for w in 0..k_max.max(1) {
+                let s = shared.clone();
+                let exec = exec.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("cpu-pool-{m}-{w}"))
+                        .spawn(move || worker_loop(s, exec))
+                        .expect("spawn cpu pool worker"),
+                );
+            }
+            pools.push(shared);
+        }
+        CpuPools { pools, workers }
+    }
+
+    pub fn submit(&self, job: CpuJob) {
+        let pool = &self.pools[job.model];
+        pool.queue.lock().unwrap().push_back(job);
+        pool.cv.notify_one();
+    }
+
+    /// Apply a new core allocation (the K vector). O(1) per model.
+    pub fn set_cores(&self, cores: &[usize]) {
+        assert_eq!(cores.len(), self.pools.len());
+        for (pool, k) in self.pools.iter().zip(cores) {
+            pool.allowed.store(*k, Ordering::SeqCst);
+            pool.cv.notify_all();
+        }
+    }
+
+    pub fn queue_len(&self, model: usize) -> usize {
+        self.pools[model].queue.lock().unwrap().len()
+    }
+
+    pub fn active(&self, model: usize) -> usize {
+        self.pools[model].active.load(Ordering::SeqCst)
+    }
+}
+
+fn worker_loop<F>(s: Arc<PoolShared>, exec: Arc<F>)
+where
+    F: Fn(usize, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + Send + Sync + 'static,
+{
+    loop {
+        let job = {
+            let mut q = s.queue.lock().unwrap();
+            loop {
+                if s.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                // Straggler drain: if k dropped to 0 with queued work, one
+                // borrowed slot keeps requests from deadlocking (matches
+                // the DES's drain rule).
+                let allowed = s.allowed.load(Ordering::SeqCst).max(usize::from(!q.is_empty()));
+                if !q.is_empty() && s.active.load(Ordering::SeqCst) < allowed {
+                    s.active.fetch_add(1, Ordering::SeqCst);
+                    break q.pop_front().unwrap();
+                }
+                q = s.cv.wait(q).unwrap();
+            }
+        };
+        let result = exec(job.model, job.p, job.input);
+        (job.done)(result);
+        s.active.fetch_sub(1, Ordering::SeqCst);
+        s.cv.notify_one();
+    }
+}
+
+impl Drop for CpuPools {
+    fn drop(&mut self) {
+        for pool in &self.pools {
+            pool.shutdown.store(true, Ordering::SeqCst);
+            pool.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn echo_pools(n: usize, k: usize) -> CpuPools {
+        CpuPools::start(n, k, |_m, _p, input| Ok(input))
+    }
+
+    #[test]
+    fn jobs_complete() {
+        let pools = echo_pools(2, 2);
+        pools.set_cores(&[1, 1]);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            let tx = tx.clone();
+            pools.submit(CpuJob {
+                model: i % 2,
+                p: 0,
+                input: vec![i as f32],
+                done: Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
+            });
+        }
+        let mut got: Vec<f32> = (0..10).map(|_| rx.recv().unwrap()).collect();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, (0..10).map(|i| i as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrency_is_gated() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static CUR: AtomicUsize = AtomicUsize::new(0);
+        let pools = CpuPools::start(1, 4, |_m, _p, input| {
+            let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(c, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            CUR.fetch_sub(1, Ordering::SeqCst);
+            Ok(input)
+        });
+        pools.set_cores(&[2]);
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..8 {
+            let tx = tx.clone();
+            pools.submit(CpuJob {
+                model: 0,
+                p: 0,
+                input: vec![0.0],
+                done: Box::new(move |_| tx.send(()).unwrap()),
+            });
+        }
+        for _ in 0..8 {
+            rx.recv().unwrap();
+        }
+        assert!(PEAK.load(Ordering::SeqCst) <= 2, "peak={}", PEAK.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn zero_cores_still_drains() {
+        let pools = echo_pools(1, 2);
+        pools.set_cores(&[0]);
+        let (tx, rx) = mpsc::channel();
+        pools.submit(CpuJob {
+            model: 0,
+            p: 0,
+            input: vec![7.0],
+            done: Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
+        });
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(2)).unwrap(), 7.0);
+    }
+}

@@ -1,0 +1,419 @@
+//! The serving front-end: router, TPU worker, re-allocator, metrics.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::alloc;
+use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::config::RuntimeConfig;
+use crate::metrics::LatencyHistogram;
+use crate::model::Manifest;
+use crate::runtime::service::{ExecHandle, ExecService};
+use crate::sim::reconfig::RateMonitor;
+use crate::tpu::{CostModel, SramCache};
+
+use super::pools::{CpuJob, CpuPools};
+
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Scale on emulated device-time sleeps (swap/compute budget). 1.0 =
+    /// real-time emulation; 0.0 = run as fast as PJRT allows.
+    pub time_scale: f64,
+    /// Enable the online re-allocator (SwapLess) vs a static config.
+    pub adaptive: bool,
+    pub runtime: RuntimeConfig,
+    pub k_max: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            time_scale: 0.0,
+            adaptive: true,
+            runtime: RuntimeConfig::default(),
+            k_max: 4,
+        }
+    }
+}
+
+/// One finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub model: usize,
+    pub latency_s: f64,
+    pub output: Vec<f32>,
+}
+
+struct TpuJob {
+    model: usize,
+    p: usize,
+    input: Vec<f32>,
+    submitted: Instant,
+    done: mpsc::Sender<Result<Completion>>,
+}
+
+struct TpuShared {
+    queue: Mutex<VecDeque<TpuJob>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Aggregated serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub per_model: Vec<LatencyHistogram>,
+    pub completed: u64,
+    pub reconfigs: u64,
+    pub decision_micros: Vec<f64>,
+}
+
+struct Shared {
+    config: Mutex<Config>,
+    stats: Mutex<ServeStats>,
+    monitor: Mutex<RateMonitor>,
+    started: Instant,
+}
+
+/// Live multi-tenant inference server over the AOT artifacts.
+pub struct Server {
+    _exec: ExecService,
+    pools: Arc<CpuPools>,
+    tpu: Arc<TpuShared>,
+    shared: Arc<Shared>,
+    tenants: Vec<Tenant>,
+    threads: Vec<JoinHandle<()>>,
+    stop_realloc: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn start(
+        manifest: &Manifest,
+        model_names: &[String],
+        cost: CostModel,
+        initial: Config,
+        opts: ServerOptions,
+    ) -> Result<Server> {
+        let exec = ExecService::start(manifest, model_names)?;
+        let n = model_names.len();
+        let tenants: Vec<Tenant> = model_names
+            .iter()
+            .map(|name| {
+                Ok(Tenant {
+                    model: manifest.get(name).map_err(|e| anyhow!(e))?.clone(),
+                    rate: 0.0,
+                })
+            })
+            .collect::<Result<_>>()?;
+
+        let shared = Arc::new(Shared {
+            config: Mutex::new(initial.clone()),
+            stats: Mutex::new(ServeStats {
+                per_model: (0..n).map(|_| LatencyHistogram::default()).collect(),
+                completed: 0,
+                reconfigs: 0,
+                decision_micros: Vec::new(),
+            }),
+            monitor: Mutex::new(RateMonitor::new(opts.runtime.rate_window_s, n)),
+            started: Instant::now(),
+        });
+
+        // CPU pools execute suffixes through the PJRT thread.
+        let h: ExecHandle = exec.handle();
+        let tenants_for_pools = tenants.clone();
+        let cost_for_pools = cost.clone();
+        let scale = opts.time_scale;
+        let pools = Arc::new(CpuPools::start(n, opts.k_max, move |m, p, input| {
+            let meta = &tenants_for_pools[m].model;
+            let t0 = Instant::now();
+            let out = h.execute_range(&meta.name, p, meta.partition_points, input)?;
+            // Pad to the modeled CPU-suffix budget (virtual device time).
+            if scale > 0.0 {
+                let budget = cost_for_pools.cpu_service(meta, p) * scale;
+                let spent = t0.elapsed().as_secs_f64();
+                if budget > spent {
+                    std::thread::sleep(Duration::from_secs_f64(budget - spent));
+                }
+            }
+            Ok(out)
+        }));
+        pools.set_cores(&initial.cores);
+
+        // TPU worker thread: FCFS queue + SRAM cache + swap emulation.
+        let tpu = Arc::new(TpuShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut threads = Vec::new();
+        {
+            let tpu = tpu.clone();
+            let pools = pools.clone();
+            let shared = shared.clone();
+            let handle = exec.handle();
+            let tenants = tenants.clone();
+            let cost = cost.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("tpu-worker".into())
+                    .spawn(move || {
+                        tpu_worker_loop(tpu, pools, shared, handle, tenants, cost, scale)
+                    })?,
+            );
+        }
+
+        // Re-allocator thread.
+        let stop_realloc = Arc::new(AtomicBool::new(false));
+        if opts.adaptive {
+            let shared = shared.clone();
+            let pools = pools.clone();
+            let tenants = tenants.clone();
+            let am = AnalyticModel::new(cost.clone());
+            let stop = stop_realloc.clone();
+            let rt = opts.runtime.clone();
+            let k_max = opts.k_max;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("re-allocator".into())
+                    .spawn(move || {
+                        realloc_loop(shared, pools, tenants, am, rt, k_max, stop)
+                    })?,
+            );
+        }
+
+        Ok(Server {
+            _exec: exec,
+            pools,
+            tpu,
+            shared,
+            tenants,
+            threads,
+            stop_realloc,
+        })
+    }
+
+    /// Submit a request; the completion arrives on the returned channel.
+    pub fn submit(&self, model: usize, input: Vec<f32>) -> mpsc::Receiver<Result<Completion>> {
+        let (tx, rx) = mpsc::channel();
+        let now = self.shared.started.elapsed().as_secs_f64();
+        self.shared.monitor.lock().unwrap().observe(now, model);
+        let p = self.shared.config.lock().unwrap().partitions[model];
+        if p > 0 {
+            let job = TpuJob {
+                model,
+                p,
+                input,
+                submitted: Instant::now(),
+                done: tx,
+            };
+            self.tpu.queue.lock().unwrap().push_back(job);
+            self.tpu.cv.notify_one();
+        } else {
+            self.dispatch_cpu(model, 0, input, Instant::now(), tx);
+        }
+        rx
+    }
+
+    /// Blocking single inference (convenience for examples).
+    pub fn infer(&self, model: usize, input: Vec<f32>) -> Result<Completion> {
+        self.submit(model, input)
+            .recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    fn dispatch_cpu(
+        &self,
+        model: usize,
+        p: usize,
+        input: Vec<f32>,
+        submitted: Instant,
+        tx: mpsc::Sender<Result<Completion>>,
+    ) {
+        let shared = self.shared.clone();
+        self.pools.submit(CpuJob {
+            model,
+            p,
+            input,
+            done: Box::new(move |result| {
+                let completion = result.map(|output| {
+                    let latency = submitted.elapsed().as_secs_f64();
+                    record(&shared, model, latency);
+                    Completion {
+                        model,
+                        latency_s: latency,
+                        output,
+                    }
+                });
+                let _ = tx.send(completion);
+            }),
+        });
+    }
+
+    pub fn current_config(&self) -> Config {
+        self.shared.config.lock().unwrap().clone()
+    }
+
+    /// Manually set a configuration (used by static baselines/examples).
+    pub fn set_config(&self, cfg: Config) {
+        self.pools.set_cores(&cfg.cores);
+        *self.shared.config.lock().unwrap() = cfg;
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    pub fn tenants(&self) -> &[Tenant] {
+        &self.tenants
+    }
+}
+
+fn record(shared: &Shared, model: usize, latency: f64) {
+    let mut stats = shared.stats.lock().unwrap();
+    stats.per_model[model].record(latency);
+    stats.completed += 1;
+}
+
+#[allow(clippy::too_many_arguments)]
+fn tpu_worker_loop(
+    tpu: Arc<TpuShared>,
+    pools: Arc<CpuPools>,
+    shared: Arc<Shared>,
+    handle: ExecHandle,
+    tenants: Vec<Tenant>,
+    cost: CostModel,
+    time_scale: f64,
+) {
+    let mut cache = SramCache::new(cost.hw.sram_bytes);
+    loop {
+        let job = {
+            let mut q = tpu.queue.lock().unwrap();
+            loop {
+                if tpu.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = tpu.cv.wait(q).unwrap();
+            }
+        };
+        let meta = &tenants[job.model].model;
+        let t0 = Instant::now();
+        let hit = cache.access(job.model, cost.resident_bytes(meta, job.p));
+        let result = handle.execute_range(&meta.name, 0, job.p, job.input);
+        // Enforce the emulated device-time budget (compute + intra swap +
+        // optional reload + bus transfers).
+        if time_scale > 0.0 {
+            let mut budget = cost.input_transfer(meta)
+                + cost.tpu_service(meta, job.p)
+                + cost.output_transfer(meta, job.p);
+            if !hit {
+                budget += cost.load_time(meta, job.p);
+            }
+            let budget = budget * time_scale;
+            let spent = t0.elapsed().as_secs_f64();
+            if budget > spent {
+                std::thread::sleep(Duration::from_secs_f64(budget - spent));
+            }
+        }
+        match result {
+            Ok(boundary) => {
+                if job.p >= meta.partition_points {
+                    let latency = job.submitted.elapsed().as_secs_f64();
+                    record(&shared, job.model, latency);
+                    let _ = job.done.send(Ok(Completion {
+                        model: job.model,
+                        latency_s: latency,
+                        output: boundary,
+                    }));
+                } else {
+                    // Forward to the model's CPU pool.
+                    let model = job.model;
+                    let p = job.p;
+                    let submitted = job.submitted;
+                    let tx = job.done;
+                    let shared2 = shared.clone();
+                    pools.submit(CpuJob {
+                        model,
+                        p,
+                        input: boundary,
+                        done: Box::new(move |result| {
+                            let completion = result.map(|output| {
+                                let latency = submitted.elapsed().as_secs_f64();
+                                record(&shared2, model, latency);
+                                Completion {
+                                    model,
+                                    latency_s: latency,
+                                    output,
+                                }
+                            });
+                            let _ = tx.send(completion);
+                        }),
+                    });
+                }
+            }
+            Err(e) => {
+                let _ = job.done.send(Err(e));
+            }
+        }
+    }
+}
+
+fn realloc_loop(
+    shared: Arc<Shared>,
+    pools: Arc<CpuPools>,
+    tenants: Vec<Tenant>,
+    am: AnalyticModel,
+    rt: RuntimeConfig,
+    k_max: usize,
+    stop: Arc<AtomicBool>,
+) {
+    let mut last_rates: Vec<f64> = vec![0.0; tenants.len()];
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_secs_f64(rt.realloc_period_s));
+        let now = shared.started.elapsed().as_secs_f64();
+        let rates = shared.monitor.lock().unwrap().rates(now);
+        let changed = rates.iter().zip(&last_rates).any(|(n, o)| {
+            (n - o).abs() / o.abs().max(0.1) > rt.realloc_threshold
+        });
+        if !changed {
+            continue;
+        }
+        let t0 = Instant::now();
+        let estimated: Vec<Tenant> = tenants
+            .iter()
+            .zip(&rates)
+            .map(|(t, r)| Tenant {
+                model: t.model.clone(),
+                rate: *r,
+            })
+            .collect();
+        let alloc = alloc::hill_climb(&am, &estimated, k_max);
+        let micros = t0.elapsed().as_secs_f64() * 1e6;
+        last_rates = rates;
+        let mut cfg = shared.config.lock().unwrap();
+        let mut stats = shared.stats.lock().unwrap();
+        stats.decision_micros.push(micros);
+        if *cfg != alloc.config {
+            stats.reconfigs += 1;
+            pools.set_cores(&alloc.config.cores);
+            *cfg = alloc.config;
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_realloc.store(true, Ordering::SeqCst);
+        self.tpu.shutdown.store(true, Ordering::SeqCst);
+        self.tpu.cv.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}

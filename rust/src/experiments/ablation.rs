@@ -1,0 +1,281 @@
+//! Design-choice ablations (DESIGN.md §7 extension):
+//!
+//! * **Optimality gap** — Alg. 1's greedy hill climb vs the exhaustive
+//!   NLIP solution on every 1–2 model workload the paper evaluates,
+//!   with decision-cost ratios (why the heuristic is the right trade).
+//! * **Lookahead ablation** — the 2-step move rule vs a 1-step variant
+//!   (the paper's justification for evaluating up to two layers).
+
+use crate::alloc::{self, Allocation};
+use crate::analytic::{AlphaMode, AnalyticModel, Config, Tenant};
+use crate::metrics::mape;
+use crate::util::json::Json;
+use crate::workload::{equal_tpu_load_shares, rates_for_utilization};
+
+use super::common::{print_table, Ctx};
+
+pub struct GapRow {
+    pub workload: String,
+    pub hc_objective: f64,
+    pub ex_objective: f64,
+    pub gap_pct: f64,
+    pub hc_evals: usize,
+    pub ex_evals: usize,
+    pub same_config: bool,
+}
+
+pub struct AlphaRow {
+    pub mix: String,
+    pub observed_ms: f64,
+    pub conservative_ms: f64,
+    pub pairwise_ms: f64,
+}
+
+pub struct Ablation {
+    pub rows: Vec<GapRow>,
+    pub lookahead_rows: Vec<(String, f64, f64)>, // (workload, 1-step, 2-step)
+    pub alpha_rows: Vec<AlphaRow>,
+    pub alpha_mape_conservative: f64,
+    pub alpha_mape_pairwise: f64,
+}
+
+/// 1-step-only hill climb (ablated lookahead) for comparison.
+fn hill_climb_1step(am: &AnalyticModel, tenants: &[Tenant], k_max: usize) -> Allocation {
+    let n = tenants.len();
+    let mut partitions = vec![0usize; n];
+    let mut cores = alloc::prop_alloc(&am.cost, tenants, &partitions, k_max);
+    let mut current = am.objective(
+        tenants,
+        &Config {
+            partitions: partitions.clone(),
+            cores: cores.clone(),
+        },
+    );
+    let mut evaluations = 1usize;
+    loop {
+        let mut best: Option<(usize, f64, Vec<usize>)> = None;
+        for m in 0..n {
+            if partitions[m] + 1 > tenants[m].model.partition_points {
+                continue;
+            }
+            let mut cand = partitions.clone();
+            cand[m] += 1;
+            let cand_cores = alloc::prop_alloc(&am.cost, tenants, &cand, k_max);
+            let obj = am.objective(
+                tenants,
+                &Config {
+                    partitions: cand,
+                    cores: cand_cores.clone(),
+                },
+            );
+            evaluations += 1;
+            if best.as_ref().map(|(_, l, _)| obj < *l).unwrap_or(true) {
+                best = Some((m, obj, cand_cores));
+            }
+        }
+        match best {
+            Some((m, obj, k_new)) if obj < current => {
+                partitions[m] += 1;
+                cores = k_new;
+                current = obj;
+            }
+            _ => break,
+        }
+    }
+    Allocation {
+        config: Config { partitions, cores },
+        predicted_objective: current,
+        evaluations,
+    }
+}
+
+const WORKLOADS: [(&[&str], f64); 6] = [
+    (&["inceptionv4"], 2.0),
+    (&["resnet50v2"], 3.0),
+    (&["densenet201"], 3.0),
+    (&["efficientnet", "gpunet"], 1.5),
+    (&["mobilenetv2", "squeezenet"], 4.0),
+    (&["xception", "inceptionv4"], 1.0),
+];
+
+pub fn run(ctx: &Ctx) -> Result<Ablation, String> {
+    let mut rows = Vec::new();
+    let mut lookahead_rows = Vec::new();
+    for (names, per_rate) in WORKLOADS {
+        let rates: Vec<f64> = vec![per_rate; names.len()];
+        let tenants = ctx.tenants(names, &rates)?;
+        let hc = alloc::hill_climb(&ctx.am, &tenants, ctx.k_max);
+        let ex = alloc::exhaustive_best(&ctx.am, &tenants, ctx.k_max);
+        rows.push(GapRow {
+            workload: names.join("+"),
+            hc_objective: hc.predicted_objective,
+            ex_objective: ex.predicted_objective,
+            gap_pct: (hc.predicted_objective / ex.predicted_objective - 1.0) * 100.0,
+            hc_evals: hc.evaluations,
+            ex_evals: ex.evaluations,
+            same_config: hc.config == ex.config,
+        });
+        let one = hill_climb_1step(&ctx.am, &tenants, ctx.k_max);
+        lookahead_rows.push((
+            names.join("+"),
+            one.predicted_objective,
+            hc.predicted_objective,
+        ));
+    }
+    // α-refinement ablation: conservative Eq. 10 vs pairwise-conflict α,
+    // validated against DES observation on mixed-size tenancies.
+    let pairwise = AnalyticModel::with_alpha_mode(ctx.cost.clone(), AlphaMode::Pairwise);
+    let mut alpha_rows = Vec::new();
+    for mix in [
+        &["efficientnet", "gpunet"][..],
+        &["mobilenetv2", "squeezenet", "resnet50v2"][..],
+        &["densenet201", "xception"][..],
+        &["mobilenetv2", "gpunet", "densenet201"][..],
+    ] {
+        let zero = vec![0.0; mix.len()];
+        let tenants0 = ctx.tenants(mix, &zero)?;
+        let cfg = Config::all_tpu(&tenants0);
+        let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+        let rates = rates_for_utilization(&ctx.am, &tenants0, &cfg, &shares, 0.4);
+        let tenants = ctx.tenants(mix, &rates)?;
+        let observed = ctx.observe(&tenants, &cfg).mean_latency * 1e3;
+        alpha_rows.push(AlphaRow {
+            mix: mix.join("+"),
+            observed_ms: observed,
+            conservative_ms: ctx.am.mean_latency(&tenants, &cfg) * 1e3,
+            pairwise_ms: pairwise.mean_latency(&tenants, &cfg) * 1e3,
+        });
+    }
+    let obs: Vec<f64> = alpha_rows.iter().map(|r| r.observed_ms).collect();
+    let alpha_mape_conservative = mape(
+        &obs,
+        &alpha_rows.iter().map(|r| r.conservative_ms).collect::<Vec<_>>(),
+    );
+    let alpha_mape_pairwise = mape(
+        &obs,
+        &alpha_rows.iter().map(|r| r.pairwise_ms).collect::<Vec<_>>(),
+    );
+
+    Ok(Ablation {
+        rows,
+        lookahead_rows,
+        alpha_rows,
+        alpha_mape_conservative,
+        alpha_mape_pairwise,
+    })
+}
+
+impl Ablation {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.workload.clone(),
+                    format!("{:.4}", r.hc_objective),
+                    format!("{:.4}", r.ex_objective),
+                    format!("{:+.2}%", r.gap_pct),
+                    format!("{}", r.hc_evals),
+                    format!("{}", r.ex_evals),
+                    if r.same_config { "yes" } else { "no" }.into(),
+                ]
+            })
+            .collect();
+        print_table(
+            "Ablation: hill-climb vs exhaustive NLIP (objective = Σ λ·T)",
+            &[
+                "workload",
+                "hill-climb",
+                "exhaustive",
+                "gap",
+                "hc evals",
+                "ex evals",
+                "same config",
+            ],
+            &rows,
+        );
+
+        let rows: Vec<Vec<String>> = self
+            .lookahead_rows
+            .iter()
+            .map(|(w, one, two)| {
+                vec![
+                    w.clone(),
+                    format!("{one:.4}"),
+                    format!("{two:.4}"),
+                    if two < one {
+                        format!("2-step better by {:.1}%", (one / two - 1.0) * 100.0)
+                    } else {
+                        "tie".into()
+                    },
+                ]
+            })
+            .collect();
+        print_table(
+            "Ablation: lookahead h∈{1} vs h∈{1,2} (Alg. 1's spike-hopping)",
+            &["workload", "1-step obj", "2-step obj", "verdict"],
+            &rows,
+        );
+
+        let rows: Vec<Vec<String>> = self
+            .alpha_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.mix.clone(),
+                    format!("{:.1}", r.observed_ms),
+                    format!("{:.1}", r.conservative_ms),
+                    format!("{:.1}", r.pairwise_ms),
+                ]
+            })
+            .collect();
+        print_table(
+            "Ablation: α estimators — Eq. 10 (conservative) vs pairwise-conflict refinement",
+            &["mix (equal TPU load, ρ=0.4)", "observed ms", "Eq.10 pred", "pairwise pred"],
+            &rows,
+        );
+        println!(
+            "MAPE: conservative {:.1}%  pairwise {:.1}%  (refinement targets Eq. 10's mixed-size over-prediction)",
+            self.alpha_mape_conservative, self.alpha_mape_pairwise
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        let alpha = Json::Arr(
+            self.alpha_rows
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("mix", Json::Str(r.mix.clone())),
+                        ("observed_ms", Json::Num(r.observed_ms)),
+                        ("conservative_ms", Json::Num(r.conservative_ms)),
+                        ("pairwise_ms", Json::Num(r.pairwise_ms)),
+                    ])
+                })
+                .collect(),
+        );
+        let gaps = Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("workload", Json::Str(r.workload.clone())),
+                        ("hc_objective", Json::Num(r.hc_objective)),
+                        ("ex_objective", Json::Num(r.ex_objective)),
+                        ("gap_pct", Json::Num(r.gap_pct)),
+                        ("hc_evals", Json::Num(r.hc_evals as f64)),
+                        ("ex_evals", Json::Num(r.ex_evals as f64)),
+                        ("same_config", Json::Bool(r.same_config)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::from_pairs(vec![
+            ("gaps", gaps),
+            ("alpha_refinement", alpha),
+            ("alpha_mape_conservative", Json::Num(self.alpha_mape_conservative)),
+            ("alpha_mape_pairwise", Json::Num(self.alpha_mape_pairwise)),
+        ])
+    }
+}

@@ -1,0 +1,113 @@
+//! Shared experiment context + helpers.
+
+use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::config::HardwareSpec;
+use crate::model::Manifest;
+use crate::sim::{simulate, SimOptions, SimResult};
+use crate::tpu::CostModel;
+use crate::util::json::Json;
+
+/// Everything an experiment needs: the manifest + the calibrated models.
+pub struct Ctx {
+    pub manifest: Manifest,
+    pub cost: CostModel,
+    pub am: AnalyticModel,
+    pub k_max: usize,
+    pub seed: u64,
+    /// DES horizon for steady-state runs (seconds of virtual time).
+    pub horizon: f64,
+}
+
+impl Ctx {
+    pub fn new(manifest: Manifest, hw: HardwareSpec) -> Ctx {
+        let cost = CostModel::new(hw.clone());
+        Ctx {
+            manifest,
+            am: AnalyticModel::new(cost.clone()),
+            cost,
+            k_max: hw.cpu_cores,
+            seed: 42,
+            horizon: 2000.0,
+        }
+    }
+
+    pub fn load(artifacts_dir: &str, hw: HardwareSpec) -> Result<Ctx, String> {
+        Ok(Ctx::new(Manifest::load(artifacts_dir)?, hw))
+    }
+
+    pub fn tenants(&self, names: &[&str], rates: &[f64]) -> Result<Vec<Tenant>, String> {
+        assert_eq!(names.len(), rates.len());
+        names
+            .iter()
+            .zip(rates)
+            .map(|(n, r)| {
+                Ok(Tenant {
+                    model: self.manifest.get(n)?.clone(),
+                    rate: *r,
+                })
+            })
+            .collect()
+    }
+
+    /// Steady-state DES under a static config.
+    pub fn observe(&self, tenants: &[Tenant], cfg: &Config) -> SimResult {
+        simulate(
+            &self.cost,
+            tenants,
+            cfg,
+            SimOptions {
+                horizon: self.horizon,
+                warmup: self.horizon * 0.05,
+                seed: self.seed,
+                timeline_window: None,
+            },
+        )
+    }
+}
+
+/// Render a simple aligned text table.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i.min(widths.len() - 1)]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(
+        &widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(row);
+    }
+}
+
+pub fn ms(x: f64) -> String {
+    if x.is_infinite() {
+        "∞".into()
+    } else {
+        format!("{:.1}", x * 1e3)
+    }
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Save a result blob under results/.
+pub fn save_result(name: &str, value: &Json) -> Result<(), String> {
+    crate::util::json::write_file(&format!("results/{name}.json"), value)
+}

@@ -1,0 +1,124 @@
+//! Fig. 1 — Intra-model memory swapping overhead.
+//!
+//! For each over-SRAM model executed fully on the TPU (the Edge-TPU-
+//! compiler default), split the per-inference service time into compute
+//! vs swap streaming, and confirm with a single-tenant DES run. The paper
+//! reports swap overhead between 20.2% (DenseNet201) and 62.4%
+//! (InceptionV4).
+
+use crate::analytic::Config;
+use crate::util::json::Json;
+
+use super::common::{ms, pct, print_table, Ctx};
+
+pub const MODELS: [&str; 4] = [
+    "densenet201",
+    "resnet50v2",
+    "xception",
+    "inceptionv4",
+];
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub model: String,
+    pub size_mb: f64,
+    pub compute_ms: f64,
+    pub swap_ms: f64,
+    pub swap_fraction: f64,
+    pub observed_mean_ms: f64,
+}
+
+pub struct Fig1 {
+    pub rows: Vec<Row>,
+}
+
+pub fn run(ctx: &Ctx) -> Result<Fig1, String> {
+    let mut rows = Vec::new();
+    for name in MODELS {
+        let meta = ctx.manifest.get(name)?;
+        let p = meta.partition_points;
+        let compute = ctx.cost.hw.tpu_dispatch_s + ctx.cost.tpu_prefix_compute(meta, p);
+        let swap = ctx.cost.intra_swap_time(meta, p);
+        // Light single-tenant load so the observation isolates service time.
+        let tenants = ctx.tenants(&[name], &[0.5])?;
+        let cfg = Config {
+            partitions: vec![p],
+            cores: vec![0],
+        };
+        let obs = ctx.observe(&tenants, &cfg);
+        rows.push(Row {
+            model: name.into(),
+            size_mb: meta.table_size_mb,
+            compute_ms: compute * 1e3,
+            swap_ms: swap * 1e3,
+            swap_fraction: swap / (swap + compute),
+            observed_mean_ms: obs.mean_latency * 1e3,
+        });
+    }
+    Ok(Fig1 { rows })
+}
+
+impl Fig1 {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.model.clone(),
+                    format!("{:.1}", r.size_mb),
+                    format!("{:.1}", r.compute_ms),
+                    format!("{:.1}", r.swap_ms),
+                    pct(r.swap_fraction),
+                    format!("{:.1}", r.observed_mean_ms),
+                ]
+            })
+            .collect();
+        print_table(
+            "Fig. 1: intra-model swapping overhead (full-TPU execution)",
+            &[
+                "model",
+                "size MB",
+                "compute ms",
+                "swap ms",
+                "swap %",
+                "observed e2e ms",
+            ],
+            &rows,
+        );
+        let lo = self
+            .rows
+            .iter()
+            .map(|r| r.swap_fraction)
+            .fold(1.0f64, f64::min);
+        let hi = self
+            .rows
+            .iter()
+            .map(|r| r.swap_fraction)
+            .fold(0.0f64, f64::max);
+        println!(
+            "range: {}..{} (paper: 20.2%..62.4%)",
+            pct(lo),
+            pct(hi)
+        );
+        let _ = ms(0.0);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("model", Json::Str(r.model.clone())),
+                        ("size_mb", Json::Num(r.size_mb)),
+                        ("compute_ms", Json::Num(r.compute_ms)),
+                        ("swap_ms", Json::Num(r.swap_ms)),
+                        ("swap_fraction", Json::Num(r.swap_fraction)),
+                        ("observed_mean_ms", Json::Num(r.observed_mean_ms)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}

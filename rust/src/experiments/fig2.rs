@@ -1,0 +1,123 @@
+//! Fig. 2 — Inter-model swapping overhead across workload mixes.
+//!
+//! Two co-located full-TPU models at 50:50 and 90:10 request mixes,
+//! compared against each model's standalone execution. The paper reports
+//! ≈0% overhead when the combined footprint fits (MobileNetV2+SqueezeNet),
+//! up to 35% at 50:50 and up to 49% for the rare model at 90:10.
+
+use crate::analytic::Config;
+use crate::util::json::Json;
+
+use super::common::{pct, print_table, Ctx};
+
+pub struct MixRow {
+    pub mix: String,
+    pub share: String,
+    pub model: String,
+    pub standalone_ms: f64,
+    pub colocated_ms: f64,
+    pub overhead_fraction: f64,
+    pub alpha_predicted: f64,
+    pub cache_hit_rate: f64,
+}
+
+pub struct Fig2 {
+    pub rows: Vec<MixRow>,
+}
+
+/// (pair, shares) — shares are request-mix proportions.
+pub const SCENARIOS: [(&str, &str, f64, f64); 4] = [
+    ("mobilenetv2", "squeezenet", 0.5, 0.5),
+    ("efficientnet", "gpunet", 0.5, 0.5),
+    ("efficientnet", "gpunet", 0.9, 0.1),
+    ("densenet201", "resnet50v2", 0.5, 0.5),
+];
+
+pub fn run(ctx: &Ctx) -> Result<Fig2, String> {
+    // Total rate low enough to stay stable for every pair.
+    let total_rate = 1.0;
+    let mut rows = Vec::new();
+    for (a, b, sa, sb) in SCENARIOS {
+        let names = [a, b];
+        let shares = [sa, sb];
+        // Standalone baselines (single-tenant, same per-model rate).
+        let mut standalone = [0.0f64; 2];
+        for (i, name) in names.iter().enumerate() {
+            let tenants = ctx.tenants(&[name], &[total_rate * shares[i]])?;
+            let cfg = Config::all_tpu(&tenants);
+            standalone[i] = ctx.observe(&tenants, &cfg).mean_latency;
+        }
+        // Co-located run.
+        let tenants = ctx.tenants(&names, &[total_rate * sa, total_rate * sb])?;
+        let cfg = Config::all_tpu(&tenants);
+        let obs = ctx.observe(&tenants, &cfg);
+        for i in 0..2 {
+            let colocated = obs.per_model[i].latency.mean();
+            rows.push(MixRow {
+                mix: format!("{a}+{b}"),
+                share: format!("{:.0}:{:.0}", sa * 100.0, sb * 100.0),
+                model: names[i].into(),
+                standalone_ms: standalone[i] * 1e3,
+                colocated_ms: colocated * 1e3,
+                overhead_fraction: (colocated - standalone[i]).max(0.0) / colocated.max(1e-12),
+                alpha_predicted: ctx.am.alpha(&tenants, &cfg, i),
+                cache_hit_rate: obs.cache_hit_rate,
+            });
+        }
+    }
+    Ok(Fig2 { rows })
+}
+
+impl Fig2 {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.mix.clone(),
+                    r.share.clone(),
+                    r.model.clone(),
+                    format!("{:.1}", r.standalone_ms),
+                    format!("{:.1}", r.colocated_ms),
+                    pct(r.overhead_fraction),
+                    format!("{:.2}", r.alpha_predicted),
+                ]
+            })
+            .collect();
+        print_table(
+            "Fig. 2: inter-model swapping overhead (co-located full-TPU)",
+            &[
+                "mix",
+                "req mix",
+                "model",
+                "standalone ms",
+                "co-located ms",
+                "overhead %",
+                "α (Eq. 10)",
+            ],
+            &rows,
+        );
+        println!("(paper: ≈0% when fits; up to 35% at 50:50; up to 49% for the rare model at 90:10)");
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("mix", Json::Str(r.mix.clone())),
+                        ("share", Json::Str(r.share.clone())),
+                        ("model", Json::Str(r.model.clone())),
+                        ("standalone_ms", Json::Num(r.standalone_ms)),
+                        ("colocated_ms", Json::Num(r.colocated_ms)),
+                        ("overhead_fraction", Json::Num(r.overhead_fraction)),
+                        ("alpha_predicted", Json::Num(r.alpha_predicted)),
+                        ("cache_hit_rate", Json::Num(r.cache_hit_rate)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}

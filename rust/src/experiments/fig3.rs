@@ -1,0 +1,94 @@
+//! Fig. 3 — TPU vs CPU per-segment service time (InceptionV4).
+//!
+//! The collaborative-processing opportunity: early segments are several
+//! times faster on the TPU, the trailing segments run comparably on the
+//! CPU. Optionally cross-checked against measured PJRT wall-clock per
+//! segment (`swapless profile`).
+
+use crate::util::json::Json;
+
+use super::common::{print_table, Ctx};
+
+pub struct SegRow {
+    pub index: usize,
+    pub tpu_ms: f64,
+    pub cpu_ms: f64,
+    pub speedup: f64,
+    pub mxu_util: f64,
+}
+
+pub struct Fig3 {
+    pub model: String,
+    pub rows: Vec<SegRow>,
+}
+
+pub fn run(ctx: &Ctx, model: &str) -> Result<Fig3, String> {
+    let meta = ctx.manifest.get(model)?;
+    let rows = meta
+        .segments
+        .iter()
+        .map(|seg| SegRow {
+            index: seg.index,
+            tpu_ms: ctx.cost.tpu_segment_time(meta, seg) * 1e3,
+            cpu_ms: ctx.cost.cpu_segment_time(seg) * 1e3,
+            speedup: ctx.cost.segment_speedup(meta, seg),
+            mxu_util: seg.mxu_util,
+        })
+        .collect();
+    Ok(Fig3 {
+        model: model.into(),
+        rows,
+    })
+}
+
+impl Fig3 {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("seg{}", r.index),
+                    format!("{:.2}", r.tpu_ms),
+                    format!("{:.2}", r.cpu_ms),
+                    format!("{:.2}x", r.speedup),
+                    format!("{:.3}", r.mxu_util),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Fig. 3: per-segment TPU vs CPU time ({})", self.model),
+            &["segment", "TPU ms", "CPU ms", "speedup", "MXU util"],
+            &rows,
+        );
+        let first = self.rows.first().unwrap().speedup;
+        let last3: Vec<f64> = self.rows.iter().rev().take(3).map(|r| r.speedup).collect();
+        println!(
+            "first-segment speedup {first:.1}x; last three {:.2?}x (paper: substantial early gain, last three comparable)",
+            last3
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("model", Json::Str(self.model.clone())),
+            (
+                "segments",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("index", Json::Num(r.index as f64)),
+                                ("tpu_ms", Json::Num(r.tpu_ms)),
+                                ("cpu_ms", Json::Num(r.cpu_ms)),
+                                ("speedup", Json::Num(r.speedup)),
+                                ("mxu_util", Json::Num(r.mxu_util)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}

@@ -1,0 +1,242 @@
+//! Fig. 5 — Single-tenant model validation (InceptionV4).
+//!
+//! (a) predicted vs observed mean latency across partition points at low
+//!     load (paper: MAPE 1.9%, 92.3% within ±5%, all within ±10%);
+//! (b) predicted vs observed across request rates for two partition
+//!     points, exhibiting the PP-crossover (paper: PP9 best below
+//!     ≈4.5 RPS, PP7 above).
+
+use crate::alloc::prop_alloc;
+use crate::analytic::Config;
+use crate::metrics::{mape, within_pct};
+use crate::util::json::Json;
+
+use super::common::{print_table, Ctx};
+
+pub struct PpRow {
+    pub p: usize,
+    pub cores: usize,
+    pub predicted_ms: f64,
+    pub observed_ms: f64,
+}
+
+pub struct RateRow {
+    pub rate: f64,
+    pub series: Vec<(usize, f64, f64)>, // (p, predicted_ms, observed_ms)
+}
+
+pub struct Fig5 {
+    pub model: String,
+    pub rho: f64,
+    pub pp_rows: Vec<PpRow>,
+    pub mape_pct: f64,
+    pub within5: f64,
+    pub within10: f64,
+    pub rate_rows: Vec<RateRow>,
+    pub crossover_pps: (usize, usize),
+}
+
+fn config_for(ctx: &Ctx, tenants: &[crate::analytic::Tenant], p: usize) -> Config {
+    let partitions = vec![p];
+    let cores = prop_alloc(&ctx.cost, tenants, &partitions, ctx.k_max);
+    Config { partitions, cores }
+}
+
+pub fn run(ctx: &Ctx, model: &str, rho: f64, rate_sweep: &[f64]) -> Result<Fig5, String> {
+    let meta = ctx.manifest.get(model)?;
+    let pp = meta.partition_points;
+
+    // Fix the arrival rate to hit rho on the full-TPU configuration.
+    let tenants0 = ctx.tenants(&[model], &[1.0])?;
+    let full = Config::all_tpu(&tenants0);
+    let s_full = ctx.am.tpu_service_moments(&tenants0, &full).0;
+    let rate = rho / s_full;
+    let tenants = ctx.tenants(&[model], &[rate])?;
+
+    // (a) sweep partition points.
+    let mut pp_rows = Vec::new();
+    for p in 0..=pp {
+        let cfg = config_for(ctx, &tenants, p);
+        let predicted = ctx.am.e2e_latency(&tenants, &cfg, 0);
+        if !predicted.is_finite() {
+            continue; // infeasible at this load (e.g. p=0 all-CPU overload)
+        }
+        let observed = ctx.observe(&tenants, &cfg).mean_latency;
+        pp_rows.push(PpRow {
+            p,
+            cores: cfg.cores[0],
+            predicted_ms: predicted * 1e3,
+            observed_ms: observed * 1e3,
+        });
+    }
+    let obs: Vec<f64> = pp_rows.iter().map(|r| r.observed_ms).collect();
+    let pred: Vec<f64> = pp_rows.iter().map(|r| r.predicted_ms).collect();
+    let mape_pct = mape(&obs, &pred);
+    let within5 = within_pct(&obs, &pred, 5.0);
+    let within10 = within_pct(&obs, &pred, 10.0);
+
+    // (b) rate sweep comparing the low-load optimum against the high-load
+    // optimum — the paper's PP9-vs-PP7 pair with the ≈4.5 RPS crossover.
+    let best_at = |rate: f64| -> Result<usize, String> {
+        let tn = ctx.tenants(&[model], &[rate])?;
+        Ok((1..=pp)
+            .map(|p| {
+                let cfg = config_for(ctx, &tn, p);
+                (p, ctx.am.e2e_latency(&tn, &cfg, 0))
+            })
+            .filter(|(_, l)| l.is_finite())
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(p, _)| p)
+            .unwrap_or(pp))
+    };
+    let lo_best = best_at(rate_sweep[0])?;
+    let hi_best = best_at(*rate_sweep.last().unwrap())?;
+    let (pa, pb) = if lo_best == hi_best {
+        (lo_best.saturating_sub(1).max(1), lo_best)
+    } else {
+        (hi_best.min(lo_best), hi_best.max(lo_best))
+    };
+
+    let mut rate_rows = Vec::new();
+    for &r in rate_sweep {
+        let tn = ctx.tenants(&[model], &[r])?;
+        let mut series = Vec::new();
+        for p in [pa, pb] {
+            let cfg = config_for(ctx, &tn, p);
+            let predicted = ctx.am.e2e_latency(&tn, &cfg, 0);
+            let observed = if predicted.is_finite() {
+                ctx.observe(&tn, &cfg).mean_latency
+            } else {
+                f64::INFINITY
+            };
+            series.push((p, predicted * 1e3, observed * 1e3));
+        }
+        rate_rows.push(RateRow { rate: r, series });
+    }
+
+    Ok(Fig5 {
+        model: model.into(),
+        rho,
+        pp_rows,
+        mape_pct,
+        within5,
+        within10,
+        rate_rows,
+        crossover_pps: (pa, pb),
+    })
+}
+
+impl Fig5 {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .pp_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("PP{}", r.p),
+                    r.cores.to_string(),
+                    format!("{:.1}", r.predicted_ms),
+                    format!("{:.1}", r.observed_ms),
+                    format!("{:+.1}%", (r.predicted_ms - r.observed_ms) / r.observed_ms * 100.0),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!(
+                "Fig. 5a: predicted vs observed across partition points ({}, ρ={})",
+                self.model, self.rho
+            ),
+            &["partition", "cores", "predicted ms", "observed ms", "error"],
+            &rows,
+        );
+        println!(
+            "MAPE {:.1}%  within±5% {:.1}%  within±10% {:.1}%  (paper: 1.9%, 92.3%, 100%)",
+            self.mape_pct,
+            self.within5 * 100.0,
+            self.within10 * 100.0
+        );
+
+        let (pa, pb) = self.crossover_pps;
+        let rows: Vec<Vec<String>> = self
+            .rate_rows
+            .iter()
+            .map(|r| {
+                let mut cells = vec![format!("{:.1}", r.rate)];
+                for (_, pred, obs) in &r.series {
+                    cells.push(format!("{pred:.1}"));
+                    cells.push(format!("{obs:.1}"));
+                }
+                let best = if r.series[0].2 <= r.series[1].2 { pa } else { pb };
+                cells.push(format!("PP{best}"));
+                cells
+            })
+            .collect();
+        print_table(
+            &format!("Fig. 5b: latency across request rates (PP{pa} vs PP{pb})"),
+            &[
+                "RPS",
+                &format!("PP{pa} pred"),
+                &format!("PP{pa} obs"),
+                &format!("PP{pb} pred"),
+                &format!("PP{pb} obs"),
+                "best",
+            ],
+            &rows,
+        );
+        println!("(paper: optimal PP flips near 4.5 RPS — static configs are inefficient)");
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("rho", Json::Num(self.rho)),
+            ("mape_pct", Json::Num(self.mape_pct)),
+            ("within5", Json::Num(self.within5)),
+            ("within10", Json::Num(self.within10)),
+            (
+                "pp_rows",
+                Json::Arr(
+                    self.pp_rows
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("p", Json::Num(r.p as f64)),
+                                ("cores", Json::Num(r.cores as f64)),
+                                ("predicted_ms", Json::Num(r.predicted_ms)),
+                                ("observed_ms", Json::Num(r.observed_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "rate_rows",
+                Json::Arr(
+                    self.rate_rows
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("rate", Json::Num(r.rate)),
+                                (
+                                    "series",
+                                    Json::Arr(
+                                        r.series
+                                            .iter()
+                                            .map(|(p, pred, obs)| {
+                                                Json::Arr(vec![
+                                                    Json::Num(*p as f64),
+                                                    Json::Num(*pred),
+                                                    Json::Num(*obs),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}

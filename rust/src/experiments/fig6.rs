@@ -1,0 +1,242 @@
+//! Fig. 6 — Multi-tenant model validation.
+//!
+//! (a) the α parameter across three two-model scenarios (fits; 50:50
+//!     overflow; 90:10 overflow) — paper MAPE 2.2%;
+//! (b) predicted vs observed mean latency across model mixes (paper MAPE
+//!     6.8%), with per-model rates equalizing TPU load;
+//! (c) predicted vs observed across request rates for one mix.
+
+use crate::analytic::Config;
+use crate::metrics::mape;
+use crate::util::json::Json;
+use crate::workload::{equal_tpu_load_shares, rates_for_utilization};
+
+use super::common::{print_table, Ctx};
+
+pub struct AlphaRow {
+    pub scenario: String,
+    pub model: String,
+    pub alpha: f64,
+    pub predicted_ms: f64,
+    pub observed_ms: f64,
+}
+
+pub struct MixRow {
+    pub mix: String,
+    pub predicted_ms: f64,
+    pub observed_ms: f64,
+}
+
+pub struct RateRow {
+    pub total_rate: f64,
+    pub predicted_ms: f64,
+    pub observed_ms: f64,
+}
+
+pub struct Fig6 {
+    pub alpha_rows: Vec<AlphaRow>,
+    pub alpha_mape: f64,
+    pub mix_rows: Vec<MixRow>,
+    pub mix_mape: f64,
+    pub rate_rows: Vec<RateRow>,
+}
+
+const ALPHA_SCENARIOS: [(&str, &str, f64, f64); 3] = [
+    ("mobilenetv2", "squeezenet", 0.5, 0.5),
+    ("efficientnet", "gpunet", 0.5, 0.5),
+    ("efficientnet", "gpunet", 0.9, 0.1),
+];
+
+pub const MIXES: [&[&str]; 4] = [
+    &["mobilenetv2", "squeezenet"],
+    &["efficientnet", "gpunet"],
+    &["mobilenetv2", "squeezenet", "resnet50v2"],
+    &["densenet201", "xception"],
+];
+
+pub fn run(ctx: &Ctx, rho: f64, rate_sweep_total: &[f64]) -> Result<Fig6, String> {
+    // (a) alpha validation at a fixed total rate.
+    let mut alpha_rows = Vec::new();
+    for (a, b, sa, sb) in ALPHA_SCENARIOS {
+        let total = 1.0;
+        let tenants = ctx.tenants(&[a, b], &[total * sa, total * sb])?;
+        let cfg = Config::all_tpu(&tenants);
+        let obs = ctx.observe(&tenants, &cfg);
+        for i in 0..2 {
+            alpha_rows.push(AlphaRow {
+                scenario: format!("{a}+{b} {:.0}:{:.0}", sa * 100.0, sb * 100.0),
+                model: tenants[i].model.name.clone(),
+                alpha: ctx.am.alpha(&tenants, &cfg, i),
+                predicted_ms: ctx.am.e2e_latency(&tenants, &cfg, i) * 1e3,
+                observed_ms: obs.per_model[i].latency.mean() * 1e3,
+            });
+        }
+    }
+    let alpha_mape = mape(
+        &alpha_rows.iter().map(|r| r.observed_ms).collect::<Vec<_>>(),
+        &alpha_rows.iter().map(|r| r.predicted_ms).collect::<Vec<_>>(),
+    );
+
+    // (b) mixes at equal TPU load, target utilization rho.
+    let mut mix_rows = Vec::new();
+    for mix in MIXES {
+        let zero: Vec<f64> = vec![0.0; mix.len()];
+        let tenants0 = ctx.tenants(mix, &zero)?;
+        let cfg = Config::all_tpu(&tenants0);
+        let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+        let rates = rates_for_utilization(&ctx.am, &tenants0, &cfg, &shares, rho);
+        let tenants = ctx.tenants(mix, &rates)?;
+        let predicted = ctx.am.mean_latency(&tenants, &cfg);
+        let observed = ctx.observe(&tenants, &cfg).mean_latency;
+        mix_rows.push(MixRow {
+            mix: mix.join("+"),
+            predicted_ms: predicted * 1e3,
+            observed_ms: observed * 1e3,
+        });
+    }
+    let mix_mape = mape(
+        &mix_rows.iter().map(|r| r.observed_ms).collect::<Vec<_>>(),
+        &mix_rows.iter().map(|r| r.predicted_ms).collect::<Vec<_>>(),
+    );
+
+    // (c) one mix across total request rates.
+    let mix = MIXES[1];
+    let mut rate_rows = Vec::new();
+    for &total in rate_sweep_total {
+        let rates: Vec<f64> = vec![total / mix.len() as f64; mix.len()];
+        let tenants = ctx.tenants(mix, &rates)?;
+        let cfg = Config::all_tpu(&tenants);
+        let predicted = ctx.am.mean_latency(&tenants, &cfg);
+        if !predicted.is_finite() {
+            continue;
+        }
+        let observed = ctx.observe(&tenants, &cfg).mean_latency;
+        rate_rows.push(RateRow {
+            total_rate: total,
+            predicted_ms: predicted * 1e3,
+            observed_ms: observed * 1e3,
+        });
+    }
+
+    Ok(Fig6 {
+        alpha_rows,
+        alpha_mape,
+        mix_rows,
+        mix_mape,
+        rate_rows,
+    })
+}
+
+impl Fig6 {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .alpha_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.scenario.clone(),
+                    r.model.clone(),
+                    format!("{:.2}", r.alpha),
+                    format!("{:.1}", r.predicted_ms),
+                    format!("{:.1}", r.observed_ms),
+                ]
+            })
+            .collect();
+        print_table(
+            "Fig. 6a: α validation across workload mixes",
+            &["scenario", "model", "α", "predicted ms", "observed ms"],
+            &rows,
+        );
+        println!("MAPE {:.1}% (paper: 2.2%)", self.alpha_mape);
+
+        let rows: Vec<Vec<String>> = self
+            .mix_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.mix.clone(),
+                    format!("{:.1}", r.predicted_ms),
+                    format!("{:.1}", r.observed_ms),
+                    format!("{:+.1}%", (r.predicted_ms - r.observed_ms) / r.observed_ms * 100.0),
+                ]
+            })
+            .collect();
+        print_table(
+            "Fig. 6b: accuracy across model mixes (equal TPU load)",
+            &["mix", "predicted ms", "observed ms", "error"],
+            &rows,
+        );
+        println!("MAPE {:.1}% (paper: 6.8%)", self.mix_mape);
+
+        let rows: Vec<Vec<String>> = self
+            .rate_rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.1}", r.total_rate),
+                    format!("{:.1}", r.predicted_ms),
+                    format!("{:.1}", r.observed_ms),
+                ]
+            })
+            .collect();
+        print_table(
+            "Fig. 6c: accuracy across request rates (efficientnet+gpunet)",
+            &["total RPS", "predicted ms", "observed ms"],
+            &rows,
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("alpha_mape", Json::Num(self.alpha_mape)),
+            ("mix_mape", Json::Num(self.mix_mape)),
+            (
+                "alpha_rows",
+                Json::Arr(
+                    self.alpha_rows
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("scenario", Json::Str(r.scenario.clone())),
+                                ("model", Json::Str(r.model.clone())),
+                                ("alpha", Json::Num(r.alpha)),
+                                ("predicted_ms", Json::Num(r.predicted_ms)),
+                                ("observed_ms", Json::Num(r.observed_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "mix_rows",
+                Json::Arr(
+                    self.mix_rows
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("mix", Json::Str(r.mix.clone())),
+                                ("predicted_ms", Json::Num(r.predicted_ms)),
+                                ("observed_ms", Json::Num(r.observed_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "rate_rows",
+                Json::Arr(
+                    self.rate_rows
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("total_rate", Json::Num(r.total_rate)),
+                                ("predicted_ms", Json::Num(r.predicted_ms)),
+                                ("observed_ms", Json::Num(r.observed_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}

@@ -1,0 +1,214 @@
+//! Fig. 7 — Latency comparison against baselines across workloads and
+//! TPU utilization levels ρ ∈ {0.2, 0.5}.
+//!
+//! Policies: Edge TPU Compiler, Threshold-based Partitioning,
+//! SwapLess (α=0), SwapLess. Single-tenant (one model) and multi-tenant
+//! (2–3 models, equal per-model TPU load) workloads. The paper's headline:
+//! up to 63.8% (single) and 77.4% (multi) mean-latency reduction vs the
+//! compiler baseline at ρ=0.5.
+
+use crate::alloc;
+use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::util::json::Json;
+use crate::workload::{equal_tpu_load_shares, rates_for_utilization};
+
+use super::common::{pct, print_table, Ctx};
+
+pub const SINGLE_WORKLOADS: [&[&str]; 4] = [
+    &["mobilenetv2"],
+    &["densenet201"],
+    &["resnet50v2"],
+    &["inceptionv4"],
+];
+
+pub const MULTI_WORKLOADS: [&[&str]; 4] = [
+    &["mobilenetv2", "squeezenet"],
+    &["mobilenetv2", "squeezenet", "resnet50v2"],
+    &["efficientnet", "gpunet"],
+    &["xception", "inceptionv4"],
+];
+
+pub const POLICIES: [&str; 4] = ["compiler", "threshold", "swapless_a0", "swapless"];
+
+pub struct Cell {
+    pub policy: String,
+    pub config: Config,
+    pub predicted_ms: f64,
+    pub observed_ms: f64,
+}
+
+pub struct WorkloadResult {
+    pub workload: String,
+    pub rho: f64,
+    pub cells: Vec<Cell>,
+    /// Observed reduction of SwapLess vs the compiler baseline.
+    pub reduction_vs_compiler: f64,
+}
+
+pub struct Fig7 {
+    pub results: Vec<WorkloadResult>,
+}
+
+fn policy_config(
+    ctx: &Ctx,
+    policy: &str,
+    tenants: &[Tenant],
+) -> Config {
+    match policy {
+        "compiler" => alloc::edge_tpu_compiler(&ctx.am, tenants).config,
+        "threshold" => alloc::threshold_partitioning(&ctx.am, tenants, ctx.k_max, 0.10).config,
+        "swapless_a0" => {
+            let am0 = AnalyticModel::with_alpha_zero(ctx.cost.clone());
+            alloc::hill_climb(&am0, tenants, ctx.k_max).config
+        }
+        "swapless" => alloc::hill_climb(&ctx.am, tenants, ctx.k_max).config,
+        other => panic!("unknown policy {other}"),
+    }
+}
+
+pub fn run_workload(ctx: &Ctx, names: &[&str], rho: f64) -> Result<WorkloadResult, String> {
+    // Rates: equal TPU load per model at utilization rho under full-TPU
+    // (the workload definition is policy-independent).
+    let zero: Vec<f64> = vec![0.0; names.len()];
+    let tenants0 = ctx.tenants(names, &zero)?;
+    let full = Config::all_tpu(&tenants0);
+    let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+    let rates = rates_for_utilization(&ctx.am, &tenants0, &full, &shares, rho);
+    let tenants = ctx.tenants(names, &rates)?;
+
+    let mut cells = Vec::new();
+    for policy in POLICIES {
+        let config = policy_config(ctx, policy, &tenants);
+        let predicted = ctx.am.mean_latency(&tenants, &config);
+        let observed = ctx.observe(&tenants, &config).mean_latency;
+        cells.push(Cell {
+            policy: policy.into(),
+            config,
+            predicted_ms: predicted * 1e3,
+            observed_ms: observed * 1e3,
+        });
+    }
+    let compiler_obs = cells[0].observed_ms;
+    let swapless_obs = cells[3].observed_ms;
+    Ok(WorkloadResult {
+        workload: names.join("+"),
+        rho,
+        reduction_vs_compiler: ((compiler_obs - swapless_obs) / compiler_obs).max(0.0),
+        cells,
+    })
+}
+
+pub fn run(ctx: &Ctx, rhos: &[f64]) -> Result<Fig7, String> {
+    let mut results = Vec::new();
+    for &rho in rhos {
+        for wl in SINGLE_WORKLOADS.iter().chain(MULTI_WORKLOADS.iter()) {
+            results.push(run_workload(ctx, wl, rho)?);
+        }
+    }
+    Ok(Fig7 { results })
+}
+
+impl Fig7 {
+    pub fn print(&self) {
+        for rho in [0.2, 0.5] {
+            let rows: Vec<Vec<String>> = self
+                .results
+                .iter()
+                .filter(|r| (r.rho - rho).abs() < 1e-9)
+                .map(|r| {
+                    let mut cells = vec![r.workload.clone()];
+                    for c in &r.cells {
+                        cells.push(format!("{:.1}", c.observed_ms));
+                    }
+                    cells.push(pct(r.reduction_vs_compiler));
+                    cells
+                })
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            print_table(
+                &format!("Fig. 7: observed mean latency (ms) under ρ={rho}"),
+                &[
+                    "workload",
+                    "compiler",
+                    "threshold",
+                    "swapless(α=0)",
+                    "swapless",
+                    "reduction",
+                ],
+                &rows,
+            );
+        }
+        let best_single = self
+            .results
+            .iter()
+            .filter(|r| !r.workload.contains('+'))
+            .map(|r| r.reduction_vs_compiler)
+            .fold(0.0f64, f64::max);
+        let best_multi = self
+            .results
+            .iter()
+            .filter(|r| r.workload.contains('+'))
+            .map(|r| r.reduction_vs_compiler)
+            .fold(0.0f64, f64::max);
+        println!(
+            "max reduction vs compiler: single-tenant {} multi-tenant {} (paper: 63.8% / 77.4%)",
+            pct(best_single),
+            pct(best_multi)
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("workload", Json::Str(r.workload.clone())),
+                        ("rho", Json::Num(r.rho)),
+                        (
+                            "reduction_vs_compiler",
+                            Json::Num(r.reduction_vs_compiler),
+                        ),
+                        (
+                            "cells",
+                            Json::Arr(
+                                r.cells
+                                    .iter()
+                                    .map(|c| {
+                                        Json::from_pairs(vec![
+                                            ("policy", Json::Str(c.policy.clone())),
+                                            (
+                                                "partitions",
+                                                Json::Arr(
+                                                    c.config
+                                                        .partitions
+                                                        .iter()
+                                                        .map(|p| Json::Num(*p as f64))
+                                                        .collect(),
+                                                ),
+                                            ),
+                                            (
+                                                "cores",
+                                                Json::Arr(
+                                                    c.config
+                                                        .cores
+                                                        .iter()
+                                                        .map(|k| Json::Num(*k as f64))
+                                                        .collect(),
+                                                ),
+                                            ),
+                                            ("predicted_ms", Json::Num(c.predicted_ms)),
+                                            ("observed_ms", Json::Num(c.observed_ms)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}

@@ -1,0 +1,243 @@
+//! Fig. 8 — Dynamic workloads: MnasNet + InceptionV4 with stepped request
+//! rates (5,1) → (5,3) at 300 s → (5,5) at 600 s over a 900 s horizon.
+//!
+//! SwapLess's online policy (sliding-window rate monitor + hill climb) is
+//! compared against the static baselines; the paper reports up to 75.1%
+//! latency reduction and < 2 ms allocator invocations.
+
+use crate::alloc;
+use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::sim::reconfig::{StaticPolicy, SwapLessPolicy};
+use crate::sim::{simulate_dynamic, SimOptions};
+use crate::util::json::Json;
+use crate::workload::RateSchedule;
+
+use super::common::{pct, print_table, Ctx};
+
+pub struct PolicyOutcome {
+    pub policy: String,
+    pub mean_ms: f64,
+    pub p95_ms: f64,
+    pub timeline: Vec<(f64, f64)>,
+    pub reconfigs: Vec<(f64, Config)>,
+    pub max_decision_us: f64,
+}
+
+pub struct Fig8 {
+    pub outcomes: Vec<PolicyOutcome>,
+    pub reduction_vs_static: f64,
+}
+
+pub const MODELS: [&str; 2] = ["mnasnet", "inceptionv4"];
+
+pub fn schedules() -> Vec<RateSchedule> {
+    vec![
+        RateSchedule::constant(5.0),
+        RateSchedule {
+            steps: vec![(0.0, 1.0), (300.0, 3.0), (600.0, 5.0)],
+        },
+    ]
+}
+
+pub fn run(ctx: &Ctx) -> Result<Fig8, String> {
+    let tenants: Vec<Tenant> = ctx.tenants(&MODELS, &[5.0, 1.0])?;
+    let horizon = 900.0;
+    let opts = |seed| SimOptions {
+        horizon,
+        warmup: 10.0,
+        seed,
+        timeline_window: Some(15.0),
+    };
+
+    let mut outcomes = Vec::new();
+
+    // Static baselines plan once for the *initial* rates.
+    let compiler = alloc::edge_tpu_compiler(&ctx.am, &tenants).config;
+    let threshold = alloc::threshold_partitioning(&ctx.am, &tenants, ctx.k_max, 0.10).config;
+    let initial_swapless = alloc::hill_climb(&ctx.am, &tenants, ctx.k_max).config;
+
+    for (name, cfg) in [
+        ("static-compiler", compiler),
+        ("static-threshold", threshold),
+        ("static-swapless@t0", initial_swapless.clone()),
+    ] {
+        let mut policy = StaticPolicy;
+        let res = simulate_dynamic(
+            &ctx.cost,
+            &tenants,
+            &cfg,
+            &schedules(),
+            &mut policy,
+            opts(ctx.seed),
+        );
+        outcomes.push(PolicyOutcome {
+            policy: name.into(),
+            mean_ms: res.mean_latency * 1e3,
+            p95_ms: weighted_p95(&res) * 1e3,
+            timeline: res.timeline.map(|t| t.series()).unwrap_or_default(),
+            reconfigs: Vec::new(),
+            max_decision_us: 0.0,
+        });
+    }
+
+    // SwapLess adaptive.
+    let am = AnalyticModel::new(ctx.cost.clone());
+    let mut policy = SwapLessPolicy::new(am, ctx.k_max, tenants.len(), 45.0, 10.0, 0.20);
+    let res = simulate_dynamic(
+        &ctx.cost,
+        &tenants,
+        &initial_swapless,
+        &schedules(),
+        &mut policy,
+        opts(ctx.seed),
+    );
+    let max_us = policy
+        .decision_micros
+        .iter()
+        .fold(0.0f64, |a, b| a.max(*b));
+    outcomes.push(PolicyOutcome {
+        policy: "swapless-adaptive".into(),
+        mean_ms: res.mean_latency * 1e3,
+        p95_ms: weighted_p95(&res) * 1e3,
+        timeline: res.timeline.map(|t| t.series()).unwrap_or_default(),
+        reconfigs: res
+            .reconfigs
+            .iter()
+            .map(|(t, c, _)| (*t, c.clone()))
+            .collect(),
+        max_decision_us: max_us,
+    });
+
+    // Compare against the *stable* static baselines (the compiler config
+    // is unstable at the (5,5) RPS step — its latency diverges, which would
+    // inflate the reduction meaninglessly).
+    let best_reference = outcomes[..3]
+        .iter()
+        .filter(|o| o.mean_ms.is_finite() && o.mean_ms < 10_000.0)
+        .map(|o| o.mean_ms)
+        .fold(0.0f64, f64::max);
+    let adaptive = outcomes[3].mean_ms;
+    Ok(Fig8 {
+        reduction_vs_static: if best_reference > 0.0 {
+            ((best_reference - adaptive) / best_reference).max(0.0)
+        } else {
+            0.0
+        },
+        outcomes,
+    })
+}
+
+fn weighted_p95(res: &crate::sim::SimResult) -> f64 {
+    let mut merged = crate::metrics::LatencyHistogram::default();
+    for m in &res.per_model {
+        merged.merge(&m.latency);
+    }
+    merged.percentile(95.0)
+}
+
+impl Fig8 {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                vec![
+                    o.policy.clone(),
+                    format!("{:.1}", o.mean_ms),
+                    format!("{:.1}", o.p95_ms),
+                    o.reconfigs.len().to_string(),
+                    if o.max_decision_us > 0.0 {
+                        format!("{:.0} µs", o.max_decision_us)
+                    } else {
+                        "-".into()
+                    },
+                ]
+            })
+            .collect();
+        print_table(
+            "Fig. 8: dynamic rates — MnasNet@5 RPS, InceptionV4 1→3→5 RPS (900 s)",
+            &["policy", "mean ms", "p95 ms", "reconfigs", "max decision"],
+            &rows,
+        );
+        println!(
+            "adaptive reduction vs best stable static: {} (paper: up to 75.1% vs static; decisions < 2 ms)",
+            pct(self.reduction_vs_static)
+        );
+        println!("(static-compiler/threshold go unstable at the (5,5) RPS step — their queues diverge)");
+        // Timeline of the adaptive run (sampled).
+        if let Some(adaptive) = self.outcomes.last() {
+            println!("\nadaptive timeline (t s → window mean ms):");
+            for chunk in adaptive.timeline.chunks(4) {
+                let line: Vec<String> = chunk
+                    .iter()
+                    .map(|(t, v)| format!("{:>4.0}s {:>7.1}", t, v * 1e3))
+                    .collect();
+                println!("  {}", line.join("   "));
+            }
+            for (t, cfg) in &adaptive.reconfigs {
+                println!(
+                    "  reconfig @ {:>5.1}s -> P={:?} K={:?}",
+                    t, cfg.partitions, cfg.cores
+                );
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.outcomes
+                .iter()
+                .map(|o| {
+                    Json::from_pairs(vec![
+                        ("policy", Json::Str(o.policy.clone())),
+                        ("mean_ms", Json::Num(o.mean_ms)),
+                        ("p95_ms", Json::Num(o.p95_ms)),
+                        ("max_decision_us", Json::Num(o.max_decision_us)),
+                        (
+                            "timeline",
+                            Json::Arr(
+                                o.timeline
+                                    .iter()
+                                    .map(|(t, v)| {
+                                        Json::Arr(vec![Json::Num(*t), Json::Num(*v)])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "reconfigs",
+                            Json::Arr(
+                                o.reconfigs
+                                    .iter()
+                                    .map(|(t, c)| {
+                                        Json::from_pairs(vec![
+                                            ("t", Json::Num(*t)),
+                                            (
+                                                "partitions",
+                                                Json::Arr(
+                                                    c.partitions
+                                                        .iter()
+                                                        .map(|p| Json::Num(*p as f64))
+                                                        .collect(),
+                                                ),
+                                            ),
+                                            (
+                                                "cores",
+                                                Json::Arr(
+                                                    c.cores
+                                                        .iter()
+                                                        .map(|k| Json::Num(*k as f64))
+                                                        .collect(),
+                                                ),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}

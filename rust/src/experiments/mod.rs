@@ -1,0 +1,20 @@
+//! Experiment harness: one module per paper figure/table (DESIGN.md §7).
+//!
+//! Every module exposes `run(&Ctx, …) -> …Result` with a `print()` that
+//! emits the same rows/series the paper reports, plus `to_json()` for
+//! `results/`. `swapless figure N` / `swapless table 2` dispatch here, and
+//! the bench binaries reuse the same entry points.
+
+pub mod ablation;
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod sensitivity;
+pub mod table2;
+
+pub use common::Ctx;

@@ -1,0 +1,66 @@
+//! Table II — characteristics of the evaluated AI models.
+
+use crate::util::json::Json;
+
+use super::common::{print_table, Ctx};
+
+pub struct Table2 {
+    pub rows: Vec<(String, f64, f64, usize, usize)>,
+}
+
+pub fn run(ctx: &Ctx) -> Table2 {
+    let rows = ctx
+        .manifest
+        .models
+        .iter()
+        .map(|m| {
+            (
+                m.name.clone(),
+                m.table_size_mb,
+                m.table_flops_g,
+                m.partition_points,
+                m.segments.len(),
+            )
+        })
+        .collect();
+    Table2 { rows }
+}
+
+impl Table2 {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|(name, mb, gf, pp, segs)| {
+                vec![
+                    name.clone(),
+                    format!("{mb:.1}"),
+                    format!("{gf:.2}"),
+                    pp.to_string(),
+                    segs.to_string(),
+                ]
+            })
+            .collect();
+        print_table(
+            "Table II: evaluated model characteristics",
+            &["model", "size (MB)", "FLOPs (G)", "partition points", "artifacts"],
+            &rows,
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|(name, mb, gf, pp, _)| {
+                    Json::from_pairs(vec![
+                        ("model", Json::Str(name.clone())),
+                        ("size_mb", Json::Num(*mb)),
+                        ("flops_g", Json::Num(*gf)),
+                        ("partition_points", Json::Num(*pp as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}

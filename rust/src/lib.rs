@@ -1,0 +1,30 @@
+//! # SwapLess
+//!
+//! Reproduction of *"Collaborative Processing for Multi-Tenant Inference on
+//! Memory-Constrained Edge TPUs"* — an adaptive system that splits CNN
+//! inference between a memory-constrained (Edge-TPU-like) accelerator and
+//! host CPU cores, driven by an analytic queueing model and a greedy
+//! hill-climbing resource allocator.
+//!
+//! Architecture (three layers, python never on the request path):
+//! * L1 — Pallas kernels (`python/compile/kernels/`), AOT-lowered;
+//! * L2 — JAX model zoo (`python/compile/`), one HLO artifact per segment;
+//! * L3 — this crate: runtime (PJRT), device model, queueing model,
+//!   allocator, discrete-event simulator, online coordinator, experiment
+//!   harness regenerating every figure/table of the paper.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod alloc;
+pub mod analytic;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod tpu;
+pub mod util;
+pub mod workload;

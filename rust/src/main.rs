@@ -1,0 +1,394 @@
+//! `swapless` — CLI for the SwapLess reproduction.
+//!
+//! Subcommands:
+//!   table 2                  print Table II from the artifact manifest
+//!   figure <1|2|3|5|6|7|8>   regenerate a paper figure (prints + saves JSON)
+//!   figures                  regenerate everything (results/*.json)
+//!   profile                  offline profiling phase → profiles.json
+//!   plan                     run the allocator on a workload, print config
+//!   serve                    live serving demo over the PJRT artifacts
+//!
+//! Common options: --artifacts DIR --hw FILE --seed N --horizon S
+//!                 --models a,b --rates x,y --rho R
+
+use swapless::alloc;
+use swapless::analytic::Tenant;
+use swapless::config::HardwareSpec;
+use swapless::experiments as exp;
+use swapless::experiments::common::save_result;
+use swapless::util::cli;
+
+const VALUE_OPTS: [&str; 12] = [
+    "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
+    "trace", "policy",
+];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match run(&raw) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn usage() -> String {
+    "usage: swapless <table 2 | figure N | figures | ablation | sensitivity | profile | plan | serve | trace | replay> [options]\n\
+     options: --artifacts DIR (default artifacts) --hw FILE --seed N --horizon S\n\
+              --models a,b --rates x,y --rho R --iters N --out FILE --time-scale S"
+        .to_string()
+}
+
+fn run(raw: &[String]) -> Result<(), String> {
+    let args = cli::parse(raw, &VALUE_OPTS)?;
+    let Some(cmd) = args.positional.first() else {
+        return Err(usage());
+    };
+
+    let artifacts = args.opt_or("artifacts", "artifacts");
+    let hw = match args.opt("hw") {
+        Some(path) => HardwareSpec::load(path)?,
+        None => HardwareSpec::default(),
+    };
+    let mut ctx = exp::Ctx::load(&artifacts, hw.clone())?;
+    ctx.seed = args.opt_u64("seed", 42)?;
+    ctx.horizon = args.opt_f64("horizon", 2000.0)?;
+
+    match cmd.as_str() {
+        "table" => {
+            exp::table2::run(&ctx).print();
+            Ok(())
+        }
+        "figure" => {
+            let n = args
+                .positional
+                .get(1)
+                .ok_or_else(|| "figure needs a number (1,2,3,5,6,7,8)".to_string())?;
+            run_figure(&ctx, n)
+        }
+        "figures" => {
+            exp::table2::run(&ctx).print();
+            for n in ["1", "2", "3", "5", "6", "7", "8"] {
+                run_figure(&ctx, n)?;
+            }
+            run_named(&ctx, "ablation")?;
+            run_named(&ctx, "sensitivity")
+        }
+        "ablation" | "sensitivity" => run_named(&ctx, cmd),
+        "profile" => {
+            let models = if args.opt("models").is_some() {
+                args.opt_list("models")
+            } else {
+                ctx.manifest.models.iter().map(|m| m.name.clone()).collect()
+            };
+            let iters = args.opt_usize("iters", 10)?;
+            let profiles =
+                swapless::profiler::profile(&ctx.manifest, &ctx.cost, &models, iters)
+                    .map_err(|e| e.to_string())?;
+            let out = args.opt_or("out", "results/profiles.json");
+            swapless::profiler::save(&profiles, &out)?;
+            println!("profiled {} segments -> {out}", profiles.len());
+            for p in &profiles {
+                println!(
+                    "  {}/seg{}: measured {:.2} ms | modeled cpu {:.2} ms tpu {:.2} ms ({:.1}x)",
+                    p.model,
+                    p.index,
+                    p.measured_cpu_s * 1e3,
+                    p.modeled_cpu_s * 1e3,
+                    p.modeled_tpu_s * 1e3,
+                    p.speedup
+                );
+            }
+            Ok(())
+        }
+        "plan" => {
+            let names = args.opt_list("models");
+            if names.is_empty() {
+                return Err("plan needs --models a,b".into());
+            }
+            let rates: Vec<f64> = args
+                .opt_list("rates")
+                .iter()
+                .map(|r| r.parse::<f64>().map_err(|_| format!("bad rate {r}")))
+                .collect::<Result<_, _>>()?;
+            if rates.len() != names.len() {
+                return Err("--rates must match --models".into());
+            }
+            let tenants: Vec<Tenant> = names
+                .iter()
+                .zip(&rates)
+                .map(|(n, r)| {
+                    Ok(Tenant {
+                        model: ctx.manifest.get(n)?.clone(),
+                        rate: *r,
+                    })
+                })
+                .collect::<Result<_, String>>()?;
+            let t0 = std::time::Instant::now();
+            let plan = alloc::hill_climb(&ctx.am, &tenants, ctx.k_max);
+            let dt = t0.elapsed();
+            println!("workload:");
+            for (n, r) in names.iter().zip(&rates) {
+                println!("  {n}: {r} rps");
+            }
+            println!(
+                "plan: P={:?} K={:?}  predicted objective {:.4}  ({} evals, {:?})",
+                plan.config.partitions,
+                plan.config.cores,
+                plan.predicted_objective,
+                plan.evaluations,
+                dt
+            );
+            for (i, t) in tenants.iter().enumerate() {
+                println!(
+                    "  {}: e2e {:.1} ms (α={:.2})",
+                    t.model.name,
+                    ctx.am.e2e_latency(&tenants, &plan.config, i) * 1e3,
+                    ctx.am.alpha(&tenants, &plan.config, i)
+                );
+            }
+            Ok(())
+        }
+        "serve" => serve(&ctx, &args, &hw),
+        "trace" => trace_record(&ctx, &args),
+        "replay" => trace_replay(&ctx, &args),
+        _ => Err(usage()),
+    }
+}
+
+/// `swapless trace --models a,b --rates x,y --horizon S --out trace.json`
+/// — record a Poisson arrival trace for later replay.
+fn trace_record(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
+    use swapless::util::rng::Rng;
+    use swapless::workload::{generate_arrivals, trace, RateSchedule};
+    let names = args.opt_list("models");
+    if names.is_empty() {
+        return Err("trace needs --models a,b".into());
+    }
+    let rates: Vec<f64> = args
+        .opt_list("rates")
+        .iter()
+        .map(|r| r.parse::<f64>().map_err(|_| format!("bad rate {r}")))
+        .collect::<Result<_, _>>()?;
+    if rates.len() != names.len() {
+        return Err("--rates must match --models".into());
+    }
+    for n in &names {
+        ctx.manifest.get(n)?; // validate names early
+    }
+    let horizon = args.opt_f64("horizon", 600.0)?;
+    let schedules: Vec<RateSchedule> =
+        rates.iter().map(|r| RateSchedule::constant(*r)).collect();
+    let mut rng = Rng::new(args.opt_u64("seed", 42)?);
+    let arrivals = generate_arrivals(&schedules, horizon, &mut rng);
+    let out = args.opt_or("out", "results/trace.json");
+    trace::save(&out, &arrivals, &names)?;
+    println!("recorded {} arrivals over {horizon}s -> {out}", arrivals.len());
+    Ok(())
+}
+
+/// `swapless replay --trace trace.json [--policy swapless|compiler|threshold]`
+/// — plan from the trace's empirical rates, then simulate the exact trace.
+fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
+    use swapless::sim::{Simulator, SimOptions};
+    use swapless::workload::trace;
+    let path = args
+        .opt("trace")
+        .ok_or_else(|| "replay needs --trace FILE".to_string())?;
+    let (arrivals, names) = trace::load(path)?;
+    let horizon = arrivals.last().map(|a| a.time).unwrap_or(0.0) + 1.0;
+    let rates = trace::empirical_rates(&arrivals, names.len(), horizon);
+    let tenants: Vec<Tenant> = names
+        .iter()
+        .zip(&rates)
+        .map(|(n, r)| {
+            Ok(Tenant {
+                model: ctx.manifest.get(n)?.clone(),
+                rate: *r,
+            })
+        })
+        .collect::<Result<_, String>>()?;
+    let policy = args.opt_or("policy", "swapless");
+    let cfg = match policy.as_str() {
+        "swapless" => alloc::hill_climb(&ctx.am, &tenants, ctx.k_max).config,
+        "compiler" => alloc::edge_tpu_compiler(&ctx.am, &tenants).config,
+        "threshold" => {
+            alloc::threshold_partitioning(&ctx.am, &tenants, ctx.k_max, 0.10).config
+        }
+        other => return Err(format!("unknown --policy {other}")),
+    };
+    println!(
+        "replaying {} arrivals ({horizon:.0}s, empirical rates {:?})",
+        arrivals.len(),
+        rates.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+    println!("[{policy}] P={:?} K={:?}", cfg.partitions, cfg.cores);
+    let mut sim = Simulator::new(
+        &ctx.cost,
+        &tenants,
+        cfg,
+        SimOptions {
+            horizon,
+            warmup: horizon * 0.05,
+            seed: ctx.seed,
+            timeline_window: None,
+        },
+    );
+    let res = sim.run(&arrivals, None);
+    println!(
+        "mean {:.1} ms | ρ(TPU) {:.2} | cache hit {:.2}",
+        res.mean_latency * 1e3,
+        res.tpu_utilization,
+        res.cache_hit_rate
+    );
+    for (i, m) in res.per_model.iter().enumerate() {
+        if m.completed > 0 {
+            println!(
+                "  {:<14} n={:<6} mean {:>7.1} ms  p95 {:>7.1} ms",
+                names[i],
+                m.completed,
+                m.latency.mean() * 1e3,
+                m.latency.percentile(95.0) * 1e3
+            );
+        }
+    }
+    Ok(())
+}
+
+fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
+    match which {
+        "ablation" => {
+            let r = exp::ablation::run(ctx)?;
+            r.print();
+            save_result("ablation", &r.to_json())
+        }
+        "sensitivity" => {
+            let r = exp::sensitivity::run(ctx)?;
+            r.print();
+            save_result("sensitivity", &r.to_json())
+        }
+        _ => Err(format!("unknown experiment {which}")),
+    }
+}
+
+fn run_figure(ctx: &exp::Ctx, n: &str) -> Result<(), String> {
+    match n {
+        "1" => {
+            let r = exp::fig1::run(ctx)?;
+            r.print();
+            save_result("fig1", &r.to_json())
+        }
+        "2" => {
+            let r = exp::fig2::run(ctx)?;
+            r.print();
+            save_result("fig2", &r.to_json())
+        }
+        "3" => {
+            let r = exp::fig3::run(ctx, "inceptionv4")?;
+            r.print();
+            save_result("fig3", &r.to_json())
+        }
+        "5" => {
+            let r = exp::fig5::run(ctx, "inceptionv4", 0.2, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])?;
+            r.print();
+            save_result("fig5", &r.to_json())
+        }
+        "6" => {
+            let r = exp::fig6::run(ctx, 0.4, &[0.5, 1.0, 1.5, 2.0, 2.5])?;
+            r.print();
+            save_result("fig6", &r.to_json())
+        }
+        "7" => {
+            let r = exp::fig7::run(ctx, &[0.2, 0.5])?;
+            r.print();
+            save_result("fig7", &r.to_json())
+        }
+        "8" => {
+            let r = exp::fig8::run(ctx)?;
+            r.print();
+            save_result("fig8", &r.to_json())
+        }
+        _ => Err(format!("unknown figure {n} (have 1,2,3,5,6,7,8)")),
+    }
+}
+
+fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), String> {
+    use swapless::coordinator::{Server, ServerOptions};
+    use swapless::tpu::CostModel;
+
+    let names = if args.opt("models").is_some() {
+        args.opt_list("models")
+    } else {
+        vec!["mobilenetv2".to_string(), "squeezenet".to_string()]
+    };
+    let n_req = args.opt_usize("iters", 50)?;
+    let time_scale = args.opt_f64("time-scale", 0.0)?;
+
+    println!("loading {} models: {names:?}", names.len());
+    let tenants: Vec<Tenant> = names
+        .iter()
+        .map(|n| {
+            Ok(Tenant {
+                model: ctx.manifest.get(n)?.clone(),
+                rate: 1.0,
+            })
+        })
+        .collect::<Result<_, String>>()?;
+    let plan = alloc::hill_climb(&ctx.am, &tenants, ctx.k_max);
+    println!(
+        "initial plan: P={:?} K={:?}",
+        plan.config.partitions, plan.config.cores
+    );
+    let server = Server::start(
+        &ctx.manifest,
+        &names,
+        CostModel::new(hw.clone()),
+        plan.config,
+        ServerOptions {
+            time_scale,
+            adaptive: true,
+            ..Default::default()
+        },
+    )
+    .map_err(|e| e.to_string())?;
+
+    let t0 = std::time::Instant::now();
+    for i in 0..n_req {
+        let m = i % names.len();
+        let meta = &server.tenants()[m].model;
+        let n_in: usize = meta.input_shape.iter().product();
+        let done = server
+            .infer(m, vec![0.5f32; n_in])
+            .map_err(|e| e.to_string())?;
+        if i < 3 {
+            println!(
+                "  req {i} ({}) -> {} outputs, {:.1} ms",
+                meta.name,
+                done.output.len(),
+                done.latency_s * 1e3
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "served {} requests in {:.2}s ({:.1} req/s)",
+        stats.completed,
+        wall,
+        stats.completed as f64 / wall
+    );
+    for (i, h) in stats.per_model.iter().enumerate() {
+        if h.count() > 0 {
+            println!(
+                "  {}: n={} mean {:.1} ms p95 {:.1} ms",
+                names[i],
+                h.count(),
+                h.mean() * 1e3,
+                h.percentile(95.0) * 1e3
+            );
+        }
+    }
+    Ok(())
+}

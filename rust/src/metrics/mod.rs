@@ -1,0 +1,333 @@
+//! Latency statistics: streaming moments, percentile histograms, time
+//! series, and the MAPE metric the paper's validation sections report.
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Welford {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Second raw moment E[X^2] — what the P-K formula needs.
+    pub fn second_moment(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        // E[X^2] = Var_pop + mean^2
+        self.m2 / self.n as f64 + self.mean * self.mean
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + d * d * self.n as f64 * other.n as f64 / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Log-bucketed latency histogram: O(1) insert, ~2% relative error on
+/// percentile reads — plenty for the figures, and allocation-free on the
+/// hot path (fixed bucket array).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Buckets are geometric: bucket i covers [min_v * g^i, min_v * g^(i+1)).
+    counts: Vec<u64>,
+    total: u64,
+    min_v: f64,
+    growth: f64,
+    log_growth: f64,
+    stats: Welford,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1 µs .. ~17 minutes at 2% resolution.
+        LatencyHistogram::new(1e-6, 1.02, 1024)
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new(min_v: f64, growth: f64, buckets: usize) -> LatencyHistogram {
+        assert!(min_v > 0.0 && growth > 1.0 && buckets > 1);
+        LatencyHistogram {
+            counts: vec![0; buckets],
+            total: 0,
+            min_v,
+            growth,
+            log_growth: growth.ln(),
+            stats: Welford::new(),
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.stats.add(v);
+        let idx = if v <= self.min_v {
+            0
+        } else {
+            let i = ((v / self.min_v).ln() / self.log_growth) as usize;
+            i.min(self.counts.len() - 1)
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.stats.std_dev()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.stats.max()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (p / 100.0 * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // geometric midpoint of the bucket
+                return self.min_v * self.growth.powf(i as f64 + 0.5);
+            }
+        }
+        self.stats.max()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.stats.merge(&other.stats);
+    }
+}
+
+/// Mean absolute percentage error — the paper's model-validation metric.
+pub fn mape(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len());
+    assert!(!observed.is_empty());
+    let mut total = 0.0;
+    for (o, p) in observed.iter().zip(predicted) {
+        assert!(*o != 0.0, "MAPE undefined for zero observation");
+        total += ((o - p) / o).abs();
+    }
+    100.0 * total / observed.len() as f64
+}
+
+/// Fraction of predictions within ±pct% of the observation (Fig. 5 reports
+/// "92.3% within ±5%").
+pub fn within_pct(observed: &[f64], predicted: &[f64], pct: f64) -> f64 {
+    assert_eq!(observed.len(), predicted.len());
+    let hits = observed
+        .iter()
+        .zip(predicted)
+        .filter(|(o, p)| ((*o - *p) / *o).abs() * 100.0 <= pct)
+        .count();
+    hits as f64 / observed.len() as f64
+}
+
+/// Windowed time series for the Fig. 8 timeline (mean latency per window).
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    window: f64,
+    points: Vec<Welford>,
+}
+
+impl TimeSeries {
+    pub fn new(window: f64) -> TimeSeries {
+        assert!(window > 0.0);
+        TimeSeries {
+            window,
+            points: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, t: f64, v: f64) {
+        let idx = (t / self.window) as usize;
+        while self.points.len() <= idx {
+            self.points.push(Welford::new());
+        }
+        self.points[idx].add(v);
+    }
+
+    /// (window_center_time, mean) for each non-empty window.
+    pub fn series(&self) -> Vec<(f64, f64)> {
+        self.points
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.count() > 0)
+            .map(|(i, w)| ((i as f64 + 0.5) * self.window, w.mean()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for x in xs {
+            w.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 9.0);
+        let e2 = xs.iter().map(|x| x * x).sum::<f64>() / xs.len() as f64;
+        assert!((w.second_moment() - e2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge_equals_combined() {
+        let xs: Vec<f64> = (0..50).map(|i| (i as f64).sin() + 2.0).collect();
+        let mut all = Welford::new();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, x) in xs.iter().enumerate() {
+            all.add(*x);
+            if i % 2 == 0 {
+                a.add(*x)
+            } else {
+                b.add(*x)
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        assert!((a.variance() - all.variance()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_approximate() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=10_000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 1s uniform
+        }
+        let p50 = h.percentile(50.0);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.05, "p50={p50}");
+        let p95 = h.percentile(95.0);
+        assert!((p95 - 0.95).abs() / 0.95 < 0.05, "p95={p95}");
+        assert!(h.percentile(100.0) <= h.max() * 1.03);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for i in 1..=100 {
+            a.record(i as f64 * 1e-3);
+            b.record(i as f64 * 2e-3);
+        }
+        let mean_a = a.mean();
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!(a.mean() > mean_a);
+    }
+
+    #[test]
+    fn mape_basic() {
+        let o = [100.0, 200.0];
+        let p = [110.0, 180.0];
+        assert!((mape(&o, &p) - 10.0).abs() < 1e-9);
+        assert_eq!(within_pct(&o, &p, 10.0), 1.0);
+        assert_eq!(within_pct(&o, &p, 5.0), 0.0);
+    }
+
+    #[test]
+    fn timeseries_windows() {
+        let mut ts = TimeSeries::new(10.0);
+        ts.record(1.0, 5.0);
+        ts.record(2.0, 7.0);
+        ts.record(25.0, 1.0);
+        let s = ts.series();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0], (5.0, 6.0));
+        assert_eq!(s[1], (25.0, 1.0));
+    }
+}

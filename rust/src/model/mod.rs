@@ -1,0 +1,314 @@
+//! Model metadata: the artifact manifest produced by `python -m compile.aot`.
+//!
+//! The manifest is the contract between the build-time python layers and the
+//! rust coordinator: per model, the ordered segment list with artifact paths,
+//! tensor shapes, FLOPs, weight footprints (both the real scaled artifact and
+//! the paper-scale simulated footprint) and MXU-utilization estimates.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct SegmentMeta {
+    pub index: usize,
+    /// Artifact path relative to the artifacts dir, e.g. `squeezenet/seg0.hlo.txt`.
+    pub artifact: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub real_flops: u64,
+    pub real_param_bytes: u64,
+    /// Paper-scale (Table II) weight bytes used by the TPU device model.
+    pub sim_weight_bytes: u64,
+    /// Paper-scale FLOPs used by the service-time cost model.
+    pub sim_flops: u64,
+    /// On-wire activation sizes (int8, as the paper's quantized models).
+    pub in_bytes: u64,
+    pub out_bytes: u64,
+    /// Systolic-array fill estimate from the Pallas kernel tiling (L1).
+    pub mxu_util: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    /// `P_i` — number of candidate partition points == number of segments.
+    pub partition_points: usize,
+    pub table_size_mb: f64,
+    pub table_flops_g: f64,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub segments: Vec<SegmentMeta>,
+}
+
+impl ModelMeta {
+    /// Simulated weight bytes of the TPU prefix `[1:p]` (p segments).
+    pub fn prefix_weight_bytes(&self, p: usize) -> u64 {
+        self.segments[..p].iter().map(|s| s.sim_weight_bytes).sum()
+    }
+
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.prefix_weight_bytes(self.partition_points)
+    }
+
+    /// Simulated FLOPs of the prefix.
+    pub fn prefix_flops(&self, p: usize) -> u64 {
+        self.segments[..p].iter().map(|s| s.sim_flops).sum()
+    }
+
+    /// Simulated FLOPs of the suffix `[p+1:P]`.
+    pub fn suffix_flops(&self, p: usize) -> u64 {
+        self.segments[p..].iter().map(|s| s.sim_flops).sum()
+    }
+
+    /// On-wire bytes of the intermediate tensor at partition point p
+    /// (`d_out` in Eq. 4). For p == P there is no TPU→CPU handoff, but the
+    /// final output still returns over the bus; both are this value.
+    pub fn boundary_bytes(&self, p: usize) -> u64 {
+        if p == 0 {
+            self.segments[0].in_bytes
+        } else {
+            self.segments[p - 1].out_bytes
+        }
+    }
+
+    pub fn input_bytes(&self) -> u64 {
+        self.segments[0].in_bytes
+    }
+
+    /// Highest per-segment MXU utilization in this model — normalization
+    /// anchor for the Fig. 3 speedup shape (DESIGN.md §3).
+    pub fn max_mxu_util(&self) -> f64 {
+        self.segments
+            .iter()
+            .map(|s| s.mxu_util)
+            .fold(f64::MIN_POSITIVE, f64::max)
+    }
+
+    fn from_json(j: &Json) -> Result<ModelMeta, String> {
+        let err = |e: crate::util::json::JsonError| e.to_string();
+        let mut segments = Vec::new();
+        for (i, seg) in j.arr_of("segments").map_err(err)?.iter().enumerate() {
+            let shape = |key: &str| -> Result<Vec<usize>, String> {
+                seg.arr_of(key)
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| format!("bad dim in {key}")))
+                    .collect()
+            };
+            let m = SegmentMeta {
+                index: seg.usize_of("index").map_err(err)?,
+                artifact: seg.str_of("artifact").map_err(err)?,
+                in_shape: shape("in_shape")?,
+                out_shape: shape("out_shape")?,
+                real_flops: seg.u64_of("real_flops").map_err(err)?,
+                real_param_bytes: seg.u64_of("real_param_bytes").map_err(err)?,
+                sim_weight_bytes: seg.u64_of("sim_weight_bytes").map_err(err)?,
+                sim_flops: seg.u64_of("sim_flops").map_err(err)?,
+                in_bytes: seg.u64_of("in_bytes").map_err(err)?,
+                out_bytes: seg.u64_of("out_bytes").map_err(err)?,
+                mxu_util: seg.f64_of("mxu_util").map_err(err)?,
+            };
+            if m.index != i {
+                return Err(format!("segment index {} at position {i}", m.index));
+            }
+            segments.push(m);
+        }
+        let meta = ModelMeta {
+            name: j.str_of("name").map_err(err)?,
+            partition_points: j.usize_of("partition_points").map_err(err)?,
+            table_size_mb: j.f64_of("table_size_mb").map_err(err)?,
+            table_flops_g: j.f64_of("table_flops_g").map_err(err)?,
+            input_shape: j
+                .arr_of("input_shape")
+                .map_err(err)?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            output_shape: j
+                .arr_of("output_shape")
+                .map_err(err)?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            segments,
+        };
+        if meta.segments.len() != meta.partition_points {
+            return Err(format!(
+                "{}: {} segments but {} partition points",
+                meta.name,
+                meta.segments.len(),
+                meta.partition_points
+            ));
+        }
+        // Shape chaining invariant.
+        for w in meta.segments.windows(2) {
+            if w[0].out_shape != w[1].in_shape {
+                return Err(format!(
+                    "{}: segment {} out {:?} != segment {} in {:?}",
+                    meta.name, w[0].index, w[0].out_shape, w[1].index, w[1].in_shape
+                ));
+            }
+        }
+        Ok(meta)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub kernel_path: String,
+    pub models: Vec<ModelMeta>,
+    /// Directory the artifact paths are relative to.
+    pub base_dir: String,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Manifest, String> {
+        let path = format!("{artifacts_dir}/manifest.json");
+        let j = crate::util::json::parse_file(&path)?;
+        Manifest::from_json(&j, artifacts_dir)
+    }
+
+    pub fn from_json(j: &Json, base_dir: &str) -> Result<Manifest, String> {
+        let mut models = Vec::new();
+        for m in j.arr_of("models").map_err(|e| e.to_string())? {
+            models.push(ModelMeta::from_json(m)?);
+        }
+        if models.is_empty() {
+            return Err("manifest has no models".into());
+        }
+        Ok(Manifest {
+            kernel_path: j
+                .get("kernel_path")
+                .and_then(Json::as_str)
+                .unwrap_or("pallas")
+                .to_string(),
+            models,
+            base_dir: base_dir.to_string(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelMeta, String> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                let have: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+                format!("unknown model {name:?}; manifest has {have:?}")
+            })
+    }
+
+    pub fn artifact_path(&self, seg: &SegmentMeta) -> String {
+        format!("{}/{}", self.base_dir, seg.artifact)
+    }
+
+    /// Subset manifest for a workload mix (preserves manifest order).
+    pub fn select(&self, names: &[String]) -> Result<Vec<&ModelMeta>, String> {
+        names.iter().map(|n| self.get(n)).collect()
+    }
+}
+
+/// A synthetic manifest for unit tests (no artifacts on disk).
+pub fn synthetic_model(name: &str, segs: usize, bytes_per_seg: u64, flops_per_seg: u64) -> ModelMeta {
+    let mut segments = Vec::new();
+    for i in 0..segs {
+        // Utilization decays geometrically across depth (0.5 → ~parity),
+        // mimicking the zoo's early-parallel/late-starved Fig. 3 shape.
+        let util = 0.5 * 0.62f64.powi(i as i32);
+        segments.push(SegmentMeta {
+            index: i,
+            artifact: format!("{name}/seg{i}.hlo.txt"),
+            in_shape: vec![1, 8, 8, 8],
+            out_shape: vec![1, 8, 8, 8],
+            real_flops: flops_per_seg,
+            real_param_bytes: bytes_per_seg,
+            sim_weight_bytes: bytes_per_seg,
+            sim_flops: flops_per_seg,
+            in_bytes: 512,
+            out_bytes: 512,
+            mxu_util: util,
+        });
+    }
+    ModelMeta {
+        name: name.to_string(),
+        partition_points: segs,
+        table_size_mb: (bytes_per_seg * segs as u64) as f64 / 1e6,
+        table_flops_g: (flops_per_seg * segs as u64) as f64 / 1e9,
+        input_shape: vec![1, 8, 8, 8],
+        output_shape: vec![1, 8, 8, 8],
+        segments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        crate::util::json::parse(
+            r#"{
+              "kernel_path": "pallas",
+              "models": [{
+                "name": "m1", "partition_points": 2,
+                "table_size_mb": 1.0, "table_flops_g": 0.5,
+                "input_shape": [1,4,4,3], "output_shape": [1,10],
+                "segments": [
+                  {"index":0,"artifact":"m1/seg0.hlo.txt","in_shape":[1,4,4,3],
+                   "out_shape":[1,2,2,8],"real_flops":1000,"real_param_bytes":400,
+                   "sim_weight_bytes":600000,"sim_flops":300000000,
+                   "in_bytes":48,"out_bytes":32,"mxu_util":0.4},
+                  {"index":1,"artifact":"m1/seg1.hlo.txt","in_shape":[1,2,2,8],
+                   "out_shape":[1,10],"real_flops":500,"real_param_bytes":100,
+                   "sim_weight_bytes":400000,"sim_flops":200000000,
+                   "in_bytes":32,"out_bytes":10,"mxu_util":0.1}
+                ]
+              }]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&sample_json(), "artifacts").unwrap();
+        assert_eq!(m.models.len(), 1);
+        let m1 = m.get("m1").unwrap();
+        assert_eq!(m1.partition_points, 2);
+        assert_eq!(m1.prefix_weight_bytes(0), 0);
+        assert_eq!(m1.prefix_weight_bytes(1), 600000);
+        assert_eq!(m1.total_weight_bytes(), 1000000);
+        assert_eq!(m1.prefix_flops(2), 500000000);
+        assert_eq!(m1.suffix_flops(1), 200000000);
+        assert_eq!(m1.boundary_bytes(0), 48);
+        assert_eq!(m1.boundary_bytes(1), 32);
+        assert_eq!(m1.boundary_bytes(2), 10);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::from_json(&sample_json(), "artifacts").unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn shape_chain_violation_rejected() {
+        let mut j = sample_json();
+        // Corrupt the second segment's in_shape.
+        if let Json::Obj(root) = &mut j {
+            if let Some(Json::Arr(models)) = root.get_mut("models") {
+                if let Json::Obj(m) = &mut models[0] {
+                    if let Some(Json::Arr(segs)) = m.get_mut("segments") {
+                        segs[1].set("in_shape", Json::Arr(vec![Json::Num(1.0)]));
+                    }
+                }
+            }
+        }
+        assert!(Manifest::from_json(&j, "artifacts").is_err());
+    }
+
+    #[test]
+    fn synthetic_model_shape() {
+        let m = synthetic_model("x", 5, 1_000_000, 1_000_000_000);
+        assert_eq!(m.partition_points, 5);
+        assert!(m.segments[0].mxu_util > m.segments[4].mxu_util);
+        assert_eq!(m.total_weight_bytes(), 5_000_000);
+    }
+}

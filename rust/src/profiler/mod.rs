@@ -1,0 +1,82 @@
+//! Offline profiling phase (Fig. 4, left): time every model segment
+//! through the real PJRT artifacts and emit `profiles.json`.
+//!
+//! The measured wall-clock CPU times validate the cost model's *shape*
+//! (they execute the scaled-down zoo on this host, so magnitudes differ
+//! from the paper-scale `CostModel` times — both are recorded).
+
+use anyhow::Result;
+
+use crate::model::Manifest;
+use crate::runtime::Engine;
+use crate::tpu::CostModel;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct SegmentProfile {
+    pub model: String,
+    pub index: usize,
+    /// Measured PJRT wall-clock per execution (seconds).
+    pub measured_cpu_s: f64,
+    /// Paper-scale modeled times (seconds).
+    pub modeled_cpu_s: f64,
+    pub modeled_tpu_s: f64,
+    pub speedup: f64,
+}
+
+/// Profile `models` (or all) with `iters` timed runs per segment.
+pub fn profile(
+    manifest: &Manifest,
+    cost: &CostModel,
+    models: &[String],
+    iters: usize,
+) -> Result<Vec<SegmentProfile>> {
+    let mut engine = Engine::new()?;
+    let mut out = Vec::new();
+    for name in models {
+        let meta = manifest.get(name).map_err(anyhow::Error::msg)?;
+        engine.load_model(manifest, meta)?;
+        for seg in &meta.segments {
+            let n_in: usize = seg.in_shape.iter().product();
+            let input = vec![0.5f32; n_in];
+            // warmup
+            engine.execute_segment(name, seg.index, &input)?;
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                engine.execute_segment(name, seg.index, &input)?;
+            }
+            let measured = t0.elapsed().as_secs_f64() / iters as f64;
+            out.push(SegmentProfile {
+                model: name.clone(),
+                index: seg.index,
+                measured_cpu_s: measured,
+                modeled_cpu_s: cost.cpu_segment_time(seg),
+                modeled_tpu_s: cost.tpu_segment_time(meta, seg),
+                speedup: cost.segment_speedup(meta, seg),
+            });
+        }
+    }
+    Ok(out)
+}
+
+pub fn to_json(profiles: &[SegmentProfile]) -> Json {
+    Json::Arr(
+        profiles
+            .iter()
+            .map(|p| {
+                Json::from_pairs(vec![
+                    ("model", Json::Str(p.model.clone())),
+                    ("index", Json::Num(p.index as f64)),
+                    ("measured_cpu_s", Json::Num(p.measured_cpu_s)),
+                    ("modeled_cpu_s", Json::Num(p.modeled_cpu_s)),
+                    ("modeled_tpu_s", Json::Num(p.modeled_tpu_s)),
+                    ("speedup", Json::Num(p.speedup)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn save(profiles: &[SegmentProfile], path: &str) -> Result<(), String> {
+    crate::util::json::write_file(path, &to_json(profiles))
+}

@@ -1,0 +1,124 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute them.
+//!
+//! `Engine` owns a PJRT CPU client and the compiled executables — one per
+//! model segment. The `xla` crate's client is `Rc`-based (not `Send`), so
+//! all PJRT work runs on whichever thread built the `Engine`;
+//! [`service::ExecService`] wraps an `Engine` in a dedicated executor
+//! thread with an mpsc request/reply facade for the multi-threaded
+//! coordinator.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` for why).
+
+pub mod service;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::{Manifest, ModelMeta};
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    /// (model name, segment index) → compiled executable.
+    execs: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    /// Segment metadata needed to shape inputs.
+    shapes: HashMap<(String, usize), (Vec<usize>, Vec<usize>)>,
+}
+
+impl Engine {
+    pub fn new() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            execs: HashMap::new(),
+            shapes: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile every segment of `model` from the manifest's artifacts.
+    pub fn load_model(&mut self, manifest: &Manifest, model: &ModelMeta) -> Result<()> {
+        for seg in &model.segments {
+            let key = (model.name.clone(), seg.index);
+            if self.execs.contains_key(&key) {
+                continue;
+            }
+            let path = manifest.artifact_path(seg);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path}: {e}"))?;
+            self.execs.insert(key.clone(), exe);
+            self.shapes
+                .insert(key, (seg.in_shape.clone(), seg.out_shape.clone()));
+        }
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, model: &str, seg: usize) -> bool {
+        self.execs.contains_key(&(model.to_string(), seg))
+    }
+
+    pub fn loaded_segments(&self) -> usize {
+        self.execs.len()
+    }
+
+    /// Execute one segment: f32 activations in, f32 activations out.
+    pub fn execute_segment(&self, model: &str, seg: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let key = (model.to_string(), seg);
+        let exe = self
+            .execs
+            .get(&key)
+            .ok_or_else(|| anyhow!("segment {model}/seg{seg} not loaded"))?;
+        let (in_shape, _) = &self.shapes[&key];
+        let want: usize = in_shape.iter().product();
+        if input.len() != want {
+            return Err(anyhow!(
+                "{model}/seg{seg}: input has {} elements, shape {:?} wants {want}",
+                input.len(),
+                in_shape
+            ));
+        }
+        let dims: Vec<i64> = in_shape.iter().map(|d| *d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape input: {e}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {model}/seg{seg}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+    }
+
+    /// Execute segments `[a, b)` in order (a TPU prefix or CPU suffix).
+    pub fn execute_range(
+        &self,
+        model: &str,
+        a: usize,
+        b: usize,
+        input: &[f32],
+    ) -> Result<Vec<f32>> {
+        let mut x = input.to_vec();
+        for seg in a..b {
+            x = self.execute_segment(model, seg, &x)?;
+        }
+        Ok(x)
+    }
+
+    pub fn output_len(&self, model: &str, seg: usize) -> Option<usize> {
+        self.shapes
+            .get(&(model.to_string(), seg))
+            .map(|(_, out)| out.iter().product())
+    }
+}

@@ -1,0 +1,123 @@
+//! Thread-service facade over [`Engine`]: the PJRT client is not `Send`,
+//! so a dedicated executor thread owns it and serves execute requests over
+//! an mpsc channel. Handles (`ExecHandle`) are cheap to clone and are used
+//! by the coordinator's TPU worker and CPU pool threads.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::Manifest;
+
+use super::Engine;
+
+enum Request {
+    Execute {
+        model: String,
+        a: usize,
+        b: usize,
+        input: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable submit handle to the executor thread.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ExecHandle {
+    /// Execute segments `[a, b)` of `model`, blocking for the result.
+    pub fn execute_range(&self, model: &str, a: usize, b: usize, input: Vec<f32>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute {
+                model: model.to_string(),
+                a,
+                b,
+                input,
+                reply,
+            })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+}
+
+/// Owns the executor thread; dropping shuts it down.
+pub struct ExecService {
+    tx: mpsc::Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExecService {
+    /// Spawn the executor thread and load `models` (all segments) from the
+    /// manifest. Blocks until loading finishes so callers see load errors.
+    pub fn start(manifest: &Manifest, models: &[String]) -> Result<ExecService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let manifest = manifest.clone();
+        let names: Vec<String> = models.to_vec();
+        let join = std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || {
+                let mut engine = match Engine::new() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for name in &names {
+                    let res = manifest
+                        .get(name)
+                        .map_err(|e| anyhow!(e))
+                        .and_then(|m| engine.load_model(&manifest, m));
+                    if let Err(e) = res {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute {
+                            model,
+                            a,
+                            b,
+                            input,
+                            reply,
+                        } => {
+                            let out = engine.execute_range(&model, a, b, &input);
+                            let _ = reply.send(out);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during load"))??;
+        Ok(ExecService {
+            tx,
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        ExecHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for ExecService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Event types + the time-ordered heap ordering for the DES.
+
+use super::Request;
+
+#[derive(Debug, Clone, Copy)]
+pub enum EventKind {
+    /// External arrival of a request.
+    Arrival { req: Request },
+    /// Request finished its d_in/B transfer and joins the TPU FCFS queue.
+    TpuEnqueue { req: Request },
+    /// TPU finished serving (compute + swaps) — release the server.
+    TpuDone { req: Request },
+    /// Boundary tensor arrived at the host — join the model's CPU queue.
+    CpuEnqueue { req: Request },
+    /// A CPU core finished the suffix — request complete.
+    CpuDone { req: Request },
+    /// Full-TPU request finished its output transfer.
+    Complete { req: Request },
+    /// Periodic invocation of the online reconfiguration policy.
+    Reconfigure,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: f64,
+    /// Tie-break sequence: equal-time events keep their scheduling order,
+    /// making runs fully deterministic.
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl Event {
+    pub fn at(time: f64, kind: EventKind) -> Event {
+        assert!(time.is_finite(), "event scheduled at non-finite time");
+        Event {
+            time,
+            seq: SEQ.fetch_add(1, Ordering::Relaxed),
+            kind,
+        }
+    }
+}
+
+// BinaryHeap is a max-heap; invert the ordering for earliest-first.
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BinaryHeap;
+
+    #[test]
+    fn heap_pops_earliest_first() {
+        let mut h = BinaryHeap::new();
+        h.push(Event::at(3.0, EventKind::Reconfigure));
+        h.push(Event::at(1.0, EventKind::Reconfigure));
+        h.push(Event::at(2.0, EventKind::Reconfigure));
+        assert_eq!(h.pop().unwrap().time, 1.0);
+        assert_eq!(h.pop().unwrap().time, 2.0);
+        assert_eq!(h.pop().unwrap().time, 3.0);
+    }
+
+    #[test]
+    fn equal_times_preserve_fifo() {
+        let mut h = BinaryHeap::new();
+        let a = Event::at(1.0, EventKind::Reconfigure);
+        let b = Event::at(1.0, EventKind::Reconfigure);
+        h.push(b);
+        h.push(a);
+        let first = h.pop().unwrap();
+        let second = h.pop().unwrap();
+        assert!(first.seq < second.seq);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_finite_time_panics() {
+        Event::at(f64::NAN, EventKind::Reconfigure);
+    }
+}

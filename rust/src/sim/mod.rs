@@ -1,0 +1,559 @@
+//! Discrete-event simulator of the Edge-TPU serving testbed.
+//!
+//! This is the "observed" side of every validation figure: Poisson
+//! arrivals flow through the FCFS TPU queue (with the SRAM cache deciding
+//! inter-model reloads) and the per-model M/D/k CPU stations, under a
+//! possibly time-varying configuration. The DES shares the `CostModel`
+//! with the analytic side, so discrepancies between predicted and observed
+//! latency are purely *queueing/caching dynamics* — exactly what the
+//! paper's model-validation experiments measure against their testbed.
+//!
+//! Virtual-clock simulation: a 900 s Fig.-8 timeline runs in milliseconds.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::analytic::{Config, Tenant};
+use crate::metrics::{LatencyHistogram, TimeSeries, Welford};
+use crate::tpu::{CostModel, SramCache};
+use crate::util::rng::Rng;
+use crate::workload::{generate_arrivals, RateSchedule};
+
+mod events;
+pub mod reconfig;
+
+pub use events::{Event, EventKind};
+pub use reconfig::ReconfigPolicy;
+
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    pub horizon: f64,
+    /// Discard samples completing before this time (cold-start transient).
+    pub warmup: f64,
+    pub seed: u64,
+    /// Track a latency timeline with this window (None = off). Fig. 8.
+    pub timeline_window: Option<f64>,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            horizon: 600.0,
+            warmup: 30.0,
+            seed: 1,
+            timeline_window: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub name: String,
+    pub completed: u64,
+    pub latency: LatencyHistogram,
+    pub tpu_share: Welford,
+}
+
+#[derive(Debug)]
+pub struct SimResult {
+    pub per_model: Vec<ModelStats>,
+    /// Request-weighted mean latency across models (the Fig. 7 metric).
+    pub mean_latency: f64,
+    /// Measured TPU busy fraction over the horizon.
+    pub tpu_utilization: f64,
+    /// SRAM cache hit rate over TPU executions.
+    pub cache_hit_rate: f64,
+    /// Mean-latency timeline (if requested).
+    pub timeline: Option<TimeSeries>,
+    /// Reconfiguration decisions taken (time, new config, decision µs).
+    pub reconfigs: Vec<(f64, Config, f64)>,
+}
+
+impl SimResult {
+    pub fn model_mean(&self, i: usize) -> f64 {
+        self.per_model[i].latency.mean()
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub model: usize,
+    pub arrived: f64,
+}
+
+/// Per-model service-time memo for the current configuration — the DES
+/// hot loop touches these on every execution, and they are pure functions
+/// of (model, p), so they are precomputed here and rebuilt on reconfig
+/// (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Default)]
+struct ServiceMemo {
+    resident_bytes: u64,
+    tpu_service: f64,
+    load_time: f64,
+    cpu_service: f64,
+    input_transfer: f64,
+    output_transfer: f64,
+}
+
+/// In-flight simulator state for one run.
+pub struct Simulator<'a> {
+    cost: &'a CostModel,
+    tenants: &'a [Tenant],
+    cfg: Config,
+    memo: Vec<ServiceMemo>,
+    cache: SramCache,
+    // TPU station
+    tpu_queue: VecDeque<Request>,
+    tpu_busy: bool,
+    tpu_busy_until: f64,
+    tpu_busy_time: f64,
+    // per-model CPU stations
+    cpu_queues: Vec<VecDeque<Request>>,
+    cpu_busy: Vec<usize>,
+    heap: BinaryHeap<Event>,
+    // stats
+    stats: Vec<ModelStats>,
+    weighted_latency: Welford,
+    timeline: Option<TimeSeries>,
+    opts: SimOptions,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(
+        cost: &'a CostModel,
+        tenants: &'a [Tenant],
+        cfg: Config,
+        opts: SimOptions,
+    ) -> Simulator<'a> {
+        let n = tenants.len();
+        let memo = build_memo(cost, tenants, &cfg);
+        Simulator {
+            cost,
+            tenants,
+            cfg,
+            memo,
+            cache: SramCache::new(cost.hw.sram_bytes),
+            tpu_queue: VecDeque::new(),
+            tpu_busy: false,
+            tpu_busy_until: 0.0,
+            tpu_busy_time: 0.0,
+            cpu_queues: (0..n).map(|_| VecDeque::new()).collect(),
+            cpu_busy: vec![0; n],
+            heap: BinaryHeap::new(),
+            stats: tenants
+                .iter()
+                .map(|t| ModelStats {
+                    name: t.model.name.clone(),
+                    completed: 0,
+                    latency: LatencyHistogram::default(),
+                    tpu_share: Welford::new(),
+                })
+                .collect(),
+            weighted_latency: Welford::new(),
+            timeline: opts.timeline_window.map(TimeSeries::new),
+            opts,
+        }
+    }
+
+    /// Swap in a new configuration (online reconfiguration). Queued and
+    /// in-flight requests finish under their admission-time partition; the
+    /// cache entries of re-partitioned models are invalidated (their
+    /// resident sets changed).
+    pub fn set_config(&mut self, cfg: Config) {
+        for i in 0..self.tenants.len() {
+            if cfg.partitions[i] != self.cfg.partitions[i] {
+                self.cache.invalidate(i);
+            }
+        }
+        self.memo = build_memo(self.cost, self.tenants, &cfg);
+        self.cfg = cfg;
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    fn record_completion(&mut self, req: &Request, now: f64) {
+        if now < self.opts.warmup {
+            return;
+        }
+        let latency = now - req.arrived;
+        self.stats[req.model].completed += 1;
+        self.stats[req.model].latency.record(latency);
+        self.weighted_latency.add(latency);
+        if let Some(ts) = &mut self.timeline {
+            ts.record(now, latency);
+        }
+    }
+
+    fn start_tpu_if_idle(&mut self, now: f64) {
+        if self.tpu_busy {
+            return;
+        }
+        let Some(req) = self.tpu_queue.pop_front() else {
+            return;
+        };
+        let p = self.cfg.partitions[req.model];
+        // Admission under a p=0 config (post-reconfig): route to CPU.
+        if p == 0 {
+            self.enqueue_cpu(req, now);
+            self.start_tpu_if_idle(now);
+            return;
+        }
+        let memo = &self.memo[req.model];
+        let hit = self.cache.access(req.model, memo.resident_bytes);
+        let mut service = memo.tpu_service;
+        if !hit {
+            service += memo.load_time;
+        }
+        self.tpu_busy = true;
+        self.tpu_busy_until = now + service;
+        self.tpu_busy_time += service;
+        self.heap.push(Event::at(
+            now + service,
+            EventKind::TpuDone { req },
+        ));
+    }
+
+    fn enqueue_cpu(&mut self, req: Request, now: f64) {
+        let m = req.model;
+        self.cpu_queues[m].push_back(req);
+        self.start_cpu_if_possible(m, now);
+    }
+
+    fn start_cpu_if_possible(&mut self, m: usize, now: f64) {
+        let k = self.cfg.cores[m];
+        // k can legitimately be 0 right after a reconfig to full-TPU while
+        // stragglers drain; serve them on a borrowed core rather than
+        // deadlock (counts as best-effort cleanup, negligible in steady state).
+        let k_eff = k.max(if self.cpu_queues[m].is_empty() { 0 } else { 1 });
+        while self.cpu_busy[m] < k_eff {
+            let Some(req) = self.cpu_queues[m].pop_front() else {
+                return;
+            };
+            let service = self.memo[m].cpu_service;
+            self.cpu_busy[m] += 1;
+            self.heap.push(Event::at(
+                now + service,
+                EventKind::CpuDone { req },
+            ));
+        }
+    }
+
+    /// Run to completion over pre-generated arrivals, with an optional
+    /// reconfiguration policy invoked on a fixed period.
+    pub fn run(
+        &mut self,
+        arrivals: &[crate::workload::Arrival],
+        mut policy: Option<&mut dyn ReconfigPolicy>,
+    ) -> SimResult {
+        for a in arrivals {
+            self.heap.push(Event::at(
+                a.time,
+                EventKind::Arrival {
+                    req: Request {
+                        model: a.model,
+                        arrived: a.time,
+                    },
+                },
+            ));
+        }
+        if let Some(p) = policy.as_deref_mut() {
+            let first = p.period();
+            self.heap
+                .push(Event::at(first, EventKind::Reconfigure));
+        }
+        let mut reconfigs: Vec<(f64, Config, f64)> = Vec::new();
+
+        while let Some(ev) = self.heap.pop() {
+            let now = ev.time;
+            if now > self.opts.horizon {
+                break;
+            }
+            match ev.kind {
+                EventKind::Arrival { req } => {
+                    if let Some(p) = policy.as_deref_mut() {
+                        p.observe_arrival(now, req.model);
+                    }
+                    let part = self.cfg.partitions[req.model];
+                    if part > 0 {
+                        // d_in/B transfer precedes TPU queueing.
+                        let delay = self.memo[req.model].input_transfer;
+                        self.heap.push(Event::at(
+                            now + delay,
+                            EventKind::TpuEnqueue { req },
+                        ));
+                    } else {
+                        self.enqueue_cpu(req, now);
+                    }
+                }
+                EventKind::TpuEnqueue { req } => {
+                    self.tpu_queue.push_back(req);
+                    self.start_tpu_if_idle(now);
+                }
+                EventKind::TpuDone { req } => {
+                    self.tpu_busy = false;
+                    let p = self.cfg.partitions[req.model];
+                    let model = &self.tenants[req.model].model;
+                    let d_out = self.memo[req.model].output_transfer;
+                    if p >= model.partition_points {
+                        // full-TPU: output returns to host, request done
+                        self.heap.push(Event::at(
+                            now + d_out,
+                            EventKind::Complete { req },
+                        ));
+                    } else {
+                        self.heap.push(Event::at(
+                            now + d_out,
+                            EventKind::CpuEnqueue { req },
+                        ));
+                    }
+                    self.start_tpu_if_idle(now);
+                }
+                EventKind::CpuEnqueue { req } => {
+                    self.enqueue_cpu(req, now);
+                }
+                EventKind::CpuDone { req } => {
+                    self.cpu_busy[req.model] -= 1;
+                    self.record_completion(&req, now);
+                    self.start_cpu_if_possible(req.model, now);
+                }
+                EventKind::Complete { req } => {
+                    self.record_completion(&req, now);
+                }
+                EventKind::Reconfigure => {
+                    if let Some(p) = policy.as_deref_mut() {
+                        let t0 = std::time::Instant::now();
+                        if let Some(cfg) = p.decide(now, self.tenants, &self.cfg) {
+                            let micros = t0.elapsed().as_secs_f64() * 1e6;
+                            reconfigs.push((now, cfg.clone(), micros));
+                            self.set_config(cfg);
+                        }
+                        let next = now + p.period();
+                        if next <= self.opts.horizon {
+                            self.heap.push(Event::at(next, EventKind::Reconfigure));
+                        }
+                    }
+                }
+            }
+        }
+
+        let measured = self.opts.horizon.max(1e-9);
+        SimResult {
+            per_model: self.stats.clone(),
+            mean_latency: self.weighted_latency.mean(),
+            tpu_utilization: self.tpu_busy_time / measured,
+            cache_hit_rate: self.cache.hit_rate(),
+            timeline: self.timeline.take(),
+            reconfigs,
+        }
+    }
+}
+
+fn build_memo(cost: &CostModel, tenants: &[Tenant], cfg: &Config) -> Vec<ServiceMemo> {
+    tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let p = cfg.partitions[i];
+            ServiceMemo {
+                resident_bytes: cost.resident_bytes(&t.model, p),
+                tpu_service: cost.tpu_service(&t.model, p),
+                load_time: cost.load_time(&t.model, p),
+                cpu_service: cost.cpu_service(&t.model, p),
+                input_transfer: cost.input_transfer(&t.model),
+                output_transfer: cost.output_transfer(&t.model, p),
+            }
+        })
+        .collect()
+}
+
+/// One-call steady-state run under a static configuration.
+pub fn simulate(
+    cost: &CostModel,
+    tenants: &[Tenant],
+    cfg: &Config,
+    opts: SimOptions,
+) -> SimResult {
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+    let mut rng = Rng::new(opts.seed);
+    let arrivals = generate_arrivals(&schedules, opts.horizon, &mut rng);
+    let mut sim = Simulator::new(cost, tenants, cfg.clone(), opts);
+    sim.run(&arrivals, None)
+}
+
+/// Run with per-model rate schedules and a reconfiguration policy (Fig. 8).
+pub fn simulate_dynamic(
+    cost: &CostModel,
+    tenants: &[Tenant],
+    initial: &Config,
+    schedules: &[RateSchedule],
+    policy: &mut dyn ReconfigPolicy,
+    opts: SimOptions,
+) -> SimResult {
+    let mut rng = Rng::new(opts.seed);
+    let arrivals = generate_arrivals(schedules, opts.horizon, &mut rng);
+    let mut sim = Simulator::new(cost, tenants, initial.clone(), opts);
+    sim.run(&arrivals, Some(policy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::AnalyticModel;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+
+    fn setup(rate: f64) -> (CostModel, Vec<Tenant>) {
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants = vec![Tenant {
+            model: synthetic_model("m", 6, 1_000_000, 500_000_000),
+            rate,
+        }];
+        (cost, tenants)
+    }
+
+    fn opts(horizon: f64, seed: u64) -> SimOptions {
+        SimOptions {
+            horizon,
+            warmup: horizon * 0.05,
+            seed,
+            timeline_window: None,
+        }
+    }
+
+    #[test]
+    fn all_tpu_single_tenant_matches_analytic() {
+        // DES vs M/D/1: mean latency should agree within Monte-Carlo noise.
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let am = AnalyticModel::new(cost.clone());
+        let predicted = am.e2e_latency(&tenants, &cfg, 0);
+        let res = simulate(&cost, &tenants, &cfg, opts(3000.0, 7));
+        let observed = res.mean_latency;
+        let err = (observed - predicted).abs() / predicted;
+        assert!(
+            err < 0.05,
+            "observed={observed} predicted={predicted} err={err}"
+        );
+    }
+
+    #[test]
+    fn all_cpu_single_tenant_matches_analytic() {
+        let (cost, tenants) = setup(2.0);
+        let cfg = Config {
+            partitions: vec![0],
+            cores: vec![2],
+        };
+        let am = AnalyticModel::new(cost.clone());
+        let predicted = am.e2e_latency(&tenants, &cfg, 0);
+        let res = simulate(&cost, &tenants, &cfg, opts(3000.0, 11));
+        let err = (res.mean_latency - predicted).abs() / predicted;
+        assert!(err < 0.05, "err={err}");
+    }
+
+    #[test]
+    fn split_config_uses_both_processors() {
+        let (cost, tenants) = setup(2.0);
+        let cfg = Config {
+            partitions: vec![3],
+            cores: vec![2],
+        };
+        let res = simulate(&cost, &tenants, &cfg, opts(500.0, 3));
+        assert!(res.tpu_utilization > 0.0);
+        assert!(res.per_model[0].completed > 500);
+        assert!(res.mean_latency.is_finite());
+    }
+
+    #[test]
+    fn single_tenant_no_misses_after_warmup() {
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let res = simulate(&cost, &tenants, &cfg, opts(500.0, 5));
+        // one cold miss over thousands of executions
+        assert!(res.cache_hit_rate > 0.999, "hit={}", res.cache_hit_rate);
+    }
+
+    #[test]
+    fn interleaved_oversized_models_miss_often() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants: Vec<Tenant> = (0..2)
+            .map(|i| Tenant {
+                model: synthetic_model(&format!("m{i}"), 6, 1_200_000, 300_000_000),
+                rate: 2.0,
+            })
+            .collect();
+        // prefixes 7.2 MB each: together 14.4 MB > 8 MB
+        let cfg = Config {
+            partitions: vec![6, 6],
+            cores: vec![0, 0],
+        };
+        let res = simulate(&cost, &tenants, &cfg, opts(1000.0, 13));
+        // 50:50 mix: analytic α = 0.5 each; hit rate should be near 0.5
+        assert!(
+            (res.cache_hit_rate - 0.5).abs() < 0.05,
+            "hit={}",
+            res.cache_hit_rate
+        );
+    }
+
+    #[test]
+    fn higher_load_higher_latency() {
+        let (cost, tenants_lo) = setup(1.0);
+        let (_, tenants_hi) = setup(5.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let lo = simulate(&cost, &tenants_lo, &cfg, opts(1000.0, 17)).mean_latency;
+        let hi = simulate(&cost, &tenants_hi, &cfg, opts(1000.0, 17)).mean_latency;
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn measured_utilization_tracks_analytic() {
+        let (cost, tenants) = setup(4.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let am = AnalyticModel::new(cost.clone());
+        let rho = am.tpu_utilization(&tenants, &cfg);
+        let res = simulate(&cost, &tenants, &cfg, opts(2000.0, 19));
+        assert!((res.tpu_utilization - rho).abs() < 0.03);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![4],
+            cores: vec![1],
+        };
+        let a = simulate(&cost, &tenants, &cfg, opts(300.0, 23)).mean_latency;
+        let b = simulate(&cost, &tenants, &cfg, opts(300.0, 23)).mean_latency;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn timeline_collects_windows() {
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let mut o = opts(200.0, 29);
+        o.timeline_window = Some(10.0);
+        let res = simulate(&cost, &tenants, &cfg, o);
+        let series = res.timeline.unwrap().series();
+        assert!(series.len() >= 15);
+    }
+}

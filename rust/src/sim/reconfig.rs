@@ -1,0 +1,237 @@
+//! Online reconfiguration policies for dynamic workloads (Section IV +
+//! Fig. 8): a sliding-window rate monitor feeding the resource allocator.
+
+use std::collections::VecDeque;
+
+use crate::alloc;
+use crate::analytic::{AnalyticModel, Config, Tenant};
+
+/// Periodic decision hook the DES (and the live coordinator) invokes.
+pub trait ReconfigPolicy {
+    /// Seconds between `decide` invocations.
+    fn period(&self) -> f64;
+    /// Called on every arrival (the rate-monitor feed).
+    fn observe_arrival(&mut self, t: f64, model: usize);
+    /// Return `Some(new_config)` to reconfigure, `None` to keep current.
+    fn decide(&mut self, t: f64, tenants: &[Tenant], current: &Config) -> Option<Config>;
+}
+
+/// Sliding-window per-model arrival-rate estimator.
+#[derive(Debug, Clone)]
+pub struct RateMonitor {
+    window: f64,
+    events: VecDeque<(f64, usize)>,
+    n_models: usize,
+}
+
+impl RateMonitor {
+    pub fn new(window: f64, n_models: usize) -> RateMonitor {
+        assert!(window > 0.0);
+        RateMonitor {
+            window,
+            events: VecDeque::new(),
+            n_models,
+        }
+    }
+
+    pub fn observe(&mut self, t: f64, model: usize) {
+        self.events.push_back((t, model));
+        self.evict(t);
+    }
+
+    fn evict(&mut self, now: f64) {
+        while let Some((t, _)) = self.events.front() {
+            if now - t > self.window {
+                self.events.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Estimated per-model rates at time `now` (events / effective window).
+    pub fn rates(&mut self, now: f64) -> Vec<f64> {
+        self.evict(now);
+        let mut counts = vec![0usize; self.n_models];
+        for (_, m) in &self.events {
+            counts[*m] += 1;
+        }
+        // Early in the run the window isn't full yet.
+        let effective = self.window.min(now.max(1e-9));
+        counts
+            .iter()
+            .map(|c| *c as f64 / effective)
+            .collect()
+    }
+}
+
+/// The SwapLess online policy: estimate rates over a sliding window, run
+/// the hill-climbing allocator, and reconfigure when the predicted config
+/// changes. Decision wall-clock times are recorded (the paper reports
+/// < 2 ms per invocation).
+pub struct SwapLessPolicy {
+    pub am: AnalyticModel,
+    pub k_max: usize,
+    pub monitor: RateMonitor,
+    period: f64,
+    /// Relative rate change below which we skip re-planning.
+    threshold: f64,
+    last_rates: Vec<f64>,
+    pub decision_micros: Vec<f64>,
+}
+
+impl SwapLessPolicy {
+    pub fn new(
+        am: AnalyticModel,
+        k_max: usize,
+        n_models: usize,
+        window: f64,
+        period: f64,
+        threshold: f64,
+    ) -> SwapLessPolicy {
+        SwapLessPolicy {
+            am,
+            k_max,
+            monitor: RateMonitor::new(window, n_models),
+            period,
+            threshold,
+            last_rates: vec![0.0; n_models],
+            decision_micros: Vec::new(),
+        }
+    }
+
+    fn rates_changed(&self, rates: &[f64]) -> bool {
+        for (new, old) in rates.iter().zip(&self.last_rates) {
+            let base = old.abs().max(0.1);
+            if (new - old).abs() / base > self.threshold {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+impl ReconfigPolicy for SwapLessPolicy {
+    fn period(&self) -> f64 {
+        self.period
+    }
+
+    fn observe_arrival(&mut self, t: f64, model: usize) {
+        self.monitor.observe(t, model);
+    }
+
+    fn decide(&mut self, t: f64, tenants: &[Tenant], current: &Config) -> Option<Config> {
+        let rates = self.monitor.rates(t);
+        if !self.rates_changed(&rates) {
+            return None;
+        }
+        let t0 = std::time::Instant::now();
+        let estimated: Vec<Tenant> = tenants
+            .iter()
+            .zip(&rates)
+            .map(|(tn, r)| Tenant {
+                model: tn.model.clone(),
+                rate: *r,
+            })
+            .collect();
+        let alloc = alloc::hill_climb(&self.am, &estimated, self.k_max);
+        self.decision_micros
+            .push(t0.elapsed().as_secs_f64() * 1e6);
+        self.last_rates = rates;
+        if &alloc.config != current {
+            Some(alloc.config)
+        } else {
+            None
+        }
+    }
+}
+
+/// A policy that never reconfigures (static baselines in Fig. 8).
+pub struct StaticPolicy;
+
+impl ReconfigPolicy for StaticPolicy {
+    fn period(&self) -> f64 {
+        f64::MAX / 4.0
+    }
+
+    fn observe_arrival(&mut self, _t: f64, _model: usize) {}
+
+    fn decide(&mut self, _t: f64, _tenants: &[Tenant], _c: &Config) -> Option<Config> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+    use crate::tpu::CostModel;
+
+    #[test]
+    fn rate_monitor_estimates_rate() {
+        let mut m = RateMonitor::new(10.0, 2);
+        // model 0 at 5 rps, model 1 at 1 rps for 20 seconds, observed in
+        // chronological order (the monitor assumes a monotone clock).
+        let mut t = 0.0f64;
+        while t < 20.0 {
+            m.observe(t, 0);
+            if (t / 0.2).round() as u64 % 5 == 0 {
+                m.observe(t, 1);
+            }
+            t += 0.2;
+        }
+        let rates = m.rates(20.0);
+        assert!((rates[0] - 5.0).abs() < 0.5, "r0={}", rates[0]);
+        assert!((rates[1] - 1.0).abs() < 0.3, "r1={}", rates[1]);
+    }
+
+    #[test]
+    fn rate_monitor_forgets_old_events() {
+        let mut m = RateMonitor::new(5.0, 1);
+        for i in 0..50 {
+            m.observe(i as f64 * 0.1, 0); // 10 rps for 5s
+        }
+        // silence until t=100
+        let rates = m.rates(100.0);
+        assert_eq!(rates[0], 0.0);
+    }
+
+    #[test]
+    fn swapless_policy_reconfigures_on_rate_change() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let am = AnalyticModel::new(cost);
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("a", 6, 2_000_000, 800_000_000),
+                rate: 0.0,
+            },
+            Tenant {
+                model: synthetic_model("b", 6, 2_000_000, 800_000_000),
+                rate: 0.0,
+            },
+        ];
+        let mut pol = SwapLessPolicy::new(am, 4, 2, 10.0, 5.0, 0.05);
+        // feed 3 rps of model a only
+        let mut t = 0.0;
+        while t < 10.0 {
+            pol.observe_arrival(t, 0);
+            t += 1.0 / 3.0;
+        }
+        let current = Config::all_cpu(2);
+        let decision = pol.decide(10.0, &tenants, &current);
+        assert!(decision.is_some(), "should reconfigure from cold state");
+        assert!(!pol.decision_micros.is_empty());
+        // Second decide with unchanged rates: no re-plan.
+        let cfg = decision.unwrap();
+        let again = pol.decide(10.1, &tenants, &cfg);
+        assert!(again.is_none());
+    }
+
+    #[test]
+    fn static_policy_never_changes() {
+        let mut p = StaticPolicy;
+        let tenants: Vec<Tenant> = vec![];
+        assert!(p.decide(1.0, &tenants, &Config::all_cpu(0)).is_none());
+    }
+}

@@ -1,0 +1,208 @@
+//! SRAM weight cache: the shared-occupancy behaviour behind inter-model
+//! swapping (Fig. 2) and the weight-miss probability α (Eq. 10).
+//!
+//! The real Edge TPU's eviction policy is proprietary; the paper
+//! conservatively assumes any intervening request for a different model
+//! evicts yours. This cache implements LRU over per-model resident sets,
+//! which realizes exactly that behaviour whenever the aggregate footprint
+//! exceeds capacity and requests interleave — and keeps everything
+//! resident when the mix fits (the α = 0 regime).
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    bytes: u64,
+    last_use: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SramCache {
+    capacity: u64,
+    used: u64,
+    clock: u64,
+    entries: HashMap<usize, Entry>,
+    hits: u64,
+    misses: u64,
+}
+
+impl SramCache {
+    pub fn new(capacity: u64) -> SramCache {
+        SramCache {
+            capacity,
+            used: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Execute model `id` with a resident weight set of `bytes`.
+    /// Returns `true` on a hit (weights already resident), `false` on a
+    /// miss (the caller pays `T_load`). Either way the model ends resident,
+    /// evicting least-recently-used peers as needed.
+    pub fn access(&mut self, id: usize, bytes: u64) -> bool {
+        assert!(
+            bytes <= self.capacity,
+            "resident set {bytes} exceeds SRAM capacity {}",
+            self.capacity
+        );
+        self.clock += 1;
+        if bytes == 0 {
+            // No TPU prefix — does not touch the cache.
+            return true;
+        }
+        if let Some(e) = self.entries.get_mut(&id) {
+            if e.bytes == bytes {
+                e.last_use = self.clock;
+                self.hits += 1;
+                return true;
+            }
+            // Partition point changed — resident set must be rebuilt.
+            self.used -= e.bytes;
+            self.entries.remove(&id);
+        }
+        self.misses += 1;
+        // Evict LRU entries until the new set fits.
+        while self.used + bytes > self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(k, _)| *k)
+                .expect("over capacity with no entries");
+            let e = self.entries.remove(&lru).unwrap();
+            self.used -= e.bytes;
+        }
+        self.used += bytes;
+        self.entries.insert(
+            id,
+            Entry {
+                bytes,
+                last_use: self.clock,
+            },
+        );
+        false
+    }
+
+    /// Drop a model's weights (model removed / partition reconfigured).
+    pub fn invalidate(&mut self, id: usize) {
+        if let Some(e) = self.entries.remove(&id) {
+            self.used -= e.bytes;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.used = 0;
+    }
+
+    pub fn resident(&self, id: usize) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return f64::NAN;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn counts(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_together_all_hits_after_warmup() {
+        let mut c = SramCache::new(100);
+        assert!(!c.access(1, 40)); // cold
+        assert!(!c.access(2, 50)); // cold
+        for _ in 0..10 {
+            assert!(c.access(1, 40));
+            assert!(c.access(2, 50));
+        }
+        assert_eq!(c.counts(), (20, 2));
+    }
+
+    #[test]
+    fn over_capacity_interleaving_always_misses() {
+        let mut c = SramCache::new(100);
+        c.access(1, 80);
+        c.access(2, 80);
+        // 1 was evicted by 2; 2 will be evicted by 1; etc.
+        for _ in 0..5 {
+            assert!(!c.access(1, 80));
+            assert!(!c.access(2, 80));
+        }
+    }
+
+    #[test]
+    fn single_tenant_over_capacity_stays_resident() {
+        // Mirrors the paper's single-tenant observation: the resident set
+        // (≤ C) persists across inferences of the same model.
+        let mut c = SramCache::new(100);
+        assert!(!c.access(1, 100));
+        for _ in 0..10 {
+            assert!(c.access(1, 100));
+        }
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = SramCache::new(100);
+        c.access(1, 40);
+        c.access(2, 40);
+        c.access(1, 40); // 2 is now LRU
+        c.access(3, 40); // evicts 2
+        assert!(c.resident(1));
+        assert!(!c.resident(2));
+        assert!(c.resident(3));
+    }
+
+    #[test]
+    fn partition_change_invalidates() {
+        let mut c = SramCache::new(100);
+        c.access(1, 40);
+        assert!(!c.access(1, 60)); // resident set size changed -> rebuild
+        assert!(c.access(1, 60));
+        assert_eq!(c.used_bytes(), 60);
+    }
+
+    #[test]
+    fn zero_byte_access_is_noop_hit() {
+        let mut c = SramCache::new(100);
+        assert!(c.access(7, 0));
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn invalidate_frees_space() {
+        let mut c = SramCache::new(100);
+        c.access(1, 100);
+        c.invalidate(1);
+        assert_eq!(c.used_bytes(), 0);
+        assert!(!c.resident(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_resident_set_panics() {
+        let mut c = SramCache::new(100);
+        c.access(1, 101);
+    }
+}

@@ -1,0 +1,217 @@
+//! Edge-TPU device model: service-time cost model + SRAM weight cache.
+//!
+//! The paper's testbed phenomena (DESIGN.md §3) are functions of segment
+//! metadata, reproduced here:
+//!
+//! * **Compute**: a segment's TPU time is its (paper-scale) FLOPs divided
+//!   by the throughput the segment can extract from the systolic array.
+//!   The TPU/CPU speedup of a segment follows the Fig. 3 shape: segments
+//!   whose Pallas tiling fills the MXU get `tpu_speedup_max` over one CPU
+//!   core; array-starved (late / depthwise / dense) segments decay toward
+//!   `tpu_speedup_min` (≈ parity — the collaborative opportunity).
+//! * **Intra-model swapping** (Fig. 1): a prefix larger than SRAM streams
+//!   its excess weights from host memory on *every* inference.
+//! * **Inter-model swapping** (Fig. 2): an LRU-approximated SRAM cache;
+//!   a miss reloads the prefix's resident set over the bus (`T_load`).
+
+pub mod cache;
+
+pub use cache::SramCache;
+
+use crate::config::HardwareSpec;
+use crate::model::{ModelMeta, SegmentMeta};
+
+/// Deterministic service-time model shared by the analytic queueing model,
+/// the discrete-event simulator, and the online coordinator.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub hw: HardwareSpec,
+}
+
+impl CostModel {
+    pub fn new(hw: HardwareSpec) -> CostModel {
+        CostModel { hw }
+    }
+
+    /// TPU-over-1-CPU-core speedup of one segment (Fig. 3 shape).
+    ///
+    /// The global `mxu_util_anchor` maps the Pallas kernels' array-fill
+    /// estimates to speedups: segments at/above the anchor earn the full
+    /// `tpu_speedup_max`; array-starved segments (late layers, depthwise,
+    /// DenseNet-style small convs) decay toward `tpu_speedup_min`
+    /// (DESIGN.md §3).
+    pub fn segment_speedup(&self, model: &ModelMeta, seg: &SegmentMeta) -> f64 {
+        let _ = model;
+        let rel = seg.mxu_util / self.hw.mxu_util_anchor;
+        (self.hw.tpu_speedup_max * rel).clamp(self.hw.tpu_speedup_min, self.hw.tpu_speedup_max)
+    }
+
+    /// One CPU core's time for a segment (no dispatch overhead).
+    pub fn cpu_segment_time(&self, seg: &SegmentMeta) -> f64 {
+        seg.sim_flops as f64 / self.hw.cpu_core_flops
+    }
+
+    /// TPU compute time for a segment (no dispatch, no swap).
+    pub fn tpu_segment_time(&self, model: &ModelMeta, seg: &SegmentMeta) -> f64 {
+        self.cpu_segment_time(seg) / self.segment_speedup(model, seg)
+    }
+
+    /// Pure compute time of the TPU prefix `[1:p]`, excluding dispatch/swap.
+    pub fn tpu_prefix_compute(&self, model: &ModelMeta, p: usize) -> f64 {
+        model.segments[..p]
+            .iter()
+            .map(|s| self.tpu_segment_time(model, s))
+            .sum()
+    }
+
+    /// Per-inference intra-model swap time: the prefix bytes beyond SRAM
+    /// capacity stream from host memory every execution (Fig. 1).
+    pub fn intra_swap_time(&self, model: &ModelMeta, p: usize) -> f64 {
+        let excess = model
+            .prefix_weight_bytes(p)
+            .saturating_sub(self.hw.sram_bytes);
+        excess as f64 / self.hw.bus_bytes_per_sec
+    }
+
+    /// SRAM bytes the prefix keeps resident (the cacheable set).
+    pub fn resident_bytes(&self, model: &ModelMeta, p: usize) -> u64 {
+        model.prefix_weight_bytes(p).min(self.hw.sram_bytes)
+    }
+
+    /// `T_load` — inter-model swap latency: reload the prefix's resident
+    /// weight set after eviction (Eq. 4 / Table I).
+    pub fn load_time(&self, model: &ModelMeta, p: usize) -> f64 {
+        self.resident_bytes(model, p) as f64 / self.hw.bus_bytes_per_sec
+    }
+
+    /// `s^TPU` — deterministic TPU service time of the prefix, including
+    /// dispatch and intra-model swapping (but NOT the α·T_load reload,
+    /// which is a per-request Bernoulli handled by the queueing model).
+    pub fn tpu_service(&self, model: &ModelMeta, p: usize) -> f64 {
+        if p == 0 {
+            return 0.0;
+        }
+        self.hw.tpu_dispatch_s
+            + self.tpu_prefix_compute(model, p)
+            + self.intra_swap_time(model, p)
+    }
+
+    /// `s^CPU` — deterministic per-request CPU service time of the suffix
+    /// `[p+1:P]`. One request executes single-threaded on one of the
+    /// model's `k_i` dedicated cores; the cores act as the `k` parallel
+    /// servers of the paper's M/D/k model (Eq. 3), so per-request service
+    /// time does not depend on `k`.
+    pub fn cpu_service(&self, model: &ModelMeta, p: usize) -> f64 {
+        if p >= model.partition_points {
+            return 0.0;
+        }
+        let t1: f64 = model.segments[p..]
+            .iter()
+            .map(|s| self.cpu_segment_time(s))
+            .sum();
+        self.hw.cpu_dispatch_s + t1
+    }
+
+    /// `d_in / B` — host→TPU input transfer (only when a prefix exists).
+    pub fn input_transfer(&self, model: &ModelMeta) -> f64 {
+        model.input_bytes() as f64 / self.hw.bus_bytes_per_sec
+    }
+
+    /// `d_out / B` — TPU→host transfer of the boundary tensor at p.
+    pub fn output_transfer(&self, model: &ModelMeta, p: usize) -> f64 {
+        model.boundary_bytes(p) as f64 / self.hw.bus_bytes_per_sec
+    }
+
+    /// Fraction of a full-TPU execution spent swapping (the Fig. 1 metric).
+    pub fn intra_swap_fraction(&self, model: &ModelMeta) -> f64 {
+        let p = model.partition_points;
+        let swap = self.intra_swap_time(model, p);
+        let total = self.tpu_service(model, p);
+        if total == 0.0 {
+            0.0
+        } else {
+            swap / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic_model;
+
+    fn cm() -> CostModel {
+        CostModel::new(HardwareSpec::default())
+    }
+
+    #[test]
+    fn speedup_respects_bounds_and_shape() {
+        let m = synthetic_model("m", 6, 1_000_000, 500_000_000);
+        let cm = cm();
+        let first = cm.segment_speedup(&m, &m.segments[0]);
+        let last = cm.segment_speedup(&m, &m.segments[5]);
+        assert!(first > last, "early segments must be faster on TPU");
+        assert!(first <= cm.hw.tpu_speedup_max + 1e-12);
+        assert!(last >= cm.hw.tpu_speedup_min - 1e-12);
+        // best segment of the model gets the max speedup (normalization)
+        assert!((first - cm.hw.tpu_speedup_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_model_no_intra_swap() {
+        let m = synthetic_model("small", 4, 1_000_000, 100_000_000); // 4 MB < 8 MB
+        assert_eq!(cm().intra_swap_time(&m, 4), 0.0);
+        assert_eq!(cm().intra_swap_fraction(&m), 0.0);
+    }
+
+    #[test]
+    fn big_model_intra_swap_positive_and_monotone() {
+        let m = synthetic_model("big", 8, 5_000_000, 1_000_000_000); // 40 MB
+        let cm = cm();
+        assert_eq!(cm.intra_swap_time(&m, 1), 0.0); // 5 MB fits
+        let s4 = cm.intra_swap_time(&m, 4); // 20 MB -> 12 MB excess
+        let s8 = cm.intra_swap_time(&m, 8); // 40 MB -> 32 MB excess
+        assert!(s4 > 0.0 && s8 > s4);
+        let expected = (40_000_000u64 - 8 * 1024 * 1024) as f64 / cm.hw.bus_bytes_per_sec;
+        assert!((s8 - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_time_caps_at_sram() {
+        let m = synthetic_model("big", 8, 5_000_000, 1_000_000_000);
+        let cm = cm();
+        let full = cm.load_time(&m, 8);
+        let cap = cm.hw.sram_bytes as f64 / cm.hw.bus_bytes_per_sec;
+        assert!((full - cap).abs() < 1e-9);
+        assert!(cm.load_time(&m, 1) < full);
+    }
+
+    #[test]
+    fn service_time_zero_cases() {
+        let m = synthetic_model("m", 4, 1_000_000, 100_000_000);
+        let cm = cm();
+        assert_eq!(cm.tpu_service(&m, 0), 0.0);
+        assert_eq!(cm.cpu_service(&m, 4), 0.0);
+    }
+
+    #[test]
+    fn cpu_service_shrinks_with_larger_prefix() {
+        let m = synthetic_model("m", 4, 1_000_000, 1_000_000_000);
+        let cm = cm();
+        let t0 = cm.cpu_service(&m, 0);
+        let t3 = cm.cpu_service(&m, 3);
+        assert!(t3 < t0);
+        let expect = 1_000_000_000.0 / cm.hw.cpu_core_flops + cm.hw.cpu_dispatch_s;
+        assert!((t3 - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig1_shape_swap_fraction_grows_with_model_size() {
+        let cm = cm();
+        let small = synthetic_model("s", 5, 1_400_000 / 5, 200_000_000);
+        let large = synthetic_model("l", 10, 4_320_000, 1_227_000_000); // 43.2 MB
+        assert_eq!(cm.intra_swap_fraction(&small), 0.0);
+        let f = cm.intra_swap_fraction(&large);
+        assert!(f > 0.2 && f < 0.9, "fraction={f}");
+    }
+}

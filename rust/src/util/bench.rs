@@ -1,0 +1,115 @@
+//! Criterion-less micro-benchmark harness (offline environment carries no
+//! criterion). Provides warmup, repeated timed runs, and robust statistics;
+//! `cargo bench` binaries use this to print one table per paper figure.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1_000.0
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1_000_000.0
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and ~`budget_ms` of wall
+/// clock, whichever is larger. The closure's return is black-boxed.
+pub fn bench<T, F: FnMut() -> T>(name: &str, min_iters: usize, budget_ms: u64, mut f: F) -> BenchStats {
+    // Warmup: 10% of budget.
+    let warm_until = Instant::now() + std::time::Duration::from_millis(budget_ms / 10 + 1);
+    while Instant::now() < warm_until {
+        black_box(f());
+    }
+
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let run_until = Instant::now() + std::time::Duration::from_millis(budget_ms);
+    while samples_ns.len() < min_iters || (Instant::now() < run_until && samples_ns.len() < 10_000_000) {
+        let t0 = Instant::now();
+        black_box(f());
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if samples_ns.len() >= min_iters && Instant::now() >= run_until {
+            break;
+        }
+    }
+
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: samples_ns[n / 2],
+        p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+        min_ns: samples_ns[0],
+    }
+}
+
+/// Prevent the optimizer from deleting the benchmarked computation.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "median", "p95"
+    );
+}
+
+pub fn print_row(s: &BenchStats) {
+    println!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        s.name,
+        s.iters,
+        fmt_ns(s.mean_ns),
+        fmt_ns(s.median_ns),
+        fmt_ns(s.p95_ns)
+    );
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop", 10, 5, || 1 + 1);
+        assert!(s.iters >= 10);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns * 1.001);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser (no `clap` in the offline environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Option names that take a value (everything else starting with `--` is a flag).
+pub fn parse(raw: &[String], value_opts: &[&str]) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < raw.len() {
+        let a = &raw[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                if !value_opts.contains(&k) {
+                    return Err(format!("option --{k} does not take a value"));
+                }
+                args.options.insert(k.to_string(), v.to_string());
+            } else if value_opts.contains(&stripped) {
+                i += 1;
+                let v = raw
+                    .get(i)
+                    .ok_or_else(|| format!("option --{stripped} needs a value"))?;
+                args.options.insert(stripped.to_string(), v.clone());
+            } else {
+                args.flags.push(stripped.to_string());
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| format!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn opt_list(&self, name: &str) -> Vec<String> {
+        match self.opt(name) {
+            None => Vec::new(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().to_string())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(
+            &s(&["figure", "7", "--rho", "0.5", "--seed=9", "--verbose"]),
+            &["rho", "seed"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["figure", "7"]);
+        assert_eq!(a.opt_f64("rho", 0.0).unwrap(), 0.5);
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 9);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&s(&["--rho"]), &["rho"]).is_err());
+    }
+
+    #[test]
+    fn unknown_value_option_errors() {
+        assert!(parse(&s(&["--bogus=1"]), &["rho"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&s(&["--rho", "abc"]), &["rho"]).unwrap();
+        assert!(a.opt_f64("rho", 0.0).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&s(&["--models", "a,b, c"]), &["models"]).unwrap();
+        assert_eq!(a.opt_list("models"), vec!["a", "b", "c"]);
+        assert!(a.opt_list("none").is_empty());
+    }
+}

@@ -1,0 +1,9 @@
+//! From-scratch substrates: JSON, CLI parsing, PRNG, bench harness.
+//!
+//! The offline build environment reaches only the `xla` crate's dependency
+//! closure, so SwapLess implements these itself (DESIGN.md §3).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

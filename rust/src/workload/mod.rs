@@ -1,0 +1,240 @@
+//! Workload generation: Poisson arrival streams, ρ-targeted rate solving,
+//! mix construction, and the time-varying traces of Fig. 8.
+
+pub mod trace;
+
+use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::util::rng::Rng;
+
+/// A request arrival: (time, model index).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub time: f64,
+    pub model: usize,
+}
+
+/// A piecewise-constant rate schedule for one model: (start_time, rate).
+/// Rates hold until the next breakpoint (Fig. 8 uses steps at 300 s/600 s).
+#[derive(Debug, Clone)]
+pub struct RateSchedule {
+    pub steps: Vec<(f64, f64)>,
+}
+
+impl RateSchedule {
+    pub fn constant(rate: f64) -> RateSchedule {
+        RateSchedule {
+            steps: vec![(0.0, rate)],
+        }
+    }
+
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut rate = 0.0;
+        for (start, r) in &self.steps {
+            if t >= *start {
+                rate = *r;
+            } else {
+                break;
+            }
+        }
+        rate
+    }
+}
+
+/// Generate a merged Poisson arrival stream for `schedules` over [0, horizon).
+///
+/// Uses thinning against each model's max rate, so rate steps are honored
+/// exactly (not just at event boundaries).
+pub fn generate_arrivals(
+    schedules: &[RateSchedule],
+    horizon: f64,
+    rng: &mut Rng,
+) -> Vec<Arrival> {
+    let mut all = Vec::new();
+    for (m, sched) in schedules.iter().enumerate() {
+        let max_rate = sched
+            .steps
+            .iter()
+            .map(|(_, r)| *r)
+            .fold(0.0f64, f64::max);
+        if max_rate <= 0.0 {
+            continue;
+        }
+        let mut t = 0.0;
+        let mut r = rng.fork(m as u64 + 1);
+        loop {
+            t += r.exponential(max_rate);
+            if t >= horizon {
+                break;
+            }
+            // thinning: accept with prob rate(t)/max_rate
+            if r.f64() < sched.rate_at(t) / max_rate {
+                all.push(Arrival { time: t, model: m });
+            }
+        }
+    }
+    all.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+    all
+}
+
+/// Solve for per-model rates that (a) hit a target TPU utilization ρ under
+/// configuration `cfg` and (b) split the load by `shares` (Fig. 6c/7's
+/// "each model's request rate is configured to generate an equal TPU load").
+///
+/// Shares are weights over models; returns `λ_i`.
+pub fn rates_for_utilization(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    cfg: &Config,
+    shares: &[f64],
+    rho_target: f64,
+) -> Vec<f64> {
+    assert_eq!(tenants.len(), shares.len());
+    assert!(rho_target > 0.0 && rho_target < 1.0);
+    // Utilization is linear in a global rate scale factor until α flips
+    // regimes; binary-search the scale (robust to the α discontinuity).
+    let base: Vec<f64> = shares.to_vec();
+    let util = |scale: f64| -> f64 {
+        let scaled: Vec<Tenant> = tenants
+            .iter()
+            .zip(&base)
+            .map(|(t, s)| Tenant {
+                model: t.model.clone(),
+                rate: s * scale,
+            })
+            .collect();
+        am.tpu_utilization(&scaled, cfg)
+    };
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    while util(hi) < rho_target && hi < 1e9 {
+        hi *= 2.0;
+    }
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if util(mid) < rho_target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    base.iter().map(|s| s * hi).collect()
+}
+
+/// Per-TPU-load-equalizing shares: each model contributes the same TPU busy
+/// time, i.e. share_i ∝ 1 / s^TPU_i(P_i) (full-TPU service).
+pub fn equal_tpu_load_shares(am: &AnalyticModel, tenants: &[Tenant]) -> Vec<f64> {
+    tenants
+        .iter()
+        .map(|t| {
+            let s = am
+                .cost
+                .tpu_service(&t.model, t.model.partition_points);
+            if s > 0.0 {
+                1.0 / s
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+    use crate::tpu::CostModel;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut rng = Rng::new(42);
+        let arr = generate_arrivals(&[RateSchedule::constant(5.0)], 2000.0, &mut rng);
+        let rate = arr.len() as f64 / 2000.0;
+        assert!((rate - 5.0).abs() < 0.2, "rate={rate}");
+        // sorted
+        for w in arr.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+    }
+
+    #[test]
+    fn rate_schedule_steps() {
+        let s = RateSchedule {
+            steps: vec![(0.0, 1.0), (300.0, 3.0), (600.0, 5.0)],
+        };
+        assert_eq!(s.rate_at(0.0), 1.0);
+        assert_eq!(s.rate_at(299.9), 1.0);
+        assert_eq!(s.rate_at(300.0), 3.0);
+        assert_eq!(s.rate_at(700.0), 5.0);
+    }
+
+    #[test]
+    fn stepped_schedule_changes_density() {
+        let mut rng = Rng::new(7);
+        let s = RateSchedule {
+            steps: vec![(0.0, 1.0), (500.0, 8.0)],
+        };
+        let arr = generate_arrivals(&[s], 1000.0, &mut rng);
+        let early = arr.iter().filter(|a| a.time < 500.0).count() as f64 / 500.0;
+        let late = arr.iter().filter(|a| a.time >= 500.0).count() as f64 / 500.0;
+        assert!((early - 1.0).abs() < 0.3, "early={early}");
+        assert!((late - 8.0).abs() < 1.0, "late={late}");
+    }
+
+    #[test]
+    fn two_streams_merge() {
+        let mut rng = Rng::new(9);
+        let arr = generate_arrivals(
+            &[RateSchedule::constant(2.0), RateSchedule::constant(2.0)],
+            1000.0,
+            &mut rng,
+        );
+        let m0 = arr.iter().filter(|a| a.model == 0).count();
+        let m1 = arr.iter().filter(|a| a.model == 1).count();
+        assert!(m0 > 1500 && m1 > 1500);
+    }
+
+    #[test]
+    fn utilization_solver_hits_target() {
+        let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("a", 5, 1_500_000, 400_000_000),
+                rate: 0.0,
+            },
+            Tenant {
+                model: synthetic_model("b", 5, 1_500_000, 300_000_000),
+                rate: 0.0,
+            },
+        ];
+        let cfg = Config::all_tpu(&tenants);
+        let rates = rates_for_utilization(&am, &tenants, &cfg, &[1.0, 1.0], 0.5);
+        let scaled: Vec<Tenant> = tenants
+            .iter()
+            .zip(&rates)
+            .map(|(t, r)| Tenant {
+                model: t.model.clone(),
+                rate: *r,
+            })
+            .collect();
+        let rho = am.tpu_utilization(&scaled, &cfg);
+        assert!((rho - 0.5).abs() < 0.01, "rho={rho}");
+    }
+
+    #[test]
+    fn equal_load_shares_inverse_to_service() {
+        let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("slow", 5, 1_000_000, 2_000_000_000),
+                rate: 0.0,
+            },
+            Tenant {
+                model: synthetic_model("fast", 5, 1_000_000, 200_000_000),
+                rate: 0.0,
+            },
+        ];
+        let shares = equal_tpu_load_shares(&am, &tenants);
+        assert!(shares[1] > shares[0]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Arrival-trace support: record DES/serving arrival streams to JSON and
+//! replay externally captured traces (the paper's dynamic scenarios are a
+//! special case of piecewise schedules; traces generalize them to
+//! arbitrary recorded workloads).
+
+use crate::util::json::Json;
+
+use super::Arrival;
+
+/// Serialize arrivals to the on-disk trace format:
+/// `{"version":1, "arrivals":[[t, model], ...], "models":[names...]}`.
+pub fn to_json(arrivals: &[Arrival], model_names: &[String]) -> Json {
+    Json::from_pairs(vec![
+        ("version", Json::Num(1.0)),
+        (
+            "models",
+            Json::Arr(model_names.iter().map(|n| Json::Str(n.clone())).collect()),
+        ),
+        (
+            "arrivals",
+            Json::Arr(
+                arrivals
+                    .iter()
+                    .map(|a| Json::Arr(vec![Json::Num(a.time), Json::Num(a.model as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn from_json(j: &Json) -> Result<(Vec<Arrival>, Vec<String>), String> {
+    let models: Vec<String> = j
+        .arr_of("models")
+        .map_err(|e| e.to_string())?
+        .iter()
+        .filter_map(|v| v.as_str().map(str::to_string))
+        .collect();
+    let mut arrivals = Vec::new();
+    let mut last_t = f64::NEG_INFINITY;
+    for (i, pair) in j
+        .arr_of("arrivals")
+        .map_err(|e| e.to_string())?
+        .iter()
+        .enumerate()
+    {
+        let a = pair
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or_else(|| format!("arrival {i} is not a [t, model] pair"))?;
+        let time = a[0]
+            .as_f64()
+            .ok_or_else(|| format!("arrival {i}: bad time"))?;
+        let model = a[1]
+            .as_usize()
+            .ok_or_else(|| format!("arrival {i}: bad model index"))?;
+        if model >= models.len() {
+            return Err(format!("arrival {i}: model {model} out of range"));
+        }
+        if time < last_t {
+            return Err(format!("arrival {i}: trace not time-sorted"));
+        }
+        if !time.is_finite() || time < 0.0 {
+            return Err(format!("arrival {i}: invalid time {time}"));
+        }
+        last_t = time;
+        arrivals.push(Arrival { time, model });
+    }
+    Ok((arrivals, models))
+}
+
+pub fn save(path: &str, arrivals: &[Arrival], model_names: &[String]) -> Result<(), String> {
+    crate::util::json::write_file(path, &to_json(arrivals, model_names))
+}
+
+pub fn load(path: &str) -> Result<(Vec<Arrival>, Vec<String>), String> {
+    let j = crate::util::json::parse_file(path)?;
+    from_json(&j)
+}
+
+/// Empirical per-model rates over a trace (for planning from a recording).
+pub fn empirical_rates(arrivals: &[Arrival], n_models: usize, horizon: f64) -> Vec<f64> {
+    let mut counts = vec![0usize; n_models];
+    for a in arrivals {
+        counts[a.model] += 1;
+    }
+    counts
+        .iter()
+        .map(|c| *c as f64 / horizon.max(1e-9))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::{generate_arrivals, RateSchedule};
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let arr = generate_arrivals(
+            &[RateSchedule::constant(3.0), RateSchedule::constant(1.0)],
+            50.0,
+            &mut rng,
+        );
+        let names = vec!["a".to_string(), "b".to_string()];
+        let j = to_json(&arr, &names);
+        let (back, back_names) = from_json(&j).unwrap();
+        assert_eq!(back_names, names);
+        assert_eq!(back.len(), arr.len());
+        assert_eq!(back[0], arr[0]);
+        assert_eq!(back[back.len() - 1], arr[arr.len() - 1]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let bad = crate::util::json::parse(
+            r#"{"version":1,"models":["a"],"arrivals":[[1.0, 5]]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&bad).is_err()); // model out of range
+        let bad = crate::util::json::parse(
+            r#"{"version":1,"models":["a"],"arrivals":[[2.0, 0],[1.0, 0]]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&bad).is_err()); // unsorted
+        let bad = crate::util::json::parse(
+            r#"{"version":1,"models":["a"],"arrivals":[[-1.0, 0]]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&bad).is_err()); // negative time
+    }
+
+    #[test]
+    fn empirical_rates_match_generation() {
+        let mut rng = Rng::new(9);
+        let arr = generate_arrivals(
+            &[RateSchedule::constant(4.0), RateSchedule::constant(2.0)],
+            500.0,
+            &mut rng,
+        );
+        let rates = empirical_rates(&arr, 2, 500.0);
+        assert!((rates[0] - 4.0).abs() < 0.4);
+        assert!((rates[1] - 2.0).abs() < 0.3);
+    }
+}

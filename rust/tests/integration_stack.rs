@@ -1,0 +1,238 @@
+//! Integration tests over the real AOT artifacts: manifest → PJRT runtime
+//! → serving coordinator → experiment harness. These need `make artifacts`
+//! to have run; they skip (with a notice) otherwise so `cargo test` stays
+//! green on a fresh checkout.
+
+use swapless::alloc;
+use swapless::analytic::{AnalyticModel, Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::coordinator::{Server, ServerOptions};
+use swapless::experiments as exp;
+use swapless::model::Manifest;
+use swapless::runtime::service::ExecService;
+use swapless::runtime::Engine;
+use swapless::tpu::CostModel;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("artifacts/ not built; skipping integration test");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_table2() {
+    let Some(m) = manifest() else { return };
+    assert_eq!(m.models.len(), 9);
+    let expected = [
+        ("squeezenet", 2),
+        ("mobilenetv2", 5),
+        ("efficientnet", 6),
+        ("mnasnet", 7),
+        ("gpunet", 5),
+        ("densenet201", 7),
+        ("resnet50v2", 8),
+        ("xception", 11),
+        ("inceptionv4", 11),
+    ];
+    for (name, pp) in expected {
+        let meta = m.get(name).unwrap();
+        assert_eq!(meta.partition_points, pp, "{name}");
+        for seg in &meta.segments {
+            assert!(std::path::Path::new(&m.artifact_path(seg)).exists());
+        }
+    }
+}
+
+#[test]
+fn engine_executes_and_composes_segments() {
+    let Some(m) = manifest() else { return };
+    let meta = m.get("squeezenet").unwrap().clone();
+    let mut engine = Engine::new().unwrap();
+    engine.load_model(&m, &meta).unwrap();
+
+    let n_in: usize = meta.input_shape.iter().product();
+    let input = vec![0.5f32; n_in];
+
+    // Segment-by-segment equals execute_range.
+    let mut x = input.clone();
+    for i in 0..meta.partition_points {
+        x = engine.execute_segment("squeezenet", i, &x).unwrap();
+    }
+    let direct = engine
+        .execute_range("squeezenet", 0, meta.partition_points, &input)
+        .unwrap();
+    assert_eq!(x.len(), direct.len());
+    for (a, b) in x.iter().zip(&direct) {
+        assert!((a - b).abs() < 1e-5);
+    }
+    // Deterministic across invocations.
+    let again = engine
+        .execute_range("squeezenet", 0, meta.partition_points, &input)
+        .unwrap();
+    assert_eq!(direct, again);
+    // Output is the class-logit vector.
+    assert_eq!(direct.len(), 10);
+}
+
+#[test]
+fn engine_rejects_bad_input_len() {
+    let Some(m) = manifest() else { return };
+    let meta = m.get("squeezenet").unwrap().clone();
+    let mut engine = Engine::new().unwrap();
+    engine.load_model(&m, &meta).unwrap();
+    assert!(engine.execute_segment("squeezenet", 0, &[0.0; 3]).is_err());
+    assert!(engine.execute_segment("nope", 0, &[0.0; 3]).is_err());
+}
+
+#[test]
+fn exec_service_serves_from_other_threads() {
+    let Some(m) = manifest() else { return };
+    let svc = ExecService::start(&m, &["squeezenet".into()]).unwrap();
+    let meta = m.get("squeezenet").unwrap().clone();
+    let n_in: usize = meta.input_shape.iter().product();
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let h = svc.handle();
+        let name = meta.name.clone();
+        let pp = meta.partition_points;
+        joins.push(std::thread::spawn(move || {
+            h.execute_range(&name, 0, pp, vec![0.5; n_in]).unwrap().len()
+        }));
+    }
+    for j in joins {
+        assert_eq!(j.join().unwrap(), 10);
+    }
+}
+
+#[test]
+fn server_round_trip_split_execution() {
+    let Some(m) = manifest() else { return };
+    let names = vec!["squeezenet".to_string(), "mobilenetv2".to_string()];
+    let cost = CostModel::new(HardwareSpec::default());
+    // Force split configs: prefix 1 segment, suffix on CPU pools.
+    let cfg = Config {
+        partitions: vec![1, 2],
+        cores: vec![2, 2],
+    };
+    let server = Server::start(
+        &m,
+        &names,
+        cost,
+        cfg,
+        ServerOptions {
+            adaptive: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for model in 0..2 {
+        let n_in: usize = server.tenants()[model].model.input_shape.iter().product();
+        let done = server.infer(model, vec![0.5; n_in]).unwrap();
+        assert_eq!(done.output.len(), 10, "model {model}");
+        assert!(done.latency_s > 0.0);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, 2);
+
+    // Split output must equal the full-TPU output (numerics invariant).
+    let n_in: usize = server.tenants()[0].model.input_shape.iter().product();
+    let split_out = server.infer(0, vec![0.25; n_in]).unwrap().output;
+    server.set_config(Config {
+        partitions: vec![2, 5],
+        cores: vec![0, 0],
+    });
+    let full_out = server.infer(0, vec![0.25; n_in]).unwrap().output;
+    assert_eq!(split_out.len(), full_out.len());
+    for (a, b) in split_out.iter().zip(&full_out) {
+        assert!((a - b).abs() < 1e-4, "split vs full mismatch: {a} vs {b}");
+    }
+}
+
+#[test]
+fn experiments_run_on_real_manifest() {
+    let Some(m) = manifest() else { return };
+    let mut ctx = exp::Ctx::new(m, HardwareSpec::default());
+    ctx.horizon = 200.0;
+
+    let t2 = exp::table2::run(&ctx);
+    assert_eq!(t2.rows.len(), 9);
+
+    let f1 = exp::fig1::run(&ctx).unwrap();
+    for row in &f1.rows {
+        assert!(row.swap_fraction > 0.0 && row.swap_fraction < 1.0);
+        assert!(row.observed_mean_ms > 0.0);
+    }
+
+    let f3 = exp::fig3::run(&ctx, "inceptionv4").unwrap();
+    assert_eq!(f3.rows.len(), 11);
+    let first = f3.rows[0].speedup;
+    let last = f3.rows.last().unwrap().speedup;
+    assert!(first > 2.0 * last, "Fig. 3 shape lost: {first} vs {last}");
+}
+
+#[test]
+fn fig5_mape_stays_small() {
+    let Some(m) = manifest() else { return };
+    let mut ctx = exp::Ctx::new(m, HardwareSpec::default());
+    ctx.horizon = 1000.0;
+    let f5 = exp::fig5::run(&ctx, "inceptionv4", 0.2, &[1.0, 4.0]).unwrap();
+    assert!(
+        f5.mape_pct < 8.0,
+        "single-tenant validation degraded: MAPE {:.1}%",
+        f5.mape_pct
+    );
+    assert!(f5.within10 > 0.9);
+}
+
+#[test]
+fn fig7_swapless_wins_where_memory_pressured() {
+    let Some(m) = manifest() else { return };
+    let mut ctx = exp::Ctx::new(m, HardwareSpec::default());
+    ctx.horizon = 600.0;
+    let wl = exp::fig7::run_workload(&ctx, &["efficientnet", "gpunet"], 0.5).unwrap();
+    let compiler = wl.cells.iter().find(|c| c.policy == "compiler").unwrap();
+    let swapless = wl.cells.iter().find(|c| c.policy == "swapless").unwrap();
+    assert!(
+        swapless.observed_ms < compiler.observed_ms,
+        "swapless {} !< compiler {}",
+        swapless.observed_ms,
+        compiler.observed_ms
+    );
+    // And when everything fits, policies tie (within noise).
+    let wl = exp::fig7::run_workload(&ctx, &["mobilenetv2", "squeezenet"], 0.2).unwrap();
+    let compiler = wl.cells.iter().find(|c| c.policy == "compiler").unwrap();
+    let swapless = wl.cells.iter().find(|c| c.policy == "swapless").unwrap();
+    let rel = (swapless.observed_ms - compiler.observed_ms).abs() / compiler.observed_ms;
+    assert!(rel < 0.25, "fits-in-SRAM workload should tie: {rel}");
+}
+
+#[test]
+fn plan_then_observe_agrees_for_real_models() {
+    // Close the loop: allocator's predicted objective vs DES observation.
+    let Some(m) = manifest() else { return };
+    let mut ctx = exp::Ctx::new(m, HardwareSpec::default());
+    ctx.horizon = 1200.0;
+    let tenants: Vec<Tenant> = vec![
+        Tenant {
+            model: ctx.manifest.get("efficientnet").unwrap().clone(),
+            rate: 2.0,
+        },
+        Tenant {
+            model: ctx.manifest.get("gpunet").unwrap().clone(),
+            rate: 1.0,
+        },
+    ];
+    let am = AnalyticModel::new(ctx.cost.clone());
+    let plan = alloc::hill_climb(&am, &tenants, 4);
+    let predicted = am.mean_latency(&tenants, &plan.config);
+    let observed = ctx.observe(&tenants, &plan.config).mean_latency;
+    let err = (observed - predicted).abs() / observed;
+    assert!(
+        err < 0.15,
+        "predicted {predicted} observed {observed} err {err}"
+    );
+}

@@ -1,0 +1,351 @@
+//! Property-based tests: randomized invariants over the allocator, the
+//! queueing model, the SRAM cache, and the substrates. The offline build
+//! carries no proptest crate, so generation/shrinking-lite is driven by
+//! the in-repo deterministic RNG — every case prints its seed on failure.
+
+use swapless::alloc;
+use swapless::analytic::{check_constraints, AnalyticModel, Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::model::synthetic_model;
+use swapless::sim::{simulate, SimOptions};
+use swapless::tpu::{CostModel, SramCache};
+use swapless::util::json::{parse, Json};
+use swapless::util::rng::Rng;
+
+const CASES: usize = 60;
+
+fn random_tenants(rng: &mut Rng) -> Vec<Tenant> {
+    let n = 1 + rng.below(4);
+    (0..n)
+        .map(|i| {
+            let segs = 2 + rng.below(10);
+            let mb_total = rng.range_f64(1.0, 45.0);
+            let gflops = rng.range_f64(0.2, 12.0);
+            Tenant {
+                model: synthetic_model(
+                    &format!("m{i}"),
+                    segs,
+                    (mb_total * 1e6 / segs as f64) as u64,
+                    (gflops * 1e9 / segs as f64) as u64,
+                ),
+                rate: rng.range_f64(0.1, 6.0),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_hill_climb_always_feasible() {
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let k_max = 1 + rng.below(6);
+        let a = alloc::hill_climb(&am, &tenants, k_max);
+        check_constraints(&tenants, &a.config, k_max)
+            .unwrap_or_else(|e| panic!("seed {seed}: infeasible config: {e}"));
+    }
+}
+
+#[test]
+fn prop_hill_climb_never_worse_than_endpoints() {
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    for seed in 100..100 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let k_max = 2 + rng.below(4);
+        let a = alloc::hill_climb(&am, &tenants, k_max);
+        let all_cpu = Config {
+            partitions: vec![0; tenants.len()],
+            cores: alloc::prop_alloc(&am.cost, &tenants, &vec![0; tenants.len()], k_max),
+        };
+        let all_tpu = Config::all_tpu(&tenants);
+        assert!(
+            a.predicted_objective <= am.objective(&tenants, &all_cpu) + 1e-9,
+            "seed {seed}: worse than all-CPU (the start point)"
+        );
+        // Alg. 1 is a greedy heuristic with 2-step lookahead — it can stop
+        // at a local optimum above the all-TPU endpoint, but never by a
+        // large factor on these instances.
+        let tpu_obj = am.objective(&tenants, &all_tpu);
+        if tpu_obj.is_finite() {
+            assert!(
+                a.predicted_objective <= tpu_obj * 1.6 + 1e-9,
+                "seed {seed}: {:.4} far above all-TPU {:.4}",
+                a.predicted_objective,
+                tpu_obj
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_hill_climb_beats_or_matches_baselines() {
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    for seed in 200..200 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let co = alloc::edge_tpu_compiler(&am, &tenants);
+        let th = alloc::threshold_partitioning(&am, &tenants, 4, 0.10);
+        let hc = alloc::hill_climb(&am, &tenants, 4);
+        assert!(
+            hc.predicted_objective <= co.predicted_objective + 1e-9,
+            "seed {seed}: lost to compiler baseline"
+        );
+        assert!(
+            hc.predicted_objective <= th.predicted_objective + 1e-9,
+            "seed {seed}: lost to threshold baseline"
+        );
+    }
+}
+
+#[test]
+fn prop_alpha_in_unit_interval_and_regimes() {
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    for seed in 300..300 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let partitions: Vec<usize> = tenants
+            .iter()
+            .map(|t| rng.below(t.model.partition_points + 1))
+            .collect();
+        let cores = alloc::prop_alloc(&am.cost, &tenants, &partitions, 4);
+        let cfg = Config { partitions, cores };
+        let total_resident: u64 = tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| am.cost.resident_bytes(&t.model, cfg.partitions[i]))
+            .sum();
+        let active = tenants
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| cfg.partitions[*i] > 0 && t.rate > 0.0)
+            .count();
+        let mut alpha_sum = 0.0;
+        for i in 0..tenants.len() {
+            let a = am.alpha(&tenants, &cfg, i);
+            assert!((0.0..=1.0).contains(&a), "seed {seed}: α={a}");
+            if total_resident <= am.cost.hw.sram_bytes || active <= 1 {
+                assert_eq!(a, 0.0, "seed {seed}: α must be 0 in regime 1");
+            }
+            if cfg.partitions[i] > 0 {
+                alpha_sum += a;
+            }
+        }
+        // Σ(1 - λi/λ) over active models = active - 1 when in regime 2.
+        if active > 1 && total_resident > am.cost.hw.sram_bytes {
+            assert!(
+                (alpha_sum - (active as f64 - 1.0)).abs() < 1e-9,
+                "seed {seed}: Σα = {alpha_sum}, active {active}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_prop_alloc_invariants() {
+    let cost = CostModel::new(HardwareSpec::default());
+    for seed in 400..400 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let k_max = rng.below(9);
+        let partitions: Vec<usize> = tenants
+            .iter()
+            .map(|t| rng.below(t.model.partition_points + 1))
+            .collect();
+        let cores = alloc::prop_alloc(&cost, &tenants, &partitions, k_max);
+        assert!(cores.iter().sum::<usize>() <= k_max, "seed {seed}: over cap");
+        for (i, t) in tenants.iter().enumerate() {
+            if partitions[i] == t.model.partition_points {
+                assert_eq!(cores[i], 0, "seed {seed}: full-TPU model got cores");
+            }
+        }
+        let eligible = partitions
+            .iter()
+            .zip(&tenants)
+            .filter(|(p, t)| **p < t.model.partition_points)
+            .count();
+        if eligible > 0 && k_max >= eligible {
+            // constraint-(8) floor is satisfiable -> every suffix gets ≥1
+            for (i, t) in tenants.iter().enumerate() {
+                if partitions[i] < t.model.partition_points {
+                    assert!(cores[i] >= 1, "seed {seed}: suffix model starved");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_latency_monotone_in_rate() {
+    // Analytic e2e latency must be nondecreasing in the arrival rate.
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    for seed in 500..500 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let mut tenants = random_tenants(&mut rng);
+        tenants.truncate(1);
+        let p = 1 + rng.below(tenants[0].model.partition_points);
+        let k = if p < tenants[0].model.partition_points { 2 } else { 0 };
+        let cfg = Config {
+            partitions: vec![p],
+            cores: vec![k],
+        };
+        let mut prev = 0.0;
+        for step in 1..10 {
+            tenants[0].rate = step as f64 * 0.5;
+            let lat = am.e2e_latency(&tenants, &cfg, 0);
+            if lat.is_infinite() {
+                break;
+            }
+            assert!(
+                lat >= prev - 1e-12,
+                "seed {seed}: latency decreased with load"
+            );
+            prev = lat;
+        }
+    }
+}
+
+#[test]
+fn prop_cache_used_never_exceeds_capacity() {
+    for seed in 600..600 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let cap = 1_000_000 + rng.below(9_000_000) as u64;
+        let mut cache = SramCache::new(cap);
+        for _ in 0..300 {
+            let id = rng.below(6);
+            let bytes = (rng.f64() * cap as f64) as u64;
+            cache.access(id, bytes);
+            assert!(cache.used_bytes() <= cap, "seed {seed}: over capacity");
+        }
+    }
+}
+
+#[test]
+fn prop_cache_all_fit_implies_steady_hits() {
+    for seed in 700..700 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.below(4);
+        let per = 1_000_000u64;
+        let mut cache = SramCache::new(per * n as u64 + 1);
+        // warm
+        for id in 0..n {
+            cache.access(id, per);
+        }
+        for _ in 0..100 {
+            let id = rng.below(n);
+            assert!(cache.access(id, per), "seed {seed}: miss though all fit");
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.f64() * 1e6).round() / 4.0),
+            3 => {
+                let len = rng.below(12);
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            let c = rng.below(96) as u8 + 32;
+                            c as char
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    for seed in 800..800 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string_pretty();
+        let back = parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_des_matches_analytic_on_stable_single_tenant() {
+    // The DES and the queueing formulas must agree (within Monte-Carlo
+    // noise) wherever the analytic assumptions hold exactly.
+    let cost = CostModel::new(HardwareSpec::default());
+    let am = AnalyticModel::new(cost.clone());
+    let mut checked = 0;
+    for seed in 900..950u64 {
+        let mut rng = Rng::new(seed);
+        let mut tenants = random_tenants(&mut rng);
+        tenants.truncate(1);
+        let pp = tenants[0].model.partition_points;
+        let p = rng.below(pp + 1);
+        let cores = alloc::prop_alloc(&cost, &tenants, &[p], 4);
+        let cfg = Config {
+            partitions: vec![p],
+            cores,
+        };
+        let predicted = am.e2e_latency(&tenants, &cfg, 0);
+        let rho = am.tpu_utilization(&tenants, &cfg);
+        if !predicted.is_finite() || rho > 0.7 {
+            continue; // skip unstable / heavy-traffic cases (slow mixing)
+        }
+        let res = simulate(
+            &cost,
+            &tenants,
+            &cfg,
+            SimOptions {
+                horizon: 1500.0,
+                warmup: 75.0,
+                seed,
+                timeline_window: None,
+            },
+        );
+        let err = (res.mean_latency - predicted).abs() / predicted;
+        assert!(
+            err < 0.08,
+            "seed {seed}: DES {} vs analytic {} ({:.1}%)",
+            res.mean_latency,
+            predicted,
+            err * 100.0
+        );
+        checked += 1;
+    }
+    assert!(checked >= 10, "too few stable cases checked ({checked})");
+}
+
+#[test]
+fn prop_rate_solver_hits_target_utilization() {
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    for seed in 1000..1000 + 20u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let cfg = Config::all_tpu(&tenants);
+        let shares: Vec<f64> = tenants.iter().map(|_| rng.range_f64(0.5, 2.0)).collect();
+        let rho = rng.range_f64(0.1, 0.8);
+        let rates =
+            swapless::workload::rates_for_utilization(&am, &tenants, &cfg, &shares, rho);
+        let scaled: Vec<Tenant> = tenants
+            .iter()
+            .zip(&rates)
+            .map(|(t, r)| Tenant {
+                model: t.model.clone(),
+                rate: *r,
+            })
+            .collect();
+        let got = am.tpu_utilization(&scaled, &cfg);
+        assert!(
+            (got - rho).abs() < 0.02,
+            "seed {seed}: target ρ={rho}, got {got}"
+        );
+    }
+}

@@ -2,19 +2,29 @@
 //! allocation runs in < 2 ms per invocation on an embedded CPU; verify we
 //! are far under that on every workload size, and measure the exhaustive
 //! NLIP reference for the ablation (why the heuristic is needed).
+//!
+//! Also the EXPERIMENTS.md §Perf before/after measurement: every size is
+//! benched through the pre-engine naive evaluation (`hill_climb_naive`)
+//! AND the prefix-table + delta-evaluation engine, both as a one-shot
+//! call (table build included) and as the coordinator's steady-state
+//! decision path (tables prebuilt). The multi-tenant decision path must
+//! come out ≥ 5× faster than the naive baseline.
 
 use swapless::alloc;
 use swapless::analytic::{AnalyticModel, Tenant};
 use swapless::config::HardwareSpec;
 use swapless::model::synthetic_model;
-use swapless::tpu::CostModel;
-use swapless::util::bench::{bench, print_header, print_row};
+use swapless::tpu::{CostModel, PrefixTables};
+use swapless::util::bench::{bench, fmt_ns, print_header, print_row};
 
 fn tenants(n: usize) -> Vec<Tenant> {
     (0..n)
         .map(|i| Tenant {
             model: synthetic_model(&format!("m{i}"), 8 + (i % 4), 3_000_000, 900_000_000),
-            rate: 1.0 + i as f64,
+            // Scaled so the aggregate load stays serveable as n grows —
+            // an instantly-unstable mix collapses the climb to one scan
+            // and would bench a pathological decision, not a real one.
+            rate: (1.0 + i as f64) * 3.0 / (n as f64 + 2.0),
         })
         .collect()
 }
@@ -23,38 +33,95 @@ fn main() {
     let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
     print_header("allocator decision overhead (paper: < 2 ms)");
 
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
     for n in [1, 2, 3, 4, 6, 9] {
         let ts = tenants(n);
-        let s = bench(&format!("hill_climb n={n}"), 50, 300, || {
+        let tables = PrefixTables::for_tenants(&am.cost, &ts);
+
+        // Pre-engine baseline: every candidate re-runs the naive O(n·L)
+        // objective.
+        let naive = bench(&format!("hill_climb_naive n={n}"), 50, 300, || {
+            alloc::hill_climb_naive(&am, &ts, 4)
+        });
+        print_row(&naive);
+
+        // One-shot engine call (prefix-table build included).
+        let oneshot = bench(&format!("hill_climb n={n} (incl. table build)"), 50, 300, || {
             alloc::hill_climb(&am, &ts, 4)
         });
-        print_row(&s);
+        print_row(&oneshot);
+
+        // Steady-state decision path: the coordinator/reconfig policy
+        // holds the tables across decisions, so re-planning pays only the
+        // delta evaluation.
+        let decision = bench(&format!("hill_climb n={n} (tables amortized)"), 50, 300, || {
+            alloc::hill_climb_with_tables(&am, &ts, &tables, 4)
+        });
+        print_row(&decision);
+
+        // Both the one-shot call (what plan/baseline call sites pay,
+        // table build included) and the amortized decision path must stay
+        // inside the paper's 2 ms budget.
         assert!(
-            s.mean_ns < 2_000_000.0,
+            oneshot.mean_ns < 2_000_000.0,
+            "one-shot hill climb exceeded the paper's 2 ms budget"
+        );
+        assert!(
+            decision.mean_ns < 2_000_000.0,
             "hill climb exceeded the paper's 2 ms budget"
         );
+        let speedup = naive.mean_ns / decision.mean_ns;
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            format!("  -> decision-path speedup n={n}"),
+            "",
+            format!("{speedup:.1}x"),
+            fmt_ns(naive.mean_ns),
+            fmt_ns(decision.mean_ns),
+        );
+        speedups.push((n, speedup));
+    }
+
+    // EXPERIMENTS.md §Perf acceptance: ≥5× on the multi-tenant (n ≥ 4)
+    // decision path vs the pre-engine naive evaluation.
+    for (n, s) in &speedups {
+        if *n >= 4 {
+            assert!(
+                *s >= 5.0,
+                "multi-tenant decision path speedup regressed: n={n} only {s:.1}x"
+            );
+        }
     }
 
     for n in [1, 2] {
         let ts = tenants(n);
         let s = bench(&format!("exhaustive_nlip n={n}"), 5, 500, || {
-            alloc::exhaustive_best(&am, &ts, 4)
+            alloc::exhaustive_best(&am, &ts, 4).expect("feasible configuration")
         });
         print_row(&s);
     }
 
     let ts = tenants(4);
-    let s = bench("prop_alloc n=4", 100, 200, || {
+    let tables = PrefixTables::for_tenants(&am.cost, &ts);
+    let s = bench("prop_alloc n=4 (naive)", 100, 200, || {
         alloc::prop_alloc(&am.cost, &ts, &[2, 3, 1, 0], 4)
     });
     print_row(&s);
+    let s = bench("prop_alloc n=4 (tables)", 100, 200, || {
+        alloc::prop_alloc_tables(&tables, &ts, &[2, 3, 1, 0], 4)
+    });
+    print_row(&s);
 
-    let s = bench("objective_eval n=4", 100, 200, || {
-        let cfg = swapless::analytic::Config {
-            partitions: vec![4, 4, 4, 4],
-            cores: vec![1, 1, 1, 1],
-        };
+    let cfg = swapless::analytic::Config {
+        partitions: vec![4, 4, 4, 4],
+        cores: vec![1, 1, 1, 1],
+    };
+    let s = bench("objective_eval n=4 (naive)", 100, 200, || {
         am.objective(&ts, &cfg)
+    });
+    print_row(&s);
+    let s = bench("objective_eval n=4 (tables)", 100, 200, || {
+        swapless::analytic::objective_with_tables(&am, &ts, &tables, &cfg)
     });
     print_row(&s);
 }

@@ -7,26 +7,51 @@
 //!   from the last one and offload to the CPU while the layer's CPU time
 //!   is within 10% of its TPU time; ignores queuing and multi-tenancy.
 
-use crate::analytic::{Config, Tenant};
-use crate::tpu::CostModel;
+use crate::analytic::{objective_with_tables, Config, Tenant};
+use crate::tpu::{CostModel, PrefixTables};
 
-use super::{prop_alloc, Allocation};
+use super::{prop_alloc_tables, Allocation};
 use crate::analytic::AnalyticModel;
 
-/// Baseline 1: default Edge TPU compiler co-compilation.
+/// Baseline 1: default Edge TPU compiler co-compilation (fresh tables).
 pub fn edge_tpu_compiler(am: &AnalyticModel, tenants: &[Tenant]) -> Allocation {
+    let tables = PrefixTables::for_tenants(&am.cost, tenants);
+    edge_tpu_compiler_with_tables(am, tenants, &tables)
+}
+
+/// Baseline 1 over prebuilt tables — experiment sweeps that score many
+/// policies on one mix amortize the build across all of them.
+pub fn edge_tpu_compiler_with_tables(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    tables: &[PrefixTables],
+) -> Allocation {
     let config = Config::all_tpu(tenants);
     Allocation {
-        predicted_objective: am.objective(tenants, &config),
+        predicted_objective: objective_with_tables(am, tenants, tables, &config),
         config,
         evaluations: 1,
     }
 }
 
-/// Baseline 2: threshold-based partitioning (10% rule), cores via PropAlloc.
+/// Baseline 2: threshold-based partitioning (10% rule), cores via
+/// PropAlloc (fresh tables).
 pub fn threshold_partitioning(
     am: &AnalyticModel,
     tenants: &[Tenant],
+    k_max: usize,
+    threshold: f64,
+) -> Allocation {
+    let tables = PrefixTables::for_tenants(&am.cost, tenants);
+    threshold_partitioning_with_tables(am, tenants, &tables, k_max, threshold)
+}
+
+/// Baseline 2 over prebuilt tables. The per-layer CPU-vs-TPU walk is
+/// inherently per-segment; scoring and core allocation are table-backed.
+pub fn threshold_partitioning_with_tables(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    tables: &[PrefixTables],
     k_max: usize,
     threshold: f64,
 ) -> Allocation {
@@ -48,10 +73,10 @@ pub fn threshold_partitioning(
         }
         partitions.push(p);
     }
-    let cores = prop_alloc(cost, tenants, &partitions, k_max);
+    let cores = prop_alloc_tables(tables, tenants, &partitions, k_max);
     let config = Config { partitions, cores };
     Allocation {
-        predicted_objective: am.objective(tenants, &config),
+        predicted_objective: objective_with_tables(am, tenants, tables, &config),
         config,
         evaluations: 1,
     }

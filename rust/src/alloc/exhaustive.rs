@@ -2,32 +2,66 @@
 //!
 //! Enumerates every feasible `(P, K)` pair; used by tests to measure the
 //! hill-climb's optimality gap and by the ablation bench. Complexity is
-//! Π (P_i + 1) × compositions(K_max), so keep it to ≤ 3 models.
+//! Π (P_i + 1) × compositions(K_max), so keep it to ≤ 4 models (the
+//! `n <= 4` assert below is the hard line). Leaf configurations are
+//! scored through [`objective_with_tables`], so each evaluation is O(n)
+//! instead of O(n·L).
+//!
+//! Returns `None` when no enumerated configuration satisfies constraints
+//! (6)–(9) — callers decide whether that is a hard error.
 
-use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::analytic::{objective_with_tables, AnalyticModel, Config, Tenant};
+use crate::tpu::PrefixTables;
 
 use super::Allocation;
 
-pub fn exhaustive_best(am: &AnalyticModel, tenants: &[Tenant], k_max: usize) -> Allocation {
+/// Exhaustive search with a fresh table build. `None` iff no feasible
+/// configuration exists.
+pub fn exhaustive_best(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    k_max: usize,
+) -> Option<Allocation> {
+    let tables = PrefixTables::for_tenants(&am.cost, tenants);
+    exhaustive_best_with_tables(am, tenants, &tables, k_max)
+}
+
+/// Exhaustive search over prebuilt tables.
+pub fn exhaustive_best_with_tables(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    tables: &[PrefixTables],
+    k_max: usize,
+) -> Option<Allocation> {
     let n = tenants.len();
     assert!(n <= 4, "exhaustive solver is for small instances");
     let mut best: Option<(f64, Config)> = None;
     let mut evaluations = 0usize;
 
     let mut partitions = vec![0usize; n];
-    enumerate_partitions(am, tenants, k_max, 0, &mut partitions, &mut best, &mut evaluations);
+    enumerate_partitions(
+        am,
+        tenants,
+        tables,
+        k_max,
+        0,
+        &mut partitions,
+        &mut best,
+        &mut evaluations,
+    );
 
-    let (obj, config) = best.expect("at least one feasible configuration");
-    Allocation {
+    best.map(|(obj, config)| Allocation {
         config,
         predicted_objective: obj,
         evaluations,
-    }
+    })
 }
 
+#[allow(clippy::too_many_arguments)]
 fn enumerate_partitions(
     am: &AnalyticModel,
     tenants: &[Tenant],
+    tables: &[PrefixTables],
     k_max: usize,
     i: usize,
     partitions: &mut Vec<usize>,
@@ -37,12 +71,23 @@ fn enumerate_partitions(
     let n = tenants.len();
     if i == n {
         let mut cores = vec![0usize; n];
-        enumerate_cores(am, tenants, k_max, 0, k_max, partitions, &mut cores, best, evaluations);
+        enumerate_cores(
+            am,
+            tenants,
+            tables,
+            k_max,
+            0,
+            k_max,
+            partitions,
+            &mut cores,
+            best,
+            evaluations,
+        );
         return;
     }
     for p in 0..=tenants[i].model.partition_points {
         partitions[i] = p;
-        enumerate_partitions(am, tenants, k_max, i + 1, partitions, best, evaluations);
+        enumerate_partitions(am, tenants, tables, k_max, i + 1, partitions, best, evaluations);
     }
 }
 
@@ -50,6 +95,7 @@ fn enumerate_partitions(
 fn enumerate_cores(
     am: &AnalyticModel,
     tenants: &[Tenant],
+    tables: &[PrefixTables],
     k_max: usize,
     i: usize,
     remaining: usize,
@@ -67,7 +113,7 @@ fn enumerate_cores(
         if crate::analytic::check_constraints(tenants, &cfg, k_max).is_err() {
             return;
         }
-        let obj = am.objective(tenants, &cfg);
+        let obj = objective_with_tables(am, tenants, tables, &cfg);
         *evaluations += 1;
         if best.as_ref().map(|(b, _)| obj < *b).unwrap_or(true) {
             *best = Some((obj, cfg));
@@ -76,13 +122,25 @@ fn enumerate_cores(
     }
     if partitions[i] == tenants[i].model.partition_points {
         cores[i] = 0;
-        enumerate_cores(am, tenants, k_max, i + 1, remaining, partitions, cores, best, evaluations);
+        enumerate_cores(
+            am,
+            tenants,
+            tables,
+            k_max,
+            i + 1,
+            remaining,
+            partitions,
+            cores,
+            best,
+            evaluations,
+        );
     } else {
         for k in 1..=remaining {
             cores[i] = k;
             enumerate_cores(
                 am,
                 tenants,
+                tables,
                 k_max,
                 i + 1,
                 remaining - k,
@@ -121,7 +179,7 @@ mod tests {
     fn finds_global_optimum_single_model() {
         let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
         let tenants = vec![tenant("big", 8, 30.0, 8.0, 2.0)];
-        let ex = exhaustive_best(&am, &tenants, 4);
+        let ex = exhaustive_best(&am, &tenants, 4).expect("feasible");
         // brute-force sanity: every configuration is ≥ the reported best
         for p in 0..=8usize {
             for k in 0..=4usize {
@@ -143,7 +201,7 @@ mod tests {
         let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
         for (mb, gf, rate) in [(4.0, 1.0, 2.0), (30.0, 8.0, 2.0), (16.0, 4.0, 5.0)] {
             let tenants = vec![tenant("m", 8, mb, gf, rate)];
-            let ex = exhaustive_best(&am, &tenants, 4);
+            let ex = exhaustive_best(&am, &tenants, 4).expect("feasible");
             let hc = hill_climb(&am, &tenants, 4);
             // Alg. 1 is a heuristic; on single-model instances it should be
             // within a small factor of optimal (typically exact).
@@ -160,9 +218,33 @@ mod tests {
     fn two_model_optimality_gap_small() {
         let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
         let tenants = vec![tenant("a", 6, 20.0, 5.0, 2.0), tenant("b", 5, 7.0, 0.4, 2.0)];
-        let ex = exhaustive_best(&am, &tenants, 4);
+        let ex = exhaustive_best(&am, &tenants, 4).expect("feasible");
         let hc = hill_climb(&am, &tenants, 4);
         assert!(hc.predicted_objective <= ex.predicted_objective * 1.3 + 1e-9);
         assert!(ex.evaluations > hc.evaluations, "exhaustive must search more");
+    }
+
+    #[test]
+    fn no_tenants_yields_trivial_allocation_not_panic() {
+        // Degenerate input: the empty mix has exactly one (empty, feasible)
+        // configuration; the old `.expect` path made any infeasibility a
+        // panic — the Option API lets callers handle it.
+        let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+        let out = exhaustive_best(&am, &[], 4);
+        let a = out.expect("empty mix is trivially feasible");
+        assert!(a.config.partitions.is_empty());
+        assert_eq!(a.predicted_objective, 0.0);
+    }
+
+    #[test]
+    fn zero_cores_forces_full_tpu_optimum() {
+        // With K_max = 0 every CPU-suffix config violates constraint (8);
+        // the solver must still return the all-TPU configuration instead
+        // of panicking.
+        let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+        let tenants = vec![tenant("m", 4, 6.0, 1.0, 1.0)];
+        let a = exhaustive_best(&am, &tenants, 0).expect("all-TPU is feasible");
+        assert_eq!(a.config.partitions, vec![4]);
+        assert_eq!(a.config.cores, vec![0]);
     }
 }

@@ -5,10 +5,32 @@
 //! search hop over transient latency spikes at intermediate partition
 //! points), re-running `PropAlloc` for every candidate, and commits the
 //! single best move. Terminates when no move improves the objective.
+//!
+//! Candidate evaluation runs on the incremental engine: per-tenant
+//! [`PrefixTables`] make every cost query O(1) and the [`DeltaEvaluator`]
+//! scores a move by updating only the moved tenant's contribution to the
+//! cached aggregate sums, so one candidate costs O(1) + O(#core-changes)
+//! instead of the naive O(n·L) re-evaluation (EXPERIMENTS.md §Perf). For
+//! large tenant counts the candidate scan fans out over models with
+//! `std::thread::scope`; the chunked reduction preserves the sequential
+//! scan's first-best tie-breaking, so the parallel path is deterministic
+//! and move-for-move identical. The pre-engine implementation is kept as
+//! [`hill_climb_naive`] — the reference the property tests and the
+//! before/after bench compare against.
 
-use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::analytic::{AnalyticModel, Config, DeltaEvaluator, Tenant};
+use crate::tpu::PrefixTables;
 
-use super::{prop_alloc, Allocation};
+use super::{prop_alloc, prop_alloc_tables_into, Allocation};
+
+/// Below this tenant count the scan stays sequential: with O(1) delta
+/// scoring a whole scan is ~2n·(PropAlloc + score) ≈ single-digit
+/// microseconds per tenant, while `thread::scope` pays a fresh
+/// spawn+join per scan (tens of microseconds) — fan-out only wins once
+/// per-scan work clearly exceeds that. Embedded deployments never cross
+/// this; large cloud-side mixes do. (A persistent worker pool would
+/// lower the break-even; not worth it at the paper's scales.)
+const PARALLEL_MIN_MODELS: usize = 32;
 
 /// Lexicographic score: (remaining suffix length over core-starved models,
 /// objective). When `K_max < n`, every all-CPU-ish configuration violates
@@ -31,7 +53,159 @@ fn lex_less(a: (usize, f64), b: (usize, f64)) -> bool {
     a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
 }
 
+/// One winning candidate: (model, step, score, PropAlloc core vector).
+type BestMove = (usize, usize, (usize, f64), Vec<usize>);
+
+/// Scan `models` (a contiguous index range) for the best 1/2-step move
+/// from `partitions`, scoring each candidate incrementally. Returns the
+/// chunk's winner and the number of candidates scored.
+fn scan_range(
+    ev: &DeltaEvaluator,
+    tenants: &[Tenant],
+    tables: &[PrefixTables],
+    partitions: &[usize],
+    k_max: usize,
+    models: std::ops::Range<usize>,
+) -> (Option<BestMove>, usize) {
+    let mut cand = partitions.to_vec();
+    let mut cand_cores = vec![0usize; tenants.len()];
+    let mut best: Option<BestMove> = None;
+    let mut evaluations = 0usize;
+    for m in models {
+        for h in 1..=2usize {
+            if partitions[m] + h > tenants[m].model.partition_points {
+                continue;
+            }
+            // Mutate-and-revert: no per-candidate partition clone.
+            cand[m] = partitions[m] + h;
+            prop_alloc_tables_into(tables, tenants, &cand, k_max, &mut cand_cores);
+            let sc = ev.score_move(m, cand[m], &cand_cores);
+            cand[m] = partitions[m];
+            evaluations += 1;
+            let better = match &best {
+                None => true,
+                Some((_, _, l, _)) => lex_less(sc, *l),
+            };
+            if better {
+                if let Some((bm, bh, bl, bc)) = &mut best {
+                    // Reuse the winner's buffer instead of reallocating.
+                    *bm = m;
+                    *bh = h;
+                    *bl = sc;
+                    std::mem::swap(bc, &mut cand_cores);
+                } else {
+                    best = Some((m, h, sc, cand_cores.clone()));
+                }
+            }
+        }
+    }
+    (best, evaluations)
+}
+
+/// Reduce per-chunk winners in model order, replicating the sequential
+/// scan's strict-improvement (first-best-wins) tie-breaking.
+fn reduce_best(chunks: Vec<(Option<BestMove>, usize)>) -> (Option<BestMove>, usize) {
+    let mut best: Option<BestMove> = None;
+    let mut evaluations = 0usize;
+    for (cand, ev) in chunks {
+        evaluations += ev;
+        if let Some(c) = cand {
+            let better = match &best {
+                None => true,
+                Some((_, _, l, _)) => lex_less(c.2, *l),
+            };
+            if better {
+                best = Some(c);
+            }
+        }
+    }
+    (best, evaluations)
+}
+
+/// Hill climb over a prebuilt table set. Callers that re-plan repeatedly
+/// for a fixed tenant mix (the coordinator's re-allocator thread, the
+/// simulator's reconfiguration policy) build the tables once and amortize
+/// them across every decision.
+pub fn hill_climb_with_tables(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    tables: &[PrefixTables],
+    k_max: usize,
+) -> Allocation {
+    let n = tenants.len();
+    let mut partitions = vec![0usize; n];
+    let mut cores = vec![0usize; n];
+    prop_alloc_tables_into(tables, tenants, &partitions, k_max, &mut cores);
+    let mut ev = DeltaEvaluator::new(
+        am,
+        tenants,
+        tables,
+        &Config {
+            partitions: partitions.clone(),
+            cores: cores.clone(),
+        },
+    );
+    let mut current = ev.score();
+    let mut evaluations = 1usize;
+
+    loop {
+        let (best, scanned) = if n >= PARALLEL_MIN_MODELS {
+            let workers = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(n);
+            let chunk = n.div_ceil(workers);
+            let ev_ref = &ev;
+            let parts_ref = &partitions;
+            let results: Vec<(Option<BestMove>, usize)> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|w| {
+                        let lo = w * chunk;
+                        let hi = ((w + 1) * chunk).min(n);
+                        s.spawn(move || {
+                            scan_range(ev_ref, tenants, tables, parts_ref, k_max, lo..hi)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            reduce_best(results)
+        } else {
+            scan_range(&ev, tenants, tables, &partitions, k_max, 0..n)
+        };
+        evaluations += scanned;
+        match best {
+            Some((m, h, sc, k_new)) if lex_less(sc, current) => {
+                partitions[m] += h;
+                cores = k_new;
+                ev.commit(m, partitions[m], &cores);
+                current = sc;
+            }
+            _ => break,
+        }
+    }
+
+    // `ev` was rebuilt from scratch on the last commit, so its objective
+    // is bit-identical to a fresh table-backed evaluation of the final
+    // configuration (and ≤1e-9 rel from the naive `objective()` — the
+    // property tests pin both).
+    Allocation {
+        predicted_objective: ev.objective(),
+        config: Config { partitions, cores },
+        evaluations,
+    }
+}
+
+/// Algorithm 1 with a fresh table build (one-shot planning call sites).
 pub fn hill_climb(am: &AnalyticModel, tenants: &[Tenant], k_max: usize) -> Allocation {
+    let tables = PrefixTables::for_tenants(&am.cost, tenants);
+    hill_climb_with_tables(am, tenants, &tables, k_max)
+}
+
+/// The pre-engine implementation: every candidate re-runs the naive
+/// O(n·L) `objective()`. Kept as the reference for the incremental-vs-
+/// naive property tests and the EXPERIMENTS.md §Perf before/after bench.
+pub fn hill_climb_naive(am: &AnalyticModel, tenants: &[Tenant], k_max: usize) -> Allocation {
     let n = tenants.len();
     let mut partitions = vec![0usize; n];
     let mut cores = prop_alloc(&am.cost, tenants, &partitions, k_max);
@@ -46,7 +220,7 @@ pub fn hill_climb(am: &AnalyticModel, tenants: &[Tenant], k_max: usize) -> Alloc
     let mut evaluations = 1usize;
 
     loop {
-        let mut best: Option<(usize, usize, (usize, f64), Vec<usize>)> = None;
+        let mut best: Option<BestMove> = None;
         for m in 0..n {
             for h in 1..=2usize {
                 if partitions[m] + h > tenants[m].model.partition_points {
@@ -59,7 +233,7 @@ pub fn hill_climb(am: &AnalyticModel, tenants: &[Tenant], k_max: usize) -> Alloc
                     am,
                     tenants,
                     &Config {
-                        partitions: cand.clone(),
+                        partitions: cand,
                         cores: cand_cores.clone(),
                     },
                 );
@@ -197,5 +371,50 @@ mod tests {
         let a = hill_climb(&am, &tenants, 4);
         check_constraints(&tenants, &a.config, 4).unwrap();
         assert!(am.objective(&tenants, &a.config).is_finite());
+    }
+
+    #[test]
+    fn engine_matches_naive_reference() {
+        // The incremental climb must take the exact same moves as the
+        // naive one on representative mixes.
+        let am = am();
+        for tenants in [
+            vec![tenant("big", 10, 40.0, 12.0, 2.0)],
+            vec![tenant("big", 10, 40.0, 12.0, 2.0), tenant("small", 5, 4.0, 0.5, 2.0)],
+            vec![
+                tenant("a", 8, 20.0, 4.0, 3.0),
+                tenant("b", 6, 12.0, 2.0, 1.0),
+                tenant("c", 9, 30.0, 6.0, 0.5),
+            ],
+        ] {
+            let fast = hill_climb(&am, &tenants, 4);
+            let slow = hill_climb_naive(&am, &tenants, 4);
+            assert_eq!(fast.config, slow.config);
+            assert_eq!(fast.evaluations, slow.evaluations);
+        }
+    }
+
+    #[test]
+    fn parallel_scan_is_deterministic_and_feasible() {
+        // n ≥ PARALLEL_MIN_MODELS exercises the thread::scope fan-out;
+        // two runs must agree exactly, and the result must be feasible.
+        let am = am();
+        let tenants: Vec<Tenant> = (0..PARALLEL_MIN_MODELS + 2)
+            .map(|i| {
+                tenant(
+                    &format!("m{i}"),
+                    4 + (i % 5),
+                    6.0 + i as f64,
+                    1.0 + (i % 3) as f64,
+                    0.2 + 0.1 * i as f64,
+                )
+            })
+            .collect();
+        let k_max = tenants.len(); // every suffix can hold a core
+        let a = hill_climb(&am, &tenants, k_max);
+        let b = hill_climb(&am, &tenants, k_max);
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.evaluations, b.evaluations);
+        check_constraints(&tenants, &a.config, k_max).unwrap();
     }
 }

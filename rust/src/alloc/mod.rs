@@ -6,12 +6,15 @@ pub mod baselines;
 pub mod exhaustive;
 pub mod hill_climb;
 
-pub use baselines::{edge_tpu_compiler, threshold_partitioning};
-pub use exhaustive::exhaustive_best;
-pub use hill_climb::hill_climb;
+pub use baselines::{
+    edge_tpu_compiler, edge_tpu_compiler_with_tables, threshold_partitioning,
+    threshold_partitioning_with_tables,
+};
+pub use exhaustive::{exhaustive_best, exhaustive_best_with_tables};
+pub use hill_climb::{hill_climb, hill_climb_naive, hill_climb_with_tables};
 
 use crate::analytic::{Config, Tenant};
-use crate::tpu::CostModel;
+use crate::tpu::{CostModel, PrefixTables};
 
 /// `PropAlloc` (Alg. 1, lines 2 & 10): distribute the `K_max` physical
 /// cores across models with CPU suffixes, proportionally to each model's
@@ -28,22 +31,75 @@ pub fn prop_alloc(
     partitions: &[usize],
     k_max: usize,
 ) -> Vec<usize> {
+    let mut cores = vec![0usize; tenants.len()];
+    prop_alloc_impl(
+        |i| cost.cpu_service(&tenants[i].model, partitions[i]),
+        tenants,
+        partitions,
+        k_max,
+        &mut cores,
+    );
+    cores
+}
+
+/// `PropAlloc` over prebuilt [`PrefixTables`]: the per-model CPU suffix
+/// time is an O(1) lookup instead of an O(L) segment sum. Same algorithm
+/// on bit-identical inputs, so the output matches [`prop_alloc`] exactly.
+pub fn prop_alloc_tables(
+    tables: &[PrefixTables],
+    tenants: &[Tenant],
+    partitions: &[usize],
+    k_max: usize,
+) -> Vec<usize> {
+    let mut cores = vec![0usize; tenants.len()];
+    prop_alloc_tables_into(tables, tenants, partitions, k_max, &mut cores);
+    cores
+}
+
+/// Allocation-light variant for the hill climb's candidate scan: writes
+/// the core vector into a caller-owned buffer (resized + zeroed here).
+pub fn prop_alloc_tables_into(
+    tables: &[PrefixTables],
+    tenants: &[Tenant],
+    partitions: &[usize],
+    k_max: usize,
+    cores: &mut Vec<usize>,
+) {
+    assert_eq!(tables.len(), tenants.len());
+    prop_alloc_impl(
+        |i| tables[i].cpu_service(partitions[i]),
+        tenants,
+        partitions,
+        k_max,
+        cores,
+    );
+}
+
+/// The shared PropAlloc algorithm; `cpu_service` abstracts the cost
+/// backend (naive segment sums vs prefix tables).
+fn prop_alloc_impl<F: Fn(usize) -> f64>(
+    cpu_service: F,
+    tenants: &[Tenant],
+    partitions: &[usize],
+    k_max: usize,
+    cores: &mut Vec<usize>,
+) {
     let n = tenants.len();
     assert_eq!(partitions.len(), n);
+    cores.clear();
+    cores.resize(n, 0);
     // CPU workload per model (zero for full-TPU models).
     let mut work = vec![0.0f64; n];
     let mut eligible: Vec<usize> = Vec::new();
     for i in 0..n {
         if partitions[i] < tenants[i].model.partition_points {
             // 1-core suffix service time × arrival rate = offered CPU load.
-            work[i] =
-                tenants[i].rate.max(1e-12) * cost.cpu_service(&tenants[i].model, partitions[i]);
+            work[i] = tenants[i].rate.max(1e-12) * cpu_service(i);
             eligible.push(i);
         }
     }
-    let mut cores = vec![0usize; n];
     if eligible.is_empty() || k_max == 0 {
-        return cores;
+        return;
     }
     if eligible.len() >= k_max {
         // Not enough cores for the floor: give one core each to the
@@ -53,7 +109,7 @@ pub fn prop_alloc(
         for &i in order.iter().take(k_max) {
             cores[i] = 1;
         }
-        return cores;
+        return;
     }
     // Floor of 1 core each; distribute the remainder proportionally.
     let total_work: f64 = eligible.iter().map(|&i| work[i]).sum();
@@ -82,7 +138,6 @@ pub fn prop_alloc(
         };
         cores[*idx] = 1 + fl + extra;
     }
-    cores
 }
 
 /// Convenience: a full named allocation result.
@@ -163,5 +218,22 @@ mod tests {
         let (cost, tenants) = setup();
         let cores = prop_alloc(&cost, &tenants, &[0, 0], 0);
         assert_eq!(cores, vec![0, 0]);
+    }
+
+    #[test]
+    fn prop_alloc_tables_matches_naive() {
+        // Table-backed PropAlloc sees bit-identical workloads, so the
+        // core vectors must match exactly on every partition vector.
+        let (cost, tenants) = setup();
+        let tables = PrefixTables::for_tenants(&cost, &tenants);
+        for parts in [[0, 0], [3, 2], [6, 0], [2, 4], [5, 3]] {
+            for k_max in 0..=6 {
+                assert_eq!(
+                    prop_alloc(&cost, &tenants, &parts, k_max),
+                    prop_alloc_tables(&tables, &tenants, &parts, k_max),
+                    "parts {parts:?} k_max {k_max}"
+                );
+            }
+        }
     }
 }

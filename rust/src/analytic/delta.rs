@@ -1,0 +1,761 @@
+//! Incremental (delta) evaluation of the allocator objective.
+//!
+//! [`AnalyticModel::objective`] recomputes every aggregate of Eq. 1–5 —
+//! λ^TPU, the SRAM footprint, the mixture moments, each model's CPU-queue
+//! terms — from scratch, iterating every tenant's segment list on the
+//! way. The hill climb scores O(n·P) single-tenant candidate moves per
+//! decision, and consecutive candidates differ in ONE tenant's partition
+//! (plus whatever cores `PropAlloc` shuffles), so almost all of that work
+//! is recomputation of unchanged state.
+//!
+//! [`DeltaEvaluator`] caches, per tenant, the O(1) cost terms (from
+//! [`PrefixTables`]) and, globally, the rate-weighted sums the objective
+//! is assembled from. Scoring a move `(m, p → p')` then costs O(1) for
+//! the TPU-side mixture (plus O(#core-changes) for the CPU queues) in the
+//! `Conservative`/`Zero` α modes. The trick for `Conservative` is that
+//! Eq. 10's α_i = 1 − λ_i/λ makes every α-weighted sum expressible in
+//! rate-only sums:
+//!
+//! ```text
+//!   Σ λᵢ αᵢ xᵢ  =  Σ λᵢ xᵢ − (Σ λᵢ² xᵢ)/λ        (x ∈ {T_load, u})
+//! ```
+//!
+//! so the evaluator maintains both Σλx and Σλ²x and never needs a
+//! per-tenant α refresh — not even when the overflow regime flips or λ^TPU
+//! changes (the O(n) refresh the naive formulation would need). The
+//! `Pairwise` α mode depends on the conflict graph, so overflow-regime
+//! moves there cost O(n) (still segment-free; see `pairwise_sums`).
+//!
+//! Numerical contract: a fresh build and a `score_move` agree with the
+//! naive `objective()` to ≤1e-9 relative (property-tested over randomized
+//! mixes in `tests/property_tests.rs`); `commit` rebuilds the cached
+//! state from scratch (O(n), table-backed) so rounding drift can never
+//! accumulate across a climb.
+
+use crate::analytic::{AlphaMode, AnalyticModel, Config, Tenant};
+use crate::tpu::PrefixTables;
+
+/// Per-tenant cached contribution under the committed `(p, k)`.
+#[derive(Debug, Clone, Copy, Default)]
+struct Term {
+    /// `p > 0 && λ > 0` — contributes to the TPU mixture.
+    active: bool,
+    /// Resident SRAM bytes of the prefix.
+    resident: u64,
+    /// `s^TPU(p)`.
+    s: f64,
+    /// `T_load(p)`.
+    tl: f64,
+    /// `(T_load + s)² − s²` — the α-weighted part of the second moment.
+    u: f64,
+    /// λ·(d_in/B + s^TPU + d_out/B) — the α-free TPU latency terms.
+    loc: f64,
+    /// λ·(E[W^CPU] + s^CPU) when finite, else 0 (see `cpu_inf`).
+    cpu: f64,
+    /// CPU side diverges (no core, or λ ≥ k·μ).
+    cpu_inf: bool,
+    /// Contribution to the hill climb's starvation measure.
+    starve: usize,
+}
+
+/// Incremental objective/score evaluator over one tenant mix.
+///
+/// Construction is O(n) given prebuilt [`PrefixTables`]; `score_move` is
+/// O(1) + O(#core-changes) (O(n) in `Pairwise` overflow); `commit` is a
+/// full O(n) rebuild. Shared immutably across threads by the parallel
+/// candidate scan (`&self` methods only).
+#[derive(Debug, Clone)]
+pub struct DeltaEvaluator<'a> {
+    am: &'a AnalyticModel,
+    tenants: &'a [Tenant],
+    tables: &'a [PrefixTables],
+    partitions: Vec<usize>,
+    cores: Vec<usize>,
+    terms: Vec<Term>,
+    /// λ^TPU = Σ active λᵢ.
+    lam: f64,
+    /// Σ resident bytes over ALL tenants (α's regime input).
+    footprint: u64,
+    /// Number of active (p>0, λ>0) tenants.
+    active: usize,
+    /// Σ λ s, Σ λ s² over active tenants.
+    s1: f64,
+    s2: f64,
+    /// Σ λ T_load, Σ λ² T_load over active tenants.
+    t1: f64,
+    t2: f64,
+    /// Σ λ u, Σ λ² u over active tenants.
+    u1: f64,
+    u2: f64,
+    /// Σ loc over active tenants.
+    l1: f64,
+    /// Σ finite CPU contributions; count of divergent ones.
+    cpu_sum: f64,
+    cpu_inf: usize,
+    /// Starvation measure (suffix layers of core-less models).
+    starvation: usize,
+    /// Pairwise mode: Σ conflicting peer rates per tenant.
+    conflict: Vec<f64>,
+}
+
+impl<'a> DeltaEvaluator<'a> {
+    pub fn new(
+        am: &'a AnalyticModel,
+        tenants: &'a [Tenant],
+        tables: &'a [PrefixTables],
+        cfg: &Config,
+    ) -> DeltaEvaluator<'a> {
+        assert_eq!(tenants.len(), tables.len(), "one table per tenant");
+        assert_eq!(cfg.partitions.len(), tenants.len());
+        assert_eq!(cfg.cores.len(), tenants.len());
+        let mut ev = DeltaEvaluator {
+            am,
+            tenants,
+            tables,
+            partitions: cfg.partitions.clone(),
+            cores: cfg.cores.clone(),
+            terms: Vec::new(),
+            lam: 0.0,
+            footprint: 0,
+            active: 0,
+            s1: 0.0,
+            s2: 0.0,
+            t1: 0.0,
+            t2: 0.0,
+            u1: 0.0,
+            u2: 0.0,
+            l1: 0.0,
+            cpu_sum: 0.0,
+            cpu_inf: 0,
+            starvation: 0,
+            conflict: Vec::new(),
+        };
+        ev.rebuild();
+        ev
+    }
+
+    /// The committed configuration.
+    pub fn config(&self) -> Config {
+        Config {
+            partitions: self.partitions.clone(),
+            cores: self.cores.clone(),
+        }
+    }
+
+    /// Recompute one tenant's cached term for `(p, k)` — O(1).
+    fn term(&self, i: usize, p: usize, k: usize) -> Term {
+        let rate = self.tenants[i].rate;
+        let tab = &self.tables[i];
+        let pp = tab.partition_points;
+        let active = p > 0 && rate > 0.0;
+        let s = tab.tpu_service(p);
+        let tl = tab.load_time(p);
+        let mut t = Term {
+            active,
+            resident: tab.resident_bytes(p),
+            s,
+            tl,
+            u: (tl + s) * (tl + s) - s * s,
+            loc: if active {
+                rate * (tab.input_transfer() + s + tab.output_transfer(p))
+            } else {
+                0.0
+            },
+            cpu: 0.0,
+            cpu_inf: false,
+            starve: if p < pp && k == 0 { pp - p } else { 0 },
+        };
+        if rate > 0.0 && p < pp {
+            // Mirrors AnalyticModel::cpu_wait + the k==0 ⇒ ∞ service rule.
+            if k == 0 {
+                t.cpu_inf = true;
+            } else {
+                let cs = tab.cpu_service(p);
+                let mu = 1.0 / cs;
+                let cap = k as f64 * mu;
+                if rate >= cap {
+                    t.cpu_inf = true;
+                } else {
+                    let wait = 0.5 * (1.0 / (cap - rate) - 1.0 / cap);
+                    t.cpu = rate * (wait + cs);
+                }
+            }
+        }
+        t
+    }
+
+    /// Full O(n) rebuild of the cached aggregates (used by `new` and
+    /// `commit` — keeps rounding drift from accumulating across moves).
+    fn rebuild(&mut self) {
+        let n = self.tenants.len();
+        self.terms = (0..n)
+            .map(|i| self.term(i, self.partitions[i], self.cores[i]))
+            .collect();
+        self.lam = 0.0;
+        self.footprint = 0;
+        self.active = 0;
+        self.s1 = 0.0;
+        self.s2 = 0.0;
+        self.t1 = 0.0;
+        self.t2 = 0.0;
+        self.u1 = 0.0;
+        self.u2 = 0.0;
+        self.l1 = 0.0;
+        self.cpu_sum = 0.0;
+        self.cpu_inf = 0;
+        self.starvation = 0;
+        for (i, t) in self.terms.iter().enumerate() {
+            let rate = self.tenants[i].rate;
+            self.footprint += t.resident;
+            if t.active {
+                self.lam += rate;
+                self.active += 1;
+                self.s1 += rate * t.s;
+                self.s2 += rate * t.s * t.s;
+                self.t1 += rate * t.tl;
+                self.t2 += rate * rate * t.tl;
+                self.u1 += rate * t.u;
+                self.u2 += rate * rate * t.u;
+                self.l1 += t.loc;
+            }
+            self.cpu_sum += t.cpu;
+            self.cpu_inf += t.cpu_inf as usize;
+            self.starvation += t.starve;
+        }
+        self.conflict = vec![0.0; n];
+        if self.am.alpha_mode == AlphaMode::Pairwise {
+            let sram = self.am.cost.hw.sram_bytes;
+            for i in 0..n {
+                if !self.terms[i].active {
+                    continue;
+                }
+                let mut c = 0.0;
+                for j in 0..n {
+                    if j != i
+                        && self.terms[j].active
+                        && self.terms[i].resident + self.terms[j].resident > sram
+                    {
+                        c += self.tenants[j].rate;
+                    }
+                }
+                self.conflict[i] = c;
+            }
+        }
+    }
+
+    /// Pairwise-α sums `(Σ λ α T_load, Σ λ α u)`, optionally with tenant
+    /// `m`'s term replaced by `moved` — O(n), segment-free.
+    fn pairwise_sums(&self, moved: Option<(usize, &Term, f64)>) -> (f64, f64) {
+        let sram = self.am.cost.hw.sram_bytes;
+        let mut a1 = 0.0;
+        let mut a2 = 0.0;
+        for j in 0..self.tenants.len() {
+            let rate = self.tenants[j].rate;
+            let (t, c) = match moved {
+                Some((m, new_term, new_conflict)) if j == m => (new_term, new_conflict),
+                Some((m, new_term, _)) => {
+                    let t = &self.terms[j];
+                    let old_m = &self.terms[m];
+                    let m_rate = self.tenants[m].rate;
+                    let mut c = self.conflict[j];
+                    if old_m.active && t.active && t.resident + old_m.resident > sram {
+                        c -= m_rate;
+                    }
+                    if new_term.active && t.active && t.resident + new_term.resident > sram {
+                        c += m_rate;
+                    }
+                    (t, c)
+                }
+                None => (&self.terms[j], self.conflict[j]),
+            };
+            if !t.active {
+                continue;
+            }
+            let a = if c > 0.0 { c / (rate + c) } else { 0.0 };
+            a1 += rate * a * t.tl;
+            a2 += rate * a * t.u;
+        }
+        (a1, a2)
+    }
+
+    /// Assemble the objective from aggregate sums — O(1).
+    ///
+    /// `pair` carries the precomputed pairwise-α sums (only consulted in
+    /// `Pairwise` mode under overflow).
+    #[allow(clippy::too_many_arguments)]
+    fn combine(
+        &self,
+        lam: f64,
+        footprint: u64,
+        active: usize,
+        s1: f64,
+        s2: f64,
+        t1: f64,
+        t2: f64,
+        u1: f64,
+        u2: f64,
+        l1: f64,
+        cpu_sum: f64,
+        cpu_inf: usize,
+        pair: Option<(f64, f64)>,
+    ) -> f64 {
+        if cpu_inf > 0 {
+            return f64::INFINITY;
+        }
+        let overflow = self.am.alpha_mode != AlphaMode::Zero
+            && active > 1
+            && footprint > self.am.cost.hw.sram_bytes;
+        // Σ λ α T_load and Σ λ α u under the current α mode/regime.
+        let (a1, a2) = if !overflow {
+            (0.0, 0.0)
+        } else if self.am.alpha_mode == AlphaMode::Pairwise {
+            pair.expect("pairwise sums required under overflow")
+        } else {
+            // Conservative closed form (see module docs).
+            (t1 - t2 / lam, u1 - u2 / lam)
+        };
+        let lam_m1 = s1 + a1; // = λ·E[s] = ρ
+        let lam_m2 = s2 + a2; // = λ·E[s²]
+        let rho = lam_m1;
+        let wait_term = if lam <= 0.0 {
+            0.0
+        } else if rho >= 1.0 {
+            return f64::INFINITY;
+        } else {
+            // λ^TPU · E[W^TPU]: every TPU-bound request pays the P-K wait.
+            lam * lam_m2 / (2.0 * (1.0 - rho))
+        };
+        wait_term + l1 + a1 + cpu_sum
+    }
+
+    /// The committed configuration's objective (Eq. 5) — O(1), O(n) in
+    /// `Pairwise` mode under overflow.
+    pub fn objective(&self) -> f64 {
+        // Same overflow gate as `combine` so the O(n) conflict sweep only
+        // runs when α is actually nonzero (mirrors `score_move`).
+        let pair = if self.am.alpha_mode == AlphaMode::Pairwise {
+            if self.active > 1 && self.footprint > self.am.cost.hw.sram_bytes {
+                Some(self.pairwise_sums(None))
+            } else {
+                Some((0.0, 0.0))
+            }
+        } else {
+            None
+        };
+        self.combine(
+            self.lam,
+            self.footprint,
+            self.active,
+            self.s1,
+            self.s2,
+            self.t1,
+            self.t2,
+            self.u1,
+            self.u2,
+            self.l1,
+            self.cpu_sum,
+            self.cpu_inf,
+            pair,
+        )
+    }
+
+    /// The hill climb's lexicographic score of the committed config.
+    pub fn score(&self) -> (usize, f64) {
+        (self.starvation, self.objective())
+    }
+
+    /// Score the candidate `(partitions[m] → new_p, cores → new_cores)`
+    /// WITHOUT mutating the committed state. Cost: O(1) TPU-side + O(1)
+    /// per changed core entry (O(n) total in `Pairwise` overflow).
+    pub fn score_move(&self, m: usize, new_p: usize, new_cores: &[usize]) -> (usize, f64) {
+        let rate = self.tenants[m].rate;
+        let old = self.terms[m];
+        let new = self.term(m, new_p, new_cores[m]);
+
+        let mut lam = self.lam;
+        let mut active = self.active;
+        if old.active != new.active {
+            if new.active {
+                lam += rate;
+                active += 1;
+            } else {
+                lam -= rate;
+                active -= 1;
+            }
+        }
+        let footprint = self.footprint - old.resident + new.resident;
+
+        let mut s1 = self.s1;
+        let mut s2 = self.s2;
+        let mut t1 = self.t1;
+        let mut t2 = self.t2;
+        let mut u1 = self.u1;
+        let mut u2 = self.u2;
+        let mut l1 = self.l1;
+        if old.active {
+            s1 -= rate * old.s;
+            s2 -= rate * old.s * old.s;
+            t1 -= rate * old.tl;
+            t2 -= rate * rate * old.tl;
+            u1 -= rate * old.u;
+            u2 -= rate * rate * old.u;
+            l1 -= old.loc;
+        }
+        if new.active {
+            s1 += rate * new.s;
+            s2 += rate * new.s * new.s;
+            t1 += rate * new.tl;
+            t2 += rate * rate * new.tl;
+            u1 += rate * new.u;
+            u2 += rate * rate * new.u;
+            l1 += new.loc;
+        }
+
+        let mut cpu_sum = self.cpu_sum + new.cpu - old.cpu;
+        let mut cpu_inf = self.cpu_inf as i64 + new.cpu_inf as i64 - old.cpu_inf as i64;
+        let mut starvation = self.starvation as i64 + new.starve as i64 - old.starve as i64;
+        // Only tenants whose core share PropAlloc actually changed need a
+        // CPU-queue refresh.
+        for j in 0..self.tenants.len() {
+            if j == m || new_cores[j] == self.cores[j] {
+                continue;
+            }
+            let oldt = &self.terms[j];
+            let newt = self.term(j, self.partitions[j], new_cores[j]);
+            cpu_sum += newt.cpu - oldt.cpu;
+            cpu_inf += newt.cpu_inf as i64 - oldt.cpu_inf as i64;
+            starvation += newt.starve as i64 - oldt.starve as i64;
+        }
+
+        let pair = if self.am.alpha_mode == AlphaMode::Pairwise {
+            let overflow = active > 1 && footprint > self.am.cost.hw.sram_bytes;
+            if overflow {
+                let sram = self.am.cost.hw.sram_bytes;
+                let mut new_conflict = 0.0;
+                if new.active {
+                    for j in 0..self.tenants.len() {
+                        if j != m
+                            && self.terms[j].active
+                            && new.resident + self.terms[j].resident > sram
+                        {
+                            new_conflict += self.tenants[j].rate;
+                        }
+                    }
+                }
+                Some(self.pairwise_sums(Some((m, &new, new_conflict))))
+            } else {
+                Some((0.0, 0.0))
+            }
+        } else {
+            None
+        };
+
+        let obj = self.combine(
+            lam,
+            footprint,
+            active,
+            s1,
+            s2,
+            t1,
+            t2,
+            u1,
+            u2,
+            l1,
+            cpu_sum,
+            cpu_inf.max(0) as usize,
+            pair,
+        );
+        (starvation.max(0) as usize, obj)
+    }
+
+    /// Commit a move: apply it and rebuild the cached state from scratch
+    /// (O(n); anchors the incremental path to fresh-build rounding).
+    pub fn commit(&mut self, m: usize, new_p: usize, new_cores: &[usize]) {
+        self.partitions[m] = new_p;
+        self.cores.clear();
+        self.cores.extend_from_slice(new_cores);
+        self.rebuild();
+    }
+}
+
+/// `E[W^CPU]` (Eq. 3) via table lookups — mirrors
+/// [`AnalyticModel::cpu_wait`] operation-for-operation.
+fn cpu_wait_tables(tab: &PrefixTables, rate: f64, p: usize, k: usize) -> f64 {
+    if p >= tab.partition_points || rate <= 0.0 {
+        return 0.0;
+    }
+    if k == 0 {
+        return f64::INFINITY;
+    }
+    let s = tab.cpu_service(p);
+    let mu = 1.0 / s;
+    let cap = k as f64 * mu;
+    if rate >= cap {
+        return f64::INFINITY;
+    }
+    0.5 * (1.0 / (cap - rate) - 1.0 / cap)
+}
+
+/// One-shot objective of `cfg` via prefix tables — the segment-free
+/// replacement for `AnalyticModel::objective` used by the exhaustive
+/// solver and the baselines.
+///
+/// Allocation-free on purpose: the exhaustive solver calls this at every
+/// enumerated leaf, so it mirrors the naive `objective()` pass structure
+/// directly (same operation order — bit-identical in `Conservative`/
+/// `Zero` modes given the tables' bit-exactness) with O(1) table lookups
+/// in place of the O(L) segment sums. Pairwise α costs O(n) per active
+/// tenant, as in the naive path.
+pub fn objective_with_tables(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    tables: &[PrefixTables],
+    cfg: &Config,
+) -> f64 {
+    debug_assert_eq!(tenants.len(), tables.len());
+    let sram = am.cost.hw.sram_bytes;
+    // Pass 1: aggregate rate + footprint (α's regime inputs).
+    let mut lam_tpu = 0.0;
+    let mut footprint: u64 = 0;
+    let mut active = 0usize;
+    for (i, t) in tenants.iter().enumerate() {
+        let p = cfg.partitions[i];
+        footprint += tables[i].resident_bytes(p);
+        if p > 0 && t.rate > 0.0 {
+            lam_tpu += t.rate;
+            active += 1;
+        }
+    }
+    let overflow =
+        am.alpha_mode != AlphaMode::Zero && active > 1 && footprint > sram;
+
+    // α for tenant i under the current regime (only queried for active
+    // tenants; O(1), O(n) in Pairwise mode).
+    let alpha_of = |i: usize| -> f64 {
+        if !overflow {
+            return 0.0;
+        }
+        match am.alpha_mode {
+            AlphaMode::Conservative => 1.0 - tenants[i].rate / lam_tpu,
+            AlphaMode::Pairwise => {
+                let r_i = tables[i].resident_bytes(cfg.partitions[i]);
+                let mut conflict = 0.0;
+                for (j, tj) in tenants.iter().enumerate() {
+                    if j == i || cfg.partitions[j] == 0 || tj.rate <= 0.0 {
+                        continue;
+                    }
+                    let r_j = tables[j].resident_bytes(cfg.partitions[j]);
+                    if r_i + r_j > sram {
+                        conflict += tj.rate;
+                    }
+                }
+                if conflict <= 0.0 {
+                    0.0
+                } else {
+                    conflict / (tenants[i].rate + conflict)
+                }
+            }
+            AlphaMode::Zero => 0.0,
+        }
+    };
+
+    // Pass 2: mixture moments (Eq. 2).
+    let mut m1 = 0.0;
+    let mut m2 = 0.0;
+    for (i, t) in tenants.iter().enumerate() {
+        let p = cfg.partitions[i];
+        if p == 0 || t.rate <= 0.0 {
+            continue;
+        }
+        let w = t.rate / lam_tpu;
+        let s = tables[i].tpu_service(p);
+        let tl = tables[i].load_time(p);
+        let a = alpha_of(i);
+        m1 += w * (a * tl + s);
+        m2 += w * (a * (tl + s) * (tl + s) + (1.0 - a) * s * s);
+    }
+    let rho = lam_tpu * m1;
+    let tpu_wait = if lam_tpu <= 0.0 {
+        0.0
+    } else if rho >= 1.0 {
+        return f64::INFINITY;
+    } else {
+        lam_tpu * m2 / (2.0 * (1.0 - rho))
+    };
+
+    // Pass 3: per-model e2e terms and the weighted objective (Eq. 4–5).
+    let mut objective = 0.0;
+    for (i, t) in tenants.iter().enumerate() {
+        let p = cfg.partitions[i];
+        let k = cfg.cores[i];
+        let tab = &tables[i];
+        let mut total = 0.0;
+        if p > 0 && t.rate > 0.0 {
+            total += tab.input_transfer()
+                + tpu_wait
+                + alpha_of(i) * tab.load_time(p)
+                + tab.tpu_service(p)
+                + tab.output_transfer(p);
+        }
+        if p < tab.partition_points {
+            total += cpu_wait_tables(tab, t.rate, p, k);
+            total += if k >= 1 {
+                tab.cpu_service(p)
+            } else {
+                f64::INFINITY
+            };
+        }
+        if t.rate > 0.0 {
+            objective += t.rate * total; // guard: 0 * INF would be NaN
+        }
+    }
+    objective
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+    use crate::tpu::CostModel;
+
+    fn setup(mode: AlphaMode) -> (AnalyticModel, Vec<Tenant>) {
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants: Vec<Tenant> = (0..3)
+            .map(|i| Tenant {
+                model: synthetic_model(&format!("m{i}"), 6, 2_000_000, 500_000_000),
+                rate: 1.0 + i as f64,
+            })
+            .collect();
+        (AnalyticModel::with_alpha_mode(cost, mode), tenants)
+    }
+
+    fn agree(a: f64, b: f64) -> bool {
+        if a.is_infinite() || b.is_infinite() {
+            return a.is_infinite() && b.is_infinite();
+        }
+        (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn matches_naive_objective_across_modes() {
+        for mode in [AlphaMode::Conservative, AlphaMode::Pairwise, AlphaMode::Zero] {
+            let (am, tenants) = setup(mode);
+            let tables = PrefixTables::for_tenants(&am.cost, &tenants);
+            for cfg in [
+                Config {
+                    partitions: vec![6, 3, 0],
+                    cores: vec![0, 2, 2],
+                },
+                Config {
+                    partitions: vec![6, 6, 6],
+                    cores: vec![0, 0, 0],
+                },
+                Config {
+                    partitions: vec![0, 0, 0],
+                    cores: vec![2, 1, 1],
+                },
+                Config {
+                    partitions: vec![4, 4, 4],
+                    cores: vec![1, 1, 1],
+                },
+            ] {
+                let ev = DeltaEvaluator::new(&am, &tenants, &tables, &cfg);
+                let naive = am.objective(&tenants, &cfg);
+                assert!(
+                    agree(ev.objective(), naive),
+                    "{mode:?} {cfg:?}: delta {} vs naive {naive}",
+                    ev.objective()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_move_matches_fresh_build() {
+        for mode in [AlphaMode::Conservative, AlphaMode::Pairwise, AlphaMode::Zero] {
+            let (am, tenants) = setup(mode);
+            let tables = PrefixTables::for_tenants(&am.cost, &tenants);
+            let cfg = Config {
+                partitions: vec![2, 4, 0],
+                cores: vec![1, 1, 2],
+            };
+            let ev = DeltaEvaluator::new(&am, &tenants, &tables, &cfg);
+            for (m, new_p, new_cores) in [
+                (0usize, 4usize, vec![1usize, 1, 2]),
+                (2, 3, vec![1, 1, 2]),
+                (1, 6, vec![2, 0, 2]),
+                (0, 0, vec![2, 1, 1]),
+            ] {
+                let (_, got) = ev.score_move(m, new_p, &new_cores);
+                let mut moved = cfg.clone();
+                moved.partitions[m] = new_p;
+                moved.cores = new_cores.clone();
+                let fresh = DeltaEvaluator::new(&am, &tenants, &tables, &moved);
+                assert!(
+                    agree(got, fresh.objective()),
+                    "{mode:?} move m={m} p={new_p}: {} vs {}",
+                    got,
+                    fresh.objective()
+                );
+                let naive = am.objective(&tenants, &moved);
+                assert!(agree(got, naive), "{mode:?}: {} vs naive {}", got, naive);
+            }
+        }
+    }
+
+    #[test]
+    fn commit_then_objective_is_drift_free() {
+        let (am, tenants) = setup(AlphaMode::Conservative);
+        let tables = PrefixTables::for_tenants(&am.cost, &tenants);
+        let mut cfg = Config::all_cpu(3);
+        cfg.cores = vec![2, 1, 1];
+        let mut ev = DeltaEvaluator::new(&am, &tenants, &tables, &cfg);
+        for (m, p, cores) in [
+            (0usize, 2usize, vec![1usize, 2, 1]),
+            (1, 3, vec![1, 1, 2]),
+            (2, 6, vec![2, 2, 0]),
+            (0, 6, vec![0, 2, 0]),
+        ] {
+            ev.commit(m, p, &cores);
+            cfg.partitions[m] = p;
+            cfg.cores = cores;
+            // After a commit the cached state is literally a fresh build.
+            let fresh = DeltaEvaluator::new(&am, &tenants, &tables, &cfg);
+            assert_eq!(ev.objective().to_bits(), fresh.objective().to_bits());
+        }
+    }
+
+    #[test]
+    fn starvation_matches_direct_count() {
+        let (am, tenants) = setup(AlphaMode::Conservative);
+        let tables = PrefixTables::for_tenants(&am.cost, &tenants);
+        let cfg = Config {
+            partitions: vec![2, 0, 6],
+            cores: vec![0, 0, 0],
+        };
+        let ev = DeltaEvaluator::new(&am, &tenants, &tables, &cfg);
+        // model 0: 4 starved suffix layers; model 1: 6; model 2: full-TPU.
+        assert_eq!(ev.score().0, 10);
+        let (st, _) = ev.score_move(1, 3, &[0, 0, 0]);
+        assert_eq!(st, 7);
+        let (st, _) = ev.score_move(1, 3, &[0, 1, 0]);
+        assert_eq!(st, 4);
+    }
+
+    #[test]
+    fn infinite_regimes_detected() {
+        let (am, tenants) = setup(AlphaMode::Conservative);
+        let tables = PrefixTables::for_tenants(&am.cost, &tenants);
+        // Suffix with no core anywhere ⇒ ∞.
+        let cfg = Config {
+            partitions: vec![3, 6, 6],
+            cores: vec![0, 0, 0],
+        };
+        let ev = DeltaEvaluator::new(&am, &tenants, &tables, &cfg);
+        assert!(ev.objective().is_infinite());
+        // Moving the starved model to full TPU cures it.
+        let (_, obj) = ev.score_move(0, 6, &[0, 0, 0]);
+        assert!(obj.is_finite());
+    }
+}

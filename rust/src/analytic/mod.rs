@@ -7,6 +7,10 @@
 //! configurations (ρ ≥ 1 on either processor) evaluate to `f64::INFINITY`,
 //! which the allocator naturally avoids.
 
+pub mod delta;
+
+pub use delta::{objective_with_tables, DeltaEvaluator};
+
 use crate::model::ModelMeta;
 use crate::tpu::CostModel;
 

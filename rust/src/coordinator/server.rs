@@ -15,7 +15,7 @@ use crate::metrics::LatencyHistogram;
 use crate::model::Manifest;
 use crate::runtime::service::{ExecHandle, ExecService};
 use crate::sim::reconfig::RateMonitor;
-use crate::tpu::{CostModel, SramCache};
+use crate::tpu::{CostModel, PrefixTables, SramCache};
 
 use super::pools::{CpuJob, CpuPools};
 
@@ -373,6 +373,11 @@ fn realloc_loop(
     k_max: usize,
     stop: Arc<AtomicBool>,
 ) {
+    // The served model set is fixed for the life of the server, so the
+    // prefix-sum cost tables are built once here and reused by every
+    // online decision — each re-plan is then pure O(1)-per-candidate
+    // delta evaluation (EXPERIMENTS.md §Perf).
+    let tables = PrefixTables::for_tenants(&am.cost, &tenants);
     let mut last_rates: Vec<f64> = vec![0.0; tenants.len()];
     while !stop.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_secs_f64(rt.realloc_period_s));
@@ -393,7 +398,7 @@ fn realloc_loop(
                 rate: *r,
             })
             .collect();
-        let alloc = alloc::hill_climb(&am, &estimated, k_max);
+        let alloc = alloc::hill_climb_with_tables(&am, &estimated, &tables, k_max);
         let micros = t0.elapsed().as_secs_f64() * 1e6;
         last_rates = rates;
         let mut cfg = shared.config.lock().unwrap();

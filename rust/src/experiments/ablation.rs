@@ -105,7 +105,8 @@ pub fn run(ctx: &Ctx) -> Result<Ablation, String> {
         let rates: Vec<f64> = vec![per_rate; names.len()];
         let tenants = ctx.tenants(names, &rates)?;
         let hc = alloc::hill_climb(&ctx.am, &tenants, ctx.k_max);
-        let ex = alloc::exhaustive_best(&ctx.am, &tenants, ctx.k_max);
+        let ex = alloc::exhaustive_best(&ctx.am, &tenants, ctx.k_max)
+            .ok_or_else(|| format!("{}: no feasible configuration", names.join("+")))?;
         rows.push(GapRow {
             workload: names.join("+"),
             hc_objective: hc.predicted_objective,

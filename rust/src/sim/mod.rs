@@ -14,7 +14,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::analytic::{Config, Tenant};
 use crate::metrics::{LatencyHistogram, TimeSeries, Welford};
-use crate::tpu::{CostModel, SramCache};
+use crate::tpu::{CostModel, PrefixTables, SramCache};
 use crate::util::rng::Rng;
 use crate::workload::{generate_arrivals, RateSchedule};
 
@@ -82,8 +82,10 @@ pub struct Request {
 
 /// Per-model service-time memo for the current configuration — the DES
 /// hot loop touches these on every execution, and they are pure functions
-/// of (model, p), so they are precomputed here and rebuilt on reconfig
-/// (EXPERIMENTS.md §Perf).
+/// of (model, p), so they are precomputed here and rebuilt on reconfig.
+/// The memo is filled from the per-model [`PrefixTables`] (built once per
+/// simulator), so a rebuild is O(n) lookups, not O(n·L) segment sums —
+/// this keeps high-frequency reconfiguration cheap (EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone, Default)]
 struct ServiceMemo {
     resident_bytes: u64,
@@ -96,9 +98,11 @@ struct ServiceMemo {
 
 /// In-flight simulator state for one run.
 pub struct Simulator<'a> {
-    cost: &'a CostModel,
     tenants: &'a [Tenant],
     cfg: Config,
+    /// One prefix-sum cost table per tenant (immutable across reconfigs;
+    /// the `CostModel` itself is only needed at construction).
+    tables: Vec<PrefixTables>,
     memo: Vec<ServiceMemo>,
     cache: SramCache,
     // TPU station
@@ -125,11 +129,12 @@ impl<'a> Simulator<'a> {
         opts: SimOptions,
     ) -> Simulator<'a> {
         let n = tenants.len();
-        let memo = build_memo(cost, tenants, &cfg);
+        let tables = PrefixTables::for_tenants(cost, tenants);
+        let memo = build_memo(&tables, &cfg);
         Simulator {
-            cost,
             tenants,
             cfg,
+            tables,
             memo,
             cache: SramCache::new(cost.hw.sram_bytes),
             tpu_queue: VecDeque::new(),
@@ -164,7 +169,7 @@ impl<'a> Simulator<'a> {
                 self.cache.invalidate(i);
             }
         }
-        self.memo = build_memo(self.cost, self.tenants, &cfg);
+        self.memo = build_memo(&self.tables, &cfg);
         self.cfg = cfg;
     }
 
@@ -349,19 +354,19 @@ impl<'a> Simulator<'a> {
     }
 }
 
-fn build_memo(cost: &CostModel, tenants: &[Tenant], cfg: &Config) -> Vec<ServiceMemo> {
-    tenants
+fn build_memo(tables: &[PrefixTables], cfg: &Config) -> Vec<ServiceMemo> {
+    tables
         .iter()
         .enumerate()
-        .map(|(i, t)| {
+        .map(|(i, tab)| {
             let p = cfg.partitions[i];
             ServiceMemo {
-                resident_bytes: cost.resident_bytes(&t.model, p),
-                tpu_service: cost.tpu_service(&t.model, p),
-                load_time: cost.load_time(&t.model, p),
-                cpu_service: cost.cpu_service(&t.model, p),
-                input_transfer: cost.input_transfer(&t.model),
-                output_transfer: cost.output_transfer(&t.model, p),
+                resident_bytes: tab.resident_bytes(p),
+                tpu_service: tab.tpu_service(p),
+                load_time: tab.load_time(p),
+                cpu_service: tab.cpu_service(p),
+                input_transfer: tab.input_transfer(),
+                output_transfer: tab.output_transfer(p),
             }
         })
         .collect()

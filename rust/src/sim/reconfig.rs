@@ -5,6 +5,7 @@ use std::collections::VecDeque;
 
 use crate::alloc;
 use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::tpu::PrefixTables;
 
 /// Periodic decision hook the DES (and the live coordinator) invokes.
 pub trait ReconfigPolicy {
@@ -78,6 +79,15 @@ pub struct SwapLessPolicy {
     threshold: f64,
     last_rates: Vec<f64>,
     pub decision_micros: Vec<f64>,
+    /// Per-model prefix tables, built on the first decision and reused by
+    /// every re-plan (rates change between decisions; the tables are
+    /// rate-independent). Keyed by (model name, partition count) — names
+    /// uniquely identify models under the manifest contract, and the
+    /// partition count guards against a same-named model that was
+    /// re-segmented — so a policy handed a different mix rebuilds instead
+    /// of planning with stale tables.
+    tables: Vec<PrefixTables>,
+    table_models: Vec<(String, usize)>,
 }
 
 impl SwapLessPolicy {
@@ -97,6 +107,8 @@ impl SwapLessPolicy {
             threshold,
             last_rates: vec![0.0; n_models],
             decision_micros: Vec::new(),
+            tables: Vec::new(),
+            table_models: Vec::new(),
         }
     }
 
@@ -125,6 +137,17 @@ impl ReconfigPolicy for SwapLessPolicy {
         if !self.rates_changed(&rates) {
             return None;
         }
+        let stale = self.table_models.len() != tenants.len()
+            || self.table_models.iter().zip(tenants).any(|((name, pp), t)| {
+                *name != t.model.name || *pp != t.model.partition_points
+            });
+        if stale {
+            self.tables = PrefixTables::for_tenants(&self.am.cost, tenants);
+            self.table_models = tenants
+                .iter()
+                .map(|t| (t.model.name.clone(), t.model.partition_points))
+                .collect();
+        }
         let t0 = std::time::Instant::now();
         let estimated: Vec<Tenant> = tenants
             .iter()
@@ -134,7 +157,7 @@ impl ReconfigPolicy for SwapLessPolicy {
                 rate: *r,
             })
             .collect();
-        let alloc = alloc::hill_climb(&self.am, &estimated, self.k_max);
+        let alloc = alloc::hill_climb_with_tables(&self.am, &estimated, &self.tables, self.k_max);
         self.decision_micros
             .push(t0.elapsed().as_secs_f64() * 1e6);
         self.last_rates = rates;

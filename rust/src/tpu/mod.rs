@@ -15,8 +15,10 @@
 //!   a miss reloads the prefix's resident set over the bus (`T_load`).
 
 pub mod cache;
+pub mod prefix;
 
 pub use cache::SramCache;
+pub use prefix::PrefixTables;
 
 use crate::config::HardwareSpec;
 use crate::model::{ModelMeta, SegmentMeta};

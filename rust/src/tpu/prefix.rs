@@ -1,0 +1,202 @@
+//! Precomputed per-model prefix-sum cost tables.
+//!
+//! Every [`CostModel`] query about a prefix `[1:p]` — TPU compute, CPU
+//! suffix time, resident bytes, reload time, intra-model swap time,
+//! boundary transfer — is a pure function of `(model, p)` that the naive
+//! path recomputes by iterating the segment list (O(L) per call). The
+//! allocator's hill climb issues O(n·P) such queries per decision, so the
+//! segment iteration dominates decision latency (EXPERIMENTS.md §Perf).
+//!
+//! [`PrefixTables`] evaluates all of them once per model — O(P²) trivial
+//! work at construction, reused across every candidate — and answers each
+//! query in O(1). All sums are accumulated in the exact same left-to-right
+//! order as the naive `CostModel` loops, so the table entries are
+//! **bit-for-bit identical** to the values `CostModel` returns (asserted
+//! by `prop_prefix_tables_bitexact` in `tests/property_tests.rs`).
+
+use crate::model::ModelMeta;
+use crate::tpu::CostModel;
+
+/// O(1) per-prefix cost answers for one model under one [`CostModel`].
+///
+/// Invalidation: tables depend only on the model metadata and the
+/// hardware spec, both immutable for the life of a tenant mix — rates and
+/// core allocations do NOT enter, so one build serves every allocator
+/// decision for that mix.
+#[derive(Debug, Clone)]
+pub struct PrefixTables {
+    /// `P_i` — number of partition points (tables are indexed `0..=P`).
+    pub partition_points: usize,
+    /// `s^TPU(p)` — matches [`CostModel::tpu_service`].
+    tpu_service: Vec<f64>,
+    /// `s^CPU(p)` — matches [`CostModel::cpu_service`].
+    cpu_service: Vec<f64>,
+    /// Resident SRAM bytes — matches [`CostModel::resident_bytes`].
+    resident_bytes: Vec<u64>,
+    /// `T_load(p)` — matches [`CostModel::load_time`].
+    load_time: Vec<f64>,
+    /// Per-inference intra-model swap — matches [`CostModel::intra_swap_time`].
+    intra_swap: Vec<f64>,
+    /// `d_out(p)/B` — matches [`CostModel::output_transfer`].
+    output_transfer: Vec<f64>,
+    /// `d_in/B` — matches [`CostModel::input_transfer`].
+    input_transfer: f64,
+}
+
+impl PrefixTables {
+    pub fn new(cost: &CostModel, model: &ModelMeta) -> PrefixTables {
+        let pp = model.partition_points;
+        let mut tpu_service = vec![0.0; pp + 1];
+        let mut cpu_service = vec![0.0; pp + 1];
+        let mut resident_bytes = vec![0u64; pp + 1];
+        let mut load_time = vec![0.0; pp + 1];
+        let mut intra_swap = vec![0.0; pp + 1];
+        let mut output_transfer = vec![0.0; pp + 1];
+
+        // Prefix pass: weight bytes and TPU compute, accumulated in the
+        // same order as the naive per-call loops.
+        let mut weight_acc = 0u64;
+        let mut compute_acc = 0.0f64;
+        for p in 0..=pp {
+            if p > 0 {
+                let seg = &model.segments[p - 1];
+                weight_acc += seg.sim_weight_bytes;
+                compute_acc += cost.tpu_segment_time(model, seg);
+            }
+            let excess = weight_acc.saturating_sub(cost.hw.sram_bytes);
+            intra_swap[p] = excess as f64 / cost.hw.bus_bytes_per_sec;
+            resident_bytes[p] = weight_acc.min(cost.hw.sram_bytes);
+            load_time[p] = resident_bytes[p] as f64 / cost.hw.bus_bytes_per_sec;
+            tpu_service[p] = if p == 0 {
+                0.0
+            } else {
+                cost.hw.tpu_dispatch_s + compute_acc + intra_swap[p]
+            };
+            output_transfer[p] = model.boundary_bytes(p) as f64 / cost.hw.bus_bytes_per_sec;
+            // Suffix sums re-fold forward from p so rounding matches the
+            // naive left-to-right accumulation exactly (a backward
+            // running sum would differ in the last ulps). O(P²) once.
+            cpu_service[p] = if p >= pp {
+                0.0
+            } else {
+                let t1: f64 = model.segments[p..]
+                    .iter()
+                    .map(|s| cost.cpu_segment_time(s))
+                    .sum();
+                cost.hw.cpu_dispatch_s + t1
+            };
+        }
+
+        PrefixTables {
+            partition_points: pp,
+            tpu_service,
+            cpu_service,
+            resident_bytes,
+            load_time,
+            intra_swap,
+            output_transfer,
+            input_transfer: model.input_bytes() as f64 / cost.hw.bus_bytes_per_sec,
+        }
+    }
+
+    /// Build one table per tenant model (the common call site).
+    pub fn for_tenants(cost: &CostModel, tenants: &[crate::analytic::Tenant]) -> Vec<PrefixTables> {
+        tenants
+            .iter()
+            .map(|t| PrefixTables::new(cost, &t.model))
+            .collect()
+    }
+
+    #[inline]
+    pub fn tpu_service(&self, p: usize) -> f64 {
+        self.tpu_service[p]
+    }
+
+    #[inline]
+    pub fn cpu_service(&self, p: usize) -> f64 {
+        self.cpu_service[p]
+    }
+
+    #[inline]
+    pub fn resident_bytes(&self, p: usize) -> u64 {
+        self.resident_bytes[p]
+    }
+
+    #[inline]
+    pub fn load_time(&self, p: usize) -> f64 {
+        self.load_time[p]
+    }
+
+    #[inline]
+    pub fn intra_swap_time(&self, p: usize) -> f64 {
+        self.intra_swap[p]
+    }
+
+    #[inline]
+    pub fn output_transfer(&self, p: usize) -> f64 {
+        self.output_transfer[p]
+    }
+
+    #[inline]
+    pub fn input_transfer(&self) -> f64 {
+        self.input_transfer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+
+    fn check_model(name: &str, segs: usize, bytes: u64, flops: u64) {
+        let cost = CostModel::new(HardwareSpec::default());
+        let m = synthetic_model(name, segs, bytes, flops);
+        let t = PrefixTables::new(&cost, &m);
+        assert_eq!(t.partition_points, segs);
+        for p in 0..=segs {
+            assert_eq!(t.tpu_service(p), cost.tpu_service(&m, p), "tpu p={p}");
+            assert_eq!(t.cpu_service(p), cost.cpu_service(&m, p), "cpu p={p}");
+            assert_eq!(t.resident_bytes(p), cost.resident_bytes(&m, p), "res p={p}");
+            assert_eq!(t.load_time(p), cost.load_time(&m, p), "load p={p}");
+            assert_eq!(
+                t.intra_swap_time(p),
+                cost.intra_swap_time(&m, p),
+                "swap p={p}"
+            );
+            assert_eq!(
+                t.output_transfer(p),
+                cost.output_transfer(&m, p),
+                "out p={p}"
+            );
+        }
+        assert_eq!(t.input_transfer(), cost.input_transfer(&m));
+    }
+
+    #[test]
+    fn bitexact_small_model() {
+        check_model("small", 4, 1_000_000, 100_000_000);
+    }
+
+    #[test]
+    fn bitexact_oversized_model() {
+        // 40 MB > 8 MB SRAM: exercises the intra-swap and capped-resident
+        // branches.
+        check_model("big", 8, 5_000_000, 1_000_000_000);
+    }
+
+    #[test]
+    fn bitexact_single_segment() {
+        check_model("tiny", 1, 500_000, 10_000_000);
+    }
+
+    #[test]
+    fn endpoints() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let m = synthetic_model("m", 6, 1_000_000, 500_000_000);
+        let t = PrefixTables::new(&cost, &m);
+        assert_eq!(t.tpu_service(0), 0.0);
+        assert_eq!(t.cpu_service(6), 0.0);
+        assert_eq!(t.resident_bytes(0), 0);
+    }
+}

@@ -4,11 +4,14 @@
 //! the in-repo deterministic RNG — every case prints its seed on failure.
 
 use swapless::alloc;
-use swapless::analytic::{check_constraints, AnalyticModel, Config, Tenant};
+use swapless::analytic::{
+    check_constraints, objective_with_tables, AlphaMode, AnalyticModel, Config, DeltaEvaluator,
+    Tenant,
+};
 use swapless::config::HardwareSpec;
 use swapless::model::synthetic_model;
 use swapless::sim::{simulate, SimOptions};
-use swapless::tpu::{CostModel, SramCache};
+use swapless::tpu::{CostModel, PrefixTables, SramCache};
 use swapless::util::json::{parse, Json};
 use swapless::util::rng::Rng;
 
@@ -321,6 +324,192 @@ fn prop_des_matches_analytic_on_stable_single_tenant() {
         checked += 1;
     }
     assert!(checked >= 10, "too few stable cases checked ({checked})");
+}
+
+/// ∞ must match ∞; finite values must agree to 1e-9 relative.
+fn agree(a: f64, b: f64) -> bool {
+    if a.is_infinite() || b.is_infinite() {
+        return a.is_infinite() && b.is_infinite() && a.signum() == b.signum();
+    }
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// A random configuration for `tenants` — arbitrary partitions and cores,
+/// deliberately including infeasible ones (suffix with zero cores) so the
+/// divergent regimes are exercised too.
+fn random_config(rng: &mut Rng, tenants: &[Tenant]) -> Config {
+    let partitions: Vec<usize> = tenants
+        .iter()
+        .map(|t| rng.below(t.model.partition_points + 1))
+        .collect();
+    let cores: Vec<usize> = (0..tenants.len()).map(|_| rng.below(4)).collect();
+    Config { partitions, cores }
+}
+
+const MODES: [AlphaMode; 3] = [
+    AlphaMode::Conservative,
+    AlphaMode::Pairwise,
+    AlphaMode::Zero,
+];
+
+#[test]
+fn prop_prefix_tables_bitexact() {
+    // Table entries must equal the naive CostModel answers bit-for-bit —
+    // the tables accumulate in the same order as the per-call loops.
+    let cost = CostModel::new(HardwareSpec::default());
+    for seed in 1100..1100 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let segs = 2 + rng.below(11);
+        let mb_total = rng.range_f64(0.5, 50.0);
+        let gflops = rng.range_f64(0.1, 15.0);
+        let m = synthetic_model(
+            "m",
+            segs,
+            (mb_total * 1e6 / segs as f64) as u64,
+            (gflops * 1e9 / segs as f64) as u64,
+        );
+        let t = PrefixTables::new(&cost, &m);
+        for p in 0..=segs {
+            assert_eq!(
+                t.tpu_service(p).to_bits(),
+                cost.tpu_service(&m, p).to_bits(),
+                "seed {seed} p={p}: tpu_service"
+            );
+            assert_eq!(
+                t.cpu_service(p).to_bits(),
+                cost.cpu_service(&m, p).to_bits(),
+                "seed {seed} p={p}: cpu_service"
+            );
+            assert_eq!(
+                t.resident_bytes(p),
+                cost.resident_bytes(&m, p),
+                "seed {seed} p={p}: resident_bytes"
+            );
+            assert_eq!(
+                t.load_time(p).to_bits(),
+                cost.load_time(&m, p).to_bits(),
+                "seed {seed} p={p}: load_time"
+            );
+            assert_eq!(
+                t.intra_swap_time(p).to_bits(),
+                cost.intra_swap_time(&m, p).to_bits(),
+                "seed {seed} p={p}: intra_swap_time"
+            );
+            assert_eq!(
+                t.output_transfer(p).to_bits(),
+                cost.output_transfer(&m, p).to_bits(),
+                "seed {seed} p={p}: output_transfer"
+            );
+        }
+        assert_eq!(t.input_transfer().to_bits(), cost.input_transfer(&m).to_bits());
+    }
+}
+
+#[test]
+fn prop_delta_evaluator_matches_naive_objective() {
+    // ≥1000 randomized (mix, partition, rate, α-mode) configurations:
+    // the table-backed evaluator must agree with the naive objective()
+    // within 1e-9 relative (∞ matching ∞ exactly).
+    let cost = CostModel::new(HardwareSpec::default());
+    let mut checked = 0usize;
+    for seed in 2000..2000 + 120u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let tables = PrefixTables::for_tenants(&cost, &tenants);
+        for mode in MODES {
+            let am = AnalyticModel::with_alpha_mode(cost.clone(), mode);
+            for _ in 0..3 {
+                let cfg = random_config(&mut rng, &tenants);
+                let naive = am.objective(&tenants, &cfg);
+                let fast = objective_with_tables(&am, &tenants, &tables, &cfg);
+                assert!(
+                    agree(fast, naive),
+                    "seed {seed} {mode:?} {cfg:?}: delta {fast} vs naive {naive}"
+                );
+                // The full Evaluation aggregates must agree too.
+                let ev = am.evaluate(&tenants, &cfg);
+                assert!(
+                    agree(fast, ev.objective),
+                    "seed {seed} {mode:?}: delta {fast} vs evaluate() {}",
+                    ev.objective
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 1000, "only {checked} configurations checked");
+}
+
+#[test]
+fn prop_delta_move_scoring_matches_naive() {
+    // Scoring a single-tenant move against cached state must equal the
+    // naive objective of the moved configuration — including moves that
+    // activate/deactivate tenants (λ^TPU changes), flip the overflow
+    // regime, and reshuffle cores.
+    let cost = CostModel::new(HardwareSpec::default());
+    let mut checked = 0usize;
+    for seed in 3000..3000 + 100u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let tables = PrefixTables::for_tenants(&cost, &tenants);
+        for mode in MODES {
+            let am = AnalyticModel::with_alpha_mode(cost.clone(), mode);
+            let cfg = random_config(&mut rng, &tenants);
+            let ev = DeltaEvaluator::new(&am, &tenants, &tables, &cfg);
+            for _ in 0..4 {
+                let m = rng.below(tenants.len());
+                let new_p = rng.below(tenants[m].model.partition_points + 1);
+                let mut new_cores = cfg.cores.clone();
+                for k in new_cores.iter_mut() {
+                    if rng.f64() < 0.3 {
+                        *k = rng.below(4);
+                    }
+                }
+                let (_, got) = ev.score_move(m, new_p, &new_cores);
+                let mut moved = cfg.clone();
+                moved.partitions[m] = new_p;
+                moved.cores = new_cores;
+                let naive = am.objective(&tenants, &moved);
+                assert!(
+                    agree(got, naive),
+                    "seed {seed} {mode:?} move m={m}→{new_p}: delta {got} vs naive {naive}"
+                );
+                // And against a fresh table-backed build of the moved cfg.
+                let fresh = objective_with_tables(&am, &tenants, &tables, &moved);
+                assert!(agree(got, fresh), "seed {seed} {mode:?}: vs fresh build");
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 1000, "only {checked} moves checked");
+}
+
+#[test]
+fn prop_engine_hill_climb_matches_naive_reference() {
+    // With strictly positive rates (no exact-tie no-op moves) the
+    // incremental climb must take move-for-move the same trajectory as
+    // the pre-engine implementation. (Zero-rate tenants can flip exact
+    // float ties either way — both outcomes are valid local optima — so
+    // they are exercised by the feasibility properties above instead.)
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    for seed in 4000..4000 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let k_max = 1 + rng.below(6);
+        let fast = alloc::hill_climb(&am, &tenants, k_max);
+        let slow = alloc::hill_climb_naive(&am, &tenants, k_max);
+        assert_eq!(
+            fast.config, slow.config,
+            "seed {seed}: engine and naive climbs diverged"
+        );
+        assert_eq!(fast.evaluations, slow.evaluations, "seed {seed}");
+        assert!(
+            agree(fast.predicted_objective, slow.predicted_objective),
+            "seed {seed}: {} vs {}",
+            fast.predicted_objective,
+            slow.predicted_objective
+        );
+    }
 }
 
 #[test]

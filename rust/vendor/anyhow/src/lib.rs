@@ -1,0 +1,127 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate covering
+//! exactly the surface `swapless` uses: [`Error`], [`Result`], the
+//! [`anyhow!`] macro, the [`Context`] extension trait, and
+//! [`Error::msg`]. The error is a plain message string — no backtraces,
+//! no downcasting — which is all the coordinator/runtime layers need.
+
+use std::fmt;
+
+/// A string-backed error value. Like the real `anyhow::Error`, it does
+/// NOT implement `std::error::Error` itself so that the blanket
+/// `From<E: std::error::Error>` conversion (what makes `?` work on
+/// `io::Result` etc.) does not collide with `impl From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — with the same defaulted error parameter as the
+/// real crate, so `Result<T, String>` written against this alias works.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, replicating `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+}
+
+/// `bail!(...)` — early-return an error (provided for completeness).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_forms() {
+        let plain = anyhow!("plain message");
+        assert_eq!(plain.to_string(), "plain message");
+        let x = 7;
+        let inline = anyhow!("value {x} here");
+        assert_eq!(inline.to_string(), "value 7 here");
+        let formatted = anyhow!("a {} b {:?}", 1, "q");
+        assert_eq!(formatted.to_string(), "a 1 b \"q\"");
+        let from_string = anyhow!(String::from("already a string"));
+        assert_eq!(from_string.to_string(), "already a string");
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn io_fail() -> Result<()> {
+            std::fs::read("/definitely/not/a/real/path/xyz")?;
+            Ok(())
+        }
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.with_context(|| format!("outer{}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "outer2: inner");
+    }
+
+    #[test]
+    fn msg_from_display() {
+        let e = Error::msg(42);
+        assert_eq!(e.to_string(), "42");
+    }
+}

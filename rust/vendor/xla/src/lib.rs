@@ -1,0 +1,135 @@
+//! Offline stub of the `xla` (xla-rs) PJRT API surface used by the
+//! swapless runtime layer (`runtime::Engine`).
+//!
+//! The build environment carries no XLA C++ distribution, so this crate
+//! provides the same types and signatures with every entry point
+//! returning a descriptive error at runtime. The analytic model,
+//! allocator, simulator, and coordinator logic never touch PJRT, so all
+//! tier-1 tests run unaffected; the integration tests that do need real
+//! execution skip themselves when no artifacts are present.
+//!
+//! To run against real AOT artifacts, replace this path dependency with
+//! the actual `xla` crate (same API) in `rust/Cargo.toml`.
+
+use std::fmt;
+use std::rc::Rc;
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT backend unavailable: swapless was built against the offline xla stub \
+     (rust/vendor/xla); swap in the real xla crate to execute artifacts";
+
+/// Stub error type; `Display` is all the caller formatting needs.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// PJRT client handle. Like the real client it is deliberately `!Send`
+/// (`Rc`-based) so the `ExecService` single-executor-thread discipline
+/// is still enforced by the compiler against the stub.
+pub struct PjRtClient {
+    _not_send: Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline xla stub"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::vec1(&[1.0]).reshape(&[1]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+    }
+}

@@ -1,8 +1,12 @@
 //! Capacity planning with the analytic model (no serving involved):
-//! for a given model mix, sweep the offered load and print how the
-//! optimal configuration, predicted latency, and processor utilizations
-//! evolve — the "what can this box sustain?" question an operator asks
-//! before deployment.
+//! for a given model mix, sweep the offered load through *admission
+//! control* and print how the optimal configuration, predicted latency,
+//! and processor utilizations evolve — the "what can this box sustain?"
+//! question an operator asks before deployment. The saturation point is
+//! exactly where `alloc::admit` starts refusing the mix, and the typed
+//! `AdmissionError` reports the diverged objective it refused at.
+//!
+//! Runs on a fresh checkout (synthetic manifest fallback).
 //!
 //! ```bash
 //! cargo run --release --example capacity_planning
@@ -17,7 +21,7 @@ use swapless::tpu::CostModel;
 const MIX: [&str; 2] = ["efficientnet", "inceptionv4"];
 
 fn main() -> Result<(), String> {
-    let manifest = Manifest::load("artifacts")?;
+    let manifest = Manifest::load_or_synthetic("artifacts");
     let hw = HardwareSpec::default();
     let am = AnalyticModel::new(CostModel::new(hw.clone()));
 
@@ -39,27 +43,34 @@ fn main() -> Result<(), String> {
                 })
             })
             .collect::<Result<_, String>>()?;
-        let plan = alloc::hill_climb(&am, &tenants, hw.cpu_cores);
-        let mean = am.mean_latency(&tenants, &plan.config);
-        let rho = am.tpu_utilization(&tenants, &plan.config);
-        if !mean.is_finite() {
-            saturation = Some(total);
-            println!("{total:>9.1}  -- infeasible: no stable configuration --");
-            break;
+        // The same admission decision the live `Server::attach` makes.
+        match alloc::admit(&am, &tenants, hw.cpu_cores) {
+            Ok(plan) => {
+                let mean = am.mean_latency(&tenants, &plan.config);
+                let rho = am.tpu_utilization(&tenants, &plan.config);
+                println!(
+                    "{:>9.1}  {:<12} {:<10} {:>9.2} {:>9.1} {:>11.4} {:>10}",
+                    total,
+                    format!("{:?}", plan.config.partitions),
+                    format!("{:?}", plan.config.cores),
+                    rho,
+                    mean * 1e3,
+                    plan.predicted_objective,
+                    plan.evaluations
+                );
+            }
+            Err(e) => {
+                saturation = Some(total);
+                println!(
+                    "{total:>9.1}  -- admission refused: objective {} at ρ {:.2} --",
+                    e.predicted_objective, e.tpu_utilization
+                );
+                break;
+            }
         }
-        println!(
-            "{:>9.1}  {:<12} {:<10} {:>9.2} {:>9.1} {:>11.4} {:>10}",
-            total,
-            format!("{:?}", plan.config.partitions),
-            format!("{:?}", plan.config.cores),
-            rho,
-            mean * 1e3,
-            plan.predicted_objective,
-            plan.evaluations
-        );
     }
     match saturation {
-        Some(rate) => println!("\nsaturation: the mix cannot sustain {rate:.1} RPS on this hardware."),
+        Some(rate) => println!("\nsaturation: admission control refuses this mix at {rate:.1} RPS on this hardware."),
         None => println!("\nno saturation within the swept range."),
     }
 

@@ -1,7 +1,11 @@
-//! Live dynamic adaptation (the Fig. 8 scenario at compressed timescale):
-//! two models served through the real stack while the request mix shifts;
-//! the online re-allocator detects the change from its sliding window and
-//! re-partitions on the fly. Watch the config flips in the output.
+//! Live dynamic adaptation with tenant churn (the Fig. 8 + churn scenario
+//! at compressed timescale): two models served through the real stack
+//! while the request mix shifts AND a third tenant attaches mid-run and
+//! departs again. The online policy detects rate changes from its sliding
+//! window and re-plans; attach/detach fire the same policy's lifecycle
+//! hooks. Watch the config flips and admission decisions in the output.
+//!
+//! Runs on a fresh checkout (synthetic manifest + emulated backend).
 //!
 //! ```bash
 //! cargo run --release --example dynamic_adaptation
@@ -9,10 +13,8 @@
 
 use std::time::{Duration, Instant};
 
-use swapless::alloc;
-use swapless::analytic::Tenant;
 use swapless::config::{HardwareSpec, RuntimeConfig};
-use swapless::coordinator::{Server, ServerOptions};
+use swapless::coordinator::{AttachError, AttachOptions, ServerBuilder};
 use swapless::model::Manifest;
 use swapless::tpu::CostModel;
 use swapless::util::rng::Rng;
@@ -21,77 +23,118 @@ const MODELS: [&str; 2] = ["mnasnet", "squeezenet"];
 /// Three phases of (mnasnet, squeezenet) RPS — squeezenet ramps up.
 const PHASES: [(f64, f64); 3] = [(6.0, 1.0), (6.0, 8.0), (1.0, 12.0)];
 const PHASE_S: f64 = 6.0;
+/// The guest tenant attaches at the start of phase 1, departs at phase 2.
+const GUEST: &str = "efficientnet";
+const GUEST_RATE: f64 = 3.0;
 
 fn main() -> Result<(), String> {
-    let manifest = Manifest::load("artifacts")?;
+    let manifest = Manifest::load_or_synthetic("artifacts");
     let hw = HardwareSpec::default();
     let cost = CostModel::new(hw.clone());
-    let am = swapless::analytic::AnalyticModel::new(cost.clone());
-    let names: Vec<String> = MODELS.iter().map(|s| s.to_string()).collect();
-    let tenants: Vec<Tenant> = MODELS
-        .iter()
-        .zip([PHASES[0].0, PHASES[0].1])
-        .map(|(n, r)| {
-            Ok(Tenant {
-                model: manifest.get(n)?.clone(),
-                rate: r,
-            })
-        })
-        .collect::<Result<_, String>>()?;
 
-    let initial = alloc::hill_climb(&am, &tenants, hw.cpu_cores).config;
+    let server = ServerBuilder::new(&manifest, cost)
+        .k_max(hw.cpu_cores)
+        .adaptive(true)
+        .runtime(RuntimeConfig {
+            rate_window_s: 4.0,
+            realloc_period_s: 1.0,
+            realloc_threshold: 0.3,
+        })
+        .build()
+        .map_err(|e| e.to_string())?;
+    println!("backend: {:?}", server.backend());
+
+    // Attach the two standing tenants through admission control.
+    let mut handles = Vec::new();
+    for (name, rate) in MODELS.iter().zip([PHASES[0].0, PHASES[0].1]) {
+        let h = server
+            .attach(name, AttachOptions { rate_hint: rate })
+            .map_err(|e| e.to_string())?;
+        handles.push(h);
+    }
+    let initial = server.current_config();
     println!(
         "initial plan: P={:?} K={:?}",
         initial.partitions, initial.cores
     );
 
-    let server = Server::start(
-        &manifest,
-        &names,
-        cost,
-        initial,
-        ServerOptions {
-            adaptive: true,
-            runtime: RuntimeConfig {
-                rate_window_s: 4.0,
-                realloc_period_s: 1.0,
-                realloc_threshold: 0.3,
-            },
-            ..Default::default()
-        },
-    )
-    .map_err(|e| e.to_string())?;
+    // Admission control in action: a tenant declaring an impossible rate
+    // is refused with the predicted objective, without disturbing service.
+    match server.attach(GUEST, AttachOptions { rate_hint: 1e6 }) {
+        Err(AttachError::Admission(e)) => println!(
+            "admission: {GUEST} @ 1e6 rps refused (predicted objective {}, ρ {:.2})",
+            e.predicted_objective, e.tpu_utilization
+        ),
+        other => println!("unexpected admission outcome: {other:?}"),
+    }
 
     let mut rng = Rng::new(11);
     let t0 = Instant::now();
     let mut last_cfg = server.current_config();
     let mut pending = Vec::new();
+    let mut guest: Option<swapless::analytic::TenantHandle> = None;
     for (phase, (r0, r1)) in PHASES.iter().enumerate() {
         println!("\n-- phase {phase}: rates = ({r0}, {r1}) rps --");
+        // Churn: the guest joins for phase 1 only.
+        if phase == 1 {
+            match server.attach(GUEST, AttachOptions { rate_hint: GUEST_RATE }) {
+                Ok(h) => {
+                    println!("  attached {GUEST} as {h} @ {GUEST_RATE} rps");
+                    guest = Some(h);
+                }
+                Err(e) => println!("  attach {GUEST} refused: {e}"),
+            }
+        }
+        if phase == 2 {
+            if let Some(h) = guest.take() {
+                let st = server.detach(h).map_err(|e| e.to_string())?;
+                println!(
+                    "  detached {GUEST} ({h}): n={} mean {:.1} ms",
+                    st.latency.count(),
+                    st.latency.mean() * 1e3
+                );
+            }
+        }
         let phase_end = (phase as f64 + 1.0) * PHASE_S;
         let rates = [*r0, *r1];
         let mut next_at = [
             t0.elapsed().as_secs_f64() + rng.exponential(rates[0]),
             t0.elapsed().as_secs_f64() + rng.exponential(rates[1]),
         ];
+        let mut guest_next = guest
+            .map(|_| t0.elapsed().as_secs_f64() + rng.exponential(GUEST_RATE));
         loop {
             let now = t0.elapsed().as_secs_f64();
             if now >= phase_end {
                 break;
             }
+            // Earliest due stream: one of the two standing tenants, or the guest.
             let m = if next_at[0] <= next_at[1] { 0 } else { 1 };
-            if next_at[m] > phase_end {
+            let due_guest = guest_next.map(|t| t < next_at[m]).unwrap_or(false);
+            let due_t = if due_guest { guest_next.unwrap() } else { next_at[m] };
+            if due_t > phase_end {
                 std::thread::sleep(Duration::from_secs_f64(
                     (phase_end - now).max(0.0).min(0.05),
                 ));
                 continue;
             }
-            if next_at[m] > now {
-                std::thread::sleep(Duration::from_secs_f64(next_at[m] - now));
+            if due_t > now {
+                std::thread::sleep(Duration::from_secs_f64(due_t - now));
             }
-            let n_in: usize = server.tenants()[m].model.input_shape.iter().product();
-            pending.push(server.submit(m, vec![0.5; n_in]));
-            next_at[m] += rng.exponential(rates[m]);
+            if due_guest {
+                let h = guest.unwrap();
+                if let Some(meta) = server.model_meta(h) {
+                    let n_in: usize = meta.input_shape.iter().product();
+                    pending.push(server.submit(h, vec![0.5; n_in]));
+                }
+                guest_next = Some(due_t + rng.exponential(GUEST_RATE));
+            } else {
+                let h = handles[m];
+                let meta = server.model_meta(h).expect("standing tenant");
+                let n_in: usize = meta.input_shape.iter().product();
+                pending.push(server.submit(h, vec![0.5; n_in]));
+                next_at[m] += rng.exponential(rates[m]);
+            }
 
             let cfg = server.current_config();
             if cfg != last_cfg {
@@ -105,19 +148,28 @@ fn main() -> Result<(), String> {
             }
         }
     }
+    let mut clean_failures = 0usize;
     for rx in pending {
-        let _ = rx.recv();
+        match rx.recv() {
+            Ok(Ok(_)) => {}
+            _ => clean_failures += 1,
+        }
     }
     let stats = server.stats();
-    println!("\nserved {} requests total", stats.completed);
-    for (i, h) in stats.per_model.iter().enumerate() {
-        if h.count() > 0 {
+    println!(
+        "\nserved {} requests total ({clean_failures} failed cleanly at churn)",
+        stats.completed
+    );
+    for t in &stats.per_tenant {
+        if t.latency.count() > 0 {
             println!(
-                "  {:<12} n={:<5} mean {:>6.1} ms  p95 {:>6.1} ms",
-                MODELS[i],
-                h.count(),
-                h.mean() * 1e3,
-                h.percentile(95.0) * 1e3
+                "  {:<12} {}{} n={:<5} mean {:>6.1} ms  p95 {:>6.1} ms",
+                t.name,
+                t.handle,
+                if t.detached { " (detached)" } else { "" },
+                t.latency.count(),
+                t.latency.mean() * 1e3,
+                t.latency.percentile(95.0) * 1e3
             );
         }
     }

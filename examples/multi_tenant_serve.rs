@@ -1,20 +1,23 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): serve a multi-tenant mix of
-//! real models through the full three-layer stack — Pallas-kernel HLO
-//! artifacts executed via PJRT, SwapLess partitioning, per-model CPU
-//! pools — under open-loop Poisson load, and report latency/throughput
-//! for the SwapLess plan vs the Edge-TPU-compiler baseline.
+//! real models through the full three-layer stack — tenants attached via
+//! admission control, SwapLess partitioning, per-tenant CPU pools — under
+//! open-loop Poisson load, and report latency/throughput for the SwapLess
+//! plan vs the Edge-TPU-compiler baseline.
+//!
+//! Runs on a fresh checkout (synthetic manifest + emulated backend).
 //!
 //! ```bash
 //! cargo run --release --example multi_tenant_serve
 //! ```
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use swapless::alloc;
-use swapless::analytic::{AnalyticModel, Config, Tenant};
+use swapless::analytic::{AnalyticModel, Config, Tenant, TenantHandle};
 use swapless::config::HardwareSpec;
-use swapless::coordinator::{Server, ServerOptions};
-use swapless::model::Manifest;
+use swapless::coordinator::{AttachOptions, ServerBuilder};
+use swapless::model::{Manifest, ModelMeta};
 use swapless::tpu::CostModel;
 use swapless::util::rng::Rng;
 
@@ -23,11 +26,10 @@ const RATES: [f64; 3] = [8.0, 6.0, 4.0]; // requests/second, open loop
 const DURATION_S: f64 = 12.0;
 
 fn main() -> Result<(), String> {
-    let manifest = Manifest::load("artifacts")?;
+    let manifest = Manifest::load_or_synthetic("artifacts");
     let hw = HardwareSpec::default();
     let cost = CostModel::new(hw.clone());
     let am = AnalyticModel::new(cost.clone());
-    let names: Vec<String> = MODELS.iter().map(|s| s.to_string()).collect();
 
     let tenants: Vec<Tenant> = MODELS
         .iter()
@@ -56,29 +58,34 @@ fn main() -> Result<(), String> {
         ("edge-tpu-compiler", compiler_plan.config),
         ("swapless", swapless_plan.config),
     ] {
-        run_config(&manifest, &names, &cost, cfg, label)?;
+        run_config(&manifest, &hw, cfg, label)?;
     }
     Ok(())
 }
 
 fn run_config(
     manifest: &Manifest,
-    names: &[String],
-    cost: &CostModel,
+    hw: &HardwareSpec,
     cfg: Config,
     label: &str,
 ) -> Result<(), String> {
-    let server = Server::start(
-        manifest,
-        names,
-        cost.clone(),
-        cfg,
-        ServerOptions {
-            adaptive: false,
-            ..Default::default()
-        },
-    )
-    .map_err(|e| e.to_string())?;
+    let server = ServerBuilder::new(manifest, CostModel::new(hw.clone()))
+        .k_max(hw.cpu_cores)
+        .adaptive(false) // static config comparison
+        .build()
+        .map_err(|e| e.to_string())?;
+
+    // Attach each tenant at its declared rate, then pin the config under
+    // test (set_config validates dimensions against the tenant count).
+    let mut handles: Vec<(TenantHandle, Arc<ModelMeta>)> = Vec::new();
+    for (name, rate) in MODELS.iter().zip(RATES) {
+        let h = server
+            .attach(name, AttachOptions { rate_hint: rate })
+            .map_err(|e| e.to_string())?;
+        let meta = server.model_meta(h).expect("just attached");
+        handles.push((h, meta));
+    }
+    server.set_config(cfg).map_err(|e| e.to_string())?;
 
     // Open-loop Poisson generator per model (merged, single thread).
     let mut rng = Rng::new(7);
@@ -104,8 +111,9 @@ fn run_config(
         if t_next > now {
             std::thread::sleep(Duration::from_secs_f64(t_next - now));
         }
-        let n_in: usize = server.tenants()[m].model.input_shape.iter().product();
-        pending.push(server.submit(m, vec![0.5; n_in]));
+        let (h, meta) = &handles[m];
+        let n_in: usize = meta.input_shape.iter().product();
+        pending.push(server.submit(*h, vec![0.5; n_in]));
         issued += 1;
         next_at[m] += rng.exponential(RATES[m]);
     }
@@ -119,19 +127,24 @@ fn run_config(
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
-    println!("\n[{label}] {issued} issued, {} completed, {errors} errors, {:.1} req/s", stats.completed, stats.completed as f64 / wall);
-    for (i, h) in stats.per_model.iter().enumerate() {
-        if h.count() > 0 {
+    println!(
+        "\n[{label}] {issued} issued, {} completed, {errors} errors, {:.1} req/s",
+        stats.completed,
+        stats.completed as f64 / wall
+    );
+    for t in &stats.per_tenant {
+        if t.latency.count() > 0 {
             println!(
                 "  {:<14} n={:<5} mean {:>7.1} ms   p50 {:>7.1}   p95 {:>7.1}   max {:>7.1}",
-                names[i],
-                h.count(),
-                h.mean() * 1e3,
-                h.percentile(50.0) * 1e3,
-                h.percentile(95.0) * 1e3,
-                h.max() * 1e3
+                t.name,
+                t.latency.count(),
+                t.latency.mean() * 1e3,
+                t.latency.percentile(50.0) * 1e3,
+                t.latency.percentile(95.0) * 1e3,
+                t.latency.max() * 1e3
             );
         }
     }
+    drop(server);
     Ok(())
 }

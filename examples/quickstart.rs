@@ -1,71 +1,79 @@
-//! Quickstart: load one model's AOT artifacts, plan a partition with the
-//! analytic model, and serve a few requests through the full stack.
+//! Quickstart: build an empty server, attach a tenant through admission
+//! control, serve a few requests, and detach — the tenant-lifecycle API
+//! end to end.
+//!
+//! Works on a fresh checkout: without `make artifacts` a synthetic
+//! paper-scale manifest and the emulated execution backend are used
+//! automatically (CI runs this as a smoke test).
 //!
 //! ```bash
-//! make artifacts            # once
 //! cargo run --release --example quickstart
 //! ```
 
-use swapless::alloc;
-use swapless::analytic::{AnalyticModel, Tenant};
+use swapless::analytic::AnalyticModel;
 use swapless::config::HardwareSpec;
-use swapless::coordinator::{Server, ServerOptions};
+use swapless::coordinator::{AttachOptions, ServerBuilder};
 use swapless::model::Manifest;
 use swapless::tpu::CostModel;
 
 fn main() -> Result<(), String> {
-    // 1. Load the artifact manifest produced by `python -m compile.aot`.
-    let manifest = Manifest::load("artifacts")?;
+    // 1. Load the artifact manifest (synthetic fallback without artifacts).
+    let manifest = Manifest::load_or_synthetic("artifacts");
     let model = "mobilenetv2";
-    let meta = manifest.get(model)?;
+    let meta = manifest.get(model)?.clone();
     println!(
         "{model}: {} segments, {:.1} MB (Table II scale), input {:?}",
         meta.partition_points, meta.table_size_mb, meta.input_shape
     );
 
-    // 2. Ask the analytic queueing model for the best partition at 3 RPS.
+    // 2. Build a server with zero tenants.
     let hw = HardwareSpec::default();
-    let am = AnalyticModel::new(CostModel::new(hw.clone()));
-    let tenants = vec![Tenant {
-        model: meta.clone(),
-        rate: 3.0,
-    }];
-    let plan = alloc::hill_climb(&am, &tenants, hw.cpu_cores);
+    let cost = CostModel::new(hw.clone());
+    let server = ServerBuilder::new(&manifest, cost.clone())
+        .k_max(hw.cpu_cores)
+        .adaptive(true)
+        .build()
+        .map_err(|e| e.to_string())?;
+    println!("backend: {:?}", server.backend());
+
+    // 3. Attach the tenant at a declared 3 RPS. Admission control plans
+    //    the mix with the analytic queueing model and installs the config.
+    let handle = server
+        .attach(model, AttachOptions { rate_hint: 3.0 })
+        .map_err(|e| e.to_string())?;
+    let cfg = server.current_config();
+    let am = AnalyticModel::new(cost);
     println!(
-        "plan @3 RPS: TPU prefix = {} of {} segments, {} CPU cores, predicted e2e {:.1} ms",
-        plan.config.partitions[0],
+        "attached as {handle}: TPU prefix = {} of {} segments, {} CPU cores, predicted e2e {:.1} ms",
+        cfg.partitions[0],
         meta.partition_points,
-        plan.config.cores[0],
-        am.e2e_latency(&tenants, &plan.config, 0) * 1e3
+        cfg.cores[0],
+        am.e2e_latency(&server.tenants(), &cfg, 0) * 1e3
     );
 
-    // 3. Serve real requests through the PJRT runtime under that plan.
-    let server = Server::start(
-        &manifest,
-        &[model.to_string()],
-        CostModel::new(hw),
-        plan.config,
-        ServerOptions::default(),
-    )
-    .map_err(|e| e.to_string())?;
-
+    // 4. Serve requests addressed by the stable handle.
     let n_in: usize = meta.input_shape.iter().product();
     for i in 0..5 {
         let out = server
-            .infer(0, vec![0.5; n_in])
+            .infer(handle, vec![0.5; n_in])
             .map_err(|e| e.to_string())?;
         println!(
-            "request {i}: {} logits, first = {:.4}, latency {:.1} ms",
+            "request {i}: {} outputs, first = {:.4}, latency {:.1} ms",
             out.output.len(),
             out.output[0],
             out.latency_s * 1e3
         );
     }
-    let stats = server.stats();
+
+    // 5. Detach: the final per-tenant histogram comes back.
+    let stats = server.detach(handle).map_err(|e| e.to_string())?;
     println!(
-        "done: {} requests, mean {:.1} ms",
-        stats.completed,
-        stats.per_model[0].mean() * 1e3
+        "detached {handle}: {} requests, mean {:.1} ms",
+        stats.latency.count(),
+        stats.latency.mean() * 1e3
     );
+    // A detached handle fails cleanly, it never panics or misroutes.
+    assert!(server.infer(handle, vec![0.5; n_in]).is_err());
+    println!("requests after detach fail cleanly — done.");
     Ok(())
 }

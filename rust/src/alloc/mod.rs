@@ -149,6 +149,96 @@ pub struct Allocation {
     pub evaluations: usize,
 }
 
+/// Why a candidate tenant mix was refused admission: the analytic model
+/// found no *stable* configuration — under every allocation the planner
+/// could reach, some processor sits at ρ ≥ 1 and the predicted latency
+/// diverges. Carries the best objective the planner saw so callers (and
+/// operators) can report how far from feasible the mix is.
+#[derive(Debug, Clone)]
+pub struct AdmissionError {
+    /// Objective (Eq. 5) of the best configuration found — infinite when
+    /// every reachable configuration is unstable.
+    pub predicted_objective: f64,
+    /// TPU utilization ρ under that best-effort configuration.
+    pub tpu_utilization: f64,
+    /// Size of the rejected candidate mix.
+    pub n_tenants: usize,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "admission rejected: no stable configuration for the {}-tenant mix \
+             (best predicted objective {}, ρ(TPU) {:.2})",
+            self.n_tenants, self.predicted_objective, self.tpu_utilization
+        )
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Model-driven admission control: decide whether a candidate tenant mix
+/// can be served at all, and if so return the plan to install.
+///
+/// Runs the hill climb first (the paper's allocator); if the greedy search
+/// terminates on an unstable plateau, falls back to the cheap baselines
+/// and — for small mixes — the exhaustive reference solver, so a mix is
+/// only rejected when no reachable configuration is stable. On rejection
+/// the returned [`AdmissionError`] carries the best predicted objective.
+pub fn admit(
+    am: &crate::analytic::AnalyticModel,
+    tenants: &[Tenant],
+    k_max: usize,
+) -> Result<Allocation, AdmissionError> {
+    let tables = PrefixTables::for_tenants(&am.cost, tenants);
+    admit_with_tables(am, tenants, &tables, k_max)
+}
+
+/// [`admit`] over prebuilt per-tenant [`PrefixTables`] — the coordinator
+/// extends its table set incrementally on attach and reuses it here.
+pub fn admit_with_tables(
+    am: &crate::analytic::AnalyticModel,
+    tenants: &[Tenant],
+    tables: &[PrefixTables],
+    k_max: usize,
+) -> Result<Allocation, AdmissionError> {
+    let plan = hill_climb_with_tables(am, tenants, tables, k_max);
+    if plan.predicted_objective.is_finite() {
+        return Ok(plan);
+    }
+    // The greedy climb can (rarely) terminate on an infinite plateau even
+    // when a stable configuration exists; consult cheaper/stronger solvers
+    // before refusing the tenant.
+    let mut best = plan;
+    for candidate in [
+        edge_tpu_compiler_with_tables(am, tenants, tables),
+        threshold_partitioning_with_tables(am, tenants, tables, k_max, 0.10),
+    ] {
+        if candidate.predicted_objective < best.predicted_objective {
+            best = candidate;
+        }
+    }
+    if best.predicted_objective.is_finite() {
+        return Ok(best);
+    }
+    if tenants.len() <= 4 {
+        if let Some(exact) = exhaustive_best_with_tables(am, tenants, tables, k_max) {
+            if exact.predicted_objective.is_finite() {
+                return Ok(exact);
+            }
+            if exact.predicted_objective < best.predicted_objective {
+                best = exact;
+            }
+        }
+    }
+    Err(AdmissionError {
+        predicted_objective: best.predicted_objective,
+        tpu_utilization: am.tpu_utilization(tenants, &best.config),
+        n_tenants: tenants.len(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -21,6 +21,25 @@ pub struct Tenant {
     pub rate: f64,
 }
 
+/// Stable identity of an attached tenant.
+///
+/// Handles are allocated monotonically by the issuing engine (the live
+/// [`coordinator::Server`](crate::coordinator::Server) or the DES
+/// [`sim::Simulator`](crate::sim::Simulator)) and survive churn: detaching
+/// a tenant never renumbers its peers, so statistics, caches, and
+/// configuration vectors keyed by handle stay attributed to the right
+/// tenant across attach/detach cycles. The *positional* index of a tenant
+/// in a `Config`/`&[Tenant]` pair is transient and only meaningful for the
+/// lifetime of one snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantHandle(pub u64);
+
+impl std::fmt::Display for TenantHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tenant#{}", self.0)
+    }
+}
+
 /// A global configuration: partition vector `P` and core vector `K`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {

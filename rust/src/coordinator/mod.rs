@@ -1,30 +1,46 @@
 //! The online serving coordinator — the L3 request path.
 //!
-//! Architecture (Fig. 4 of the paper):
+//! Architecture (Fig. 4 of the paper, extended with a tenant lifecycle):
 //!
 //! ```text
-//!   clients ──submit()──► router ──► [TPU worker thread]  (FCFS queue,
-//!                            │        SRAM cache + swap emulation,
-//!                            │        executes prefix via PJRT)
-//!                            │              │ boundary tensor
-//!                            └──────────────▼
-//!                                  [per-model CPU pools]  (k_i-gated
-//!                                   workers execute the suffix via PJRT)
+//!   attach(model, rate) ──► [admission control]  (analytic model plans the
+//!        │                   candidate mix; ρ ≥ 1 everywhere → typed reject)
+//!        ▼ TenantHandle
+//!   clients ──submit(h)──► router ──► [TPU worker thread]  (FCFS queue,
+//!                             │        SRAM cache + swap emulation,
+//!                             │        executes prefix via the exec service)
+//!                             │              │ boundary tensor
+//!                             └──────────────▼
+//!                                   [per-tenant CPU pools]  (k_i-gated
+//!                                    workers execute the suffix)
+//!   detach(h) ──► queued jobs fail cleanly; stats retire under h
 //! ```
 //!
-//! A sliding-window rate monitor feeds the periodic re-allocator, which
-//! swaps the shared `Config` (partition points + core allocation) without
-//! stopping the pipeline — in-flight requests finish under their
-//! admission-time configuration, mirroring the paper's preloaded-partition
-//! switching.
+//! The tenant set is dynamic: [`Server::attach`] admits a model at runtime
+//! (model-driven admission control → grow pools → load segments → install
+//! plan) and [`Server::detach`] removes one without disturbing its peers.
+//! Requests, statistics, and core gates are keyed by stable
+//! [`TenantHandle`](crate::analytic::TenantHandle)s that survive churn.
 //!
-//! The Edge TPU itself is emulated: prefix *numerics* run through the real
-//! PJRT artifacts, while the device-time budget (compute at MXU speed,
-//! swap streams, bus transfers) comes from the shared `CostModel` and is
+//! Online re-planning is delegated to the same
+//! [`ReconfigPolicy`](crate::sim::reconfig::ReconfigPolicy) trait the DES
+//! drives (a `SwapLessPolicy` by default): the submit path feeds its rate
+//! monitor, churn fires its `on_attach`/`on_detach` hooks, and a periodic
+//! thread invokes `decide` and installs accepted configurations — the
+//! in-flight requests finish under their admission-time configuration,
+//! mirroring the paper's preloaded-partition switching.
+//!
+//! The Edge TPU itself is emulated: prefix *numerics* run through the
+//! exec service (real PJRT artifacts, or the deterministic emulated
+//! backend), while the device-time budget (compute at MXU speed, swap
+//! streams, bus transfers) comes from the shared `CostModel` and is
 //! enforced with virtual-time sleeps scaled by `time_scale` (DESIGN.md §3).
 
 pub mod pools;
 pub mod server;
 
 pub use pools::CpuPools;
-pub use server::{ServeStats, Server, ServerOptions};
+pub use server::{
+    AttachError, AttachOptions, Completion, ConfigError, ServeStats, Server, ServerBuilder,
+    ServerOptions, TenantStats,
+};

@@ -1,23 +1,34 @@
-//! Per-model CPU executor pools with dynamically adjustable core gates.
+//! Per-tenant CPU executor pools with dynamically adjustable core gates.
 //!
-//! Each model owns an independent FCFS queue (the paper's performance-
-//! isolation design). A fixed set of `K_max` worker threads per model is
-//! spawned once; at any moment only `k_i` of them may be *active* — the
-//! core gate — so reallocation is a single atomic store, not a thread
-//! spawn/join (this is what makes <2 ms reconfiguration possible).
+//! Each tenant owns an independent FCFS queue (the paper's performance-
+//! isolation design). A fixed set of `K_max` worker threads per tenant is
+//! spawned at [`CpuPools::add_pool`]; at any moment only `k_i` of them may
+//! be *active* — the core gate — so reallocation is a single atomic store,
+//! not a thread spawn/join (this is what makes <2 ms reconfiguration
+//! possible). Pools are keyed by stable [`TenantHandle`]s and created /
+//! destroyed at tenant attach / detach: removing a pool fails its queued
+//! jobs cleanly ("tenant detached") while in-flight jobs finish; the
+//! worker threads are reaped when the pools object drops.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use anyhow::anyhow;
+
+use crate::analytic::TenantHandle;
+use crate::model::ModelMeta;
+
 /// A unit of CPU suffix work.
 pub struct CpuJob {
-    pub model: usize,
+    /// The model whose suffix to run (resolved at submit time, so workers
+    /// never need the tenant registry).
+    pub meta: Arc<ModelMeta>,
     /// Partition point at admission time (suffix = segments [p, P)).
     pub p: usize,
     pub input: Vec<f32>,
-    /// Called with the final output on completion.
+    /// Called with the final output on completion (or the failure).
     pub done: Box<dyn FnOnce(anyhow::Result<Vec<f32>>) + Send>,
 }
 
@@ -31,72 +42,145 @@ struct PoolShared {
     shutdown: AtomicBool,
 }
 
-pub struct CpuPools {
-    pools: Vec<Arc<PoolShared>>,
+struct PoolEntry {
+    shared: Arc<PoolShared>,
     workers: Vec<JoinHandle<()>>,
 }
 
+type ExecFn = dyn Fn(&ModelMeta, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + Send + Sync;
+
+pub struct CpuPools {
+    k_max: usize,
+    exec: Arc<ExecFn>,
+    pools: Mutex<HashMap<TenantHandle, PoolEntry>>,
+    /// Worker threads of removed pools, joined on drop.
+    retired: Mutex<Vec<JoinHandle<()>>>,
+}
+
 impl CpuPools {
-    /// Spawn `k_max` workers per model. `exec` is invoked inside workers
-    /// to run the suffix (it submits to the PJRT executor thread).
-    pub fn start<F>(n_models: usize, k_max: usize, exec: F) -> CpuPools
+    /// Create an empty pool set. `exec` runs a suffix (it submits to the
+    /// executor-service thread); `k_max` workers are spawned per attached
+    /// tenant.
+    pub fn new<F>(k_max: usize, exec: F) -> CpuPools
     where
-        F: Fn(usize, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + Send + Sync + 'static,
+        F: Fn(&ModelMeta, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + Send + Sync + 'static,
     {
-        let exec = Arc::new(exec);
-        let mut pools = Vec::with_capacity(n_models);
+        CpuPools {
+            k_max,
+            exec: Arc::new(exec),
+            pools: Mutex::new(HashMap::new()),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Spawn a tenant's pool (k_max gated workers, initially 0 allowed).
+    pub fn add_pool(&self, h: TenantHandle) {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            allowed: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
         let mut workers = Vec::new();
-        for m in 0..n_models {
-            let shared = Arc::new(PoolShared {
-                queue: Mutex::new(VecDeque::new()),
-                cv: Condvar::new(),
-                allowed: AtomicUsize::new(0),
-                active: AtomicUsize::new(0),
-                shutdown: AtomicBool::new(false),
-            });
-            for w in 0..k_max.max(1) {
-                let s = shared.clone();
-                let exec = exec.clone();
-                workers.push(
-                    std::thread::Builder::new()
-                        .name(format!("cpu-pool-{m}-{w}"))
-                        .spawn(move || worker_loop(s, exec))
-                        .expect("spawn cpu pool worker"),
-                );
+        for w in 0..self.k_max.max(1) {
+            let s = shared.clone();
+            let exec = self.exec.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("cpu-pool-{}-{w}", h.0))
+                    .spawn(move || worker_loop(s, exec))
+                    .expect("spawn cpu pool worker"),
+            );
+        }
+        self.pools
+            .lock()
+            .unwrap()
+            .insert(h, PoolEntry { shared, workers });
+    }
+
+    /// Tear down a tenant's pool: queued jobs fail cleanly with a
+    /// "detached" error, in-flight jobs finish, and the workers wind down
+    /// (their join handles are reaped when the pools object drops).
+    pub fn remove_pool(&self, h: TenantHandle) {
+        let entry = self.pools.lock().unwrap().remove(&h);
+        let Some(mut entry) = entry else { return };
+        entry.shared.shutdown.store(true, Ordering::SeqCst);
+        let drained: Vec<CpuJob> = entry.shared.queue.lock().unwrap().drain(..).collect();
+        entry.shared.cv.notify_all();
+        self.retired.lock().unwrap().append(&mut entry.workers);
+        for job in drained {
+            (job.done)(Err(anyhow!("{h} detached before its job ran")));
+        }
+    }
+
+    /// Enqueue a suffix job for `h`. If the tenant has no pool (detached,
+    /// or detaching concurrently), the job fails cleanly through its
+    /// completion callback — submitters racing a detach never panic and
+    /// never hang: the shutdown flag is re-checked under the queue lock,
+    /// so a job can never land in a queue whose workers already exited
+    /// (remove_pool stores the flag before draining).
+    pub fn submit(&self, h: TenantHandle, job: CpuJob) {
+        let shared = self
+            .pools
+            .lock()
+            .unwrap()
+            .get(&h)
+            .map(|e| e.shared.clone());
+        match shared {
+            Some(s) => {
+                let rejected = {
+                    let mut q = s.queue.lock().unwrap();
+                    if s.shutdown.load(Ordering::SeqCst) {
+                        Some(job)
+                    } else {
+                        q.push_back(job);
+                        None
+                    }
+                };
+                match rejected {
+                    None => s.cv.notify_one(),
+                    Some(job) => {
+                        (job.done)(Err(anyhow!("{h} detached before its job ran")))
+                    }
+                }
             }
-            pools.push(shared);
-        }
-        CpuPools { pools, workers }
-    }
-
-    pub fn submit(&self, job: CpuJob) {
-        let pool = &self.pools[job.model];
-        pool.queue.lock().unwrap().push_back(job);
-        pool.cv.notify_one();
-    }
-
-    /// Apply a new core allocation (the K vector). O(1) per model.
-    pub fn set_cores(&self, cores: &[usize]) {
-        assert_eq!(cores.len(), self.pools.len());
-        for (pool, k) in self.pools.iter().zip(cores) {
-            pool.allowed.store(*k, Ordering::SeqCst);
-            pool.cv.notify_all();
+            None => (job.done)(Err(anyhow!("{h} is not attached"))),
         }
     }
 
-    pub fn queue_len(&self, model: usize) -> usize {
-        self.pools[model].queue.lock().unwrap().len()
+    /// Apply a new core allocation. O(1) per tenant; handles without a
+    /// pool are skipped (they raced a detach).
+    pub fn set_cores(&self, cores: &[(TenantHandle, usize)]) {
+        let pools = self.pools.lock().unwrap();
+        for (h, k) in cores {
+            if let Some(e) = pools.get(h) {
+                e.shared.allowed.store(*k, Ordering::SeqCst);
+                e.shared.cv.notify_all();
+            }
+        }
     }
 
-    pub fn active(&self, model: usize) -> usize {
-        self.pools[model].active.load(Ordering::SeqCst)
+    pub fn queue_len(&self, h: TenantHandle) -> usize {
+        self.pools
+            .lock()
+            .unwrap()
+            .get(&h)
+            .map(|e| e.shared.queue.lock().unwrap().len())
+            .unwrap_or(0)
+    }
+
+    pub fn active(&self, h: TenantHandle) -> usize {
+        self.pools
+            .lock()
+            .unwrap()
+            .get(&h)
+            .map(|e| e.shared.active.load(Ordering::SeqCst))
+            .unwrap_or(0)
     }
 }
 
-fn worker_loop<F>(s: Arc<PoolShared>, exec: Arc<F>)
-where
-    F: Fn(usize, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + Send + Sync + 'static,
-{
+fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
     loop {
         let job = {
             let mut q = s.queue.lock().unwrap();
@@ -115,8 +199,14 @@ where
                 q = s.cv.wait(q).unwrap();
             }
         };
-        let result = exec(job.model, job.p, job.input);
-        (job.done)(result);
+        let CpuJob {
+            meta,
+            p,
+            input,
+            done,
+        } = job;
+        let result = exec(&meta, p, input);
+        done(result);
         s.active.fetch_sub(1, Ordering::SeqCst);
         s.cv.notify_one();
     }
@@ -124,11 +214,18 @@ where
 
 impl Drop for CpuPools {
     fn drop(&mut self) {
-        for pool in &self.pools {
-            pool.shutdown.store(true, Ordering::SeqCst);
-            pool.cv.notify_all();
+        let mut pools = self.pools.lock().unwrap();
+        for entry in pools.values() {
+            entry.shared.shutdown.store(true, Ordering::SeqCst);
+            entry.shared.cv.notify_all();
         }
-        for w in self.workers.drain(..) {
+        for (_, entry) in pools.drain() {
+            for w in entry.workers {
+                let _ = w.join();
+            }
+        }
+        drop(pools);
+        for w in self.retired.lock().unwrap().drain(..) {
             let _ = w.join();
         }
     }
@@ -137,25 +234,40 @@ impl Drop for CpuPools {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::synthetic_model;
     use std::sync::mpsc;
 
-    fn echo_pools(n: usize, k: usize) -> CpuPools {
-        CpuPools::start(n, k, |_m, _p, input| Ok(input))
+    fn meta() -> Arc<ModelMeta> {
+        Arc::new(synthetic_model("m", 4, 1_000_000, 100_000_000))
+    }
+
+    fn echo_pools(handles: &[TenantHandle], k: usize) -> CpuPools {
+        let pools = CpuPools::new(k, |_meta, _p, input| Ok(input));
+        for h in handles {
+            pools.add_pool(*h);
+        }
+        pools
     }
 
     #[test]
     fn jobs_complete() {
-        let pools = echo_pools(2, 2);
-        pools.set_cores(&[1, 1]);
+        let h0 = TenantHandle(0);
+        let h1 = TenantHandle(1);
+        let pools = echo_pools(&[h0, h1], 2);
+        pools.set_cores(&[(h0, 1), (h1, 1)]);
         let (tx, rx) = mpsc::channel();
+        let m = meta();
         for i in 0..10 {
             let tx = tx.clone();
-            pools.submit(CpuJob {
-                model: i % 2,
-                p: 0,
-                input: vec![i as f32],
-                done: Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
-            });
+            pools.submit(
+                if i % 2 == 0 { h0 } else { h1 },
+                CpuJob {
+                    meta: m.clone(),
+                    p: 0,
+                    input: vec![i as f32],
+                    done: Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
+                },
+            );
         }
         let mut got: Vec<f32> = (0..10).map(|_| rx.recv().unwrap()).collect();
         got.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -167,23 +279,29 @@ mod tests {
         use std::sync::atomic::{AtomicUsize, Ordering};
         static PEAK: AtomicUsize = AtomicUsize::new(0);
         static CUR: AtomicUsize = AtomicUsize::new(0);
-        let pools = CpuPools::start(1, 4, |_m, _p, input| {
+        let h = TenantHandle(7);
+        let pools = CpuPools::new(4, |_meta, _p, input| {
             let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
             PEAK.fetch_max(c, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_millis(20));
             CUR.fetch_sub(1, Ordering::SeqCst);
             Ok(input)
         });
-        pools.set_cores(&[2]);
+        pools.add_pool(h);
+        pools.set_cores(&[(h, 2)]);
         let (tx, rx) = mpsc::channel();
+        let m = meta();
         for _ in 0..8 {
             let tx = tx.clone();
-            pools.submit(CpuJob {
-                model: 0,
-                p: 0,
-                input: vec![0.0],
-                done: Box::new(move |_| tx.send(()).unwrap()),
-            });
+            pools.submit(
+                h,
+                CpuJob {
+                    meta: m.clone(),
+                    p: 0,
+                    input: vec![0.0],
+                    done: Box::new(move |_| tx.send(()).unwrap()),
+                },
+            );
         }
         for _ in 0..8 {
             rx.recv().unwrap();
@@ -193,15 +311,82 @@ mod tests {
 
     #[test]
     fn zero_cores_still_drains() {
-        let pools = echo_pools(1, 2);
-        pools.set_cores(&[0]);
+        let h = TenantHandle(3);
+        let pools = echo_pools(&[h], 2);
+        pools.set_cores(&[(h, 0)]);
         let (tx, rx) = mpsc::channel();
-        pools.submit(CpuJob {
-            model: 0,
-            p: 0,
-            input: vec![7.0],
-            done: Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
-        });
+        pools.submit(
+            h,
+            CpuJob {
+                meta: meta(),
+                p: 0,
+                input: vec![7.0],
+                done: Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
+            },
+        );
         assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(2)).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn submit_to_missing_pool_fails_cleanly() {
+        let pools = echo_pools(&[], 2);
+        let (tx, rx) = mpsc::channel();
+        pools.submit(
+            TenantHandle(9),
+            CpuJob {
+                meta: meta(),
+                p: 0,
+                input: vec![1.0],
+                done: Box::new(move |r| tx.send(r.is_err()).unwrap()),
+            },
+        );
+        assert!(rx.recv().unwrap(), "job against missing pool must error");
+    }
+
+    #[test]
+    fn remove_pool_fails_queued_jobs_and_keeps_peers() {
+        let ha = TenantHandle(1);
+        let hb = TenantHandle(2);
+        let pools = CpuPools::new(2, |_meta, _p, input| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            Ok(input)
+        });
+        pools.add_pool(ha);
+        pools.add_pool(hb);
+        // a gets no cores, so its queue holds everything we submit.
+        pools.set_cores(&[(ha, 0), (hb, 1)]);
+        // (the borrowed-slot drain rule serves one at a time anyway, so
+        // queue several to guarantee some are still queued at removal)
+        let (tx, rx) = mpsc::channel();
+        let m = meta();
+        for _ in 0..16 {
+            let tx = tx.clone();
+            pools.submit(
+                ha,
+                CpuJob {
+                    meta: m.clone(),
+                    p: 0,
+                    input: vec![1.0],
+                    done: Box::new(move |r| tx.send(r.is_ok()).unwrap()),
+                },
+            );
+        }
+        pools.remove_pool(ha);
+        let results: Vec<bool> = (0..16).map(|_| rx.recv().unwrap()).collect();
+        assert!(results.iter().any(|ok| !ok), "queued jobs must fail cleanly");
+        // Peer pool is unaffected.
+        let (tx2, rx2) = mpsc::channel();
+        pools.submit(
+            hb,
+            CpuJob {
+                meta: m,
+                p: 0,
+                input: vec![5.0],
+                done: Box::new(move |r| tx2.send(r.unwrap()[0]).unwrap()),
+            },
+        );
+        assert_eq!(rx2.recv_timeout(std::time::Duration::from_secs(2)).unwrap(), 5.0);
+        // Double-remove is a no-op.
+        pools.remove_pool(ha);
     }
 }

@@ -8,7 +8,7 @@
 use crate::alloc;
 use crate::analytic::{AnalyticModel, Config, Tenant};
 use crate::sim::reconfig::{StaticPolicy, SwapLessPolicy};
-use crate::sim::{simulate_dynamic, SimOptions};
+use crate::sim::{simulate_churn, simulate_dynamic, ChurnEvent, ChurnKind, SimOptions};
 use crate::util::json::Json;
 use crate::workload::RateSchedule;
 
@@ -125,6 +125,147 @@ pub fn run(ctx: &Ctx) -> Result<Fig8, String> {
         },
         outcomes,
     })
+}
+
+/// Churn scenario (tenant lifecycle through the DES): MnasNet serves at
+/// 5 RPS throughout; InceptionV4 *attaches* at t=300 s (3 RPS) and
+/// *detaches* at t=600 s. The SwapLess policy is notified through its
+/// `on_attach`/`on_detach` hooks and re-plans at both transitions — the
+/// same code path the live coordinator drives.
+pub struct Churn {
+    pub mean_ms: f64,
+    pub host_mean_ms: f64,
+    pub guest_mean_ms: f64,
+    pub guest_completed: u64,
+    pub dropped: u64,
+    pub reconfigs: Vec<(f64, Config)>,
+    pub churn_log: Vec<(f64, String)>,
+    pub timeline: Vec<(f64, f64)>,
+}
+
+pub fn run_churn(ctx: &Ctx) -> Result<Churn, String> {
+    let horizon = 900.0;
+    let tenants = ctx.tenants(&["mnasnet"], &[5.0])?;
+    let initial = alloc::hill_climb(&ctx.am, &tenants, ctx.k_max).config;
+    let churn = vec![
+        ChurnEvent {
+            time: 300.0,
+            kind: ChurnKind::Attach {
+                tenant: Tenant {
+                    model: ctx.manifest.get("inceptionv4")?.clone(),
+                    rate: 3.0,
+                },
+                schedule: RateSchedule::constant(3.0),
+            },
+        },
+        ChurnEvent {
+            time: 600.0,
+            kind: ChurnKind::Detach {
+                name: "inceptionv4".into(),
+            },
+        },
+    ];
+    let am = AnalyticModel::new(ctx.cost.clone());
+    let mut policy = SwapLessPolicy::new(am, ctx.k_max, tenants.len(), 45.0, 10.0, 0.20);
+    let res = simulate_churn(
+        &ctx.cost,
+        &tenants,
+        &initial,
+        &[RateSchedule::constant(5.0)],
+        churn,
+        &mut policy,
+        SimOptions {
+            horizon,
+            warmup: 10.0,
+            seed: ctx.seed,
+            timeline_window: Some(15.0),
+        },
+    );
+    let guest = res
+        .retired
+        .iter()
+        .find(|m| m.name == "inceptionv4")
+        .ok_or_else(|| "guest tenant did not retire".to_string())?;
+    Ok(Churn {
+        mean_ms: res.mean_latency * 1e3,
+        host_mean_ms: res.per_model[0].latency.mean() * 1e3,
+        guest_mean_ms: guest.latency.mean() * 1e3,
+        guest_completed: guest.completed,
+        dropped: res.dropped,
+        reconfigs: res
+            .reconfigs
+            .iter()
+            .map(|(t, c, _)| (*t, c.clone()))
+            .collect(),
+        churn_log: res.churn_log.clone(),
+        timeline: res.timeline.map(|t| t.series()).unwrap_or_default(),
+    })
+}
+
+impl Churn {
+    pub fn print(&self) {
+        println!("\n=== Churn: MnasNet@5 RPS; InceptionV4 attaches @300s (3 RPS), detaches @600s ===");
+        for (t, what) in &self.churn_log {
+            println!("  t={t:>5.1}s {what}");
+        }
+        println!(
+            "mean {:.1} ms | host mean {:.1} ms | guest mean {:.1} ms over {} completions | {} dropped at churn",
+            self.mean_ms, self.host_mean_ms, self.guest_mean_ms, self.guest_completed, self.dropped
+        );
+        for (t, cfg) in &self.reconfigs {
+            println!(
+                "  reconfig @ {:>5.1}s -> P={:?} K={:?}",
+                t, cfg.partitions, cfg.cores
+            );
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("host_mean_ms", Json::Num(self.host_mean_ms)),
+            ("guest_mean_ms", Json::Num(self.guest_mean_ms)),
+            ("guest_completed", Json::Num(self.guest_completed as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            (
+                "timeline",
+                Json::Arr(
+                    self.timeline
+                        .iter()
+                        .map(|(t, v)| Json::Arr(vec![Json::Num(*t), Json::Num(*v)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "reconfigs",
+                Json::Arr(
+                    self.reconfigs
+                        .iter()
+                        .map(|(t, c)| {
+                            Json::from_pairs(vec![
+                                ("t", Json::Num(*t)),
+                                (
+                                    "partitions",
+                                    Json::Arr(
+                                        c.partitions
+                                            .iter()
+                                            .map(|p| Json::Num(*p as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "cores",
+                                    Json::Arr(
+                                        c.cores.iter().map(|k| Json::Num(*k as f64)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 fn weighted_p95(res: &crate::sim::SimResult) -> f64 {

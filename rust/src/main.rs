@@ -4,23 +4,29 @@
 //!   table 2                  print Table II from the artifact manifest
 //!   figure <1|2|3|5|6|7|8>   regenerate a paper figure (prints + saves JSON)
 //!   figures                  regenerate everything (results/*.json)
+//!   churn                    dynamic experiment with tenant attach/detach
 //!   profile                  offline profiling phase → profiles.json
 //!   plan                     run the allocator on a workload, print config
-//!   serve                    live serving demo over the PJRT artifacts
+//!   serve                    live serving demo with a dynamic tenant set
+//!   trace                    record a Poisson arrival trace for replay
+//!   replay                   plan + simulate a recorded trace
 //!
 //! Common options: --artifacts DIR --hw FILE --seed N --horizon S
 //!                 --models a,b --rates x,y --rho R
+//! Without artifacts on disk, a synthetic paper-scale manifest (and the
+//! emulated execution backend) is substituted automatically.
 
 use swapless::alloc;
 use swapless::analytic::Tenant;
 use swapless::config::HardwareSpec;
 use swapless::experiments as exp;
 use swapless::experiments::common::save_result;
+use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 12] = [
+const VALUE_OPTS: [&str; 16] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
-    "trace", "policy",
+    "trace", "policy", "duration", "attach-at", "detach-at", "backend",
 ];
 
 fn main() {
@@ -35,9 +41,28 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: swapless <table 2 | figure N | figures | ablation | sensitivity | profile | plan | serve | trace | replay> [options]\n\
-     options: --artifacts DIR (default artifacts) --hw FILE --seed N --horizon S\n\
-              --models a,b --rates x,y --rho R --iters N --out FILE --time-scale S"
+    "usage: swapless <command> [options]\n\
+     commands:\n\
+       table 2                     print Table II from the manifest\n\
+       figure <1|2|3|5|6|7|8>      regenerate a paper figure (saves results/figN.json)\n\
+       figures                     regenerate everything (results/*.json)\n\
+       ablation | sensitivity      extension experiments\n\
+       churn                       Fig-8-style dynamic run with tenant attach/detach\n\
+       profile [--models a,b] [--iters N] [--out FILE]\n\
+                                   offline profiling phase -> profiles.json\n\
+       plan --models a,b --rates x,y\n\
+                                   run the allocator, print the (P, K) config\n\
+       serve [--models a,b] [--rates x,y] [--duration S] [--time-scale S]\n\
+             [--attach-at name@t[:rate],...] [--detach-at name@t,...]\n\
+             [--backend auto|pjrt|emulated]\n\
+                                   live serving with a dynamic tenant set\n\
+       trace --models a,b --rates x,y [--horizon S] [--seed N] [--out FILE]\n\
+                                   record a Poisson arrival trace (JSON)\n\
+       replay --trace FILE [--policy swapless|compiler|threshold]\n\
+                                   plan from the trace's empirical rates, then\n\
+                                   simulate the exact recorded arrivals\n\
+     common options: --artifacts DIR (default artifacts; synthetic manifest if\n\
+     missing) --hw FILE --seed N --horizon S --rho R"
         .to_string()
 }
 
@@ -52,7 +77,8 @@ fn run(raw: &[String]) -> Result<(), String> {
         Some(path) => HardwareSpec::load(path)?,
         None => HardwareSpec::default(),
     };
-    let mut ctx = exp::Ctx::load(&artifacts, hw.clone())?;
+    let manifest = Manifest::load_or_synthetic(&artifacts);
+    let mut ctx = exp::Ctx::new(manifest, hw.clone());
     ctx.seed = args.opt_u64("seed", 42)?;
     ctx.horizon = args.opt_f64("horizon", 2000.0)?;
 
@@ -76,7 +102,7 @@ fn run(raw: &[String]) -> Result<(), String> {
             run_named(&ctx, "ablation")?;
             run_named(&ctx, "sensitivity")
         }
-        "ablation" | "sensitivity" => run_named(&ctx, cmd),
+        "ablation" | "sensitivity" | "churn" => run_named(&ctx, cmd),
         "profile" => {
             let models = if args.opt("models").is_some() {
                 args.opt_list("models")
@@ -269,6 +295,11 @@ fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
             r.print();
             save_result("sensitivity", &r.to_json())
         }
+        "churn" => {
+            let r = exp::fig8::run_churn(ctx)?;
+            r.print();
+            save_result("churn", &r.to_json())
+        }
         _ => Err(format!("unknown experiment {which}")),
     }
 }
@@ -314,79 +345,208 @@ fn run_figure(ctx: &exp::Ctx, n: &str) -> Result<(), String> {
     }
 }
 
+/// One scheduled lifecycle transition: `(time, model, rate, attach?)`.
+struct LifecycleEvent {
+    at: f64,
+    name: String,
+    rate: f64,
+    attach: bool,
+}
+
+/// Parse `name@t[:rate]` entries (comma-separated list option).
+fn parse_lifecycle(
+    args: &cli::Args,
+    opt: &str,
+    attach: bool,
+    default_rate: f64,
+) -> Result<Vec<LifecycleEvent>, String> {
+    let mut events = Vec::new();
+    for spec in args.opt_list(opt) {
+        let (name, rest) = spec
+            .split_once('@')
+            .ok_or_else(|| format!("--{opt} entry {spec:?} is not name@t[:rate]"))?;
+        let (t, rate) = match rest.split_once(':') {
+            Some((t, r)) => (
+                t.parse::<f64>().map_err(|_| format!("bad time in {spec:?}"))?,
+                r.parse::<f64>().map_err(|_| format!("bad rate in {spec:?}"))?,
+            ),
+            None => (
+                rest.parse::<f64>().map_err(|_| format!("bad time in {spec:?}"))?,
+                default_rate,
+            ),
+        };
+        events.push(LifecycleEvent {
+            at: t,
+            name: name.to_string(),
+            rate,
+            attach,
+        });
+    }
+    Ok(events)
+}
+
+/// `swapless serve` — live serving demo with a dynamic tenant set: the
+/// initial models attach through admission control, then `--attach-at` /
+/// `--detach-at` schedules replay churn against the running server while
+/// an open-loop Poisson workload drives each live tenant at its rate.
 fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), String> {
-    use swapless::coordinator::{Server, ServerOptions};
+    use swapless::analytic::TenantHandle;
+    use swapless::coordinator::{AttachOptions, ServerBuilder};
+    use swapless::model::ModelMeta;
+    use swapless::runtime::service::ExecBackend;
     use swapless::tpu::CostModel;
+    use swapless::util::rng::Rng;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
 
     let names = if args.opt("models").is_some() {
         args.opt_list("models")
     } else {
         vec!["mobilenetv2".to_string(), "squeezenet".to_string()]
     };
-    let n_req = args.opt_usize("iters", 50)?;
+    let rates: Vec<f64> = if args.opt("rates").is_some() {
+        args.opt_list("rates")
+            .iter()
+            .map(|r| r.parse::<f64>().map_err(|_| format!("bad rate {r}")))
+            .collect::<Result<_, _>>()?
+    } else {
+        vec![2.0; names.len()]
+    };
+    if rates.len() != names.len() {
+        return Err("--rates must match --models".into());
+    }
+    let duration = args.opt_f64("duration", 8.0)?;
     let time_scale = args.opt_f64("time-scale", 0.0)?;
+    let backend = match args.opt_or("backend", "auto").as_str() {
+        "auto" => ExecBackend::Auto,
+        "pjrt" => ExecBackend::Pjrt,
+        "emulated" => ExecBackend::Emulated,
+        other => return Err(format!("unknown --backend {other}")),
+    };
 
-    println!("loading {} models: {names:?}", names.len());
-    let tenants: Vec<Tenant> = names
-        .iter()
-        .map(|n| {
-            Ok(Tenant {
-                model: ctx.manifest.get(n)?.clone(),
-                rate: 1.0,
-            })
-        })
-        .collect::<Result<_, String>>()?;
-    let plan = alloc::hill_climb(&ctx.am, &tenants, ctx.k_max);
-    println!(
-        "initial plan: P={:?} K={:?}",
-        plan.config.partitions, plan.config.cores
-    );
-    let server = Server::start(
-        &ctx.manifest,
-        &names,
-        CostModel::new(hw.clone()),
-        plan.config,
-        ServerOptions {
-            time_scale,
-            adaptive: true,
-            ..Default::default()
-        },
-    )
-    .map_err(|e| e.to_string())?;
+    let mut schedule: Vec<LifecycleEvent> = parse_lifecycle(args, "attach-at", true, 2.0)?;
+    schedule.extend(parse_lifecycle(args, "detach-at", false, 0.0)?);
+    schedule.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    for ev in &schedule {
+        ctx.manifest.get(&ev.name)?; // validate names early
+    }
 
-    let t0 = std::time::Instant::now();
-    for i in 0..n_req {
-        let m = i % names.len();
-        let meta = &server.tenants()[m].model;
+    let server = ServerBuilder::new(&ctx.manifest, CostModel::new(hw.clone()))
+        .k_max(ctx.k_max)
+        .time_scale(time_scale)
+        .backend(backend)
+        .adaptive(true)
+        .build()
+        .map_err(|e| e.to_string())?;
+    println!("backend: {:?}", server.backend());
+
+    // Live tenants: (handle, name, meta, rate, next arrival time).
+    let mut live: Vec<(TenantHandle, String, Arc<ModelMeta>, f64, f64)> = Vec::new();
+    let mut rng = Rng::new(args.opt_u64("seed", 42)?);
+    let attach = |live: &mut Vec<(TenantHandle, String, Arc<ModelMeta>, f64, f64)>,
+                      name: &str,
+                      rate: f64,
+                      at: f64,
+                      rng: &mut Rng| {
+        match server.attach(name, AttachOptions { rate_hint: rate }) {
+            Ok(h) => {
+                let meta = server.model_meta(h).expect("just attached");
+                let cfg = server.current_config();
+                println!(
+                    "t={at:.1}s attach {name} @ {rate} rps -> {h}  plan P={:?} K={:?}",
+                    cfg.partitions, cfg.cores
+                );
+                live.push((h, name.to_string(), meta, rate, at + rng.exponential(rate)));
+            }
+            Err(e) => println!("t={at:.1}s attach {name} REFUSED: {e}"),
+        }
+    };
+
+    for (n, r) in names.iter().zip(&rates) {
+        attach(&mut live, n, *r, 0.0, &mut rng);
+    }
+
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut schedule = schedule.into_iter().peekable();
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= duration {
+            break;
+        }
+        // Next lifecycle transition vs next request arrival.
+        let next_event = schedule.peek().map(|e| e.at).unwrap_or(f64::INFINITY);
+        let next_arrival = live
+            .iter()
+            .map(|(_, _, _, _, t)| *t)
+            .fold(f64::INFINITY, f64::min);
+        let next = next_event.min(next_arrival).min(duration);
+        if next > now {
+            std::thread::sleep(Duration::from_secs_f64((next - now).min(0.05)));
+            continue;
+        }
+        if next_event <= next_arrival {
+            let ev = schedule.next().unwrap();
+            if ev.attach {
+                attach(&mut live, &ev.name, ev.rate, ev.at, &mut rng);
+            } else if let Some(pos) = live.iter().position(|(_, n, _, _, _)| *n == ev.name) {
+                let (h, name, _, _, _) = live.remove(pos);
+                match server.detach(h) {
+                    Ok(stats) => println!(
+                        "t={:.1}s detach {name} ({h}): n={} mean {:.1} ms",
+                        ev.at,
+                        stats.latency.count(),
+                        stats.latency.mean() * 1e3
+                    ),
+                    Err(e) => println!("t={:.1}s detach {name}: {e}", ev.at),
+                }
+            } else {
+                println!("t={:.1}s detach {}: not attached", ev.at, ev.name);
+            }
+            continue;
+        }
+        // Fire the due arrival.
+        let idx = live
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .4.partial_cmp(&b.1 .4).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let (h, _, meta, rate, _) = &live[idx];
         let n_in: usize = meta.input_shape.iter().product();
-        let done = server
-            .infer(m, vec![0.5f32; n_in])
-            .map_err(|e| e.to_string())?;
-        if i < 3 {
-            println!(
-                "  req {i} ({}) -> {} outputs, {:.1} ms",
-                meta.name,
-                done.output.len(),
-                done.latency_s * 1e3
-            );
+        pending.push(server.submit(*h, vec![0.5; n_in]));
+        let step = rng.exponential(*rate);
+        live[idx].4 = now + step;
+    }
+    // Drain in-flight requests.
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => ok += 1,
+            _ => failed += 1,
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
     println!(
-        "served {} requests in {:.2}s ({:.1} req/s)",
-        stats.completed,
-        wall,
-        stats.completed as f64 / wall
+        "\nserved {} requests in {wall:.2}s ({:.1} req/s); {failed} failed cleanly; \
+         {} reconfigs, {} allocator decisions",
+        ok,
+        ok as f64 / wall,
+        stats.reconfigs,
+        stats.decision_micros.len()
     );
-    for (i, h) in stats.per_model.iter().enumerate() {
-        if h.count() > 0 {
+    for t in &stats.per_tenant {
+        if t.latency.count() > 0 {
             println!(
-                "  {}: n={} mean {:.1} ms p95 {:.1} ms",
-                names[i],
-                h.count(),
-                h.mean() * 1e3,
-                h.percentile(95.0) * 1e3
+                "  {:<14} {}{}: n={} mean {:.1} ms p95 {:.1} ms",
+                t.name,
+                t.handle,
+                if t.detached { " (detached)" } else { "" },
+                t.latency.count(),
+                t.latency.mean() * 1e3,
+                t.latency.percentile(95.0) * 1e3
             );
         }
     }

@@ -1,16 +1,40 @@
-//! Thread-service facade over [`Engine`]: the PJRT client is not `Send`,
-//! so a dedicated executor thread owns it and serves execute requests over
-//! an mpsc channel. Handles (`ExecHandle`) are cheap to clone and are used
-//! by the coordinator's TPU worker and CPU pool threads.
+//! Thread-service facade over the execution substrate: the PJRT client is
+//! not `Send`, so a dedicated executor thread owns it and serves execute
+//! requests over an mpsc channel. Handles (`ExecHandle`) are cheap to
+//! clone and are used by the coordinator's TPU worker and CPU pool
+//! threads.
+//!
+//! The substrate is selectable ([`ExecBackend`]): real PJRT execution of
+//! the AOT artifacts, or a deterministic *emulated* engine computed from
+//! manifest metadata alone — shape-faithful and composition-consistent
+//! (running segments `[0,p)` then `[p,P)` equals `[0,P)`), so the full
+//! serving stack (tenant lifecycle, CPU pools, reconfiguration) runs in
+//! environments with no XLA distribution or artifacts (tests, CI).
+//!
+//! Models are loaded *dynamically*: the service starts empty and
+//! [`ExecService::load`] compiles/registers one model at a time — this is
+//! what lets the coordinator attach tenants at runtime.
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::Manifest;
+use crate::model::{Manifest, ModelMeta};
 
 use super::Engine;
+
+/// Which execution substrate serves `execute_range` requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Real PJRT execution over the AOT artifacts.
+    Pjrt,
+    /// Deterministic emulation from manifest metadata (no artifacts).
+    Emulated,
+    /// Try PJRT; fall back to `Emulated` with a one-line notice.
+    Auto,
+}
 
 enum Request {
     Execute {
@@ -19,6 +43,10 @@ enum Request {
         b: usize,
         input: Vec<f32>,
         reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Load {
+        model: String,
+        reply: mpsc::Sender<Result<()>>,
     },
     Shutdown,
 }
@@ -46,41 +74,140 @@ impl ExecHandle {
     }
 }
 
+/// The emulated substrate: per-segment outputs are a deterministic pure
+/// function of (mean input activation, segment index) with the exact
+/// output shape from the manifest, so sequential composition over any
+/// partition point reproduces the same final vector bit-for-bit.
+struct EmulatedEngine {
+    models: HashMap<String, ModelMeta>,
+}
+
+impl EmulatedEngine {
+    fn new() -> EmulatedEngine {
+        EmulatedEngine {
+            models: HashMap::new(),
+        }
+    }
+
+    fn load(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
+        let meta = manifest.get(name).map_err(|e| anyhow!(e))?;
+        self.models.insert(name.to_string(), meta.clone());
+        Ok(())
+    }
+
+    fn execute_range(&self, model: &str, a: usize, b: usize, input: &[f32]) -> Result<Vec<f32>> {
+        let meta = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model} not loaded"))?;
+        if a > b || b > meta.partition_points {
+            return Err(anyhow!("{model}: bad segment range [{a}, {b})"));
+        }
+        let mut x = input.to_vec();
+        for seg in a..b {
+            let want: usize = meta.segments[seg].in_shape.iter().product();
+            if x.len() != want {
+                return Err(anyhow!(
+                    "{model}/seg{seg}: input has {} elements, wants {want}",
+                    x.len()
+                ));
+            }
+            let out_len: usize = meta.segments[seg].out_shape.iter().product();
+            let mean = x.iter().map(|v| *v as f64).sum::<f64>() / x.len().max(1) as f64;
+            let base = ((mean + (seg as f64 + 1.0) * 0.618) * 1.37).sin() * 0.5;
+            x = (0..out_len)
+                .map(|j| (base + j as f64 * 1e-3).sin() as f32)
+                .collect();
+        }
+        Ok(x)
+    }
+}
+
+enum Exec {
+    Pjrt(Engine),
+    Emulated(EmulatedEngine),
+}
+
+impl Exec {
+    fn create(backend: ExecBackend) -> Result<(Exec, ExecBackend)> {
+        match backend {
+            ExecBackend::Pjrt => Ok((Exec::Pjrt(Engine::new()?), ExecBackend::Pjrt)),
+            ExecBackend::Emulated => {
+                Ok((Exec::Emulated(EmulatedEngine::new()), ExecBackend::Emulated))
+            }
+            ExecBackend::Auto => match Engine::new() {
+                Ok(e) => Ok((Exec::Pjrt(e), ExecBackend::Pjrt)),
+                Err(e) => {
+                    eprintln!(
+                        "note: PJRT unavailable ({e}); serving with the emulated backend"
+                    );
+                    Ok((Exec::Emulated(EmulatedEngine::new()), ExecBackend::Emulated))
+                }
+            },
+        }
+    }
+
+    fn load(&mut self, manifest: &Manifest, name: &str) -> Result<()> {
+        match self {
+            Exec::Pjrt(engine) => {
+                let meta = manifest.get(name).map_err(|e| anyhow!(e))?.clone();
+                engine.load_model(manifest, &meta)
+            }
+            Exec::Emulated(em) => em.load(manifest, name),
+        }
+    }
+
+    fn execute_range(&self, model: &str, a: usize, b: usize, input: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            Exec::Pjrt(engine) => engine.execute_range(model, a, b, input),
+            Exec::Emulated(em) => em.execute_range(model, a, b, input),
+        }
+    }
+}
+
 /// Owns the executor thread; dropping shuts it down.
 pub struct ExecService {
     tx: mpsc::Sender<Request>,
+    backend: ExecBackend,
     join: Option<JoinHandle<()>>,
 }
 
 impl ExecService {
-    /// Spawn the executor thread and load `models` (all segments) from the
-    /// manifest. Blocks until loading finishes so callers see load errors.
+    /// Spawn a PJRT executor thread and load `models` from the manifest.
+    /// Blocks until loading finishes so callers see load errors.
     pub fn start(manifest: &Manifest, models: &[String]) -> Result<ExecService> {
+        Self::start_with_backend(manifest, models, ExecBackend::Pjrt)
+    }
+
+    /// Spawn the executor thread on the chosen backend and preload
+    /// `models` (may be empty — the tenant-lifecycle path loads at
+    /// attach time via [`load`](Self::load)).
+    pub fn start_with_backend(
+        manifest: &Manifest,
+        models: &[String],
+        backend: ExecBackend,
+    ) -> Result<ExecService> {
         let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<ExecBackend>>();
         let manifest = manifest.clone();
         let names: Vec<String> = models.to_vec();
         let join = std::thread::Builder::new()
-            .name("pjrt-exec".into())
+            .name("exec-service".into())
             .spawn(move || {
-                let mut engine = match Engine::new() {
-                    Ok(e) => e,
+                let (mut exec, resolved) = match Exec::create(backend) {
+                    Ok(pair) => pair,
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
                 for name in &names {
-                    let res = manifest
-                        .get(name)
-                        .map_err(|e| anyhow!(e))
-                        .and_then(|m| engine.load_model(&manifest, m));
-                    if let Err(e) = res {
+                    if let Err(e) = exec.load(&manifest, name) {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 }
-                let _ = ready_tx.send(Ok(()));
+                let _ = ready_tx.send(Ok(resolved));
                 while let Ok(req) = rx.recv() {
                     match req {
                         Request::Execute {
@@ -90,20 +217,41 @@ impl ExecService {
                             input,
                             reply,
                         } => {
-                            let out = engine.execute_range(&model, a, b, &input);
+                            let out = exec.execute_range(&model, a, b, &input);
                             let _ = reply.send(out);
+                        }
+                        Request::Load { model, reply } => {
+                            let _ = reply.send(exec.load(&manifest, &model));
                         }
                         Request::Shutdown => break,
                     }
                 }
             })?;
-        ready_rx
+        let backend = ready_rx
             .recv()
             .map_err(|_| anyhow!("executor thread died during load"))??;
         Ok(ExecService {
             tx,
+            backend,
             join: Some(join),
         })
+    }
+
+    /// The substrate actually serving requests (`Auto` resolved).
+    pub fn backend(&self) -> ExecBackend {
+        self.backend
+    }
+
+    /// Load one model's segments at runtime (blocking). Idempotent.
+    pub fn load(&self, model: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Load {
+                model: model.to_string(),
+                reply,
+            })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
     }
 
     pub fn handle(&self) -> ExecHandle {
@@ -119,5 +267,79 @@ impl Drop for ExecService {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+
+    fn service() -> ExecService {
+        ExecService::start_with_backend(&Manifest::synthetic(), &[], ExecBackend::Emulated)
+            .unwrap()
+    }
+
+    #[test]
+    fn emulated_loads_and_executes() {
+        let svc = service();
+        svc.load("mobilenetv2").unwrap();
+        let h = svc.handle();
+        let meta = Manifest::synthetic();
+        let meta = meta.get("mobilenetv2").unwrap().clone();
+        let n_in: usize = meta.input_shape.iter().product();
+        let out = h
+            .execute_range("mobilenetv2", 0, meta.partition_points, vec![0.5; n_in])
+            .unwrap();
+        let n_out: usize = meta
+            .segments
+            .last()
+            .unwrap()
+            .out_shape
+            .iter()
+            .product();
+        assert_eq!(out.len(), n_out);
+        // Deterministic.
+        let again = h
+            .execute_range("mobilenetv2", 0, meta.partition_points, vec![0.5; n_in])
+            .unwrap();
+        assert_eq!(out, again);
+    }
+
+    #[test]
+    fn emulated_split_composes_exactly() {
+        // The partition invariant the serving stack relies on: prefix
+        // then suffix equals the unsplit run, at every partition point.
+        let svc = service();
+        svc.load("efficientnet").unwrap();
+        let h = svc.handle();
+        let manifest = Manifest::synthetic();
+        let meta = manifest.get("efficientnet").unwrap().clone();
+        let n_in: usize = meta.input_shape.iter().product();
+        let full = h
+            .execute_range("efficientnet", 0, meta.partition_points, vec![0.25; n_in])
+            .unwrap();
+        for p in 1..meta.partition_points {
+            let boundary = h
+                .execute_range("efficientnet", 0, p, vec![0.25; n_in])
+                .unwrap();
+            let composed = h
+                .execute_range("efficientnet", p, meta.partition_points, boundary)
+                .unwrap();
+            assert_eq!(composed, full, "composition broke at p={p}");
+        }
+    }
+
+    #[test]
+    fn emulated_rejects_bad_input_and_unloaded_model() {
+        let svc = service();
+        svc.load("squeezenet").unwrap();
+        let h = svc.handle();
+        assert!(h.execute_range("squeezenet", 0, 1, vec![0.0; 3]).is_err());
+        assert!(h.execute_range("nope", 0, 1, vec![0.0; 3]).is_err());
+        // load-at-attach is dynamic: a model not loaded yet errors, then works.
+        assert!(h.execute_range("mnasnet", 0, 1, vec![0.0; 512]).is_err());
+        svc.load("mnasnet").unwrap();
+        assert!(h.execute_range("mnasnet", 0, 1, vec![0.0; 512]).is_ok());
     }
 }

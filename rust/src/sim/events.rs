@@ -18,6 +18,9 @@ pub enum EventKind {
     Complete { req: Request },
     /// Periodic invocation of the online reconfiguration policy.
     Reconfigure,
+    /// Tenant lifecycle transition: apply the churn-schedule entry at
+    /// `idx` (attach or detach) — see [`crate::sim::ChurnEvent`].
+    Churn { idx: usize },
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -8,15 +8,22 @@
 //! latency are purely *queueing/caching dynamics* — exactly what the
 //! paper's model-validation experiments measure against their testbed.
 //!
+//! The tenant set itself is dynamic: a [`ChurnEvent`] schedule replays
+//! tenant arrivals and departures mid-run, driven through the same
+//! [`ReconfigPolicy`] hooks (`on_attach`/`on_detach`) as the live
+//! coordinator — Fig-8-style experiments can therefore include churn.
+//! Requests are keyed by stable [`TenantHandle`]s, so statistics stay
+//! attributed to the right tenant after a detach renumbers positions.
+//!
 //! Virtual-clock simulation: a 900 s Fig.-8 timeline runs in milliseconds.
 
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::analytic::{Config, Tenant};
+use crate::analytic::{Config, Tenant, TenantHandle};
 use crate::metrics::{LatencyHistogram, TimeSeries, Welford};
 use crate::tpu::{CostModel, PrefixTables, SramCache};
 use crate::util::rng::Rng;
-use crate::workload::{generate_arrivals, RateSchedule};
+use crate::workload::{generate_arrivals, Arrival, RateSchedule};
 
 mod events;
 pub mod reconfig;
@@ -47,15 +54,45 @@ impl Default for SimOptions {
 
 #[derive(Debug, Clone)]
 pub struct ModelStats {
+    pub handle: TenantHandle,
     pub name: String,
     pub completed: u64,
     pub latency: LatencyHistogram,
     pub tpu_share: Welford,
 }
 
+/// One tenant-lifecycle transition to replay mid-run.
+#[derive(Debug, Clone)]
+pub struct ChurnEvent {
+    pub time: f64,
+    pub kind: ChurnKind,
+}
+
+#[derive(Debug, Clone)]
+pub enum ChurnKind {
+    /// A tenant arrives: it joins the mix at `time` with partition 0 /
+    /// zero cores (the policy re-plans immediately via its `on_attach`
+    /// hook) and submits requests per `schedule` (time-shifted so step 0
+    /// is the attach instant; the stream ends at the tenant's own
+    /// scheduled detach, if one follows).
+    Attach { tenant: Tenant, schedule: RateSchedule },
+    /// The named tenant departs: queued work it owns is dropped (counted
+    /// in [`SimResult::dropped`]), its stats move to
+    /// [`SimResult::retired`], and the policy's `on_detach` hook fires.
+    Detach { name: String },
+}
+
 #[derive(Debug)]
 pub struct SimResult {
+    /// Stats of the tenants still attached at the end of the run.
     pub per_model: Vec<ModelStats>,
+    /// Stats of tenants detached mid-run (churn schedules).
+    pub retired: Vec<ModelStats>,
+    /// Requests abandoned because their tenant detached while they were
+    /// queued or in flight.
+    pub dropped: u64,
+    /// Lifecycle transitions applied, as (time, description).
+    pub churn_log: Vec<(f64, String)>,
     /// Request-weighted mean latency across models (the Fig. 7 metric).
     pub mean_latency: f64,
     /// Measured TPU busy fraction over the horizon.
@@ -76,7 +113,9 @@ impl SimResult {
 
 #[derive(Debug, Clone, Copy)]
 pub struct Request {
-    pub model: usize,
+    /// Stable identity of the submitting tenant (NOT a positional index —
+    /// positions shift under churn).
+    pub tenant: TenantHandle,
     pub arrived: f64,
 }
 
@@ -84,7 +123,7 @@ pub struct Request {
 /// hot loop touches these on every execution, and they are pure functions
 /// of (model, p), so they are precomputed here and rebuilt on reconfig.
 /// The memo is filled from the per-model [`PrefixTables`] (built once per
-/// simulator), so a rebuild is O(n) lookups, not O(n·L) segment sums —
+/// tenant), so a rebuild is O(n) lookups, not O(n·L) segment sums —
 /// this keeps high-frequency reconfiguration cheap (EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone, Default)]
 struct ServiceMemo {
@@ -96,12 +135,16 @@ struct ServiceMemo {
     output_transfer: f64,
 }
 
-/// In-flight simulator state for one run.
-pub struct Simulator<'a> {
-    tenants: &'a [Tenant],
+/// In-flight simulator state for one run. Positional vectors (`tenants`,
+/// `cfg`, `tables`, `memo`, queues, stats) are kept aligned; `handles`
+/// maps positions to stable identities for requests already in flight.
+pub struct Simulator {
+    cost: CostModel,
+    tenants: Vec<Tenant>,
+    handles: Vec<TenantHandle>,
+    next_handle: u64,
     cfg: Config,
-    /// One prefix-sum cost table per tenant (immutable across reconfigs;
-    /// the `CostModel` itself is only needed at construction).
+    /// One prefix-sum cost table per tenant (immutable across reconfigs).
     tables: Vec<PrefixTables>,
     memo: Vec<ServiceMemo>,
     cache: SramCache,
@@ -116,23 +159,28 @@ pub struct Simulator<'a> {
     heap: BinaryHeap<Event>,
     // stats
     stats: Vec<ModelStats>,
+    retired: Vec<ModelStats>,
+    dropped: u64,
     weighted_latency: Welford,
     timeline: Option<TimeSeries>,
     opts: SimOptions,
 }
 
-impl<'a> Simulator<'a> {
+impl Simulator {
     pub fn new(
-        cost: &'a CostModel,
-        tenants: &'a [Tenant],
+        cost: &CostModel,
+        tenants: &[Tenant],
         cfg: Config,
         opts: SimOptions,
-    ) -> Simulator<'a> {
+    ) -> Simulator {
         let n = tenants.len();
         let tables = PrefixTables::for_tenants(cost, tenants);
         let memo = build_memo(&tables, &cfg);
         Simulator {
-            tenants,
+            cost: cost.clone(),
+            tenants: tenants.to_vec(),
+            handles: (0..n as u64).map(TenantHandle).collect(),
+            next_handle: n as u64,
             cfg,
             tables,
             memo,
@@ -146,27 +194,39 @@ impl<'a> Simulator<'a> {
             heap: BinaryHeap::new(),
             stats: tenants
                 .iter()
-                .map(|t| ModelStats {
+                .enumerate()
+                .map(|(i, t)| ModelStats {
+                    handle: TenantHandle(i as u64),
                     name: t.model.name.clone(),
                     completed: 0,
                     latency: LatencyHistogram::default(),
                     tpu_share: Welford::new(),
                 })
                 .collect(),
+            retired: Vec::new(),
+            dropped: 0,
             weighted_latency: Welford::new(),
             timeline: opts.timeline_window.map(TimeSeries::new),
             opts,
         }
     }
 
+    /// Positional index of a handle, `None` if the tenant detached.
+    fn index_of(&self, h: TenantHandle) -> Option<usize> {
+        self.handles.iter().position(|x| *x == h)
+    }
+
     /// Swap in a new configuration (online reconfiguration). Queued and
     /// in-flight requests finish under their admission-time partition; the
     /// cache entries of re-partitioned models are invalidated (their
-    /// resident sets changed).
+    /// resident sets changed). The configuration must be positionally
+    /// aligned with the current tenant set.
     pub fn set_config(&mut self, cfg: Config) {
+        assert_eq!(cfg.partitions.len(), self.tenants.len());
+        assert_eq!(cfg.cores.len(), self.tenants.len());
         for i in 0..self.tenants.len() {
             if cfg.partitions[i] != self.cfg.partitions[i] {
-                self.cache.invalidate(i);
+                self.cache.invalidate(self.handles[i].0 as usize);
             }
         }
         self.memo = build_memo(&self.tables, &cfg);
@@ -177,13 +237,60 @@ impl<'a> Simulator<'a> {
         &self.cfg
     }
 
+    /// Append a tenant mid-run (churn): partition 0, zero cores until the
+    /// policy re-plans. Returns the stable handle its requests carry.
+    fn apply_attach(&mut self, tenant: Tenant) -> TenantHandle {
+        let h = TenantHandle(self.next_handle);
+        self.next_handle += 1;
+        self.tables.push(PrefixTables::new(&self.cost, &tenant.model));
+        self.stats.push(ModelStats {
+            handle: h,
+            name: tenant.model.name.clone(),
+            completed: 0,
+            latency: LatencyHistogram::default(),
+            tpu_share: Welford::new(),
+        });
+        self.tenants.push(tenant);
+        self.handles.push(h);
+        self.cfg.partitions.push(0);
+        self.cfg.cores.push(0);
+        self.cpu_queues.push(VecDeque::new());
+        self.cpu_busy.push(0);
+        self.memo = build_memo(&self.tables, &self.cfg);
+        h
+    }
+
+    /// Remove the tenant at position `i` (churn): its queued requests are
+    /// dropped, its stats retire, peers above shift down one position.
+    fn apply_detach(&mut self, i: usize) -> TenantHandle {
+        let h = self.handles.remove(i);
+        self.tenants.remove(i);
+        self.tables.remove(i);
+        self.memo.remove(i);
+        self.cfg.partitions.remove(i);
+        self.cfg.cores.remove(i);
+        self.retired.push(self.stats.remove(i));
+        self.dropped += self.cpu_queues.remove(i).len() as u64;
+        self.cpu_busy.remove(i);
+        let before = self.tpu_queue.len();
+        self.tpu_queue.retain(|r| r.tenant != h);
+        self.dropped += (before - self.tpu_queue.len()) as u64;
+        self.cache.invalidate(h.0 as usize);
+        h
+    }
+
     fn record_completion(&mut self, req: &Request, now: f64) {
+        let Some(i) = self.index_of(req.tenant) else {
+            // Tenant detached while this request was in flight.
+            self.dropped += 1;
+            return;
+        };
         if now < self.opts.warmup {
             return;
         }
         let latency = now - req.arrived;
-        self.stats[req.model].completed += 1;
-        self.stats[req.model].latency.record(latency);
+        self.stats[i].completed += 1;
+        self.stats[i].latency.record(latency);
         self.weighted_latency.add(latency);
         if let Some(ts) = &mut self.timeline {
             ts.record(now, latency);
@@ -197,15 +304,22 @@ impl<'a> Simulator<'a> {
         let Some(req) = self.tpu_queue.pop_front() else {
             return;
         };
-        let p = self.cfg.partitions[req.model];
+        let Some(i) = self.index_of(req.tenant) else {
+            self.dropped += 1;
+            self.start_tpu_if_idle(now);
+            return;
+        };
+        let p = self.cfg.partitions[i];
         // Admission under a p=0 config (post-reconfig): route to CPU.
         if p == 0 {
             self.enqueue_cpu(req, now);
             self.start_tpu_if_idle(now);
             return;
         }
-        let memo = &self.memo[req.model];
-        let hit = self.cache.access(req.model, memo.resident_bytes);
+        let memo = &self.memo[i];
+        let hit = self
+            .cache
+            .access(req.tenant.0 as usize, memo.resident_bytes);
         let mut service = memo.tpu_service;
         if !hit {
             service += memo.load_time;
@@ -220,9 +334,12 @@ impl<'a> Simulator<'a> {
     }
 
     fn enqueue_cpu(&mut self, req: Request, now: f64) {
-        let m = req.model;
-        self.cpu_queues[m].push_back(req);
-        self.start_cpu_if_possible(m, now);
+        let Some(i) = self.index_of(req.tenant) else {
+            self.dropped += 1;
+            return;
+        };
+        self.cpu_queues[i].push_back(req);
+        self.start_cpu_if_possible(i, now);
     }
 
     fn start_cpu_if_possible(&mut self, m: usize, now: f64) {
@@ -244,28 +361,111 @@ impl<'a> Simulator<'a> {
         }
     }
 
+    /// Invoke the policy's decision path once, installing and logging any
+    /// new configuration (shared by periodic ticks and churn transitions).
+    fn policy_decide(
+        &mut self,
+        now: f64,
+        policy: &mut dyn ReconfigPolicy,
+        reconfigs: &mut Vec<(f64, Config, f64)>,
+    ) {
+        let t0 = std::time::Instant::now();
+        if let Some(cfg) = policy.decide(now, &self.tenants, &self.cfg) {
+            let micros = t0.elapsed().as_secs_f64() * 1e6;
+            if cfg.partitions.len() == self.tenants.len()
+                && cfg.cores.len() == self.tenants.len()
+            {
+                reconfigs.push((now, cfg.clone(), micros));
+                self.set_config(cfg);
+            }
+        }
+    }
+
     /// Run to completion over pre-generated arrivals, with an optional
-    /// reconfiguration policy invoked on a fixed period.
+    /// reconfiguration policy invoked on its period.
     pub fn run(
         &mut self,
-        arrivals: &[crate::workload::Arrival],
+        arrivals: &[Arrival],
+        policy: Option<&mut dyn ReconfigPolicy>,
+    ) -> SimResult {
+        self.run_churn(arrivals, Vec::new(), policy)
+    }
+
+    /// Run with a tenant-churn schedule: `churn` entries are applied at
+    /// their times (attaches generate their own Poisson arrivals from the
+    /// attached schedule), and the policy's `on_attach`/`on_detach` hooks
+    /// fire followed by an immediate decision — exactly the sequence the
+    /// live coordinator performs.
+    pub fn run_churn(
+        &mut self,
+        arrivals: &[Arrival],
+        churn: Vec<ChurnEvent>,
         mut policy: Option<&mut dyn ReconfigPolicy>,
     ) -> SimResult {
+        // Initial tenants hold handles 0..n in positional order.
         for a in arrivals {
             self.heap.push(Event::at(
                 a.time,
                 EventKind::Arrival {
                     req: Request {
-                        model: a.model,
+                        tenant: TenantHandle(a.model as u64),
                         arrived: a.time,
                     },
                 },
             ));
         }
+
+        // Sort churn by time; handles for attaches are pre-assigned in
+        // that order (apply_attach allocates sequentially), so arrival
+        // streams can be generated up front and tagged with the handle
+        // the attach will receive. Equal-time ties resolve churn-first
+        // because churn events are pushed before their arrivals.
+        let mut churn: Vec<ChurnEvent> = churn;
+        churn.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
+        let mut churn_rng = Rng::new(self.opts.seed.wrapping_mul(0x9E37_79B9).wrapping_add(7));
+        let mut planned = self.next_handle;
+        for (idx, ev) in churn.iter().enumerate() {
+            self.heap.push(Event::at(ev.time, EventKind::Churn { idx }));
+            if let ChurnKind::Attach { tenant, schedule } = &ev.kind {
+                let h = TenantHandle(planned);
+                planned += 1;
+                // The stream ends at the tenant's own scheduled departure
+                // (if any) — only requests already in the system when it
+                // detaches count as dropped.
+                let until = churn[idx + 1..]
+                    .iter()
+                    .find_map(|later| match &later.kind {
+                        ChurnKind::Detach { name } if *name == tenant.model.name => {
+                            Some(later.time)
+                        }
+                        _ => None,
+                    })
+                    .unwrap_or(self.opts.horizon);
+                let span = (until.min(self.opts.horizon) - ev.time).max(0.0);
+                let mut r = churn_rng.fork(idx as u64 + 1);
+                for a in generate_arrivals(std::slice::from_ref(schedule), span, &mut r) {
+                    let t = ev.time + a.time;
+                    self.heap.push(Event::at(
+                        t,
+                        EventKind::Arrival {
+                            req: Request {
+                                tenant: h,
+                                arrived: t,
+                            },
+                        },
+                    ));
+                }
+            }
+        }
+        let mut churn_kinds: Vec<Option<ChurnKind>> =
+            churn.into_iter().map(|e| Some(e.kind)).collect();
+        let mut churn_log: Vec<(f64, String)> = Vec::new();
+
         if let Some(p) = policy.as_deref_mut() {
-            let first = p.period();
-            self.heap
-                .push(Event::at(first, EventKind::Reconfigure));
+            if let Some(first) = p.period() {
+                self.heap
+                    .push(Event::at(first, EventKind::Reconfigure));
+            }
         }
         let mut reconfigs: Vec<(f64, Config, f64)> = Vec::new();
 
@@ -276,13 +476,19 @@ impl<'a> Simulator<'a> {
             }
             match ev.kind {
                 EventKind::Arrival { req } => {
+                    let Some(i) = self.index_of(req.tenant) else {
+                        // Arrival for a tenant that already detached (or
+                        // attaches later — cannot happen by construction).
+                        self.dropped += 1;
+                        continue;
+                    };
                     if let Some(p) = policy.as_deref_mut() {
-                        p.observe_arrival(now, req.model);
+                        p.observe_arrival(now, i);
                     }
-                    let part = self.cfg.partitions[req.model];
+                    let part = self.cfg.partitions[i];
                     if part > 0 {
                         // d_in/B transfer precedes TPU queueing.
-                        let delay = self.memo[req.model].input_transfer;
+                        let delay = self.memo[i].input_transfer;
                         self.heap.push(Event::at(
                             now + delay,
                             EventKind::TpuEnqueue { req },
@@ -297,20 +503,26 @@ impl<'a> Simulator<'a> {
                 }
                 EventKind::TpuDone { req } => {
                     self.tpu_busy = false;
-                    let p = self.cfg.partitions[req.model];
-                    let model = &self.tenants[req.model].model;
-                    let d_out = self.memo[req.model].output_transfer;
-                    if p >= model.partition_points {
-                        // full-TPU: output returns to host, request done
-                        self.heap.push(Event::at(
-                            now + d_out,
-                            EventKind::Complete { req },
-                        ));
+                    if let Some(i) = self.index_of(req.tenant) {
+                        let p = self.cfg.partitions[i];
+                        let model = &self.tenants[i].model;
+                        let d_out = self.memo[i].output_transfer;
+                        if p >= model.partition_points {
+                            // full-TPU: output returns to host, request done
+                            self.heap.push(Event::at(
+                                now + d_out,
+                                EventKind::Complete { req },
+                            ));
+                        } else {
+                            self.heap.push(Event::at(
+                                now + d_out,
+                                EventKind::CpuEnqueue { req },
+                            ));
+                        }
                     } else {
-                        self.heap.push(Event::at(
-                            now + d_out,
-                            EventKind::CpuEnqueue { req },
-                        ));
+                        // Tenant detached while its request held the TPU:
+                        // the service time was paid, the result is dropped.
+                        self.dropped += 1;
                     }
                     self.start_tpu_if_idle(now);
                 }
@@ -318,25 +530,56 @@ impl<'a> Simulator<'a> {
                     self.enqueue_cpu(req, now);
                 }
                 EventKind::CpuDone { req } => {
-                    self.cpu_busy[req.model] -= 1;
-                    self.record_completion(&req, now);
-                    self.start_cpu_if_possible(req.model, now);
+                    if let Some(i) = self.index_of(req.tenant) {
+                        self.cpu_busy[i] -= 1;
+                        self.record_completion(&req, now);
+                        self.start_cpu_if_possible(i, now);
+                    } else {
+                        // The tenant's busy counter vanished with its slot.
+                        self.dropped += 1;
+                    }
                 }
                 EventKind::Complete { req } => {
                     self.record_completion(&req, now);
                 }
                 EventKind::Reconfigure => {
                     if let Some(p) = policy.as_deref_mut() {
-                        let t0 = std::time::Instant::now();
-                        if let Some(cfg) = p.decide(now, self.tenants, &self.cfg) {
-                            let micros = t0.elapsed().as_secs_f64() * 1e6;
-                            reconfigs.push((now, cfg.clone(), micros));
-                            self.set_config(cfg);
+                        self.policy_decide(now, p, &mut reconfigs);
+                        if let Some(per) = p.period() {
+                            let next = now + per;
+                            if next <= self.opts.horizon {
+                                self.heap.push(Event::at(next, EventKind::Reconfigure));
+                            }
                         }
-                        let next = now + p.period();
-                        if next <= self.opts.horizon {
-                            self.heap.push(Event::at(next, EventKind::Reconfigure));
+                    }
+                }
+                EventKind::Churn { idx } => {
+                    match churn_kinds[idx].take() {
+                        Some(ChurnKind::Attach { tenant, .. }) => {
+                            let name = tenant.model.name.clone();
+                            let h = self.apply_attach(tenant);
+                            churn_log.push((now, format!("attach {name} as {h}")));
+                            if let Some(p) = policy.as_deref_mut() {
+                                p.on_attach(now, self.tenants.len() - 1);
+                                self.policy_decide(now, p, &mut reconfigs);
+                            }
                         }
+                        Some(ChurnKind::Detach { name }) => {
+                            if let Some(i) =
+                                self.tenants.iter().position(|t| t.model.name == name)
+                            {
+                                let h = self.apply_detach(i);
+                                churn_log.push((now, format!("detach {name} ({h})")));
+                                if let Some(p) = policy.as_deref_mut() {
+                                    p.on_detach(now, i);
+                                    self.policy_decide(now, p, &mut reconfigs);
+                                }
+                            } else {
+                                churn_log
+                                    .push((now, format!("detach {name}: not attached")));
+                            }
+                        }
+                        None => {}
                     }
                 }
             }
@@ -345,6 +588,9 @@ impl<'a> Simulator<'a> {
         let measured = self.opts.horizon.max(1e-9);
         SimResult {
             per_model: self.stats.clone(),
+            retired: self.retired.clone(),
+            dropped: self.dropped,
+            churn_log,
             mean_latency: self.weighted_latency.mean(),
             tpu_utilization: self.tpu_busy_time / measured,
             cache_hit_rate: self.cache.hit_rate(),
@@ -404,12 +650,30 @@ pub fn simulate_dynamic(
     sim.run(&arrivals, Some(policy))
 }
 
+/// Run with rate schedules, a reconfiguration policy, AND a tenant-churn
+/// schedule (dynamic experiments with arrivals/departures).
+pub fn simulate_churn(
+    cost: &CostModel,
+    tenants: &[Tenant],
+    initial: &Config,
+    schedules: &[RateSchedule],
+    churn: Vec<ChurnEvent>,
+    policy: &mut dyn ReconfigPolicy,
+    opts: SimOptions,
+) -> SimResult {
+    let mut rng = Rng::new(opts.seed);
+    let arrivals = generate_arrivals(schedules, opts.horizon, &mut rng);
+    let mut sim = Simulator::new(cost, tenants, initial.clone(), opts);
+    sim.run_churn(&arrivals, churn, Some(policy))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::analytic::AnalyticModel;
     use crate::config::HardwareSpec;
     use crate::model::synthetic_model;
+    use crate::sim::reconfig::SwapLessPolicy;
 
     fn setup(rate: f64) -> (CostModel, Vec<Tenant>) {
         let cost = CostModel::new(HardwareSpec::default());
@@ -560,5 +824,145 @@ mod tests {
         let res = simulate(&cost, &tenants, &cfg, o);
         let series = res.timeline.unwrap().series();
         assert!(series.len() >= 15);
+    }
+
+    fn churn_policy(cost: &CostModel, n: usize) -> SwapLessPolicy {
+        SwapLessPolicy::new(AnalyticModel::new(cost.clone()), 4, n, 20.0, 5.0, 0.10)
+    }
+
+    #[test]
+    fn churn_attach_detach_round_trip() {
+        // One tenant serves throughout; a second attaches at t=100 and
+        // detaches at t=300. Its stats retire, the survivor's stats stay
+        // keyed to it, and the policy re-plans at both transitions.
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let churn = vec![
+            ChurnEvent {
+                time: 100.0,
+                kind: ChurnKind::Attach {
+                    tenant: Tenant {
+                        model: synthetic_model("guest", 5, 1_000_000, 400_000_000),
+                        rate: 2.0,
+                    },
+                    schedule: RateSchedule::constant(2.0),
+                },
+            },
+            ChurnEvent {
+                time: 300.0,
+                kind: ChurnKind::Detach {
+                    name: "guest".into(),
+                },
+            },
+        ];
+        let mut policy = churn_policy(&cost, 1);
+        let res = simulate_churn(
+            &cost,
+            &tenants,
+            &cfg,
+            &[RateSchedule::constant(3.0)],
+            churn,
+            &mut policy,
+            opts(500.0, 31),
+        );
+        assert_eq!(res.per_model.len(), 1, "only the survivor remains");
+        assert_eq!(res.per_model[0].name, "m");
+        assert_eq!(res.per_model[0].handle, TenantHandle(0));
+        assert_eq!(res.retired.len(), 1);
+        assert_eq!(res.retired[0].name, "guest");
+        assert!(
+            res.retired[0].completed > 200,
+            "guest served while attached: {}",
+            res.retired[0].completed
+        );
+        // The survivor kept completing after the churn.
+        assert!(res.per_model[0].completed > 1000);
+        assert!(res.mean_latency.is_finite());
+        assert_eq!(res.churn_log.len(), 2);
+        // Attach + detach each force a policy decision; at least the
+        // attach-time one must reconfigure (the guest needs resources).
+        assert!(
+            res.reconfigs.iter().any(|(t, _, _)| (*t - 100.0).abs() < 1e-9
+                || (*t > 100.0 && *t < 300.0)),
+            "no reconfiguration while the guest was attached: {:?}",
+            res.reconfigs.iter().map(|(t, _, _)| *t).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn churn_detach_drops_inflight_cleanly() {
+        // Detach under heavy load: queued requests of the departed tenant
+        // are counted as dropped, never completed into its peers' stats.
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("stay", 6, 1_000_000, 500_000_000),
+                rate: 2.0,
+            },
+            Tenant {
+                model: synthetic_model("leave", 6, 1_000_000, 500_000_000),
+                rate: 6.0,
+            },
+        ];
+        let cfg = Config {
+            partitions: vec![6, 6],
+            cores: vec![0, 0],
+        };
+        let churn = vec![ChurnEvent {
+            time: 200.0,
+            kind: ChurnKind::Detach {
+                name: "leave".into(),
+            },
+        }];
+        let mut policy = churn_policy(&cost, 2);
+        let res = simulate_churn(
+            &cost,
+            &tenants,
+            &cfg,
+            &[RateSchedule::constant(2.0), RateSchedule::constant(6.0)],
+            churn,
+            &mut policy,
+            opts(400.0, 37),
+        );
+        assert_eq!(res.per_model.len(), 1);
+        assert_eq!(res.per_model[0].name, "stay");
+        assert_eq!(res.retired.len(), 1);
+        assert_eq!(res.retired[0].name, "leave");
+        // Arrivals generated for "leave" after t=200 all drop.
+        assert!(res.dropped > 500, "dropped={}", res.dropped);
+        // Totals stay consistent: stay's completions keep accruing.
+        assert!(res.per_model[0].completed > 500);
+    }
+
+    #[test]
+    fn churn_is_deterministic_given_seed() {
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let churn = || {
+            vec![ChurnEvent {
+                time: 50.0,
+                kind: ChurnKind::Attach {
+                    tenant: Tenant {
+                        model: synthetic_model("guest", 5, 1_000_000, 400_000_000),
+                        rate: 2.0,
+                    },
+                    schedule: RateSchedule::constant(2.0),
+                },
+            }]
+        };
+        let mut p1 = churn_policy(&cost, 1);
+        let mut p2 = churn_policy(&cost, 1);
+        let sched = [RateSchedule::constant(3.0)];
+        let a = simulate_churn(&cost, &tenants, &cfg, &sched, churn(), &mut p1, opts(200.0, 41));
+        let b = simulate_churn(&cost, &tenants, &cfg, &sched, churn(), &mut p2, opts(200.0, 41));
+        assert_eq!(a.mean_latency, b.mean_latency);
+        assert_eq!(a.per_model[0].completed, b.per_model[0].completed);
+        assert_eq!(a.per_model[1].completed, b.per_model[1].completed);
     }
 }

@@ -1,5 +1,12 @@
 //! Online reconfiguration policies for dynamic workloads (Section IV +
 //! Fig. 8): a sliding-window rate monitor feeding the resource allocator.
+//!
+//! A [`ReconfigPolicy`] is the single decision surface shared by the two
+//! execution engines: the DES ([`crate::sim::Simulator`]) and the live
+//! coordinator ([`crate::coordinator::Server`]) both feed arrivals in via
+//! `observe_arrival`, invoke `decide` on the policy's period, and notify
+//! tenant churn through the `on_attach`/`on_detach` hooks — there is no
+//! second, hand-rolled re-planning loop anywhere.
 
 use std::collections::VecDeque;
 
@@ -7,22 +14,35 @@ use crate::alloc;
 use crate::analytic::{AnalyticModel, Config, Tenant};
 use crate::tpu::PrefixTables;
 
-/// Periodic decision hook the DES (and the live coordinator) invokes.
+/// Periodic decision hook the DES and the live coordinator invoke.
 pub trait ReconfigPolicy {
-    /// Seconds between `decide` invocations.
-    fn period(&self) -> f64;
-    /// Called on every arrival (the rate-monitor feed).
+    /// Seconds between periodic `decide` invocations; `None` means the
+    /// policy never wants a periodic wake-up (static policies).
+    fn period(&self) -> Option<f64>;
+    /// Called on every arrival (the rate-monitor feed). `model` is the
+    /// tenant's *current* positional index.
     fn observe_arrival(&mut self, t: f64, model: usize);
     /// Return `Some(new_config)` to reconfigure, `None` to keep current.
+    /// `tenants` and `current` are positionally aligned snapshots.
     fn decide(&mut self, t: f64, tenants: &[Tenant], current: &Config) -> Option<Config>;
+    /// A tenant was appended at positional `index` (== new tenant count−1).
+    fn on_attach(&mut self, _t: f64, _index: usize) {}
+    /// The tenant at positional `index` was removed; peers above shifted
+    /// down by one.
+    fn on_detach(&mut self, _t: f64, _index: usize) {}
 }
 
 /// Sliding-window per-model arrival-rate estimator.
+///
+/// Per-model event counts are maintained incrementally on observe/evict,
+/// so [`rates`](RateMonitor::rates) is O(n_models) — it is called under
+/// the coordinator's submit-path lock, where the old recount-the-window
+/// implementation was O(events in window) per call.
 #[derive(Debug, Clone)]
 pub struct RateMonitor {
     window: f64,
     events: VecDeque<(f64, usize)>,
-    n_models: usize,
+    counts: Vec<u64>,
 }
 
 impl RateMonitor {
@@ -31,18 +51,52 @@ impl RateMonitor {
         RateMonitor {
             window,
             events: VecDeque::new(),
-            n_models,
+            counts: vec![0; n_models],
         }
     }
 
+    pub fn n_models(&self) -> usize {
+        self.counts.len()
+    }
+
     pub fn observe(&mut self, t: f64, model: usize) {
+        // Out-of-range observations (a submit racing a detach) are dropped
+        // rather than corrupting a peer's count.
+        if model >= self.counts.len() {
+            return;
+        }
         self.events.push_back((t, model));
+        self.counts[model] += 1;
         self.evict(t);
     }
 
+    /// Track a newly attached model (appended at the end).
+    pub fn insert_model(&mut self) {
+        self.counts.push(0);
+    }
+
+    /// Forget the model at `index`; peers above shift down by one (their
+    /// windowed events are preserved under the shifted indices).
+    pub fn remove_model(&mut self, index: usize) {
+        if index >= self.counts.len() {
+            return;
+        }
+        self.counts.remove(index);
+        let mut kept = VecDeque::with_capacity(self.events.len());
+        for (t, m) in self.events.drain(..) {
+            match m.cmp(&index) {
+                std::cmp::Ordering::Less => kept.push_back((t, m)),
+                std::cmp::Ordering::Equal => {}
+                std::cmp::Ordering::Greater => kept.push_back((t, m - 1)),
+            }
+        }
+        self.events = kept;
+    }
+
     fn evict(&mut self, now: f64) {
-        while let Some((t, _)) = self.events.front() {
+        while let Some((t, m)) = self.events.front() {
             if now - t > self.window {
+                self.counts[*m] -= 1;
                 self.events.pop_front();
             } else {
                 break;
@@ -53,13 +107,9 @@ impl RateMonitor {
     /// Estimated per-model rates at time `now` (events / effective window).
     pub fn rates(&mut self, now: f64) -> Vec<f64> {
         self.evict(now);
-        let mut counts = vec![0usize; self.n_models];
-        for (_, m) in &self.events {
-            counts[*m] += 1;
-        }
         // Early in the run the window isn't full yet.
         let effective = self.window.min(now.max(1e-9));
-        counts
+        self.counts
             .iter()
             .map(|c| *c as f64 / effective)
             .collect()
@@ -69,23 +119,31 @@ impl RateMonitor {
 /// The SwapLess online policy: estimate rates over a sliding window, run
 /// the hill-climbing allocator, and reconfigure when the predicted config
 /// changes. Decision wall-clock times are recorded (the paper reports
-/// < 2 ms per invocation).
+/// < 2 ms per invocation). Tenant churn (`on_attach`/`on_detach`) resizes
+/// the monitor in place and forces a re-plan on the next `decide`.
 pub struct SwapLessPolicy {
     pub am: AnalyticModel,
     pub k_max: usize,
     pub monitor: RateMonitor,
+    window: f64,
     period: f64,
     /// Relative rate change below which we skip re-planning.
     threshold: f64,
     last_rates: Vec<f64>,
+    /// Set by the churn hooks: the tenant set changed, so the next
+    /// `decide` must re-plan regardless of the rate-change threshold.
+    force_replan: bool,
+    /// A previous `decide` saw a tenant count that disagreed with the
+    /// monitor (stale snapshot racing churn, or a hookless driver).
+    resync_pending: bool,
     pub decision_micros: Vec<f64>,
     /// Per-model prefix tables, built on the first decision and reused by
     /// every re-plan (rates change between decisions; the tables are
     /// rate-independent). Keyed by (model name, partition count) — names
     /// uniquely identify models under the manifest contract, and the
     /// partition count guards against a same-named model that was
-    /// re-segmented — so a policy handed a different mix rebuilds instead
-    /// of planning with stale tables.
+    /// re-segmented — so a policy handed a different mix (including after
+    /// churn) rebuilds instead of planning with stale tables.
     tables: Vec<PrefixTables>,
     table_models: Vec<(String, usize)>,
 }
@@ -103,9 +161,12 @@ impl SwapLessPolicy {
             am,
             k_max,
             monitor: RateMonitor::new(window, n_models),
+            window,
             period,
             threshold,
             last_rates: vec![0.0; n_models],
+            force_replan: false,
+            resync_pending: false,
             decision_micros: Vec::new(),
             tables: Vec::new(),
             table_models: Vec::new(),
@@ -124,17 +185,46 @@ impl SwapLessPolicy {
 }
 
 impl ReconfigPolicy for SwapLessPolicy {
-    fn period(&self) -> f64 {
-        self.period
+    fn period(&self) -> Option<f64> {
+        Some(self.period)
     }
 
     fn observe_arrival(&mut self, t: f64, model: usize) {
         self.monitor.observe(t, model);
     }
 
+    fn on_attach(&mut self, _t: f64, _index: usize) {
+        self.monitor.insert_model();
+        self.last_rates.push(0.0);
+        self.force_replan = true;
+    }
+
+    fn on_detach(&mut self, _t: f64, index: usize) {
+        self.monitor.remove_model(index);
+        if index < self.last_rates.len() {
+            self.last_rates.remove(index);
+        }
+        self.force_replan = true;
+    }
+
     fn decide(&mut self, t: f64, tenants: &[Tenant], current: &Config) -> Option<Config> {
+        if self.monitor.n_models() != tenants.len() {
+            // A single mismatch is almost always a stale snapshot racing a
+            // churn hook (the caller's epoch guard discards the result
+            // anyway) — skip rather than destroy the live rate window. A
+            // PERSISTENT mismatch means the caller drives churn without
+            // the hooks; resync defensively then.
+            if !self.resync_pending {
+                self.resync_pending = true;
+                return None;
+            }
+            self.monitor = RateMonitor::new(self.window, tenants.len());
+            self.last_rates = vec![0.0; tenants.len()];
+            self.force_replan = true;
+        }
+        self.resync_pending = false;
         let rates = self.monitor.rates(t);
-        if !self.rates_changed(&rates) {
+        if !self.force_replan && !self.rates_changed(&rates) {
             return None;
         }
         let stale = self.table_models.len() != tenants.len()
@@ -161,6 +251,7 @@ impl ReconfigPolicy for SwapLessPolicy {
         self.decision_micros
             .push(t0.elapsed().as_secs_f64() * 1e6);
         self.last_rates = rates;
+        self.force_replan = false;
         if &alloc.config != current {
             Some(alloc.config)
         } else {
@@ -169,12 +260,14 @@ impl ReconfigPolicy for SwapLessPolicy {
     }
 }
 
-/// A policy that never reconfigures (static baselines in Fig. 8).
+/// A policy that never reconfigures (static baselines in Fig. 8). Its
+/// period is honestly `None` — no periodic decision events are scheduled
+/// at all, instead of the old `f64::MAX / 4.0` sentinel timestamp.
 pub struct StaticPolicy;
 
 impl ReconfigPolicy for StaticPolicy {
-    fn period(&self) -> f64 {
-        f64::MAX / 4.0
+    fn period(&self) -> Option<f64> {
+        None
     }
 
     fn observe_arrival(&mut self, _t: f64, _model: usize) {}
@@ -221,6 +314,50 @@ mod tests {
     }
 
     #[test]
+    fn rate_monitor_incremental_counts_match_recount() {
+        // The O(n_models) incremental counts must equal a full recount of
+        // the live window at every step.
+        let mut m = RateMonitor::new(7.0, 3);
+        let mut rng = crate::util::rng::Rng::new(99);
+        let mut t = 0.0;
+        for _ in 0..500 {
+            t += rng.range_f64(0.0, 0.3);
+            let model = rng.below(3);
+            m.observe(t, model);
+            let rates = m.rates(t);
+            let mut recount = vec![0u64; 3];
+            for (et, em) in &m.events {
+                assert!(t - et <= m.window + 1e-12);
+                recount[*em] += 1;
+            }
+            let effective = m.window.min(t.max(1e-9));
+            for i in 0..3 {
+                assert!((rates[i] - recount[i] as f64 / effective).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn rate_monitor_churn_preserves_peer_counts() {
+        let mut m = RateMonitor::new(100.0, 3);
+        for i in 0..30 {
+            m.observe(i as f64 * 0.1, i % 3);
+        }
+        m.remove_model(1); // old model 2 becomes index 1
+        let rates = m.rates(3.0);
+        assert_eq!(rates.len(), 2);
+        assert!((rates[0] - 10.0 / 3.0).abs() < 1e-9, "r0={}", rates[0]);
+        assert!((rates[1] - 10.0 / 3.0).abs() < 1e-9, "r1={}", rates[1]);
+        m.insert_model();
+        let rates = m.rates(3.0);
+        assert_eq!(rates.len(), 3);
+        assert_eq!(rates[2], 0.0);
+        // Out-of-range observe is ignored, not a panic.
+        m.observe(3.0, 9);
+        assert_eq!(m.rates(3.0).len(), 3);
+    }
+
+    #[test]
     fn swapless_policy_reconfigures_on_rate_change() {
         let cost = CostModel::new(HardwareSpec::default());
         let am = AnalyticModel::new(cost);
@@ -235,6 +372,7 @@ mod tests {
             },
         ];
         let mut pol = SwapLessPolicy::new(am, 4, 2, 10.0, 5.0, 0.05);
+        assert_eq!(pol.period(), Some(5.0));
         // feed 3 rps of model a only
         let mut t = 0.0;
         while t < 10.0 {
@@ -252,9 +390,46 @@ mod tests {
     }
 
     #[test]
+    fn swapless_policy_replans_on_churn_hooks() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let am = AnalyticModel::new(cost);
+        let mut tenants = vec![Tenant {
+            model: synthetic_model("a", 6, 2_000_000, 800_000_000),
+            rate: 0.0,
+        }];
+        let mut pol = SwapLessPolicy::new(am, 4, 1, 10.0, 5.0, 0.05);
+        for i in 0..30 {
+            pol.observe_arrival(i as f64 / 3.0, 0);
+        }
+        let current = Config::all_cpu(1);
+        let first = pol.decide(10.0, &tenants, &current).expect("cold replan");
+        // Steady state: no decision.
+        assert!(pol.decide(10.1, &tenants, &first).is_none());
+        // Attach hook forces a re-plan sized for the new mix.
+        tenants.push(Tenant {
+            model: synthetic_model("b", 6, 2_000_000, 800_000_000),
+            rate: 0.0,
+        });
+        pol.on_attach(10.2, 1);
+        let grown = pol
+            .decide(10.2, &tenants, &Config::all_cpu(2))
+            .expect("attach forces re-plan");
+        assert_eq!(grown.partitions.len(), 2);
+        // Detach hook shrinks and forces another re-plan.
+        tenants.remove(0);
+        pol.on_detach(10.3, 0);
+        let shrunk = pol.decide(10.3, &tenants, &Config::all_cpu(1));
+        if let Some(cfg) = &shrunk {
+            assert_eq!(cfg.partitions.len(), 1);
+        }
+        assert_eq!(pol.monitor.n_models(), 1);
+    }
+
+    #[test]
     fn static_policy_never_changes() {
         let mut p = StaticPolicy;
         let tenants: Vec<Tenant> = vec![];
+        assert_eq!(p.period(), None);
         assert!(p.decide(1.0, &tenants, &Config::all_cpu(0)).is_none());
     }
 }

@@ -6,10 +6,10 @@
 use swapless::alloc;
 use swapless::analytic::{AnalyticModel, Config, Tenant};
 use swapless::config::HardwareSpec;
-use swapless::coordinator::{Server, ServerOptions};
+use swapless::coordinator::{AttachOptions, ServerBuilder};
 use swapless::experiments as exp;
 use swapless::model::Manifest;
-use swapless::runtime::service::ExecService;
+use swapless::runtime::service::{ExecBackend, ExecService};
 use swapless::runtime::Engine;
 use swapless::tpu::CostModel;
 
@@ -111,41 +111,44 @@ fn exec_service_serves_from_other_threads() {
 #[test]
 fn server_round_trip_split_execution() {
     let Some(m) = manifest() else { return };
-    let names = vec!["squeezenet".to_string(), "mobilenetv2".to_string()];
     let cost = CostModel::new(HardwareSpec::default());
+    let server = ServerBuilder::new(&m, cost)
+        .adaptive(false)
+        .backend(ExecBackend::Pjrt)
+        .build()
+        .unwrap();
+    let h_sq = server
+        .attach("squeezenet", AttachOptions { rate_hint: 1.0 })
+        .unwrap();
+    let h_mb = server
+        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0 })
+        .unwrap();
     // Force split configs: prefix 1 segment, suffix on CPU pools.
-    let cfg = Config {
-        partitions: vec![1, 2],
-        cores: vec![2, 2],
-    };
-    let server = Server::start(
-        &m,
-        &names,
-        cost,
-        cfg,
-        ServerOptions {
-            adaptive: false,
-            ..Default::default()
-        },
-    )
-    .unwrap();
-    for model in 0..2 {
-        let n_in: usize = server.tenants()[model].model.input_shape.iter().product();
-        let done = server.infer(model, vec![0.5; n_in]).unwrap();
-        assert_eq!(done.output.len(), 10, "model {model}");
+    server
+        .set_config(Config {
+            partitions: vec![1, 2],
+            cores: vec![2, 2],
+        })
+        .unwrap();
+    for h in [h_sq, h_mb] {
+        let n_in: usize = server.model_meta(h).unwrap().input_shape.iter().product();
+        let done = server.infer(h, vec![0.5; n_in]).unwrap();
+        assert_eq!(done.output.len(), 10, "{h}");
         assert!(done.latency_s > 0.0);
     }
     let stats = server.stats();
     assert_eq!(stats.completed, 2);
 
     // Split output must equal the full-TPU output (numerics invariant).
-    let n_in: usize = server.tenants()[0].model.input_shape.iter().product();
-    let split_out = server.infer(0, vec![0.25; n_in]).unwrap().output;
-    server.set_config(Config {
-        partitions: vec![2, 5],
-        cores: vec![0, 0],
-    });
-    let full_out = server.infer(0, vec![0.25; n_in]).unwrap().output;
+    let n_in: usize = server.model_meta(h_sq).unwrap().input_shape.iter().product();
+    let split_out = server.infer(h_sq, vec![0.25; n_in]).unwrap().output;
+    server
+        .set_config(Config {
+            partitions: vec![2, 5],
+            cores: vec![0, 0],
+        })
+        .unwrap();
+    let full_out = server.infer(h_sq, vec![0.25; n_in]).unwrap().output;
     assert_eq!(split_out.len(), full_out.len());
     for (a, b) in split_out.iter().zip(&full_out) {
         assert!((a - b).abs() < 1e-4, "split vs full mismatch: {a} vs {b}");

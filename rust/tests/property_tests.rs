@@ -513,6 +513,65 @@ fn prop_engine_hill_climb_matches_naive_reference() {
 }
 
 #[test]
+fn prop_admission_matches_ground_truth_stability() {
+    // Admission control must agree with the exhaustive reference solver:
+    // a mix is refused iff NO constraint-feasible configuration has a
+    // finite objective (ρ < 1 everywhere). Rates are scaled across a wide
+    // range so both accept and reject regimes are exercised.
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    for seed in 5000..5000 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let mut tenants = random_tenants(&mut rng);
+        tenants.truncate(3); // keep the exhaustive cross-check tractable
+        let scale = 10f64.powf(rng.range_f64(-1.0, 3.0));
+        for t in tenants.iter_mut() {
+            t.rate *= scale;
+        }
+        let k_max = 1 + rng.below(4);
+        let exact = alloc::exhaustive_best(&am, &tenants, k_max);
+        let feasible = exact
+            .as_ref()
+            .map(|a| a.predicted_objective.is_finite())
+            .unwrap_or(false);
+        match alloc::admit(&am, &tenants, k_max) {
+            Ok(plan) => {
+                accepted += 1;
+                assert!(
+                    plan.predicted_objective.is_finite(),
+                    "seed {seed}: admitted with diverged objective"
+                );
+                check_constraints(&tenants, &plan.config, k_max)
+                    .unwrap_or_else(|e| panic!("seed {seed}: admitted infeasible config: {e}"));
+                assert!(
+                    feasible,
+                    "seed {seed}: admitted a mix the exhaustive solver deems unstable"
+                );
+            }
+            Err(e) => {
+                rejected += 1;
+                assert!(
+                    e.predicted_objective.is_infinite(),
+                    "seed {seed}: rejection must carry a diverged objective, got {}",
+                    e.predicted_objective
+                );
+                assert_eq!(e.n_tenants, tenants.len(), "seed {seed}");
+                assert!(
+                    !feasible,
+                    "seed {seed}: rejected a mix with a stable configuration \
+                     (exhaustive found objective {:?})",
+                    exact.map(|a| a.predicted_objective)
+                );
+            }
+        }
+    }
+    // The rate sweep must actually exercise both regimes.
+    assert!(accepted >= 3, "only {accepted} mixes accepted");
+    assert!(rejected >= 3, "only {rejected} mixes rejected");
+}
+
+#[test]
 fn prop_rate_solver_hits_target_utilization() {
     let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
     for seed in 1000..1000 + 20u64 {

@@ -48,7 +48,7 @@ fn main() -> Result<(), String> {
     let mut handles = Vec::new();
     for (name, rate) in MODELS.iter().zip([PHASES[0].0, PHASES[0].1]) {
         let h = server
-            .attach(name, AttachOptions { rate_hint: rate })
+            .attach(name, AttachOptions { rate_hint: rate, ..Default::default() })
             .map_err(|e| e.to_string())?;
         handles.push(h);
     }
@@ -60,7 +60,7 @@ fn main() -> Result<(), String> {
 
     // Admission control in action: a tenant declaring an impossible rate
     // is refused with the predicted objective, without disturbing service.
-    match server.attach(GUEST, AttachOptions { rate_hint: 1e6 }) {
+    match server.attach(GUEST, AttachOptions { rate_hint: 1e6, ..Default::default() }) {
         Err(AttachError::Admission(e)) => println!(
             "admission: {GUEST} @ 1e6 rps refused (predicted objective {}, ρ {:.2})",
             e.predicted_objective, e.tpu_utilization
@@ -77,7 +77,11 @@ fn main() -> Result<(), String> {
         println!("\n-- phase {phase}: rates = ({r0}, {r1}) rps --");
         // Churn: the guest joins for phase 1 only.
         if phase == 1 {
-            match server.attach(GUEST, AttachOptions { rate_hint: GUEST_RATE }) {
+            let opts = AttachOptions {
+                rate_hint: GUEST_RATE,
+                ..Default::default()
+            };
+            match server.attach(GUEST, opts) {
                 Ok(h) => {
                     println!("  attached {GUEST} as {h} @ {GUEST_RATE} rps");
                     guest = Some(h);

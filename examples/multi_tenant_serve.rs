@@ -80,7 +80,7 @@ fn run_config(
     let mut handles: Vec<(TenantHandle, Arc<ModelMeta>)> = Vec::new();
     for (name, rate) in MODELS.iter().zip(RATES) {
         let h = server
-            .attach(name, AttachOptions { rate_hint: rate })
+            .attach(name, AttachOptions { rate_hint: rate, ..Default::default() })
             .map_err(|e| e.to_string())?;
         let meta = server.model_meta(h).expect("just attached");
         handles.push((h, meta));

@@ -39,7 +39,7 @@ fn main() -> Result<(), String> {
     // 3. Attach the tenant at a declared 3 RPS. Admission control plans
     //    the mix with the analytic queueing model and installs the config.
     let handle = server
-        .attach(model, AttachOptions { rate_hint: 3.0 })
+        .attach(model, AttachOptions { rate_hint: 3.0, ..Default::default() })
         .map_err(|e| e.to_string())?;
     let cfg = server.current_config();
     let am = AnalyticModel::new(cost);

@@ -26,7 +26,7 @@ fn main() {
         horizon: 300.0,
         warmup: 10.0,
         seed: 3,
-        timeline_window: None,
+        ..SimOptions::default()
     };
     // ~12 rps * 300 s = ~3600 requests, ~5 events each.
     let s = bench("simulate 300s x3 models (~18k events)", 5, 1500, || {

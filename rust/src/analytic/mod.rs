@@ -482,6 +482,21 @@ impl AnalyticModel {
         objective
     }
 
+    /// Per-request TPU service-time estimate for scheduling hints: the
+    /// deterministic prefix compute + intra-partition swap under
+    /// partition `p` — what the shortest-predicted-service-first
+    /// discipline orders the shared TPU queue by, and what weighted-fair
+    /// queueing charges against tenant deficits.
+    pub fn tpu_service_hint(&self, model: &ModelMeta, p: usize) -> f64 {
+        self.cost.tpu_service(model, p)
+    }
+
+    /// Per-request CPU suffix service-time estimate (segments [p, P)) —
+    /// the scheduling hint for the per-tenant CPU stations.
+    pub fn cpu_service_hint(&self, model: &ModelMeta, p: usize) -> f64 {
+        self.cost.cpu_service(model, p)
+    }
+
     /// Request-weighted mean latency (what Fig. 7 plots).
     pub fn mean_latency(&self, tenants: &[Tenant], cfg: &Config) -> f64 {
         let lam: f64 = tenants.iter().map(|t| t.rate).sum();
@@ -670,6 +685,21 @@ mod tests {
     }
 
     #[test]
+    fn service_hints_match_cost_model() {
+        // The scheduling hints are thin, documented views of the cost
+        // model (the prefix tables consumed on the hot paths are pinned
+        // bit-exact against the same quantities elsewhere).
+        let (am, tenants) = setup(1);
+        let m = &tenants[0].model;
+        for p in 0..=m.partition_points {
+            assert_eq!(am.tpu_service_hint(m, p), am.cost.tpu_service(m, p));
+            assert_eq!(am.cpu_service_hint(m, p), am.cost.cpu_service(m, p));
+        }
+        assert_eq!(am.tpu_service_hint(m, 0), 0.0);
+        assert_eq!(am.cpu_service_hint(m, m.partition_points), 0.0);
+    }
+
+    #[test]
     fn objective_weights_by_rate() {
         let (am, mut tenants) = setup(2);
         tenants[1].rate = 0.0;
@@ -734,7 +764,11 @@ mod tests {
             },
         ] {
             let ev = am.evaluate(&tenants, &cfg);
-            assert!((ev.tpu_wait - am.tpu_wait(&tenants, &cfg)).abs() < 1e-12 || (ev.tpu_wait.is_infinite() && am.tpu_wait(&tenants, &cfg).is_infinite()));
+            let direct_wait = am.tpu_wait(&tenants, &cfg);
+            assert!(
+                (ev.tpu_wait - direct_wait).abs() < 1e-12
+                    || (ev.tpu_wait.is_infinite() && direct_wait.is_infinite())
+            );
             assert!((ev.tpu_rate - am.tpu_rate(&tenants, &cfg)).abs() < 1e-12);
             for i in 0..3 {
                 assert!(

@@ -6,13 +6,14 @@
 //!   attach(model, rate) ──► [admission control]  (analytic model plans the
 //!        │                   candidate mix; ρ ≥ 1 everywhere → typed reject)
 //!        ▼ TenantHandle
-//!   clients ──submit(h)──► router ──► [TPU worker thread]  (FCFS queue,
+//!   clients ──submit(h)──► router ──► [TPU worker thread]  (sched-core
+//!                             │        queue — FIFO/priority/WFQ/SPSF —
 //!                             │        SRAM cache + swap emulation,
 //!                             │        executes prefix via the exec service)
 //!                             │              │ boundary tensor
 //!                             └──────────────▼
 //!                                   [per-tenant CPU pools]  (k_i-gated
-//!                                    workers execute the suffix)
+//!                                    workers, sched-core queues)
 //!   detach(h) ──► queued jobs fail cleanly; stats retire under h
 //! ```
 //!
@@ -29,6 +30,11 @@
 //! thread invokes `decide` and installs accepted configurations — the
 //! in-flight requests finish under their admission-time configuration,
 //! mirroring the paper's preloaded-partition switching.
+//!
+//! Queueing order everywhere on this path is owned by the shared
+//! [`crate::sched`] core ([`ServerOptions::discipline`]) — the same
+//! trait objects the DES schedules with — and completions are accounted
+//! per [`SloClass`](crate::sched::SloClass) in [`ServeStats::per_class`].
 //!
 //! The Edge TPU itself is emulated: prefix *numerics* run through the
 //! exec service (real PJRT artifacts, or the deterministic emulated

@@ -1,16 +1,19 @@
 //! Per-tenant CPU executor pools with dynamically adjustable core gates.
 //!
-//! Each tenant owns an independent FCFS queue (the paper's performance-
-//! isolation design). A fixed set of `K_max` worker threads per tenant is
-//! spawned at [`CpuPools::add_pool`]; at any moment only `k_i` of them may
-//! be *active* — the core gate — so reallocation is a single atomic store,
-//! not a thread spawn/join (this is what makes <2 ms reconfiguration
-//! possible). Pools are keyed by stable [`TenantHandle`]s and created /
-//! destroyed at tenant attach / detach: removing a pool fails its queued
-//! jobs cleanly ("tenant detached") while in-flight jobs finish; the
-//! worker threads are reaped when the pools object drops.
+//! Each tenant owns an independent queue ordered by the shared
+//! [`crate::sched`] core (the paper's performance-isolation design ran
+//! FCFS; any [`DisciplineKind`] plugs in, and it is the *same* discipline
+//! implementation the DES's CPU stations run). A fixed set of `K_max`
+//! worker threads per tenant is spawned at [`CpuPools::add_pool`]; at any
+//! moment only `k_i` of them may be *active* — the core gate — so
+//! reallocation is a single atomic store, not a thread spawn/join (this
+//! is what makes <2 ms reconfiguration possible). Pools are keyed by
+//! stable [`TenantHandle`]s and created / destroyed at tenant attach /
+//! detach: removing a pool fails its queued jobs cleanly ("tenant
+//! detached") while in-flight jobs finish; the worker threads are reaped
+//! when the pools object drops.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -19,6 +22,7 @@ use anyhow::anyhow;
 
 use crate::analytic::TenantHandle;
 use crate::model::ModelMeta;
+use crate::sched::{DisciplineKind, JobMeta, SchedQueue};
 
 /// A unit of CPU suffix work.
 pub struct CpuJob {
@@ -33,7 +37,7 @@ pub struct CpuJob {
 }
 
 struct PoolShared {
-    queue: Mutex<VecDeque<CpuJob>>,
+    queue: Mutex<SchedQueue<CpuJob>>,
     cv: Condvar,
     /// Allowed concurrency (k_i) — the core gate.
     allowed: AtomicUsize,
@@ -51,6 +55,7 @@ type ExecFn = dyn Fn(&ModelMeta, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + 
 
 pub struct CpuPools {
     k_max: usize,
+    discipline: DisciplineKind,
     exec: Arc<ExecFn>,
     pools: Mutex<HashMap<TenantHandle, PoolEntry>>,
     /// Worker threads of removed pools, joined on drop.
@@ -60,13 +65,14 @@ pub struct CpuPools {
 impl CpuPools {
     /// Create an empty pool set. `exec` runs a suffix (it submits to the
     /// executor-service thread); `k_max` workers are spawned per attached
-    /// tenant.
-    pub fn new<F>(k_max: usize, exec: F) -> CpuPools
+    /// tenant, each pool's queue ordered by `discipline`.
+    pub fn new<F>(k_max: usize, discipline: DisciplineKind, exec: F) -> CpuPools
     where
         F: Fn(&ModelMeta, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + Send + Sync + 'static,
     {
         CpuPools {
             k_max,
+            discipline,
             exec: Arc::new(exec),
             pools: Mutex::new(HashMap::new()),
             retired: Mutex::new(Vec::new()),
@@ -76,7 +82,7 @@ impl CpuPools {
     /// Spawn a tenant's pool (k_max gated workers, initially 0 allowed).
     pub fn add_pool(&self, h: TenantHandle) {
         let shared = Arc::new(PoolShared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(SchedQueue::with_kind(self.discipline)),
             cv: Condvar::new(),
             allowed: AtomicUsize::new(0),
             active: AtomicUsize::new(0),
@@ -106,7 +112,15 @@ impl CpuPools {
         let entry = self.pools.lock().unwrap().remove(&h);
         let Some(mut entry) = entry else { return };
         entry.shared.shutdown.store(true, Ordering::SeqCst);
-        let drained: Vec<CpuJob> = entry.shared.queue.lock().unwrap().drain(..).collect();
+        let drained: Vec<CpuJob> = entry
+            .shared
+            .queue
+            .lock()
+            .unwrap()
+            .drain_all()
+            .into_iter()
+            .map(|(_, job)| job)
+            .collect();
         entry.shared.cv.notify_all();
         self.retired.lock().unwrap().append(&mut entry.workers);
         for job in drained {
@@ -114,13 +128,14 @@ impl CpuPools {
         }
     }
 
-    /// Enqueue a suffix job for `h`. If the tenant has no pool (detached,
-    /// or detaching concurrently), the job fails cleanly through its
-    /// completion callback — submitters racing a detach never panic and
-    /// never hang: the shutdown flag is re-checked under the queue lock,
-    /// so a job can never land in a queue whose workers already exited
-    /// (remove_pool stores the flag before draining).
-    pub fn submit(&self, h: TenantHandle, job: CpuJob) {
+    /// Enqueue a suffix job for `h` with its scheduling metadata (SLO
+    /// class + predicted suffix service time). If the tenant has no pool
+    /// (detached, or detaching concurrently), the job fails cleanly
+    /// through its completion callback — submitters racing a detach never
+    /// panic and never hang: the shutdown flag is re-checked under the
+    /// queue lock, so a job can never land in a queue whose workers
+    /// already exited (remove_pool stores the flag before draining).
+    pub fn submit(&self, h: TenantHandle, meta: JobMeta, job: CpuJob) {
         let shared = self
             .pools
             .lock()
@@ -134,7 +149,7 @@ impl CpuPools {
                     if s.shutdown.load(Ordering::SeqCst) {
                         Some(job)
                     } else {
-                        q.push_back(job);
+                        q.push(meta, job);
                         None
                     }
                 };
@@ -194,7 +209,7 @@ fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
                 let allowed = s.allowed.load(Ordering::SeqCst).max(usize::from(!q.is_empty()));
                 if !q.is_empty() && s.active.load(Ordering::SeqCst) < allowed {
                     s.active.fetch_add(1, Ordering::SeqCst);
-                    break q.pop_front().unwrap();
+                    break q.pop().unwrap().1;
                 }
                 q = s.cv.wait(q).unwrap();
             }
@@ -241,8 +256,20 @@ mod tests {
         Arc::new(synthetic_model("m", 4, 1_000_000, 100_000_000))
     }
 
+    fn job_meta(h: TenantHandle, class: crate::sched::SloClass) -> JobMeta {
+        JobMeta {
+            tenant: h,
+            class,
+            service_hint: 1e-3,
+        }
+    }
+
+    fn std_meta(h: TenantHandle) -> JobMeta {
+        job_meta(h, crate::sched::SloClass::Standard)
+    }
+
     fn echo_pools(handles: &[TenantHandle], k: usize) -> CpuPools {
-        let pools = CpuPools::new(k, |_meta, _p, input| Ok(input));
+        let pools = CpuPools::new(k, DisciplineKind::Fifo, |_meta, _p, input| Ok(input));
         for h in handles {
             pools.add_pool(*h);
         }
@@ -259,8 +286,10 @@ mod tests {
         let m = meta();
         for i in 0..10 {
             let tx = tx.clone();
+            let h = if i % 2 == 0 { h0 } else { h1 };
             pools.submit(
-                if i % 2 == 0 { h0 } else { h1 },
+                h,
+                std_meta(h),
                 CpuJob {
                     meta: m.clone(),
                     p: 0,
@@ -280,7 +309,7 @@ mod tests {
         static PEAK: AtomicUsize = AtomicUsize::new(0);
         static CUR: AtomicUsize = AtomicUsize::new(0);
         let h = TenantHandle(7);
-        let pools = CpuPools::new(4, |_meta, _p, input| {
+        let pools = CpuPools::new(4, DisciplineKind::Fifo, |_meta, _p, input| {
             let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
             PEAK.fetch_max(c, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_millis(20));
@@ -295,6 +324,7 @@ mod tests {
             let tx = tx.clone();
             pools.submit(
                 h,
+                std_meta(h),
                 CpuJob {
                     meta: m.clone(),
                     p: 0,
@@ -317,6 +347,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         pools.submit(
             h,
+            std_meta(h),
             CpuJob {
                 meta: meta(),
                 p: 0,
@@ -333,6 +364,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         pools.submit(
             TenantHandle(9),
+            std_meta(TenantHandle(9)),
             CpuJob {
                 meta: meta(),
                 p: 0,
@@ -344,10 +376,68 @@ mod tests {
     }
 
     #[test]
+    fn priority_discipline_reorders_queued_jobs() {
+        use crate::sched::SloClass;
+        // One gated worker; the first job blocks on `gate` while the rest
+        // queue up, so the pop order is the discipline's to choose:
+        // strict priority must serve the interactive job before the batch
+        // job even though batch was submitted first. `started` confirms
+        // the blocker is executing (not merely queued) before the others
+        // are submitted — no sleep-based races.
+        let gate = Arc::new(AtomicBool::new(false));
+        let started = Arc::new(AtomicBool::new(false));
+        let g = gate.clone();
+        let s = started.clone();
+        let h = TenantHandle(5);
+        let pools = CpuPools::new(1, DisciplineKind::Priority, move |_meta, _p, input| {
+            if input[0] < 0.0 {
+                s.store(true, Ordering::SeqCst);
+                while !g.load(Ordering::SeqCst) {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+            Ok(input)
+        });
+        pools.add_pool(h);
+        pools.set_cores(&[(h, 1)]);
+        let order = Arc::new(Mutex::new(Vec::<f32>::new()));
+        let (tx, rx) = mpsc::channel();
+        let m = meta();
+        let submit = |class: SloClass, v: f32| {
+            let order = order.clone();
+            let tx = tx.clone();
+            pools.submit(
+                h,
+                job_meta(h, class),
+                CpuJob {
+                    meta: m.clone(),
+                    p: 0,
+                    input: vec![v],
+                    done: Box::new(move |r| {
+                        order.lock().unwrap().push(r.unwrap()[0]);
+                        tx.send(()).unwrap();
+                    }),
+                },
+            );
+        };
+        submit(SloClass::Standard, -1.0); // blocker
+        while !started.load(Ordering::SeqCst) {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        submit(SloClass::Batch, 1.0);
+        submit(SloClass::Interactive, 2.0);
+        gate.store(true, Ordering::SeqCst);
+        for _ in 0..3 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![-1.0, 2.0, 1.0]);
+    }
+
+    #[test]
     fn remove_pool_fails_queued_jobs_and_keeps_peers() {
         let ha = TenantHandle(1);
         let hb = TenantHandle(2);
-        let pools = CpuPools::new(2, |_meta, _p, input| {
+        let pools = CpuPools::new(2, DisciplineKind::Fifo, |_meta, _p, input| {
             std::thread::sleep(std::time::Duration::from_millis(5));
             Ok(input)
         });
@@ -363,6 +453,7 @@ mod tests {
             let tx = tx.clone();
             pools.submit(
                 ha,
+                std_meta(ha),
                 CpuJob {
                     meta: m.clone(),
                     p: 0,
@@ -378,6 +469,7 @@ mod tests {
         let (tx2, rx2) = mpsc::channel();
         pools.submit(
             hb,
+            std_meta(hb),
             CpuJob {
                 meta: m,
                 p: 0,

@@ -24,8 +24,14 @@
 //! arrivals from the submit path, its `on_attach`/`on_detach` hooks fire
 //! at churn, and a periodic thread invokes `decide` — the old hand-rolled
 //! `realloc_loop` duplicate of the simulator's policy is gone.
+//!
+//! Queueing order is likewise shared with the DES: the TPU worker's queue
+//! and every tenant's CPU pool run a [`crate::sched`] discipline selected
+//! by [`ServerOptions::discipline`] (`--discipline` on the CLI). Tenants
+//! declare an [`SloClass`] at attach (overridable per request via
+//! [`Server::submit_with_class`]), and completions are accounted per
+//! class in [`ServeStats::per_class`].
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -36,9 +42,10 @@ use anyhow::{anyhow, Result};
 use crate::alloc::{self, AdmissionError};
 use crate::analytic::{AnalyticModel, Config, Tenant, TenantHandle};
 use crate::config::RuntimeConfig;
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{LatencyHistogram, PerClassLatency};
 use crate::model::{Manifest, ModelMeta};
 use crate::runtime::service::{ExecBackend, ExecHandle, ExecService};
+use crate::sched::{DisciplineKind, JobMeta, SchedQueue, SloClass};
 use crate::sim::reconfig::{ReconfigPolicy, StaticPolicy, SwapLessPolicy};
 use crate::tpu::{CostModel, PrefixTables, SramCache};
 
@@ -55,6 +62,9 @@ pub struct ServerOptions {
     pub k_max: usize,
     /// Execution substrate (PJRT artifacts vs manifest-driven emulation).
     pub backend: ExecBackend,
+    /// Scheduling discipline for the TPU worker queue and every tenant's
+    /// CPU pool — the same `sched` core the DES runs.
+    pub discipline: DisciplineKind,
 }
 
 impl Default for ServerOptions {
@@ -65,6 +75,7 @@ impl Default for ServerOptions {
             runtime: RuntimeConfig::default(),
             k_max: 4,
             backend: ExecBackend::Auto,
+            discipline: DisciplineKind::Fifo,
         }
     }
 }
@@ -113,6 +124,14 @@ impl ServerBuilder {
         self
     }
 
+    /// Select the queueing discipline (default FIFO). A discipline
+    /// validated in the DES deploys here unchanged — both paths build
+    /// from the same `sched` factory.
+    pub fn discipline(mut self, d: DisciplineKind) -> Self {
+        self.opts.discipline = d;
+        self
+    }
+
     pub fn options(mut self, opts: ServerOptions) -> Self {
         self.opts = opts;
         self
@@ -137,11 +156,19 @@ pub struct AttachOptions {
     /// Declared/expected arrival rate (requests per second) — the λ the
     /// admission evaluation uses for the newcomer.
     pub rate_hint: f64,
+    /// The tenant's default SLO class: tags every request submitted via
+    /// [`Server::submit`] (per-request override:
+    /// [`Server::submit_with_class`]) and drives priority/WFQ scheduling
+    /// plus the per-class latency accounting.
+    pub class: SloClass,
 }
 
 impl Default for AttachOptions {
     fn default() -> Self {
-        AttachOptions { rate_hint: 1.0 }
+        AttachOptions {
+            rate_hint: 1.0,
+            class: SloClass::Standard,
+        }
     }
 }
 
@@ -197,7 +224,8 @@ impl std::fmt::Display for ConfigError {
                 cores,
             } => write!(
                 f,
-                "config dimension mismatch: {tenants} tenants, {partitions} partitions, {cores} cores"
+                "config dimension mismatch: {tenants} tenants, {partitions} partitions, \
+                 {cores} cores"
             ),
             ConfigError::PartitionOutOfRange {
                 index,
@@ -225,13 +253,19 @@ struct TpuJob {
     handle: TenantHandle,
     meta: Arc<ModelMeta>,
     p: usize,
+    class: SloClass,
+    /// Predicted CPU-suffix service under the admission-time partition —
+    /// precomputed O(1) from the prefix tables at submit, so the worker
+    /// never recomputes segment sums when forwarding to a CPU pool.
+    cpu_hint: f64,
     input: Vec<f32>,
     submitted: Instant,
     done: mpsc::Sender<Result<Completion>>,
 }
 
 struct TpuShared {
-    queue: Mutex<VecDeque<TpuJob>>,
+    /// The worker's queue, ordered by the shared scheduling core.
+    queue: Mutex<SchedQueue<TpuJob>>,
     cv: Condvar,
     shutdown: AtomicBool,
     /// Tenants whose SRAM-cache entries must be dropped (detached, or
@@ -256,6 +290,8 @@ pub struct TenantStats {
 pub struct ServeStats {
     /// Live tenants first (attach order), then detached tenants.
     pub per_tenant: Vec<TenantStats>,
+    /// Latency accounted per SLO class (live + detached tenants).
+    pub per_class: PerClassLatency,
     pub completed: u64,
     /// Requests that failed cleanly (tenant detached mid-flight, substrate
     /// errors).
@@ -275,6 +311,8 @@ struct Entry {
     handle: TenantHandle,
     tenant: Tenant,
     meta: Arc<ModelMeta>,
+    /// Default SLO class declared at attach.
+    class: SloClass,
     hist: LatencyHistogram,
 }
 
@@ -307,12 +345,13 @@ struct ReconfigLog {
 
 // Lock order (outer → inner): `state` → `retired` (detach registers the
 // retired row while the entry removal is still invisible) and `state` →
-// the pools map (attach grows pools under the state lock); `reconfig` and
-// `arrivals` are only taken with `state` released. The `policy` lock is
-// NEVER held together with `state` (decisions snapshot state, release,
-// then decide) nor with `arrivals` (`flush_arrivals` drains the buffer,
-// releases it, then locks the policy). Nothing acquires `state` while
-// holding any other lock — the order is acyclic.
+// the pools map (attach grows pools under the state lock); `reconfig`,
+// `arrivals`, and `class_hists` are only taken with `state` released
+// (`class_hists` is always taken alone). The `policy` lock is NEVER held
+// together with `state` (decisions snapshot state, release, then decide)
+// nor with `arrivals` (`flush_arrivals` drains the buffer, releases it,
+// then locks the policy). Nothing acquires `state` while holding any
+// other lock — the order is acyclic.
 struct Shared {
     state: Mutex<State>,
     policy: Mutex<Box<dyn ReconfigPolicy + Send>>,
@@ -326,6 +365,8 @@ struct Shared {
     buffer_arrivals: bool,
     retired: Mutex<Vec<TenantStats>>,
     reconfig: Mutex<ReconfigLog>,
+    /// Per-SLO-class latency across live + retired tenants.
+    class_hists: Mutex<PerClassLatency>,
     completed: AtomicU64,
     failed: AtomicU64,
     started: Instant,
@@ -343,6 +384,7 @@ pub struct Server {
     cost: CostModel,
     am: AnalyticModel,
     k_max: usize,
+    discipline: DisciplineKind,
     next_handle: AtomicU64,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
@@ -387,16 +429,19 @@ impl Server {
             buffer_arrivals: has_period,
             retired: Mutex::new(Vec::new()),
             reconfig: Mutex::new(ReconfigLog::default()),
+            class_hists: Mutex::new(PerClassLatency::new()),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             started: Instant::now(),
         });
 
-        // CPU pools execute suffixes through the executor thread.
+        // CPU pools execute suffixes through the executor thread; their
+        // queues run the same discipline as the TPU worker's.
         let h: ExecHandle = exec.handle();
         let cost_for_pools = cost.clone();
         let scale = opts.time_scale;
-        let pools = Arc::new(CpuPools::new(opts.k_max, move |meta, p, input| {
+        let discipline = opts.discipline;
+        let pools = Arc::new(CpuPools::new(opts.k_max, discipline, move |meta, p, input| {
             let t0 = Instant::now();
             let out = h.execute_range(&meta.name, p, meta.partition_points, input)?;
             // Pad to the modeled CPU-suffix budget (virtual device time).
@@ -410,9 +455,9 @@ impl Server {
             Ok(out)
         }));
 
-        // TPU worker thread: FCFS queue + SRAM cache + swap emulation.
+        // TPU worker thread: sched-core queue + SRAM cache + swap emulation.
         let tpu = Arc::new(TpuShared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(SchedQueue::with_kind(discipline)),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             invalidations: Mutex::new(Vec::new()),
@@ -455,10 +500,16 @@ impl Server {
             cost,
             am,
             k_max: opts.k_max,
+            discipline,
             next_handle: AtomicU64::new(0),
             threads,
             stop,
         })
+    }
+
+    /// The scheduling discipline driving the TPU queue and CPU pools.
+    pub fn discipline(&self) -> DisciplineKind {
+        self.discipline
     }
 
     fn now(&self) -> f64 {
@@ -515,6 +566,7 @@ impl Server {
             handle,
             tenant: newcomer,
             meta,
+            class: opts.class,
             hist: LatencyHistogram::default(),
         });
         st.config = plan.config;
@@ -562,21 +614,16 @@ impl Server {
             self.shared.retired.lock().unwrap().push(stats.clone());
             (i, stats)
         };
-        // New submits now fail; purge this tenant's queued TPU work.
+        // New submits now fail; purge this tenant's queued TPU work
+        // through the discipline (peers keep their scheduling state).
         {
             let mut q = self.tpu.queue.lock().unwrap();
-            let mut kept = VecDeque::with_capacity(q.len());
-            for job in q.drain(..) {
-                if job.handle == handle {
-                    self.shared.failed.fetch_add(1, Ordering::SeqCst);
-                    let _ = job
-                        .done
-                        .send(Err(anyhow!("{handle} detached before its job ran")));
-                } else {
-                    kept.push_back(job);
-                }
+            for (_, job) in q.drain_tenant(handle) {
+                self.shared.failed.fetch_add(1, Ordering::SeqCst);
+                let _ = job
+                    .done
+                    .send(Err(anyhow!("{handle} detached before its job ran")));
             }
-            *q = kept;
         }
         // Queued CPU jobs fail through their completion callbacks.
         self.pools.remove_pool(handle);
@@ -594,23 +641,66 @@ impl Server {
         Ok(stats)
     }
 
-    /// Submit a request; the completion arrives on the returned channel.
-    /// Unknown/detached handles deliver a clean error through the channel.
-    pub fn submit(&self, handle: TenantHandle, input: Vec<f32>) -> mpsc::Receiver<Result<Completion>> {
+    /// Submit a request tagged with the tenant's default SLO class; the
+    /// completion arrives on the returned channel. Unknown/detached
+    /// handles deliver a clean error through the channel.
+    pub fn submit(
+        &self,
+        handle: TenantHandle,
+        input: Vec<f32>,
+    ) -> mpsc::Receiver<Result<Completion>> {
+        self.submit_inner(handle, input, None)
+    }
+
+    /// Like [`submit`](Self::submit), but overriding the tenant's default
+    /// SLO class for this request.
+    pub fn submit_with_class(
+        &self,
+        handle: TenantHandle,
+        input: Vec<f32>,
+        class: SloClass,
+    ) -> mpsc::Receiver<Result<Completion>> {
+        self.submit_inner(handle, input, Some(class))
+    }
+
+    fn submit_inner(
+        &self,
+        handle: TenantHandle,
+        input: Vec<f32>,
+        class_override: Option<SloClass>,
+    ) -> mpsc::Receiver<Result<Completion>> {
         let (tx, rx) = mpsc::channel();
         let now = self.now();
         let resolved = {
             let st = self.shared.state.lock().unwrap();
-            st.entries
-                .iter()
-                .position(|e| e.handle == handle)
-                .map(|i| (i, st.config.partitions[i], st.entries[i].meta.clone()))
+            st.entries.iter().position(|e| e.handle == handle).map(|i| {
+                let p = st.config.partitions[i];
+                // Scheduling hints from the standing prefix tables — O(1)
+                // per submit, bit-exact with the AnalyticModel's
+                // service-hint quantities (prop_prefix_tables_bitexact).
+                // `hint` orders the first station the request visits;
+                // `cpu_hint` rides along for the TPU->CPU forwarding hop.
+                let (hint, cpu_hint) = if p > 0 {
+                    (st.tables[i].tpu_service(p), st.tables[i].cpu_service(p))
+                } else {
+                    (st.tables[i].cpu_service(0), 0.0)
+                };
+                (
+                    i,
+                    p,
+                    st.entries[i].meta.clone(),
+                    st.entries[i].class,
+                    hint,
+                    cpu_hint,
+                )
+            })
         };
-        let Some((index, p, meta)) = resolved else {
+        let Some((index, p, meta, tenant_class, hint, cpu_hint)) = resolved else {
             self.shared.failed.fetch_add(1, Ordering::SeqCst);
             let _ = tx.send(Err(anyhow!("{handle} is not attached")));
             return rx;
         };
+        let class = class_override.unwrap_or(tenant_class);
         // Buffered (not observed inline): the policy lock may be held for
         // a whole hill-climb decide; submitters must not wait on it. An
         // arrival flushed after a racing detach renumbered positions is at
@@ -620,15 +710,22 @@ impl Server {
             self.shared.arrivals.lock().unwrap().push((now, index));
         }
         if p > 0 {
+            let sched_meta = JobMeta {
+                tenant: handle,
+                class,
+                service_hint: hint,
+            };
             let job = TpuJob {
                 handle,
                 meta,
                 p,
+                class,
+                cpu_hint,
                 input,
                 submitted: Instant::now(),
                 done: tx,
             };
-            self.tpu.queue.lock().unwrap().push_back(job);
+            self.tpu.queue.lock().unwrap().push(sched_meta, job);
             self.tpu.cv.notify_one();
         } else {
             dispatch_cpu(
@@ -637,6 +734,8 @@ impl Server {
                 handle,
                 meta,
                 0,
+                class,
+                hint,
                 input,
                 Instant::now(),
                 tx,
@@ -748,9 +847,11 @@ impl Server {
                 .collect()
         };
         per_tenant.extend(self.shared.retired.lock().unwrap().iter().cloned());
+        let per_class = self.shared.class_hists.lock().unwrap().clone();
         let log = self.shared.reconfig.lock().unwrap();
         ServeStats {
             per_tenant,
+            per_class,
             completed: self.shared.completed.load(Ordering::SeqCst),
             failed: self.shared.failed.load(Ordering::SeqCst),
             reconfigs: log.reconfigs,
@@ -774,20 +875,28 @@ fn flush_arrivals(shared: &Shared) {
 }
 
 /// Record a completion against the live entry, or the retired stats if
-/// the tenant detached while the request was in flight.
-fn record(shared: &Shared, handle: TenantHandle, latency: f64) {
-    {
+/// the tenant detached while the request was in flight, plus the
+/// per-SLO-class histogram (taken alone — see the lock-order note).
+fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64) {
+    let mut counted = {
         let mut st = shared.state.lock().unwrap();
         if let Some(e) = st.entries.iter_mut().find(|e| e.handle == handle) {
             e.hist.record(latency);
-            shared.completed.fetch_add(1, Ordering::SeqCst);
-            return;
+            true
+        } else {
+            false
+        }
+    };
+    if !counted {
+        let mut retired = shared.retired.lock().unwrap();
+        if let Some(t) = retired.iter_mut().find(|t| t.handle == handle) {
+            t.latency.record(latency);
+            counted = true;
         }
     }
-    let mut retired = shared.retired.lock().unwrap();
-    if let Some(t) = retired.iter_mut().find(|t| t.handle == handle) {
-        t.latency.record(latency);
+    if counted {
         shared.completed.fetch_add(1, Ordering::SeqCst);
+        shared.class_hists.lock().unwrap().record(class, latency);
     }
 }
 
@@ -798,6 +907,8 @@ fn dispatch_cpu(
     handle: TenantHandle,
     meta: Arc<ModelMeta>,
     p: usize,
+    class: SloClass,
+    service_hint: f64,
     input: Vec<f32>,
     submitted: Instant,
     tx: mpsc::Sender<Result<Completion>>,
@@ -805,6 +916,11 @@ fn dispatch_cpu(
     let shared = shared.clone();
     pools.submit(
         handle,
+        JobMeta {
+            tenant: handle,
+            class,
+            service_hint,
+        },
         CpuJob {
             meta,
             p,
@@ -813,7 +929,7 @@ fn dispatch_cpu(
                 let completion = match result {
                     Ok(output) => {
                         let latency = submitted.elapsed().as_secs_f64();
-                        record(&shared, handle, latency);
+                        record(&shared, handle, class, latency);
                         Ok(Completion {
                             tenant: handle,
                             latency_s: latency,
@@ -847,7 +963,7 @@ fn tpu_worker_loop(
                 if tpu.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(j) = q.pop_front() {
+                if let Some((_, j)) = q.pop() {
                     break j;
                 }
                 q = tpu.cv.wait(q).unwrap();
@@ -904,7 +1020,7 @@ fn tpu_worker_loop(
             Ok(boundary) => {
                 if job.p >= meta.partition_points {
                     let latency = job.submitted.elapsed().as_secs_f64();
-                    record(&shared, job.handle, latency);
+                    record(&shared, job.handle, job.class, latency);
                     let _ = job.done.send(Ok(Completion {
                         tenant: job.handle,
                         latency_s: latency,
@@ -912,13 +1028,16 @@ fn tpu_worker_loop(
                     }));
                 } else {
                     // Forward to the tenant's CPU pool (fails cleanly if
-                    // the tenant detached while we executed the prefix).
+                    // the tenant detached while we executed the prefix);
+                    // the suffix hint was precomputed at submit time.
                     dispatch_cpu(
                         &shared,
                         &pools,
                         job.handle,
                         job.meta,
                         job.p,
+                        job.class,
+                        job.cpu_hint,
                         boundary,
                         job.submitted,
                         job.done,

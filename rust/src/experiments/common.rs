@@ -59,7 +59,7 @@ impl Ctx {
                 horizon: self.horizon,
                 warmup: self.horizon * 0.05,
                 seed: self.seed,
-                timeline_window: None,
+                ..SimOptions::default()
             },
         )
     }

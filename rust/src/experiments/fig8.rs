@@ -33,9 +33,7 @@ pub const MODELS: [&str; 2] = ["mnasnet", "inceptionv4"];
 pub fn schedules() -> Vec<RateSchedule> {
     vec![
         RateSchedule::constant(5.0),
-        RateSchedule {
-            steps: vec![(0.0, 1.0), (300.0, 3.0), (600.0, 5.0)],
-        },
+        RateSchedule::stepped(vec![(0.0, 1.0), (300.0, 3.0), (600.0, 5.0)]),
     ]
 }
 
@@ -47,6 +45,7 @@ pub fn run(ctx: &Ctx) -> Result<Fig8, String> {
         warmup: 10.0,
         seed,
         timeline_window: Some(15.0),
+        ..SimOptions::default()
     };
 
     let mut outcomes = Vec::new();
@@ -179,6 +178,7 @@ pub fn run_churn(ctx: &Ctx) -> Result<Churn, String> {
             warmup: 10.0,
             seed: ctx.seed,
             timeline_window: Some(15.0),
+            ..SimOptions::default()
         },
     );
     let guest = res

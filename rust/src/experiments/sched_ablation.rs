@@ -1,0 +1,262 @@
+//! Scheduler ablation — FIFO vs strict priority vs weighted-fair (DRR)
+//! vs shortest-predicted-service-first on the Table-II multi-tenant mix.
+//!
+//! The workload is the paper's mixed-size tenancy (small interactive
+//! models co-located with large batch models), rates solved for equal
+//! per-model TPU load at a stressed utilization, the configuration
+//! planned once by the SwapLess allocator, and the *same* Poisson
+//! arrival stream replayed under each discipline of the shared `sched`
+//! core. Reported per discipline: overall mean/p99 and per-SLO-class
+//! mean/p99 — the tail-latency trade each discipline buys is the
+//! experiment's output.
+
+use crate::alloc;
+use crate::analytic::{Config, Tenant};
+use crate::sched::{DisciplineKind, SloClass};
+use crate::sim::{SimOptions, Simulator};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{
+    equal_tpu_load_shares, generate_arrivals_classed, rates_for_utilization, RateSchedule,
+};
+
+use super::common::{print_table, Ctx};
+
+/// The Table-II mix: two small latency-class models against two large
+/// throughput-class models — the regime where discipline choice moves
+/// the per-class tails the most.
+pub const MODELS: [&str; 4] = ["mobilenetv2", "squeezenet", "mnasnet", "inceptionv4"];
+pub const CLASSES: [SloClass; 4] = [
+    SloClass::Interactive,
+    SloClass::Standard,
+    SloClass::Standard,
+    SloClass::Batch,
+];
+pub const RHO_TARGET: f64 = 0.7;
+
+#[derive(Debug, Clone)]
+pub struct ClassRow {
+    pub class: &'static str,
+    pub completed: u64,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct DisciplineRow {
+    pub discipline: &'static str,
+    pub completed: u64,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+    pub per_class: Vec<ClassRow>,
+}
+
+pub struct SchedAblation {
+    pub models: Vec<String>,
+    pub classes: Vec<&'static str>,
+    pub config: Config,
+    pub rho_target: f64,
+    pub rows: Vec<DisciplineRow>,
+}
+
+/// Build the mix (models + classes + equal-TPU-load rates at
+/// [`RHO_TARGET`]) and the SwapLess plan it runs under.
+fn workload(ctx: &Ctx) -> Result<(Vec<Tenant>, Config), String> {
+    let names: Vec<&str> = MODELS.to_vec();
+    let zero = vec![0.0; names.len()];
+    let tenants0 = ctx.tenants(&names, &zero)?;
+    let full = Config::all_tpu(&tenants0);
+    let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+    let rates = rates_for_utilization(&ctx.am, &tenants0, &full, &shares, RHO_TARGET);
+    let tenants = ctx.tenants(&names, &rates)?;
+    let plan = alloc::hill_climb(&ctx.am, &tenants, ctx.k_max);
+    Ok((tenants, plan.config))
+}
+
+pub fn run(ctx: &Ctx) -> Result<SchedAblation, String> {
+    let (tenants, config) = workload(ctx)?;
+    let horizon = ctx.horizon;
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+
+    let mut rows = Vec::new();
+    for kind in DisciplineKind::ALL {
+        // Identical arrival stream for every discipline (same seed).
+        let mut rng = Rng::new(ctx.seed);
+        let arrivals = generate_arrivals_classed(&schedules, &CLASSES, horizon, &mut rng);
+        let mut sim = Simulator::new(
+            &ctx.cost,
+            &tenants,
+            config.clone(),
+            SimOptions {
+                horizon,
+                warmup: horizon * 0.05,
+                seed: ctx.seed,
+                discipline: kind,
+                ..SimOptions::default()
+            },
+        );
+        let res = sim.run(&arrivals, None);
+        let completed: u64 = res.per_model.iter().map(|m| m.completed).sum();
+        let per_class: Vec<ClassRow> = res
+            .per_class
+            .non_empty()
+            .into_iter()
+            .map(|(class, hist)| ClassRow {
+                class: class.name(),
+                completed: hist.count(),
+                mean_ms: hist.mean() * 1e3,
+                p99_ms: hist.percentile(99.0) * 1e3,
+            })
+            .collect();
+        // Overall p99 from the merged per-class histograms (identical
+        // geometry by construction).
+        let mut all = crate::metrics::LatencyHistogram::default();
+        for (_, hist) in res.per_class.non_empty() {
+            all.merge(hist);
+        }
+        rows.push(DisciplineRow {
+            discipline: kind.name(),
+            completed,
+            mean_ms: res.mean_latency * 1e3,
+            p99_ms: all.percentile(99.0) * 1e3,
+            per_class,
+        });
+    }
+    Ok(SchedAblation {
+        models: MODELS.iter().map(|m| m.to_string()).collect(),
+        classes: CLASSES.iter().map(|c| c.name()).collect(),
+        config,
+        rho_target: RHO_TARGET,
+        rows,
+    })
+}
+
+impl SchedAblation {
+    pub fn print(&self) {
+        println!(
+            "\nscheduler ablation: {} (classes {}) @ rho {:.2}, P={:?} K={:?}",
+            self.models.join("+"),
+            self.classes.join("/"),
+            self.rho_target,
+            self.config.partitions,
+            self.config.cores
+        );
+        let mut rows = Vec::new();
+        for d in &self.rows {
+            rows.push(vec![
+                d.discipline.to_string(),
+                "all".to_string(),
+                d.completed.to_string(),
+                format!("{:.1}", d.mean_ms),
+                format!("{:.1}", d.p99_ms),
+            ]);
+            for c in &d.per_class {
+                rows.push(vec![
+                    String::new(),
+                    c.class.to_string(),
+                    c.completed.to_string(),
+                    format!("{:.1}", c.mean_ms),
+                    format!("{:.1}", c.p99_ms),
+                ]);
+            }
+        }
+        print_table(
+            "Scheduler ablation (per-SLO-class latency)",
+            &["discipline", "class", "n", "mean (ms)", "p99 (ms)"],
+            &rows,
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "models",
+                Json::Arr(self.models.iter().map(|m| Json::Str(m.clone())).collect()),
+            ),
+            (
+                "classes",
+                Json::Arr(
+                    self.classes
+                        .iter()
+                        .map(|c| Json::Str(c.to_string()))
+                        .collect(),
+                ),
+            ),
+            ("rho_target", Json::Num(self.rho_target)),
+            (
+                "disciplines",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|d| {
+                            Json::from_pairs(vec![
+                                ("discipline", Json::Str(d.discipline.to_string())),
+                                ("completed", Json::Num(d.completed as f64)),
+                                ("mean_ms", Json::Num(d.mean_ms)),
+                                ("p99_ms", Json::Num(d.p99_ms)),
+                                (
+                                    "per_class",
+                                    Json::Arr(
+                                        d.per_class
+                                            .iter()
+                                            .map(|c| {
+                                                Json::from_pairs(vec![
+                                                    ("class", Json::Str(c.class.to_string())),
+                                                    ("completed", Json::Num(c.completed as f64)),
+                                                    ("mean_ms", Json::Num(c.mean_ms)),
+                                                    ("p99_ms", Json::Num(c.p99_ms)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::Manifest;
+
+    #[test]
+    fn ablation_runs_all_disciplines_with_per_class_output() {
+        let mut ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        ctx.horizon = 150.0;
+        let r = run(&ctx).unwrap();
+        assert_eq!(r.rows.len(), DisciplineKind::ALL.len());
+        for row in &r.rows {
+            assert!(row.completed > 500, "{}: {}", row.discipline, row.completed);
+            assert!(row.mean_ms.is_finite() && row.mean_ms > 0.0, "{}", row.discipline);
+            assert!(row.p99_ms >= row.mean_ms * 0.5, "{}", row.discipline);
+            // All three classes are present in the mix and must be
+            // accounted separately.
+            assert_eq!(row.per_class.len(), 3, "{}", row.discipline);
+            for c in &row.per_class {
+                assert!(c.completed > 0, "{} {}", row.discipline, c.class);
+                assert!(c.mean_ms.is_finite() && c.p99_ms.is_finite());
+            }
+        }
+        // The JSON blob carries the per-class mean/p99 rows.
+        let j = r.to_json();
+        let disc = j.arr_of("disciplines").unwrap();
+        assert_eq!(disc.len(), 4);
+        for d in disc {
+            let pc = d.arr_of("per_class").unwrap();
+            assert_eq!(pc.len(), 3);
+            for c in pc {
+                assert!(c.get("mean_ms").is_some());
+                assert!(c.get("p99_ms").is_some());
+            }
+        }
+    }
+}

@@ -56,7 +56,7 @@ fn observe_under(
                 horizon: ctx.horizon,
                 warmup: ctx.horizon * 0.05,
                 seed: ctx.seed,
-                timeline_window: None,
+                ..Default::default()
             },
         )
         .mean_latency

@@ -24,6 +24,7 @@ pub mod metrics;
 pub mod model;
 pub mod profiler;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod tpu;
 pub mod util;

@@ -24,9 +24,9 @@ use swapless::experiments::common::save_result;
 use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 16] = [
+const VALUE_OPTS: [&str; 18] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
-    "trace", "policy", "duration", "attach-at", "detach-at", "backend",
+    "trace", "policy", "duration", "attach-at", "detach-at", "backend", "discipline", "classes",
 ];
 
 fn main() {
@@ -47,18 +47,23 @@ fn usage() -> String {
        figure <1|2|3|5|6|7|8>      regenerate a paper figure (saves results/figN.json)\n\
        figures                     regenerate everything (results/*.json)\n\
        ablation | sensitivity      extension experiments\n\
+       schedulers                  scheduler ablation: fifo/priority/wfq/spsf with\n\
+                                   per-SLO-class mean/p99 (results/schedulers.json)\n\
        churn                       Fig-8-style dynamic run with tenant attach/detach\n\
        profile [--models a,b] [--iters N] [--out FILE]\n\
                                    offline profiling phase -> profiles.json\n\
        plan --models a,b --rates x,y\n\
                                    run the allocator, print the (P, K) config\n\
-       serve [--models a,b] [--rates x,y] [--duration S] [--time-scale S]\n\
+       serve [--models a,b] [--rates x,y] [--classes c1,c2] [--duration S]\n\
+             [--time-scale S] [--discipline fifo|priority|wfq|spsf]\n\
              [--attach-at name@t[:rate],...] [--detach-at name@t,...]\n\
              [--backend auto|pjrt|emulated]\n\
-                                   live serving with a dynamic tenant set\n\
+                                   live serving with a dynamic tenant set; classes\n\
+                                   (interactive|standard|batch) align with --models\n\
        trace --models a,b --rates x,y [--horizon S] [--seed N] [--out FILE]\n\
                                    record a Poisson arrival trace (JSON)\n\
        replay --trace FILE [--policy swapless|compiler|threshold]\n\
+              [--discipline fifo|priority|wfq|spsf]\n\
                                    plan from the trace's empirical rates, then\n\
                                    simulate the exact recorded arrivals\n\
      common options: --artifacts DIR (default artifacts; synthetic manifest if\n\
@@ -100,9 +105,10 @@ fn run(raw: &[String]) -> Result<(), String> {
                 run_figure(&ctx, n)?;
             }
             run_named(&ctx, "ablation")?;
-            run_named(&ctx, "sensitivity")
+            run_named(&ctx, "sensitivity")?;
+            run_named(&ctx, "schedulers")
         }
-        "ablation" | "sensitivity" | "churn" => run_named(&ctx, cmd),
+        "ablation" | "sensitivity" | "churn" | "schedulers" => run_named(&ctx, cmd),
         "profile" => {
             let models = if args.opt("models").is_some() {
                 args.opt_list("models")
@@ -245,12 +251,16 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
         }
         other => return Err(format!("unknown --policy {other}")),
     };
+    let discipline = swapless::sched::DisciplineKind::parse(&args.opt_or("discipline", "fifo"))?;
     println!(
         "replaying {} arrivals ({horizon:.0}s, empirical rates {:?})",
         arrivals.len(),
         rates.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
-    println!("[{policy}] P={:?} K={:?}", cfg.partitions, cfg.cores);
+    println!(
+        "[{policy}/{discipline}] P={:?} K={:?}",
+        cfg.partitions, cfg.cores
+    );
     let mut sim = Simulator::new(
         &ctx.cost,
         &tenants,
@@ -259,7 +269,8 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
             horizon,
             warmup: horizon * 0.05,
             seed: ctx.seed,
-            timeline_window: None,
+            discipline,
+            ..SimOptions::default()
         },
     );
     let res = sim.run(&arrivals, None);
@@ -280,6 +291,15 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
             );
         }
     }
+    for (class, hist) in res.per_class.non_empty() {
+        println!(
+            "  class {:<11}: n={} mean {:.1} ms p99 {:.1} ms",
+            class.name(),
+            hist.count(),
+            hist.mean() * 1e3,
+            hist.percentile(99.0) * 1e3
+        );
+    }
     Ok(())
 }
 
@@ -299,6 +319,11 @@ fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
             let r = exp::fig8::run_churn(ctx)?;
             r.print();
             save_result("churn", &r.to_json())
+        }
+        "schedulers" => {
+            let r = exp::sched_ablation::run(ctx)?;
+            r.print();
+            save_result("schedulers", &r.to_json())
         }
         _ => Err(format!("unknown experiment {which}")),
     }
@@ -394,6 +419,7 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
     use swapless::coordinator::{AttachOptions, ServerBuilder};
     use swapless::model::ModelMeta;
     use swapless::runtime::service::ExecBackend;
+    use swapless::sched::{DisciplineKind, SloClass};
     use swapless::tpu::CostModel;
     use swapless::util::rng::Rng;
     use std::sync::Arc;
@@ -415,6 +441,18 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
     if rates.len() != names.len() {
         return Err("--rates must match --models".into());
     }
+    let classes: Vec<SloClass> = if args.opt("classes").is_some() {
+        args.opt_list("classes")
+            .iter()
+            .map(|c| SloClass::parse(c))
+            .collect::<Result<_, _>>()?
+    } else {
+        vec![SloClass::Standard; names.len()]
+    };
+    if classes.len() != names.len() {
+        return Err("--classes must match --models".into());
+    }
+    let discipline = DisciplineKind::parse(&args.opt_or("discipline", "fifo"))?;
     let duration = args.opt_f64("duration", 8.0)?;
     let time_scale = args.opt_f64("time-scale", 0.0)?;
     let backend = match args.opt_or("backend", "auto").as_str() {
@@ -435,10 +473,15 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         .k_max(ctx.k_max)
         .time_scale(time_scale)
         .backend(backend)
+        .discipline(discipline)
         .adaptive(true)
         .build()
         .map_err(|e| e.to_string())?;
-    println!("backend: {:?}", server.backend());
+    println!(
+        "backend: {:?} | discipline: {}",
+        server.backend(),
+        server.discipline()
+    );
 
     // Live tenants: (handle, name, meta, rate, next arrival time).
     let mut live: Vec<(TenantHandle, String, Arc<ModelMeta>, f64, f64)> = Vec::new();
@@ -446,14 +489,15 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
     let attach = |live: &mut Vec<(TenantHandle, String, Arc<ModelMeta>, f64, f64)>,
                       name: &str,
                       rate: f64,
+                      class: SloClass,
                       at: f64,
                       rng: &mut Rng| {
-        match server.attach(name, AttachOptions { rate_hint: rate }) {
+        match server.attach(name, AttachOptions { rate_hint: rate, class }) {
             Ok(h) => {
                 let meta = server.model_meta(h).expect("just attached");
                 let cfg = server.current_config();
                 println!(
-                    "t={at:.1}s attach {name} @ {rate} rps -> {h}  plan P={:?} K={:?}",
+                    "t={at:.1}s attach {name} @ {rate} rps ({class}) -> {h}  plan P={:?} K={:?}",
                     cfg.partitions, cfg.cores
                 );
                 live.push((h, name.to_string(), meta, rate, at + rng.exponential(rate)));
@@ -462,8 +506,8 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         }
     };
 
-    for (n, r) in names.iter().zip(&rates) {
-        attach(&mut live, n, *r, 0.0, &mut rng);
+    for ((n, r), c) in names.iter().zip(&rates).zip(&classes) {
+        attach(&mut live, n, *r, *c, 0.0, &mut rng);
     }
 
     let t0 = Instant::now();
@@ -488,7 +532,14 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         if next_event <= next_arrival {
             let ev = schedule.next().unwrap();
             if ev.attach {
-                attach(&mut live, &ev.name, ev.rate, ev.at, &mut rng);
+                // A scheduled attach keeps the class declared for that
+                // model via --classes (Standard for models not listed).
+                let class = names
+                    .iter()
+                    .position(|n| *n == ev.name)
+                    .map(|i| classes[i])
+                    .unwrap_or_default();
+                attach(&mut live, &ev.name, ev.rate, class, ev.at, &mut rng);
             } else if let Some(pos) = live.iter().position(|(_, n, _, _, _)| *n == ev.name) {
                 let (h, name, _, _, _) = live.remove(pos);
                 match server.detach(h) {
@@ -549,6 +600,15 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
                 t.latency.percentile(95.0) * 1e3
             );
         }
+    }
+    for (class, hist) in stats.per_class.non_empty() {
+        println!(
+            "  class {:<11}: n={} mean {:.1} ms p99 {:.1} ms",
+            class.name(),
+            hist.count(),
+            hist.mean() * 1e3,
+            hist.percentile(99.0) * 1e3
+        );
     }
     Ok(())
 }

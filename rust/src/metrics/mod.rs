@@ -1,5 +1,8 @@
-//! Latency statistics: streaming moments, percentile histograms, time
-//! series, and the MAPE metric the paper's validation sections report.
+//! Latency statistics: streaming moments, percentile histograms (overall
+//! and per SLO class), time series, and the MAPE metric the paper's
+//! validation sections report.
+
+use crate::sched::SloClass;
 
 /// Streaming mean/variance/min/max (Welford).
 #[derive(Debug, Clone, Default)]
@@ -173,13 +176,80 @@ impl LatencyHistogram {
         self.stats.max()
     }
 
+    /// Merge another histogram recorded with the *same geometry*. Bucket
+    /// counts only line up when `min_v` and `growth` match — merging
+    /// mismatched geometries would silently corrupt every percentile, so
+    /// it is rejected here (bucket count alone is not sufficient).
     pub fn merge(&mut self, other: &LatencyHistogram) {
-        assert_eq!(self.counts.len(), other.counts.len());
+        assert_eq!(
+            self.counts.len(),
+            other.counts.len(),
+            "histogram bucket-count mismatch"
+        );
+        assert!(
+            self.min_v == other.min_v && self.growth == other.growth,
+            "histogram geometry mismatch: (min_v {}, growth {}) vs (min_v {}, growth {})",
+            self.min_v,
+            self.growth,
+            other.min_v,
+            other.growth
+        );
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
         self.total += other.total;
         self.stats.merge(&other.stats);
+    }
+}
+
+/// One latency histogram per [`SloClass`] — the per-class accounting the
+/// scheduler layer reports through `ServeStats`/`SimResult`.
+#[derive(Debug, Clone)]
+pub struct PerClassLatency {
+    hists: Vec<LatencyHistogram>,
+}
+
+impl Default for PerClassLatency {
+    fn default() -> Self {
+        PerClassLatency {
+            hists: (0..SloClass::COUNT)
+                .map(|_| LatencyHistogram::default())
+                .collect(),
+        }
+    }
+}
+
+impl PerClassLatency {
+    pub fn new() -> PerClassLatency {
+        PerClassLatency::default()
+    }
+
+    pub fn record(&mut self, class: SloClass, v: f64) {
+        self.hists[class.index()].record(v);
+    }
+
+    pub fn get(&self, class: SloClass) -> &LatencyHistogram {
+        &self.hists[class.index()]
+    }
+
+    pub fn total_count(&self) -> u64 {
+        self.hists.iter().map(|h| h.count()).sum()
+    }
+
+    /// All classes in priority order, including empty ones.
+    pub fn by_class(&self) -> impl Iterator<Item = (SloClass, &LatencyHistogram)> {
+        SloClass::ALL.into_iter().zip(self.hists.iter())
+    }
+
+    /// `(class, histogram)` rows for classes that recorded >= 1 sample.
+    pub fn non_empty(&self) -> Vec<(SloClass, &LatencyHistogram)> {
+        self.by_class().filter(|(_, h)| h.count() > 0).collect()
+    }
+
+    pub fn merge(&mut self, other: &PerClassLatency) {
+        for (a, b) in self.hists.iter_mut().zip(&other.hists) {
+            a.merge(b);
+        }
     }
 }
 
@@ -308,6 +378,46 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 200);
         assert!(a.mean() > mean_a);
+    }
+
+    #[test]
+    #[should_panic(expected = "geometry mismatch")]
+    fn histogram_merge_rejects_mismatched_geometry() {
+        // Same bucket count, different (min_v, growth): merging would
+        // silently corrupt percentiles, so it must panic.
+        let mut a = LatencyHistogram::new(1e-6, 1.02, 256);
+        let b = LatencyHistogram::new(1e-3, 1.02, 256);
+        a.merge(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "bucket-count mismatch")]
+    fn histogram_merge_rejects_mismatched_buckets() {
+        let mut a = LatencyHistogram::new(1e-6, 1.02, 256);
+        let b = LatencyHistogram::new(1e-6, 1.02, 128);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn per_class_latency_records_and_merges() {
+        let mut pc = PerClassLatency::new();
+        pc.record(SloClass::Interactive, 0.010);
+        pc.record(SloClass::Interactive, 0.020);
+        pc.record(SloClass::Batch, 0.500);
+        assert_eq!(pc.get(SloClass::Interactive).count(), 2);
+        assert_eq!(pc.get(SloClass::Standard).count(), 0);
+        assert_eq!(pc.get(SloClass::Batch).count(), 1);
+        assert_eq!(pc.total_count(), 3);
+        let rows = pc.non_empty();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, SloClass::Interactive);
+        assert_eq!(rows[1].0, SloClass::Batch);
+
+        let mut other = PerClassLatency::new();
+        other.record(SloClass::Standard, 0.050);
+        pc.merge(&other);
+        assert_eq!(pc.total_count(), 4);
+        assert_eq!(pc.get(SloClass::Standard).count(), 1);
     }
 
     #[test]

@@ -1,0 +1,53 @@
+//! First-come-first-served — the paper's baseline discipline.
+
+use std::collections::VecDeque;
+
+use crate::analytic::TenantHandle;
+
+use super::{DisciplineKind, JobMeta, QueueDiscipline};
+
+#[derive(Default)]
+pub struct Fifo {
+    q: VecDeque<(u64, JobMeta)>,
+}
+
+impl Fifo {
+    pub fn new() -> Fifo {
+        Fifo::default()
+    }
+}
+
+impl QueueDiscipline for Fifo {
+    fn push(&mut self, id: u64, meta: JobMeta) {
+        self.q.push_back((id, meta));
+    }
+
+    fn pop(&mut self) -> Option<u64> {
+        self.q.pop_front().map(|(id, _)| id)
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn peek_next_service_hint(&self) -> Option<f64> {
+        self.q.front().map(|(_, m)| m.service_hint)
+    }
+
+    fn drain_tenant(&mut self, tenant: TenantHandle) -> Vec<u64> {
+        let mut gone = Vec::new();
+        self.q.retain(|(id, m)| {
+            if m.tenant == tenant {
+                gone.push(*id);
+                false
+            } else {
+                true
+            }
+        });
+        gone
+    }
+
+    fn kind(&self) -> DisciplineKind {
+        DisciplineKind::Fifo
+    }
+}

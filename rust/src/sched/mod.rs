@@ -1,0 +1,486 @@
+//! The pluggable scheduling core shared by the DES and the live server.
+//!
+//! Both consumers used to hard-code FIFO twice — `sim::Simulator` kept raw
+//! `VecDeque`s for its TPU and per-model CPU stations, and the live
+//! coordinator kept its own in `coordinator::pools`/`server` — so the two
+//! paths could silently drift and no alternative discipline could be
+//! studied. This module extracts the queueing decision into one
+//! [`QueueDiscipline`] trait with four implementations:
+//!
+//! * [`Fifo`] — first-come-first-served (the paper's baseline);
+//! * [`StrictPriority`] — strict priority by [`SloClass`], FIFO within a
+//!   class (no aging: batch work can starve under sustained load);
+//! * [`WeightedFair`] — deficit-round-robin across tenants, quanta scaled
+//!   by the head job's SLO-class weight (starvation-free);
+//! * [`ShortestPredicted`] — shortest-predicted-service-first, fed by the
+//!   analytic model's per-request service-time estimates.
+//!
+//! A discipline schedules opaque job ids against [`JobMeta`]; the
+//! [`SchedQueue`] wrapper pairs a discipline with a payload store so both
+//! the simulator (queueing `sim::Request`) and the live server (queueing
+//! TPU/CPU jobs) drive the *same* trait objects — the sim-vs-live parity
+//! test in `tests/sched_parity.rs` pins this.
+
+use std::collections::HashMap;
+
+use crate::analytic::TenantHandle;
+
+mod fifo;
+mod priority;
+mod spsf;
+mod wfq;
+
+pub use fifo::Fifo;
+pub use priority::StrictPriority;
+pub use spsf::ShortestPredicted;
+pub use wfq::WeightedFair;
+
+/// Service-level-objective class of a request (or a tenant's default).
+/// Lower [`priority`](SloClass::priority) numbers are more urgent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum SloClass {
+    /// Latency-critical, user-facing traffic.
+    Interactive,
+    /// Ordinary request/response traffic (the default).
+    #[default]
+    Standard,
+    /// Throughput-oriented background work.
+    Batch,
+}
+
+impl SloClass {
+    pub const COUNT: usize = 3;
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    /// Dense index (0..COUNT), usable as a histogram slot.
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<SloClass> {
+        SloClass::ALL.get(i).copied()
+    }
+
+    /// Strict-priority rank: lower is served first.
+    pub fn priority(self) -> usize {
+        self.index()
+    }
+
+    /// Weighted-fair share weight (Interactive gets 4x a Batch tenant's
+    /// service per round).
+    pub fn weight(self) -> f64 {
+        match self {
+            SloClass::Interactive => 4.0,
+            SloClass::Standard => 2.0,
+            SloClass::Batch => 1.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SloClass, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" => Ok(SloClass::Interactive),
+            "standard" => Ok(SloClass::Standard),
+            "batch" => Ok(SloClass::Batch),
+            other => Err(format!(
+                "unknown SLO class {other:?} (have interactive, standard, batch)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for SloClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a discipline knows about a queued job.
+#[derive(Debug, Clone, Copy)]
+pub struct JobMeta {
+    /// Stable identity of the submitting tenant (the WFQ flow key).
+    pub tenant: TenantHandle,
+    pub class: SloClass,
+    /// Predicted service time in seconds (from the analytic model's cost
+    /// tables); SPSF orders on it, WFQ charges it against tenant deficits.
+    /// Zero/non-finite hints degrade gracefully to per-job costs.
+    pub service_hint: f64,
+}
+
+/// A queue scheduling discipline over opaque job ids.
+///
+/// Push ids are allocated monotonically by the caller ([`SchedQueue`]
+/// does this), so a discipline may use the id itself as the FIFO
+/// tie-break: equal-key jobs must pop in ascending-id order, which keeps
+/// every discipline fully deterministic.
+pub trait QueueDiscipline: Send {
+    fn push(&mut self, id: u64, meta: JobMeta);
+    fn pop(&mut self) -> Option<u64>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Best-effort service-time hint of the job `pop` would consider next
+    /// (`None` when empty). Consumers may use it to size batching windows
+    /// or device budgets; it is advisory, not a contract.
+    fn peek_next_service_hint(&self) -> Option<f64>;
+    /// Remove every queued job of `tenant` (detach), returning their ids.
+    fn drain_tenant(&mut self, tenant: TenantHandle) -> Vec<u64>;
+    fn kind(&self) -> DisciplineKind;
+}
+
+/// The discipline selector exposed on the CLI (`--discipline`) and the
+/// builder APIs; [`build`](DisciplineKind::build) is the single factory
+/// both the DES and the live server construct their queues through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DisciplineKind {
+    #[default]
+    Fifo,
+    Priority,
+    WeightedFair,
+    Spsf,
+}
+
+impl DisciplineKind {
+    pub const ALL: [DisciplineKind; 4] = [
+        DisciplineKind::Fifo,
+        DisciplineKind::Priority,
+        DisciplineKind::WeightedFair,
+        DisciplineKind::Spsf,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DisciplineKind::Fifo => "fifo",
+            DisciplineKind::Priority => "priority",
+            DisciplineKind::WeightedFair => "wfq",
+            DisciplineKind::Spsf => "spsf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DisciplineKind, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fifo" | "fcfs" => Ok(DisciplineKind::Fifo),
+            "priority" | "prio" => Ok(DisciplineKind::Priority),
+            "wfq" | "drr" | "weighted-fair" => Ok(DisciplineKind::WeightedFair),
+            "spsf" | "sjf" => Ok(DisciplineKind::Spsf),
+            other => Err(format!(
+                "unknown discipline {other:?} (have fifo, priority, wfq, spsf)"
+            )),
+        }
+    }
+
+    pub fn build(self) -> Box<dyn QueueDiscipline + Send> {
+        match self {
+            DisciplineKind::Fifo => Box::new(Fifo::new()),
+            DisciplineKind::Priority => Box::new(StrictPriority::new()),
+            DisciplineKind::WeightedFair => Box::new(WeightedFair::new()),
+            DisciplineKind::Spsf => Box::new(ShortestPredicted::new()),
+        }
+    }
+}
+
+impl std::fmt::Display for DisciplineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A discipline paired with its payload store: the convenience wrapper
+/// both consumers embed. Ids stay internal; callers see `(JobMeta, T)`.
+pub struct SchedQueue<T> {
+    disc: Box<dyn QueueDiscipline + Send>,
+    jobs: HashMap<u64, (JobMeta, T)>,
+    next_id: u64,
+}
+
+impl<T> SchedQueue<T> {
+    pub fn new(disc: Box<dyn QueueDiscipline + Send>) -> SchedQueue<T> {
+        SchedQueue {
+            disc,
+            jobs: HashMap::new(),
+            next_id: 0,
+        }
+    }
+
+    pub fn with_kind(kind: DisciplineKind) -> SchedQueue<T> {
+        SchedQueue::new(kind.build())
+    }
+
+    pub fn kind(&self) -> DisciplineKind {
+        self.disc.kind()
+    }
+
+    pub fn push(&mut self, meta: JobMeta, job: T) {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.disc.push(id, meta);
+        self.jobs.insert(id, (meta, job));
+    }
+
+    pub fn pop(&mut self) -> Option<(JobMeta, T)> {
+        let id = self.disc.pop()?;
+        self.jobs.remove(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.disc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.disc.is_empty()
+    }
+
+    pub fn peek_next_service_hint(&self) -> Option<f64> {
+        self.disc.peek_next_service_hint()
+    }
+
+    /// Remove every queued job of `tenant` (detach), in id order.
+    pub fn drain_tenant(&mut self, tenant: TenantHandle) -> Vec<(JobMeta, T)> {
+        let mut ids = self.disc.drain_tenant(tenant);
+        ids.sort_unstable();
+        ids.into_iter()
+            .filter_map(|id| self.jobs.remove(&id))
+            .collect()
+    }
+
+    /// Pop everything in discipline order (shutdown paths).
+    pub fn drain_all(&mut self) -> Vec<(JobMeta, T)> {
+        let mut out = Vec::with_capacity(self.len());
+        while let Some(item) = self.pop() {
+            out.push(item);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(tenant: u64, class: SloClass, hint: f64) -> JobMeta {
+        JobMeta {
+            tenant: TenantHandle(tenant),
+            class,
+            service_hint: hint,
+        }
+    }
+
+    /// Push `jobs` into a fresh discipline of `kind` and pop everything,
+    /// returning the payload order.
+    fn pop_order(kind: DisciplineKind, jobs: &[(JobMeta, u32)]) -> Vec<u32> {
+        let mut q: SchedQueue<u32> = SchedQueue::with_kind(kind);
+        for (m, v) in jobs {
+            q.push(*m, *v);
+        }
+        let mut out = Vec::new();
+        while let Some((_, v)) = q.pop() {
+            out.push(v);
+        }
+        out
+    }
+
+    #[test]
+    fn fifo_preserves_push_order() {
+        let jobs: Vec<(JobMeta, u32)> = (0..8)
+            .map(|i| (meta(i % 3, SloClass::Standard, 0.01 * i as f64), i as u32))
+            .collect();
+        assert_eq!(
+            pop_order(DisciplineKind::Fifo, &jobs),
+            (0..8).collect::<Vec<u32>>()
+        );
+    }
+
+    #[test]
+    fn priority_orders_by_class_then_fifo() {
+        let jobs = vec![
+            (meta(0, SloClass::Batch, 0.01), 0),
+            (meta(1, SloClass::Standard, 0.01), 1),
+            (meta(2, SloClass::Interactive, 0.01), 2),
+            (meta(0, SloClass::Interactive, 0.01), 3),
+            (meta(1, SloClass::Batch, 0.01), 4),
+            (meta(2, SloClass::Standard, 0.01), 5),
+        ];
+        assert_eq!(
+            pop_order(DisciplineKind::Priority, &jobs),
+            vec![2, 3, 1, 5, 0, 4]
+        );
+    }
+
+    #[test]
+    fn spsf_orders_by_hint_with_fifo_ties() {
+        let jobs = vec![
+            (meta(0, SloClass::Standard, 0.030), 0),
+            (meta(1, SloClass::Standard, 0.010), 1),
+            (meta(2, SloClass::Standard, 0.020), 2),
+            (meta(0, SloClass::Standard, 0.010), 3), // tie with job 1
+            (meta(1, SloClass::Standard, 0.005), 4),
+        ];
+        assert_eq!(
+            pop_order(DisciplineKind::Spsf, &jobs),
+            vec![4, 1, 3, 2, 0]
+        );
+    }
+
+    #[test]
+    fn spsf_nan_hints_schedule_last_deterministically() {
+        let jobs = vec![
+            (meta(0, SloClass::Standard, f64::NAN), 0),
+            (meta(1, SloClass::Standard, 0.020), 1),
+            (meta(2, SloClass::Standard, f64::NAN), 2),
+            (meta(0, SloClass::Standard, 0.010), 3),
+        ];
+        // Unknown hints sort after every estimate, FIFO among themselves.
+        assert_eq!(pop_order(DisciplineKind::Spsf, &jobs), vec![3, 1, 0, 2]);
+    }
+
+    #[test]
+    fn wfq_equal_weights_alternate() {
+        // Two Batch tenants with uniform costs: DRR serves one job per
+        // flow per round — strict alternation while both are backlogged.
+        let mut jobs = Vec::new();
+        for i in 0..6u32 {
+            jobs.push((meta(0, SloClass::Batch, 0.01), i));
+        }
+        for i in 0..6u32 {
+            jobs.push((meta(1, SloClass::Batch, 0.01), 10 + i));
+        }
+        let order = pop_order(DisciplineKind::WeightedFair, &jobs);
+        assert_eq!(order.len(), 12);
+        // Every window of 2 consecutive pops serves both tenants.
+        for w in order.chunks(2) {
+            assert_eq!(
+                w.iter().filter(|v| **v < 10).count(),
+                1,
+                "not alternating: {order:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn wfq_starvation_bound() {
+        // 100 jobs for tenant 0 vs 10 for tenant 1, equal weights and
+        // costs: tenant 1's k-th job must pop within the first 2k + 2
+        // pops (one job per flow per round — no starvation).
+        let mut jobs = Vec::new();
+        for i in 0..100u32 {
+            jobs.push((meta(0, SloClass::Batch, 0.01), i));
+        }
+        for i in 0..10u32 {
+            jobs.push((meta(1, SloClass::Batch, 0.01), 1000 + i));
+        }
+        let order = pop_order(DisciplineKind::WeightedFair, &jobs);
+        for k in 0..10u32 {
+            let pos = order.iter().position(|v| *v == 1000 + k).unwrap();
+            assert!(
+                pos <= 2 * k as usize + 2,
+                "job {k} of the small flow popped at {pos}: {order:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn wfq_weights_shift_share() {
+        // Interactive (w=4) vs Batch (w=1), uniform costs: over one round
+        // the interactive tenant gets ~4x the service.
+        let mut jobs = Vec::new();
+        for i in 0..40u32 {
+            jobs.push((meta(0, SloClass::Interactive, 0.01), i));
+        }
+        for i in 0..40u32 {
+            jobs.push((meta(1, SloClass::Batch, 0.01), 100 + i));
+        }
+        let order = pop_order(DisciplineKind::WeightedFair, &jobs);
+        let interactive_in_first_20 = order[..20].iter().filter(|v| **v < 100).count();
+        assert!(
+            (14..=18).contains(&interactive_in_first_20),
+            "interactive got {interactive_in_first_20}/20 early slots: {order:?}"
+        );
+        // The batch tenant is not starved: it appears in every round of 5.
+        for w in order[..40].chunks(5) {
+            assert!(
+                w.iter().any(|v| *v >= 100),
+                "batch starved in window {w:?} of {order:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn drain_tenant_removes_only_that_tenant() {
+        for kind in DisciplineKind::ALL {
+            let mut q: SchedQueue<u32> = SchedQueue::with_kind(kind);
+            for i in 0..9u32 {
+                q.push(meta(i as u64 % 3, SloClass::Standard, 0.01 + i as f64 * 1e-3), i);
+            }
+            let gone = q.drain_tenant(TenantHandle(1));
+            assert_eq!(gone.len(), 3, "{kind}");
+            assert!(gone.iter().all(|(m, _)| m.tenant == TenantHandle(1)));
+            assert_eq!(q.len(), 6, "{kind}");
+            let mut rest = Vec::new();
+            while let Some((m, v)) = q.pop() {
+                assert_ne!(m.tenant, TenantHandle(1), "{kind}");
+                rest.push(v);
+            }
+            assert_eq!(rest.len(), 6, "{kind}");
+            // Draining an absent tenant is a no-op.
+            assert!(q.drain_tenant(TenantHandle(1)).is_empty());
+        }
+    }
+
+    #[test]
+    fn peek_hint_matches_next_pop_for_ordered_disciplines() {
+        for kind in [
+            DisciplineKind::Fifo,
+            DisciplineKind::Priority,
+            DisciplineKind::Spsf,
+        ] {
+            let mut q: SchedQueue<u32> = SchedQueue::with_kind(kind);
+            assert_eq!(q.peek_next_service_hint(), None, "{kind}");
+            for i in 0..5u32 {
+                let class = SloClass::from_index(i as usize % 3).unwrap();
+                q.push(meta(i as u64, class, 0.01 * (5 - i) as f64), i);
+            }
+            while !q.is_empty() {
+                let hinted = q.peek_next_service_hint().unwrap();
+                let (m, _) = q.pop().unwrap();
+                assert_eq!(hinted, m.service_hint, "{kind}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_queue_behaves() {
+        for kind in DisciplineKind::ALL {
+            let mut q: SchedQueue<u32> = SchedQueue::with_kind(kind);
+            assert!(q.is_empty());
+            assert_eq!(q.len(), 0);
+            assert!(q.pop().is_none());
+            assert_eq!(q.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn kind_parse_round_trips() {
+        for kind in DisciplineKind::ALL {
+            assert_eq!(DisciplineKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(DisciplineKind::parse("bogus").is_err());
+        for class in SloClass::ALL {
+            assert_eq!(SloClass::parse(class.name()).unwrap(), class);
+            assert_eq!(SloClass::from_index(class.index()).unwrap(), class);
+        }
+        assert!(SloClass::parse("gold").is_err());
+        assert!(SloClass::from_index(3).is_none());
+    }
+}

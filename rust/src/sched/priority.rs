@@ -1,0 +1,80 @@
+//! Strict priority by [`SloClass`](super::SloClass), FIFO within a class.
+//!
+//! Interactive work always preempts queued Standard work, which preempts
+//! Batch. There is no aging: a saturated high class starves the lower
+//! classes — that is the point of the discipline, and the scheduler
+//! ablation quantifies the resulting tail-latency trade.
+
+use std::collections::VecDeque;
+
+use crate::analytic::TenantHandle;
+
+use super::{DisciplineKind, JobMeta, QueueDiscipline, SloClass};
+
+pub struct StrictPriority {
+    /// One FIFO lane per class, indexed by `SloClass::priority()`.
+    lanes: [VecDeque<(u64, JobMeta)>; SloClass::COUNT],
+    len: usize,
+}
+
+impl Default for StrictPriority {
+    fn default() -> Self {
+        StrictPriority {
+            lanes: std::array::from_fn(|_| VecDeque::new()),
+            len: 0,
+        }
+    }
+}
+
+impl StrictPriority {
+    pub fn new() -> StrictPriority {
+        StrictPriority::default()
+    }
+}
+
+impl QueueDiscipline for StrictPriority {
+    fn push(&mut self, id: u64, meta: JobMeta) {
+        self.lanes[meta.class.priority()].push_back((id, meta));
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<u64> {
+        for lane in self.lanes.iter_mut() {
+            if let Some((id, _)) = lane.pop_front() {
+                self.len -= 1;
+                return Some(id);
+            }
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn peek_next_service_hint(&self) -> Option<f64> {
+        self.lanes
+            .iter()
+            .find_map(|lane| lane.front().map(|(_, m)| m.service_hint))
+    }
+
+    fn drain_tenant(&mut self, tenant: TenantHandle) -> Vec<u64> {
+        let mut gone = Vec::new();
+        for lane in self.lanes.iter_mut() {
+            lane.retain(|(id, m)| {
+                if m.tenant == tenant {
+                    gone.push(*id);
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        self.len -= gone.len();
+        gone
+    }
+
+    fn kind(&self) -> DisciplineKind {
+        DisciplineKind::Priority
+    }
+}

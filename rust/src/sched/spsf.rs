@@ -1,0 +1,106 @@
+//! Shortest-predicted-service-first, fed by the analytic model's
+//! per-request service-time estimates (`JobMeta::service_hint`).
+//!
+//! Ties fall back to FIFO via the monotonic push id, so the discipline
+//! stays deterministic even when every hint is identical — in which case
+//! it degenerates to FIFO exactly. An unknown (NaN) hint is sanitized to
+//! +inf at push — "no estimate" schedules last, FIFO among its peers —
+//! which keeps the heap's ordering a total order (raw NaN would compare
+//! Equal against everything and break transitivity).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::analytic::TenantHandle;
+
+use super::{DisciplineKind, JobMeta, QueueDiscipline};
+
+struct Item {
+    /// Sanitized at push: never NaN.
+    hint: f64,
+    id: u64,
+    tenant: TenantHandle,
+}
+
+// BinaryHeap is a max-heap; invert so the smallest hint (then the
+// smallest id) is the maximum. Hints are NaN-free by construction, so
+// partial_cmp always succeeds and the order is total.
+impl Ord for Item {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .hint
+            .partial_cmp(&self.hint)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Item {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for Item {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Item {}
+
+#[derive(Default)]
+pub struct ShortestPredicted {
+    heap: BinaryHeap<Item>,
+}
+
+impl ShortestPredicted {
+    pub fn new() -> ShortestPredicted {
+        ShortestPredicted::default()
+    }
+}
+
+impl QueueDiscipline for ShortestPredicted {
+    fn push(&mut self, id: u64, meta: JobMeta) {
+        let hint = if meta.service_hint.is_nan() {
+            f64::INFINITY
+        } else {
+            meta.service_hint
+        };
+        self.heap.push(Item {
+            hint,
+            id,
+            tenant: meta.tenant,
+        });
+    }
+
+    fn pop(&mut self) -> Option<u64> {
+        self.heap.pop().map(|i| i.id)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn peek_next_service_hint(&self) -> Option<f64> {
+        self.heap.peek().map(|i| i.hint)
+    }
+
+    fn drain_tenant(&mut self, tenant: TenantHandle) -> Vec<u64> {
+        let mut gone = Vec::new();
+        let mut keep = Vec::new();
+        for item in std::mem::take(&mut self.heap) {
+            if item.tenant == tenant {
+                gone.push(item.id);
+            } else {
+                keep.push(item);
+            }
+        }
+        self.heap = keep.into();
+        gone
+    }
+
+    fn kind(&self) -> DisciplineKind {
+        DisciplineKind::Spsf
+    }
+}

@@ -1,0 +1,142 @@
+//! Weighted-fair queueing via deficit round-robin across tenants.
+//!
+//! Each tenant is one DRR flow. When a flow reaches the head of the
+//! active ring it is credited a quantum of `weight x max_cost`, where
+//! `weight` comes from the head job's [`SloClass`](super::SloClass) and
+//! `max_cost` is the largest per-job cost the flow has seen (so the
+//! quantum always affords at least one job — every backlogged flow is
+//! served at least once per round, which bounds starvation by the number
+//! of active flows). Job costs are the analytic service-time hints;
+//! missing hints degrade to a uniform unit cost, i.e. plain round-robin.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::analytic::TenantHandle;
+
+use super::{DisciplineKind, JobMeta, QueueDiscipline};
+
+/// Floor on per-job cost: keeps zero/negative/NaN hints from buying
+/// unbounded service within one quantum.
+const MIN_COST: f64 = 1e-6;
+
+fn cost_of(meta: &JobMeta) -> f64 {
+    if meta.service_hint.is_finite() && meta.service_hint > MIN_COST {
+        meta.service_hint
+    } else {
+        MIN_COST
+    }
+}
+
+struct Flow {
+    q: VecDeque<(u64, JobMeta)>,
+    deficit: f64,
+    /// Largest job cost seen on this flow — the quantum base.
+    max_cost: f64,
+}
+
+impl Flow {
+    fn new() -> Flow {
+        Flow {
+            q: VecDeque::new(),
+            deficit: 0.0,
+            max_cost: MIN_COST,
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct WeightedFair {
+    /// Invariant: contains exactly the flows with a non-empty queue,
+    /// and `active` lists the same tenants in round-robin order.
+    flows: HashMap<TenantHandle, Flow>,
+    active: VecDeque<TenantHandle>,
+    /// Whether the flow at `active.front()` already received this
+    /// round's quantum.
+    head_credited: bool,
+    len: usize,
+}
+
+impl WeightedFair {
+    pub fn new() -> WeightedFair {
+        WeightedFair::default()
+    }
+}
+
+impl QueueDiscipline for WeightedFair {
+    fn push(&mut self, id: u64, meta: JobMeta) {
+        let flow = self.flows.entry(meta.tenant).or_insert_with(Flow::new);
+        if flow.q.is_empty() {
+            self.active.push_back(meta.tenant);
+        }
+        flow.max_cost = flow.max_cost.max(cost_of(&meta));
+        flow.q.push_back((id, meta));
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<u64> {
+        loop {
+            let tenant = *self.active.front()?;
+            let flow = self
+                .flows
+                .get_mut(&tenant)
+                .expect("active flow present in map");
+            if !self.head_credited {
+                // The quantum is weight x max_cost >= any single job's
+                // cost, so a freshly credited flow always serves >= 1 job.
+                let weight = flow.q.front().map(|(_, m)| m.class.weight()).unwrap_or(1.0);
+                flow.deficit += weight * flow.max_cost;
+                self.head_credited = true;
+            }
+            let head_cost = flow.q.front().map(cost_from_entry).unwrap_or(MIN_COST);
+            if head_cost <= flow.deficit + 1e-12 {
+                flow.deficit -= head_cost;
+                let (id, _) = flow.q.pop_front().expect("non-empty active flow");
+                self.len -= 1;
+                if flow.q.is_empty() {
+                    self.flows.remove(&tenant);
+                    self.active.pop_front();
+                    self.head_credited = false;
+                }
+                return Some(id);
+            }
+            // Deficit exhausted: bank nothing extra, rotate to the next
+            // flow (classic DRR keeps the remaining deficit).
+            self.active.rotate_left(1);
+            self.head_credited = false;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn peek_next_service_hint(&self) -> Option<f64> {
+        // Best effort: the head flow's head job (pop may rotate past it
+        // when its deficit is exhausted).
+        self.active
+            .front()
+            .and_then(|t| self.flows.get(t))
+            .and_then(|f| f.q.front())
+            .map(|(_, m)| m.service_hint)
+    }
+
+    fn drain_tenant(&mut self, tenant: TenantHandle) -> Vec<u64> {
+        let Some(flow) = self.flows.remove(&tenant) else {
+            return Vec::new();
+        };
+        if self.active.front() == Some(&tenant) {
+            self.head_credited = false;
+        }
+        self.active.retain(|t| *t != tenant);
+        self.len -= flow.q.len();
+        flow.q.into_iter().map(|(id, _)| id).collect()
+    }
+
+    fn kind(&self) -> DisciplineKind {
+        DisciplineKind::WeightedFair
+    }
+}
+
+fn cost_from_entry(entry: &(u64, JobMeta)) -> f64 {
+    cost_of(&entry.1)
+}

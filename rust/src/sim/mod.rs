@@ -1,12 +1,20 @@
 //! Discrete-event simulator of the Edge-TPU serving testbed.
 //!
 //! This is the "observed" side of every validation figure: Poisson
-//! arrivals flow through the FCFS TPU queue (with the SRAM cache deciding
+//! arrivals flow through the TPU queue (with the SRAM cache deciding
 //! inter-model reloads) and the per-model M/D/k CPU stations, under a
 //! possibly time-varying configuration. The DES shares the `CostModel`
 //! with the analytic side, so discrepancies between predicted and observed
 //! latency are purely *queueing/caching dynamics* — exactly what the
 //! paper's model-validation experiments measure against their testbed.
+//!
+//! Queueing order is delegated to the shared [`crate::sched`] core: the
+//! TPU station and every CPU station run a [`SchedQueue`] built from
+//! [`SimOptions::discipline`] — the *same* trait objects the live
+//! `coordinator` server schedules with — so a discipline validated here
+//! deploys unchanged (and vice versa; `tests/sched_parity.rs` pins the
+//! FIFO equivalence). Requests carry an [`SloClass`], and completions are
+//! accounted per class in [`SimResult::per_class`].
 //!
 //! The tenant set itself is dynamic: a [`ChurnEvent`] schedule replays
 //! tenant arrivals and departures mid-run, driven through the same
@@ -17,10 +25,11 @@
 //!
 //! Virtual-clock simulation: a 900 s Fig.-8 timeline runs in milliseconds.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 
 use crate::analytic::{Config, Tenant, TenantHandle};
-use crate::metrics::{LatencyHistogram, TimeSeries, Welford};
+use crate::metrics::{LatencyHistogram, PerClassLatency, TimeSeries, Welford};
+use crate::sched::{DisciplineKind, JobMeta, SchedQueue, SloClass};
 use crate::tpu::{CostModel, PrefixTables, SramCache};
 use crate::util::rng::Rng;
 use crate::workload::{generate_arrivals, Arrival, RateSchedule};
@@ -39,6 +48,9 @@ pub struct SimOptions {
     pub seed: u64,
     /// Track a latency timeline with this window (None = off). Fig. 8.
     pub timeline_window: Option<f64>,
+    /// Queueing discipline for the TPU station and every CPU station —
+    /// built through the same `sched` factory the live server uses.
+    pub discipline: DisciplineKind,
 }
 
 impl Default for SimOptions {
@@ -48,6 +60,7 @@ impl Default for SimOptions {
             warmup: 30.0,
             seed: 1,
             timeline_window: None,
+            discipline: DisciplineKind::Fifo,
         }
     }
 }
@@ -103,6 +116,8 @@ pub struct SimResult {
     pub timeline: Option<TimeSeries>,
     /// Reconfiguration decisions taken (time, new config, decision µs).
     pub reconfigs: Vec<(f64, Config, f64)>,
+    /// Latency accounted per SLO class (across live + retired tenants).
+    pub per_class: PerClassLatency,
 }
 
 impl SimResult {
@@ -117,6 +132,9 @@ pub struct Request {
     /// positions shift under churn).
     pub tenant: TenantHandle,
     pub arrived: f64,
+    /// SLO class the request arrived with (drives priority/WFQ decisions
+    /// and the per-class accounting).
+    pub class: SloClass,
 }
 
 /// Per-model service-time memo for the current configuration — the DES
@@ -148,13 +166,13 @@ pub struct Simulator {
     tables: Vec<PrefixTables>,
     memo: Vec<ServiceMemo>,
     cache: SramCache,
-    // TPU station
-    tpu_queue: VecDeque<Request>,
+    // TPU station (queue order owned by the shared sched core)
+    tpu_queue: SchedQueue<Request>,
     tpu_busy: bool,
     tpu_busy_until: f64,
     tpu_busy_time: f64,
     // per-model CPU stations
-    cpu_queues: Vec<VecDeque<Request>>,
+    cpu_queues: Vec<SchedQueue<Request>>,
     cpu_busy: Vec<usize>,
     heap: BinaryHeap<Event>,
     // stats
@@ -162,6 +180,7 @@ pub struct Simulator {
     retired: Vec<ModelStats>,
     dropped: u64,
     weighted_latency: Welford,
+    class_latency: PerClassLatency,
     timeline: Option<TimeSeries>,
     opts: SimOptions,
 }
@@ -185,11 +204,11 @@ impl Simulator {
             tables,
             memo,
             cache: SramCache::new(cost.hw.sram_bytes),
-            tpu_queue: VecDeque::new(),
+            tpu_queue: SchedQueue::with_kind(opts.discipline),
             tpu_busy: false,
             tpu_busy_until: 0.0,
             tpu_busy_time: 0.0,
-            cpu_queues: (0..n).map(|_| VecDeque::new()).collect(),
+            cpu_queues: (0..n).map(|_| SchedQueue::with_kind(opts.discipline)).collect(),
             cpu_busy: vec![0; n],
             heap: BinaryHeap::new(),
             stats: tenants
@@ -206,9 +225,15 @@ impl Simulator {
             retired: Vec::new(),
             dropped: 0,
             weighted_latency: Welford::new(),
+            class_latency: PerClassLatency::new(),
             timeline: opts.timeline_window.map(TimeSeries::new),
             opts,
         }
+    }
+
+    /// The scheduling discipline driving the TPU and CPU stations.
+    pub fn discipline(&self) -> DisciplineKind {
+        self.tpu_queue.kind()
     }
 
     /// Positional index of a handle, `None` if the tenant detached.
@@ -254,7 +279,8 @@ impl Simulator {
         self.handles.push(h);
         self.cfg.partitions.push(0);
         self.cfg.cores.push(0);
-        self.cpu_queues.push(VecDeque::new());
+        self.cpu_queues
+            .push(SchedQueue::with_kind(self.opts.discipline));
         self.cpu_busy.push(0);
         self.memo = build_memo(&self.tables, &self.cfg);
         h
@@ -272,9 +298,7 @@ impl Simulator {
         self.retired.push(self.stats.remove(i));
         self.dropped += self.cpu_queues.remove(i).len() as u64;
         self.cpu_busy.remove(i);
-        let before = self.tpu_queue.len();
-        self.tpu_queue.retain(|r| r.tenant != h);
-        self.dropped += (before - self.tpu_queue.len()) as u64;
+        self.dropped += self.tpu_queue.drain_tenant(h).len() as u64;
         self.cache.invalidate(h.0 as usize);
         h
     }
@@ -292,6 +316,7 @@ impl Simulator {
         self.stats[i].completed += 1;
         self.stats[i].latency.record(latency);
         self.weighted_latency.add(latency);
+        self.class_latency.record(req.class, latency);
         if let Some(ts) = &mut self.timeline {
             ts.record(now, latency);
         }
@@ -301,7 +326,7 @@ impl Simulator {
         if self.tpu_busy {
             return;
         }
-        let Some(req) = self.tpu_queue.pop_front() else {
+        let Some((_, req)) = self.tpu_queue.pop() else {
             return;
         };
         let Some(i) = self.index_of(req.tenant) else {
@@ -338,7 +363,12 @@ impl Simulator {
             self.dropped += 1;
             return;
         };
-        self.cpu_queues[i].push_back(req);
+        let meta = JobMeta {
+            tenant: req.tenant,
+            class: req.class,
+            service_hint: self.memo[i].cpu_service,
+        };
+        self.cpu_queues[i].push(meta, req);
         self.start_cpu_if_possible(i, now);
     }
 
@@ -349,7 +379,7 @@ impl Simulator {
         // deadlock (counts as best-effort cleanup, negligible in steady state).
         let k_eff = k.max(if self.cpu_queues[m].is_empty() { 0 } else { 1 });
         while self.cpu_busy[m] < k_eff {
-            let Some(req) = self.cpu_queues[m].pop_front() else {
+            let Some((_, req)) = self.cpu_queues[m].pop() else {
                 return;
             };
             let service = self.memo[m].cpu_service;
@@ -410,6 +440,7 @@ impl Simulator {
                     req: Request {
                         tenant: TenantHandle(a.model as u64),
                         arrived: a.time,
+                        class: a.class,
                     },
                 },
             ));
@@ -451,6 +482,7 @@ impl Simulator {
                             req: Request {
                                 tenant: h,
                                 arrived: t,
+                                class: a.class,
                             },
                         },
                     ));
@@ -498,7 +530,19 @@ impl Simulator {
                     }
                 }
                 EventKind::TpuEnqueue { req } => {
-                    self.tpu_queue.push_back(req);
+                    // Hint = the deterministic prefix service under the
+                    // *current* partition (stale after a reconfig only
+                    // for already-queued jobs — advisory, not load-bearing).
+                    let hint = self
+                        .index_of(req.tenant)
+                        .map(|i| self.memo[i].tpu_service)
+                        .unwrap_or(0.0);
+                    let meta = JobMeta {
+                        tenant: req.tenant,
+                        class: req.class,
+                        service_hint: hint,
+                    };
+                    self.tpu_queue.push(meta, req);
                     self.start_tpu_if_idle(now);
                 }
                 EventKind::TpuDone { req } => {
@@ -596,6 +640,7 @@ impl Simulator {
             cache_hit_rate: self.cache.hit_rate(),
             timeline: self.timeline.take(),
             reconfigs,
+            per_class: self.class_latency.clone(),
         }
     }
 }
@@ -689,7 +734,7 @@ mod tests {
             horizon,
             warmup: horizon * 0.05,
             seed,
-            timeline_window: None,
+            ..SimOptions::default()
         }
     }
 
@@ -810,6 +855,62 @@ mod tests {
         let a = simulate(&cost, &tenants, &cfg, opts(300.0, 23)).mean_latency;
         let b = simulate(&cost, &tenants, &cfg, opts(300.0, 23)).mean_latency;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn per_class_latency_accounts_every_completion() {
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![4],
+            cores: vec![1],
+        };
+        let res = simulate(&cost, &tenants, &cfg, opts(300.0, 43));
+        // Untagged workloads default to Standard; every recorded
+        // completion lands in exactly one class histogram.
+        assert_eq!(res.per_class.total_count(), res.per_model[0].completed);
+        assert_eq!(
+            res.per_class.get(SloClass::Standard).count(),
+            res.per_model[0].completed
+        );
+        assert_eq!(res.per_class.get(SloClass::Interactive).count(), 0);
+        let rows = res.per_class.non_empty();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].1.mean().is_finite());
+    }
+
+    #[test]
+    fn every_discipline_completes_and_is_deterministic() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants: Vec<Tenant> = (0..2)
+            .map(|i| Tenant {
+                model: synthetic_model(&format!("m{i}"), 5, 1_000_000, 400_000_000),
+                rate: 3.0,
+            })
+            .collect();
+        let cfg = Config {
+            partitions: vec![5, 3],
+            cores: vec![0, 2],
+        };
+        for kind in DisciplineKind::ALL {
+            let run = || {
+                let mut o = opts(300.0, 47);
+                o.discipline = kind;
+                simulate(&cost, &tenants, &cfg, o)
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.mean_latency, b.mean_latency, "{kind}");
+            for (x, y) in a.per_model.iter().zip(&b.per_model) {
+                assert_eq!(x.completed, y.completed, "{kind}");
+            }
+            assert!(
+                a.per_model.iter().all(|m| m.completed > 300),
+                "{kind}: starved a tenant: {:?}",
+                a.per_model.iter().map(|m| m.completed).collect::<Vec<_>>()
+            );
+            assert_eq!(a.dropped, 0, "{kind}");
+            assert!(a.mean_latency.is_finite(), "{kind}");
+        }
     }
 
     #[test]

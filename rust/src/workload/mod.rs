@@ -4,20 +4,28 @@
 pub mod trace;
 
 use crate::analytic::{AnalyticModel, Config, Tenant};
+use crate::sched::SloClass;
 use crate::util::rng::Rng;
 
-/// A request arrival: (time, model index).
+/// A request arrival: (time, model index, SLO class).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Arrival {
     pub time: f64,
     pub model: usize,
+    /// The SLO class the request is tagged with (threaded through the
+    /// DES into the shared scheduling core and per-class accounting).
+    pub class: SloClass,
 }
 
 /// A piecewise-constant rate schedule for one model: (start_time, rate).
 /// Rates hold until the next breakpoint (Fig. 8 uses steps at 300 s/600 s).
+///
+/// Steps are kept sorted by start time — [`rate_at`](Self::rate_at) scans
+/// with an early exit, which returns wrong rates on unsorted input, so
+/// the field is private and every constructor establishes the order.
 #[derive(Debug, Clone)]
 pub struct RateSchedule {
-    pub steps: Vec<(f64, f64)>,
+    steps: Vec<(f64, f64)>,
 }
 
 impl RateSchedule {
@@ -25,6 +33,25 @@ impl RateSchedule {
         RateSchedule {
             steps: vec![(0.0, rate)],
         }
+    }
+
+    /// Build a stepped schedule from `(start_time, rate)` breakpoints.
+    /// The steps are sorted by start time (stable, so among equal starts
+    /// the later entry wins, matching `rate_at`'s last-match semantics);
+    /// non-finite times/rates and negative rates are rejected.
+    pub fn stepped(mut steps: Vec<(f64, f64)>) -> RateSchedule {
+        for (t, r) in &steps {
+            assert!(
+                t.is_finite() && r.is_finite() && *r >= 0.0,
+                "bad rate step ({t}, {r})"
+            );
+        }
+        steps.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        RateSchedule { steps }
+    }
+
+    pub fn steps(&self) -> &[(f64, f64)] {
+        &self.steps
     }
 
     pub fn rate_at(&self, t: f64) -> f64 {
@@ -40,15 +67,29 @@ impl RateSchedule {
     }
 }
 
-/// Generate a merged Poisson arrival stream for `schedules` over [0, horizon).
-///
-/// Uses thinning against each model's max rate, so rate steps are honored
-/// exactly (not just at event boundaries).
+/// Generate a merged Poisson arrival stream for `schedules` over
+/// [0, horizon), every arrival tagged [`SloClass::Standard`].
 pub fn generate_arrivals(
     schedules: &[RateSchedule],
     horizon: f64,
     rng: &mut Rng,
 ) -> Vec<Arrival> {
+    let classes = vec![SloClass::Standard; schedules.len()];
+    generate_arrivals_classed(schedules, &classes, horizon, rng)
+}
+
+/// Generate a merged Poisson arrival stream with one SLO class per model
+/// (`classes` is positionally aligned with `schedules`).
+///
+/// Uses thinning against each model's max rate, so rate steps are honored
+/// exactly (not just at event boundaries).
+pub fn generate_arrivals_classed(
+    schedules: &[RateSchedule],
+    classes: &[SloClass],
+    horizon: f64,
+    rng: &mut Rng,
+) -> Vec<Arrival> {
+    assert_eq!(schedules.len(), classes.len());
     let mut all = Vec::new();
     for (m, sched) in schedules.iter().enumerate() {
         let max_rate = sched
@@ -68,7 +109,11 @@ pub fn generate_arrivals(
             }
             // thinning: accept with prob rate(t)/max_rate
             if r.f64() < sched.rate_at(t) / max_rate {
-                all.push(Arrival { time: t, model: m });
+                all.push(Arrival {
+                    time: t,
+                    model: m,
+                    class: classes[m],
+                });
             }
         }
     }
@@ -159,9 +204,7 @@ mod tests {
 
     #[test]
     fn rate_schedule_steps() {
-        let s = RateSchedule {
-            steps: vec![(0.0, 1.0), (300.0, 3.0), (600.0, 5.0)],
-        };
+        let s = RateSchedule::stepped(vec![(0.0, 1.0), (300.0, 3.0), (600.0, 5.0)]);
         assert_eq!(s.rate_at(0.0), 1.0);
         assert_eq!(s.rate_at(299.9), 1.0);
         assert_eq!(s.rate_at(300.0), 3.0);
@@ -169,11 +212,51 @@ mod tests {
     }
 
     #[test]
+    fn rate_schedule_sorts_unsorted_steps() {
+        // rate_at's early-exit scan requires sorted steps; the
+        // constructor must establish the order on any input.
+        let unsorted = RateSchedule::stepped(vec![(600.0, 5.0), (0.0, 1.0), (300.0, 3.0)]);
+        let sorted = RateSchedule::stepped(vec![(0.0, 1.0), (300.0, 3.0), (600.0, 5.0)]);
+        assert_eq!(unsorted.steps(), sorted.steps());
+        for t in [0.0, 299.9, 300.0, 599.9, 600.0, 1e4] {
+            assert_eq!(unsorted.rate_at(t), sorted.rate_at(t), "t={t}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bad rate step")]
+    fn rate_schedule_rejects_negative_rate() {
+        RateSchedule::stepped(vec![(0.0, -1.0)]);
+    }
+
+    #[test]
+    fn classed_arrivals_carry_their_model_class() {
+        let mut rng = Rng::new(11);
+        let arr = generate_arrivals_classed(
+            &[RateSchedule::constant(3.0), RateSchedule::constant(3.0)],
+            &[SloClass::Interactive, SloClass::Batch],
+            200.0,
+            &mut rng,
+        );
+        assert!(!arr.is_empty());
+        for a in &arr {
+            let expect = if a.model == 0 {
+                SloClass::Interactive
+            } else {
+                SloClass::Batch
+            };
+            assert_eq!(a.class, expect);
+        }
+        // The untagged generator defaults everything to Standard.
+        let mut rng = Rng::new(11);
+        let plain = generate_arrivals(&[RateSchedule::constant(3.0)], 50.0, &mut rng);
+        assert!(plain.iter().all(|a| a.class == SloClass::Standard));
+    }
+
+    #[test]
     fn stepped_schedule_changes_density() {
         let mut rng = Rng::new(7);
-        let s = RateSchedule {
-            steps: vec![(0.0, 1.0), (500.0, 8.0)],
-        };
+        let s = RateSchedule::stepped(vec![(0.0, 1.0), (500.0, 8.0)]);
         let arr = generate_arrivals(&[s], 1000.0, &mut rng);
         let early = arr.iter().filter(|a| a.time < 500.0).count() as f64 / 500.0;
         let late = arr.iter().filter(|a| a.time >= 500.0).count() as f64 / 500.0;

@@ -3,15 +3,18 @@
 //! special case of piecewise schedules; traces generalize them to
 //! arbitrary recorded workloads).
 
+use crate::sched::SloClass;
 use crate::util::json::Json;
 
 use super::Arrival;
 
 /// Serialize arrivals to the on-disk trace format:
-/// `{"version":1, "arrivals":[[t, model], ...], "models":[names...]}`.
+/// `{"version":2, "arrivals":[[t, model, class], ...], "models":[...]}`
+/// where `class` is the [`SloClass`] index. Version-1 traces (two-element
+/// `[t, model]` pairs) load as [`SloClass::Standard`].
 pub fn to_json(arrivals: &[Arrival], model_names: &[String]) -> Json {
     Json::from_pairs(vec![
-        ("version", Json::Num(1.0)),
+        ("version", Json::Num(2.0)),
         (
             "models",
             Json::Arr(model_names.iter().map(|n| Json::Str(n.clone())).collect()),
@@ -21,7 +24,13 @@ pub fn to_json(arrivals: &[Arrival], model_names: &[String]) -> Json {
             Json::Arr(
                 arrivals
                     .iter()
-                    .map(|a| Json::Arr(vec![Json::Num(a.time), Json::Num(a.model as f64)]))
+                    .map(|a| {
+                        Json::Arr(vec![
+                            Json::Num(a.time),
+                            Json::Num(a.model as f64),
+                            Json::Num(a.class.index() as f64),
+                        ])
+                    })
                     .collect(),
             ),
         ),
@@ -45,14 +54,21 @@ pub fn from_json(j: &Json) -> Result<(Vec<Arrival>, Vec<String>), String> {
     {
         let a = pair
             .as_arr()
-            .filter(|a| a.len() == 2)
-            .ok_or_else(|| format!("arrival {i} is not a [t, model] pair"))?;
+            .filter(|a| a.len() == 2 || a.len() == 3)
+            .ok_or_else(|| format!("arrival {i} is not a [t, model(, class)] entry"))?;
         let time = a[0]
             .as_f64()
             .ok_or_else(|| format!("arrival {i}: bad time"))?;
         let model = a[1]
             .as_usize()
             .ok_or_else(|| format!("arrival {i}: bad model index"))?;
+        let class = match a.get(2) {
+            None => SloClass::Standard,
+            Some(c) => c
+                .as_usize()
+                .and_then(SloClass::from_index)
+                .ok_or_else(|| format!("arrival {i}: bad SLO class"))?,
+        };
         if model >= models.len() {
             return Err(format!("arrival {i}: model {model} out of range"));
         }
@@ -63,7 +79,7 @@ pub fn from_json(j: &Json) -> Result<(Vec<Arrival>, Vec<String>), String> {
             return Err(format!("arrival {i}: invalid time {time}"));
         }
         last_t = time;
-        arrivals.push(Arrival { time, model });
+        arrivals.push(Arrival { time, model, class });
     }
     Ok((arrivals, models))
 }
@@ -110,6 +126,38 @@ mod tests {
         assert_eq!(back.len(), arr.len());
         assert_eq!(back[0], arr[0]);
         assert_eq!(back[back.len() - 1], arr[arr.len() - 1]);
+    }
+
+    #[test]
+    fn classed_roundtrip_and_legacy_load() {
+        let arr = vec![
+            Arrival {
+                time: 0.5,
+                model: 0,
+                class: SloClass::Interactive,
+            },
+            Arrival {
+                time: 1.5,
+                model: 1,
+                class: SloClass::Batch,
+            },
+        ];
+        let names = vec!["a".to_string(), "b".to_string()];
+        let (back, _) = from_json(&to_json(&arr, &names)).unwrap();
+        assert_eq!(back, arr);
+        // Version-1 two-element entries default to Standard.
+        let legacy = crate::util::json::parse(
+            r#"{"version":1,"models":["a"],"arrivals":[[1.0, 0]]}"#,
+        )
+        .unwrap();
+        let (back, _) = from_json(&legacy).unwrap();
+        assert_eq!(back[0].class, SloClass::Standard);
+        // Out-of-range class index is rejected.
+        let bad = crate::util::json::parse(
+            r#"{"version":2,"models":["a"],"arrivals":[[1.0, 0, 9]]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&bad).is_err());
     }
 
     #[test]

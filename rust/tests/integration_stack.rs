@@ -118,10 +118,10 @@ fn server_round_trip_split_execution() {
         .build()
         .unwrap();
     let h_sq = server
-        .attach("squeezenet", AttachOptions { rate_hint: 1.0 })
+        .attach("squeezenet", AttachOptions { rate_hint: 1.0, ..Default::default() })
         .unwrap();
     let h_mb = server
-        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0 })
+        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0, ..Default::default() })
         .unwrap();
     // Force split configs: prefix 1 segment, suffix on CPU pools.
     server

@@ -13,6 +13,7 @@ use swapless::config::{HardwareSpec, RuntimeConfig};
 use swapless::coordinator::{AttachError, AttachOptions, ConfigError, Server, ServerBuilder};
 use swapless::model::Manifest;
 use swapless::runtime::service::ExecBackend;
+use swapless::sched::SloClass;
 use swapless::tpu::CostModel;
 
 fn builder() -> ServerBuilder {
@@ -39,10 +40,10 @@ fn attach_infer_detach_round_trip() {
     assert!(server.handles().is_empty());
 
     let ha = server
-        .attach("mobilenetv2", AttachOptions { rate_hint: 2.0 })
+        .attach("mobilenetv2", AttachOptions { rate_hint: 2.0, ..Default::default() })
         .unwrap();
     let hb = server
-        .attach("squeezenet", AttachOptions { rate_hint: 2.0 })
+        .attach("squeezenet", AttachOptions { rate_hint: 2.0, ..Default::default() })
         .unwrap();
     assert_ne!(ha, hb);
     assert_eq!(server.handles(), vec![ha, hb]);
@@ -73,6 +74,10 @@ fn attach_infer_detach_round_trip() {
     assert!(stats.tenant(ha).unwrap().detached);
     assert_eq!(stats.tenant(hb).unwrap().latency.count(), 2);
     assert!(!stats.tenant(hb).unwrap().detached);
+    // Per-class accounting survives the detach too: every completion —
+    // including the retired tenant's — landed in the default class.
+    assert_eq!(stats.per_class.get(SloClass::Standard).count(), 3);
+    assert_eq!(stats.per_class.total_count(), 3);
 }
 
 #[test]
@@ -85,11 +90,11 @@ fn attach_unknown_model_and_admission_rejection() {
 
     // A modest tenant is admitted...
     let h = server
-        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0 })
+        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0, ..Default::default() })
         .unwrap();
     // ...but a tenant declaring an impossible rate is refused with the
     // predicted objective, and the running tenant is undisturbed.
-    match server.attach("inceptionv4", AttachOptions { rate_hint: 1e9 }) {
+    match server.attach("inceptionv4", AttachOptions { rate_hint: 1e9, ..Default::default() }) {
         Err(AttachError::Admission(e)) => {
             assert!(
                 e.predicted_objective.is_infinite(),
@@ -108,7 +113,7 @@ fn attach_unknown_model_and_admission_rejection() {
 fn set_config_validates_and_counts_reconfigs() {
     let server = builder().adaptive(false).build().unwrap();
     let h = server
-        .attach("efficientnet", AttachOptions { rate_hint: 1.0 })
+        .attach("efficientnet", AttachOptions { rate_hint: 1.0, ..Default::default() })
         .unwrap();
     let pp = server.model_meta(h).unwrap().partition_points;
 
@@ -159,7 +164,7 @@ fn split_equals_full_through_live_server() {
     // the full coordinator path (TPU prefix -> CPU pool suffix).
     let server = builder().adaptive(false).build().unwrap();
     let h = server
-        .attach("efficientnet", AttachOptions { rate_hint: 1.0 })
+        .attach("efficientnet", AttachOptions { rate_hint: 1.0, ..Default::default() })
         .unwrap();
     let pp = server.model_meta(h).unwrap().partition_points;
     server
@@ -199,11 +204,11 @@ fn concurrent_submissions_race_churn_cleanly() {
             .unwrap(),
     );
     let stable = server
-        .attach("mobilenetv2", AttachOptions { rate_hint: 4.0 })
+        .attach("mobilenetv2", AttachOptions { rate_hint: 4.0, ..Default::default() })
         .unwrap();
     let churned = Arc::new(Mutex::new(
         server
-            .attach("squeezenet", AttachOptions { rate_hint: 4.0 })
+            .attach("squeezenet", AttachOptions { rate_hint: 4.0, ..Default::default() })
             .unwrap(),
     ));
     let stop = Arc::new(AtomicBool::new(false));
@@ -258,7 +263,7 @@ fn concurrent_submissions_race_churn_cleanly() {
         }
         std::thread::sleep(Duration::from_millis(10));
         let new = server
-            .attach("squeezenet", AttachOptions { rate_hint: 4.0 })
+            .attach("squeezenet", AttachOptions { rate_hint: 4.0, ..Default::default() })
             .expect("re-attach after detach");
         *churned.lock().unwrap() = new;
     }
@@ -338,7 +343,7 @@ fn policy_thread_drives_reconfigurations() {
         .build()
         .unwrap();
     let h = server
-        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0 })
+        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0, ..Default::default() })
         .unwrap();
     let input = input_for(&server, h);
     let deadline = std::time::Instant::now() + Duration::from_secs(5);

@@ -9,6 +9,7 @@ use swapless::analytic::{
     Tenant,
 };
 use swapless::config::HardwareSpec;
+use swapless::metrics::LatencyHistogram;
 use swapless::model::synthetic_model;
 use swapless::sim::{simulate, SimOptions};
 use swapless::tpu::{CostModel, PrefixTables, SramCache};
@@ -310,7 +311,7 @@ fn prop_des_matches_analytic_on_stable_single_tenant() {
                 horizon: 1500.0,
                 warmup: 75.0,
                 seed,
-                timeline_window: None,
+                ..SimOptions::default()
             },
         );
         let err = (res.mean_latency - predicted).abs() / predicted;
@@ -569,6 +570,70 @@ fn prop_admission_matches_ground_truth_stability() {
     // The rate sweep must actually exercise both regimes.
     assert!(accepted >= 3, "only {accepted} mixes accepted");
     assert!(rejected >= 3, "only {rejected} mixes rejected");
+}
+
+#[test]
+fn prop_histogram_percentiles_monotone() {
+    // For any recorded sample set, percentiles must be nondecreasing in
+    // p (p50 <= p95 <= p99 <= p100) and the top percentile must sit at
+    // or below the exact max (within one bucket's relative width).
+    for seed in 6000..6000 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let mut h = LatencyHistogram::default();
+        let n = 20 + rng.below(3000);
+        for _ in 0..n {
+            // log-uniform over ~6 decades, exercising many buckets
+            h.record(10f64.powf(rng.range_f64(-5.0, 1.5)));
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        let p100 = h.percentile(100.0);
+        assert!(p50 <= p95, "seed {seed}: p50 {p50} > p95 {p95}");
+        assert!(p95 <= p99, "seed {seed}: p95 {p95} > p99 {p99}");
+        assert!(p99 <= p100, "seed {seed}: p99 {p99} > p100 {p100}");
+        assert!(
+            p100 <= h.max() * 1.03,
+            "seed {seed}: p100 {p100} above max {}",
+            h.max()
+        );
+    }
+}
+
+#[test]
+fn prop_histogram_merge_equals_record_all() {
+    // Splitting a stream across two histograms and merging must be
+    // indistinguishable from recording everything into one: identical
+    // bucket counts make every percentile bit-equal, and the streaming
+    // moments agree to float associativity.
+    for seed in 6200..6200 + CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let mut all = LatencyHistogram::default();
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        let n = 10 + rng.below(2000);
+        for _ in 0..n {
+            let v = 10f64.powf(rng.range_f64(-5.0, 1.0));
+            all.record(v);
+            if rng.f64() < 0.5 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count(), "seed {seed}");
+        for p in [10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(
+                a.percentile(p).to_bits(),
+                all.percentile(p).to_bits(),
+                "seed {seed}: p{p}"
+            );
+        }
+        let rel = (a.mean() - all.mean()).abs() / all.mean().abs().max(1e-30);
+        assert!(rel < 1e-9, "seed {seed}: merged mean off by {rel}");
+        assert_eq!(a.max(), all.max(), "seed {seed}");
+    }
 }
 
 #[test]

@@ -94,5 +94,17 @@ fn main() -> Result<(), String> {
         am.mean_latency(&tenants, &base.config) * 1e3,
         am2.mean_latency(&tenants, &doubled.config) * 1e3
     );
+
+    // Backpressure planning: if the server runs a bounded queue (e.g.
+    // `--queue-cap 8 --overload reject`), a rejection reports the wait a
+    // newly admitted request would have faced — the station's predicted
+    // service backlog over its servers. Size client retry budgets from it.
+    let mean_service = am.mean_latency(&tenants, &base.config);
+    for cap in [4usize, 8, 16] {
+        println!(
+            "queue-cap {cap:>2}: an Overloaded rejection implies >= {:.1} ms of backlog",
+            am.station_wait_estimate(cap as f64 * mean_service, 1) * 1e3
+        );
+    }
     Ok(())
 }

@@ -153,10 +153,9 @@ fn main() -> Result<(), String> {
         }
     }
     let mut clean_failures = 0usize;
-    for rx in pending {
-        match rx.recv() {
-            Ok(Ok(_)) => {}
-            _ => clean_failures += 1,
+    for ticket in pending {
+        if ticket.wait().is_err() {
+            clean_failures += 1;
         }
     }
     let stats = server.stats();

@@ -117,12 +117,11 @@ fn run_config(
         issued += 1;
         next_at[m] += rng.exponential(RATES[m]);
     }
-    // Drain.
+    // Drain the tickets (any failure arrives as a typed RequestError).
     let mut errors = 0usize;
-    for rx in pending {
-        match rx.recv() {
-            Ok(Ok(_)) => {}
-            _ => errors += 1,
+    for ticket in pending {
+        if ticket.wait().is_err() {
+            errors += 1;
         }
     }
     let wall = t0.elapsed().as_secs_f64();

@@ -1,6 +1,6 @@
 //! Quickstart: build an empty server, attach a tenant through admission
-//! control, serve a few requests, and detach — the tenant-lifecycle API
-//! end to end.
+//! control, serve a few requests through the ticketed request lifecycle,
+//! and detach — the tenant + request lifecycle APIs end to end.
 //!
 //! Works on a fresh checkout: without `make artifacts` a synthetic
 //! paper-scale manifest and the emulated execution backend are used
@@ -10,9 +10,11 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use std::time::Duration;
+
 use swapless::analytic::AnalyticModel;
 use swapless::config::HardwareSpec;
-use swapless::coordinator::{AttachOptions, ServerBuilder};
+use swapless::coordinator::{AttachOptions, Request, RequestError, ServerBuilder};
 use swapless::model::Manifest;
 use swapless::tpu::CostModel;
 
@@ -51,12 +53,16 @@ fn main() -> Result<(), String> {
         am.e2e_latency(&server.tenants(), &cfg, 0) * 1e3
     );
 
-    // 4. Serve requests addressed by the stable handle.
+    // 4. Serve requests addressed by the stable handle. submit() takes a
+    //    Request (input + optional class override / deadline / cancel
+    //    token) and returns a Ticket — block on it, poll it, or cancel it.
     let n_in: usize = meta.input_shape.iter().product();
     for i in 0..5 {
-        let out = server
-            .infer(handle, vec![0.5; n_in])
-            .map_err(|e| e.to_string())?;
+        let ticket = server.submit(
+            handle,
+            Request::new(vec![0.5; n_in]).with_deadline(Duration::from_secs(5)),
+        );
+        let out = ticket.wait().map_err(|e| e.to_string())?;
         println!(
             "request {i}: {} outputs, first = {:.4}, latency {:.1} ms",
             out.output.len(),
@@ -64,6 +70,13 @@ fn main() -> Result<(), String> {
             out.latency_s * 1e3
         );
     }
+    // A bare input vector converts into a default Request, and a ticket
+    // can be polled without blocking (wait_timeout / try_wait).
+    let mut ticket = server.submit(handle, vec![0.5; n_in]);
+    while ticket.try_wait().is_none() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    ticket.wait().map_err(|e| e.to_string())?;
 
     // 5. Detach: the final per-tenant histogram comes back.
     let stats = server.detach(handle).map_err(|e| e.to_string())?;
@@ -72,8 +85,13 @@ fn main() -> Result<(), String> {
         stats.latency.count(),
         stats.latency.mean() * 1e3
     );
-    // A detached handle fails cleanly, it never panics or misroutes.
-    assert!(server.infer(handle, vec![0.5; n_in]).is_err());
-    println!("requests after detach fail cleanly — done.");
+    // A detached handle resolves its ticket with a typed error — it
+    // never panics, misroutes, or hangs.
+    match server.submit(handle, vec![0.5; n_in]).wait() {
+        Err(RequestError::NotAttached(h)) => {
+            println!("request after detach fails typed (NotAttached({h})) — done.")
+        }
+        other => return Err(format!("expected NotAttached, got {other:?}")),
+    }
     Ok(())
 }

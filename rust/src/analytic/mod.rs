@@ -497,6 +497,16 @@ impl AnalyticModel {
         self.cost.cpu_service(model, p)
     }
 
+    /// O(1) admission-time wait estimate for a bounded station: the
+    /// predicted service backlog already queued (the running sum of the
+    /// prefix-table hints a `SchedQueue` maintains) divided across the
+    /// station's parallel servers. This is the quantity a typed
+    /// [`Overloaded`](crate::sched::Overloaded) rejection reports, so
+    /// clients can convert backpressure into retry budgets.
+    pub fn station_wait_estimate(&self, queued_service_s: f64, servers: usize) -> f64 {
+        queued_service_s / servers.max(1) as f64
+    }
+
     /// Request-weighted mean latency (what Fig. 7 plots).
     pub fn mean_latency(&self, tenants: &[Tenant], cfg: &Config) -> f64 {
         let lam: f64 = tenants.iter().map(|t| t.rate).sum();
@@ -697,6 +707,16 @@ mod tests {
         }
         assert_eq!(am.tpu_service_hint(m, 0), 0.0);
         assert_eq!(am.cpu_service_hint(m, m.partition_points), 0.0);
+    }
+
+    #[test]
+    fn station_wait_estimate_divides_backlog_across_servers() {
+        let (am, _) = setup(1);
+        assert_eq!(am.station_wait_estimate(0.060, 1), 0.060);
+        assert_eq!(am.station_wait_estimate(0.060, 3), 0.020);
+        // Degenerate server counts never divide by zero.
+        assert_eq!(am.station_wait_estimate(0.060, 0), 0.060);
+        assert_eq!(am.station_wait_estimate(0.0, 4), 0.0);
     }
 
     #[test]

@@ -6,15 +6,18 @@
 //!   attach(model, rate) ──► [admission control]  (analytic model plans the
 //!        │                   candidate mix; ρ ≥ 1 everywhere → typed reject)
 //!        ▼ TenantHandle
-//!   clients ──submit(h)──► router ──► [TPU worker thread]  (sched-core
-//!                             │        queue — FIFO/priority/WFQ/SPSF —
-//!                             │        SRAM cache + swap emulation,
-//!                             │        executes prefix via the exec service)
-//!                             │              │ boundary tensor
-//!                             └──────────────▼
-//!                                   [per-tenant CPU pools]  (k_i-gated
-//!                                    workers, sched-core queues)
-//!   detach(h) ──► queued jobs fail cleanly; stats retire under h
+//!   clients ──submit(h, Request)──► [bounded admission]  (queue-cap +
+//!        │ Ticket                    OverloadPolicy: reject/shed/deadline)
+//!        ▼                              │
+//!   wait / try_wait /        router ──► [TPU worker thread]  (sched-core
+//!   wait_timeout / cancel       │        queue — FIFO/priority/WFQ/SPSF —
+//!                               │        SRAM cache + swap emulation,
+//!                               │        executes prefix via the exec service)
+//!                               │              │ boundary tensor
+//!                               └──────────────▼
+//!                                     [per-tenant CPU pools]  (k_i-gated
+//!                                      workers, bounded sched-core queues)
+//!   detach(h) ──► queued jobs fail with typed errors; stats retire under h
 //! ```
 //!
 //! The tenant set is dynamic: [`Server::attach`] admits a model at runtime
@@ -43,10 +46,12 @@
 //! enforced with virtual-time sleeps scaled by `time_scale` (DESIGN.md §3).
 
 pub mod pools;
+pub mod request;
 pub mod server;
 
 pub use pools::CpuPools;
+pub use request::{CancelToken, Completion, Request, RequestError, Ticket};
 pub use server::{
-    AttachError, AttachOptions, Completion, ConfigError, ServeStats, Server, ServerBuilder,
-    ServerOptions, TenantStats,
+    AttachError, AttachOptions, ConfigError, ServeStats, Server, ServerBuilder, ServerOptions,
+    TenantStats,
 };

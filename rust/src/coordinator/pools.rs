@@ -1,4 +1,5 @@
-//! Per-tenant CPU executor pools with dynamically adjustable core gates.
+//! Per-tenant CPU executor pools with dynamically adjustable core gates
+//! and a bounded admission layer.
 //!
 //! Each tenant owns an independent queue ordered by the shared
 //! [`crate::sched`] core (the paper's performance-isolation design ran
@@ -9,20 +10,32 @@
 //! reallocation is a single atomic store, not a thread spawn/join (this
 //! is what makes <2 ms reconfiguration possible). Pools are keyed by
 //! stable [`TenantHandle`]s and created / destroyed at tenant attach /
-//! detach: removing a pool fails its queued jobs cleanly ("tenant
-//! detached") while in-flight jobs finish; the worker threads are reaped
-//! when the pools object drops.
+//! detach: removing a pool fails its queued jobs with the typed
+//! [`RequestError::Detached`] while in-flight jobs finish; the worker
+//! threads are reaped when the pools object drops.
+//!
+//! Admission is bounded per station: [`CpuPools::submit`] offers the job
+//! through [`SchedQueue::offer`] against the pool's capacity and
+//! [`OverloadPolicy`] — the *same* admission code the DES's CPU stations
+//! run — and every refused or evicted job resolves its completion
+//! callback with a typed [`RequestError`], never a silent drop. Workers
+//! additionally drain deadline-hopeless jobs before each service start
+//! under `DeadlineDrop`, and honor request cancellation tokens before
+//! execution.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-
-use anyhow::anyhow;
+use std::time::Instant;
 
 use crate::analytic::TenantHandle;
 use crate::model::ModelMeta;
-use crate::sched::{DisciplineKind, JobMeta, SchedQueue};
+use crate::sched::{
+    DisciplineKind, JobMeta, Offer, OverloadPolicy, RejectReason, SchedQueue, StationLoad,
+};
+
+use super::request::{CancelToken, RequestError};
 
 /// A unit of CPU suffix work.
 pub struct CpuJob {
@@ -32,8 +45,11 @@ pub struct CpuJob {
     /// Partition point at admission time (suffix = segments [p, P)).
     pub p: usize,
     pub input: Vec<f32>,
-    /// Called with the final output on completion (or the failure).
-    pub done: Box<dyn FnOnce(anyhow::Result<Vec<f32>>) + Send>,
+    /// Cancellation token of the originating request; checked before
+    /// execution starts.
+    pub cancel: CancelToken,
+    /// Called with the final output on completion (or the typed failure).
+    pub done: Box<dyn FnOnce(Result<Vec<f32>, RequestError>) + Send>,
 }
 
 struct PoolShared {
@@ -44,6 +60,12 @@ struct PoolShared {
     /// Currently executing workers.
     active: AtomicUsize,
     shutdown: AtomicBool,
+    /// Station clock origin (shared with the server), for deadlines.
+    started: Instant,
+    policy: OverloadPolicy,
+    /// Station label for typed rejections (computed once per pool — the
+    /// submit hot path never allocates it).
+    station: String,
 }
 
 struct PoolEntry {
@@ -56,6 +78,10 @@ type ExecFn = dyn Fn(&ModelMeta, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + 
 pub struct CpuPools {
     k_max: usize,
     discipline: DisciplineKind,
+    /// Bounded-admission settings applied to every tenant's queue.
+    capacity: Option<usize>,
+    policy: OverloadPolicy,
+    started: Instant,
     exec: Arc<ExecFn>,
     pools: Mutex<HashMap<TenantHandle, PoolEntry>>,
     /// Worker threads of removed pools, joined on drop.
@@ -65,14 +91,26 @@ pub struct CpuPools {
 impl CpuPools {
     /// Create an empty pool set. `exec` runs a suffix (it submits to the
     /// executor-service thread); `k_max` workers are spawned per attached
-    /// tenant, each pool's queue ordered by `discipline`.
-    pub fn new<F>(k_max: usize, discipline: DisciplineKind, exec: F) -> CpuPools
+    /// tenant, each pool's queue ordered by `discipline` and admission
+    /// bounded by `capacity`/`policy`. `started` is the clock origin that
+    /// absolute job deadlines are measured against (the server's).
+    pub fn new<F>(
+        k_max: usize,
+        discipline: DisciplineKind,
+        capacity: Option<usize>,
+        policy: OverloadPolicy,
+        started: Instant,
+        exec: F,
+    ) -> CpuPools
     where
         F: Fn(&ModelMeta, usize, Vec<f32>) -> anyhow::Result<Vec<f32>> + Send + Sync + 'static,
     {
         CpuPools {
             k_max,
             discipline,
+            capacity,
+            policy,
+            started,
             exec: Arc::new(exec),
             pools: Mutex::new(HashMap::new()),
             retired: Mutex::new(Vec::new()),
@@ -87,6 +125,9 @@ impl CpuPools {
             allowed: AtomicUsize::new(0),
             active: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
+            started: self.started,
+            policy: self.policy,
+            station: format!("cpu {h}"),
         });
         let mut workers = Vec::new();
         for w in 0..self.k_max.max(1) {
@@ -105,8 +146,8 @@ impl CpuPools {
             .insert(h, PoolEntry { shared, workers });
     }
 
-    /// Tear down a tenant's pool: queued jobs fail cleanly with a
-    /// "detached" error, in-flight jobs finish, and the workers wind down
+    /// Tear down a tenant's pool: queued jobs fail with the typed
+    /// `Detached` error, in-flight jobs finish, and the workers wind down
     /// (their join handles are reaped when the pools object drops).
     pub fn remove_pool(&self, h: TenantHandle) {
         let entry = self.pools.lock().unwrap().remove(&h);
@@ -124,43 +165,70 @@ impl CpuPools {
         entry.shared.cv.notify_all();
         self.retired.lock().unwrap().append(&mut entry.workers);
         for job in drained {
-            (job.done)(Err(anyhow!("{h} detached before its job ran")));
+            (job.done)(Err(RequestError::Detached(h)));
         }
     }
 
-    /// Enqueue a suffix job for `h` with its scheduling metadata (SLO
-    /// class + predicted suffix service time). If the tenant has no pool
-    /// (detached, or detaching concurrently), the job fails cleanly
-    /// through its completion callback — submitters racing a detach never
-    /// panic and never hang: the shutdown flag is re-checked under the
-    /// queue lock, so a job can never land in a queue whose workers
-    /// already exited (remove_pool stores the flag before draining).
-    pub fn submit(&self, h: TenantHandle, meta: JobMeta, job: CpuJob) {
+    /// Offer a suffix job for `h` through the bounded admission layer.
+    /// Returns `true` when the job was enqueued. Every other outcome —
+    /// no pool (detached), full queue (`Reject`), no sheddable victim,
+    /// hopeless deadline — resolves the job's completion callback with
+    /// the typed [`RequestError`] before returning; evicted victims are
+    /// resolved the same way. Submitters racing a detach never panic and
+    /// never hang: the shutdown flag is re-checked under the queue lock,
+    /// so a job can never land in a queue whose workers already exited
+    /// (remove_pool stores the flag before draining).
+    pub fn submit(&self, h: TenantHandle, meta: JobMeta, job: CpuJob) -> bool {
         let shared = self
             .pools
             .lock()
             .unwrap()
             .get(&h)
             .map(|e| e.shared.clone());
-        match shared {
-            Some(s) => {
-                let rejected = {
-                    let mut q = s.queue.lock().unwrap();
-                    if s.shutdown.load(Ordering::SeqCst) {
-                        Some(job)
-                    } else {
-                        q.push(meta, job);
-                        None
-                    }
+        let Some(s) = shared else {
+            (job.done)(Err(RequestError::NotAttached(h)));
+            return false;
+        };
+        let now = self.started.elapsed().as_secs_f64();
+        let outcome = {
+            let mut q = s.queue.lock().unwrap();
+            if s.shutdown.load(Ordering::SeqCst) {
+                Err(job)
+            } else {
+                let load = StationLoad {
+                    in_service: s.active.load(Ordering::SeqCst),
+                    servers: s.allowed.load(Ordering::SeqCst).max(1),
                 };
-                match rejected {
-                    None => s.cv.notify_one(),
-                    Some(job) => {
-                        (job.done)(Err(anyhow!("{h} detached before its job ran")))
-                    }
-                }
+                Ok(q.offer(meta, job, now, &s.station, self.capacity, self.policy, load))
             }
-            None => (job.done)(Err(anyhow!("{h} is not attached"))),
+        };
+        match outcome {
+            Err(job) => {
+                // Raced a detach between the map lookup and the lock.
+                (job.done)(Err(RequestError::Detached(h)));
+                false
+            }
+            Ok(Offer::Admitted { shed, expired }) => {
+                s.cv.notify_one();
+                resolve_evictions(now, &s.station, shed, expired);
+                true
+            }
+            Ok(Offer::Rejected {
+                meta,
+                job,
+                reason,
+                expired,
+            }) => {
+                resolve_evictions(now, &s.station, Vec::new(), expired);
+                match reason {
+                    RejectReason::Overloaded(o) => (job.done)(Err(RequestError::Overloaded(o))),
+                    RejectReason::Expired => (job.done)(Err(RequestError::DeadlineExceeded {
+                        deadline_s: meta.deadline.unwrap_or(now),
+                        now_s: now,
+                    })),
+                }
+                false
+            }
         }
     }
 
@@ -195,13 +263,42 @@ impl CpuPools {
     }
 }
 
+/// Fail evicted jobs with their typed reasons (outside any queue lock).
+fn resolve_evictions(
+    now: f64,
+    station: &str,
+    shed: Vec<(JobMeta, CpuJob)>,
+    expired: Vec<(JobMeta, CpuJob)>,
+) {
+    for (_, job) in shed {
+        (job.done)(Err(RequestError::Shed {
+            station: station.to_string(),
+        }));
+    }
+    for (meta, job) in expired {
+        (job.done)(Err(RequestError::DeadlineExceeded {
+            deadline_s: meta.deadline.unwrap_or(now),
+            now_s: now,
+        }));
+    }
+}
+
 fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
     loop {
-        let job = {
+        let (job, expired) = {
             let mut q = s.queue.lock().unwrap();
             loop {
                 if s.shutdown.load(Ordering::SeqCst) {
                     return;
+                }
+                // Deadline-hopeless jobs never reach execution: drained
+                // here (and failed below, outside the lock) before the
+                // pop decision — the DES's CPU stations apply the same
+                // rule at service start.
+                let mut expired_jobs = Vec::new();
+                if s.policy == OverloadPolicy::DeadlineDrop && !q.is_empty() {
+                    let now = s.started.elapsed().as_secs_f64();
+                    expired_jobs = q.drain_expired(now);
                 }
                 // Straggler drain: if k dropped to 0 with queued work, one
                 // borrowed slot keeps requests from deadlocking (matches
@@ -209,19 +306,38 @@ fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
                 let allowed = s.allowed.load(Ordering::SeqCst).max(usize::from(!q.is_empty()));
                 if !q.is_empty() && s.active.load(Ordering::SeqCst) < allowed {
                     s.active.fetch_add(1, Ordering::SeqCst);
-                    break q.pop().unwrap().1;
+                    break (Some(q.pop().unwrap().1), expired_jobs);
+                }
+                if !expired_jobs.is_empty() {
+                    break (None, expired_jobs);
                 }
                 q = s.cv.wait(q).unwrap();
             }
         };
+        if !expired.is_empty() {
+            let now = s.started.elapsed().as_secs_f64();
+            for (meta, j) in expired {
+                (j.done)(Err(RequestError::DeadlineExceeded {
+                    deadline_s: meta.deadline.unwrap_or(now),
+                    now_s: now,
+                }));
+            }
+        }
+        let Some(job) = job else { continue };
         let CpuJob {
             meta,
             p,
             input,
+            cancel,
             done,
         } = job;
-        let result = exec(&meta, p, input);
-        done(result);
+        if cancel.is_cancelled() {
+            done(Err(RequestError::Cancelled));
+        } else {
+            let result = exec(&meta, p, input)
+                .map_err(|e| RequestError::Execution(e.to_string()));
+            done(result);
+        }
         s.active.fetch_sub(1, Ordering::SeqCst);
         s.cv.notify_one();
     }
@@ -238,6 +354,11 @@ impl Drop for CpuPools {
             for w in entry.workers {
                 let _ = w.join();
             }
+            // Deliver the typed shutdown error on every still-queued job
+            // before its sender drops (workers are gone; no lock races).
+            for (_, job) in entry.shared.queue.lock().unwrap().drain_all() {
+                (job.done)(Err(RequestError::Shutdown));
+            }
         }
         drop(pools);
         for w in self.retired.lock().unwrap().drain(..) {
@@ -250,30 +371,50 @@ impl Drop for CpuPools {
 mod tests {
     use super::*;
     use crate::model::synthetic_model;
+    use crate::sched::SloClass;
     use std::sync::mpsc;
+    use std::time::Duration;
 
     fn meta() -> Arc<ModelMeta> {
         Arc::new(synthetic_model("m", 4, 1_000_000, 100_000_000))
     }
 
-    fn job_meta(h: TenantHandle, class: crate::sched::SloClass) -> JobMeta {
+    fn job_meta(h: TenantHandle, class: SloClass) -> JobMeta {
         JobMeta {
             tenant: h,
             class,
             service_hint: 1e-3,
+            deadline: None,
         }
     }
 
     fn std_meta(h: TenantHandle) -> JobMeta {
-        job_meta(h, crate::sched::SloClass::Standard)
+        job_meta(h, SloClass::Standard)
     }
 
     fn echo_pools(handles: &[TenantHandle], k: usize) -> CpuPools {
-        let pools = CpuPools::new(k, DisciplineKind::Fifo, |_meta, _p, input| Ok(input));
+        let pools = CpuPools::new(
+            k,
+            DisciplineKind::Fifo,
+            None,
+            OverloadPolicy::Block,
+            Instant::now(),
+            |_meta, _p, input| Ok(input),
+        );
         for h in handles {
             pools.add_pool(*h);
         }
         pools
+    }
+
+    fn echo_job(input: Vec<f32>, done: Box<dyn FnOnce(Result<Vec<f32>, RequestError>) + Send>) -> CpuJob {
+        CpuJob {
+            meta: meta(),
+            p: 0,
+            input,
+            cancel: CancelToken::new(),
+            done,
+        }
     }
 
     #[test]
@@ -283,19 +424,16 @@ mod tests {
         let pools = echo_pools(&[h0, h1], 2);
         pools.set_cores(&[(h0, 1), (h1, 1)]);
         let (tx, rx) = mpsc::channel();
-        let m = meta();
         for i in 0..10 {
             let tx = tx.clone();
             let h = if i % 2 == 0 { h0 } else { h1 };
             pools.submit(
                 h,
                 std_meta(h),
-                CpuJob {
-                    meta: m.clone(),
-                    p: 0,
-                    input: vec![i as f32],
-                    done: Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
-                },
+                echo_job(
+                    vec![i as f32],
+                    Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
+                ),
             );
         }
         let mut got: Vec<f32> = (0..10).map(|_| rx.recv().unwrap()).collect();
@@ -309,28 +447,29 @@ mod tests {
         static PEAK: AtomicUsize = AtomicUsize::new(0);
         static CUR: AtomicUsize = AtomicUsize::new(0);
         let h = TenantHandle(7);
-        let pools = CpuPools::new(4, DisciplineKind::Fifo, |_meta, _p, input| {
-            let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
-            PEAK.fetch_max(c, Ordering::SeqCst);
-            std::thread::sleep(std::time::Duration::from_millis(20));
-            CUR.fetch_sub(1, Ordering::SeqCst);
-            Ok(input)
-        });
+        let pools = CpuPools::new(
+            4,
+            DisciplineKind::Fifo,
+            None,
+            OverloadPolicy::Block,
+            Instant::now(),
+            |_meta, _p, input| {
+                let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
+                PEAK.fetch_max(c, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(20));
+                CUR.fetch_sub(1, Ordering::SeqCst);
+                Ok(input)
+            },
+        );
         pools.add_pool(h);
         pools.set_cores(&[(h, 2)]);
         let (tx, rx) = mpsc::channel();
-        let m = meta();
         for _ in 0..8 {
             let tx = tx.clone();
             pools.submit(
                 h,
                 std_meta(h),
-                CpuJob {
-                    meta: m.clone(),
-                    p: 0,
-                    input: vec![0.0],
-                    done: Box::new(move |_| tx.send(()).unwrap()),
-                },
+                echo_job(vec![0.0], Box::new(move |_| tx.send(()).unwrap())),
             );
         }
         for _ in 0..8 {
@@ -348,36 +487,153 @@ mod tests {
         pools.submit(
             h,
             std_meta(h),
-            CpuJob {
-                meta: meta(),
-                p: 0,
-                input: vec![7.0],
-                done: Box::new(move |r| tx.send(r.unwrap()[0]).unwrap()),
-            },
+            echo_job(vec![7.0], Box::new(move |r| tx.send(r.unwrap()[0]).unwrap())),
         );
-        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(2)).unwrap(), 7.0);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), 7.0);
     }
 
     #[test]
     fn submit_to_missing_pool_fails_cleanly() {
         let pools = echo_pools(&[], 2);
         let (tx, rx) = mpsc::channel();
-        pools.submit(
+        let admitted = pools.submit(
             TenantHandle(9),
             std_meta(TenantHandle(9)),
+            echo_job(
+                vec![1.0],
+                Box::new(move |r| {
+                    tx.send(matches!(r, Err(RequestError::NotAttached(_)))).unwrap()
+                }),
+            ),
+        );
+        assert!(!admitted);
+        assert!(rx.recv().unwrap(), "job against missing pool must error typed");
+    }
+
+    #[test]
+    fn reject_policy_bounds_queue_and_types_error() {
+        // One gated worker blocks on the first job; capacity 2 with
+        // Reject: beyond queued+in-flight = 2 every submit is refused
+        // with a typed Overloaded carrying depth and the wait estimate.
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = gate.clone();
+        let h = TenantHandle(4);
+        let pools = CpuPools::new(
+            1,
+            DisciplineKind::Fifo,
+            Some(2),
+            OverloadPolicy::Reject,
+            Instant::now(),
+            move |_meta, _p, input| {
+                while !g.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(input)
+            },
+        );
+        pools.add_pool(h);
+        pools.set_cores(&[(h, 1)]);
+        let (tx, rx) = mpsc::channel();
+        let mut admitted = 0;
+        for i in 0..6 {
+            let tx = tx.clone();
+            if pools.submit(
+                h,
+                std_meta(h),
+                echo_job(
+                    vec![i as f32],
+                    Box::new(move |r| tx.send(r.map_err(|e| format!("{e}"))).unwrap()),
+                ),
+            ) {
+                admitted += 1;
+            }
+            // Let the worker pick up the first job so in-service counts.
+            if i == 0 {
+                let deadline = Instant::now() + Duration::from_secs(2);
+                while pools.active(h) == 0 && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        // In-flight blocker + at most 2 occupancy: 2 admitted, 4 refused
+        // (the refusals resolved synchronously through their callbacks).
+        assert_eq!(admitted, 2, "cap 2 must admit exactly 2");
+        let mut rejected = 0;
+        for _ in 0..4 {
+            let r = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            let e = r.expect_err("refused job must error");
+            assert!(e.contains("overloaded"), "unexpected error: {e}");
+            rejected += 1;
+        }
+        assert_eq!(rejected, 4);
+        gate.store(true, Ordering::SeqCst);
+        for _ in 0..2 {
+            rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn cancelled_job_skips_execution() {
+        use std::sync::atomic::AtomicUsize;
+        let h = TenantHandle(6);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let gate = Arc::new(AtomicBool::new(false));
+        let ran2 = ran.clone();
+        let g = gate.clone();
+        let pools = CpuPools::new(
+            1,
+            DisciplineKind::Fifo,
+            None,
+            OverloadPolicy::Block,
+            Instant::now(),
+            move |_meta, _p, input| {
+                ran2.fetch_add(1, Ordering::SeqCst);
+                while !g.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(input)
+            },
+        );
+        pools.add_pool(h);
+        pools.set_cores(&[(h, 1)]);
+        let (tx, rx) = mpsc::channel();
+        // First job occupies the single worker (blocked on the gate); the
+        // second is cancelled while still queued, so it must resolve with
+        // Cancelled without ever reaching the exec closure.
+        let tx1 = tx.clone();
+        pools.submit(
+            h,
+            std_meta(h),
+            echo_job(vec![1.0], Box::new(move |r| tx1.send(r.is_ok()).unwrap())),
+        );
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while ran.load(Ordering::SeqCst) == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let cancel = CancelToken::new();
+        let tx2 = tx.clone();
+        pools.submit(
+            h,
+            std_meta(h),
             CpuJob {
                 meta: meta(),
                 p: 0,
-                input: vec![1.0],
-                done: Box::new(move |r| tx.send(r.is_err()).unwrap()),
+                input: vec![2.0],
+                cancel: cancel.clone(),
+                done: Box::new(move |r| {
+                    tx2.send(matches!(r, Err(RequestError::Cancelled))).unwrap()
+                }),
             },
         );
-        assert!(rx.recv().unwrap(), "job against missing pool must error");
+        cancel.cancel();
+        gate.store(true, Ordering::SeqCst);
+        assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap());
+        assert!(rx.recv_timeout(Duration::from_secs(2)).unwrap());
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "cancelled job must not execute");
     }
 
     #[test]
     fn priority_discipline_reorders_queued_jobs() {
-        use crate::sched::SloClass;
         // One gated worker; the first job blocks on `gate` while the rest
         // queue up, so the pop order is the discipline's to choose:
         // strict priority must serve the interactive job before the batch
@@ -389,46 +645,50 @@ mod tests {
         let g = gate.clone();
         let s = started.clone();
         let h = TenantHandle(5);
-        let pools = CpuPools::new(1, DisciplineKind::Priority, move |_meta, _p, input| {
-            if input[0] < 0.0 {
-                s.store(true, Ordering::SeqCst);
-                while !g.load(Ordering::SeqCst) {
-                    std::thread::sleep(std::time::Duration::from_millis(1));
+        let pools = CpuPools::new(
+            1,
+            DisciplineKind::Priority,
+            None,
+            OverloadPolicy::Block,
+            Instant::now(),
+            move |_meta, _p, input| {
+                if input[0] < 0.0 {
+                    s.store(true, Ordering::SeqCst);
+                    while !g.load(Ordering::SeqCst) {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
                 }
-            }
-            Ok(input)
-        });
+                Ok(input)
+            },
+        );
         pools.add_pool(h);
         pools.set_cores(&[(h, 1)]);
         let order = Arc::new(Mutex::new(Vec::<f32>::new()));
         let (tx, rx) = mpsc::channel();
-        let m = meta();
         let submit = |class: SloClass, v: f32| {
             let order = order.clone();
             let tx = tx.clone();
             pools.submit(
                 h,
                 job_meta(h, class),
-                CpuJob {
-                    meta: m.clone(),
-                    p: 0,
-                    input: vec![v],
-                    done: Box::new(move |r| {
+                echo_job(
+                    vec![v],
+                    Box::new(move |r| {
                         order.lock().unwrap().push(r.unwrap()[0]);
                         tx.send(()).unwrap();
                     }),
-                },
+                ),
             );
         };
         submit(SloClass::Standard, -1.0); // blocker
         while !started.load(Ordering::SeqCst) {
-            std::thread::sleep(std::time::Duration::from_millis(1));
+            std::thread::sleep(Duration::from_millis(1));
         }
         submit(SloClass::Batch, 1.0);
         submit(SloClass::Interactive, 2.0);
         gate.store(true, Ordering::SeqCst);
         for _ in 0..3 {
-            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
         }
         assert_eq!(*order.lock().unwrap(), vec![-1.0, 2.0, 1.0]);
     }
@@ -437,10 +697,17 @@ mod tests {
     fn remove_pool_fails_queued_jobs_and_keeps_peers() {
         let ha = TenantHandle(1);
         let hb = TenantHandle(2);
-        let pools = CpuPools::new(2, DisciplineKind::Fifo, |_meta, _p, input| {
-            std::thread::sleep(std::time::Duration::from_millis(5));
-            Ok(input)
-        });
+        let pools = CpuPools::new(
+            2,
+            DisciplineKind::Fifo,
+            None,
+            OverloadPolicy::Block,
+            Instant::now(),
+            |_meta, _p, input| {
+                std::thread::sleep(Duration::from_millis(5));
+                Ok(input)
+            },
+        );
         pools.add_pool(ha);
         pools.add_pool(hb);
         // a gets no cores, so its queue holds everything we submit.
@@ -448,36 +715,34 @@ mod tests {
         // (the borrowed-slot drain rule serves one at a time anyway, so
         // queue several to guarantee some are still queued at removal)
         let (tx, rx) = mpsc::channel();
-        let m = meta();
         for _ in 0..16 {
             let tx = tx.clone();
             pools.submit(
                 ha,
                 std_meta(ha),
-                CpuJob {
-                    meta: m.clone(),
-                    p: 0,
-                    input: vec![1.0],
-                    done: Box::new(move |r| tx.send(r.is_ok()).unwrap()),
-                },
+                echo_job(
+                    vec![1.0],
+                    Box::new(move |r| {
+                        let detached = matches!(&r, Err(RequestError::Detached(_)));
+                        tx.send((r.is_ok(), detached)).unwrap()
+                    }),
+                ),
             );
         }
         pools.remove_pool(ha);
-        let results: Vec<bool> = (0..16).map(|_| rx.recv().unwrap()).collect();
-        assert!(results.iter().any(|ok| !ok), "queued jobs must fail cleanly");
+        let results: Vec<(bool, bool)> = (0..16).map(|_| rx.recv().unwrap()).collect();
+        assert!(
+            results.iter().any(|(ok, detached)| !ok && *detached),
+            "queued jobs must fail with the typed Detached error"
+        );
         // Peer pool is unaffected.
         let (tx2, rx2) = mpsc::channel();
         pools.submit(
             hb,
             std_meta(hb),
-            CpuJob {
-                meta: m,
-                p: 0,
-                input: vec![5.0],
-                done: Box::new(move |r| tx2.send(r.unwrap()[0]).unwrap()),
-            },
+            echo_job(vec![5.0], Box::new(move |r| tx2.send(r.unwrap()[0]).unwrap())),
         );
-        assert_eq!(rx2.recv_timeout(std::time::Duration::from_secs(2)).unwrap(), 5.0);
+        assert_eq!(rx2.recv_timeout(Duration::from_secs(2)).unwrap(), 5.0);
         // Double-remove is a no-op.
         pools.remove_pool(ha);
     }

@@ -1,0 +1,284 @@
+//! The request lifecycle: a [`Request`] descriptor goes in, a [`Ticket`]
+//! completion handle comes out.
+//!
+//! This replaces the old fire-hose (`submit` returning a raw `Receiver`)
+//! with a first-class lifecycle:
+//!
+//! * a [`Request`] carries the input, an optional [`SloClass`] override,
+//!   an optional **deadline** (relative to submission), and a
+//!   [`CancelToken`];
+//! * [`Server::submit`](super::Server::submit) resolves admission
+//!   synchronously against the station's bounded queue
+//!   ([`OverloadPolicy`](crate::sched::OverloadPolicy)) and returns a
+//!   [`Ticket`] either way — rejections resolve immediately with the
+//!   typed [`RequestError`];
+//! * the [`Ticket`] supports blocking [`wait`](Ticket::wait),
+//!   non-blocking [`try_wait`](Ticket::try_wait), bounded
+//!   [`wait_timeout`](Ticket::wait_timeout), and best-effort
+//!   [`cancel`](Ticket::cancel) (a cancelled request that has not started
+//!   executing resolves with [`RequestError::Cancelled`]).
+//!
+//! Every worker exit path delivers a typed error before its sender drops,
+//! so a ticket never resolves with an anonymous "server dropped request".
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::analytic::TenantHandle;
+use crate::sched::{Overloaded, SloClass};
+
+/// Best-effort cancellation handle shared between a [`Request`], its
+/// [`Ticket`], and the workers. Cancelling is a single atomic store;
+/// workers check it before starting execution, so a request already on
+/// the device still completes normally.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// A request descriptor: what to run, how urgent it is, and how long the
+/// caller is willing to wait. `Vec<f32>` converts directly for the common
+/// case: `server.submit(h, input)`.
+#[derive(Debug, Clone, Default)]
+pub struct Request {
+    pub input: Vec<f32>,
+    /// Override of the tenant's default SLO class for this request.
+    pub class: Option<SloClass>,
+    /// Completion deadline relative to submission. Under the
+    /// `DeadlineDrop` overload policy a request that can no longer meet
+    /// it is dropped (typed [`RequestError::DeadlineExceeded`]); under
+    /// every policy late completions are excluded from goodput.
+    pub deadline: Option<Duration>,
+    cancel: CancelToken,
+}
+
+impl Request {
+    pub fn new(input: Vec<f32>) -> Request {
+        Request {
+            input,
+            ..Request::default()
+        }
+    }
+
+    pub fn with_class(mut self, class: SloClass) -> Request {
+        self.class = Some(class);
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// The token that cancels this request; clone it to cancel from a
+    /// different thread than the one holding the [`Ticket`].
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+}
+
+impl From<Vec<f32>> for Request {
+    fn from(input: Vec<f32>) -> Request {
+        Request::new(input)
+    }
+}
+
+/// Why a request did not complete. Every variant is delivered through the
+/// [`Ticket`] — the job's real failure is never flattened into a generic
+/// channel error.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestError {
+    /// The handle was never attached (or already fully detached) at
+    /// submission.
+    NotAttached(TenantHandle),
+    /// The tenant detached while the request was queued.
+    Detached(TenantHandle),
+    /// Cancelled via its [`CancelToken`] before execution started.
+    Cancelled,
+    /// The deadline could no longer be met (`DeadlineDrop` eviction, or
+    /// already hopeless at submission).
+    DeadlineExceeded { deadline_s: f64, now_s: f64 },
+    /// A bounded station refused the request (typed backpressure).
+    Overloaded(Overloaded),
+    /// Evicted from a full queue by a higher-class arrival
+    /// (`ShedLowClass`).
+    Shed { station: String },
+    /// The execution substrate failed.
+    Execution(String),
+    /// The server shut down with the request still queued.
+    Shutdown,
+    /// The completion channel closed without a result (a bug if it ever
+    /// surfaces — every worker exit path sends a typed error first).
+    ChannelClosed,
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::NotAttached(h) => write!(f, "{h} is not attached"),
+            RequestError::Detached(h) => write!(f, "{h} detached before its job ran"),
+            RequestError::Cancelled => write!(f, "request cancelled"),
+            RequestError::DeadlineExceeded { deadline_s, now_s } => write!(
+                f,
+                "deadline exceeded: t={deadline_s:.3}s passed at t={now_s:.3}s"
+            ),
+            RequestError::Overloaded(o) => write!(f, "{o}"),
+            RequestError::Shed { station } => {
+                write!(f, "shed from {station} by a higher-class request")
+            }
+            RequestError::Execution(e) => write!(f, "execution failed: {e}"),
+            RequestError::Shutdown => write!(f, "server shut down with the request queued"),
+            RequestError::ChannelClosed => write!(f, "completion channel closed"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// One finished request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub tenant: TenantHandle,
+    pub latency_s: f64,
+    pub output: Vec<f32>,
+}
+
+/// Completion handle for one submitted request.
+///
+/// A resolved ticket caches its result, so `try_wait`/`wait_timeout` can
+/// be polled repeatedly and a final `wait` never blocks after resolution.
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<Completion, RequestError>>,
+    cancel: CancelToken,
+    tenant: TenantHandle,
+    result: Option<Result<Completion, RequestError>>,
+}
+
+impl Ticket {
+    pub(crate) fn new(
+        rx: mpsc::Receiver<Result<Completion, RequestError>>,
+        cancel: CancelToken,
+        tenant: TenantHandle,
+    ) -> Ticket {
+        Ticket {
+            rx,
+            cancel,
+            tenant,
+            result: None,
+        }
+    }
+
+    pub fn tenant(&self) -> TenantHandle {
+        self.tenant
+    }
+
+    /// Request cancellation (best effort — see [`CancelToken`]).
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Block until the request resolves.
+    pub fn wait(mut self) -> Result<Completion, RequestError> {
+        if let Some(r) = self.result.take() {
+            return r;
+        }
+        self.rx.recv().unwrap_or(Err(RequestError::ChannelClosed))
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&mut self) -> Option<Result<Completion, RequestError>> {
+        if self.result.is_none() {
+            match self.rx.try_recv() {
+                Ok(r) => self.result = Some(r),
+                Err(mpsc::TryRecvError::Empty) => return None,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    self.result = Some(Err(RequestError::ChannelClosed));
+                }
+            }
+        }
+        self.result.clone()
+    }
+
+    /// Block up to `timeout`; `None` means the request is still in
+    /// flight (the ticket stays usable).
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<Completion, RequestError>> {
+        if self.result.is_none() {
+            match self.rx.recv_timeout(timeout) {
+                Ok(r) => self.result = Some(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => return None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    self.result = Some(Err(RequestError::ChannelClosed));
+                }
+            }
+        }
+        self.result.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resolved(result: Result<Completion, RequestError>) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        tx.send(result).unwrap();
+        Ticket::new(rx, CancelToken::new(), TenantHandle(0))
+    }
+
+    #[test]
+    fn ticket_caches_result_across_polls() {
+        let mut t = resolved(Err(RequestError::Cancelled));
+        assert_eq!(t.try_wait(), Some(Err(RequestError::Cancelled)));
+        // Polling again after resolution keeps returning the result.
+        assert_eq!(t.try_wait(), Some(Err(RequestError::Cancelled)));
+        assert_eq!(
+            t.wait_timeout(Duration::from_millis(1)),
+            Some(Err(RequestError::Cancelled))
+        );
+        assert_eq!(t.wait(), Err(RequestError::Cancelled));
+    }
+
+    #[test]
+    fn ticket_pending_then_closed() {
+        let (tx, rx) = mpsc::channel::<Result<Completion, RequestError>>();
+        let mut t = Ticket::new(rx, CancelToken::new(), TenantHandle(3));
+        assert_eq!(t.tenant(), TenantHandle(3));
+        assert_eq!(t.try_wait(), None);
+        assert_eq!(t.wait_timeout(Duration::from_millis(1)), None);
+        drop(tx);
+        assert_eq!(t.wait(), Err(RequestError::ChannelClosed));
+    }
+
+    #[test]
+    fn request_builder_and_token() {
+        let req = Request::new(vec![1.0])
+            .with_class(SloClass::Interactive)
+            .with_deadline(Duration::from_millis(50));
+        assert_eq!(req.class, Some(SloClass::Interactive));
+        assert_eq!(req.deadline, Some(Duration::from_millis(50)));
+        let token = req.cancel_token();
+        assert!(!token.is_cancelled());
+        token.cancel();
+        assert!(req.cancel_token().is_cancelled());
+        let from: Request = vec![2.0].into();
+        assert_eq!(from.input, vec![2.0]);
+        assert_eq!(from.class, None);
+    }
+}

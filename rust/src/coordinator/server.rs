@@ -28,16 +28,28 @@
 //! Queueing order is likewise shared with the DES: the TPU worker's queue
 //! and every tenant's CPU pool run a [`crate::sched`] discipline selected
 //! by [`ServerOptions::discipline`] (`--discipline` on the CLI). Tenants
-//! declare an [`SloClass`] at attach (overridable per request via
-//! [`Server::submit_with_class`]), and completions are accounted per
-//! class in [`ServeStats::per_class`].
+//! declare an [`SloClass`] at attach (overridable per request), and
+//! completions are accounted per class in [`ServeStats::per_class`].
+//!
+//! The request path is a first-class lifecycle ([`super::request`]):
+//! [`Server::submit`] takes a [`Request`] (input + class override +
+//! deadline + cancellation token) and returns a [`Ticket`]. Every station
+//! runs a **bounded admission layer** ([`ServerOptions::queue_capacity`]
+//! + [`ServerOptions::overload`], `--queue-cap`/`--overload` on the CLI)
+//! through the same [`SchedQueue::offer`] code the DES stations run, so
+//! drop behavior validated in simulation holds live: `Reject` refuses
+//! work with a typed [`Overloaded`](crate::sched::Overloaded) carrying
+//! the O(1) prefix-table wait estimate, `ShedLowClass` evicts the newest
+//! lower-class job, and `DeadlineDrop` evicts jobs whose deadline can no
+//! longer be met. Per-class accept/drop/goodput counters surface in
+//! [`ServeStats`].
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::alloc::{self, AdmissionError};
 use crate::analytic::{AnalyticModel, Config, Tenant, TenantHandle};
@@ -45,11 +57,15 @@ use crate::config::RuntimeConfig;
 use crate::metrics::{LatencyHistogram, PerClassLatency};
 use crate::model::{Manifest, ModelMeta};
 use crate::runtime::service::{ExecBackend, ExecHandle, ExecService};
-use crate::sched::{DisciplineKind, JobMeta, SchedQueue, SloClass};
+use crate::sched::{
+    DisciplineKind, JobMeta, Offer, OverloadPolicy, RejectReason, SchedQueue, SloClass,
+    StationLoad,
+};
 use crate::sim::reconfig::{ReconfigPolicy, StaticPolicy, SwapLessPolicy};
 use crate::tpu::{CostModel, PrefixTables, SramCache};
 
 use super::pools::{CpuJob, CpuPools};
+use super::request::{CancelToken, Completion, Request, RequestError, Ticket};
 
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
@@ -65,6 +81,13 @@ pub struct ServerOptions {
     /// Scheduling discipline for the TPU worker queue and every tenant's
     /// CPU pool — the same `sched` core the DES runs.
     pub discipline: DisciplineKind,
+    /// Bound on each station's occupancy (queued + in-service). `None` =
+    /// unbounded (the legacy fire-hose). Ignored under
+    /// [`OverloadPolicy::Block`].
+    pub queue_capacity: Option<usize>,
+    /// What a full station does — the same policy set the DES runs
+    /// ([`crate::sim::SimOptions::overload`]).
+    pub overload: OverloadPolicy,
 }
 
 impl Default for ServerOptions {
@@ -76,6 +99,8 @@ impl Default for ServerOptions {
             k_max: 4,
             backend: ExecBackend::Auto,
             discipline: DisciplineKind::Fifo,
+            queue_capacity: None,
+            overload: OverloadPolicy::Block,
         }
     }
 }
@@ -132,6 +157,20 @@ impl ServerBuilder {
         self
     }
 
+    /// Bound every station's occupancy (queued + in-service jobs).
+    pub fn queue_capacity(mut self, cap: usize) -> Self {
+        self.opts.queue_capacity = Some(cap);
+        self
+    }
+
+    /// Select the overload policy (default [`OverloadPolicy::Block`],
+    /// the legacy unbounded behavior). A policy validated in the DES
+    /// deploys here unchanged.
+    pub fn overload(mut self, p: OverloadPolicy) -> Self {
+        self.opts.overload = p;
+        self
+    }
+
     pub fn options(mut self, opts: ServerOptions) -> Self {
         self.opts = opts;
         self
@@ -158,8 +197,8 @@ pub struct AttachOptions {
     pub rate_hint: f64,
     /// The tenant's default SLO class: tags every request submitted via
     /// [`Server::submit`] (per-request override:
-    /// [`Server::submit_with_class`]) and drives priority/WFQ scheduling
-    /// plus the per-class latency accounting.
+    /// [`Request::with_class`]) and drives priority/WFQ scheduling plus
+    /// the per-class latency accounting.
     pub class: SloClass,
 }
 
@@ -241,14 +280,6 @@ impl std::fmt::Display for ConfigError {
 
 impl std::error::Error for ConfigError {}
 
-/// One finished request.
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub tenant: TenantHandle,
-    pub latency_s: f64,
-    pub output: Vec<f32>,
-}
-
 struct TpuJob {
     handle: TenantHandle,
     meta: Arc<ModelMeta>,
@@ -258,9 +289,12 @@ struct TpuJob {
     /// precomputed O(1) from the prefix tables at submit, so the worker
     /// never recomputes segment sums when forwarding to a CPU pool.
     cpu_hint: f64,
+    /// Absolute deadline (seconds since server start), if any.
+    deadline: Option<f64>,
+    cancel: CancelToken,
     input: Vec<f32>,
     submitted: Instant,
-    done: mpsc::Sender<Result<Completion>>,
+    done: mpsc::Sender<Result<Completion, RequestError>>,
 }
 
 struct TpuShared {
@@ -268,6 +302,9 @@ struct TpuShared {
     queue: Mutex<SchedQueue<TpuJob>>,
     cv: Condvar,
     shutdown: AtomicBool,
+    /// 1 while the worker is executing a job — the in-service half of
+    /// the occupancy bound (queued + in-service <= capacity).
+    active: AtomicUsize,
     /// Tenants whose SRAM-cache entries must be dropped (detached, or
     /// re-partitioned); drained by the TPU worker before each execution —
     /// the same semantics as the DES's `apply_detach`/`set_config`
@@ -275,27 +312,59 @@ struct TpuShared {
     invalidations: Mutex<Vec<TenantHandle>>,
 }
 
-/// Per-tenant serving statistics, keyed by stable handle.
+/// Per-tenant serving statistics, keyed by stable handle. The lifecycle
+/// counters follow the shared semantics documented on
+/// [`PerClassLatency`]: `accepted` = admitted at the entry station,
+/// `rejected` = refused at the entry station by a full queue, `dropped`
+/// = everything else the overload layer dropped (shed evictions,
+/// deadline drops — at entry or after acceptance — and cancellations).
 #[derive(Debug, Clone)]
 pub struct TenantStats {
     pub handle: TenantHandle,
     pub name: String,
     pub latency: LatencyHistogram,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub dropped: u64,
     /// True once the tenant detached (its histogram is final).
     pub detached: bool,
 }
 
 /// Aggregated serving statistics.
+///
+/// Drained identities (submissions stopped, every ticket resolved):
+/// `submitted == completed + rejected + shed + expired + cancelled +
+/// failed`, and `accepted` brackets the post-entry outcomes —
+/// `completed + shed <= accepted <= completed + shed + expired +
+/// cancelled + failed` (`expired` counts both entry-stage deadline
+/// refusals, which were never accepted, and post-acceptance evictions).
+/// The conservation property test pins the same identities in the DES.
+///
+/// Counters are updated outside the queue locks, so a snapshot taken
+/// while requests are in flight is *eventually consistent*: a job can be
+/// popped and completed (or shed) in the instant before its `accepted`
+/// increment lands.
 #[derive(Debug, Clone)]
 pub struct ServeStats {
     /// Live tenants first (attach order), then detached tenants.
     pub per_tenant: Vec<TenantStats>,
-    /// Latency accounted per SLO class (live + detached tenants).
+    /// Latency + lifecycle counters per SLO class (live + detached).
     pub per_class: PerClassLatency,
     pub completed: u64,
     /// Requests that failed cleanly (tenant detached mid-flight, substrate
     /// errors).
     pub failed: u64,
+    /// Admitted at the entry station.
+    pub accepted: u64,
+    /// Refused at the entry station by the bounded queue.
+    pub rejected: u64,
+    /// Evicted post-acceptance by `ShedLowClass` (or refused at a full
+    /// internal station mid-pipeline).
+    pub shed: u64,
+    /// Dropped because the deadline could no longer be met.
+    pub expired: u64,
+    /// Cancelled via their token before execution.
+    pub cancelled: u64,
     pub reconfigs: u64,
     pub decision_micros: Vec<f64>,
 }
@@ -304,6 +373,17 @@ impl ServeStats {
     /// The stats row for `h`, live or detached.
     pub fn tenant(&self, h: TenantHandle) -> Option<&TenantStats> {
         self.per_tenant.iter().find(|t| t.handle == h)
+    }
+
+    /// Completions that met their deadline (or carried none).
+    pub fn goodput(&self) -> u64 {
+        self.per_class.goodput_total()
+    }
+
+    /// Everything the overload layer dropped (rejected + shed + expired
+    /// + cancelled).
+    pub fn dropped(&self) -> u64 {
+        self.rejected + self.shed + self.expired + self.cancelled
     }
 }
 
@@ -314,6 +394,9 @@ struct Entry {
     /// Default SLO class declared at attach.
     class: SloClass,
     hist: LatencyHistogram,
+    accepted: u64,
+    rejected: u64,
+    dropped: u64,
 }
 
 struct State {
@@ -365,11 +448,80 @@ struct Shared {
     buffer_arrivals: bool,
     retired: Mutex<Vec<TenantStats>>,
     reconfig: Mutex<ReconfigLog>,
-    /// Per-SLO-class latency across live + retired tenants.
+    /// Per-SLO-class latency + lifecycle counters across live + retired
+    /// tenants.
     class_hists: Mutex<PerClassLatency>,
     completed: AtomicU64,
     failed: AtomicU64,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    cancelled: AtomicU64,
     started: Instant,
+}
+
+/// How a request left the system (everything but completion/failure);
+/// drives the per-tenant, per-class, and global counters consistently.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Outcome {
+    Accept,
+    Reject,
+    Shed,
+    Expired,
+    Cancelled,
+}
+
+/// Count `outcome` against the tenant's row (live or retired), the
+/// per-class counters, and the global counters. Lock order: state, then
+/// retired, then class_hists — each taken and released in turn.
+fn count(shared: &Shared, handle: TenantHandle, class: SloClass, outcome: Outcome) {
+    let counted_live = {
+        let mut st = shared.state.lock().unwrap();
+        if let Some(e) = st.entries.iter_mut().find(|e| e.handle == handle) {
+            match outcome {
+                Outcome::Accept => e.accepted += 1,
+                Outcome::Reject => e.rejected += 1,
+                _ => e.dropped += 1,
+            }
+            true
+        } else {
+            false
+        }
+    };
+    if !counted_live {
+        let mut retired = shared.retired.lock().unwrap();
+        if let Some(t) = retired.iter_mut().find(|t| t.handle == handle) {
+            match outcome {
+                Outcome::Accept => t.accepted += 1,
+                Outcome::Reject => t.rejected += 1,
+                _ => t.dropped += 1,
+            }
+        }
+    }
+    let mut pc = shared.class_hists.lock().unwrap();
+    match outcome {
+        Outcome::Accept => {
+            pc.record_accept(class);
+            shared.accepted.fetch_add(1, Ordering::SeqCst);
+        }
+        Outcome::Reject => {
+            pc.record_reject(class);
+            shared.rejected.fetch_add(1, Ordering::SeqCst);
+        }
+        Outcome::Shed => {
+            pc.record_shed(class);
+            shared.shed.fetch_add(1, Ordering::SeqCst);
+        }
+        Outcome::Expired => {
+            pc.record_expired(class);
+            shared.expired.fetch_add(1, Ordering::SeqCst);
+        }
+        Outcome::Cancelled => {
+            pc.record_cancelled(class);
+            shared.cancelled.fetch_add(1, Ordering::SeqCst);
+        }
+    }
 }
 
 /// Live multi-tenant inference server with a dynamic tenant set.
@@ -385,6 +537,8 @@ pub struct Server {
     am: AnalyticModel,
     k_max: usize,
     discipline: DisciplineKind,
+    queue_capacity: Option<usize>,
+    overload: OverloadPolicy,
     next_handle: AtomicU64,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
@@ -413,6 +567,7 @@ impl Server {
             None => Box::new(StaticPolicy),
         };
         let has_period = policy.period().is_some();
+        let started = Instant::now();
 
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
@@ -432,34 +587,48 @@ impl Server {
             class_hists: Mutex::new(PerClassLatency::new()),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
-            started: Instant::now(),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            started,
         });
 
         // CPU pools execute suffixes through the executor thread; their
-        // queues run the same discipline as the TPU worker's.
+        // queues run the same discipline — and the same bounded admission
+        // layer — as the TPU worker's.
         let h: ExecHandle = exec.handle();
         let cost_for_pools = cost.clone();
         let scale = opts.time_scale;
         let discipline = opts.discipline;
-        let pools = Arc::new(CpuPools::new(opts.k_max, discipline, move |meta, p, input| {
-            let t0 = Instant::now();
-            let out = h.execute_range(&meta.name, p, meta.partition_points, input)?;
-            // Pad to the modeled CPU-suffix budget (virtual device time).
-            if scale > 0.0 {
-                let budget = cost_for_pools.cpu_service(meta, p) * scale;
-                let spent = t0.elapsed().as_secs_f64();
-                if budget > spent {
-                    std::thread::sleep(Duration::from_secs_f64(budget - spent));
+        let pools = Arc::new(CpuPools::new(
+            opts.k_max,
+            discipline,
+            opts.queue_capacity,
+            opts.overload,
+            started,
+            move |meta, p, input| {
+                let t0 = Instant::now();
+                let out = h.execute_range(&meta.name, p, meta.partition_points, input)?;
+                // Pad to the modeled CPU-suffix budget (virtual device time).
+                if scale > 0.0 {
+                    let budget = cost_for_pools.cpu_service(meta, p) * scale;
+                    let spent = t0.elapsed().as_secs_f64();
+                    if budget > spent {
+                        std::thread::sleep(Duration::from_secs_f64(budget - spent));
+                    }
                 }
-            }
-            Ok(out)
-        }));
+                Ok(out)
+            },
+        ));
 
         // TPU worker thread: sched-core queue + SRAM cache + swap emulation.
         let tpu = Arc::new(TpuShared {
             queue: Mutex::new(SchedQueue::with_kind(discipline)),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
             invalidations: Mutex::new(Vec::new()),
         });
         let mut threads = Vec::new();
@@ -469,11 +638,12 @@ impl Server {
             let shared = shared.clone();
             let handle = exec.handle();
             let cost = cost.clone();
+            let overload = opts.overload;
             threads.push(
                 std::thread::Builder::new()
                     .name("tpu-worker".into())
                     .spawn(move || {
-                        tpu_worker_loop(tpu, pools, shared, handle, cost, scale)
+                        tpu_worker_loop(tpu, pools, shared, handle, cost, scale, overload)
                     })?,
             );
         }
@@ -501,6 +671,8 @@ impl Server {
             am,
             k_max: opts.k_max,
             discipline,
+            queue_capacity: opts.queue_capacity,
+            overload: opts.overload,
             next_handle: AtomicU64::new(0),
             threads,
             stop,
@@ -510,6 +682,16 @@ impl Server {
     /// The scheduling discipline driving the TPU queue and CPU pools.
     pub fn discipline(&self) -> DisciplineKind {
         self.discipline
+    }
+
+    /// The overload policy bounding every station's admission.
+    pub fn overload(&self) -> OverloadPolicy {
+        self.overload
+    }
+
+    /// The per-station occupancy bound (`None` = unbounded).
+    pub fn queue_capacity(&self) -> Option<usize> {
+        self.queue_capacity
     }
 
     fn now(&self) -> f64 {
@@ -568,6 +750,9 @@ impl Server {
             meta,
             class: opts.class,
             hist: LatencyHistogram::default(),
+            accepted: 0,
+            rejected: 0,
+            dropped: 0,
         });
         st.config = plan.config;
         st.epoch += 1;
@@ -594,7 +779,7 @@ impl Server {
         let (index, stats) = {
             let mut st = self.shared.state.lock().unwrap();
             let Some(i) = st.entries.iter().position(|e| e.handle == handle) else {
-                return Err(anyhow!("{handle} is not attached"));
+                return Err(anyhow::anyhow!("{handle} is not attached"));
             };
             let entry = st.entries.remove(i);
             st.tables.remove(i);
@@ -605,6 +790,9 @@ impl Server {
                 handle,
                 name: entry.tenant.model.name.clone(),
                 latency: entry.hist,
+                accepted: entry.accepted,
+                rejected: entry.rejected,
+                dropped: entry.dropped,
                 detached: true,
             };
             // Register the retired stats row while the entry removal is
@@ -617,12 +805,10 @@ impl Server {
         // New submits now fail; purge this tenant's queued TPU work
         // through the discipline (peers keep their scheduling state).
         {
-            let mut q = self.tpu.queue.lock().unwrap();
-            for (_, job) in q.drain_tenant(handle) {
+            let drained = self.tpu.queue.lock().unwrap().drain_tenant(handle);
+            for (_, job) in drained {
                 self.shared.failed.fetch_add(1, Ordering::SeqCst);
-                let _ = job
-                    .done
-                    .send(Err(anyhow!("{handle} detached before its job ran")));
+                let _ = job.done.send(Err(RequestError::Detached(handle)));
             }
         }
         // Queued CPU jobs fail through their completion callbacks.
@@ -641,35 +827,19 @@ impl Server {
         Ok(stats)
     }
 
-    /// Submit a request tagged with the tenant's default SLO class; the
-    /// completion arrives on the returned channel. Unknown/detached
-    /// handles deliver a clean error through the channel.
-    pub fn submit(
-        &self,
-        handle: TenantHandle,
-        input: Vec<f32>,
-    ) -> mpsc::Receiver<Result<Completion>> {
-        self.submit_inner(handle, input, None)
-    }
-
-    /// Like [`submit`](Self::submit), but overriding the tenant's default
-    /// SLO class for this request.
-    pub fn submit_with_class(
-        &self,
-        handle: TenantHandle,
-        input: Vec<f32>,
-        class: SloClass,
-    ) -> mpsc::Receiver<Result<Completion>> {
-        self.submit_inner(handle, input, Some(class))
-    }
-
-    fn submit_inner(
-        &self,
-        handle: TenantHandle,
-        input: Vec<f32>,
-        class_override: Option<SloClass>,
-    ) -> mpsc::Receiver<Result<Completion>> {
+    /// Submit a [`Request`] for `handle` and get its [`Ticket`]. The
+    /// entry station's bounded admission resolves synchronously: a
+    /// refused request's ticket resolves immediately with the typed
+    /// [`RequestError`] ([`Overloaded`](RequestError::Overloaded),
+    /// [`DeadlineExceeded`](RequestError::DeadlineExceeded), ...), and
+    /// unknown/detached handles resolve with
+    /// [`NotAttached`](RequestError::NotAttached) — submit itself never
+    /// fails. A bare `Vec<f32>` converts into a default `Request`.
+    pub fn submit(&self, handle: TenantHandle, request: impl Into<Request>) -> Ticket {
+        let request = request.into();
+        let cancel = request.cancel_token();
         let (tx, rx) = mpsc::channel();
+        let ticket = Ticket::new(rx, cancel.clone(), handle);
         let now = self.now();
         let resolved = {
             let st = self.shared.state.lock().unwrap();
@@ -697,10 +867,11 @@ impl Server {
         };
         let Some((index, p, meta, tenant_class, hint, cpu_hint)) = resolved else {
             self.shared.failed.fetch_add(1, Ordering::SeqCst);
-            let _ = tx.send(Err(anyhow!("{handle} is not attached")));
-            return rx;
+            let _ = tx.send(Err(RequestError::NotAttached(handle)));
+            return ticket;
         };
-        let class = class_override.unwrap_or(tenant_class);
+        let class = request.class.unwrap_or(tenant_class);
+        let deadline = request.deadline.map(|d| now + d.as_secs_f64());
         // Buffered (not observed inline): the policy lock may be held for
         // a whole hill-climb decide; submitters must not wait on it. An
         // arrival flushed after a racing detach renumbered positions is at
@@ -714,6 +885,7 @@ impl Server {
                 tenant: handle,
                 class,
                 service_hint: hint,
+                deadline,
             };
             let job = TpuJob {
                 handle,
@@ -721,12 +893,56 @@ impl Server {
                 p,
                 class,
                 cpu_hint,
-                input,
+                deadline,
+                cancel,
+                input: request.input,
                 submitted: Instant::now(),
                 done: tx,
             };
-            self.tpu.queue.lock().unwrap().push(sched_meta, job);
-            self.tpu.cv.notify_one();
+            let outcome = {
+                let mut q = self.tpu.queue.lock().unwrap();
+                let load = StationLoad {
+                    in_service: self.tpu.active.load(Ordering::SeqCst),
+                    servers: 1,
+                };
+                q.offer(
+                    sched_meta,
+                    job,
+                    now,
+                    "tpu",
+                    self.queue_capacity,
+                    self.overload,
+                    load,
+                )
+            };
+            match outcome {
+                Offer::Admitted { shed, expired } => {
+                    count(&self.shared, handle, class, Outcome::Accept);
+                    self.tpu.cv.notify_one();
+                    self.resolve_tpu_evictions(now, shed, expired);
+                }
+                Offer::Rejected {
+                    meta: m,
+                    job,
+                    reason,
+                    expired,
+                } => {
+                    self.resolve_tpu_evictions(now, Vec::new(), expired);
+                    match reason {
+                        RejectReason::Overloaded(o) => {
+                            count(&self.shared, handle, class, Outcome::Reject);
+                            let _ = job.done.send(Err(RequestError::Overloaded(o)));
+                        }
+                        RejectReason::Expired => {
+                            count(&self.shared, handle, class, Outcome::Expired);
+                            let _ = job.done.send(Err(RequestError::DeadlineExceeded {
+                                deadline_s: m.deadline.unwrap_or(now),
+                                now_s: now,
+                            }));
+                        }
+                    }
+                }
+            }
         } else {
             dispatch_cpu(
                 &self.shared,
@@ -736,19 +952,60 @@ impl Server {
                 0,
                 class,
                 hint,
-                input,
+                deadline,
+                cancel,
+                true,
+                request.input,
                 Instant::now(),
                 tx,
             );
         }
-        rx
+        ticket
     }
 
-    /// Blocking single inference (convenience for examples).
+    /// Fail evicted TPU-queue jobs with their typed reasons and count
+    /// them (shed victims / deadline drops).
+    fn resolve_tpu_evictions(
+        &self,
+        now: f64,
+        shed: Vec<(JobMeta, TpuJob)>,
+        expired: Vec<(JobMeta, TpuJob)>,
+    ) {
+        for (m, j) in shed {
+            count(&self.shared, m.tenant, m.class, Outcome::Shed);
+            let _ = j.done.send(Err(RequestError::Shed {
+                station: "tpu".to_string(),
+            }));
+        }
+        for (m, j) in expired {
+            count(&self.shared, m.tenant, m.class, Outcome::Expired);
+            let _ = j.done.send(Err(RequestError::DeadlineExceeded {
+                deadline_s: m.deadline.unwrap_or(now),
+                now_s: now,
+            }));
+        }
+    }
+
+    /// Deprecated shim (one PR): submit with a per-request class override.
+    #[deprecated(note = "use submit(handle, Request::new(input).with_class(class))")]
+    pub fn submit_with_class(
+        &self,
+        handle: TenantHandle,
+        input: Vec<f32>,
+        class: SloClass,
+    ) -> Ticket {
+        self.submit(handle, Request::new(input).with_class(class))
+    }
+
+    /// Deprecated shim (one PR): blocking single inference. The job's
+    /// real typed failure is preserved through the ticket — a worker
+    /// dropping the completion sender no longer flattens into a generic
+    /// "server dropped request".
+    #[deprecated(note = "use submit(handle, Request::new(input)).wait()")]
     pub fn infer(&self, handle: TenantHandle, input: Vec<f32>) -> Result<Completion> {
-        self.submit(handle, input)
-            .recv()
-            .map_err(|_| anyhow!("server dropped request"))?
+        self.submit(handle, Request::new(input))
+            .wait()
+            .map_err(anyhow::Error::new)
     }
 
     pub fn current_config(&self) -> Config {
@@ -842,6 +1099,9 @@ impl Server {
                     handle: e.handle,
                     name: e.tenant.model.name.clone(),
                     latency: e.hist.clone(),
+                    accepted: e.accepted,
+                    rejected: e.rejected,
+                    dropped: e.dropped,
                     detached: false,
                 })
                 .collect()
@@ -854,6 +1114,11 @@ impl Server {
             per_class,
             completed: self.shared.completed.load(Ordering::SeqCst),
             failed: self.shared.failed.load(Ordering::SeqCst),
+            accepted: self.shared.accepted.load(Ordering::SeqCst),
+            rejected: self.shared.rejected.load(Ordering::SeqCst),
+            shed: self.shared.shed.load(Ordering::SeqCst),
+            expired: self.shared.expired.load(Ordering::SeqCst),
+            cancelled: self.shared.cancelled.load(Ordering::SeqCst),
             reconfigs: log.reconfigs,
             decision_micros: log.decision_micros.clone(),
         }
@@ -877,7 +1142,9 @@ fn flush_arrivals(shared: &Shared) {
 /// Record a completion against the live entry, or the retired stats if
 /// the tenant detached while the request was in flight, plus the
 /// per-SLO-class histogram (taken alone — see the lock-order note).
-fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64) {
+/// `missed` marks a completion delivered after its deadline (kept in the
+/// histogram, excluded from goodput).
+fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64, missed: bool) {
     let mut counted = {
         let mut st = shared.state.lock().unwrap();
         if let Some(e) = st.entries.iter_mut().find(|e| e.handle == handle) {
@@ -896,7 +1163,37 @@ fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64) 
     }
     if counted {
         shared.completed.fetch_add(1, Ordering::SeqCst);
-        shared.class_hists.lock().unwrap().record(class, latency);
+        let mut pc = shared.class_hists.lock().unwrap();
+        pc.record(class, latency);
+        if missed {
+            pc.record_miss(class);
+        }
+    }
+}
+
+/// Classify a typed failure into the lifecycle counters. `entry` = the
+/// job was refused at its entry station (an overload refusal there is a
+/// `rejected`, mid-pipeline it counts as `shed`).
+fn count_failure(
+    shared: &Shared,
+    handle: TenantHandle,
+    class: SloClass,
+    e: &RequestError,
+    entry: bool,
+) {
+    match e {
+        RequestError::Overloaded(_) => count(
+            shared,
+            handle,
+            class,
+            if entry { Outcome::Reject } else { Outcome::Shed },
+        ),
+        RequestError::Shed { .. } => count(shared, handle, class, Outcome::Shed),
+        RequestError::DeadlineExceeded { .. } => count(shared, handle, class, Outcome::Expired),
+        RequestError::Cancelled => count(shared, handle, class, Outcome::Cancelled),
+        _ => {
+            shared.failed.fetch_add(1, Ordering::SeqCst);
+        }
     }
 }
 
@@ -909,27 +1206,35 @@ fn dispatch_cpu(
     p: usize,
     class: SloClass,
     service_hint: f64,
+    deadline: Option<f64>,
+    cancel: CancelToken,
+    entry: bool,
     input: Vec<f32>,
     submitted: Instant,
-    tx: mpsc::Sender<Result<Completion>>,
+    tx: mpsc::Sender<Result<Completion, RequestError>>,
 ) {
-    let shared = shared.clone();
-    pools.submit(
+    let shared2 = shared.clone();
+    let admitted = pools.submit(
         handle,
         JobMeta {
             tenant: handle,
             class,
             service_hint,
+            deadline,
         },
         CpuJob {
             meta,
             p,
             input,
+            cancel,
             done: Box::new(move |result| {
                 let completion = match result {
                     Ok(output) => {
                         let latency = submitted.elapsed().as_secs_f64();
-                        record(&shared, handle, class, latency);
+                        let missed = deadline
+                            .map(|d| shared2.started.elapsed().as_secs_f64() > d)
+                            .unwrap_or(false);
+                        record(&shared2, handle, class, latency, missed);
                         Ok(Completion {
                             tenant: handle,
                             latency_s: latency,
@@ -937,7 +1242,7 @@ fn dispatch_cpu(
                         })
                     }
                     Err(e) => {
-                        shared.failed.fetch_add(1, Ordering::SeqCst);
+                        count_failure(&shared2, handle, class, &e, entry);
                         Err(e)
                     }
                 };
@@ -945,6 +1250,9 @@ fn dispatch_cpu(
             }),
         },
     );
+    if entry && admitted {
+        count(shared, handle, class, Outcome::Accept);
+    }
 }
 
 fn tpu_worker_loop(
@@ -954,21 +1262,60 @@ fn tpu_worker_loop(
     handle: ExecHandle,
     cost: CostModel,
     time_scale: f64,
+    overload: OverloadPolicy,
 ) {
     let mut cache = SramCache::new(cost.hw.sram_bytes);
     loop {
-        let job = {
+        let (job, expired) = {
             let mut q = tpu.queue.lock().unwrap();
             loop {
                 if tpu.shutdown.load(Ordering::SeqCst) {
+                    // Deliver the typed shutdown error on every queued
+                    // job before its sender drops.
+                    let rest = q.drain_all();
+                    drop(q);
+                    for (_, j) in rest {
+                        shared.failed.fetch_add(1, Ordering::SeqCst);
+                        let _ = j.done.send(Err(RequestError::Shutdown));
+                    }
                     return;
                 }
+                // Deadline-hopeless jobs never reach the device: drained
+                // before the pop decision, exactly like the DES's TPU
+                // station at service start.
+                let mut expired_jobs = Vec::new();
+                if overload == OverloadPolicy::DeadlineDrop && !q.is_empty() {
+                    let now = shared.started.elapsed().as_secs_f64();
+                    expired_jobs = q.drain_expired(now);
+                }
                 if let Some((_, j)) = q.pop() {
-                    break j;
+                    tpu.active.store(1, Ordering::SeqCst);
+                    break (Some(j), expired_jobs);
+                }
+                if !expired_jobs.is_empty() {
+                    break (None, expired_jobs);
                 }
                 q = tpu.cv.wait(q).unwrap();
             }
         };
+        if !expired.is_empty() {
+            let now = shared.started.elapsed().as_secs_f64();
+            for (m, j) in expired {
+                count(&shared, m.tenant, m.class, Outcome::Expired);
+                let _ = j.done.send(Err(RequestError::DeadlineExceeded {
+                    deadline_s: m.deadline.unwrap_or(now),
+                    now_s: now,
+                }));
+            }
+        }
+        let Some(job) = job else { continue };
+        // A cancelled request is refused before touching the device.
+        if job.cancel.is_cancelled() {
+            count(&shared, job.handle, job.class, Outcome::Cancelled);
+            let _ = job.done.send(Err(RequestError::Cancelled));
+            tpu.active.store(0, Ordering::SeqCst);
+            continue;
+        }
         // Apply pending invalidations (detached tenants) before touching
         // the cache, so ghost resident sets never pressure live peers.
         for h in tpu.invalidations.lock().unwrap().drain(..) {
@@ -988,10 +1335,8 @@ fn tpu_worker_loop(
         };
         if !live {
             shared.failed.fetch_add(1, Ordering::SeqCst);
-            let _ = job.done.send(Err(anyhow!(
-                "{} detached before its job ran",
-                job.handle
-            )));
+            let _ = job.done.send(Err(RequestError::Detached(job.handle)));
+            tpu.active.store(0, Ordering::SeqCst);
             continue;
         }
         let meta = job.meta.clone();
@@ -1020,7 +1365,11 @@ fn tpu_worker_loop(
             Ok(boundary) => {
                 if job.p >= meta.partition_points {
                     let latency = job.submitted.elapsed().as_secs_f64();
-                    record(&shared, job.handle, job.class, latency);
+                    let missed = job
+                        .deadline
+                        .map(|d| shared.started.elapsed().as_secs_f64() > d)
+                        .unwrap_or(false);
+                    record(&shared, job.handle, job.class, latency, missed);
                     let _ = job.done.send(Ok(Completion {
                         tenant: job.handle,
                         latency_s: latency,
@@ -1038,6 +1387,9 @@ fn tpu_worker_loop(
                         job.p,
                         job.class,
                         job.cpu_hint,
+                        job.deadline,
+                        job.cancel,
+                        false,
                         boundary,
                         job.submitted,
                         job.done,
@@ -1046,9 +1398,12 @@ fn tpu_worker_loop(
             }
             Err(e) => {
                 shared.failed.fetch_add(1, Ordering::SeqCst);
-                let _ = job.done.send(Err(e));
+                let _ = job
+                    .done
+                    .send(Err(RequestError::Execution(e.to_string())));
             }
         }
+        tpu.active.store(0, Ordering::SeqCst);
     }
 }
 

@@ -4,6 +4,9 @@
 //!   table 2                  print Table II from the artifact manifest
 //!   figure <1|2|3|5|6|7|8>   regenerate a paper figure (prints + saves JSON)
 //!   figures                  regenerate everything (results/*.json)
+//!   ablation | sensitivity   extension experiments
+//!   schedulers               scheduler ablation (per-SLO-class tails)
+//!   overload                 overload-policy × load-factor sweep
 //!   churn                    dynamic experiment with tenant attach/detach
 //!   profile                  offline profiling phase → profiles.json
 //!   plan                     run the allocator on a workload, print config
@@ -24,9 +27,10 @@ use swapless::experiments::common::save_result;
 use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 18] = [
+const VALUE_OPTS: [&str; 21] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
     "trace", "policy", "duration", "attach-at", "detach-at", "backend", "discipline", "classes",
+    "queue-cap", "overload", "deadline-ms",
 ];
 
 fn main() {
@@ -49,23 +53,34 @@ fn usage() -> String {
        ablation | sensitivity      extension experiments\n\
        schedulers                  scheduler ablation: fifo/priority/wfq/spsf with\n\
                                    per-SLO-class mean/p99 (results/schedulers.json)\n\
+       overload                    overload-policy sweep: block/reject/shed/deadline\n\
+                                   x rho {0.7, 1.0, 1.5} on the Table-II mix with\n\
+                                   bounded queues (results/overload.json)\n\
        churn                       Fig-8-style dynamic run with tenant attach/detach\n\
        profile [--models a,b] [--iters N] [--out FILE]\n\
                                    offline profiling phase -> profiles.json\n\
        plan --models a,b --rates x,y\n\
                                    run the allocator, print the (P, K) config\n\
-       serve [--models a,b] [--rates x,y] [--classes c1,c2] [--duration S]\n\
-             [--time-scale S] [--discipline fifo|priority|wfq|spsf]\n\
-             [--attach-at name@t[:rate],...] [--detach-at name@t,...]\n\
-             [--backend auto|pjrt|emulated]\n\
+       serve [--models a,b] [--rates x,y | --rho R] [--classes c1,c2]\n\
+             [--duration S] [--time-scale S]\n\
+             [--discipline fifo|priority|wfq|spsf]\n\
+             [--queue-cap N] [--overload block|reject|shed|deadline]\n\
+             [--deadline-ms D] [--attach-at name@t[:rate],...]\n\
+             [--detach-at name@t,...] [--backend auto|pjrt|emulated]\n\
                                    live serving with a dynamic tenant set; classes\n\
-                                   (interactive|standard|batch) align with --models\n\
+                                   (interactive|standard|batch) align with --models;\n\
+                                   --rho drives open-loop load at a TPU load factor\n\
+                                   (>= 1 = overload); --queue-cap/--overload bound\n\
+                                   every station's admission; --deadline-ms tags\n\
+                                   every request with a relative deadline\n\
        trace --models a,b --rates x,y [--horizon S] [--seed N] [--out FILE]\n\
                                    record a Poisson arrival trace (JSON)\n\
        replay --trace FILE [--policy swapless|compiler|threshold]\n\
-              [--discipline fifo|priority|wfq|spsf]\n\
+              [--discipline fifo|priority|wfq|spsf] [--queue-cap N]\n\
+              [--overload block|reject|shed|deadline] [--deadline-ms D]\n\
                                    plan from the trace's empirical rates, then\n\
-                                   simulate the exact recorded arrivals\n\
+                                   simulate the exact recorded arrivals (deadlines\n\
+                                   from a v3 trace, or --deadline-ms for all)\n\
      common options: --artifacts DIR (default artifacts; synthetic manifest if\n\
      missing) --hw FILE --seed N --horizon S --rho R"
         .to_string()
@@ -108,7 +123,7 @@ fn run(raw: &[String]) -> Result<(), String> {
             run_named(&ctx, "sensitivity")?;
             run_named(&ctx, "schedulers")
         }
-        "ablation" | "sensitivity" | "churn" | "schedulers" => run_named(&ctx, cmd),
+        "ablation" | "sensitivity" | "churn" | "schedulers" | "overload" => run_named(&ctx, cmd),
         "profile" => {
             let models = if args.opt("models").is_some() {
                 args.opt_list("models")
@@ -224,12 +239,20 @@ fn trace_record(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
 /// `swapless replay --trace trace.json [--policy swapless|compiler|threshold]`
 /// — plan from the trace's empirical rates, then simulate the exact trace.
 fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
-    use swapless::sim::{Simulator, SimOptions};
+    use swapless::sim::{SimOptions, Simulator};
     use swapless::workload::trace;
     let path = args
         .opt("trace")
         .ok_or_else(|| "replay needs --trace FILE".to_string())?;
-    let (arrivals, names) = trace::load(path)?;
+    let (mut arrivals, names) = trace::load(path)?;
+    // --deadline-ms D annotates every arrival with a relative deadline
+    // (overriding any recorded in a v3 trace).
+    if let Some(ms) = args.opt("deadline-ms") {
+        let ms: f64 = ms.parse().map_err(|_| format!("bad --deadline-ms {ms}"))?;
+        for a in &mut arrivals {
+            a.deadline = Some(a.time + ms * 1e-3);
+        }
+    }
     let horizon = arrivals.last().map(|a| a.time).unwrap_or(0.0) + 1.0;
     let rates = trace::empirical_rates(&arrivals, names.len(), horizon);
     let tenants: Vec<Tenant> = names
@@ -252,14 +275,28 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
         other => return Err(format!("unknown --policy {other}")),
     };
     let discipline = swapless::sched::DisciplineKind::parse(&args.opt_or("discipline", "fifo"))?;
+    let overload = swapless::sched::OverloadPolicy::parse(&args.opt_or("overload", "block"))?;
+    let capacity = match args.opt("queue-cap") {
+        Some(v) => Some(v.parse::<usize>().map_err(|_| format!("bad --queue-cap {v}"))?),
+        None => None,
+    };
+    if capacity.is_some() && overload == swapless::sched::OverloadPolicy::Block {
+        return Err(
+            "--queue-cap has no effect under --overload block (unbounded); \
+             pick --overload reject|shed|deadline"
+                .into(),
+        );
+    }
     println!(
         "replaying {} arrivals ({horizon:.0}s, empirical rates {:?})",
         arrivals.len(),
         rates.iter().map(|r| (r * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
     println!(
-        "[{policy}/{discipline}] P={:?} K={:?}",
-        cfg.partitions, cfg.cores
+        "[{policy}/{discipline}/{overload}{}] P={:?} K={:?}",
+        capacity.map(|c| format!(" cap {c}")).unwrap_or_default(),
+        cfg.partitions,
+        cfg.cores
     );
     let mut sim = Simulator::new(
         &ctx.cost,
@@ -270,15 +307,24 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
             warmup: horizon * 0.05,
             seed: ctx.seed,
             discipline,
+            capacity,
+            overload,
             ..SimOptions::default()
         },
     );
     let res = sim.run(&arrivals, None);
     println!(
-        "mean {:.1} ms | ρ(TPU) {:.2} | cache hit {:.2}",
+        "mean {:.1} ms | ρ(TPU) {:.2} | cache hit {:.2} | max queue {} | \
+         accepted={} rejected={} shed={} expired={} goodput={}",
         res.mean_latency * 1e3,
         res.tpu_utilization,
-        res.cache_hit_rate
+        res.cache_hit_rate,
+        res.max_tpu_occupancy,
+        res.per_class.accepted_total(),
+        res.per_class.rejected_total(),
+        res.per_class.shed_total(),
+        res.per_class.expired_total(),
+        res.per_class.goodput_total(),
     );
     for (i, m) in res.per_model.iter().enumerate() {
         if m.completed > 0 {
@@ -324,6 +370,11 @@ fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
             let r = exp::sched_ablation::run(ctx)?;
             r.print();
             save_result("schedulers", &r.to_json())
+        }
+        "overload" => {
+            let r = exp::overload::run(ctx)?;
+            r.print();
+            save_result("overload", &r.to_json())
         }
         _ => Err(format!("unknown experiment {which}")),
     }
@@ -415,13 +466,14 @@ fn parse_lifecycle(
 /// `--detach-at` schedules replay churn against the running server while
 /// an open-loop Poisson workload drives each live tenant at its rate.
 fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), String> {
-    use swapless::analytic::TenantHandle;
-    use swapless::coordinator::{AttachOptions, ServerBuilder};
+    use swapless::analytic::{Config, TenantHandle};
+    use swapless::coordinator::{AttachOptions, Request, ServerBuilder};
     use swapless::model::ModelMeta;
     use swapless::runtime::service::ExecBackend;
-    use swapless::sched::{DisciplineKind, SloClass};
+    use swapless::sched::{DisciplineKind, OverloadPolicy, SloClass};
     use swapless::tpu::CostModel;
     use swapless::util::rng::Rng;
+    use swapless::workload::{equal_tpu_load_shares, rates_for_load_factor};
     use std::sync::Arc;
     use std::time::{Duration, Instant};
 
@@ -430,7 +482,26 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
     } else {
         vec!["mobilenetv2".to_string(), "squeezenet".to_string()]
     };
-    let rates: Vec<f64> = if args.opt("rates").is_some() {
+    // --rho R drives the mix at a target TPU load factor (>= 1 =
+    // overload); otherwise --rates (default 2 rps each) applies.
+    let rho_target = match args.opt("rho") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| format!("bad --rho {v}"))?),
+        None => None,
+    };
+    let rates: Vec<f64> = if let Some(rho) = rho_target {
+        let tenants: Vec<Tenant> = names
+            .iter()
+            .map(|n| {
+                Ok(Tenant {
+                    model: ctx.manifest.get(n)?.clone(),
+                    rate: 0.0,
+                })
+            })
+            .collect::<Result<_, String>>()?;
+        let full = Config::all_tpu(&tenants);
+        let shares = equal_tpu_load_shares(&ctx.am, &tenants);
+        rates_for_load_factor(&ctx.am, &tenants, &full, &shares, rho)
+    } else if args.opt("rates").is_some() {
         args.opt_list("rates")
             .iter()
             .map(|r| r.parse::<f64>().map_err(|_| format!("bad rate {r}")))
@@ -441,6 +512,14 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
     if rates.len() != names.len() {
         return Err("--rates must match --models".into());
     }
+    // Rate hints for admission control: the actual driven rates when
+    // stable, or a sub-critical fraction when deliberately overloading
+    // (declared vs offered load — the admission plan must exist for the
+    // overload policies to have a running server to protect).
+    let attach_hints: Vec<f64> = match rho_target {
+        Some(rho) if rho >= 0.9 => rates.iter().map(|r| r * (0.7 / rho)).collect(),
+        _ => rates.clone(),
+    };
     let classes: Vec<SloClass> = if args.opt("classes").is_some() {
         args.opt_list("classes")
             .iter()
@@ -453,6 +532,25 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         return Err("--classes must match --models".into());
     }
     let discipline = DisciplineKind::parse(&args.opt_or("discipline", "fifo"))?;
+    let overload = OverloadPolicy::parse(&args.opt_or("overload", "block"))?;
+    let queue_cap = match args.opt("queue-cap") {
+        Some(v) => Some(v.parse::<usize>().map_err(|_| format!("bad --queue-cap {v}"))?),
+        None => None,
+    };
+    if queue_cap.is_some() && overload == OverloadPolicy::Block {
+        return Err(
+            "--queue-cap has no effect under --overload block (unbounded); \
+             pick --overload reject|shed|deadline"
+                .into(),
+        );
+    }
+    let deadline = match args.opt("deadline-ms") {
+        Some(v) => {
+            let ms: f64 = v.parse().map_err(|_| format!("bad --deadline-ms {v}"))?;
+            Some(Duration::from_secs_f64(ms * 1e-3))
+        }
+        None => None,
+    };
     let duration = args.opt_f64("duration", 8.0)?;
     let time_scale = args.opt_f64("time-scale", 0.0)?;
     let backend = match args.opt_or("backend", "auto").as_str() {
@@ -469,35 +567,47 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         ctx.manifest.get(&ev.name)?; // validate names early
     }
 
-    let server = ServerBuilder::new(&ctx.manifest, CostModel::new(hw.clone()))
+    let mut builder = ServerBuilder::new(&ctx.manifest, CostModel::new(hw.clone()))
         .k_max(ctx.k_max)
         .time_scale(time_scale)
         .backend(backend)
         .discipline(discipline)
-        .adaptive(true)
-        .build()
-        .map_err(|e| e.to_string())?;
+        .overload(overload)
+        .adaptive(true);
+    if let Some(cap) = queue_cap {
+        builder = builder.queue_capacity(cap);
+    }
+    let server = builder.build().map_err(|e| e.to_string())?;
     println!(
-        "backend: {:?} | discipline: {}",
+        "backend: {:?} | discipline: {} | overload: {}{}{}",
         server.backend(),
-        server.discipline()
+        server.discipline(),
+        server.overload(),
+        server
+            .queue_capacity()
+            .map(|c| format!(" cap {c}"))
+            .unwrap_or_default(),
+        rho_target
+            .map(|r| format!(" | target rho {r:.2}"))
+            .unwrap_or_default(),
     );
 
-    // Live tenants: (handle, name, meta, rate, next arrival time).
+    // Live tenants: (handle, name, meta, drive rate, next arrival time).
     let mut live: Vec<(TenantHandle, String, Arc<ModelMeta>, f64, f64)> = Vec::new();
     let mut rng = Rng::new(args.opt_u64("seed", 42)?);
     let attach = |live: &mut Vec<(TenantHandle, String, Arc<ModelMeta>, f64, f64)>,
                       name: &str,
+                      hint: f64,
                       rate: f64,
                       class: SloClass,
                       at: f64,
                       rng: &mut Rng| {
-        match server.attach(name, AttachOptions { rate_hint: rate, class }) {
+        match server.attach(name, AttachOptions { rate_hint: hint, class }) {
             Ok(h) => {
                 let meta = server.model_meta(h).expect("just attached");
                 let cfg = server.current_config();
                 println!(
-                    "t={at:.1}s attach {name} @ {rate} rps ({class}) -> {h}  plan P={:?} K={:?}",
+                    "t={at:.1}s attach {name} @ {rate:.2} rps ({class}) -> {h}  plan P={:?} K={:?}",
                     cfg.partitions, cfg.cores
                 );
                 live.push((h, name.to_string(), meta, rate, at + rng.exponential(rate)));
@@ -506,8 +616,8 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         }
     };
 
-    for ((n, r), c) in names.iter().zip(&rates).zip(&classes) {
-        attach(&mut live, n, *r, *c, 0.0, &mut rng);
+    for (((n, hint), r), c) in names.iter().zip(&attach_hints).zip(&rates).zip(&classes) {
+        attach(&mut live, n, *hint, *r, *c, 0.0, &mut rng);
     }
 
     let t0 = Instant::now();
@@ -539,7 +649,7 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
                     .position(|n| *n == ev.name)
                     .map(|i| classes[i])
                     .unwrap_or_default();
-                attach(&mut live, &ev.name, ev.rate, class, ev.at, &mut rng);
+                attach(&mut live, &ev.name, ev.rate, ev.rate, class, ev.at, &mut rng);
             } else if let Some(pos) = live.iter().position(|(_, n, _, _, _)| *n == ev.name) {
                 let (h, name, _, _, _) = live.remove(pos);
                 match server.detach(h) {
@@ -565,28 +675,44 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
             .unwrap();
         let (h, _, meta, rate, _) = &live[idx];
         let n_in: usize = meta.input_shape.iter().product();
-        pending.push(server.submit(*h, vec![0.5; n_in]));
+        let mut req = Request::new(vec![0.5; n_in]);
+        if let Some(d) = deadline {
+            req = req.with_deadline(d);
+        }
+        pending.push(server.submit(*h, req));
         let step = rng.exponential(*rate);
         live[idx].4 = now + step;
     }
-    // Drain in-flight requests.
+    // Drain in-flight tickets.
     let mut ok = 0usize;
     let mut failed = 0usize;
-    for rx in pending {
-        match rx.recv() {
-            Ok(Ok(_)) => ok += 1,
-            _ => failed += 1,
+    for ticket in pending {
+        match ticket.wait() {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
         }
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
     println!(
-        "\nserved {} requests in {wall:.2}s ({:.1} req/s); {failed} failed cleanly; \
-         {} reconfigs, {} allocator decisions",
+        "\nserved {} requests in {wall:.2}s ({:.1} req/s); {failed} resolved with \
+         typed errors; {} reconfigs, {} allocator decisions",
         ok,
         ok as f64 / wall,
         stats.reconfigs,
         stats.decision_micros.len()
+    );
+    println!(
+        "overload: accepted={} rejected={} shed={} expired={} cancelled={} \
+         dropped={} goodput={} failed={}",
+        stats.accepted,
+        stats.rejected,
+        stats.shed,
+        stats.expired,
+        stats.cancelled,
+        stats.dropped(),
+        stats.goodput(),
+        stats.failed,
     );
     for t in &stats.per_tenant {
         if t.latency.count() > 0 {
@@ -603,11 +729,14 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
     }
     for (class, hist) in stats.per_class.non_empty() {
         println!(
-            "  class {:<11}: n={} mean {:.1} ms p99 {:.1} ms",
+            "  class {:<11}: n={} mean {:.1} ms p99 {:.1} ms | accepted {} dropped {} goodput {}",
             class.name(),
             hist.count(),
             hist.mean() * 1e3,
-            hist.percentile(99.0) * 1e3
+            hist.percentile(99.0) * 1e3,
+            stats.per_class.accepted(class),
+            stats.per_class.dropped(class),
+            stats.per_class.goodput(class),
         );
     }
     Ok(())

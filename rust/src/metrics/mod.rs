@@ -202,11 +202,30 @@ impl LatencyHistogram {
     }
 }
 
-/// One latency histogram per [`SloClass`] — the per-class accounting the
-/// scheduler layer reports through `ServeStats`/`SimResult`.
+/// One latency histogram per [`SloClass`] plus the request-lifecycle
+/// counters of the overload-control layer — the per-class accounting the
+/// scheduler reports through `ServeStats`/`SimResult`.
+///
+/// Counter semantics (identical in the DES and the live server):
+/// * `accepted` — admitted at the entry station;
+/// * `rejected` — refused at the entry station by a bounded queue
+///   (`Reject`, or `ShedLowClass` with no lower-class victim);
+/// * `shed` — dropped by overload control after acceptance (evicted by
+///   `ShedLowClass`, or refused mid-pipeline at a full internal station);
+/// * `expired` — dropped because the deadline could no longer be met
+///   (on arrival or evicted from a queue under `DeadlineDrop`);
+/// * `cancelled` — cancelled via the request's token before execution;
+/// * `missed` — completed (counted in the histogram) but after the
+///   deadline; `goodput` subtracts these from the completions.
 #[derive(Debug, Clone)]
 pub struct PerClassLatency {
     hists: Vec<LatencyHistogram>,
+    accepted: Vec<u64>,
+    rejected: Vec<u64>,
+    shed: Vec<u64>,
+    expired: Vec<u64>,
+    cancelled: Vec<u64>,
+    missed: Vec<u64>,
 }
 
 impl Default for PerClassLatency {
@@ -215,6 +234,12 @@ impl Default for PerClassLatency {
             hists: (0..SloClass::COUNT)
                 .map(|_| LatencyHistogram::default())
                 .collect(),
+            accepted: vec![0; SloClass::COUNT],
+            rejected: vec![0; SloClass::COUNT],
+            shed: vec![0; SloClass::COUNT],
+            expired: vec![0; SloClass::COUNT],
+            cancelled: vec![0; SloClass::COUNT],
+            missed: vec![0; SloClass::COUNT],
         }
     }
 }
@@ -226,6 +251,94 @@ impl PerClassLatency {
 
     pub fn record(&mut self, class: SloClass, v: f64) {
         self.hists[class.index()].record(v);
+    }
+
+    pub fn record_accept(&mut self, class: SloClass) {
+        self.accepted[class.index()] += 1;
+    }
+
+    pub fn record_reject(&mut self, class: SloClass) {
+        self.rejected[class.index()] += 1;
+    }
+
+    pub fn record_shed(&mut self, class: SloClass) {
+        self.shed[class.index()] += 1;
+    }
+
+    pub fn record_expired(&mut self, class: SloClass) {
+        self.expired[class.index()] += 1;
+    }
+
+    pub fn record_cancelled(&mut self, class: SloClass) {
+        self.cancelled[class.index()] += 1;
+    }
+
+    /// A completion delivered after its deadline. Pair with
+    /// [`record`](Self::record): the sample stays in the histogram but is
+    /// excluded from [`goodput`](Self::goodput).
+    pub fn record_miss(&mut self, class: SloClass) {
+        self.missed[class.index()] += 1;
+    }
+
+    pub fn accepted(&self, class: SloClass) -> u64 {
+        self.accepted[class.index()]
+    }
+
+    pub fn rejected(&self, class: SloClass) -> u64 {
+        self.rejected[class.index()]
+    }
+
+    pub fn shed(&self, class: SloClass) -> u64 {
+        self.shed[class.index()]
+    }
+
+    pub fn expired(&self, class: SloClass) -> u64 {
+        self.expired[class.index()]
+    }
+
+    pub fn cancelled(&self, class: SloClass) -> u64 {
+        self.cancelled[class.index()]
+    }
+
+    /// Requests dropped by the overload layer (everything but
+    /// completions and substrate failures).
+    pub fn dropped(&self, class: SloClass) -> u64 {
+        let i = class.index();
+        self.rejected[i] + self.shed[i] + self.expired[i] + self.cancelled[i]
+    }
+
+    /// Completions that met their deadline (or carried none).
+    pub fn goodput(&self, class: SloClass) -> u64 {
+        let i = class.index();
+        self.hists[i].count().saturating_sub(self.missed[i])
+    }
+
+    pub fn accepted_total(&self) -> u64 {
+        self.accepted.iter().sum()
+    }
+
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected.iter().sum()
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    pub fn expired_total(&self) -> u64 {
+        self.expired.iter().sum()
+    }
+
+    pub fn cancelled_total(&self) -> u64 {
+        self.cancelled.iter().sum()
+    }
+
+    pub fn dropped_total(&self) -> u64 {
+        SloClass::ALL.iter().map(|c| self.dropped(*c)).sum()
+    }
+
+    pub fn goodput_total(&self) -> u64 {
+        SloClass::ALL.iter().map(|c| self.goodput(*c)).sum()
     }
 
     pub fn get(&self, class: SloClass) -> &LatencyHistogram {
@@ -249,6 +362,14 @@ impl PerClassLatency {
     pub fn merge(&mut self, other: &PerClassLatency) {
         for (a, b) in self.hists.iter_mut().zip(&other.hists) {
             a.merge(b);
+        }
+        for i in 0..SloClass::COUNT {
+            self.accepted[i] += other.accepted[i];
+            self.rejected[i] += other.rejected[i];
+            self.shed[i] += other.shed[i];
+            self.expired[i] += other.expired[i];
+            self.cancelled[i] += other.cancelled[i];
+            self.missed[i] += other.missed[i];
         }
     }
 }
@@ -418,6 +539,45 @@ mod tests {
         pc.merge(&other);
         assert_eq!(pc.total_count(), 4);
         assert_eq!(pc.get(SloClass::Standard).count(), 1);
+    }
+
+    #[test]
+    fn per_class_lifecycle_counters_and_goodput() {
+        let mut pc = PerClassLatency::new();
+        for _ in 0..5 {
+            pc.record_accept(SloClass::Interactive);
+        }
+        pc.record(SloClass::Interactive, 0.010);
+        pc.record(SloClass::Interactive, 0.500);
+        pc.record_miss(SloClass::Interactive); // the 0.5 s one was late
+        pc.record_shed(SloClass::Interactive);
+        pc.record_expired(SloClass::Interactive);
+        pc.record_reject(SloClass::Batch);
+        pc.record_cancelled(SloClass::Batch);
+        assert_eq!(pc.accepted(SloClass::Interactive), 5);
+        assert_eq!(pc.goodput(SloClass::Interactive), 1);
+        assert_eq!(pc.dropped(SloClass::Interactive), 2);
+        assert_eq!(pc.dropped(SloClass::Batch), 2);
+        assert_eq!(pc.rejected_total(), 1);
+        assert_eq!(pc.shed_total(), 1);
+        assert_eq!(pc.expired_total(), 1);
+        assert_eq!(pc.cancelled_total(), 1);
+        assert_eq!(pc.dropped_total(), 4);
+        // Conservation within the interactive class: accepted =
+        // completed + shed + expired (2 + 1 + 1 under 5 accepted would
+        // leave 1 in flight; here everything resolved).
+        let resolved = pc.get(SloClass::Interactive).count()
+            + pc.shed(SloClass::Interactive)
+            + pc.expired(SloClass::Interactive);
+        assert_eq!(resolved, 4);
+
+        let mut other = PerClassLatency::new();
+        other.record_accept(SloClass::Interactive);
+        other.record_reject(SloClass::Interactive);
+        pc.merge(&other);
+        assert_eq!(pc.accepted(SloClass::Interactive), 6);
+        assert_eq!(pc.rejected(SloClass::Interactive), 1);
+        assert_eq!(pc.goodput_total(), 1);
     }
 
     #[test]

@@ -47,6 +47,12 @@ impl QueueDiscipline for Fifo {
         gone
     }
 
+    fn remove(&mut self, id: u64, _meta: &JobMeta) -> bool {
+        let before = self.q.len();
+        self.q.retain(|(qid, _)| *qid != id);
+        self.q.len() != before
+    }
+
     fn kind(&self) -> DisciplineKind {
         DisciplineKind::Fifo
     }

@@ -116,6 +116,152 @@ pub struct JobMeta {
     /// tables); SPSF orders on it, WFQ charges it against tenant deficits.
     /// Zero/non-finite hints degrade gracefully to per-job costs.
     pub service_hint: f64,
+    /// Absolute completion deadline on the consumer's clock (sim time for
+    /// the DES, seconds since server start for the live path). `None` =
+    /// no deadline. Only the `DeadlineDrop` overload policy acts on it;
+    /// other policies carry it through for goodput accounting.
+    pub deadline: Option<f64>,
+}
+
+impl JobMeta {
+    /// True when the job can no longer meet its deadline even if served
+    /// immediately: `deadline < now + service_hint` (the analytic
+    /// service estimate; non-finite hints degrade to `deadline < now`).
+    pub fn deadline_expired(&self, now: f64) -> bool {
+        let Some(d) = self.deadline else { return false };
+        d < now + self.finite_hint()
+    }
+
+    fn finite_hint(&self) -> f64 {
+        if self.service_hint.is_finite() && self.service_hint > 0.0 {
+            self.service_hint
+        } else {
+            0.0
+        }
+    }
+}
+
+/// How a station reacts when its bounded queue is full (or a deadline
+/// can no longer be met). Shared verbatim by the DES stations and the
+/// live server's TPU worker + per-tenant CPU pools, so drop behavior
+/// validated in simulation deploys unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum OverloadPolicy {
+    /// Unbounded admission — the legacy fire-hose. Queues grow without
+    /// limit and latency diverges together for every class at ρ ≥ 1.
+    #[default]
+    Block,
+    /// Refuse new work once `queue + in-service` reaches the capacity,
+    /// with a typed [`Overloaded`] carrying depth and the O(1)
+    /// prefix-table wait estimate.
+    Reject,
+    /// Like `Reject`, but a full queue first evicts the newest queued
+    /// job of a strictly lower SLO class to admit higher-class work.
+    ShedLowClass,
+    /// Evict jobs whose deadline can no longer be met (on admission and
+    /// before each service start); a full queue otherwise rejects.
+    DeadlineDrop,
+}
+
+impl OverloadPolicy {
+    pub const ALL: [OverloadPolicy; 4] = [
+        OverloadPolicy::Block,
+        OverloadPolicy::Reject,
+        OverloadPolicy::ShedLowClass,
+        OverloadPolicy::DeadlineDrop,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OverloadPolicy::Block => "block",
+            OverloadPolicy::Reject => "reject",
+            OverloadPolicy::ShedLowClass => "shed",
+            OverloadPolicy::DeadlineDrop => "deadline",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<OverloadPolicy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "block" | "none" => Ok(OverloadPolicy::Block),
+            "reject" => Ok(OverloadPolicy::Reject),
+            "shed" | "shed-low-class" => Ok(OverloadPolicy::ShedLowClass),
+            "deadline" | "deadline-drop" => Ok(OverloadPolicy::DeadlineDrop),
+            other => Err(format!(
+                "unknown overload policy {other:?} (have block, reject, shed, deadline)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for OverloadPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Typed payload of an overload rejection: where, how deep, and how long
+/// the backlog ahead would take (from the O(1) prefix-table hints).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Overloaded {
+    /// Which station refused ("tpu", "cpu tenant#3", ...).
+    pub station: String,
+    /// Queued + in-service jobs observed at refusal.
+    pub queue_depth: usize,
+    pub capacity: usize,
+    /// Predicted wait for a newly admitted job: the queued predicted
+    /// service divided across the station's servers.
+    pub estimated_wait_s: f64,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} overloaded: {}/{} jobs, est. wait {:.1} ms",
+            self.station,
+            self.queue_depth,
+            self.capacity,
+            self.estimated_wait_s * 1e3
+        )
+    }
+}
+
+/// Instantaneous load of the station offering a job (for the occupancy
+/// bound and the wait estimate).
+#[derive(Debug, Clone, Copy)]
+pub struct StationLoad {
+    /// Jobs currently executing at the station.
+    pub in_service: usize,
+    /// Parallel servers at the station.
+    pub servers: usize,
+}
+
+/// Why [`SchedQueue::offer`] refused the incoming job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RejectReason {
+    Overloaded(Overloaded),
+    /// The job's own deadline can no longer be met (`DeadlineDrop`).
+    Expired,
+}
+
+/// Outcome of a bounded-admission [`SchedQueue::offer`].
+pub enum Offer<T> {
+    /// The job was enqueued — possibly after evicting `shed` (lower-class
+    /// victims) and/or `expired` (jobs past their deadline). The caller
+    /// must resolve every evicted job (fail its completion handle).
+    Admitted {
+        shed: Vec<(JobMeta, T)>,
+        expired: Vec<(JobMeta, T)>,
+    },
+    /// The incoming job was refused; it comes back with the typed reason.
+    /// Deadline evictions performed before the refusal (`DeadlineDrop`)
+    /// still come back in `expired` and must be resolved by the caller.
+    Rejected {
+        meta: JobMeta,
+        job: T,
+        reason: RejectReason,
+        expired: Vec<(JobMeta, T)>,
+    },
 }
 
 /// A queue scheduling discipline over opaque job ids.
@@ -137,6 +283,11 @@ pub trait QueueDiscipline: Send {
     fn peek_next_service_hint(&self) -> Option<f64>;
     /// Remove every queued job of `tenant` (detach), returning their ids.
     fn drain_tenant(&mut self, tenant: TenantHandle) -> Vec<u64>;
+    /// Remove one queued job by id (admission-layer evictions: deadline
+    /// drains, low-class shedding). `meta` is the metadata the job was
+    /// pushed with — it lets flow-keyed disciplines find the right queue
+    /// without a full scan. Returns false if the id is not queued.
+    fn remove(&mut self, id: u64, meta: &JobMeta) -> bool;
     fn kind(&self) -> DisciplineKind;
 }
 
@@ -203,6 +354,13 @@ pub struct SchedQueue<T> {
     disc: Box<dyn QueueDiscipline + Send>,
     jobs: HashMap<u64, (JobMeta, T)>,
     next_id: u64,
+    /// Running sum of the queued jobs' (finite) service hints — the O(1)
+    /// backlog estimate behind [`Overloaded::estimated_wait_s`].
+    hint_sum: f64,
+    /// Queued jobs carrying a deadline — lets `drain_expired` skip its
+    /// scan entirely (O(1)) for deadline-free workloads, which is every
+    /// pop under `DeadlineDrop` when requests carry no deadlines.
+    deadline_count: usize,
 }
 
 impl<T> SchedQueue<T> {
@@ -211,6 +369,8 @@ impl<T> SchedQueue<T> {
             disc,
             jobs: HashMap::new(),
             next_id: 0,
+            hint_sum: 0.0,
+            deadline_count: 0,
         }
     }
 
@@ -226,12 +386,30 @@ impl<T> SchedQueue<T> {
         let id = self.next_id;
         self.next_id += 1;
         self.disc.push(id, meta);
+        self.hint_sum += meta.finite_hint();
+        self.deadline_count += usize::from(meta.deadline.is_some());
         self.jobs.insert(id, (meta, job));
     }
 
     pub fn pop(&mut self) -> Option<(JobMeta, T)> {
         let id = self.disc.pop()?;
-        self.jobs.remove(&id)
+        let entry = self.jobs.remove(&id);
+        if let Some((meta, _)) = &entry {
+            self.forget(meta);
+        }
+        entry
+    }
+
+    /// Bookkeeping for a job leaving the queue by any path.
+    fn forget(&mut self, meta: &JobMeta) {
+        self.hint_sum = (self.hint_sum - meta.finite_hint()).max(0.0);
+        self.deadline_count -= usize::from(meta.deadline.is_some());
+    }
+
+    /// Sum of the queued jobs' predicted service times (seconds) — the
+    /// O(1) backlog reading reported on overload rejections.
+    pub fn queued_service_s(&self) -> f64 {
+        self.hint_sum
     }
 
     pub fn len(&self) -> usize {
@@ -251,7 +429,13 @@ impl<T> SchedQueue<T> {
         let mut ids = self.disc.drain_tenant(tenant);
         ids.sort_unstable();
         ids.into_iter()
-            .filter_map(|id| self.jobs.remove(&id))
+            .filter_map(|id| {
+                let entry = self.jobs.remove(&id);
+                if let Some((meta, _)) = &entry {
+                    self.forget(meta);
+                }
+                entry
+            })
             .collect()
     }
 
@@ -262,6 +446,111 @@ impl<T> SchedQueue<T> {
             out.push(item);
         }
         out
+    }
+
+    /// Remove one queued job by id (meta looked up internally).
+    fn take(&mut self, id: u64) -> Option<(JobMeta, T)> {
+        let meta = self.jobs.get(&id).map(|(m, _)| *m)?;
+        if !self.disc.remove(id, &meta) {
+            return None;
+        }
+        self.forget(&meta);
+        self.jobs.remove(&id)
+    }
+
+    /// Remove every queued job whose deadline can no longer be met at
+    /// `now` (see [`JobMeta::deadline_expired`]), in push order. Workers
+    /// call this before each service start under `DeadlineDrop`; when no
+    /// queued job carries a deadline it is O(1).
+    pub fn drain_expired(&mut self, now: f64) -> Vec<(JobMeta, T)> {
+        if self.deadline_count == 0 {
+            return Vec::new();
+        }
+        let mut ids: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|(_, (m, _))| m.deadline_expired(now))
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort_unstable();
+        ids.into_iter().filter_map(|id| self.take(id)).collect()
+    }
+
+    /// Evict the most-sheddable queued job of a class strictly lower
+    /// than `class`: lowest class first, newest within a class — the
+    /// `ShedLowClass` victim rule. `None` when no lower-class job queues.
+    fn shed_victim(&mut self, class: SloClass) -> Option<(JobMeta, T)> {
+        let victim = self
+            .jobs
+            .iter()
+            .filter(|(_, (m, _))| m.class.priority() > class.priority())
+            .max_by_key(|(id, (m, _))| (m.class.priority(), **id))
+            .map(|(id, _)| *id)?;
+        self.take(victim)
+    }
+
+    /// Bounded admission: push `job` subject to `capacity` and `policy`
+    /// at a station currently carrying `load`. Occupancy is counted as
+    /// `queued + in-service`, so with `Reject` it never exceeds the
+    /// capacity. All evicted jobs are handed back for the caller to
+    /// resolve; the incoming job is handed back on refusal.
+    #[allow(clippy::too_many_arguments)]
+    pub fn offer(
+        &mut self,
+        meta: JobMeta,
+        job: T,
+        now: f64,
+        station: &str,
+        capacity: Option<usize>,
+        policy: OverloadPolicy,
+        load: StationLoad,
+    ) -> Offer<T> {
+        let mut expired = Vec::new();
+        if policy == OverloadPolicy::DeadlineDrop {
+            if meta.deadline_expired(now) {
+                return Offer::Rejected {
+                    meta,
+                    job,
+                    reason: RejectReason::Expired,
+                    expired,
+                };
+            }
+            expired = self.drain_expired(now);
+        }
+        let occupancy = self.len() + load.in_service;
+        let full = match (policy, capacity) {
+            (OverloadPolicy::Block, _) | (_, None) => false,
+            (_, Some(cap)) => occupancy >= cap,
+        };
+        if full {
+            let cap = capacity.unwrap_or(usize::MAX);
+            if policy == OverloadPolicy::ShedLowClass {
+                if let Some(victim) = self.shed_victim(meta.class) {
+                    self.push(meta, job);
+                    return Offer::Admitted {
+                        shed: vec![victim],
+                        expired,
+                    };
+                }
+            }
+            let overloaded = Overloaded {
+                station: station.to_string(),
+                queue_depth: occupancy,
+                capacity: cap,
+                estimated_wait_s: self.hint_sum / load.servers.max(1) as f64,
+            };
+            return Offer::Rejected {
+                meta,
+                job,
+                reason: RejectReason::Overloaded(overloaded),
+                expired,
+            };
+        }
+        self.push(meta, job);
+        Offer::Admitted {
+            shed: Vec::new(),
+            expired,
+        }
     }
 }
 
@@ -274,6 +563,14 @@ mod tests {
             tenant: TenantHandle(tenant),
             class,
             service_hint: hint,
+            deadline: None,
+        }
+    }
+
+    fn meta_dl(tenant: u64, class: SloClass, hint: f64, deadline: f64) -> JobMeta {
+        JobMeta {
+            deadline: Some(deadline),
+            ..meta(tenant, class, hint)
         }
     }
 
@@ -468,6 +765,231 @@ mod tests {
             assert!(q.pop().is_none());
             assert_eq!(q.kind(), kind);
         }
+    }
+
+    #[test]
+    fn remove_evicts_one_job_everywhere() {
+        // `remove` must behave identically across disciplines: the
+        // evicted id never pops, peers keep their order, len stays
+        // consistent, and removing a missing id is a no-op.
+        for kind in DisciplineKind::ALL {
+            let mut q: SchedQueue<u32> = SchedQueue::with_kind(kind);
+            for i in 0..6u32 {
+                q.push(meta(i as u64 % 2, SloClass::Standard, 0.01 + i as f64 * 1e-3), i);
+            }
+            // Internal ids are allocated 0..6 in push order; take id 3.
+            let (m, v) = q.take(3).expect("queued id removable");
+            assert_eq!(v, 3, "{kind}");
+            assert_eq!(m.tenant, TenantHandle(1), "{kind}");
+            assert_eq!(q.len(), 5, "{kind}");
+            assert!(q.take(3).is_none(), "{kind}: double-remove");
+            let mut rest = Vec::new();
+            while let Some((_, v)) = q.pop() {
+                rest.push(v);
+            }
+            assert_eq!(rest.len(), 5, "{kind}");
+            assert!(!rest.contains(&3), "{kind}: evicted job popped");
+        }
+    }
+
+    #[test]
+    fn drain_expired_removes_hopeless_jobs_only() {
+        for kind in DisciplineKind::ALL {
+            let mut q: SchedQueue<u32> = SchedQueue::with_kind(kind);
+            q.push(meta(0, SloClass::Standard, 0.010), 0); // no deadline
+            q.push(meta_dl(1, SloClass::Standard, 0.010, 5.0), 1); // hopeless at 10
+            q.push(meta_dl(2, SloClass::Standard, 0.010, 99.0), 2); // fine
+            q.push(meta_dl(0, SloClass::Standard, 0.010, 10.005), 3); // misses via hint
+            let gone = q.drain_expired(10.0);
+            let mut ids: Vec<u32> = gone.iter().map(|(_, v)| *v).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![1, 3], "{kind}");
+            assert_eq!(q.len(), 2, "{kind}");
+            assert!(q.drain_expired(10.0).is_empty(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn offer_reject_bounds_occupancy() {
+        let mut q: SchedQueue<u32> = SchedQueue::with_kind(DisciplineKind::Fifo);
+        let load = StationLoad {
+            in_service: 1,
+            servers: 1,
+        };
+        let mut admitted = 0;
+        let mut rejected = 0;
+        for i in 0..8u32 {
+            match q.offer(
+                meta(0, SloClass::Standard, 0.020),
+                i,
+                0.0,
+                "tpu",
+                Some(4),
+                OverloadPolicy::Reject,
+                load,
+            ) {
+                Offer::Admitted { .. } => admitted += 1,
+                Offer::Rejected { reason, .. } => {
+                    rejected += 1;
+                    let RejectReason::Overloaded(o) = reason else {
+                        panic!("expected Overloaded");
+                    };
+                    assert_eq!(o.capacity, 4);
+                    assert_eq!(o.queue_depth, 4, "queued 3 + 1 in service");
+                    // Wait estimate = queued predicted service (3 x 20 ms).
+                    assert!((o.estimated_wait_s - 0.060).abs() < 1e-12);
+                }
+            }
+            assert!(q.len() + load.in_service <= 4, "occupancy exceeded cap");
+        }
+        assert_eq!(admitted, 3);
+        assert_eq!(rejected, 5);
+        // Block ignores the capacity entirely.
+        let mut q: SchedQueue<u32> = SchedQueue::with_kind(DisciplineKind::Fifo);
+        for i in 0..8u32 {
+            assert!(matches!(
+                q.offer(
+                    meta(0, SloClass::Standard, 0.01),
+                    i,
+                    0.0,
+                    "tpu",
+                    Some(2),
+                    OverloadPolicy::Block,
+                    load
+                ),
+                Offer::Admitted { .. }
+            ));
+        }
+        assert_eq!(q.len(), 8);
+    }
+
+    #[test]
+    fn offer_shed_evicts_newest_lowest_class() {
+        let mut q: SchedQueue<u32> = SchedQueue::with_kind(DisciplineKind::Fifo);
+        let load = StationLoad {
+            in_service: 0,
+            servers: 1,
+        };
+        let offer = |q: &mut SchedQueue<u32>, class, v| {
+            q.offer(
+                meta(v as u64, class, 0.01),
+                v,
+                0.0,
+                "tpu",
+                Some(3),
+                OverloadPolicy::ShedLowClass,
+                load,
+            )
+        };
+        // Fill: [batch:0, standard:1, batch:2].
+        for (c, v) in [
+            (SloClass::Batch, 0),
+            (SloClass::Standard, 1),
+            (SloClass::Batch, 2),
+        ] {
+            assert!(matches!(offer(&mut q, c, v), Offer::Admitted { .. }));
+        }
+        // Interactive arrival: evicts the NEWEST batch job (2).
+        match offer(&mut q, SloClass::Interactive, 3) {
+            Offer::Admitted { shed, .. } => {
+                assert_eq!(shed.len(), 1);
+                assert_eq!(shed[0].1, 2);
+                assert_eq!(shed[0].0.class, SloClass::Batch);
+            }
+            Offer::Rejected { .. } => panic!("interactive must shed its way in"),
+        }
+        // Another interactive: the remaining batch job (0) goes before
+        // the standard job — lowest class first.
+        match offer(&mut q, SloClass::Interactive, 4) {
+            Offer::Admitted { shed, .. } => assert_eq!(shed[0].1, 0),
+            Offer::Rejected { .. } => panic!("must shed the remaining batch job"),
+        }
+        // Batch arrival with no lower class queued: rejected.
+        assert!(matches!(
+            offer(&mut q, SloClass::Batch, 5),
+            Offer::Rejected {
+                reason: RejectReason::Overloaded(_),
+                ..
+            }
+        ));
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn offer_deadline_drop_rejects_hopeless_and_drains() {
+        let mut q: SchedQueue<u32> = SchedQueue::with_kind(DisciplineKind::Fifo);
+        let load = StationLoad {
+            in_service: 0,
+            servers: 1,
+        };
+        // A job whose deadline already passed is refused outright.
+        match q.offer(
+            meta_dl(0, SloClass::Standard, 0.010, 0.5),
+            0,
+            1.0,
+            "tpu",
+            None,
+            OverloadPolicy::DeadlineDrop,
+            load,
+        ) {
+            Offer::Rejected { reason, .. } => assert_eq!(reason, RejectReason::Expired),
+            Offer::Admitted { .. } => panic!("expired job admitted"),
+        }
+        // Queue a job that expires later; a subsequent offer drains it.
+        assert!(matches!(
+            q.offer(
+                meta_dl(1, SloClass::Standard, 0.010, 2.0),
+                1,
+                1.0,
+                "tpu",
+                None,
+                OverloadPolicy::DeadlineDrop,
+                load
+            ),
+            Offer::Admitted { .. }
+        ));
+        match q.offer(
+            meta_dl(2, SloClass::Standard, 0.010, 99.0),
+            2,
+            5.0,
+            "tpu",
+            None,
+            OverloadPolicy::DeadlineDrop,
+            load,
+        ) {
+            Offer::Admitted { expired, .. } => {
+                assert_eq!(expired.len(), 1);
+                assert_eq!(expired[0].1, 1);
+            }
+            Offer::Rejected { .. } => panic!("live-deadline job refused"),
+        }
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn queued_service_sum_tracks_push_pop_evict() {
+        let mut q: SchedQueue<u32> = SchedQueue::with_kind(DisciplineKind::Fifo);
+        assert_eq!(q.queued_service_s(), 0.0);
+        q.push(meta(0, SloClass::Standard, 0.010), 0);
+        q.push(meta(1, SloClass::Standard, f64::NAN), 1); // NaN counts 0
+        q.push(meta(2, SloClass::Standard, 0.030), 2);
+        assert!((q.queued_service_s() - 0.040).abs() < 1e-12);
+        q.pop();
+        assert!((q.queued_service_s() - 0.030).abs() < 1e-12);
+        q.take(2);
+        assert!(q.queued_service_s().abs() < 1e-12);
+    }
+
+    #[test]
+    fn overload_policy_parse_round_trips() {
+        for p in OverloadPolicy::ALL {
+            assert_eq!(OverloadPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(
+            OverloadPolicy::parse("deadline-drop").unwrap(),
+            OverloadPolicy::DeadlineDrop
+        );
+        assert!(OverloadPolicy::parse("panic").is_err());
     }
 
     #[test]

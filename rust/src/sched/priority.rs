@@ -74,6 +74,17 @@ impl QueueDiscipline for StrictPriority {
         gone
     }
 
+    fn remove(&mut self, id: u64, meta: &JobMeta) -> bool {
+        let lane = &mut self.lanes[meta.class.priority()];
+        let before = lane.len();
+        lane.retain(|(qid, _)| *qid != id);
+        if lane.len() == before {
+            return false;
+        }
+        self.len -= 1;
+        true
+    }
+
     fn kind(&self) -> DisciplineKind {
         DisciplineKind::Priority
     }

@@ -100,6 +100,19 @@ impl QueueDiscipline for ShortestPredicted {
         gone
     }
 
+    fn remove(&mut self, id: u64, _meta: &JobMeta) -> bool {
+        // O(n) heap rebuild per eviction: acceptable because admission
+        // evictions happen on bounded queues (capacity-sized n); an
+        // uncapped DeadlineDrop queue is the one pathological case.
+        let before = self.heap.len();
+        let kept: Vec<Item> = std::mem::take(&mut self.heap)
+            .into_iter()
+            .filter(|item| item.id != id)
+            .collect();
+        self.heap = kept.into();
+        self.heap.len() != before
+    }
+
     fn kind(&self) -> DisciplineKind {
         DisciplineKind::Spsf
     }

@@ -132,6 +132,28 @@ impl QueueDiscipline for WeightedFair {
         flow.q.into_iter().map(|(id, _)| id).collect()
     }
 
+    fn remove(&mut self, id: u64, meta: &JobMeta) -> bool {
+        let Some(flow) = self.flows.get_mut(&meta.tenant) else {
+            return false;
+        };
+        let before = flow.q.len();
+        flow.q.retain(|(qid, _)| *qid != id);
+        if flow.q.len() == before {
+            return false;
+        }
+        self.len -= 1;
+        if flow.q.is_empty() {
+            // Same bookkeeping as drain_tenant: an emptied flow leaves
+            // the active ring, and a removed head forfeits its credit.
+            self.flows.remove(&meta.tenant);
+            if self.active.front() == Some(&meta.tenant) {
+                self.head_credited = false;
+            }
+            self.active.retain(|t| *t != meta.tenant);
+        }
+        true
+    }
+
     fn kind(&self) -> DisciplineKind {
         DisciplineKind::WeightedFair
     }

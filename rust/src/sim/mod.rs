@@ -29,7 +29,10 @@ use std::collections::BinaryHeap;
 
 use crate::analytic::{Config, Tenant, TenantHandle};
 use crate::metrics::{LatencyHistogram, PerClassLatency, TimeSeries, Welford};
-use crate::sched::{DisciplineKind, JobMeta, SchedQueue, SloClass};
+use crate::sched::{
+    DisciplineKind, JobMeta, Offer, OverloadPolicy, RejectReason, SchedQueue, SloClass,
+    StationLoad,
+};
 use crate::tpu::{CostModel, PrefixTables, SramCache};
 use crate::util::rng::Rng;
 use crate::workload::{generate_arrivals, Arrival, RateSchedule};
@@ -51,6 +54,13 @@ pub struct SimOptions {
     /// Queueing discipline for the TPU station and every CPU station —
     /// built through the same `sched` factory the live server uses.
     pub discipline: DisciplineKind,
+    /// Bound on each station's occupancy (queued + in-service) — the
+    /// same admission layer the live server runs. `None` = unbounded.
+    pub capacity: Option<usize>,
+    /// What a full station does with new work (see
+    /// [`OverloadPolicy`]); `Block` reproduces the legacy unbounded
+    /// behavior exactly.
+    pub overload: OverloadPolicy,
 }
 
 impl Default for SimOptions {
@@ -61,17 +71,47 @@ impl Default for SimOptions {
             seed: 1,
             timeline_window: None,
             discipline: DisciplineKind::Fifo,
+            capacity: None,
+            overload: OverloadPolicy::Block,
         }
     }
 }
 
+/// Per-tenant DES statistics. The lifecycle counters follow the shared
+/// semantics documented on [`PerClassLatency`]: `accepted`/`rejected` at
+/// the entry station, `shed`/`expired` post-acceptance drops.
 #[derive(Debug, Clone)]
 pub struct ModelStats {
     pub handle: TenantHandle,
     pub name: String,
     pub completed: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub expired: u64,
     pub latency: LatencyHistogram,
     pub tpu_share: Welford,
+}
+
+impl ModelStats {
+    fn new(handle: TenantHandle, name: String) -> ModelStats {
+        ModelStats {
+            handle,
+            name,
+            completed: 0,
+            accepted: 0,
+            rejected: 0,
+            shed: 0,
+            expired: 0,
+            latency: LatencyHistogram::default(),
+            tpu_share: Welford::new(),
+        }
+    }
+
+    /// Requests dropped by the overload layer after or at admission.
+    pub fn dropped(&self) -> u64 {
+        self.rejected + self.shed + self.expired
+    }
 }
 
 /// One tenant-lifecycle transition to replay mid-run.
@@ -116,8 +156,13 @@ pub struct SimResult {
     pub timeline: Option<TimeSeries>,
     /// Reconfiguration decisions taken (time, new config, decision µs).
     pub reconfigs: Vec<(f64, Config, f64)>,
-    /// Latency accounted per SLO class (across live + retired tenants).
+    /// Latency + lifecycle counters per SLO class (live + retired
+    /// tenants): accepted/rejected/shed/expired/goodput.
     pub per_class: PerClassLatency,
+    /// Peak TPU-station occupancy (queued + in-service) over the run —
+    /// bounded by `capacity` under `Reject`, divergent under `Block` at
+    /// ρ ≥ 1.
+    pub max_tpu_occupancy: usize,
 }
 
 impl SimResult {
@@ -135,6 +180,10 @@ pub struct Request {
     /// SLO class the request arrived with (drives priority/WFQ decisions
     /// and the per-class accounting).
     pub class: SloClass,
+    /// Absolute completion deadline (sim time). `DeadlineDrop` evicts
+    /// requests that can no longer meet it; under every policy a late
+    /// completion is excluded from goodput.
+    pub deadline: Option<f64>,
 }
 
 /// Per-model service-time memo for the current configuration — the DES
@@ -174,15 +223,28 @@ pub struct Simulator {
     // per-model CPU stations
     cpu_queues: Vec<SchedQueue<Request>>,
     cpu_busy: Vec<usize>,
+    /// Station labels for typed rejections (precomputed — the enqueue
+    /// hot path never allocates them).
+    cpu_stations: Vec<String>,
     heap: BinaryHeap<Event>,
     // stats
     stats: Vec<ModelStats>,
     retired: Vec<ModelStats>,
     dropped: u64,
+    max_tpu_occupancy: usize,
     weighted_latency: Welford,
     class_latency: PerClassLatency,
     timeline: Option<TimeSeries>,
     opts: SimOptions,
+}
+
+/// How a request left the system short of completing — mirrors the live
+/// server's counting exactly (see [`PerClassLatency`]).
+#[derive(Debug, Clone, Copy)]
+enum DropKind {
+    Rejected,
+    Shed,
+    Expired,
 }
 
 impl Simulator {
@@ -210,20 +272,20 @@ impl Simulator {
             tpu_busy_time: 0.0,
             cpu_queues: (0..n).map(|_| SchedQueue::with_kind(opts.discipline)).collect(),
             cpu_busy: vec![0; n],
+            cpu_stations: (0..n)
+                .map(|i| format!("cpu {}", TenantHandle(i as u64)))
+                .collect(),
             heap: BinaryHeap::new(),
             stats: tenants
                 .iter()
                 .enumerate()
-                .map(|(i, t)| ModelStats {
-                    handle: TenantHandle(i as u64),
-                    name: t.model.name.clone(),
-                    completed: 0,
-                    latency: LatencyHistogram::default(),
-                    tpu_share: Welford::new(),
+                .map(|(i, t)| {
+                    ModelStats::new(TenantHandle(i as u64), t.model.name.clone())
                 })
                 .collect(),
             retired: Vec::new(),
             dropped: 0,
+            max_tpu_occupancy: 0,
             weighted_latency: Welford::new(),
             class_latency: PerClassLatency::new(),
             timeline: opts.timeline_window.map(TimeSeries::new),
@@ -268,13 +330,8 @@ impl Simulator {
         let h = TenantHandle(self.next_handle);
         self.next_handle += 1;
         self.tables.push(PrefixTables::new(&self.cost, &tenant.model));
-        self.stats.push(ModelStats {
-            handle: h,
-            name: tenant.model.name.clone(),
-            completed: 0,
-            latency: LatencyHistogram::default(),
-            tpu_share: Welford::new(),
-        });
+        self.stats
+            .push(ModelStats::new(h, tenant.model.name.clone()));
         self.tenants.push(tenant);
         self.handles.push(h);
         self.cfg.partitions.push(0);
@@ -282,6 +339,7 @@ impl Simulator {
         self.cpu_queues
             .push(SchedQueue::with_kind(self.opts.discipline));
         self.cpu_busy.push(0);
+        self.cpu_stations.push(format!("cpu {h}"));
         self.memo = build_memo(&self.tables, &self.cfg);
         h
     }
@@ -298,6 +356,7 @@ impl Simulator {
         self.retired.push(self.stats.remove(i));
         self.dropped += self.cpu_queues.remove(i).len() as u64;
         self.cpu_busy.remove(i);
+        self.cpu_stations.remove(i);
         self.dropped += self.tpu_queue.drain_tenant(h).len() as u64;
         self.cache.invalidate(h.0 as usize);
         h
@@ -309,7 +368,11 @@ impl Simulator {
             self.dropped += 1;
             return;
         };
-        if now < self.opts.warmup {
+        // Warmup is a per-REQUEST filter on the arrival time — the same
+        // criterion the accept/drop counters use — so the conservation
+        // identity (accepted == completed + shed + expired after drain)
+        // holds exactly for any warmup, not just warmup = 0.
+        if req.arrived < self.opts.warmup {
             return;
         }
         let latency = now - req.arrived;
@@ -317,14 +380,59 @@ impl Simulator {
         self.stats[i].latency.record(latency);
         self.weighted_latency.add(latency);
         self.class_latency.record(req.class, latency);
+        if req.deadline.map(|d| now > d).unwrap_or(false) {
+            self.class_latency.record_miss(req.class);
+        }
         if let Some(ts) = &mut self.timeline {
             ts.record(now, latency);
         }
     }
 
+    /// Count a request the overload layer resolved short of completion —
+    /// identical bucket semantics to the live server's `count`. Warmup
+    /// arrivals are excluded (same per-request filter as completions).
+    fn count_drop(&mut self, req: &Request, kind: DropKind) {
+        if req.arrived < self.opts.warmup {
+            return;
+        }
+        match self.index_of(req.tenant) {
+            Some(i) => match kind {
+                DropKind::Rejected => {
+                    self.stats[i].rejected += 1;
+                    self.class_latency.record_reject(req.class);
+                }
+                DropKind::Shed => {
+                    self.stats[i].shed += 1;
+                    self.class_latency.record_shed(req.class);
+                }
+                DropKind::Expired => {
+                    self.stats[i].expired += 1;
+                    self.class_latency.record_expired(req.class);
+                }
+            },
+            // Detached while queued: the churn counter owns it.
+            None => self.dropped += 1,
+        }
+    }
+
+    fn count_accept(&mut self, i: usize, req: &Request) {
+        if req.arrived < self.opts.warmup {
+            return;
+        }
+        self.stats[i].accepted += 1;
+        self.class_latency.record_accept(req.class);
+    }
+
     fn start_tpu_if_idle(&mut self, now: f64) {
         if self.tpu_busy {
             return;
+        }
+        // Before each service start, DeadlineDrop evicts jobs that can
+        // no longer meet their deadline — same rule as the live workers.
+        if self.opts.overload == OverloadPolicy::DeadlineDrop {
+            for (_, req) in self.tpu_queue.drain_expired(now) {
+                self.count_drop(&req, DropKind::Expired);
+            }
         }
         let Some((_, req)) = self.tpu_queue.pop() else {
             return;
@@ -337,7 +445,7 @@ impl Simulator {
         let p = self.cfg.partitions[i];
         // Admission under a p=0 config (post-reconfig): route to CPU.
         if p == 0 {
-            self.enqueue_cpu(req, now);
+            self.enqueue_cpu(req, now, false);
             self.start_tpu_if_idle(now);
             return;
         }
@@ -358,7 +466,11 @@ impl Simulator {
         ));
     }
 
-    fn enqueue_cpu(&mut self, req: Request, now: f64) {
+    /// Offer a request to its tenant's CPU station through the bounded
+    /// admission layer. `entry` marks the CPU station as the request's
+    /// entry point (p = 0 routes), which decides the counter an overload
+    /// refusal lands in (`rejected` at entry, `shed` mid-pipeline).
+    fn enqueue_cpu(&mut self, req: Request, now: f64, entry: bool) {
         let Some(i) = self.index_of(req.tenant) else {
             self.dropped += 1;
             return;
@@ -367,12 +479,59 @@ impl Simulator {
             tenant: req.tenant,
             class: req.class,
             service_hint: self.memo[i].cpu_service,
+            deadline: req.deadline,
         };
-        self.cpu_queues[i].push(meta, req);
+        let load = StationLoad {
+            in_service: self.cpu_busy[i],
+            servers: self.cfg.cores[i].max(1),
+        };
+        match self.cpu_queues[i].offer(
+            meta,
+            req,
+            now,
+            &self.cpu_stations[i],
+            self.opts.capacity,
+            self.opts.overload,
+            load,
+        ) {
+            Offer::Admitted { shed, expired } => {
+                if entry {
+                    self.count_accept(i, &req);
+                }
+                for (_, victim) in shed {
+                    self.count_drop(&victim, DropKind::Shed);
+                }
+                for (_, victim) in expired {
+                    self.count_drop(&victim, DropKind::Expired);
+                }
+            }
+            Offer::Rejected {
+                job: refused,
+                reason,
+                expired,
+                ..
+            } => {
+                for (_, victim) in expired {
+                    self.count_drop(&victim, DropKind::Expired);
+                }
+                match reason {
+                    RejectReason::Overloaded(_) => self.count_drop(
+                        &refused,
+                        if entry { DropKind::Rejected } else { DropKind::Shed },
+                    ),
+                    RejectReason::Expired => self.count_drop(&refused, DropKind::Expired),
+                }
+            }
+        }
         self.start_cpu_if_possible(i, now);
     }
 
     fn start_cpu_if_possible(&mut self, m: usize, now: f64) {
+        if self.opts.overload == OverloadPolicy::DeadlineDrop {
+            for (_, req) in self.cpu_queues[m].drain_expired(now) {
+                self.count_drop(&req, DropKind::Expired);
+            }
+        }
         let k = self.cfg.cores[m];
         // k can legitimately be 0 right after a reconfig to full-TPU while
         // stragglers drain; serve them on a borrowed core rather than
@@ -441,6 +600,7 @@ impl Simulator {
                         tenant: TenantHandle(a.model as u64),
                         arrived: a.time,
                         class: a.class,
+                        deadline: a.deadline,
                     },
                 },
             ));
@@ -483,6 +643,7 @@ impl Simulator {
                                 tenant: h,
                                 arrived: t,
                                 class: a.class,
+                                deadline: a.deadline.map(|d| ev.time + d),
                             },
                         },
                     ));
@@ -526,23 +687,68 @@ impl Simulator {
                             EventKind::TpuEnqueue { req },
                         ));
                     } else {
-                        self.enqueue_cpu(req, now);
+                        self.enqueue_cpu(req, now, true);
                     }
                 }
                 EventKind::TpuEnqueue { req } => {
                     // Hint = the deterministic prefix service under the
                     // *current* partition (stale after a reconfig only
                     // for already-queued jobs — advisory, not load-bearing).
-                    let hint = self
-                        .index_of(req.tenant)
-                        .map(|i| self.memo[i].tpu_service)
-                        .unwrap_or(0.0);
+                    let Some(i) = self.index_of(req.tenant) else {
+                        // Detached between arrival and enqueue.
+                        self.dropped += 1;
+                        continue;
+                    };
                     let meta = JobMeta {
                         tenant: req.tenant,
                         class: req.class,
-                        service_hint: hint,
+                        service_hint: self.memo[i].tpu_service,
+                        deadline: req.deadline,
                     };
-                    self.tpu_queue.push(meta, req);
+                    let load = StationLoad {
+                        in_service: usize::from(self.tpu_busy),
+                        servers: 1,
+                    };
+                    match self.tpu_queue.offer(
+                        meta,
+                        req,
+                        now,
+                        "tpu",
+                        self.opts.capacity,
+                        self.opts.overload,
+                        load,
+                    ) {
+                        Offer::Admitted { shed, expired } => {
+                            self.count_accept(i, &req);
+                            for (_, victim) in shed {
+                                self.count_drop(&victim, DropKind::Shed);
+                            }
+                            for (_, victim) in expired {
+                                self.count_drop(&victim, DropKind::Expired);
+                            }
+                        }
+                        Offer::Rejected {
+                            job: refused,
+                            reason,
+                            expired,
+                            ..
+                        } => {
+                            for (_, victim) in expired {
+                                self.count_drop(&victim, DropKind::Expired);
+                            }
+                            match reason {
+                                RejectReason::Overloaded(_) => {
+                                    self.count_drop(&refused, DropKind::Rejected)
+                                }
+                                RejectReason::Expired => {
+                                    self.count_drop(&refused, DropKind::Expired)
+                                }
+                            }
+                        }
+                    }
+                    self.max_tpu_occupancy = self
+                        .max_tpu_occupancy
+                        .max(self.tpu_queue.len() + usize::from(self.tpu_busy));
                     self.start_tpu_if_idle(now);
                 }
                 EventKind::TpuDone { req } => {
@@ -571,7 +777,7 @@ impl Simulator {
                     self.start_tpu_if_idle(now);
                 }
                 EventKind::CpuEnqueue { req } => {
-                    self.enqueue_cpu(req, now);
+                    self.enqueue_cpu(req, now, false);
                 }
                 EventKind::CpuDone { req } => {
                     if let Some(i) = self.index_of(req.tenant) {
@@ -641,6 +847,7 @@ impl Simulator {
             timeline: self.timeline.take(),
             reconfigs,
             per_class: self.class_latency.clone(),
+            max_tpu_occupancy: self.max_tpu_occupancy,
         }
     }
 }

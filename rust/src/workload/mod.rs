@@ -7,7 +7,7 @@ use crate::analytic::{AnalyticModel, Config, Tenant};
 use crate::sched::SloClass;
 use crate::util::rng::Rng;
 
-/// A request arrival: (time, model index, SLO class).
+/// A request arrival: (time, model index, SLO class, optional deadline).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Arrival {
     pub time: f64,
@@ -15,6 +15,10 @@ pub struct Arrival {
     /// The SLO class the request is tagged with (threaded through the
     /// DES into the shared scheduling core and per-class accounting).
     pub class: SloClass,
+    /// Absolute completion deadline (same clock as `time`); `None` = no
+    /// deadline. The `DeadlineDrop` overload policy acts on it; every
+    /// policy accounts goodput against it.
+    pub deadline: Option<f64>,
 }
 
 /// A piecewise-constant rate schedule for one model: (start_time, rate).
@@ -80,16 +84,34 @@ pub fn generate_arrivals(
 
 /// Generate a merged Poisson arrival stream with one SLO class per model
 /// (`classes` is positionally aligned with `schedules`).
-///
-/// Uses thinning against each model's max rate, so rate steps are honored
-/// exactly (not just at event boundaries).
 pub fn generate_arrivals_classed(
     schedules: &[RateSchedule],
     classes: &[SloClass],
     horizon: f64,
     rng: &mut Rng,
 ) -> Vec<Arrival> {
+    let deadlines = vec![None; schedules.len()];
+    generate_arrivals_annotated(schedules, classes, &deadlines, horizon, rng)
+}
+
+/// Generate a merged Poisson arrival stream with one SLO class and one
+/// optional *relative* deadline per model (both positionally aligned with
+/// `schedules`); each arrival's absolute deadline is its arrival time
+/// plus the model's relative deadline.
+///
+/// Uses thinning against each model's max rate, so rate steps are honored
+/// exactly (not just at event boundaries). The RNG consumption is
+/// independent of the annotations, so the same seed yields the same
+/// arrival times with or without deadlines.
+pub fn generate_arrivals_annotated(
+    schedules: &[RateSchedule],
+    classes: &[SloClass],
+    deadlines: &[Option<f64>],
+    horizon: f64,
+    rng: &mut Rng,
+) -> Vec<Arrival> {
     assert_eq!(schedules.len(), classes.len());
+    assert_eq!(schedules.len(), deadlines.len());
     let mut all = Vec::new();
     for (m, sched) in schedules.iter().enumerate() {
         let max_rate = sched
@@ -113,6 +135,7 @@ pub fn generate_arrivals_classed(
                     time: t,
                     model: m,
                     class: classes[m],
+                    deadline: deadlines[m].map(|d| t + d),
                 });
             }
         }
@@ -163,6 +186,28 @@ pub fn rates_for_utilization(
         }
     }
     base.iter().map(|s| s * hi).collect()
+}
+
+/// Like [`rates_for_utilization`], but accepting overload factors ρ ≥ 1
+/// (which no stable queueing solution exists for): sub-critical targets
+/// solve exactly; at or beyond saturation the rates solved at ρ = 0.7
+/// are scaled linearly to the target. Uniform scaling keeps the mix
+/// proportions — and therefore every α term — fixed, so TPU utilization
+/// is exactly linear in the scale and the extrapolation is exact.
+pub fn rates_for_load_factor(
+    am: &AnalyticModel,
+    tenants: &[Tenant],
+    cfg: &Config,
+    shares: &[f64],
+    rho_target: f64,
+) -> Vec<f64> {
+    assert!(rho_target > 0.0);
+    const BASE: f64 = 0.7;
+    if rho_target < 1.0 {
+        return rates_for_utilization(am, tenants, cfg, shares, rho_target);
+    }
+    let base = rates_for_utilization(am, tenants, cfg, shares, BASE);
+    base.iter().map(|r| r * (rho_target / BASE)).collect()
 }
 
 /// Per-TPU-load-equalizing shares: each model contributes the same TPU busy
@@ -275,6 +320,75 @@ mod tests {
         let m0 = arr.iter().filter(|a| a.model == 0).count();
         let m1 = arr.iter().filter(|a| a.model == 1).count();
         assert!(m0 > 1500 && m1 > 1500);
+    }
+
+    #[test]
+    fn annotated_arrivals_carry_absolute_deadlines() {
+        let mut rng = Rng::new(13);
+        let arr = generate_arrivals_annotated(
+            &[RateSchedule::constant(3.0), RateSchedule::constant(3.0)],
+            &[SloClass::Interactive, SloClass::Standard],
+            &[Some(0.050), None],
+            100.0,
+            &mut rng,
+        );
+        assert!(!arr.is_empty());
+        for a in &arr {
+            match a.model {
+                0 => {
+                    let d = a.deadline.expect("model 0 annotated");
+                    assert!((d - (a.time + 0.050)).abs() < 1e-12);
+                }
+                _ => assert_eq!(a.deadline, None),
+            }
+        }
+        // Annotations do not perturb the stream: same seed, same times.
+        let mut rng2 = Rng::new(13);
+        let plain = generate_arrivals_classed(
+            &[RateSchedule::constant(3.0), RateSchedule::constant(3.0)],
+            &[SloClass::Interactive, SloClass::Standard],
+            100.0,
+            &mut rng2,
+        );
+        assert_eq!(plain.len(), arr.len());
+        for (a, b) in arr.iter().zip(&plain) {
+            assert_eq!(a.time, b.time);
+            assert_eq!(a.model, b.model);
+        }
+    }
+
+    #[test]
+    fn load_factor_rates_extrapolate_linearly_past_saturation() {
+        let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("a", 5, 1_500_000, 400_000_000),
+                rate: 0.0,
+            },
+            Tenant {
+                model: synthetic_model("b", 5, 1_500_000, 300_000_000),
+                rate: 0.0,
+            },
+        ];
+        let cfg = Config::all_tpu(&tenants);
+        let shares = [1.0, 1.0];
+        // Sub-critical: defers to the exact solver.
+        let sub = rates_for_load_factor(&am, &tenants, &cfg, &shares, 0.5);
+        let exact = rates_for_utilization(&am, &tenants, &cfg, &shares, 0.5);
+        assert_eq!(sub, exact);
+        // Overload: 1.5 = (1.5/0.7) x the 0.7-solution, and the implied
+        // utilization really is 1.5 (linear in the uniform scale).
+        let over = rates_for_load_factor(&am, &tenants, &cfg, &shares, 1.5);
+        let scaled: Vec<Tenant> = tenants
+            .iter()
+            .zip(&over)
+            .map(|(t, r)| Tenant {
+                model: t.model.clone(),
+                rate: *r,
+            })
+            .collect();
+        let rho = am.tpu_utilization(&scaled, &cfg);
+        assert!((rho - 1.5).abs() < 0.03, "rho={rho}");
     }
 
     #[test]

@@ -8,13 +8,16 @@ use crate::util::json::Json;
 
 use super::Arrival;
 
-/// Serialize arrivals to the on-disk trace format:
-/// `{"version":2, "arrivals":[[t, model, class], ...], "models":[...]}`
-/// where `class` is the [`SloClass`] index. Version-1 traces (two-element
-/// `[t, model]` pairs) load as [`SloClass::Standard`].
+/// Serialize arrivals to the on-disk trace format (version 3):
+/// `{"version":3, "arrivals":[[t, model, class, deadline], ...],
+/// "models":[...]}` where `class` is the [`SloClass`] index and
+/// `deadline` is the absolute completion deadline (`null` = none).
+/// Legacy loads: version-1 traces (two-element `[t, model]` pairs) load
+/// as [`SloClass::Standard`] with no deadline; version-2 traces
+/// (three-element, classed) load with no deadline.
 pub fn to_json(arrivals: &[Arrival], model_names: &[String]) -> Json {
     Json::from_pairs(vec![
-        ("version", Json::Num(2.0)),
+        ("version", Json::Num(3.0)),
         (
             "models",
             Json::Arr(model_names.iter().map(|n| Json::Str(n.clone())).collect()),
@@ -29,6 +32,10 @@ pub fn to_json(arrivals: &[Arrival], model_names: &[String]) -> Json {
                             Json::Num(a.time),
                             Json::Num(a.model as f64),
                             Json::Num(a.class.index() as f64),
+                            match a.deadline {
+                                Some(d) => Json::Num(d),
+                                None => Json::Null,
+                            },
                         ])
                     })
                     .collect(),
@@ -54,8 +61,8 @@ pub fn from_json(j: &Json) -> Result<(Vec<Arrival>, Vec<String>), String> {
     {
         let a = pair
             .as_arr()
-            .filter(|a| a.len() == 2 || a.len() == 3)
-            .ok_or_else(|| format!("arrival {i} is not a [t, model(, class)] entry"))?;
+            .filter(|a| (2..=4).contains(&a.len()))
+            .ok_or_else(|| format!("arrival {i} is not a [t, model(, class(, deadline))] entry"))?;
         let time = a[0]
             .as_f64()
             .ok_or_else(|| format!("arrival {i}: bad time"))?;
@@ -69,6 +76,16 @@ pub fn from_json(j: &Json) -> Result<(Vec<Arrival>, Vec<String>), String> {
                 .and_then(SloClass::from_index)
                 .ok_or_else(|| format!("arrival {i}: bad SLO class"))?,
         };
+        let deadline = match a.get(3) {
+            None | Some(Json::Null) => None,
+            Some(d) => {
+                let d = d
+                    .as_f64()
+                    .filter(|d| d.is_finite() && *d >= 0.0)
+                    .ok_or_else(|| format!("arrival {i}: bad deadline"))?;
+                Some(d)
+            }
+        };
         if model >= models.len() {
             return Err(format!("arrival {i}: model {model} out of range"));
         }
@@ -79,7 +96,12 @@ pub fn from_json(j: &Json) -> Result<(Vec<Arrival>, Vec<String>), String> {
             return Err(format!("arrival {i}: invalid time {time}"));
         }
         last_t = time;
-        arrivals.push(Arrival { time, model, class });
+        arrivals.push(Arrival {
+            time,
+            model,
+            class,
+            deadline,
+        });
     }
     Ok((arrivals, models))
 }
@@ -135,29 +157,54 @@ mod tests {
                 time: 0.5,
                 model: 0,
                 class: SloClass::Interactive,
+                deadline: Some(0.55),
             },
             Arrival {
                 time: 1.5,
                 model: 1,
                 class: SloClass::Batch,
+                deadline: None,
             },
         ];
         let names = vec!["a".to_string(), "b".to_string()];
-        let (back, _) = from_json(&to_json(&arr, &names)).unwrap();
+        let j = to_json(&arr, &names);
+        assert_eq!(j.f64_of("version").unwrap(), 3.0);
+        let (back, _) = from_json(&j).unwrap();
         assert_eq!(back, arr);
-        // Version-1 two-element entries default to Standard.
+        // Version-1 two-element entries default to Standard, no deadline.
         let legacy = crate::util::json::parse(
             r#"{"version":1,"models":["a"],"arrivals":[[1.0, 0]]}"#,
         )
         .unwrap();
         let (back, _) = from_json(&legacy).unwrap();
         assert_eq!(back[0].class, SloClass::Standard);
+        assert_eq!(back[0].deadline, None);
+        // Version-2 three-element entries load with no deadline.
+        let v2 = crate::util::json::parse(
+            r#"{"version":2,"models":["a"],"arrivals":[[1.0, 0, 2]]}"#,
+        )
+        .unwrap();
+        let (back, _) = from_json(&v2).unwrap();
+        assert_eq!(back[0].class, SloClass::Batch);
+        assert_eq!(back[0].deadline, None);
         // Out-of-range class index is rejected.
         let bad = crate::util::json::parse(
             r#"{"version":2,"models":["a"],"arrivals":[[1.0, 0, 9]]}"#,
         )
         .unwrap();
         assert!(from_json(&bad).is_err());
+        // Negative/non-finite deadlines are rejected; null loads as None.
+        let bad = crate::util::json::parse(
+            r#"{"version":3,"models":["a"],"arrivals":[[1.0, 0, 0, -2.0]]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&bad).is_err());
+        let ok = crate::util::json::parse(
+            r#"{"version":3,"models":["a"],"arrivals":[[1.0, 0, 0, null]]}"#,
+        )
+        .unwrap();
+        let (back, _) = from_json(&ok).unwrap();
+        assert_eq!(back[0].deadline, None);
     }
 
     #[test]

@@ -132,7 +132,7 @@ fn server_round_trip_split_execution() {
         .unwrap();
     for h in [h_sq, h_mb] {
         let n_in: usize = server.model_meta(h).unwrap().input_shape.iter().product();
-        let done = server.infer(h, vec![0.5; n_in]).unwrap();
+        let done = server.submit(h, vec![0.5; n_in]).wait().unwrap();
         assert_eq!(done.output.len(), 10, "{h}");
         assert!(done.latency_s > 0.0);
     }
@@ -141,14 +141,14 @@ fn server_round_trip_split_execution() {
 
     // Split output must equal the full-TPU output (numerics invariant).
     let n_in: usize = server.model_meta(h_sq).unwrap().input_shape.iter().product();
-    let split_out = server.infer(h_sq, vec![0.25; n_in]).unwrap().output;
+    let split_out = server.submit(h_sq, vec![0.25; n_in]).wait().unwrap().output;
     server
         .set_config(Config {
             partitions: vec![2, 5],
             cores: vec![0, 0],
         })
         .unwrap();
-    let full_out = server.infer(h_sq, vec![0.25; n_in]).unwrap().output;
+    let full_out = server.submit(h_sq, vec![0.25; n_in]).wait().unwrap().output;
     assert_eq!(split_out.len(), full_out.len());
     for (a, b) in split_out.iter().zip(&full_out) {
         assert!((a - b).abs() < 1e-4, "split vs full mismatch: {a} vs {b}");

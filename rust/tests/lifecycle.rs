@@ -10,10 +10,12 @@ use std::time::Duration;
 
 use swapless::analytic::{Config, TenantHandle};
 use swapless::config::{HardwareSpec, RuntimeConfig};
-use swapless::coordinator::{AttachError, AttachOptions, ConfigError, Server, ServerBuilder};
+use swapless::coordinator::{
+    AttachError, AttachOptions, ConfigError, Request, RequestError, Server, ServerBuilder,
+};
 use swapless::model::Manifest;
 use swapless::runtime::service::ExecBackend;
-use swapless::sched::SloClass;
+use swapless::sched::{OverloadPolicy, SloClass};
 use swapless::tpu::CostModel;
 
 fn builder() -> ServerBuilder {
@@ -50,10 +52,10 @@ fn attach_infer_detach_round_trip() {
     let cfg = server.current_config();
     assert_eq!(cfg.partitions.len(), 2);
 
-    let a = server.infer(ha, input_for(&server, ha)).unwrap();
+    let a = server.submit(ha, input_for(&server, ha)).wait().unwrap();
     assert_eq!(a.tenant, ha);
     assert!(a.latency_s > 0.0);
-    let b = server.infer(hb, input_for(&server, hb)).unwrap();
+    let b = server.submit(hb, input_for(&server, hb)).wait().unwrap();
     assert_eq!(b.tenant, hb);
 
     // Detach A: B is undisturbed, A's handle turns into clean errors.
@@ -63,9 +65,9 @@ fn attach_infer_detach_round_trip() {
     assert_eq!(final_a.latency.count(), 1);
     assert_eq!(server.handles(), vec![hb]);
     assert_eq!(server.current_config().partitions.len(), 1);
-    assert!(server.infer(ha, input_a).is_err());
+    assert!(server.submit(ha, input_a).wait().is_err());
     assert!(server.detach(ha).is_err(), "double detach errors");
-    server.infer(hb, input_for(&server, hb)).unwrap();
+    server.submit(hb, input_for(&server, hb)).wait().unwrap();
 
     let stats = server.stats();
     assert_eq!(stats.completed, 3);
@@ -106,7 +108,7 @@ fn attach_unknown_model_and_admission_rejection() {
         other => panic!("expected Admission rejection, got {other:?}"),
     }
     assert_eq!(server.handles(), vec![h]);
-    server.infer(h, input_for(&server, h)).unwrap();
+    server.submit(h, input_for(&server, h)).wait().unwrap();
 }
 
 #[test]
@@ -155,7 +157,7 @@ fn set_config_validates_and_counts_reconfigs() {
     server.set_config(cfg).unwrap();
     assert_eq!(server.stats().reconfigs, before + 1, "no-op not counted");
     // The installed config serves correctly.
-    server.infer(h, input_for(&server, h)).unwrap();
+    server.submit(h, input_for(&server, h)).wait().unwrap();
 }
 
 #[test]
@@ -173,7 +175,7 @@ fn split_equals_full_through_live_server() {
             cores: vec![0],
         })
         .unwrap();
-    let full = server.infer(h, input_for(&server, h)).unwrap().output;
+    let full = server.submit(h, input_for(&server, h)).wait().unwrap().output;
     for p in 1..pp {
         server
             .set_config(Config {
@@ -181,7 +183,7 @@ fn split_equals_full_through_live_server() {
                 cores: vec![2],
             })
             .unwrap();
-        let split = server.infer(h, input_for(&server, h)).unwrap().output;
+        let split = server.submit(h, input_for(&server, h)).wait().unwrap().output;
         assert_eq!(split, full, "split at p={p} diverged from full-TPU run");
     }
 }
@@ -232,20 +234,19 @@ fn concurrent_submissions_race_churn_cleanly() {
                 // input shape); a detached handle must error, not panic.
                 pending.push(server.submit(h, vec![0.5; 512]));
                 if pending.len() >= 8 {
-                    for rx in pending.drain(..) {
-                        match rx.recv() {
-                            Ok(Ok(_)) => ok += 1,
-                            Ok(Err(_)) => clean_errors += 1,
+                    for ticket in pending.drain(..) {
+                        match ticket.wait() {
+                            Ok(_) => ok += 1,
                             Err(_) => clean_errors += 1,
                         }
                     }
                 }
                 std::thread::sleep(Duration::from_millis(1));
             }
-            for rx in pending {
-                match rx.recv() {
-                    Ok(Ok(_)) => ok += 1,
-                    _ => clean_errors += 1,
+            for ticket in pending {
+                match ticket.wait() {
+                    Ok(_) => ok += 1,
+                    Err(_) => clean_errors += 1,
                 }
             }
             (ok, clean_errors)
@@ -286,6 +287,15 @@ fn concurrent_submissions_race_churn_cleanly() {
     assert_eq!(stats.completed, total_ok);
     let hist_sum: u64 = stats.per_tenant.iter().map(|t| t.latency.count()).sum();
     assert_eq!(hist_sum, stats.completed);
+    // Request conservation: every submission resolved exactly once —
+    // completed, failed (detach races), or dropped by the overload layer
+    // (zero here: Block policy, no deadlines, no cancellations).
+    assert_eq!(
+        stats.completed + stats.failed + stats.dropped(),
+        total_ok + total_clean,
+        "tickets resolved ({}) != submissions accounted",
+        total_ok + total_clean
+    );
     // The stable tenant's histogram lives on its original handle.
     let stable_stats = stats.tenant(stable).expect("stable tenant present");
     assert!(!stable_stats.detached);
@@ -348,7 +358,7 @@ fn policy_thread_drives_reconfigurations() {
     let input = input_for(&server, h);
     let deadline = std::time::Instant::now() + Duration::from_secs(5);
     while server.stats().reconfigs < 4 && std::time::Instant::now() < deadline {
-        server.infer(h, input.clone()).unwrap();
+        server.submit(h, input.clone()).wait().unwrap();
         std::thread::sleep(Duration::from_millis(5));
     }
     let stats = server.stats();
@@ -363,4 +373,203 @@ fn policy_thread_drives_reconfigurations() {
     let cfg = server.current_config();
     assert_eq!(cfg.partitions, vec![0]);
     assert!(cfg.cores[0] == 1 || cfg.cores[0] == 2);
+}
+
+#[test]
+fn detach_resolves_every_cpu_pool_ticket() {
+    // The detach path claims queued CPU-pool jobs "fail through their
+    // completion callbacks" — pin it: pile work onto a tenant's CPU pool
+    // (all-CPU config, single gated core), detach while most of it is
+    // still queued, and assert EVERY in-flight ticket resolves — a
+    // completion or a typed error, never a hang — and that the counters
+    // conserve the submission count.
+    let server = builder().adaptive(false).build().unwrap();
+    let h = server
+        .attach("mobilenetv2", AttachOptions { rate_hint: 2.0, ..Default::default() })
+        .unwrap();
+    server
+        .set_config(Config {
+            partitions: vec![0],
+            cores: vec![1],
+        })
+        .unwrap();
+    const N: usize = 48;
+    let input = input_for(&server, h);
+    let mut pending = Vec::new();
+    for _ in 0..N {
+        pending.push(server.submit(h, input.clone()));
+    }
+    // Detach races the drain: some jobs executed, the rest are queued in
+    // the CPU pool (never the TPU queue — partitions are 0).
+    let final_stats = server.detach(h).unwrap();
+    let mut completed = 0u64;
+    let mut detached_errors = 0u64;
+    let mut other_errors = 0u64;
+    for mut ticket in pending {
+        match ticket.wait_timeout(Duration::from_secs(10)) {
+            None => panic!("ticket hung across the racing detach"),
+            Some(Ok(_)) => completed += 1,
+            Some(Err(RequestError::Detached(e))) => {
+                assert_eq!(e, h);
+                detached_errors += 1;
+            }
+            Some(Err(_)) => other_errors += 1,
+        }
+    }
+    assert_eq!(completed + detached_errors + other_errors, N as u64);
+    assert!(
+        detached_errors > 0,
+        "no job was still queued at detach — the race never happened \
+         (completed {completed})"
+    );
+    // In-flight work that finished landed in the retired histogram; the
+    // failures landed in the failed counter. Nothing is lost.
+    let stats = server.stats();
+    assert_eq!(stats.completed, completed);
+    assert_eq!(final_stats.handle, h);
+    assert_eq!(stats.failed, detached_errors + other_errors);
+    assert_eq!(stats.completed + stats.failed + stats.dropped(), N as u64);
+}
+
+#[test]
+fn bounded_admission_rejects_with_typed_backpressure() {
+    // queue-cap 0 + Reject: every submission is refused synchronously
+    // with the typed Overloaded payload (station, depth, capacity, wait
+    // estimate) — and the counters attribute it per tenant and class.
+    let server = builder()
+        .adaptive(false)
+        .queue_capacity(0)
+        .overload(OverloadPolicy::Reject)
+        .build()
+        .unwrap();
+    let h = server
+        .attach(
+            "mobilenetv2",
+            AttachOptions {
+                rate_hint: 1.0,
+                class: SloClass::Interactive,
+            },
+        )
+        .unwrap();
+    match server.submit(h, input_for(&server, h)).wait() {
+        Err(RequestError::Overloaded(o)) => {
+            assert_eq!(o.capacity, 0);
+            assert_eq!(o.queue_depth, 0);
+            assert_eq!(o.estimated_wait_s, 0.0);
+            assert!(o.station == "tpu" || o.station.starts_with("cpu"));
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    let stats = server.stats();
+    assert_eq!(stats.accepted, 0);
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.per_class.rejected(SloClass::Interactive), 1);
+    assert_eq!(stats.tenant(h).unwrap().rejected, 1);
+    // Raising the cap un-wedges the same server.
+    // (cap is fixed at build time; a fresh server with headroom serves.)
+    let server2 = builder()
+        .adaptive(false)
+        .queue_capacity(64)
+        .overload(OverloadPolicy::Reject)
+        .build()
+        .unwrap();
+    let h2 = server2
+        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0, ..Default::default() })
+        .unwrap();
+    server2.submit(h2, input_for(&server2, h2)).wait().unwrap();
+    assert_eq!(server2.stats().accepted, 1);
+}
+
+#[test]
+fn cancel_resolves_queued_request_with_typed_error() {
+    // A cancelled request that has not started executing resolves with
+    // RequestError::Cancelled and counts as cancelled, not failed.
+    let server = builder().adaptive(false).build().unwrap();
+    let h = server
+        .attach("inceptionv4", AttachOptions { rate_hint: 1.0, ..Default::default() })
+        .unwrap();
+    let input = input_for(&server, h);
+    // Keep the single TPU worker busy with a burst, then cancel the tail
+    // submissions while they queue behind it.
+    let mut head = Vec::new();
+    for _ in 0..4 {
+        head.push(server.submit(h, input.clone()));
+    }
+    let tail = server.submit(h, input.clone());
+    tail.cancel();
+    assert!(tail.is_cancelled());
+    let tail_result = tail.wait();
+    for t in head {
+        t.wait().unwrap();
+    }
+    match tail_result {
+        // Overwhelmingly: cancelled while queued -> typed Cancelled.
+        Err(RequestError::Cancelled) => {
+            let stats = server.stats();
+            assert_eq!(stats.cancelled, 1);
+            assert_eq!(stats.failed, 0);
+        }
+        // The worker may already have started it — then it completes.
+        Ok(_) => {}
+        other => panic!("expected Cancelled or completion, got {other:?}"),
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_still_serve_one_more_pr() {
+    // submit_with_class / infer are thin shims over the Request/Ticket
+    // API for one deprecation cycle; they must keep working and infer
+    // must surface the real typed failure, not "server dropped request".
+    let server = builder().adaptive(false).build().unwrap();
+    let h = server
+        .attach("squeezenet", AttachOptions { rate_hint: 1.0, ..Default::default() })
+        .unwrap();
+    let done = server
+        .submit_with_class(h, input_for(&server, h), SloClass::Batch)
+        .wait()
+        .unwrap();
+    assert_eq!(done.tenant, h);
+    assert_eq!(server.stats().per_class.get(SloClass::Batch).count(), 1);
+    let input = input_for(&server, h);
+    server.infer(h, input.clone()).unwrap();
+    server.detach(h).unwrap();
+    // The flattening bug is gone: the typed reason survives into anyhow.
+    let err = server.infer(h, input).unwrap_err();
+    assert!(
+        err.to_string().contains("not attached"),
+        "real failure lost: {err}"
+    );
+}
+
+#[test]
+fn deadline_drop_expires_hopeless_requests_live() {
+    // Under DeadlineDrop, a request whose deadline already passed at
+    // submission resolves immediately with DeadlineExceeded; a generous
+    // deadline sails through. (The sim-vs-live drop parity test pins the
+    // same rule against the DES.)
+    let server = builder()
+        .adaptive(false)
+        .overload(OverloadPolicy::DeadlineDrop)
+        .build()
+        .unwrap();
+    let h = server
+        .attach("mobilenetv2", AttachOptions { rate_hint: 1.0, ..Default::default() })
+        .unwrap();
+    let input = input_for(&server, h);
+    match server
+        .submit(h, Request::new(input.clone()).with_deadline(Duration::ZERO))
+        .wait()
+    {
+        Err(RequestError::DeadlineExceeded { .. }) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    server
+        .submit(h, Request::new(input).with_deadline(Duration::from_secs(30)))
+        .wait()
+        .unwrap();
+    let stats = server.stats();
+    assert_eq!(stats.expired, 1);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.per_class.goodput(SloClass::Standard), 1);
 }

@@ -662,3 +662,200 @@ fn prop_rate_solver_hits_target_utilization() {
         );
     }
 }
+
+#[test]
+fn prop_overload_conservation_and_capacity_bound() {
+    // Satellite invariant of the bounded-admission layer: under ANY
+    // overload policy and a random workload/config, every arrival
+    // resolves exactly once — per class and per tenant,
+    //   arrivals == completed + rejected + shed + expired
+    // once the system fully drains (arrivals stop long before the
+    // horizon; no churn, warmup 0). And with a bounded queue the TPU
+    // station's instantaneous occupancy (queued + in-service) never
+    // exceeds the capacity under any policy but Block.
+    use swapless::sched::{OverloadPolicy, SloClass};
+    use swapless::sim::Simulator;
+    use swapless::workload::{generate_arrivals_annotated, RateSchedule};
+
+    let cost = CostModel::new(HardwareSpec::default());
+    const ARRIVAL_SPAN: f64 = 40.0;
+    for (case, policy) in (0..24u64).flat_map(|c| {
+        OverloadPolicy::ALL.into_iter().map(move |p| (c, p))
+    }) {
+        let seed = 5000 + case;
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let n = tenants.len();
+        let cfg = Config {
+            partitions: tenants
+                .iter()
+                .map(|t| rng.below(t.model.partition_points + 1))
+                .collect(),
+            cores: (0..n).map(|_| rng.below(3)).collect(),
+        };
+        let capacity = 1 + rng.below(8);
+        let schedules: Vec<RateSchedule> = tenants
+            .iter()
+            .map(|t| RateSchedule::constant(t.rate))
+            .collect();
+        let classes: Vec<SloClass> = (0..n)
+            .map(|_| SloClass::from_index(rng.below(3)).unwrap())
+            .collect();
+        let deadlines: Vec<Option<f64>> = (0..n)
+            .map(|_| {
+                if rng.f64() < 0.5 {
+                    Some(rng.range_f64(0.001, 0.5))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let mut arr_rng = Rng::new(seed ^ 0xABCD);
+        let arrivals = generate_arrivals_annotated(
+            &schedules,
+            &classes,
+            &deadlines,
+            ARRIVAL_SPAN,
+            &mut arr_rng,
+        );
+        let mut sim = Simulator::new(
+            &cost,
+            &tenants,
+            cfg,
+            SimOptions {
+                horizon: 5000.0,
+                warmup: 0.0,
+                seed,
+                capacity: Some(capacity),
+                overload: policy,
+                ..SimOptions::default()
+            },
+        );
+        let res = sim.run(&arrivals, None);
+        assert_eq!(res.dropped, 0, "seed {seed} {policy}: churn-drops without churn");
+
+        // Per-class conservation.
+        for class in SloClass::ALL {
+            let arrived = arrivals.iter().filter(|a| a.class == class).count() as u64;
+            let resolved = res.per_class.get(class).count()
+                + res.per_class.rejected(class)
+                + res.per_class.shed(class)
+                + res.per_class.expired(class);
+            assert_eq!(
+                resolved, arrived,
+                "seed {seed} {policy} class {class}: {resolved} != {arrived}"
+            );
+            // Acceptance brackets: accepted covers everything that got
+            // in, i.e. completions + post-acceptance drops (expired
+            // splits across entry refusals and evictions).
+            let accepted = res.per_class.accepted(class);
+            let completed = res.per_class.get(class).count();
+            assert!(accepted >= completed + res.per_class.shed(class));
+            assert!(
+                accepted
+                    <= completed
+                        + res.per_class.shed(class)
+                        + res.per_class.expired(class)
+            );
+        }
+        // Per-tenant conservation.
+        for (m, stats) in res.per_model.iter().enumerate() {
+            let arrived = arrivals.iter().filter(|a| a.model == m).count() as u64;
+            assert_eq!(
+                stats.completed + stats.rejected + stats.shed + stats.expired,
+                arrived,
+                "seed {seed} {policy} model {m}"
+            );
+        }
+        // Occupancy bound (queued + in-service <= cap) for every bounded
+        // policy; Block is the unbounded baseline.
+        if policy != OverloadPolicy::Block {
+            assert!(
+                res.max_tpu_occupancy <= capacity,
+                "seed {seed} {policy}: occupancy {} > cap {capacity}",
+                res.max_tpu_occupancy
+            );
+        }
+        // Drop-counter reachability: Block never drops anything; only
+        // DeadlineDrop ever expires work. (`shed` can fire under Reject
+        // and DeadlineDrop too — a TPU-accepted job refused at a full
+        // internal CPU station counts as a mid-pipeline shed.)
+        match policy {
+            OverloadPolicy::Block => {
+                assert_eq!(res.per_class.rejected_total(), 0);
+                assert_eq!(res.per_class.shed_total(), 0);
+                assert_eq!(res.per_class.expired_total(), 0);
+            }
+            OverloadPolicy::Reject | OverloadPolicy::ShedLowClass => {
+                assert_eq!(res.per_class.expired_total(), 0);
+            }
+            OverloadPolicy::DeadlineDrop => {}
+        }
+    }
+}
+
+#[test]
+fn prop_reject_wait_estimate_matches_analytic_helper() {
+    // The typed Overloaded error's wait estimate is the queue's running
+    // predicted-service sum divided across the station's servers — pin
+    // it against the analytic layer's helper over random backlogs.
+    use swapless::analytic::TenantHandle;
+    use swapless::sched::{
+        DisciplineKind, JobMeta, Offer, OverloadPolicy, RejectReason, SchedQueue, SloClass,
+        StationLoad,
+    };
+
+    let am = AnalyticModel::new(CostModel::new(HardwareSpec::default()));
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let cap = 1 + rng.below(12);
+        let servers = 1 + rng.below(4);
+        let mut q: SchedQueue<u32> = SchedQueue::with_kind(DisciplineKind::Fifo);
+        // Fill to capacity with random hints.
+        for i in 0..cap {
+            q.push(
+                JobMeta {
+                    tenant: TenantHandle(i as u64 % 3),
+                    class: SloClass::Standard,
+                    service_hint: rng.range_f64(1e-4, 0.05),
+                    deadline: None,
+                },
+                i as u32,
+            );
+        }
+        let backlog = q.queued_service_s();
+        let offer = q.offer(
+            JobMeta {
+                tenant: TenantHandle(9),
+                class: SloClass::Standard,
+                service_hint: 0.01,
+                deadline: None,
+            },
+            999,
+            0.0,
+            "tpu",
+            Some(cap),
+            OverloadPolicy::Reject,
+            StationLoad {
+                in_service: 0,
+                servers,
+            },
+        );
+        match offer {
+            Offer::Rejected {
+                reason: RejectReason::Overloaded(o),
+                ..
+            } => {
+                let expect = am.station_wait_estimate(backlog, servers);
+                assert!(
+                    (o.estimated_wait_s - expect).abs() < 1e-12,
+                    "seed {seed}: {} vs {expect}",
+                    o.estimated_wait_s
+                );
+                assert_eq!(o.queue_depth, cap);
+                assert_eq!(o.capacity, cap);
+            }
+            _ => panic!("seed {seed}: full queue must reject"),
+        }
+    }
+}

@@ -9,12 +9,14 @@
 //! 3. every discipline serves a live multi-tenant workload end-to-end
 //!    (no deadlocks in the worker loops).
 
+use std::time::Duration;
+
 use swapless::analytic::{Config, Tenant, TenantHandle};
 use swapless::config::HardwareSpec;
-use swapless::coordinator::{AttachOptions, Server, ServerBuilder};
+use swapless::coordinator::{AttachOptions, Request, RequestError, Server, ServerBuilder};
 use swapless::model::{synthetic_model, Manifest};
 use swapless::runtime::service::ExecBackend;
-use swapless::sched::{DisciplineKind, JobMeta, SchedQueue, SloClass};
+use swapless::sched::{DisciplineKind, JobMeta, OverloadPolicy, SchedQueue, SloClass};
 use swapless::sim::{SimOptions, Simulator};
 use swapless::tpu::CostModel;
 use swapless::workload::Arrival;
@@ -48,6 +50,7 @@ fn one_discipline_object_serves_both_call_patterns() {
             tenant: TenantHandle(i % 3),
             class: SloClass::from_index((i % 3) as usize).unwrap(),
             service_hint: 0.010 + (i % 4) as f64 * 0.005,
+            deadline: None,
         })
         .collect();
     let mut q: SchedQueue<usize> = SchedQueue::with_kind(DisciplineKind::Fifo);
@@ -108,6 +111,7 @@ fn sim_vs_live_parity_under_fifo() {
                 time: 0.05 * (2 * i + m) as f64,
                 model: m,
                 class: SloClass::Standard,
+                deadline: None,
             });
         }
     }
@@ -163,8 +167,8 @@ fn sim_vs_live_parity_under_fifo() {
         }
     }
     let mut live_counts = [0u64; 2];
-    for (h, rx) in pending {
-        let done = rx.recv().unwrap().unwrap();
+    for (h, ticket) in pending {
+        let done = ticket.wait().unwrap();
         assert_eq!(done.tenant, h);
         live_counts[if h == ha { 0 } else { 1 }] += 1;
     }
@@ -215,15 +219,14 @@ fn every_discipline_serves_live_traffic() {
                 pending.push(server.submit(hb, input_for(&server, hb)));
             } else {
                 // Per-request override lands in the overridden class.
-                pending.push(server.submit_with_class(
+                pending.push(server.submit(
                     hb,
-                    input_for(&server, hb),
-                    SloClass::Standard,
+                    Request::new(input_for(&server, hb)).with_class(SloClass::Standard),
                 ));
             }
         }
-        for rx in pending {
-            rx.recv().unwrap().unwrap_or_else(|e| panic!("{kind}: {e}"));
+        for ticket in pending {
+            ticket.wait().unwrap_or_else(|e| panic!("{kind}: {e}"));
         }
         let stats = server.stats();
         assert_eq!(stats.failed, 0, "{kind}");
@@ -232,4 +235,146 @@ fn every_discipline_serves_live_traffic() {
         assert_eq!(stats.per_class.get(SloClass::Batch).count(), 4, "{kind}");
         assert_eq!(stats.per_class.get(SloClass::Standard).count(), 4, "{kind}");
     }
+}
+
+/// Drop parity: the SAME deadline-annotated workload under `DeadlineDrop`
+/// yields identical per-tenant accepted/rejected/dropped counts in the
+/// DES and the live server. Tenant `a` carries a generous deadline
+/// (every request completes); tenant `b`'s deadline is already hopeless
+/// at submission (deadline = arrival time, positive service estimate),
+/// so every request is deterministically expired at admission on both
+/// paths — timing-independent, exact counts.
+#[test]
+fn sim_vs_live_drop_parity_under_deadline_drop() {
+    const PER_TENANT: usize = 20;
+
+    // --- DES side ---------------------------------------------------
+    let cost = CostModel::new(HardwareSpec::default());
+    let tenants = vec![
+        Tenant {
+            model: synthetic_model("a", 4, 800_000, 300_000_000),
+            rate: 2.0,
+        },
+        Tenant {
+            model: synthetic_model("b", 5, 900_000, 350_000_000),
+            rate: 2.0,
+        },
+    ];
+    let cfg = Config::all_tpu(&tenants);
+    let mut arrivals = Vec::new();
+    for i in 0..PER_TENANT {
+        for m in 0..2 {
+            let time = 0.05 * (2 * i + m) as f64 + 0.01;
+            arrivals.push(Arrival {
+                time,
+                model: m,
+                // a: generous absolute deadline; b: already hopeless.
+                deadline: if m == 0 { Some(time + 1e6) } else { Some(time) },
+                class: SloClass::Standard,
+            });
+        }
+    }
+    let mut sim = Simulator::new(
+        &cost,
+        &tenants,
+        cfg,
+        SimOptions {
+            horizon: 1000.0,
+            warmup: 0.0,
+            seed: 1,
+            discipline: DisciplineKind::Fifo,
+            overload: OverloadPolicy::DeadlineDrop,
+            ..SimOptions::default()
+        },
+    );
+    let res = sim.run(&arrivals, None);
+    let sim_accepted: Vec<u64> = res.per_model.iter().map(|m| m.accepted).collect();
+    let sim_dropped: Vec<u64> = res.per_model.iter().map(|m| m.dropped()).collect();
+    let sim_completed: Vec<u64> = res.per_model.iter().map(|m| m.completed).collect();
+    assert_eq!(sim_accepted, vec![PER_TENANT as u64, 0]);
+    assert_eq!(sim_dropped, vec![0, PER_TENANT as u64]);
+    assert_eq!(sim_completed, vec![PER_TENANT as u64, 0]);
+    assert_eq!(res.per_class.expired_total(), PER_TENANT as u64);
+    assert_eq!(res.per_class.goodput_total(), PER_TENANT as u64);
+
+    // --- live side (same policy, same shape) ------------------------
+    let server = builder()
+        .adaptive(false)
+        .discipline(DisciplineKind::Fifo)
+        .overload(OverloadPolicy::DeadlineDrop)
+        .build()
+        .unwrap();
+    let ha = server
+        .attach("mobilenetv2", AttachOptions::default())
+        .unwrap();
+    let hb = server
+        .attach("squeezenet", AttachOptions::default())
+        .unwrap();
+    // Full-TPU for both tenants, exactly like the DES run.
+    let pps: Vec<usize> = [ha, hb]
+        .iter()
+        .map(|h| server.model_meta(*h).unwrap().partition_points)
+        .collect();
+    server
+        .set_config(Config {
+            partitions: pps,
+            cores: vec![0, 0],
+        })
+        .unwrap();
+    let mut pending = Vec::new();
+    for _ in 0..PER_TENANT {
+        pending.push((
+            ha,
+            server.submit(
+                ha,
+                Request::new(input_for(&server, ha)).with_deadline(Duration::from_secs(3600)),
+            ),
+        ));
+        pending.push((
+            hb,
+            server.submit(
+                hb,
+                Request::new(input_for(&server, hb)).with_deadline(Duration::ZERO),
+            ),
+        ));
+    }
+    let mut live_completed = [0u64; 2];
+    let mut live_expired = [0u64; 2];
+    for (h, ticket) in pending {
+        match ticket.wait() {
+            Ok(done) => {
+                assert_eq!(done.tenant, h);
+                live_completed[if h == ha { 0 } else { 1 }] += 1;
+            }
+            Err(RequestError::DeadlineExceeded { .. }) => {
+                live_expired[if h == ha { 0 } else { 1 }] += 1;
+            }
+            Err(e) => panic!("unexpected failure: {e}"),
+        }
+    }
+    let stats = server.stats();
+    // Identical per-tenant accepted/dropped counts, DES vs live.
+    let live_accepted: Vec<u64> = [ha, hb]
+        .iter()
+        .map(|h| stats.tenant(*h).unwrap().accepted)
+        .collect();
+    let live_dropped: Vec<u64> = [ha, hb]
+        .iter()
+        .map(|h| {
+            let t = stats.tenant(*h).unwrap();
+            t.rejected + t.dropped
+        })
+        .collect();
+    assert_eq!(live_accepted, sim_accepted);
+    assert_eq!(live_dropped, sim_dropped);
+    assert_eq!(live_completed.to_vec(), sim_completed);
+    assert_eq!(live_expired, [0, PER_TENANT as u64]);
+    // Aggregate counters agree across engines too.
+    assert_eq!(stats.expired, res.per_class.expired_total());
+    assert_eq!(
+        stats.per_class.accepted(SloClass::Standard),
+        res.per_class.accepted(SloClass::Standard)
+    );
+    assert_eq!(stats.goodput(), res.per_class.goodput_total());
+    assert_eq!(stats.failed, 0);
 }

@@ -1,0 +1,63 @@
+//! Fleet placement decision-overhead bench: the two-level allocator
+//! (outer greedy bin-pack + local-move refinement over inner per-device
+//! hill climbs) must stay interactive — the CI guard asserts the
+//! 8-tenant × 4-device decision completes in under 10 ms, so online
+//! rebalancing can run at the same cadence as the single-device
+//! re-allocator without stalling the router.
+
+use swapless::analytic::Tenant;
+use swapless::config::HardwareSpec;
+use swapless::fleet::{place, Fleet};
+use swapless::model::synthetic_model;
+use swapless::util::bench::{bench, print_header, print_row};
+
+fn tenants(n: usize) -> Vec<Tenant> {
+    (0..n)
+        .map(|i| Tenant {
+            model: synthetic_model(
+                &format!("m{i}"),
+                4 + (i % 5),
+                2_000_000 + 500_000 * (i as u64 % 4),
+                400_000_000 + 150_000_000 * (i as u64 % 3),
+            ),
+            // Scaled so the aggregate stays serveable per device.
+            rate: (1.0 + i as f64) * 2.0 / (n as f64 + 2.0),
+        })
+        .collect()
+}
+
+fn main() {
+    print_header("fleet two-level placement decision overhead");
+    let hw = HardwareSpec::default();
+
+    for (n, d) in [(4usize, 2usize), (8, 2), (8, 4), (16, 4)] {
+        let ts = tenants(n);
+        let fleet = Fleet::uniform(d, &hw);
+        let s = bench(&format!("place n={n} devices={d}"), 20, 400, || {
+            place(&fleet, &ts)
+        });
+        print_row(&s);
+        if n == 8 && d == 4 {
+            // The headline guard: 8 tenants x 4 devices under 10 ms.
+            assert!(
+                s.mean_ms() < 10.0,
+                "two-level placement regressed: 8x4 mean {:.2} ms >= 10 ms",
+                s.mean_ms()
+            );
+        }
+    }
+
+    // Sanity: the plan the benched instance produces is usable.
+    let ts = tenants(8);
+    let fleet = Fleet::uniform(4, &hw);
+    let plan = place(&fleet, &ts);
+    assert_eq!(plan.assignment.len(), 8);
+    assert!(plan.devices.len() == 4);
+    println!(
+        "8x4 plan: assignment {:?}, objective {:.1} ms, {} inner evals, {} moves",
+        plan.assignment,
+        plan.objective * 1e3,
+        plan.evaluations,
+        plan.refine_moves
+    );
+}

@@ -10,7 +10,7 @@
 use crate::util::json::Json;
 
 /// Hardware + cost-model parameters (Table I's hardware section).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct HardwareSpec {
     /// TPU SRAM capacity `C` in bytes (Edge TPU: 8 MB).
     pub sram_bytes: u64,

@@ -385,6 +385,7 @@ mod tests {
             class,
             service_hint: 1e-3,
             deadline: None,
+            device: 0,
         }
     }
 

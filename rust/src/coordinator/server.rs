@@ -88,6 +88,11 @@ pub struct ServerOptions {
     /// What a full station does — the same policy set the DES runs
     /// ([`crate::sim::SimOptions::overload`]).
     pub overload: OverloadPolicy,
+    /// Index of the TPU device this server instance drives (0 on a
+    /// single-device deployment). The fleet router
+    /// ([`crate::fleet::FleetServer`]) assigns one per member server and
+    /// every job queued here carries it in its [`JobMeta::device`].
+    pub device: usize,
 }
 
 impl Default for ServerOptions {
@@ -101,6 +106,7 @@ impl Default for ServerOptions {
             discipline: DisciplineKind::Fifo,
             queue_capacity: None,
             overload: OverloadPolicy::Block,
+            device: 0,
         }
     }
 }
@@ -168,6 +174,12 @@ impl ServerBuilder {
     /// deploys here unchanged.
     pub fn overload(mut self, p: OverloadPolicy) -> Self {
         self.opts.overload = p;
+        self
+    }
+
+    /// Tag this server as device `d` of a multi-device fleet (default 0).
+    pub fn device(mut self, d: usize) -> Self {
+        self.opts.device = d;
         self
     }
 
@@ -305,6 +317,12 @@ struct TpuShared {
     /// 1 while the worker is executing a job — the in-service half of
     /// the occupancy bound (queued + in-service <= capacity).
     active: AtomicUsize,
+    /// Owner of the job currently executing on the device (`None` when
+    /// idle) — makes in-service work visible to [`Server::pending_for`],
+    /// so a drain poll cannot report zero while a request of that tenant
+    /// still holds the TPU (under `time_scale > 0` or a real backend a
+    /// single execution spans many poll intervals).
+    active_tenant: Mutex<Option<TenantHandle>>,
     /// Tenants whose SRAM-cache entries must be dropped (detached, or
     /// re-partitioned); drained by the TPU worker before each execution —
     /// the same semantics as the DES's `apply_detach`/`set_config`
@@ -366,6 +384,10 @@ pub struct ServeStats {
     /// Cancelled via their token before execution.
     pub cancelled: u64,
     pub reconfigs: u64,
+    /// Tenants moved onto (or off) this device by the fleet router's
+    /// drain-then-move migration — always 0 on a standalone server; the
+    /// fleet layer fills it in when aggregating per-device stats.
+    pub migrations: u64,
     pub decision_micros: Vec<f64>,
 }
 
@@ -539,6 +561,7 @@ pub struct Server {
     discipline: DisciplineKind,
     queue_capacity: Option<usize>,
     overload: OverloadPolicy,
+    device: usize,
     next_handle: AtomicU64,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
@@ -629,6 +652,7 @@ impl Server {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             active: AtomicUsize::new(0),
+            active_tenant: Mutex::new(None),
             invalidations: Mutex::new(Vec::new()),
         });
         let mut threads = Vec::new();
@@ -639,11 +663,12 @@ impl Server {
             let handle = exec.handle();
             let cost = cost.clone();
             let overload = opts.overload;
+            let device = opts.device;
             threads.push(
                 std::thread::Builder::new()
                     .name("tpu-worker".into())
                     .spawn(move || {
-                        tpu_worker_loop(tpu, pools, shared, handle, cost, scale, overload)
+                        tpu_worker_loop(tpu, pools, shared, handle, cost, scale, overload, device)
                     })?,
             );
         }
@@ -673,6 +698,7 @@ impl Server {
             discipline,
             queue_capacity: opts.queue_capacity,
             overload: opts.overload,
+            device: opts.device,
             next_handle: AtomicU64::new(0),
             threads,
             stop,
@@ -886,6 +912,7 @@ impl Server {
                 class,
                 service_hint: hint,
                 deadline,
+                device: self.device,
             };
             let job = TpuJob {
                 handle,
@@ -953,6 +980,7 @@ impl Server {
                 class,
                 hint,
                 deadline,
+                self.device,
                 cancel,
                 true,
                 request.input,
@@ -984,28 +1012,6 @@ impl Server {
                 now_s: now,
             }));
         }
-    }
-
-    /// Deprecated shim (one PR): submit with a per-request class override.
-    #[deprecated(note = "use submit(handle, Request::new(input).with_class(class))")]
-    pub fn submit_with_class(
-        &self,
-        handle: TenantHandle,
-        input: Vec<f32>,
-        class: SloClass,
-    ) -> Ticket {
-        self.submit(handle, Request::new(input).with_class(class))
-    }
-
-    /// Deprecated shim (one PR): blocking single inference. The job's
-    /// real typed failure is preserved through the ticket — a worker
-    /// dropping the completion sender no longer flattens into a generic
-    /// "server dropped request".
-    #[deprecated(note = "use submit(handle, Request::new(input)).wait()")]
-    pub fn infer(&self, handle: TenantHandle, input: Vec<f32>) -> Result<Completion> {
-        self.submit(handle, Request::new(input))
-            .wait()
-            .map_err(anyhow::Error::new)
     }
 
     pub fn current_config(&self) -> Config {
@@ -1120,8 +1126,27 @@ impl Server {
             expired: self.shared.expired.load(Ordering::SeqCst),
             cancelled: self.shared.cancelled.load(Ordering::SeqCst),
             reconfigs: log.reconfigs,
+            migrations: 0,
             decision_micros: log.decision_micros.clone(),
         }
+    }
+
+    /// The fleet device index this server drives (0 standalone).
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    /// Work still in the system for `handle`: jobs queued at or
+    /// executing on the TPU station, plus jobs queued or executing in
+    /// the tenant's CPU pool. (Micro-second handoff windows between
+    /// stations can still read zero transiently; callers polling for a
+    /// drain should treat two consecutive zero readings as drained.)
+    /// The fleet router polls this during drain-then-move migration.
+    pub fn pending_for(&self, handle: TenantHandle) -> usize {
+        let tpu_queued = self.tpu.queue.lock().unwrap().count_tenant(handle);
+        let tpu_active =
+            usize::from(*self.tpu.active_tenant.lock().unwrap() == Some(handle));
+        tpu_queued + tpu_active + self.pools.queue_len(handle) + self.pools.active(handle)
     }
 }
 
@@ -1207,6 +1232,7 @@ fn dispatch_cpu(
     class: SloClass,
     service_hint: f64,
     deadline: Option<f64>,
+    device: usize,
     cancel: CancelToken,
     entry: bool,
     input: Vec<f32>,
@@ -1221,6 +1247,7 @@ fn dispatch_cpu(
             class,
             service_hint,
             deadline,
+            device,
         },
         CpuJob {
             meta,
@@ -1255,6 +1282,7 @@ fn dispatch_cpu(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn tpu_worker_loop(
     tpu: Arc<TpuShared>,
     pools: Arc<CpuPools>,
@@ -1263,6 +1291,7 @@ fn tpu_worker_loop(
     cost: CostModel,
     time_scale: f64,
     overload: OverloadPolicy,
+    device: usize,
 ) {
     let mut cache = SramCache::new(cost.hw.sram_bytes);
     loop {
@@ -1309,10 +1338,12 @@ fn tpu_worker_loop(
             }
         }
         let Some(job) = job else { continue };
+        *tpu.active_tenant.lock().unwrap() = Some(job.handle);
         // A cancelled request is refused before touching the device.
         if job.cancel.is_cancelled() {
             count(&shared, job.handle, job.class, Outcome::Cancelled);
             let _ = job.done.send(Err(RequestError::Cancelled));
+            *tpu.active_tenant.lock().unwrap() = None;
             tpu.active.store(0, Ordering::SeqCst);
             continue;
         }
@@ -1336,6 +1367,7 @@ fn tpu_worker_loop(
         if !live {
             shared.failed.fetch_add(1, Ordering::SeqCst);
             let _ = job.done.send(Err(RequestError::Detached(job.handle)));
+            *tpu.active_tenant.lock().unwrap() = None;
             tpu.active.store(0, Ordering::SeqCst);
             continue;
         }
@@ -1388,6 +1420,7 @@ fn tpu_worker_loop(
                         job.class,
                         job.cpu_hint,
                         job.deadline,
+                        device,
                         job.cancel,
                         false,
                         boundary,
@@ -1403,6 +1436,7 @@ fn tpu_worker_loop(
                     .send(Err(RequestError::Execution(e.to_string())));
             }
         }
+        *tpu.active_tenant.lock().unwrap() = None;
         tpu.active.store(0, Ordering::SeqCst);
     }
 }

@@ -1,0 +1,279 @@
+//! Fleet experiment: 1/2/4-device placement × Table-II mixes × ρ sweep.
+//!
+//! For each mix, per-tenant rates are solved once on the *single-device*
+//! full-TPU configuration for a nominal TPU load factor ρ
+//! ([`rates_for_load_factor`] — values ≥ 1 extrapolate linearly, the
+//! same semantics as `serve --rho`), then held fixed while the device
+//! count varies — so every row of a (mix, ρ) group replays the *same*
+//! global arrival stream (same seed, same total load) and the only
+//! difference is the two-level placement. ρ is *nominal*: the inner
+//! allocator offloads suffixes to CPU cores, so a single device
+//! genuinely saturates only around nominal 4–5 on this mix — which is
+//! exactly the regime where placement pays (below it, one device's
+//! combined TPU+4-core capacity hides the queueing). Reported per row:
+//! the placement itself, the predicted fleet objective, the observed
+//! fleet mean / worst-device mean, and the placement decision time (the
+//! outer search + every inner hill climb).
+//!
+//! The headline the acceptance test pins: at nominal ρ = 3.5 the
+//! 2-device placement beats the 1-device mean latency by well over 20%
+//! at equal total load (the analytic fleet model predicts ≈ 39%) — each
+//! device gets its own SRAM cache (α conflicts vanish for separated big
+//! models), its own TPU queue, and its own core budget.
+
+use std::time::Instant;
+
+use crate::analytic::Tenant;
+use crate::fleet::{place, simulate_fleet, Fleet};
+use crate::sim::SimOptions;
+use crate::util::json::Json;
+use crate::workload::{equal_tpu_load_shares, rates_for_load_factor};
+
+use super::common::{print_table, Ctx};
+
+/// The Table-II quad mix (same mixed-size tenancy the scheduler ablation
+/// stresses) and a heavier 8-model mix over the full manifest.
+pub const MIX_QUAD: [&str; 4] = ["mobilenetv2", "squeezenet", "mnasnet", "inceptionv4"];
+pub const MIX_OCTO: [&str; 8] = [
+    "squeezenet",
+    "mobilenetv2",
+    "efficientnet",
+    "mnasnet",
+    "gpunet",
+    "densenet201",
+    "resnet50v2",
+    "inceptionv4",
+];
+pub const DEVICE_COUNTS: [usize; 3] = [1, 2, 4];
+/// Nominal full-TPU load factors (see the module docs — ≥ 1 is not
+/// overload once the allocator offloads to CPU; one device saturates
+/// near 5 on the quad mix).
+pub const RHO_TARGETS: [f64; 3] = [0.75, 2.0, 3.5];
+
+#[derive(Debug, Clone)]
+pub struct FleetRow {
+    pub mix: &'static str,
+    pub rho: f64,
+    pub devices: usize,
+    /// Tenant→device assignment the two-level allocator chose.
+    pub assignment: Vec<usize>,
+    /// Predicted fleet objective (max per-device mean, ms).
+    pub predicted_ms: f64,
+    /// Observed fleet-wide request-weighted mean (ms).
+    pub mean_ms: f64,
+    /// Observed worst-device mean (ms).
+    pub max_device_mean_ms: f64,
+    pub completed: u64,
+    /// Two-level placement decision time (µs), inner climbs included.
+    pub decision_us: f64,
+    pub evaluations: usize,
+}
+
+pub struct FleetSweep {
+    pub rows: Vec<FleetRow>,
+}
+
+/// One (mix, ρ, device count) cell: solve rates on the 1-device
+/// reference, place on `devices`, simulate, measure.
+pub fn run_one(
+    ctx: &Ctx,
+    mix: &'static str,
+    models: &[&str],
+    rho: f64,
+    devices: usize,
+    horizon: f64,
+) -> Result<FleetRow, String> {
+    let zero = vec![0.0; models.len()];
+    let tenants0 = ctx.tenants(models, &zero)?;
+    let full = crate::analytic::Config::all_tpu(&tenants0);
+    let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+    let rates = rates_for_load_factor(&ctx.am, &tenants0, &full, &shares, rho);
+    let tenants: Vec<Tenant> = ctx.tenants(models, &rates)?;
+
+    let fleet = Fleet::uniform(devices, &ctx.cost.hw);
+    let t0 = Instant::now();
+    let plan = place(&fleet, &tenants);
+    let decision_us = t0.elapsed().as_secs_f64() * 1e6;
+
+    let res = simulate_fleet(
+        &fleet,
+        &tenants,
+        &plan,
+        SimOptions {
+            horizon,
+            warmup: horizon * 0.05,
+            seed: ctx.seed,
+            ..SimOptions::default()
+        },
+    );
+    Ok(FleetRow {
+        mix,
+        rho,
+        devices,
+        assignment: plan.assignment.clone(),
+        predicted_ms: plan.objective * 1e3,
+        mean_ms: res.mean_latency * 1e3,
+        max_device_mean_ms: res.max_device_mean * 1e3,
+        completed: res.completed,
+        decision_us,
+        evaluations: plan.evaluations,
+    })
+}
+
+pub fn run(ctx: &Ctx) -> Result<FleetSweep, String> {
+    let mut rows = Vec::new();
+    for (mix, models) in [
+        ("quad", &MIX_QUAD[..]),
+        ("octo", &MIX_OCTO[..]),
+    ] {
+        for &rho in &RHO_TARGETS {
+            for &devices in &DEVICE_COUNTS {
+                rows.push(run_one(ctx, mix, models, rho, devices, ctx.horizon)?);
+            }
+        }
+    }
+    Ok(FleetSweep { rows })
+}
+
+impl FleetSweep {
+    pub fn print(&self) {
+        let mut table = Vec::new();
+        let mut base = f64::NAN;
+        for r in &self.rows {
+            if r.devices == 1 {
+                base = r.mean_ms;
+            }
+            let speedup = if r.devices == 1 || !base.is_finite() || r.mean_ms <= 0.0 {
+                String::new()
+            } else {
+                format!("{:.2}x", base / r.mean_ms)
+            };
+            table.push(vec![
+                r.mix.to_string(),
+                format!("{:.2}", r.rho),
+                r.devices.to_string(),
+                format!("{:?}", r.assignment),
+                format!("{:.1}", r.predicted_ms),
+                format!("{:.1}", r.mean_ms),
+                format!("{:.1}", r.max_device_mean_ms),
+                r.completed.to_string(),
+                speedup,
+                format!("{:.0}", r.decision_us),
+            ]);
+        }
+        print_table(
+            "Fleet placement sweep (equal total load per mix x rho group)",
+            &[
+                "mix",
+                "rho",
+                "devices",
+                "placement",
+                "pred (ms)",
+                "mean (ms)",
+                "worst dev (ms)",
+                "n",
+                "vs 1dev",
+                "place (us)",
+            ],
+            &table,
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        Json::from_pairs(vec![
+                            ("mix", Json::Str(r.mix.to_string())),
+                            ("rho", Json::Num(r.rho)),
+                            ("devices", Json::Num(r.devices as f64)),
+                            (
+                                "assignment",
+                                Json::Arr(
+                                    r.assignment
+                                        .iter()
+                                        .map(|&d| Json::Num(d as f64))
+                                        .collect(),
+                                ),
+                            ),
+                            ("predicted_ms", Json::Num(r.predicted_ms)),
+                            ("mean_ms", Json::Num(r.mean_ms)),
+                            ("max_device_mean_ms", Json::Num(r.max_device_mean_ms)),
+                            ("completed", Json::Num(r.completed as f64)),
+                            ("decision_us", Json::Num(r.decision_us)),
+                            ("evaluations", Json::Num(r.evaluations as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::Manifest;
+
+    /// The acceptance headline: 2-device placement beats 1-device mean
+    /// latency by > 20% at equal total load on the Table-II quad mix at
+    /// a stressed nominal load factor (3.5 ⇒ the single device runs
+    /// near its true post-offload capacity; the analytic fleet model
+    /// predicts a ≈ 39% win, leaving margin for the DES's LRU cache
+    /// beating the conservative α).
+    #[test]
+    fn two_device_placement_beats_one_device_by_over_20_percent() {
+        let mut ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        ctx.horizon = 300.0;
+        let one =
+            run_one(&ctx, "quad", &MIX_QUAD, 3.5, 1, ctx.horizon).unwrap();
+        let two =
+            run_one(&ctx, "quad", &MIX_QUAD, 3.5, 2, ctx.horizon).unwrap();
+        assert!(one.completed > 1000 && two.completed > 1000);
+        // Equal total load: the same arrival stream (same seed/rates).
+        assert_eq!(one.assignment.len(), 4);
+        assert_eq!(two.assignment.len(), 4);
+        assert!(
+            two.mean_ms < one.mean_ms * 0.8,
+            "2-device mean {:.1} ms not >20% below 1-device {:.1} ms",
+            two.mean_ms,
+            one.mean_ms
+        );
+        // The 2-device plan actually uses both devices.
+        assert!(two.assignment.iter().any(|&d| d == 0));
+        assert!(two.assignment.iter().any(|&d| d == 1));
+    }
+
+    #[test]
+    fn sweep_rows_cover_the_grid_and_scale_monotonically() {
+        let mut ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        ctx.horizon = 200.0;
+        // One (mix, rho) group across all device counts.
+        let rows: Vec<FleetRow> = DEVICE_COUNTS
+            .iter()
+            .map(|&d| run_one(&ctx, "quad", &MIX_QUAD, 0.5, d, ctx.horizon).unwrap())
+            .collect();
+        for w in rows.windows(2) {
+            assert!(
+                w[1].mean_ms <= w[0].mean_ms * 1.05,
+                "more devices must not hurt: {} -> {}",
+                w[0].mean_ms,
+                w[1].mean_ms
+            );
+        }
+        for r in &rows {
+            assert!(r.completed > 500, "{} devices: {}", r.devices, r.completed);
+            // Debug-build sanity bound; the release-mode 10 ms guard
+            // lives in benches/bench_fleet.rs.
+            assert!(
+                r.decision_us < 500_000.0,
+                "placement too slow even for a debug build: {} us",
+                r.decision_us
+            );
+        }
+    }
+}

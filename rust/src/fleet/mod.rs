@@ -1,0 +1,184 @@
+//! The fleet layer: multi-TPU device registry, two-level tenant placement,
+//! placement-aware routing, and a multi-device DES.
+//!
+//! SwapLess (the paper) adapts partition points and CPU cores for ONE
+//! memory-constrained Edge TPU. Real deployments attach several
+//! accelerators per host or edge site, and there *placement* — which
+//! tenant lives on which device — dominates swapping behavior, because
+//! each device has its own SRAM cache and therefore its own inter-model
+//! conflict set α. This module generalizes the whole stack from one TPU
+//! to a registry of heterogeneous devices:
+//!
+//! * [`Fleet`] — the device registry: per-device SRAM size, host-transfer
+//!   bandwidth, and CPU core budget ([`DeviceSpec`] wraps a full
+//!   [`HardwareSpec`]), with the derived [`CostModel`]/[`AnalyticModel`]
+//!   built once per device.
+//! * [`place`](place::place) — the **two-level allocator**: an outer
+//!   greedy bin-pack of tenants onto devices by predicted load
+//!   contribution plus local-move refinement, scoring every candidate
+//!   with the *inner* per-device hill climb (prefix tables +
+//!   delta-evaluation engine, built once per device and reused across
+//!   every inner evaluation). The fleet-wide objective is the max over
+//!   devices of the per-device analytic mean response time.
+//! * [`FleetServer`](server::FleetServer) — the live router: one
+//!   [`Server`](crate::coordinator::Server) per device (own TPU worker
+//!   queue, own SRAM cache, own CPU pools), placement-aware dispatch of
+//!   ticketed requests, and **tenant migration** between devices
+//!   (drain-then-move), driven through the
+//!   [`ReconfigPolicy::decide_placement`](crate::sim::reconfig::ReconfigPolicy::decide_placement)
+//!   hook.
+//! * [`simulate_fleet`](sim::simulate_fleet) — the **multi-device DES**:
+//!   one TPU station set per device with a per-device cache, replaying
+//!   one global arrival stream split by the placement, so placement
+//!   policies are evaluated offline before they touch live traffic
+//!   (`tests/fleet_parity.rs` pins sim-vs-live count parity).
+//!
+//! Devices do not share queues or caches, so given a placement the fleet
+//! decomposes exactly into independent per-device SwapLess instances —
+//! which is what lets both engines reuse the validated single-device
+//! machinery unchanged under the outer placement search.
+
+pub mod place;
+pub mod server;
+pub mod sim;
+
+pub use place::{place, DevicePlan, FleetPlan};
+pub use server::{FleetServer, FleetServerBuilder, FleetStats};
+pub use sim::{run_fleet, simulate_fleet, DeviceSimResult, FleetSimResult};
+
+use crate::analytic::AnalyticModel;
+use crate::config::HardwareSpec;
+use crate::tpu::CostModel;
+
+/// One TPU device entry in the registry. The [`HardwareSpec`] carries
+/// everything that can differ per device: SRAM capacity, host-transfer
+/// bandwidth, core budget, and the speedup calibration.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: String,
+    pub hw: HardwareSpec,
+}
+
+/// A registered device with its derived cost/queueing models (built once;
+/// every placement evaluation and engine instance reuses them).
+#[derive(Debug, Clone)]
+pub struct FleetDevice {
+    pub spec: DeviceSpec,
+    pub cost: CostModel,
+    pub am: AnalyticModel,
+}
+
+impl FleetDevice {
+    /// The device's own CPU core budget (`K_max` of its inner allocator).
+    pub fn k_max(&self) -> usize {
+        self.spec.hw.cpu_cores
+    }
+}
+
+/// The device registry. Index order is identity: tenant→device
+/// assignments, per-device plans, DES stations, and live member servers
+/// are all positionally aligned with it.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    devices: Vec<FleetDevice>,
+}
+
+impl Fleet {
+    pub fn new(specs: Vec<DeviceSpec>) -> Fleet {
+        assert!(!specs.is_empty(), "a fleet needs at least one device");
+        Fleet {
+            devices: specs
+                .into_iter()
+                .map(|spec| {
+                    let cost = CostModel::new(spec.hw.clone());
+                    FleetDevice {
+                        am: AnalyticModel::new(cost.clone()),
+                        cost,
+                        spec,
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// `n` identical devices (`tpu0..tpuN-1`), each with its own copy of
+    /// `hw` — the homogeneous multi-TPU host case.
+    pub fn uniform(n: usize, hw: &HardwareSpec) -> Fleet {
+        assert!(n > 0, "a fleet needs at least one device");
+        Fleet::new(
+            (0..n)
+                .map(|d| DeviceSpec {
+                    name: format!("tpu{d}"),
+                    hw: hw.clone(),
+                })
+                .collect(),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn device(&self, d: usize) -> &FleetDevice {
+        &self.devices[d]
+    }
+
+    pub fn devices(&self) -> &[FleetDevice] {
+        &self.devices
+    }
+
+    /// True when every device shares one hardware spec — device labels
+    /// are then interchangeable, so migration-minimizing relabeling of a
+    /// placement is cost-free.
+    pub fn is_homogeneous(&self) -> bool {
+        self.devices.windows(2).all(|w| w[0].spec.hw == w[1].spec.hw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_fleet_builds_per_device_models() {
+        let hw = HardwareSpec::default();
+        let fleet = Fleet::uniform(3, &hw);
+        assert_eq!(fleet.len(), 3);
+        for (d, dev) in fleet.devices().iter().enumerate() {
+            assert_eq!(dev.spec.name, format!("tpu{d}"));
+            assert_eq!(dev.cost.hw.sram_bytes, hw.sram_bytes);
+            assert_eq!(dev.k_max(), hw.cpu_cores);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_keeps_per_device_hw() {
+        let big = HardwareSpec {
+            sram_bytes: HardwareSpec::default().sram_bytes * 4,
+            cpu_cores: 8,
+            ..HardwareSpec::default()
+        };
+        let fleet = Fleet::new(vec![
+            DeviceSpec {
+                name: "small".into(),
+                hw: HardwareSpec::default(),
+            },
+            DeviceSpec {
+                name: "big".into(),
+                hw: big,
+            },
+        ]);
+        assert_eq!(fleet.device(1).cost.hw.sram_bytes, fleet.device(0).cost.hw.sram_bytes * 4);
+        assert_eq!(fleet.device(1).k_max(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one device")]
+    fn empty_fleet_panics() {
+        Fleet::uniform(0, &HardwareSpec::default());
+    }
+}

@@ -1,0 +1,461 @@
+//! The two-level fleet allocator: an outer tenant→device placement
+//! search over the inner per-device SwapLess hill climb.
+//!
+//! **Outer level** — greedy bin-pack: tenants are placed in descending
+//! order of predicted TPU load contribution (`λ_i · s^TPU_i(P_i)` on the
+//! reference device), each onto the device that minimizes the fleet
+//! objective, followed by local-move refinement (try relocating every
+//! tenant to every other device; commit strict improvements) until a
+//! fixed point.
+//!
+//! **Inner level** — for every candidate member set the device runs the
+//! paper's hill-climbing allocator over its own cost model, on prefix
+//! tables built once per (device, tenant) pair and reused across every
+//! candidate (the climb itself scores moves through the O(1)
+//! [`DeltaEvaluator`](crate::analytic::DeltaEvaluator) engine). Candidate
+//! member sets repeat heavily during refinement, so inner results are
+//! memoized by (device, member set).
+//!
+//! **Fleet objective** — the search minimizes the max over devices of
+//! the per-device Eq. 5 objective (`Σ λ_i · T_i` restricted to the
+//! device's members — the paper's objective generalized per device),
+//! with the fleet-wide sum (the global Eq. 5 objective) as tie-break:
+//! minimizing the worst device's weighted-latency burden balances load
+//! while letting the inner allocator exploit per-device α structure
+//! (two conflicting big models land on different SRAM caches). The
+//! rate-weighted *sum* is deliberate: a per-device *mean* would let a
+//! fast co-tenant dilute a slow model's latency and reward exactly the
+//! colocations placement exists to avoid. The reported
+//! [`FleetPlan::objective`] is the max per-device mean response time —
+//! the operator-facing "worst device's predicted latency".
+
+use std::collections::HashMap;
+
+use crate::alloc;
+use crate::analytic::{Config, Tenant};
+use crate::tpu::PrefixTables;
+
+use super::Fleet;
+
+/// One device's share of a [`FleetPlan`].
+#[derive(Debug, Clone)]
+pub struct DevicePlan {
+    pub device: usize,
+    /// Global tenant indices served by this device, ascending — the
+    /// positional order its inner config, DES station, and arrival
+    /// stream splits all use.
+    pub tenants: Vec<usize>,
+    /// The inner allocator's (P, K) plan for exactly those tenants.
+    pub config: Config,
+    /// Eq. 5 objective of the device's member set (`Σ λ_i · T_i`).
+    pub predicted_objective: f64,
+    /// Request-weighted mean response time (objective / Σλ); 0.0 for an
+    /// empty or zero-rate device.
+    pub mean_latency: f64,
+    pub tpu_utilization: f64,
+}
+
+/// A complete two-level allocation across the fleet.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Tenant index → device index.
+    pub assignment: Vec<usize>,
+    /// One entry per device (possibly empty), indexed by device.
+    pub devices: Vec<DevicePlan>,
+    /// Fleet objective: max over devices of `mean_latency`.
+    pub objective: f64,
+    /// Inner-allocator candidate evaluations performed (decision-
+    /// overhead metric, aggregated across every memoized inner climb).
+    pub evaluations: usize,
+    /// Local-move refinement relocations committed after the greedy pass.
+    pub refine_moves: usize,
+}
+
+impl FleetPlan {
+    /// True when every device's predicted latency is finite (ρ < 1
+    /// everywhere) — the fleet-level admission criterion.
+    pub fn is_stable(&self) -> bool {
+        self.objective.is_finite()
+    }
+}
+
+/// One memoized inner evaluation: the device's plan for a member set.
+#[derive(Clone)]
+struct DeviceScore {
+    mean: f64,
+    objective: f64,
+    rho: f64,
+    config: Config,
+}
+
+impl DeviceScore {
+    fn empty() -> DeviceScore {
+        DeviceScore {
+            mean: 0.0,
+            objective: 0.0,
+            rho: 0.0,
+            config: Config {
+                partitions: Vec::new(),
+                cores: Vec::new(),
+            },
+        }
+    }
+}
+
+/// Inner-level evaluator: per-(device, member set) hill climbs with
+/// memoization over prebuilt per-device prefix tables. Each distinct
+/// member set is climbed exactly once — `evaluations` counts the true
+/// search cost, and plan materialization reads the memo instead of
+/// re-climbing.
+struct Inner<'a> {
+    fleet: &'a Fleet,
+    tenants: &'a [Tenant],
+    /// `tables[d][i]`: tenant `i`'s prefix tables under device `d`'s cost
+    /// model (devices are heterogeneous, so the tables differ per device).
+    tables: Vec<Vec<PrefixTables>>,
+    memo: HashMap<(usize, Vec<usize>), DeviceScore>,
+    evaluations: usize,
+}
+
+impl<'a> Inner<'a> {
+    fn new(fleet: &'a Fleet, tenants: &'a [Tenant]) -> Inner<'a> {
+        let tables = fleet
+            .devices()
+            .iter()
+            .map(|dev| PrefixTables::for_tenants(&dev.cost, tenants))
+            .collect();
+        Inner {
+            fleet,
+            tenants,
+            tables,
+            memo: HashMap::new(),
+            evaluations: 0,
+        }
+    }
+
+    /// Memoized inner evaluation of a member set on device `d`.
+    fn eval(&mut self, d: usize, members: &[usize]) -> DeviceScore {
+        if members.is_empty() {
+            return DeviceScore::empty();
+        }
+        let key = (d, members.to_vec());
+        if let Some(v) = self.memo.get(&key) {
+            return v.clone();
+        }
+        let subset: Vec<Tenant> = members.iter().map(|&i| self.tenants[i].clone()).collect();
+        let tables: Vec<PrefixTables> =
+            members.iter().map(|&i| self.tables[d][i].clone()).collect();
+        let dev = self.fleet.device(d);
+        let plan = alloc::hill_climb_with_tables(&dev.am, &subset, &tables, dev.k_max());
+        self.evaluations += plan.evaluations;
+        let rate: f64 = subset.iter().map(|t| t.rate).sum();
+        let mean = if rate > 0.0 {
+            plan.predicted_objective / rate
+        } else {
+            0.0
+        };
+        let rho = dev.am.tpu_utilization(&subset, &plan.config);
+        let v = DeviceScore {
+            mean,
+            objective: plan.predicted_objective,
+            rho,
+            config: plan.config,
+        };
+        self.memo.insert(key, v.clone());
+        v
+    }
+
+    /// (mean response time, objective, ρ) of a member set on device `d`.
+    fn score(&mut self, d: usize, members: &[usize]) -> (f64, f64, f64) {
+        let v = self.eval(d, members);
+        (v.mean, v.objective, v.rho)
+    }
+}
+
+/// Fleet search score of a per-device Eq. 5 objective vector:
+/// lexicographic (max, sum) — the worst device's weighted-latency
+/// burden, tie-broken by the global Eq. 5 objective so non-bottleneck
+/// devices keep balancing.
+fn fleet_score(objs: &[f64]) -> (f64, f64) {
+    let max = objs.iter().cloned().fold(0.0f64, f64::max);
+    let sum = objs.iter().sum();
+    (max, sum)
+}
+
+/// Strict lexicographic improvement with a relative tolerance (so f64
+/// noise in equal-cost permutations never cycles the refinement).
+fn lex_improves(new: (f64, f64), cur: (f64, f64)) -> bool {
+    let lt = |a: f64, b: f64| -> bool {
+        if b.is_infinite() {
+            return a.is_finite();
+        }
+        a < b - 1e-9 * b.abs().max(1e-12)
+    };
+    let eq = |a: f64, b: f64| -> bool { !lt(a, b) && !lt(b, a) };
+    lt(new.0, cur.0) || (eq(new.0, cur.0) && lt(new.1, cur.1))
+}
+
+/// Insert `x` into an ascending-sorted vector.
+fn insert_sorted(v: &mut Vec<usize>, x: usize) {
+    let pos = v.partition_point(|&y| y < x);
+    v.insert(pos, x);
+}
+
+/// The two-level placement search. Deterministic: iteration orders are
+/// fixed, ties break toward the lower device index.
+pub fn place(fleet: &Fleet, tenants: &[Tenant]) -> FleetPlan {
+    let n = tenants.len();
+    let d_count = fleet.len();
+    let mut inner = Inner::new(fleet, tenants);
+
+    // Outer pass 1 — greedy bin-pack in descending predicted TPU load on
+    // the reference device (heaviest tenants choose first, so they end up
+    // spread across caches instead of stacked on the last device).
+    let ref_dev = fleet.device(0);
+    let mut order: Vec<usize> = (0..n).collect();
+    let load = |i: usize| -> f64 {
+        let t = &tenants[i];
+        t.rate * ref_dev.cost.tpu_service(&t.model, t.model.partition_points)
+    };
+    order.sort_by(|&a, &b| {
+        load(b)
+            .partial_cmp(&load(a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); d_count];
+    let mut objs: Vec<f64> = vec![0.0; d_count];
+    let mut assignment = vec![0usize; n];
+    for &t in &order {
+        // (score, occupancy, device, device objective). Exact score ties
+        // — including the all-unstable case where every option evaluates
+        // to ∞ — break toward the least-occupied device, so overloaded
+        // mixes still spread instead of stacking on device 0.
+        let mut best: Option<((f64, f64), usize, usize, f64)> = None;
+        for d in 0..d_count {
+            let mut cand = members[d].clone();
+            insert_sorted(&mut cand, t);
+            let (_, obj_d, _) = inner.score(d, &cand);
+            let mut cand_objs = objs.clone();
+            cand_objs[d] = obj_d;
+            let sc = fleet_score(&cand_objs);
+            let occupancy = members[d].len();
+            let better = match &best {
+                None => true,
+                Some((bs, bo, _, _)) => {
+                    lex_improves(sc, *bs)
+                        || (!lex_improves(*bs, sc) && occupancy < *bo)
+                }
+            };
+            if better {
+                best = Some((sc, occupancy, d, obj_d));
+            }
+        }
+        let (_, _, d, obj_d) = best.expect("non-empty fleet");
+        insert_sorted(&mut members[d], t);
+        objs[d] = obj_d;
+        assignment[t] = d;
+    }
+
+    // Outer pass 2 — local-move refinement: relocate single tenants while
+    // the fleet score strictly improves (bounded passes; each commit
+    // strictly lowers the lexicographic score, so this terminates fast).
+    let mut refine_moves = 0usize;
+    for _pass in 0..4 {
+        let mut improved = false;
+        for t in 0..n {
+            let src = assignment[t];
+            let cur_score = fleet_score(&objs);
+            let mut best: Option<((f64, f64), usize, f64, f64)> = None;
+            for dst in 0..d_count {
+                if dst == src {
+                    continue;
+                }
+                let cand_src: Vec<usize> =
+                    members[src].iter().copied().filter(|&x| x != t).collect();
+                let mut cand_dst = members[dst].clone();
+                insert_sorted(&mut cand_dst, t);
+                let (_, obj_src, _) = inner.score(src, &cand_src);
+                let (_, obj_dst, _) = inner.score(dst, &cand_dst);
+                let mut cand_objs = objs.clone();
+                cand_objs[src] = obj_src;
+                cand_objs[dst] = obj_dst;
+                let sc = fleet_score(&cand_objs);
+                let better = match &best {
+                    None => lex_improves(sc, cur_score),
+                    Some((bs, _, _, _)) => lex_improves(sc, *bs),
+                };
+                if better {
+                    best = Some((sc, dst, obj_src, obj_dst));
+                }
+            }
+            if let Some((_, dst, obj_src, obj_dst)) = best {
+                members[src].retain(|&x| x != t);
+                insert_sorted(&mut members[dst], t);
+                objs[src] = obj_src;
+                objs[dst] = obj_dst;
+                assignment[t] = dst;
+                refine_moves += 1;
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    // Materialize per-device plans straight from the memo (every final
+    // member set was already climbed during the search).
+    let mut devices = Vec::with_capacity(d_count);
+    for d in 0..d_count {
+        let v = inner.eval(d, &members[d]);
+        devices.push(DevicePlan {
+            device: d,
+            tenants: members[d].clone(),
+            config: v.config,
+            predicted_objective: v.objective,
+            mean_latency: v.mean,
+            tpu_utilization: v.rho,
+        });
+    }
+    let objective = devices
+        .iter()
+        .map(|p| p.mean_latency)
+        .fold(0.0f64, f64::max);
+
+    FleetPlan {
+        assignment,
+        devices,
+        objective,
+        evaluations: inner.evaluations,
+        refine_moves,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+
+    fn tenant(name: &str, segs: usize, mb: f64, gflops: f64, rate: f64) -> Tenant {
+        Tenant {
+            model: synthetic_model(
+                name,
+                segs,
+                (mb * 1e6 / segs as f64) as u64,
+                (gflops * 1e9 / segs as f64) as u64,
+            ),
+            rate,
+        }
+    }
+
+    #[test]
+    fn single_device_fleet_matches_inner_allocator() {
+        let fleet = Fleet::uniform(1, &HardwareSpec::default());
+        let tenants = vec![
+            tenant("big", 10, 40.0, 12.0, 2.0),
+            tenant("small", 5, 4.0, 0.5, 2.0),
+        ];
+        let plan = place(&fleet, &tenants);
+        assert_eq!(plan.assignment, vec![0, 0]);
+        let direct = crate::alloc::hill_climb(&fleet.device(0).am, &tenants, 4);
+        assert_eq!(plan.devices[0].config, direct.config);
+        let rate: f64 = tenants.iter().map(|t| t.rate).sum();
+        assert!((plan.objective - direct.predicted_objective / rate).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conflicting_big_models_split_across_devices() {
+        // Two oversized prefixes cannot co-reside in one 8 MB SRAM: on a
+        // single device they pay α-reloads; two devices give each its own
+        // cache, so the planner must separate them.
+        let fleet = Fleet::uniform(2, &HardwareSpec::default());
+        let tenants = vec![
+            tenant("big_a", 6, 12.0, 4.0, 3.0),
+            tenant("big_b", 6, 12.0, 4.0, 3.0),
+        ];
+        let plan = place(&fleet, &tenants);
+        assert_ne!(
+            plan.assignment[0], plan.assignment[1],
+            "conflicting tenants stacked: {:?}",
+            plan.assignment
+        );
+        assert!(plan.is_stable());
+        // Each device plans exactly one tenant.
+        for p in &plan.devices {
+            assert_eq!(p.tenants.len(), 1);
+            assert_eq!(p.config.partitions.len(), 1);
+        }
+        // And beats the forced one-device packing.
+        let one = place(&Fleet::uniform(1, &HardwareSpec::default()), &tenants);
+        assert!(
+            plan.objective < one.objective * 0.95,
+            "2-device {} !<< 1-device {}",
+            plan.objective,
+            one.objective
+        );
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_plans_every_device_slot() {
+        let fleet = Fleet::uniform(4, &HardwareSpec::default());
+        let tenants: Vec<Tenant> = (0..8)
+            .map(|i| {
+                tenant(
+                    &format!("m{i}"),
+                    4 + i % 5,
+                    5.0 + 3.0 * i as f64,
+                    0.5 + 0.4 * i as f64,
+                    0.5 + 0.25 * i as f64,
+                )
+            })
+            .collect();
+        let a = place(&fleet, &tenants);
+        let b = place(&fleet, &tenants);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.devices.len(), 4);
+        // Per-device plans are positionally aligned and cover every tenant.
+        let mut covered = vec![false; tenants.len()];
+        for (d, p) in a.devices.iter().enumerate() {
+            assert_eq!(p.device, d);
+            assert_eq!(p.tenants.len(), p.config.partitions.len());
+            let mut prev = None;
+            for &t in &p.tenants {
+                assert_eq!(a.assignment[t], d);
+                assert!(prev.map(|x| x < t).unwrap_or(true), "unsorted members");
+                prev = Some(t);
+                covered[t] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        assert!(a.is_stable());
+    }
+
+    #[test]
+    fn heavier_sram_device_attracts_the_big_model() {
+        // Heterogeneous fleet: device 1 has 4x the SRAM. A model whose
+        // full prefix fits only there should land there.
+        let small_hw = HardwareSpec::default();
+        let big_hw = HardwareSpec {
+            sram_bytes: small_hw.sram_bytes * 4,
+            ..small_hw.clone()
+        };
+        let fleet = Fleet::new(vec![
+            super::super::DeviceSpec {
+                name: "small".into(),
+                hw: small_hw,
+            },
+            super::super::DeviceSpec {
+                name: "big".into(),
+                hw: big_hw,
+            },
+        ]);
+        let tenants = vec![tenant("huge", 8, 24.0, 8.0, 2.0)];
+        let plan = place(&fleet, &tenants);
+        assert_eq!(plan.assignment, vec![1], "big-SRAM device not chosen");
+    }
+}

@@ -1,0 +1,788 @@
+//! The fleet router: one live [`Server`] per registered device —
+//! each with its own TPU worker queue, SRAM cache, CPU pools, and
+//! per-device SwapLess re-allocator — behind a placement-aware dispatch
+//! layer with tenant migration.
+//!
+//! Tenants attach *to the fleet*: admission scores the candidate on every
+//! device with the inner allocator (the same two-level criterion as
+//! [`place`](super::place::place), incrementally) and lands the tenant on
+//! the device that minimizes the fleet objective. Requests carry
+//! fleet-scoped [`TenantHandle`]s; [`FleetServer::submit`] routes each to
+//! the owning device's server, which runs the full validated
+//! single-device request lifecycle (bounded admission, typed
+//! backpressure, tickets).
+//!
+//! **Migration** is drain-then-move: attach on the target device
+//! (admission-checked — a refused migration leaves the tenant where it
+//! is), reroute new submits, wait for the source device's queued and
+//! in-flight work to drain, then detach from the source (stragglers past
+//! the drain window fail with typed errors, exactly like a detach).
+//! Moves are counted per device in [`ServeStats::migrations`] and
+//! fleet-wide in [`FleetStats::migrations`].
+//!
+//! Re-placement is policy-driven through
+//! [`ReconfigPolicy::decide_placement`]: the submit path feeds the
+//! policy's rate monitor (buffered, like the single-device server), and
+//! [`FleetServer::rebalance`] asks the policy for a target assignment and
+//! executes the migrations it implies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::alloc::{self, AdmissionError};
+use crate::analytic::{Config, Tenant, TenantHandle};
+use crate::config::RuntimeConfig;
+use crate::coordinator::{
+    AttachError, AttachOptions, ConfigError, Request, RequestError, ServeStats, Server,
+    ServerBuilder, ServerOptions, TenantStats, Ticket,
+};
+use crate::model::Manifest;
+use crate::runtime::service::ExecBackend;
+use crate::sim::reconfig::{ReconfigPolicy, SwapLessPolicy};
+
+use super::Fleet;
+
+/// Fluent construction of a [`FleetServer`].
+pub struct FleetServerBuilder {
+    manifest: Manifest,
+    fleet: Fleet,
+    opts: ServerOptions,
+    placement: Option<Box<dyn ReconfigPolicy + Send>>,
+}
+
+impl FleetServerBuilder {
+    pub fn new(manifest: &Manifest, fleet: Fleet) -> FleetServerBuilder {
+        FleetServerBuilder {
+            manifest: manifest.clone(),
+            fleet,
+            opts: ServerOptions::default(),
+            placement: None,
+        }
+    }
+
+    /// Base options applied to every member server (`device` and `k_max`
+    /// are overridden per device from the registry).
+    pub fn options(mut self, opts: ServerOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    pub fn backend(mut self, b: crate::runtime::service::ExecBackend) -> Self {
+        self.opts.backend = b;
+        self
+    }
+
+    pub fn time_scale(mut self, v: f64) -> Self {
+        self.opts.time_scale = v;
+        self
+    }
+
+    pub fn adaptive(mut self, on: bool) -> Self {
+        self.opts.adaptive = on;
+        self
+    }
+
+    pub fn discipline(mut self, d: crate::sched::DisciplineKind) -> Self {
+        self.opts.discipline = d;
+        self
+    }
+
+    pub fn overload(mut self, p: crate::sched::OverloadPolicy) -> Self {
+        self.opts.overload = p;
+        self
+    }
+
+    pub fn queue_capacity(mut self, cap: usize) -> Self {
+        self.opts.queue_capacity = Some(cap);
+        self
+    }
+
+    /// Install a custom placement policy (drives
+    /// [`FleetServer::rebalance`]); defaults to a [`SwapLessPolicy`]
+    /// whose `decide_placement` runs the two-level search on monitored
+    /// rates.
+    pub fn placement_policy(mut self, p: Box<dyn ReconfigPolicy + Send>) -> Self {
+        self.placement = Some(p);
+        self
+    }
+
+    pub fn build(self) -> Result<FleetServer> {
+        FleetServer::new(self.manifest, self.fleet, self.opts, self.placement)
+    }
+}
+
+/// One fleet-attached tenant and where it currently lives.
+struct FleetTenant {
+    handle: TenantHandle,
+    /// Model + declared rate hint (what placement scoring plans with).
+    tenant: Tenant,
+    class: crate::sched::SloClass,
+    device: usize,
+    /// The tenant's handle on `servers[device]`.
+    inner: TenantHandle,
+}
+
+/// Aggregated fleet statistics: the per-device [`ServeStats`] (with
+/// their `migrations` counters filled in) plus fleet totals.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// Indexed by device.
+    pub per_device: Vec<ServeStats>,
+    /// Tenant moves completed (each drain-then-move counts once).
+    pub migrations: u64,
+}
+
+impl FleetStats {
+    pub fn completed(&self) -> u64 {
+        self.per_device.iter().map(|s| s.completed).sum()
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.per_device.iter().map(|s| s.failed).sum()
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.per_device.iter().map(|s| s.accepted).sum()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.per_device.iter().map(|s| s.dropped()).sum()
+    }
+
+    pub fn completed_per_device(&self) -> Vec<u64> {
+        self.per_device.iter().map(|s| s.completed).collect()
+    }
+
+    /// Per-SLO-class accounting merged across devices.
+    pub fn per_class(&self) -> crate::metrics::PerClassLatency {
+        let mut merged = crate::metrics::PerClassLatency::new();
+        for s in &self.per_device {
+            merged.merge(&s.per_class);
+        }
+        merged
+    }
+}
+
+/// Live multi-device inference router (see the module docs).
+pub struct FleetServer {
+    fleet: Fleet,
+    servers: Vec<Server>,
+    manifest: Manifest,
+    state: Mutex<Vec<FleetTenant>>,
+    /// Placement policy + its buffered arrival feed (same
+    /// never-block-submitters pattern as the single-device server).
+    placement: Mutex<Box<dyn ReconfigPolicy + Send>>,
+    arrivals: Mutex<Vec<(f64, usize)>>,
+    next_handle: AtomicU64,
+    migrations: AtomicU64,
+    per_device_migrations: Mutex<Vec<u64>>,
+    /// How long a migration waits for the source device to drain before
+    /// detaching (stragglers past it fail with typed errors). Scaled up
+    /// under real-time emulation, where one service spans many polls.
+    drain_budget: Duration,
+    started: Instant,
+}
+
+impl FleetServer {
+    fn new(
+        manifest: Manifest,
+        fleet: Fleet,
+        opts: ServerOptions,
+        placement: Option<Box<dyn ReconfigPolicy + Send>>,
+    ) -> Result<FleetServer> {
+        let mut servers = Vec::with_capacity(fleet.len());
+        for (d, dev) in fleet.devices().iter().enumerate() {
+            let member_opts = ServerOptions {
+                device: d,
+                k_max: dev.k_max(),
+                ..opts.clone()
+            };
+            // Reuse the registry's per-device cost model — the single
+            // derivation the whole fleet layer plans against.
+            servers.push(
+                ServerBuilder::new(&manifest, dev.cost.clone())
+                    .options(member_opts)
+                    .build()?,
+            );
+        }
+        // The default placement policy honors the operator's runtime
+        // knobs (rate window etc.), exactly like the member servers'
+        // own re-allocators do.
+        let rt: &RuntimeConfig = &opts.runtime;
+        let placement = placement.unwrap_or_else(|| {
+            Box::new(SwapLessPolicy::new(
+                fleet.device(0).am.clone(),
+                fleet.device(0).k_max(),
+                0,
+                rt.rate_window_s,
+                rt.realloc_period_s,
+                rt.realloc_threshold,
+            ))
+        });
+        let n_devices = fleet.len();
+        // Fast emulation drains in microseconds; real-time emulation or
+        // a hardware backend needs queue-depth × service-time headroom.
+        let drain_budget = if opts.time_scale > 0.0 || opts.backend == ExecBackend::Pjrt {
+            Duration::from_secs(10)
+        } else {
+            Duration::from_millis(500)
+        };
+        Ok(FleetServer {
+            fleet,
+            servers,
+            manifest,
+            state: Mutex::new(Vec::new()),
+            placement: Mutex::new(placement),
+            arrivals: Mutex::new(Vec::new()),
+            next_handle: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            per_device_migrations: Mutex::new(vec![0; n_devices]),
+            drain_budget,
+            started: Instant::now(),
+        })
+    }
+
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Number of devices in the registry.
+    pub fn devices(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Direct access to a member server (tests, config overrides).
+    pub fn server(&self, d: usize) -> &Server {
+        &self.servers[d]
+    }
+
+    /// The device currently serving `handle`, if attached.
+    pub fn device_of(&self, handle: TenantHandle) -> Option<usize> {
+        self.state
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|t| t.handle == handle)
+            .map(|t| t.device)
+    }
+
+    /// Fleet-scoped handles in attach order.
+    pub fn handles(&self) -> Vec<TenantHandle> {
+        self.state.lock().unwrap().iter().map(|t| t.handle).collect()
+    }
+
+    /// Manually install a (P, K) configuration on one device (parity
+    /// tests, static baselines). Dimensions are validated against the
+    /// device's live tenant count.
+    pub fn set_device_config(
+        &self,
+        device: usize,
+        cfg: Config,
+    ) -> std::result::Result<(), ConfigError> {
+        self.servers[device].set_config(cfg)
+    }
+
+    /// Snapshot each device's current member tenants (placement-scoring
+    /// input) without holding the state lock any longer than the copy.
+    fn members_by_device(&self) -> Vec<Vec<Tenant>> {
+        let st = self.state.lock().unwrap();
+        (0..self.servers.len())
+            .map(|d| {
+                st.iter()
+                    .filter(|t| t.device == d)
+                    .map(|t| t.tenant.clone())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Per-device Eq. 5 objective of each device's member set (the
+    /// incremental placement scoring baseline — same per-device score as
+    /// [`super::place::place`]).
+    fn device_objectives(&self, members: &[Vec<Tenant>]) -> Vec<f64> {
+        members
+            .iter()
+            .enumerate()
+            .map(|(d, m)| {
+                if m.is_empty() {
+                    return 0.0;
+                }
+                let dev = self.fleet.device(d);
+                alloc::hill_climb(&dev.am, m, dev.k_max()).predicted_objective
+            })
+            .collect()
+    }
+
+    /// Admit a tenant onto the fleet: score the candidate on every device
+    /// with the inner allocator and attach where the fleet objective
+    /// (max over devices of the per-device Eq. 5 objective, landing
+    /// device as tie-break) ends lowest. Refused with
+    /// [`AttachError::Admission`] only when no device has a stable
+    /// configuration for it.
+    pub fn attach(&self, model: &str, opts: AttachOptions) -> Result<TenantHandle, AttachError> {
+        let meta = self
+            .manifest
+            .get(model)
+            .map_err(AttachError::UnknownModel)?
+            .clone();
+        let newcomer = Tenant {
+            model: meta,
+            rate: opts.rate_hint,
+        };
+        // Score OUTSIDE the state lock: a hill climb is ms-scale and
+        // submit() routes through the same lock — request routing must
+        // not stall behind admission scoring. A racing attach may score
+        // against a slightly stale snapshot; the member server still
+        // enforces admission, and `rebalance` repairs placement drift.
+        let members = self.members_by_device();
+        let current = self.device_objectives(&members);
+        let n_attached: usize = members.iter().map(Vec::len).sum();
+        let mut best: Option<(f64, f64, usize)> = None;
+        let mut refusal: Option<AdmissionError> = None;
+        for (d, m) in members.iter().enumerate() {
+            let dev = self.fleet.device(d);
+            let mut cand: Vec<Tenant> = m.clone();
+            cand.push(newcomer.clone());
+            let plan = alloc::hill_climb(&dev.am, &cand, dev.k_max());
+            if !plan.predicted_objective.is_finite() {
+                let err = AdmissionError {
+                    predicted_objective: plan.predicted_objective,
+                    tpu_utilization: dev.am.tpu_utilization(&cand, &plan.config),
+                    n_tenants: cand.len(),
+                };
+                if refusal.is_none() {
+                    refusal = Some(err);
+                }
+                continue;
+            }
+            let mut objs = current.clone();
+            objs[d] = plan.predicted_objective;
+            let max = objs.iter().cloned().fold(0.0f64, f64::max);
+            // All-finite tuple compare: (fleet max of per-device Eq. 5
+            // objectives, landing device's objective). This is the same
+            // lexicographic score the offline search minimizes — the
+            // other devices' objectives are constants across the
+            // candidate devices, so tie-breaking on the landing
+            // objective is equivalent to tie-breaking on the fleet sum.
+            // Unlike `place()`, existing tenants stay pinned (this is
+            // incremental admission, not a re-layout; `rebalance`
+            // handles that), which is why the scoring is a handful of
+            // fresh climbs here instead of the memoized `Inner`.
+            let better = match best {
+                None => true,
+                Some((bm, bd, _)) => (max, plan.predicted_objective) < (bm, bd),
+            };
+            if better {
+                best = Some((max, plan.predicted_objective, d));
+            }
+        }
+        let Some((_, _, d)) = best else {
+            return Err(AttachError::Admission(refusal.unwrap_or(AdmissionError {
+                predicted_objective: f64::INFINITY,
+                tpu_utilization: f64::INFINITY,
+                n_tenants: n_attached + 1,
+            })));
+        };
+        self.attach_on(model, opts, d)
+    }
+
+    /// Attach pinned to a specific device (operators forcing a layout,
+    /// and the sim-vs-live parity tests replaying a [`super::FleetPlan`]
+    /// assignment). The device's own admission control still applies.
+    pub fn attach_on(
+        &self,
+        model: &str,
+        opts: AttachOptions,
+        device: usize,
+    ) -> Result<TenantHandle, AttachError> {
+        assert!(device < self.servers.len(), "device {device} out of range");
+        let meta = self
+            .manifest
+            .get(model)
+            .map_err(AttachError::UnknownModel)?
+            .clone();
+        let rate_hint = opts.rate_hint;
+        let class = opts.class;
+        let inner = self.servers[device].attach(model, opts)?;
+        let handle = TenantHandle(self.next_handle.fetch_add(1, Ordering::SeqCst));
+        let index = {
+            let mut st = self.state.lock().unwrap();
+            st.push(FleetTenant {
+                handle,
+                tenant: Tenant {
+                    model: meta,
+                    rate: rate_hint,
+                },
+                class,
+                device,
+                inner,
+            });
+            st.len() - 1
+        };
+        self.flush_arrivals();
+        self.placement.lock().unwrap().on_attach(self.now(), index);
+        Ok(handle)
+    }
+
+    /// Remove a tenant from the fleet (routes to its device's detach:
+    /// queued jobs fail typed, stats retire under the device handle).
+    pub fn detach(&self, handle: TenantHandle) -> Result<TenantStats> {
+        let (index, device, inner) = {
+            let mut st = self.state.lock().unwrap();
+            let Some(i) = st.iter().position(|t| t.handle == handle) else {
+                return Err(anyhow::anyhow!("{handle} is not attached to the fleet"));
+            };
+            let t = st.remove(i);
+            (i, t.device, t.inner)
+        };
+        self.flush_arrivals();
+        self.placement.lock().unwrap().on_detach(self.now(), index);
+        self.servers[device].detach(inner)
+    }
+
+    /// Route a request to the owning device. The returned [`Ticket`] is
+    /// the member server's (its `tenant()` is the device-scoped handle);
+    /// an unknown fleet handle resolves immediately with
+    /// [`RequestError::NotAttached`].
+    pub fn submit(&self, handle: TenantHandle, request: impl Into<Request>) -> Ticket {
+        let request = request.into();
+        let routed = {
+            let st = self.state.lock().unwrap();
+            st.iter()
+                .position(|t| t.handle == handle)
+                .map(|i| (i, st[i].device, st[i].inner))
+        };
+        match routed {
+            Some((index, device, inner)) => {
+                {
+                    // Feed the placement policy's rate monitor. Bounded:
+                    // a deployment that never calls `rebalance` must not
+                    // leak observations without limit — beyond the cap,
+                    // older buffered entries are dropped (the monitor's
+                    // sliding window would discard them anyway). The
+                    // positional index can be stale by the time it is
+                    // flushed (a racing detach renumbers positions) —
+                    // the same bounded misattribution the single-device
+                    // server accepts: at worst one monitor window of one
+                    // tenant's arrivals credited to a shifted peer, and
+                    // out-of-range indices are ignored by the monitor.
+                    let mut buf = self.arrivals.lock().unwrap();
+                    if buf.len() >= 100_000 {
+                        buf.drain(..50_000);
+                    }
+                    buf.push((self.now(), index));
+                }
+                self.servers[device].submit(inner, request)
+            }
+            None => {
+                let cancel = request.cancel_token();
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Err(RequestError::NotAttached(handle)));
+                crate::coordinator::request::Ticket::new(rx, cancel, handle)
+            }
+        }
+    }
+
+    /// Drain buffered submit observations into the placement policy's
+    /// rate monitor. Caller must NOT hold the placement lock.
+    fn flush_arrivals(&self) {
+        let batch: Vec<(f64, usize)> = std::mem::take(&mut *self.arrivals.lock().unwrap());
+        if batch.is_empty() {
+            return;
+        }
+        let mut policy = self.placement.lock().unwrap();
+        for (t, i) in batch {
+            policy.observe_arrival(t, i);
+        }
+    }
+
+    /// Drain-then-move migration of `handle` to `to_device`:
+    /// admission-attach on the target, reroute new submits, wait for the
+    /// source device to drain the tenant's queued/in-flight work, then
+    /// detach from the source. Returns `Ok(false)` if the tenant already
+    /// lives there (or raced a detach); admission refusal on the target
+    /// is an error and leaves the tenant untouched.
+    pub fn migrate(&self, handle: TenantHandle, to_device: usize) -> Result<bool> {
+        if to_device >= self.servers.len() {
+            return Err(anyhow::anyhow!(
+                "device {to_device} out of range ({} devices)",
+                self.servers.len()
+            ));
+        }
+        let Some((src, old_inner, name, rate_hint, class)) = ({
+            let st = self.state.lock().unwrap();
+            st.iter().find(|t| t.handle == handle).map(|t| {
+                (
+                    t.device,
+                    t.inner,
+                    t.tenant.model.name.clone(),
+                    t.tenant.rate,
+                    t.class,
+                )
+            })
+        }) else {
+            return Err(anyhow::anyhow!("{handle} is not attached to the fleet"));
+        };
+        if src == to_device {
+            return Ok(false);
+        }
+        // 1. Admission-checked attach on the target.
+        let new_inner = self.servers[to_device]
+            .attach(&name, AttachOptions { rate_hint, class })
+            .map_err(|e| anyhow::anyhow!("migration to device {to_device} refused: {e}"))?;
+        // 2. Reroute — new submits flow to the target from here on.
+        let rerouted = {
+            let mut st = self.state.lock().unwrap();
+            match st
+                .iter_mut()
+                .find(|t| t.handle == handle && t.device == src && t.inner == old_inner)
+            {
+                Some(t) => {
+                    t.device = to_device;
+                    t.inner = new_inner;
+                    true
+                }
+                None => false,
+            }
+        };
+        if !rerouted {
+            // Raced a detach or another migration: undo the target attach.
+            let _ = self.servers[to_device].detach(new_inner);
+            return Ok(false);
+        }
+        // 3. Drain: wait (bounded by `drain_budget`) until the source
+        // holds no queued or executing work for the tenant — in-service
+        // TPU work is visible to `pending_for`; two consecutive zero
+        // readings guard the microsecond station-handoff windows.
+        let deadline = Instant::now() + self.drain_budget;
+        let mut zeros = 0;
+        while zeros < 2 && Instant::now() < deadline {
+            if self.servers[src].pending_for(old_inner) == 0 {
+                zeros += 1;
+            } else {
+                zeros = 0;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // 4. Move: detach from the source. Stragglers past the drain
+        // window fail with the same typed errors a plain detach produces.
+        self.servers[src].detach(old_inner)?;
+        self.migrations.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut per = self.per_device_migrations.lock().unwrap();
+            per[src] += 1;
+            per[to_device] += 1;
+        }
+        Ok(true)
+    }
+
+    /// Ask the placement policy for a target assignment
+    /// ([`ReconfigPolicy::decide_placement`] over the monitored rates)
+    /// and execute the migrations it implies. Returns the number of
+    /// tenants moved; a per-tenant admission refusal skips that move and
+    /// continues.
+    pub fn rebalance(&self) -> usize {
+        let (handles, tenants, current) = {
+            let st = self.state.lock().unwrap();
+            (
+                st.iter().map(|t| t.handle).collect::<Vec<_>>(),
+                st.iter().map(|t| t.tenant.clone()).collect::<Vec<_>>(),
+                st.iter().map(|t| t.device).collect::<Vec<_>>(),
+            )
+        };
+        if tenants.is_empty() {
+            return 0;
+        }
+        self.flush_arrivals();
+        let target = self.placement.lock().unwrap().decide_placement(
+            self.now(),
+            &tenants,
+            &self.fleet,
+            &current,
+        );
+        let Some(target) = target else { return 0 };
+        if target.len() != handles.len() {
+            return 0;
+        }
+        let mut moved = 0;
+        for ((&h, &dst), &src) in handles.iter().zip(&target).zip(&current) {
+            if dst != src && dst < self.servers.len() {
+                if let Ok(true) = self.migrate(h, dst) {
+                    moved += 1;
+                }
+            }
+        }
+        moved
+    }
+
+    /// Aggregated statistics: per-device [`ServeStats`] with their
+    /// `migrations` counters filled in, plus the fleet totals.
+    pub fn stats(&self) -> FleetStats {
+        let per = self.per_device_migrations.lock().unwrap().clone();
+        let per_device: Vec<ServeStats> = self
+            .servers
+            .iter()
+            .zip(&per)
+            .map(|(s, &m)| {
+                let mut stats = s.stats();
+                stats.migrations = m;
+                stats
+            })
+            .collect();
+        FleetStats {
+            per_device,
+            migrations: self.migrations.load(Ordering::SeqCst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::runtime::service::ExecBackend;
+
+    fn builder(devices: usize) -> FleetServerBuilder {
+        FleetServerBuilder::new(
+            &Manifest::synthetic(),
+            Fleet::uniform(devices, &HardwareSpec::default()),
+        )
+        .backend(ExecBackend::Emulated)
+        .adaptive(false)
+    }
+
+    fn input_for(fs: &FleetServer, d: usize, inner_model: &str) -> Vec<f32> {
+        let meta = fs.servers[d]
+            .tenants()
+            .iter()
+            .find(|t| t.model.name == inner_model)
+            .map(|t| t.model.clone())
+            .expect("attached");
+        vec![0.5; meta.input_shape.iter().product()]
+    }
+
+    #[test]
+    fn routes_per_device_and_counts() {
+        let fs = builder(2).build().unwrap();
+        let ha = fs
+            .attach_on("mobilenetv2", AttachOptions::default(), 0)
+            .unwrap();
+        let hb = fs
+            .attach_on("squeezenet", AttachOptions::default(), 1)
+            .unwrap();
+        assert_eq!(fs.device_of(ha), Some(0));
+        assert_eq!(fs.device_of(hb), Some(1));
+        let ia = input_for(&fs, 0, "mobilenetv2");
+        let ib = input_for(&fs, 1, "squeezenet");
+        let mut pending = Vec::new();
+        for _ in 0..10 {
+            pending.push(fs.submit(ha, ia.clone()));
+            pending.push(fs.submit(hb, ib.clone()));
+        }
+        for t in pending {
+            t.wait().unwrap();
+        }
+        let stats = fs.stats();
+        assert_eq!(stats.completed_per_device(), vec![10, 10]);
+        assert_eq!(stats.completed(), 20);
+        assert_eq!(stats.failed(), 0);
+        assert_eq!(stats.migrations, 0);
+        assert_eq!(stats.per_class().total_count(), 20);
+    }
+
+    #[test]
+    fn fleet_attach_spreads_conflicting_tenants() {
+        // Two big-prefix tenants cannot co-reside in one SRAM: unpinned
+        // fleet attach must land them on different devices.
+        let fs = builder(2).build().unwrap();
+        let h1 = fs
+            .attach(
+                "inceptionv4",
+                AttachOptions {
+                    rate_hint: 2.0,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let h2 = fs
+            .attach(
+                "xception",
+                AttachOptions {
+                    rate_hint: 2.0,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_ne!(fs.device_of(h1), fs.device_of(h2));
+    }
+
+    #[test]
+    fn migration_drain_then_move() {
+        let fs = builder(2).build().unwrap();
+        let ha = fs
+            .attach_on("mobilenetv2", AttachOptions::default(), 0)
+            .unwrap();
+        let hb = fs
+            .attach_on("squeezenet", AttachOptions::default(), 0)
+            .unwrap();
+        let ia = input_for(&fs, 0, "mobilenetv2");
+        let ib = input_for(&fs, 0, "squeezenet");
+        for _ in 0..5 {
+            fs.submit(ha, ia.clone()).wait().unwrap();
+            fs.submit(hb, ib.clone()).wait().unwrap();
+        }
+        assert!(fs.migrate(hb, 1).unwrap());
+        assert_eq!(fs.device_of(hb), Some(1));
+        // Self-move is a no-op.
+        assert!(!fs.migrate(hb, 1).unwrap());
+        for _ in 0..5 {
+            fs.submit(hb, ib.clone()).wait().unwrap();
+        }
+        let stats = fs.stats();
+        assert_eq!(stats.migrations, 1);
+        assert_eq!(stats.per_device[0].migrations, 1);
+        assert_eq!(stats.per_device[1].migrations, 1);
+        // Device 1 served the migrated tenant's post-move traffic.
+        assert_eq!(stats.per_device[1].completed, 5);
+        // Drained before the move: nothing failed.
+        assert_eq!(stats.failed(), 0);
+        assert_eq!(stats.completed(), 15);
+    }
+
+    #[test]
+    fn unknown_handle_resolves_not_attached() {
+        let fs = builder(1).build().unwrap();
+        match fs.submit(TenantHandle(99), vec![0.5; 4]).wait() {
+            Err(RequestError::NotAttached(h)) => assert_eq!(h, TenantHandle(99)),
+            other => panic!("expected NotAttached, got {other:?}"),
+        }
+        assert!(fs.detach(TenantHandle(99)).is_err());
+        assert!(fs.migrate(TenantHandle(99), 0).is_err());
+    }
+
+    #[test]
+    fn rebalance_splits_colocated_tenants_once_rates_are_seen() {
+        let fs = builder(2).build().unwrap();
+        let ha = fs
+            .attach_on("inceptionv4", AttachOptions::default(), 0)
+            .unwrap();
+        let hb = fs
+            .attach_on("xception", AttachOptions::default(), 0)
+            .unwrap();
+        // No observed traffic: the policy has no rates, no move.
+        assert_eq!(fs.rebalance(), 0);
+        let ia = input_for(&fs, 0, "inceptionv4");
+        let ib = input_for(&fs, 0, "xception");
+        for _ in 0..12 {
+            fs.submit(ha, ia.clone()).wait().unwrap();
+            fs.submit(hb, ib.clone()).wait().unwrap();
+        }
+        let moved = fs.rebalance();
+        assert!(moved >= 1, "no migration despite conflicting colocation");
+        assert_ne!(fs.device_of(ha), fs.device_of(hb));
+        assert_eq!(fs.stats().migrations, moved as u64);
+    }
+}

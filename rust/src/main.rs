@@ -8,9 +8,13 @@
 //!   schedulers               scheduler ablation (per-SLO-class tails)
 //!   overload                 overload-policy × load-factor sweep
 //!   churn                    dynamic experiment with tenant attach/detach
+//!   fleet                    multi-device placement sweep (1/2/4 TPUs × ρ)
 //!   profile                  offline profiling phase → profiles.json
 //!   plan                     run the allocator on a workload, print config
+//!   placement                run the two-level fleet allocator, print the
+//!                            tenant→device assignment + per-device plans
 //!   serve                    live serving demo with a dynamic tenant set
+//!                            (--devices N serves through the fleet router)
 //!   trace                    record a Poisson arrival trace for replay
 //!   replay                   plan + simulate a recorded trace
 //!
@@ -27,10 +31,10 @@ use swapless::experiments::common::save_result;
 use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 21] = [
+const VALUE_OPTS: [&str; 22] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
     "trace", "policy", "duration", "attach-at", "detach-at", "backend", "discipline", "classes",
-    "queue-cap", "overload", "deadline-ms",
+    "queue-cap", "overload", "deadline-ms", "devices",
 ];
 
 fn main() {
@@ -57,12 +61,19 @@ fn usage() -> String {
                                    x rho {0.7, 1.0, 1.5} on the Table-II mix with\n\
                                    bounded queues (results/overload.json)\n\
        churn                       Fig-8-style dynamic run with tenant attach/detach\n\
+       fleet                       multi-device placement sweep: 1/2/4 devices x\n\
+                                   Table-II mixes x rho, equal total load per group\n\
+                                   (results/fleet.json)\n\
        profile [--models a,b] [--iters N] [--out FILE]\n\
                                    offline profiling phase -> profiles.json\n\
        plan --models a,b --rates x,y\n\
                                    run the allocator, print the (P, K) config\n\
+       placement --models a,b --rates x,y [--devices N]\n\
+                                   run the two-level fleet allocator: print the\n\
+                                   tenant->device assignment, each device's (P, K)\n\
+                                   plan, and the predicted fleet objective\n\
        serve [--models a,b] [--rates x,y | --rho R] [--classes c1,c2]\n\
-             [--duration S] [--time-scale S]\n\
+             [--devices N] [--duration S] [--time-scale S]\n\
              [--discipline fifo|priority|wfq|spsf]\n\
              [--queue-cap N] [--overload block|reject|shed|deadline]\n\
              [--deadline-ms D] [--attach-at name@t[:rate],...]\n\
@@ -72,7 +83,10 @@ fn usage() -> String {
                                    --rho drives open-loop load at a TPU load factor\n\
                                    (>= 1 = overload); --queue-cap/--overload bound\n\
                                    every station's admission; --deadline-ms tags\n\
-                                   every request with a relative deadline\n\
+                                   every request with a relative deadline;\n\
+                                   --devices N routes through the fleet layer\n\
+                                   (placement-aware dispatch + migration;\n\
+                                   --attach-at/--detach-at not supported there)\n\
        trace --models a,b --rates x,y [--horizon S] [--seed N] [--out FILE]\n\
                                    record a Poisson arrival trace (JSON)\n\
        replay --trace FILE [--policy swapless|compiler|threshold]\n\
@@ -123,7 +137,9 @@ fn run(raw: &[String]) -> Result<(), String> {
             run_named(&ctx, "sensitivity")?;
             run_named(&ctx, "schedulers")
         }
-        "ablation" | "sensitivity" | "churn" | "schedulers" | "overload" => run_named(&ctx, cmd),
+        "ablation" | "sensitivity" | "churn" | "schedulers" | "overload" | "fleet" => {
+            run_named(&ctx, cmd)
+        }
         "profile" => {
             let models = if args.opt("models").is_some() {
                 args.opt_list("models")
@@ -198,11 +214,92 @@ fn run(raw: &[String]) -> Result<(), String> {
             }
             Ok(())
         }
-        "serve" => serve(&ctx, &args, &hw),
+        "placement" => placement(&ctx, &args),
+        "serve" => {
+            let devices = args.opt_usize("devices", 1)?;
+            if devices > 1 {
+                serve_fleet(&ctx, &args, &hw, devices)
+            } else {
+                serve(&ctx, &args, &hw)
+            }
+        }
         "trace" => trace_record(&ctx, &args),
         "replay" => trace_replay(&ctx, &args),
+        // Unknown commands print the full usage and exit non-zero via
+        // main's error path.
         _ => Err(usage()),
     }
+}
+
+/// `swapless placement --models a,b --rates x,y --devices N` — run the
+/// two-level fleet allocator and print the assignment + per-device plans.
+fn placement(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
+    use swapless::fleet::{place, Fleet};
+    let names = args.opt_list("models");
+    if names.is_empty() {
+        return Err("placement needs --models a,b".into());
+    }
+    let rates: Vec<f64> = args
+        .opt_list("rates")
+        .iter()
+        .map(|r| r.parse::<f64>().map_err(|_| format!("bad rate {r}")))
+        .collect::<Result<_, _>>()?;
+    if rates.len() != names.len() {
+        return Err("--rates must match --models".into());
+    }
+    let devices = args.opt_usize("devices", 2)?;
+    if devices == 0 {
+        return Err("--devices must be >= 1".into());
+    }
+    let tenants: Vec<Tenant> = names
+        .iter()
+        .zip(&rates)
+        .map(|(n, r)| {
+            Ok(Tenant {
+                model: ctx.manifest.get(n)?.clone(),
+                rate: *r,
+            })
+        })
+        .collect::<Result<_, String>>()?;
+    let fleet = Fleet::uniform(devices, &ctx.cost.hw);
+    let t0 = std::time::Instant::now();
+    let plan = place(&fleet, &tenants);
+    let dt = t0.elapsed();
+    println!("two-level placement over {devices} device(s):");
+    for (i, n) in names.iter().enumerate() {
+        println!(
+            "  {n} @ {:.2} rps -> device {}",
+            rates[i], plan.assignment[i]
+        );
+    }
+    for dp in &plan.devices {
+        let members: Vec<&str> = dp.tenants.iter().map(|&i| names[i].as_str()).collect();
+        if members.is_empty() {
+            println!("  device {}: idle", dp.device);
+        } else {
+            println!(
+                "  device {}: {:?} P={:?} K={:?} mean {:.1} ms rho {:.2}",
+                dp.device,
+                members,
+                dp.config.partitions,
+                dp.config.cores,
+                dp.mean_latency * 1e3,
+                dp.tpu_utilization
+            );
+        }
+    }
+    println!(
+        "fleet objective (worst device mean): {:.1} ms | {} inner evaluations, \
+         {} refinement moves, {:?}",
+        plan.objective * 1e3,
+        plan.evaluations,
+        plan.refine_moves,
+        dt
+    );
+    if !plan.is_stable() {
+        println!("warning: no stable configuration on at least one device (rho >= 1)");
+    }
+    Ok(())
 }
 
 /// `swapless trace --models a,b --rates x,y --horizon S --out trace.json`
@@ -376,6 +473,11 @@ fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
             r.print();
             save_result("overload", &r.to_json())
         }
+        "fleet" => {
+            let r = exp::fleet::run(ctx)?;
+            r.print();
+            save_result("fleet", &r.to_json())
+        }
         _ => Err(format!("unknown experiment {which}")),
     }
 }
@@ -459,6 +561,243 @@ fn parse_lifecycle(
         });
     }
     Ok(events)
+}
+
+/// `swapless serve --devices N` (N > 1) — live serving through the fleet
+/// router: tenants attach to the fleet (placement-aware admission lands
+/// each on the best device), an open-loop Poisson workload drives every
+/// tenant, periodic `rebalance()` lets the placement policy migrate
+/// tenants between devices, and per-device statistics are reported.
+fn serve_fleet(
+    ctx: &exp::Ctx,
+    args: &cli::Args,
+    hw: &HardwareSpec,
+    devices: usize,
+) -> Result<(), String> {
+    use swapless::analytic::TenantHandle;
+    use swapless::coordinator::{AttachOptions, Request};
+    use swapless::fleet::{Fleet, FleetServerBuilder};
+    use swapless::runtime::service::ExecBackend;
+    use swapless::sched::{DisciplineKind, OverloadPolicy, SloClass};
+    use swapless::util::rng::Rng;
+    use std::time::{Duration, Instant};
+
+    // Tenant churn schedules are a single-device serve feature for now;
+    // fail loudly rather than silently ignoring the flags.
+    if args.opt("attach-at").is_some() || args.opt("detach-at").is_some() {
+        return Err(
+            "--attach-at/--detach-at are not supported with --devices > 1 yet; \
+             use the fleet API (FleetServer::attach/detach) or a single device"
+                .into(),
+        );
+    }
+    let names = if args.opt("models").is_some() {
+        args.opt_list("models")
+    } else {
+        vec!["mobilenetv2".to_string(), "inceptionv4".to_string()]
+    };
+    // --rho R drives the mix at a nominal TPU load factor measured on
+    // the 1-DEVICE full-TPU reference (the fleet experiment's equal-
+    // total-load convention, `rates_for_load_factor` semantics);
+    // otherwise --rates (default 2 rps each) applies.
+    let rates: Vec<f64> = if let Some(v) = args.opt("rho") {
+        let rho: f64 = v.parse().map_err(|_| format!("bad --rho {v}"))?;
+        let tenants: Vec<Tenant> = names
+            .iter()
+            .map(|n| {
+                Ok(Tenant {
+                    model: ctx.manifest.get(n)?.clone(),
+                    rate: 0.0,
+                })
+            })
+            .collect::<Result<_, String>>()?;
+        let full = swapless::analytic::Config::all_tpu(&tenants);
+        let shares = swapless::workload::equal_tpu_load_shares(&ctx.am, &tenants);
+        swapless::workload::rates_for_load_factor(&ctx.am, &tenants, &full, &shares, rho)
+    } else if args.opt("rates").is_some() {
+        args.opt_list("rates")
+            .iter()
+            .map(|r| r.parse::<f64>().map_err(|_| format!("bad rate {r}")))
+            .collect::<Result<_, _>>()?
+    } else {
+        vec![2.0; names.len()]
+    };
+    if rates.len() != names.len() {
+        return Err("--rates must match --models".into());
+    }
+    let classes: Vec<SloClass> = if args.opt("classes").is_some() {
+        args.opt_list("classes")
+            .iter()
+            .map(|c| SloClass::parse(c))
+            .collect::<Result<_, _>>()?
+    } else {
+        vec![SloClass::Standard; names.len()]
+    };
+    if classes.len() != names.len() {
+        return Err("--classes must match --models".into());
+    }
+    let discipline = DisciplineKind::parse(&args.opt_or("discipline", "fifo"))?;
+    let overload = OverloadPolicy::parse(&args.opt_or("overload", "block"))?;
+    let queue_cap = match args.opt("queue-cap") {
+        Some(v) => Some(v.parse::<usize>().map_err(|_| format!("bad --queue-cap {v}"))?),
+        None => None,
+    };
+    if queue_cap.is_some() && overload == OverloadPolicy::Block {
+        return Err(
+            "--queue-cap has no effect under --overload block (unbounded); \
+             pick --overload reject|shed|deadline"
+                .into(),
+        );
+    }
+    let deadline = match args.opt("deadline-ms") {
+        Some(v) => {
+            let ms: f64 = v.parse().map_err(|_| format!("bad --deadline-ms {v}"))?;
+            Some(Duration::from_secs_f64(ms * 1e-3))
+        }
+        None => None,
+    };
+    let duration = args.opt_f64("duration", 8.0)?;
+    let time_scale = args.opt_f64("time-scale", 0.0)?;
+    let backend = match args.opt_or("backend", "auto").as_str() {
+        "auto" => ExecBackend::Auto,
+        "pjrt" => ExecBackend::Pjrt,
+        "emulated" => ExecBackend::Emulated,
+        other => return Err(format!("unknown --backend {other}")),
+    };
+
+    let fleet = Fleet::uniform(devices, hw);
+    let mut builder = FleetServerBuilder::new(&ctx.manifest, fleet)
+        .backend(backend)
+        .time_scale(time_scale)
+        .discipline(discipline)
+        .overload(overload)
+        .adaptive(true);
+    if let Some(cap) = queue_cap {
+        builder = builder.queue_capacity(cap);
+    }
+    let server = builder.build().map_err(|e| e.to_string())?;
+    println!(
+        "fleet: {devices} devices | discipline: {discipline} | overload: {overload}{}",
+        queue_cap.map(|c| format!(" cap {c}")).unwrap_or_default()
+    );
+
+    // Live tenants: (handle, name, input length, drive rate, next arrival).
+    let mut live: Vec<(TenantHandle, String, usize, f64, f64)> = Vec::new();
+    let mut rng = Rng::new(args.opt_u64("seed", 42)?);
+    for ((n, r), c) in names.iter().zip(&rates).zip(&classes) {
+        match server.attach(
+            n,
+            AttachOptions {
+                rate_hint: *r,
+                class: *c,
+            },
+        ) {
+            Ok(h) => {
+                let d = server.device_of(h).expect("just attached");
+                println!("attach {n} @ {r:.2} rps ({c}) -> {h} on device {d}");
+                let n_in: usize = ctx.manifest.get(n)?.input_shape.iter().product();
+                live.push((h, n.clone(), n_in, *r, rng.exponential(*r)));
+            }
+            Err(e) => println!("attach {n} REFUSED: {e}"),
+        }
+    }
+
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    // Rebalance on the same cadence as the single-device re-allocator
+    // (the placement policy applies its own rate-change damping on top).
+    let rebalance_period = swapless::config::RuntimeConfig::default().realloc_period_s;
+    let mut next_rebalance = rebalance_period;
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= duration {
+            break;
+        }
+        if now >= next_rebalance {
+            let moved = server.rebalance();
+            if moved > 0 {
+                println!("t={now:.1}s rebalance migrated {moved} tenant(s)");
+            }
+            next_rebalance = now + rebalance_period;
+            continue;
+        }
+        let next_arrival = live
+            .iter()
+            .map(|(_, _, _, _, t)| *t)
+            .fold(f64::INFINITY, f64::min);
+        let next = next_arrival.min(next_rebalance).min(duration);
+        if next > now {
+            std::thread::sleep(Duration::from_secs_f64((next - now).min(0.05)));
+            continue;
+        }
+        let idx = live
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .4.partial_cmp(&b.1 .4).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let (h, _, n_in, rate, _) = &live[idx];
+        let mut req = Request::new(vec![0.5; *n_in]);
+        if let Some(d) = deadline {
+            req = req.with_deadline(d);
+        }
+        pending.push(server.submit(*h, req));
+        let step = rng.exponential(*rate);
+        live[idx].4 = now + step;
+    }
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for ticket in pending {
+        match ticket.wait() {
+            Ok(_) => ok += 1,
+            Err(_) => failed += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "\nserved {ok} requests in {wall:.2}s ({:.1} req/s); {failed} resolved with \
+         typed errors; {} migrations",
+        ok as f64 / wall,
+        stats.migrations
+    );
+    for (d, s) in stats.per_device.iter().enumerate() {
+        println!(
+            "device {d}: completed={} accepted={} rejected={} shed={} expired={} \
+             failed={} reconfigs={} migrations={}",
+            s.completed,
+            s.accepted,
+            s.rejected,
+            s.shed,
+            s.expired,
+            s.failed,
+            s.reconfigs,
+            s.migrations
+        );
+        for t in &s.per_tenant {
+            if t.latency.count() > 0 {
+                println!(
+                    "  {:<14} {}{}: n={} mean {:.1} ms p95 {:.1} ms",
+                    t.name,
+                    t.handle,
+                    if t.detached { " (detached)" } else { "" },
+                    t.latency.count(),
+                    t.latency.mean() * 1e3,
+                    t.latency.percentile(95.0) * 1e3
+                );
+            }
+        }
+    }
+    for (class, hist) in stats.per_class().non_empty() {
+        println!(
+            "  class {:<11}: n={} mean {:.1} ms p99 {:.1} ms",
+            class.name(),
+            hist.count(),
+            hist.mean() * 1e3,
+            hist.percentile(99.0) * 1e3
+        );
+    }
+    Ok(())
 }
 
 /// `swapless serve` — live serving demo with a dynamic tenant set: the

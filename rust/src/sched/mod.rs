@@ -121,6 +121,11 @@ pub struct JobMeta {
     /// no deadline. Only the `DeadlineDrop` overload policy acts on it;
     /// other policies carry it through for goodput accounting.
     pub deadline: Option<f64>,
+    /// Index of the TPU device whose station queued this job (0 on a
+    /// single-device deployment). Disciplines never key on it — each
+    /// device runs its own queues — but it keeps multi-device jobs
+    /// self-describing for tracing and the fleet router's accounting.
+    pub device: usize,
 }
 
 impl JobMeta {
@@ -424,6 +429,16 @@ impl<T> SchedQueue<T> {
         self.disc.peek_next_service_hint()
     }
 
+    /// Number of queued jobs belonging to `tenant` — the drain check the
+    /// fleet router's drain-then-move migration polls before detaching a
+    /// tenant from its source device. O(queue length).
+    pub fn count_tenant(&self, tenant: TenantHandle) -> usize {
+        self.jobs
+            .values()
+            .filter(|(m, _)| m.tenant == tenant)
+            .count()
+    }
+
     /// Remove every queued job of `tenant` (detach), in id order.
     pub fn drain_tenant(&mut self, tenant: TenantHandle) -> Vec<(JobMeta, T)> {
         let mut ids = self.disc.drain_tenant(tenant);
@@ -564,6 +579,7 @@ mod tests {
             class,
             service_hint: hint,
             deadline: None,
+            device: 0,
         }
     }
 

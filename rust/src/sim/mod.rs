@@ -61,6 +61,11 @@ pub struct SimOptions {
     /// [`OverloadPolicy`]); `Block` reproduces the legacy unbounded
     /// behavior exactly.
     pub overload: OverloadPolicy,
+    /// Device index this simulator instance models (0 on a single-device
+    /// run). The multi-device DES ([`crate::fleet::simulate_fleet`]) runs
+    /// one station set per device and tags every queued job's
+    /// [`JobMeta::device`] with it.
+    pub device: usize,
 }
 
 impl Default for SimOptions {
@@ -73,6 +78,7 @@ impl Default for SimOptions {
             discipline: DisciplineKind::Fifo,
             capacity: None,
             overload: OverloadPolicy::Block,
+            device: 0,
         }
     }
 }
@@ -480,6 +486,7 @@ impl Simulator {
             class: req.class,
             service_hint: self.memo[i].cpu_service,
             deadline: req.deadline,
+            device: self.opts.device,
         };
         let load = StationLoad {
             in_service: self.cpu_busy[i],
@@ -704,6 +711,7 @@ impl Simulator {
                         class: req.class,
                         service_hint: self.memo[i].tpu_service,
                         deadline: req.deadline,
+                        device: self.opts.device,
                     };
                     let load = StationLoad {
                         in_service: usize::from(self.tpu_busy),

@@ -30,6 +30,23 @@ pub trait ReconfigPolicy {
     /// The tenant at positional `index` was removed; peers above shifted
     /// down by one.
     fn on_detach(&mut self, _t: f64, _index: usize) {}
+    /// Fleet-level extension: propose a tenant→device reassignment for
+    /// the given device registry (heterogeneous specs included —
+    /// policies must plan against the *actual* fleet, not a clone of
+    /// device 0). `current` maps tenant position → device index.
+    /// Returning `Some(target)` asks the fleet router
+    /// ([`crate::fleet::FleetServer::rebalance`]) to migrate every tenant
+    /// whose device changed (drain-then-move). The default never
+    /// migrates, so single-device policies are unaffected.
+    fn decide_placement(
+        &mut self,
+        _t: f64,
+        _tenants: &[Tenant],
+        _fleet: &crate::fleet::Fleet,
+        _current: &[usize],
+    ) -> Option<Vec<usize>> {
+        None
+    }
 }
 
 /// Sliding-window per-model arrival-rate estimator.
@@ -130,9 +147,15 @@ pub struct SwapLessPolicy {
     /// Relative rate change below which we skip re-planning.
     threshold: f64,
     last_rates: Vec<f64>,
+    /// Rates the last `decide_placement` search ran with — the same
+    /// threshold damping, applied independently to the (more expensive,
+    /// migration-triggering) fleet-placement decision.
+    last_placement_rates: Vec<f64>,
     /// Set by the churn hooks: the tenant set changed, so the next
     /// `decide` must re-plan regardless of the rate-change threshold.
     force_replan: bool,
+    /// Like `force_replan`, for the next `decide_placement`.
+    placement_dirty: bool,
     /// A previous `decide` saw a tenant count that disagreed with the
     /// monitor (stale snapshot racing churn, or a hookless driver).
     resync_pending: bool,
@@ -165,7 +188,9 @@ impl SwapLessPolicy {
             period,
             threshold,
             last_rates: vec![0.0; n_models],
+            last_placement_rates: Vec::new(),
             force_replan: false,
+            placement_dirty: true,
             resync_pending: false,
             decision_micros: Vec::new(),
             tables: Vec::new(),
@@ -174,14 +199,20 @@ impl SwapLessPolicy {
     }
 
     fn rates_changed(&self, rates: &[f64]) -> bool {
-        for (new, old) in rates.iter().zip(&self.last_rates) {
-            let base = old.abs().max(0.1);
-            if (new - old).abs() / base > self.threshold {
-                return true;
-            }
-        }
-        false
+        rates_differ(rates, &self.last_rates, self.threshold)
     }
+}
+
+/// True when any rate moved by more than `threshold` relative to `old`
+/// (floored at 0.1 rps so idle tenants don't divide by ~zero).
+fn rates_differ(new: &[f64], old: &[f64], threshold: f64) -> bool {
+    for (n, o) in new.iter().zip(old) {
+        let base = o.abs().max(0.1);
+        if (n - o).abs() / base > threshold {
+            return true;
+        }
+    }
+    false
 }
 
 impl ReconfigPolicy for SwapLessPolicy {
@@ -197,6 +228,7 @@ impl ReconfigPolicy for SwapLessPolicy {
         self.monitor.insert_model();
         self.last_rates.push(0.0);
         self.force_replan = true;
+        self.placement_dirty = true;
     }
 
     fn on_detach(&mut self, _t: f64, index: usize) {
@@ -205,6 +237,7 @@ impl ReconfigPolicy for SwapLessPolicy {
             self.last_rates.remove(index);
         }
         self.force_replan = true;
+        self.placement_dirty = true;
     }
 
     fn decide(&mut self, t: f64, tenants: &[Tenant], current: &Config) -> Option<Config> {
@@ -257,6 +290,107 @@ impl ReconfigPolicy for SwapLessPolicy {
         } else {
             None
         }
+    }
+
+    /// The SwapLess placement extension: estimate rates from the monitor
+    /// and run the two-level fleet search ([`crate::fleet::place`]) over
+    /// the actual device registry (per-device SRAM/bandwidth/core
+    /// budgets respected). No observed traffic ⇒ no move.
+    fn decide_placement(
+        &mut self,
+        t: f64,
+        tenants: &[Tenant],
+        fleet: &crate::fleet::Fleet,
+        current: &[usize],
+    ) -> Option<Vec<usize>> {
+        if fleet.len() <= 1 || tenants.is_empty() || current.len() != tenants.len() {
+            return None;
+        }
+        if self.monitor.n_models() != tenants.len() {
+            return None;
+        }
+        let rates = self.monitor.rates(t);
+        if rates.iter().sum::<f64>() <= 0.0 {
+            return None;
+        }
+        // The same threshold damping `decide` applies: skip the (more
+        // expensive, migration-triggering) two-level search while the
+        // tenant set is unchanged and no rate moved beyond `threshold`
+        // since the last placement decision — Poisson noise on a
+        // near-tie placement must not flip tenants between devices.
+        if !self.placement_dirty
+            && self.last_placement_rates.len() == rates.len()
+            && !rates_differ(&rates, &self.last_placement_rates, self.threshold)
+        {
+            return None;
+        }
+        let estimated: Vec<Tenant> = tenants
+            .iter()
+            .zip(&rates)
+            .map(|(tn, r)| Tenant {
+                model: tn.model.clone(),
+                rate: *r,
+            })
+            .collect();
+        let plan = crate::fleet::place(fleet, &estimated);
+        self.last_placement_rates = rates;
+        self.placement_dirty = false;
+        let mut target = plan.assignment;
+        // On a homogeneous fleet device labels are interchangeable:
+        // relabel the plan's groups onto the current devices to minimize
+        // migrations (a pure permutation of the current layout relabels
+        // to the identity and proposes nothing). Heterogeneous fleets
+        // keep the planner's labels — they carry real meaning there.
+        if fleet.is_homogeneous() {
+            relabel_to_minimize_moves(&mut target, current, fleet.len());
+        }
+        if target != current {
+            Some(target)
+        } else {
+            None
+        }
+    }
+}
+
+/// Greedily map the target's device groups onto current device labels by
+/// descending member overlap — valid only when devices are identical
+/// (relabeling is cost-free), which `Fleet::uniform` guarantees.
+fn relabel_to_minimize_moves(target: &mut [usize], current: &[usize], devices: usize) {
+    let mut overlap = vec![vec![0usize; devices]; devices];
+    for (i, &pd) in target.iter().enumerate() {
+        overlap[pd][current[i]] += 1;
+    }
+    let mut used = vec![false; devices];
+    let mut map = vec![usize::MAX; devices];
+    loop {
+        let mut best: Option<(usize, usize, usize)> = None;
+        for (pd, row) in overlap.iter().enumerate() {
+            if map[pd] != usize::MAX {
+                continue;
+            }
+            for (cd, &o) in row.iter().enumerate() {
+                if used[cd] {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bo, _, _)) => o > bo,
+                };
+                if better {
+                    best = Some((o, pd, cd));
+                }
+            }
+        }
+        match best {
+            Some((_, pd, cd)) => {
+                map[pd] = cd;
+                used[cd] = true;
+            }
+            None => break,
+        }
+    }
+    for t in target.iter_mut() {
+        *t = map[*t];
     }
 }
 
@@ -423,6 +557,45 @@ mod tests {
             assert_eq!(cfg.partitions.len(), 1);
         }
         assert_eq!(pol.monitor.n_models(), 1);
+    }
+
+    #[test]
+    fn swapless_policy_places_conflicting_tenants_apart() {
+        // Two big-prefix tenants that cannot share one SRAM: once the
+        // monitor has seen traffic for both, decide_placement on a
+        // 2-device fleet must split them; with no traffic it must not
+        // propose anything.
+        let cost = CostModel::new(HardwareSpec::default());
+        let am = AnalyticModel::new(cost);
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("a", 6, 2_000_000, 800_000_000),
+                rate: 0.0,
+            },
+            Tenant {
+                model: synthetic_model("b", 6, 2_000_000, 800_000_000),
+                rate: 0.0,
+            },
+        ];
+        let mut pol = SwapLessPolicy::new(am, 4, 2, 10.0, 5.0, 0.05);
+        let fleet = crate::fleet::Fleet::uniform(2, &HardwareSpec::default());
+        assert_eq!(pol.decide_placement(0.0, &tenants, &fleet, &[0, 0]), None);
+        let mut t = 0.0;
+        while t < 10.0 {
+            pol.observe_arrival(t, 0);
+            pol.observe_arrival(t + 0.1, 1);
+            t += 0.5;
+        }
+        let target = pol
+            .decide_placement(10.0, &tenants, &fleet, &[0, 0])
+            .expect("conflicting colocation should trigger a move");
+        assert_ne!(target[0], target[1], "tenants not split: {target:?}");
+        // Already balanced ⇒ no proposal.
+        assert_eq!(pol.decide_placement(10.1, &tenants, &fleet, &target), None);
+        // Default trait hook (StaticPolicy) never migrates.
+        let mut stat = StaticPolicy;
+        let four = crate::fleet::Fleet::uniform(4, &HardwareSpec::default());
+        assert_eq!(stat.decide_placement(1.0, &tenants, &four, &[0, 0]), None);
     }
 
     #[test]

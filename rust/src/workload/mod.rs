@@ -144,6 +144,35 @@ pub fn generate_arrivals_annotated(
     all
 }
 
+/// Split a merged arrival stream by a tenant→device placement: stream
+/// `d` holds the arrivals of the tenants assigned to device `d`, with
+/// each [`Arrival::model`] remapped to the tenant's rank among that
+/// device's tenants in ascending global order — exactly the positional
+/// index the per-device engine (DES station set or member server) sees,
+/// and the member order [`crate::fleet::DevicePlan::tenants`] records.
+/// Relative order (and therefore every per-device queueing decision) is
+/// preserved.
+pub fn split_by_placement(
+    arrivals: &[Arrival],
+    assignment: &[usize],
+    devices: usize,
+) -> Vec<Vec<Arrival>> {
+    let mut local = vec![0usize; assignment.len()];
+    let mut counts = vec![0usize; devices];
+    for (i, &d) in assignment.iter().enumerate() {
+        assert!(d < devices, "tenant {i} assigned to device {d} of {devices}");
+        local[i] = counts[d];
+        counts[d] += 1;
+    }
+    let mut out: Vec<Vec<Arrival>> = (0..devices).map(|_| Vec::new()).collect();
+    for a in arrivals {
+        let mut routed = *a;
+        routed.model = local[a.model];
+        out[assignment[a.model]].push(routed);
+    }
+    out
+}
+
 /// Solve for per-model rates that (a) hit a target TPU utilization ρ under
 /// configuration `cfg` and (b) split the load by `shares` (Fig. 6c/7's
 /// "each model's request rate is configured to generate an equal TPU load").
@@ -307,6 +336,51 @@ mod tests {
         let late = arr.iter().filter(|a| a.time >= 500.0).count() as f64 / 500.0;
         assert!((early - 1.0).abs() < 0.3, "early={early}");
         assert!((late - 8.0).abs() < 1.0, "late={late}");
+    }
+
+    #[test]
+    fn split_by_placement_remaps_and_preserves_order() {
+        let mut rng = Rng::new(21);
+        let arr = generate_arrivals(
+            &[
+                RateSchedule::constant(2.0),
+                RateSchedule::constant(3.0),
+                RateSchedule::constant(1.0),
+            ],
+            300.0,
+            &mut rng,
+        );
+        // Tenants 0 and 2 on device 1, tenant 1 alone on device 0.
+        let streams = split_by_placement(&arr, &[1, 0, 1], 2);
+        assert_eq!(streams.len(), 2);
+        assert_eq!(streams[0].len() + streams[1].len(), arr.len());
+        // Device 0 sees tenant 1 as its local model 0.
+        assert!(streams[0].iter().all(|a| a.model == 0));
+        assert_eq!(
+            streams[0].len(),
+            arr.iter().filter(|a| a.model == 1).count()
+        );
+        // Device 1 sees tenant 0 as local 0 and tenant 2 as local 1
+        // (ascending global order), times preserved and sorted.
+        assert_eq!(
+            streams[1].iter().filter(|a| a.model == 0).count(),
+            arr.iter().filter(|a| a.model == 0).count()
+        );
+        assert_eq!(
+            streams[1].iter().filter(|a| a.model == 1).count(),
+            arr.iter().filter(|a| a.model == 2).count()
+        );
+        for s in &streams {
+            for w in s.windows(2) {
+                assert!(w[0].time <= w[1].time);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "assigned to device")]
+    fn split_by_placement_rejects_out_of_range_device() {
+        split_by_placement(&[], &[2], 2);
     }
 
     #[test]

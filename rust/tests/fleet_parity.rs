@@ -1,0 +1,224 @@
+//! Sim-vs-live FLEET parity: the multi-device DES and the live fleet
+//! router decompose into the same per-device engines under the same
+//! placement, so an identical placement + workload must produce identical
+//! per-device per-tenant accepted/completed counts on both paths.
+//!
+//! Construction mirrors `tests/sched_parity.rs`: a deterministic arrival
+//! sequence (FIFO, Block overload — nothing drops) is replayed through
+//! [`run_fleet`] and through a [`FleetServer`] whose tenants are pinned
+//! to the same [`FleetPlan`] assignment with the same per-device (P, K)
+//! configurations.
+
+use swapless::analytic::Tenant;
+use swapless::config::HardwareSpec;
+use swapless::coordinator::AttachOptions;
+use swapless::fleet::{place, run_fleet, Fleet, FleetServerBuilder};
+use swapless::model::Manifest;
+use swapless::runtime::service::ExecBackend;
+use swapless::sched::SloClass;
+use swapless::sim::SimOptions;
+use swapless::workload::Arrival;
+
+const MODELS: [&str; 3] = ["mobilenetv2", "squeezenet", "inceptionv4"];
+const RATES: [f64; 3] = [3.0, 2.0, 1.0];
+const PER_TENANT: usize = 15;
+
+fn tenants() -> Vec<Tenant> {
+    let manifest = Manifest::synthetic();
+    MODELS
+        .iter()
+        .zip(&RATES)
+        .map(|(n, r)| Tenant {
+            model: manifest.get(n).unwrap().clone(),
+            rate: *r,
+        })
+        .collect()
+}
+
+/// Round-robin deterministic arrivals: PER_TENANT requests per tenant,
+/// globally interleaved and time-sorted.
+fn arrivals() -> Vec<Arrival> {
+    let mut out = Vec::new();
+    for i in 0..PER_TENANT {
+        for m in 0..MODELS.len() {
+            out.push(Arrival {
+                time: 0.05 * (MODELS.len() * i + m) as f64,
+                model: m,
+                class: SloClass::Standard,
+                deadline: None,
+            });
+        }
+    }
+    out
+}
+
+#[test]
+fn fleet_sim_vs_live_count_parity() {
+    let ts = tenants();
+    let fleet = Fleet::uniform(2, &HardwareSpec::default());
+    let plan = place(&fleet, &ts);
+    // The plan must use both devices for this mixed-size mix (the big
+    // inceptionv4 prefix conflicts with co-residents).
+    assert!(plan.devices.iter().all(|d| !d.tenants.is_empty()));
+
+    // --- DES side ---------------------------------------------------
+    let res = run_fleet(
+        &fleet,
+        &ts,
+        &plan,
+        &arrivals(),
+        &SimOptions {
+            horizon: 1000.0,
+            warmup: 0.0,
+            seed: 1,
+            ..SimOptions::default()
+        },
+    );
+    // FIFO + Block: every routed request is accepted and completes.
+    for i in 0..MODELS.len() {
+        assert_eq!(
+            res.tenant_completed(i),
+            PER_TENANT as u64,
+            "DES lost requests of tenant {i}"
+        );
+    }
+    let sim_per_device: Vec<Vec<(usize, u64, u64)>> = res
+        .per_device
+        .iter()
+        .map(|d| {
+            d.tenants
+                .iter()
+                .zip(&d.result.per_model)
+                .map(|(&g, m)| (g, m.accepted, m.completed))
+                .collect()
+        })
+        .collect();
+
+    // --- live side: same placement, same per-device configs ---------
+    let fs = FleetServerBuilder::new(&Manifest::synthetic(), fleet)
+        .backend(ExecBackend::Emulated)
+        .adaptive(false)
+        .build()
+        .unwrap();
+    // Attach in per-device member order so each member server's
+    // positional order matches the DES station's.
+    let mut handle_of = vec![None; MODELS.len()];
+    for dp in &plan.devices {
+        for &g in &dp.tenants {
+            let h = fs
+                .attach_on(
+                    MODELS[g],
+                    AttachOptions {
+                        rate_hint: RATES[g],
+                        class: SloClass::Standard,
+                    },
+                    dp.device,
+                )
+                .unwrap();
+            assert_eq!(fs.device_of(h), Some(dp.device));
+            handle_of[g] = Some(h);
+        }
+        // Install the plan's exact (P, K) on the member server.
+        fs.set_device_config(dp.device, dp.config.clone()).unwrap();
+    }
+
+    let mut pending = Vec::new();
+    for a in arrivals() {
+        let h = handle_of[a.model].unwrap();
+        let n_in: usize = ts[a.model].model.input_shape.iter().product();
+        pending.push((a.model, fs.submit(h, vec![0.5f32; n_in])));
+    }
+    let mut live_completed = vec![0u64; MODELS.len()];
+    for (m, ticket) in pending {
+        ticket.wait().unwrap_or_else(|e| panic!("tenant {m}: {e}"));
+        live_completed[m] += 1;
+    }
+
+    let stats = fs.stats();
+    assert_eq!(stats.failed(), 0);
+    assert_eq!(stats.migrations, 0);
+    // Identical per-device per-tenant accepted/completed counts.
+    for (d, dev_stats) in stats.per_device.iter().enumerate() {
+        for &(g, sim_accepted, sim_completed) in &sim_per_device[d] {
+            let h = handle_of[g].unwrap();
+            // The member server's handle differs from the fleet handle;
+            // find its row by tenant name (one tenant per name here).
+            let row = dev_stats
+                .per_tenant
+                .iter()
+                .find(|t| t.name == MODELS[g])
+                .unwrap_or_else(|| panic!("device {d} missing tenant {}", MODELS[g]));
+            assert_eq!(
+                row.accepted, sim_accepted,
+                "device {d} tenant {g} accepted mismatch"
+            );
+            assert_eq!(
+                row.latency.count(),
+                sim_completed,
+                "device {d} tenant {g} completed mismatch"
+            );
+            assert_eq!(live_completed[g], sim_completed);
+            assert_eq!(fs.device_of(h), Some(d));
+        }
+    }
+    // Aggregate parity: fleet totals agree with the DES totals.
+    assert_eq!(stats.completed(), res.completed);
+    assert_eq!(
+        stats.per_class().get(SloClass::Standard).count(),
+        res.completed
+    );
+}
+
+#[test]
+fn fleet_live_migration_preserves_every_ticket() {
+    // Drain-then-move during live traffic: every submitted ticket
+    // resolves (completion or typed error), nothing hangs, and the moved
+    // tenant keeps serving on its new device.
+    let fleet = Fleet::uniform(2, &HardwareSpec::default());
+    let fs = FleetServerBuilder::new(&Manifest::synthetic(), fleet)
+        .backend(ExecBackend::Emulated)
+        .adaptive(false)
+        .build()
+        .unwrap();
+    let ha = fs
+        .attach_on("mobilenetv2", AttachOptions::default(), 0)
+        .unwrap();
+    let hb = fs
+        .attach_on("squeezenet", AttachOptions::default(), 0)
+        .unwrap();
+    let manifest = Manifest::synthetic();
+    let ia: usize = manifest
+        .get("mobilenetv2")
+        .unwrap()
+        .input_shape
+        .iter()
+        .product();
+    let ib: usize = manifest
+        .get("squeezenet")
+        .unwrap()
+        .input_shape
+        .iter()
+        .product();
+    // In-flight load on the source device while the migration runs.
+    let mut pending = Vec::new();
+    for _ in 0..8 {
+        pending.push(fs.submit(ha, vec![0.5f32; ia]));
+        pending.push(fs.submit(hb, vec![0.5f32; ib]));
+    }
+    assert!(fs.migrate(hb, 1).unwrap());
+    for _ in 0..8 {
+        pending.push(fs.submit(hb, vec![0.5f32; ib]));
+    }
+    let mut resolved = 0;
+    for t in pending {
+        // Completion or typed error — but never a hang or a panic.
+        let _ = t.wait();
+        resolved += 1;
+    }
+    assert_eq!(resolved, 24);
+    let stats = fs.stats();
+    assert_eq!(stats.migrations, 1);
+    assert_eq!(fs.device_of(hb), Some(1));
+    // Post-move traffic landed on device 1.
+    assert!(stats.per_device[1].completed >= 8);
+}

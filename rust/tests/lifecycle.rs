@@ -516,30 +516,33 @@ fn cancel_resolves_queued_request_with_typed_error() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_shims_still_serve_one_more_pr() {
-    // submit_with_class / infer are thin shims over the Request/Ticket
-    // API for one deprecation cycle; they must keep working and infer
-    // must surface the real typed failure, not "server dropped request".
+fn request_api_covers_retired_shim_semantics() {
+    // The deprecated submit_with_class/infer shims are gone after their
+    // one-PR deprecation cycle; this pins the Request/Ticket equivalents
+    // of everything they guaranteed: per-request class override lands in
+    // the overridden class, a blocking wait round-trips, and the real
+    // typed failure (not a flattened "server dropped request") surfaces
+    // after a detach.
     let server = builder().adaptive(false).build().unwrap();
     let h = server
         .attach("squeezenet", AttachOptions { rate_hint: 1.0, ..Default::default() })
         .unwrap();
     let done = server
-        .submit_with_class(h, input_for(&server, h), SloClass::Batch)
+        .submit(
+            h,
+            Request::new(input_for(&server, h)).with_class(SloClass::Batch),
+        )
         .wait()
         .unwrap();
     assert_eq!(done.tenant, h);
     assert_eq!(server.stats().per_class.get(SloClass::Batch).count(), 1);
     let input = input_for(&server, h);
-    server.infer(h, input.clone()).unwrap();
+    server.submit(h, Request::new(input.clone())).wait().unwrap();
     server.detach(h).unwrap();
-    // The flattening bug is gone: the typed reason survives into anyhow.
-    let err = server.infer(h, input).unwrap_err();
-    assert!(
-        err.to_string().contains("not attached"),
-        "real failure lost: {err}"
-    );
+    match server.submit(h, Request::new(input)).wait() {
+        Err(RequestError::NotAttached(handle)) => assert_eq!(handle, h),
+        other => panic!("expected NotAttached, got {other:?}"),
+    }
 }
 
 #[test]

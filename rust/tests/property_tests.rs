@@ -819,6 +819,7 @@ fn prop_reject_wait_estimate_matches_analytic_helper() {
                     class: SloClass::Standard,
                     service_hint: rng.range_f64(1e-4, 0.05),
                     deadline: None,
+                    device: 0,
                 },
                 i as u32,
             );
@@ -830,6 +831,7 @@ fn prop_reject_wait_estimate_matches_analytic_helper() {
                 class: SloClass::Standard,
                 service_hint: 0.01,
                 deadline: None,
+                device: 0,
             },
             999,
             0.0,
@@ -858,4 +860,107 @@ fn prop_reject_wait_estimate_matches_analytic_helper() {
             _ => panic!("seed {seed}: full queue must reject"),
         }
     }
+}
+
+/// Random classed/deadlined arrival streams survive a full save→load
+/// round trip through the on-disk v3 trace format — and synthesized
+/// legacy v1/v2 files load with the documented defaults (Standard class,
+/// no deadline). Exercises the actual file paths, not just the JSON
+/// encoder.
+#[test]
+fn prop_trace_roundtrip_v1_v2_v3() {
+    use swapless::sched::SloClass;
+    use swapless::workload::trace;
+    use swapless::workload::Arrival;
+
+    let dir = std::env::temp_dir().join(format!(
+        "swapless-trace-prop-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(7000 + seed);
+        let n_models = 1 + rng.below(4);
+        let names: Vec<String> = (0..n_models).map(|i| format!("m{i}")).collect();
+        let n_arrivals = rng.below(60);
+        let mut t = 0.0f64;
+        let arrivals: Vec<Arrival> = (0..n_arrivals)
+            .map(|_| {
+                t += rng.range_f64(0.0, 0.5);
+                let deadline = if rng.f64() < 0.5 {
+                    Some(t + rng.range_f64(0.01, 2.0))
+                } else {
+                    None
+                };
+                Arrival {
+                    time: t,
+                    model: rng.below(n_models),
+                    class: SloClass::from_index(rng.below(3)).unwrap(),
+                    deadline,
+                }
+            })
+            .collect();
+
+        // v3: full fidelity through the real file path.
+        let path = dir.join(format!("v3-{seed}.json"));
+        let path = path.to_str().unwrap();
+        trace::save(path, &arrivals, &names)
+            .unwrap_or_else(|e| panic!("seed {seed}: save: {e}"));
+        let (back, back_names) =
+            trace::load(path).unwrap_or_else(|e| panic!("seed {seed}: load: {e}"));
+        assert_eq!(back_names, names, "seed {seed}");
+        assert_eq!(back, arrivals, "seed {seed}: v3 round trip not lossless");
+
+        // v1 (two-element entries): classes/deadlines default.
+        let v1_entries: Vec<String> = arrivals
+            .iter()
+            .map(|a| format!("[{}, {}]", a.time, a.model))
+            .collect();
+        let v1 = format!(
+            r#"{{"version":1,"models":[{}],"arrivals":[{}]}}"#,
+            names
+                .iter()
+                .map(|n| format!("{n:?}"))
+                .collect::<Vec<_>>()
+                .join(","),
+            v1_entries.join(",")
+        );
+        let v1_path = dir.join(format!("v1-{seed}.json"));
+        std::fs::write(&v1_path, &v1).unwrap();
+        let (legacy, _) = trace::load(v1_path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("seed {seed}: v1 load: {e}"));
+        assert_eq!(legacy.len(), arrivals.len(), "seed {seed}");
+        for (l, a) in legacy.iter().zip(&arrivals) {
+            assert_eq!(l.model, a.model, "seed {seed}");
+            assert!((l.time - a.time).abs() < 1e-9, "seed {seed}");
+            assert_eq!(l.class, SloClass::Standard, "seed {seed}");
+            assert_eq!(l.deadline, None, "seed {seed}");
+        }
+
+        // v2 (three-element classed entries): classes survive, deadlines
+        // default.
+        let v2_entries: Vec<String> = arrivals
+            .iter()
+            .map(|a| format!("[{}, {}, {}]", a.time, a.model, a.class.index()))
+            .collect();
+        let v2 = format!(
+            r#"{{"version":2,"models":[{}],"arrivals":[{}]}}"#,
+            names
+                .iter()
+                .map(|n| format!("{n:?}"))
+                .collect::<Vec<_>>()
+                .join(","),
+            v2_entries.join(",")
+        );
+        let v2_path = dir.join(format!("v2-{seed}.json"));
+        std::fs::write(&v2_path, &v2).unwrap();
+        let (classed, _) = trace::load(v2_path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("seed {seed}: v2 load: {e}"));
+        for (l, a) in classed.iter().zip(&arrivals) {
+            assert_eq!(l.class, a.class, "seed {seed}");
+            assert_eq!(l.deadline, None, "seed {seed}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -51,6 +51,7 @@ fn one_discipline_object_serves_both_call_patterns() {
             class: SloClass::from_index((i % 3) as usize).unwrap(),
             service_hint: 0.010 + (i % 4) as f64 * 0.005,
             deadline: None,
+            device: 0,
         })
         .collect();
     let mut q: SchedQueue<usize> = SchedQueue::with_kind(DisciplineKind::Fifo);

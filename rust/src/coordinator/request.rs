@@ -118,6 +118,10 @@ pub enum RequestError {
     Shed { station: String },
     /// The execution substrate failed.
     Execution(String),
+    /// The execution substrate failed *transiently* (a retryable fault):
+    /// the worker retried up to its budget with deadline-clipped backoff
+    /// and every attempt failed. `attempts` counts executions tried.
+    Retryable { reason: String, attempts: u32 },
     /// The server shut down with the request still queued.
     Shutdown,
     /// The completion channel closed without a result (a bug if it ever
@@ -140,9 +144,22 @@ impl std::fmt::Display for RequestError {
                 write!(f, "shed from {station} by a higher-class request")
             }
             RequestError::Execution(e) => write!(f, "execution failed: {e}"),
+            RequestError::Retryable { reason, attempts } => write!(
+                f,
+                "transient failure persisted after {attempts} attempt(s): {reason}"
+            ),
             RequestError::Shutdown => write!(f, "server shut down with the request queued"),
             RequestError::ChannelClosed => write!(f, "completion channel closed"),
         }
+    }
+}
+
+impl RequestError {
+    /// Would resubmitting the same request plausibly succeed? Only the
+    /// typed transient-fault variant qualifies; everything else is a
+    /// terminal admission, lifecycle, or substrate verdict.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, RequestError::Retryable { .. })
     }
 }
 

@@ -54,6 +54,7 @@ use anyhow::Result;
 use crate::alloc::{self, AdmissionError};
 use crate::analytic::{AnalyticModel, Config, Tenant, TenantHandle};
 use crate::config::RuntimeConfig;
+use crate::fault::{FaultInjector, FaultPlan, Health, RETRY_BACKOFF_S, RETRY_BUDGET};
 use crate::metrics::{LatencyHistogram, PerClassLatency};
 use crate::model::{Manifest, ModelMeta};
 use crate::runtime::service::{ExecBackend, ExecHandle, ExecService};
@@ -63,9 +64,14 @@ use crate::sched::{
 };
 use crate::sim::reconfig::{ReconfigPolicy, StaticPolicy, SwapLessPolicy};
 use crate::tpu::{CostModel, PrefixTables, SramCache};
+use crate::util::sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
 
 use super::pools::{CpuJob, CpuPools};
 use super::request::{CancelToken, Completion, Request, RequestError, Ticket};
+
+/// Consecutive execution failures before [`Server::health`] reports the
+/// device degraded.
+const FAIL_STREAK_DEGRADED: u64 = 3;
 
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
@@ -93,6 +99,14 @@ pub struct ServerOptions {
     /// ([`crate::fleet::FleetServer`]) assigns one per member server and
     /// every job queued here carries it in its [`JobMeta::device`].
     pub device: usize,
+    /// Deterministic fault schedule injected into this device's worker
+    /// (chaos testing, sim-vs-live parity). `None` = no injected faults.
+    /// Plan times are queried for [`device`](Self::device).
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Wall-clock origin of the fault plan's timeline. The fleet router
+    /// passes one shared origin to every member so a single plan replays
+    /// consistently across the fleet; `None` = this server's start.
+    pub fault_origin: Option<Instant>,
 }
 
 impl Default for ServerOptions {
@@ -107,6 +121,8 @@ impl Default for ServerOptions {
             queue_capacity: None,
             overload: OverloadPolicy::Block,
             device: 0,
+            faults: None,
+            fault_origin: None,
         }
     }
 }
@@ -180,6 +196,19 @@ impl ServerBuilder {
     /// Tag this server as device `d` of a multi-device fleet (default 0).
     pub fn device(mut self, d: usize) -> Self {
         self.opts.device = d;
+        self
+    }
+
+    /// Inject a deterministic fault schedule into this device's worker.
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.opts.faults = Some(plan);
+        self
+    }
+
+    /// Anchor the fault plan's `t = 0` at `origin` (shared across a
+    /// fleet's members so one plan replays consistently fleet-wide).
+    pub fn fault_origin(mut self, origin: Instant) -> Self {
+        self.opts.fault_origin = Some(origin);
         self
     }
 
@@ -309,6 +338,20 @@ struct TpuJob {
     done: mpsc::Sender<Result<Completion, RequestError>>,
 }
 
+/// A queued TPU job extracted from a crashed device with its completion
+/// sender still live, so the fleet router can requeue it on a surviving
+/// server without the caller's ticket ever resolving spuriously.
+pub(crate) struct FailoverJob {
+    pub(crate) class: SloClass,
+    /// Absolute deadline on the SOURCE server's clock; the router
+    /// translates it before resubmission.
+    pub(crate) deadline: Option<f64>,
+    pub(crate) cancel: CancelToken,
+    pub(crate) input: Vec<f32>,
+    pub(crate) submitted: Instant,
+    pub(crate) done: mpsc::Sender<Result<Completion, RequestError>>,
+}
+
 struct TpuShared {
     /// The worker's queue, ordered by the shared scheduling core.
     queue: Mutex<SchedQueue<TpuJob>>,
@@ -328,6 +371,9 @@ struct TpuShared {
     /// the same semantics as the DES's `apply_detach`/`set_config`
     /// invalidation.
     invalidations: Mutex<Vec<TenantHandle>>,
+    /// Consecutive failed executions (reset on success) — the error-rate
+    /// observer behind [`Server::health`].
+    fail_streak: AtomicU64,
 }
 
 /// Per-tenant serving statistics, keyed by stable handle. The lifecycle
@@ -370,8 +416,14 @@ pub struct ServeStats {
     pub per_class: PerClassLatency,
     pub completed: u64,
     /// Requests that failed cleanly (tenant detached mid-flight, substrate
-    /// errors).
+    /// errors, transient faults that exhausted their retry budget).
     pub failed: u64,
+    /// TPU execution attempts (every try, including retries) — with no
+    /// injected faults this equals the executions started.
+    pub attempted: u64,
+    /// Retries after an injected transient fault (bounded per-request
+    /// budget, backoff clipped against the deadline).
+    pub retried: u64,
     /// Admitted at the entry station.
     pub accepted: u64,
     /// Refused at the entry station by the bounded queue.
@@ -475,6 +527,8 @@ struct Shared {
     class_hists: Mutex<PerClassLatency>,
     completed: AtomicU64,
     failed: AtomicU64,
+    attempted: AtomicU64,
+    retried: AtomicU64,
     accepted: AtomicU64,
     rejected: AtomicU64,
     shed: AtomicU64,
@@ -499,7 +553,7 @@ enum Outcome {
 /// retired, then class_hists — each taken and released in turn.
 fn count(shared: &Shared, handle: TenantHandle, class: SloClass, outcome: Outcome) {
     let counted_live = {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_or_recover(&shared.state);
         if let Some(e) = st.entries.iter_mut().find(|e| e.handle == handle) {
             match outcome {
                 Outcome::Accept => e.accepted += 1,
@@ -512,7 +566,7 @@ fn count(shared: &Shared, handle: TenantHandle, class: SloClass, outcome: Outcom
         }
     };
     if !counted_live {
-        let mut retired = shared.retired.lock().unwrap();
+        let mut retired = lock_or_recover(&shared.retired);
         if let Some(t) = retired.iter_mut().find(|t| t.handle == handle) {
             match outcome {
                 Outcome::Accept => t.accepted += 1,
@@ -521,7 +575,7 @@ fn count(shared: &Shared, handle: TenantHandle, class: SloClass, outcome: Outcom
             }
         }
     }
-    let mut pc = shared.class_hists.lock().unwrap();
+    let mut pc = lock_or_recover(&shared.class_hists);
     match outcome {
         Outcome::Accept => {
             pc.record_accept(class);
@@ -562,6 +616,7 @@ pub struct Server {
     queue_capacity: Option<usize>,
     overload: OverloadPolicy,
     device: usize,
+    injector: Option<FaultInjector>,
     next_handle: AtomicU64,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
@@ -610,6 +665,8 @@ impl Server {
             class_hists: Mutex::new(PerClassLatency::new()),
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
+            attempted: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             shed: AtomicU64::new(0),
@@ -654,7 +711,15 @@ impl Server {
             active: AtomicUsize::new(0),
             active_tenant: Mutex::new(None),
             invalidations: Mutex::new(Vec::new()),
+            fail_streak: AtomicU64::new(0),
         });
+        // The fault injector shares the plan's wall-clock origin across a
+        // fleet (the router passes one origin to every member), defaulting
+        // to this server's own start on a standalone deployment.
+        let injector = opts
+            .faults
+            .clone()
+            .map(|plan| FaultInjector::new(plan, opts.device, opts.fault_origin.unwrap_or(started)));
         let mut threads = Vec::new();
         {
             let tpu = tpu.clone();
@@ -664,11 +729,14 @@ impl Server {
             let cost = cost.clone();
             let overload = opts.overload;
             let device = opts.device;
+            let injector = injector.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("tpu-worker".into())
                     .spawn(move || {
-                        tpu_worker_loop(tpu, pools, shared, handle, cost, scale, overload, device)
+                        tpu_worker_loop(
+                            tpu, pools, shared, handle, cost, scale, overload, device, injector,
+                        )
                     })?,
             );
         }
@@ -699,6 +767,7 @@ impl Server {
             queue_capacity: opts.queue_capacity,
             overload: opts.overload,
             device: opts.device,
+            injector,
             next_handle: AtomicU64::new(0),
             threads,
             stop,
@@ -753,7 +822,7 @@ impl Server {
 
         // Hold the state lock across plan+install so the data plane never
         // observes a half-attached tenant (admission is atomic).
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.shared.state);
         let mut candidate: Vec<Tenant> =
             st.entries.iter().map(|e| e.tenant.clone()).collect();
         candidate.push(newcomer.clone());
@@ -786,15 +855,11 @@ impl Server {
         let index = st.entries.len() - 1;
         drop(st);
         self.pools.set_cores(&gates);
-        self.shared.reconfig.lock().unwrap().reconfigs += 1;
+        lock_or_recover(&self.shared.reconfig).reconfigs += 1;
         // Deliver arrivals observed under the old tenant set before the
         // hook renumbers positions.
         flush_arrivals(&self.shared);
-        self.shared
-            .policy
-            .lock()
-            .unwrap()
-            .on_attach(self.now(), index);
+        lock_or_recover(&self.shared.policy).on_attach(self.now(), index);
         Ok(handle)
     }
 
@@ -803,7 +868,7 @@ impl Server {
     /// and the final histogram is returned. Peers keep their handles.
     pub fn detach(&self, handle: TenantHandle) -> Result<TenantStats> {
         let (index, stats) = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.shared.state);
             let Some(i) = st.entries.iter().position(|e| e.handle == handle) else {
                 return Err(anyhow::anyhow!("{handle} is not attached"));
             };
@@ -825,13 +890,13 @@ impl Server {
             // still invisible (state lock held): requests already executing
             // always find one of the two rows — completions are never lost
             // or miskeyed. (Lock order: state → retired.)
-            self.shared.retired.lock().unwrap().push(stats.clone());
+            lock_or_recover(&self.shared.retired).push(stats.clone());
             (i, stats)
         };
         // New submits now fail; purge this tenant's queued TPU work
         // through the discipline (peers keep their scheduling state).
         {
-            let drained = self.tpu.queue.lock().unwrap().drain_tenant(handle);
+            let drained = lock_or_recover(&self.tpu.queue).drain_tenant(handle);
             for (_, job) in drained {
                 self.shared.failed.fetch_add(1, Ordering::SeqCst);
                 let _ = job.done.send(Err(RequestError::Detached(handle)));
@@ -841,15 +906,11 @@ impl Server {
         self.pools.remove_pool(handle);
         // Drop the tenant's resident set from the TPU worker's SRAM cache
         // (mirrors the DES's apply_detach invalidation).
-        self.tpu.invalidations.lock().unwrap().push(handle);
+        lock_or_recover(&self.tpu.invalidations).push(handle);
         // Deliver arrivals observed under the old tenant set before the
         // hook renumbers positions.
         flush_arrivals(&self.shared);
-        self.shared
-            .policy
-            .lock()
-            .unwrap()
-            .on_detach(self.now(), index);
+        lock_or_recover(&self.shared.policy).on_detach(self.now(), index);
         Ok(stats)
     }
 
@@ -866,9 +927,39 @@ impl Server {
         let cancel = request.cancel_token();
         let (tx, rx) = mpsc::channel();
         let ticket = Ticket::new(rx, cancel.clone(), handle);
+        let deadline = request.deadline.map(|d| self.now() + d.as_secs_f64());
+        self.submit_inner(
+            handle,
+            request.class,
+            deadline,
+            cancel,
+            request.input,
+            Instant::now(),
+            tx,
+        );
+        ticket
+    }
+
+    /// The admission path shared by [`submit`](Self::submit) and the
+    /// fleet router's failover requeue
+    /// ([`resubmit_failover`](Self::resubmit_failover)). `deadline` is
+    /// absolute on this server's clock; `submitted` is preserved across
+    /// a requeue so the completion's latency spans the original
+    /// submission.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_inner(
+        &self,
+        handle: TenantHandle,
+        class_override: Option<SloClass>,
+        deadline: Option<f64>,
+        cancel: CancelToken,
+        input: Vec<f32>,
+        submitted: Instant,
+        tx: mpsc::Sender<Result<Completion, RequestError>>,
+    ) {
         let now = self.now();
         let resolved = {
-            let st = self.shared.state.lock().unwrap();
+            let st = lock_or_recover(&self.shared.state);
             st.entries.iter().position(|e| e.handle == handle).map(|i| {
                 let p = st.config.partitions[i];
                 // Scheduling hints from the standing prefix tables — O(1)
@@ -894,17 +985,16 @@ impl Server {
         let Some((index, p, meta, tenant_class, hint, cpu_hint)) = resolved else {
             self.shared.failed.fetch_add(1, Ordering::SeqCst);
             let _ = tx.send(Err(RequestError::NotAttached(handle)));
-            return ticket;
+            return;
         };
-        let class = request.class.unwrap_or(tenant_class);
-        let deadline = request.deadline.map(|d| now + d.as_secs_f64());
+        let class = class_override.unwrap_or(tenant_class);
         // Buffered (not observed inline): the policy lock may be held for
         // a whole hill-climb decide; submitters must not wait on it. An
         // arrival flushed after a racing detach renumbered positions is at
         // worst misattributed for one monitor window (the RateMonitor
         // ignores out-of-range indices).
         if self.shared.buffer_arrivals {
-            self.shared.arrivals.lock().unwrap().push((now, index));
+            lock_or_recover(&self.shared.arrivals).push((now, index));
         }
         if p > 0 {
             let sched_meta = JobMeta {
@@ -922,12 +1012,12 @@ impl Server {
                 cpu_hint,
                 deadline,
                 cancel,
-                input: request.input,
-                submitted: Instant::now(),
+                input,
+                submitted,
                 done: tx,
             };
             let outcome = {
-                let mut q = self.tpu.queue.lock().unwrap();
+                let mut q = lock_or_recover(&self.tpu.queue);
                 let load = StationLoad {
                     in_service: self.tpu.active.load(Ordering::SeqCst),
                     servers: 1,
@@ -983,12 +1073,11 @@ impl Server {
                 self.device,
                 cancel,
                 true,
-                request.input,
-                Instant::now(),
+                input,
+                submitted,
                 tx,
             );
         }
-        ticket
     }
 
     /// Fail evicted TPU-queue jobs with their typed reasons and count
@@ -1015,16 +1104,13 @@ impl Server {
     }
 
     pub fn current_config(&self) -> Config {
-        self.shared.state.lock().unwrap().config.clone()
+        lock_or_recover(&self.shared.state).config.clone()
     }
 
     /// Handles of the currently attached tenants, in attach order
     /// (positionally aligned with [`current_config`](Self::current_config)).
     pub fn handles(&self) -> Vec<TenantHandle> {
-        self.shared
-            .state
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.shared.state)
             .entries
             .iter()
             .map(|e| e.handle)
@@ -1033,10 +1119,7 @@ impl Server {
 
     /// The tenant's model metadata (cheap `Arc` clone), if attached.
     pub fn model_meta(&self, handle: TenantHandle) -> Option<Arc<ModelMeta>> {
-        self.shared
-            .state
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.shared.state)
             .entries
             .iter()
             .find(|e| e.handle == handle)
@@ -1045,10 +1128,7 @@ impl Server {
 
     /// Snapshot of the attached tenants (positional order).
     pub fn tenants(&self) -> Vec<Tenant> {
-        self.shared
-            .state
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.shared.state)
             .entries
             .iter()
             .map(|e| e.tenant.clone())
@@ -1060,7 +1140,7 @@ impl Server {
     /// ranges, and the core budget; counted in `stats().reconfigs` so
     /// baselines and the adaptive path report comparable reconfig stats.
     pub fn set_config(&self, cfg: Config) -> std::result::Result<(), ConfigError> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_or_recover(&self.shared.state);
         let n = st.entries.len();
         if cfg.partitions.len() != n || cfg.cores.len() != n {
             return Err(ConfigError::DimensionMismatch {
@@ -1091,14 +1171,14 @@ impl Server {
             st.epoch += 1;
             drop(st);
             self.pools.set_cores(&gates);
-            self.shared.reconfig.lock().unwrap().reconfigs += 1;
+            lock_or_recover(&self.shared.reconfig).reconfigs += 1;
         }
         Ok(())
     }
 
     pub fn stats(&self) -> ServeStats {
         let mut per_tenant: Vec<TenantStats> = {
-            let st = self.shared.state.lock().unwrap();
+            let st = lock_or_recover(&self.shared.state);
             st.entries
                 .iter()
                 .map(|e| TenantStats {
@@ -1112,14 +1192,16 @@ impl Server {
                 })
                 .collect()
         };
-        per_tenant.extend(self.shared.retired.lock().unwrap().iter().cloned());
-        let per_class = self.shared.class_hists.lock().unwrap().clone();
-        let log = self.shared.reconfig.lock().unwrap();
+        per_tenant.extend(lock_or_recover(&self.shared.retired).iter().cloned());
+        let per_class = lock_or_recover(&self.shared.class_hists).clone();
+        let log = lock_or_recover(&self.shared.reconfig);
         ServeStats {
             per_tenant,
             per_class,
             completed: self.shared.completed.load(Ordering::SeqCst),
             failed: self.shared.failed.load(Ordering::SeqCst),
+            attempted: self.shared.attempted.load(Ordering::SeqCst),
+            retried: self.shared.retried.load(Ordering::SeqCst),
             accepted: self.shared.accepted.load(Ordering::SeqCst),
             rejected: self.shared.rejected.load(Ordering::SeqCst),
             shed: self.shared.shed.load(Ordering::SeqCst),
@@ -1143,10 +1225,76 @@ impl Server {
     /// drain should treat two consecutive zero readings as drained.)
     /// The fleet router polls this during drain-then-move migration.
     pub fn pending_for(&self, handle: TenantHandle) -> usize {
-        let tpu_queued = self.tpu.queue.lock().unwrap().count_tenant(handle);
+        let tpu_queued = lock_or_recover(&self.tpu.queue).count_tenant(handle);
         let tpu_active =
-            usize::from(*self.tpu.active_tenant.lock().unwrap() == Some(handle));
+            usize::from(*lock_or_recover(&self.tpu.active_tenant) == Some(handle));
         tpu_queued + tpu_active + self.pools.queue_len(handle) + self.pools.active(handle)
+    }
+
+    /// Device health, driven by the injected fault plan (if any) and the
+    /// worker's consecutive-execution-failure streak. The fleet router's
+    /// health monitor polls this to trigger failover; a plan-driven
+    /// `Down` dominates every other signal.
+    pub fn health(&self) -> Health {
+        if let Some(inj) = &self.injector {
+            match inj.health() {
+                Health::Up => {}
+                h => return h,
+            }
+        }
+        let streak = self.tpu.fail_streak.load(Ordering::SeqCst);
+        if streak >= FAIL_STREAK_DEGRADED {
+            return Health::Degraded(streak as f64);
+        }
+        Health::Up
+    }
+
+    /// Seconds since this server started — the clock `TpuJob` deadlines
+    /// are absolute on. The fleet router uses it to translate deadlines
+    /// between member clocks during a failover requeue.
+    pub fn now_s(&self) -> f64 {
+        self.now()
+    }
+
+    /// Extract every queued TPU job of `handle`, completion senders
+    /// intact, so a failover can requeue them on a surviving device.
+    /// Must run BEFORE `detach`, whose purge resolves queued jobs with
+    /// [`RequestError::Detached`]. A job in service on the (possibly
+    /// wedged) worker is left to finish there.
+    pub(crate) fn drain_for_failover(&self, handle: TenantHandle) -> Vec<FailoverJob> {
+        let drained = lock_or_recover(&self.tpu.queue).drain_tenant(handle);
+        drained
+            .into_iter()
+            .map(|(_, j)| FailoverJob {
+                class: j.class,
+                deadline: j.deadline,
+                cancel: j.cancel,
+                input: j.input,
+                submitted: j.submitted,
+                done: j.done,
+            })
+            .collect()
+    }
+
+    /// Requeue a failover-drained job under this server's entry for
+    /// `handle`. `deadline` has already been translated onto this
+    /// server's clock; the original submission instant rides along so
+    /// the eventual completion's latency spans the outage.
+    pub(crate) fn resubmit_failover(
+        &self,
+        handle: TenantHandle,
+        job: FailoverJob,
+        deadline: Option<f64>,
+    ) {
+        self.submit_inner(
+            handle,
+            Some(job.class),
+            deadline,
+            job.cancel,
+            job.input,
+            job.submitted,
+            job.done,
+        );
     }
 }
 
@@ -1154,11 +1302,11 @@ impl Server {
 /// Caller must NOT hold the policy lock.
 fn flush_arrivals(shared: &Shared) {
     let batch: Vec<(f64, usize)> =
-        std::mem::take(&mut *shared.arrivals.lock().unwrap());
+        std::mem::take(&mut *lock_or_recover(&shared.arrivals));
     if batch.is_empty() {
         return;
     }
-    let mut policy = shared.policy.lock().unwrap();
+    let mut policy = lock_or_recover(&shared.policy);
     for (t, i) in batch {
         policy.observe_arrival(t, i);
     }
@@ -1171,7 +1319,7 @@ fn flush_arrivals(shared: &Shared) {
 /// histogram, excluded from goodput).
 fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64, missed: bool) {
     let mut counted = {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_or_recover(&shared.state);
         if let Some(e) = st.entries.iter_mut().find(|e| e.handle == handle) {
             e.hist.record(latency);
             true
@@ -1180,7 +1328,7 @@ fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64, 
         }
     };
     if !counted {
-        let mut retired = shared.retired.lock().unwrap();
+        let mut retired = lock_or_recover(&shared.retired);
         if let Some(t) = retired.iter_mut().find(|t| t.handle == handle) {
             t.latency.record(latency);
             counted = true;
@@ -1188,7 +1336,7 @@ fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64, 
     }
     if counted {
         shared.completed.fetch_add(1, Ordering::SeqCst);
-        let mut pc = shared.class_hists.lock().unwrap();
+        let mut pc = lock_or_recover(&shared.class_hists);
         pc.record(class, latency);
         if missed {
             pc.record_miss(class);
@@ -1292,11 +1440,12 @@ fn tpu_worker_loop(
     time_scale: f64,
     overload: OverloadPolicy,
     device: usize,
+    injector: Option<FaultInjector>,
 ) {
     let mut cache = SramCache::new(cost.hw.sram_bytes);
     loop {
         let (job, expired) = {
-            let mut q = tpu.queue.lock().unwrap();
+            let mut q = lock_or_recover(&tpu.queue);
             loop {
                 if tpu.shutdown.load(Ordering::SeqCst) {
                     // Deliver the typed shutdown error on every queued
@@ -1308,6 +1457,16 @@ fn tpu_worker_loop(
                         let _ = j.done.send(Err(RequestError::Shutdown));
                     }
                     return;
+                }
+                // A crashed (Down) device is unresponsive: it neither
+                // pops nor fails queued work, so every queued ticket
+                // stays live for the fleet router's failover requeue.
+                // Polled waiting doubles as the recovery detector.
+                if let Some(inj) = &injector {
+                    if inj.is_down() {
+                        q = wait_timeout_or_recover(&tpu.cv, q, Duration::from_millis(2));
+                        continue;
+                    }
                 }
                 // Deadline-hopeless jobs never reach the device: drained
                 // before the pop decision, exactly like the DES's TPU
@@ -1324,7 +1483,7 @@ fn tpu_worker_loop(
                 if !expired_jobs.is_empty() {
                     break (None, expired_jobs);
                 }
-                q = tpu.cv.wait(q).unwrap();
+                q = wait_or_recover(&tpu.cv, q);
             }
         };
         if !expired.is_empty() {
@@ -1338,18 +1497,18 @@ fn tpu_worker_loop(
             }
         }
         let Some(job) = job else { continue };
-        *tpu.active_tenant.lock().unwrap() = Some(job.handle);
+        *lock_or_recover(&tpu.active_tenant) = Some(job.handle);
         // A cancelled request is refused before touching the device.
         if job.cancel.is_cancelled() {
             count(&shared, job.handle, job.class, Outcome::Cancelled);
             let _ = job.done.send(Err(RequestError::Cancelled));
-            *tpu.active_tenant.lock().unwrap() = None;
+            *lock_or_recover(&tpu.active_tenant) = None;
             tpu.active.store(0, Ordering::SeqCst);
             continue;
         }
         // Apply pending invalidations (detached tenants) before touching
         // the cache, so ghost resident sets never pressure live peers.
-        for h in tpu.invalidations.lock().unwrap().drain(..) {
+        for h in lock_or_recover(&tpu.invalidations).drain(..) {
             cache.invalidate(h.0 as usize);
         }
         // Liveness gate: a job that raced a detach (pushed into the queue
@@ -1361,13 +1520,13 @@ fn tpu_worker_loop(
         // cache entry re-inserted in that window is removed by the next
         // job's invalidation drain.
         let live = {
-            let st = shared.state.lock().unwrap();
+            let st = lock_or_recover(&shared.state);
             st.entries.iter().any(|e| e.handle == job.handle)
         };
         if !live {
             shared.failed.fetch_add(1, Ordering::SeqCst);
             let _ = job.done.send(Err(RequestError::Detached(job.handle)));
-            *tpu.active_tenant.lock().unwrap() = None;
+            *lock_or_recover(&tpu.active_tenant) = None;
             tpu.active.store(0, Ordering::SeqCst);
             continue;
         }
@@ -1377,9 +1536,47 @@ fn tpu_worker_loop(
             job.handle.0 as usize,
             cost.resident_bytes(&meta, job.p),
         );
-        let result = handle.execute_range(&meta.name, 0, job.p, job.input);
+        // Execute with a bounded retry budget against injected transient
+        // faults. The backoff doubles per retry and is clipped against
+        // the request's absolute deadline: a retry that could not finish
+        // in time gives up immediately instead of burning the device.
+        // Real substrate errors are terminal (never retried), so the
+        // non-injected path is byte-for-byte the old single attempt.
+        let mut attempts: u32 = 0;
+        let result = loop {
+            attempts += 1;
+            shared.attempted.fetch_add(1, Ordering::SeqCst);
+            let injected = match &injector {
+                Some(inj) => inj.next_transient_fails(),
+                None => false,
+            };
+            let attempt = if injected {
+                Err(anyhow::anyhow!("injected transient fault"))
+            } else {
+                handle.execute_range(&meta.name, 0, job.p, job.input.clone())
+            };
+            match attempt {
+                Ok(out) => break Ok(out),
+                Err(e) if injected && attempts < RETRY_BUDGET => {
+                    let backoff = RETRY_BACKOFF_S * f64::from(1u32 << (attempts - 1));
+                    let now = shared.started.elapsed().as_secs_f64();
+                    let hopeless = match job.deadline {
+                        Some(d) => now + backoff >= d,
+                        None => false,
+                    };
+                    if hopeless {
+                        break Err((e, true));
+                    }
+                    shared.retried.fetch_add(1, Ordering::SeqCst);
+                    lock_or_recover(&shared.class_hists).record_retried(job.class);
+                    std::thread::sleep(Duration::from_secs_f64(backoff));
+                }
+                Err(e) => break Err((e, injected)),
+            }
+        };
         // Enforce the emulated device-time budget (compute + intra swap +
-        // optional reload + bus transfers).
+        // optional reload + bus transfers); an active slow-device fault
+        // stretches it by its factor (no-op when time_scale = 0).
         if time_scale > 0.0 {
             let mut budget = cost.input_transfer(&meta)
                 + cost.tpu_service(&meta, job.p)
@@ -1387,7 +1584,11 @@ fn tpu_worker_loop(
             if !hit {
                 budget += cost.load_time(&meta, job.p);
             }
-            let budget = budget * time_scale;
+            let slow = match &injector {
+                Some(inj) => inj.slow_factor(),
+                None => 1.0,
+            };
+            let budget = budget * time_scale * slow;
             let spent = t0.elapsed().as_secs_f64();
             if budget > spent {
                 std::thread::sleep(Duration::from_secs_f64(budget - spent));
@@ -1395,6 +1596,7 @@ fn tpu_worker_loop(
         }
         match result {
             Ok(boundary) => {
+                tpu.fail_streak.store(0, Ordering::SeqCst);
                 if job.p >= meta.partition_points {
                     let latency = job.submitted.elapsed().as_secs_f64();
                     let missed = job
@@ -1429,14 +1631,21 @@ fn tpu_worker_loop(
                     );
                 }
             }
-            Err(e) => {
+            Err((e, injected)) => {
+                tpu.fail_streak.fetch_add(1, Ordering::SeqCst);
                 shared.failed.fetch_add(1, Ordering::SeqCst);
-                let _ = job
-                    .done
-                    .send(Err(RequestError::Execution(e.to_string())));
+                let err = if injected {
+                    RequestError::Retryable {
+                        reason: e.to_string(),
+                        attempts,
+                    }
+                } else {
+                    RequestError::Execution(e.to_string())
+                };
+                let _ = job.done.send(Err(err));
             }
         }
-        *tpu.active_tenant.lock().unwrap() = None;
+        *lock_or_recover(&tpu.active_tenant) = None;
         tpu.active.store(0, Ordering::SeqCst);
     }
 }
@@ -1447,7 +1656,7 @@ fn tpu_worker_loop(
 /// raced the decision win.
 fn policy_loop(shared: Arc<Shared>, pools: Arc<CpuPools>, stop: Arc<AtomicBool>) {
     loop {
-        let period = { shared.policy.lock().unwrap().period() };
+        let period = { lock_or_recover(&shared.policy).period() };
         let Some(period) = period else { return };
         let deadline = Instant::now() + Duration::from_secs_f64(period);
         while Instant::now() < deadline {
@@ -1461,7 +1670,7 @@ fn policy_loop(shared: Arc<Shared>, pools: Arc<CpuPools>, stop: Arc<AtomicBool>)
         }
         let now = shared.started.elapsed().as_secs_f64();
         let (tenants, cfg, epoch) = {
-            let st = shared.state.lock().unwrap();
+            let st = lock_or_recover(&shared.state);
             if st.entries.is_empty() {
                 continue;
             }
@@ -1476,23 +1685,16 @@ fn policy_loop(shared: Arc<Shared>, pools: Arc<CpuPools>, stop: Arc<AtomicBool>)
         };
         flush_arrivals(&shared);
         let t0 = Instant::now();
-        let decision = shared
-            .policy
-            .lock()
-            .unwrap()
-            .decide(now, &tenants, &cfg);
+        let decision = lock_or_recover(&shared.policy).decide(now, &tenants, &cfg);
         let micros = t0.elapsed().as_secs_f64() * 1e6;
         // Every decide invocation is timed — no-change decisions included —
         // so stats().decision_micros is an unbiased sample of the decision
         // path (the <2 ms budget the paper reports).
-        shared
-            .reconfig
-            .lock()
-            .unwrap()
+        lock_or_recover(&shared.reconfig)
             .decision_micros
             .push(micros);
         if let Some(new_cfg) = decision {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_or_recover(&shared.state);
             if st.epoch == epoch
                 && new_cfg.partitions.len() == st.entries.len()
                 && new_cfg != st.config
@@ -1502,7 +1704,7 @@ fn policy_loop(shared: Arc<Shared>, pools: Arc<CpuPools>, stop: Arc<AtomicBool>)
                 st.epoch += 1;
                 drop(st);
                 pools.set_cores(&gates);
-                shared.reconfig.lock().unwrap().reconfigs += 1;
+                lock_or_recover(&shared.reconfig).reconfigs += 1;
             }
         }
     }
@@ -1516,5 +1718,110 @@ impl Drop for Server {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+
+    fn test_server(build: impl FnOnce(ServerBuilder) -> ServerBuilder) -> Server {
+        let b = ServerBuilder::new(
+            &Manifest::synthetic(),
+            CostModel::new(HardwareSpec::default()),
+        )
+        .backend(ExecBackend::Emulated)
+        .adaptive(false);
+        build(b).build().unwrap()
+    }
+
+    fn input_for(server: &Server, h: TenantHandle) -> Vec<f32> {
+        let n: usize = server
+            .model_meta(h)
+            .expect("attached")
+            .input_shape
+            .iter()
+            .product();
+        vec![0.5; n]
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_cascade_into_the_request_path() {
+        let server = test_server(|b| b);
+        let h = server
+            .attach("mobilenetv2", AttachOptions::default())
+            .unwrap();
+        // Panic a thread while it holds the state lock. Before the
+        // poison-recovering sweep this wedged every later submit, stats,
+        // and the worker's completion path.
+        let shared = server.shared.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = shared.state.lock().unwrap();
+            panic!("poison the state lock");
+        })
+        .join();
+        assert!(
+            server.shared.state.lock().is_err(),
+            "the state lock should be poisoned"
+        );
+        let done = server.submit(h, input_for(&server, h)).wait().unwrap();
+        assert_eq!(done.tenant, h);
+        let stats = server.stats();
+        assert_eq!(stats.completed, 1);
+        assert!(server.detach(h).is_ok());
+    }
+
+    #[test]
+    fn transient_faults_exhaust_the_retry_budget_with_a_typed_error() {
+        // Probability 1 in an always-active window: every attempt fails,
+        // so the request burns the whole budget and resolves Retryable.
+        let plan = Arc::new(FaultPlan::new(7).transient(0, 0.0, 1e9, 1.0));
+        let server = test_server(|b| b.faults(plan));
+        let h = server
+            .attach("mobilenetv2", AttachOptions::default())
+            .unwrap();
+        // Pin an all-TPU split so the request must cross the faulty device.
+        server
+            .set_config(Config::all_tpu(&server.tenants()))
+            .unwrap();
+        let err = server.submit(h, input_for(&server, h)).wait().unwrap_err();
+        assert!(err.is_retryable());
+        match err {
+            RequestError::Retryable { attempts, .. } => assert_eq!(attempts, RETRY_BUDGET),
+            other => panic!("expected Retryable, got {other:?}"),
+        }
+        let stats = server.stats();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.attempted, u64::from(RETRY_BUDGET));
+        assert_eq!(stats.retried, u64::from(RETRY_BUDGET) - 1);
+    }
+
+    #[test]
+    fn down_device_parks_queued_jobs_for_failover() {
+        // Crashed from t = 0 with no recovery: the worker parks, queued
+        // tickets stay unresolved, and the failover drain recovers them
+        // with their completion senders intact.
+        let plan = Arc::new(FaultPlan::new(1).crash(0, 0.0, None));
+        let server = test_server(|b| b.faults(plan));
+        let h = server
+            .attach("mobilenetv2", AttachOptions::default())
+            .unwrap();
+        server
+            .set_config(Config::all_tpu(&server.tenants()))
+            .unwrap();
+        assert!(server.health().is_down());
+        let mut ticket = server.submit(h, input_for(&server, h));
+        assert!(
+            ticket.wait_timeout(Duration::from_millis(50)).is_none(),
+            "a job on a crashed device must stay in flight, not resolve"
+        );
+        let jobs = server.drain_for_failover(h);
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(server.pending_for(h), 0);
+        // Dropping the drained job's sender resolves the ticket with the
+        // typed channel-closed error — nothing hangs.
+        drop(jobs);
+        assert_eq!(ticket.wait(), Err(RequestError::ChannelClosed));
     }
 }

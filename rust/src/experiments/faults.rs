@@ -1,0 +1,306 @@
+//! Fault-tolerance experiment: crash schedules × routing policies on a
+//! 2-device fleet (the chaos counterpart of the placement sweep).
+//!
+//! Per-tenant rates are solved once on the single-device full-TPU
+//! reference at nominal ρ = 0.7 ([`rates_for_load_factor`] — the same
+//! construction as the fleet sweep), every arrival carries a generous
+//! 500 ms relative deadline, and the same deadline-annotated stream is
+//! replayed under each (crash schedule, policy) cell:
+//!
+//! * `static` — [`run_fleet`]: the placement never reacts; the crashed
+//!   device freezes with its queue and its tenants stop completing.
+//! * `failover` — [`run_fleet_failover`]: arrivals landing on a Down
+//!   home are rerouted to the surviving device and counted per tenant.
+//!
+//! The crashed device is always the one the placement routes the *most*
+//! arrivals to — the worst-case single-device outage. The headline the
+//! acceptance test pins: a crash at 10% of the horizon with no recovery
+//! leaves static availability (completed within deadline / offered) at
+//! ≤ 60%, while failover holds ≥ 90% on the identical stream.
+
+use crate::analytic::Tenant;
+use crate::fault::FaultPlan;
+use crate::fleet::{place, run_fleet, run_fleet_failover, Fleet};
+use crate::sched::SloClass;
+use crate::sim::SimOptions;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{
+    equal_tpu_load_shares, generate_arrivals_annotated, rates_for_load_factor, RateSchedule,
+};
+
+use super::common::{print_table, Ctx};
+use super::fleet::MIX_QUAD;
+
+/// Nominal full-TPU load factor the rates are solved at (sub-critical:
+/// the survivor can absorb the whole mix after a failover).
+pub const RHO: f64 = 0.7;
+/// Relative completion deadline stamped on every arrival (seconds) —
+/// generous against the ~tens-of-ms service times, so availability
+/// measures outage loss, not queueing noise.
+pub const DEADLINE_S: f64 = 0.5;
+
+/// One (crash schedule, policy) cell.
+#[derive(Debug, Clone)]
+pub struct FaultRow {
+    pub policy: &'static str,
+    /// Crash time as a fraction of the horizon.
+    pub crash_frac: f64,
+    /// Recovery time as a fraction of the horizon (`None` = permanent).
+    pub recover_frac: Option<f64>,
+    /// The device the schedule crashes (the placement's busiest).
+    pub crashed_device: usize,
+    pub arrivals: usize,
+    pub completed: u64,
+    /// Completions within their deadline.
+    pub goodput: u64,
+    /// goodput / arrivals — the availability the sweep reports.
+    pub availability: f64,
+    pub failed_over: u64,
+    pub shed: u64,
+    pub mean_ms: f64,
+}
+
+pub struct FaultSweep {
+    pub rows: Vec<FaultRow>,
+}
+
+/// Solve the quad-mix rates at nominal ρ, place on a 2-device fleet, and
+/// replay one crash schedule under one routing policy.
+pub fn run_one(
+    ctx: &Ctx,
+    policy: &'static str,
+    crash_frac: f64,
+    recover_frac: Option<f64>,
+    horizon: f64,
+) -> Result<FaultRow, String> {
+    let models = &MIX_QUAD[..];
+    let zero = vec![0.0; models.len()];
+    let tenants0 = ctx.tenants(models, &zero)?;
+    let full = crate::analytic::Config::all_tpu(&tenants0);
+    let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+    let rates = rates_for_load_factor(&ctx.am, &tenants0, &full, &shares, RHO);
+    let tenants: Vec<Tenant> = ctx.tenants(models, &rates)?;
+
+    let fleet = Fleet::uniform(2, &ctx.cost.hw);
+    let plan = place(&fleet, &tenants);
+
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+    let classes = vec![SloClass::Standard; tenants.len()];
+    let deadlines = vec![Some(DEADLINE_S); tenants.len()];
+    let mut rng = Rng::new(ctx.seed);
+    let arrivals =
+        generate_arrivals_annotated(&schedules, &classes, &deadlines, horizon, &mut rng);
+
+    // Crash the device the placement routes the most arrivals to — the
+    // worst single-device outage for this stream.
+    let mut per_dev = vec![0usize; fleet.len()];
+    for a in &arrivals {
+        per_dev[plan.assignment[a.model]] += 1;
+    }
+    let crashed = per_dev
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, n)| *n)
+        .map(|(d, _)| d)
+        .unwrap_or(0);
+
+    let faults = match recover_frac {
+        Some(r) => FaultPlan::new(ctx.seed).crash(crashed, crash_frac * horizon, Some(r * horizon)),
+        None => FaultPlan::new(ctx.seed).crash(crashed, crash_frac * horizon, None),
+    };
+    let opts = SimOptions {
+        horizon,
+        warmup: 0.0,
+        seed: ctx.seed,
+        faults: Some(faults),
+        ..SimOptions::default()
+    };
+    let res = match policy {
+        "static" => run_fleet(&fleet, &tenants, &plan, &arrivals, &opts),
+        "failover" => run_fleet_failover(&fleet, &tenants, &plan, &arrivals, &opts),
+        other => return Err(format!("unknown fault policy '{other}'")),
+    };
+
+    let goodput: u64 = res
+        .per_device
+        .iter()
+        .map(|d| d.result.per_class.goodput_total())
+        .sum();
+    Ok(FaultRow {
+        policy,
+        crash_frac,
+        recover_frac,
+        crashed_device: crashed,
+        arrivals: arrivals.len(),
+        completed: res.completed,
+        goodput,
+        availability: if arrivals.is_empty() {
+            1.0
+        } else {
+            goodput as f64 / arrivals.len() as f64
+        },
+        failed_over: res.failed_over.iter().sum(),
+        shed: res.shed,
+        mean_ms: res.mean_latency * 1e3,
+    })
+}
+
+/// Crash schedules swept (crash fraction, recovery fraction).
+pub const SCHEDULES: [(f64, Option<f64>); 3] =
+    [(0.1, None), (0.5, None), (0.25, Some(0.5))];
+
+pub fn run(ctx: &Ctx) -> Result<FaultSweep, String> {
+    let mut rows = Vec::new();
+    for &(crash, recover) in &SCHEDULES {
+        for policy in ["static", "failover"] {
+            rows.push(run_one(ctx, policy, crash, recover, ctx.horizon)?);
+        }
+    }
+    Ok(FaultSweep { rows })
+}
+
+impl FaultSweep {
+    pub fn print(&self) {
+        let table: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.policy.to_string(),
+                    format!("{:.2}", r.crash_frac),
+                    match r.recover_frac {
+                        Some(f) => format!("{f:.2}"),
+                        None => "never".to_string(),
+                    },
+                    r.crashed_device.to_string(),
+                    r.arrivals.to_string(),
+                    r.goodput.to_string(),
+                    format!("{:.1}%", r.availability * 100.0),
+                    r.failed_over.to_string(),
+                    r.shed.to_string(),
+                    format!("{:.1}", r.mean_ms),
+                ]
+            })
+            .collect();
+        print_table(
+            "Fault sweep (2-device quad mix, worst-device crash, rho 0.7)",
+            &[
+                "policy",
+                "crash@",
+                "recover@",
+                "dev",
+                "offered",
+                "in-deadline",
+                "avail",
+                "failed over",
+                "shed",
+                "mean (ms)",
+            ],
+            &table,
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        Json::from_pairs(vec![
+                            ("policy", Json::Str(r.policy.to_string())),
+                            ("crash_frac", Json::Num(r.crash_frac)),
+                            (
+                                "recover_frac",
+                                match r.recover_frac {
+                                    Some(f) => Json::Num(f),
+                                    None => Json::Null,
+                                },
+                            ),
+                            ("crashed_device", Json::Num(r.crashed_device as f64)),
+                            ("arrivals", Json::Num(r.arrivals as f64)),
+                            ("completed", Json::Num(r.completed as f64)),
+                            ("goodput", Json::Num(r.goodput as f64)),
+                            ("availability", Json::Num(r.availability)),
+                            ("failed_over", Json::Num(r.failed_over as f64)),
+                            ("shed", Json::Num(r.shed as f64)),
+                            ("mean_ms", Json::Num(r.mean_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::Manifest;
+
+    /// The acceptance headline: under a worst-device crash at 10% of the
+    /// horizon with no recovery, failover keeps ≥ 90% of offered
+    /// requests completing within deadline while the static placement
+    /// drops to ≤ 60% on the identical stream.
+    #[test]
+    fn failover_holds_availability_through_a_crash() {
+        let mut ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        ctx.horizon = 300.0;
+        let stat = run_one(&ctx, "static", 0.1, None, ctx.horizon).unwrap();
+        let fo = run_one(&ctx, "failover", 0.1, None, ctx.horizon).unwrap();
+        assert!(stat.arrivals > 1000, "offered only {}", stat.arrivals);
+        assert_eq!(stat.arrivals, fo.arrivals, "streams must be identical");
+        assert!(
+            stat.availability <= 0.60,
+            "static availability {:.3} not <= 0.60",
+            stat.availability
+        );
+        assert!(
+            fo.availability >= 0.90,
+            "failover availability {:.3} not >= 0.90",
+            fo.availability
+        );
+        assert!(fo.failed_over > 0);
+        assert_eq!(stat.failed_over, 0);
+        assert_eq!(fo.shed, 0);
+    }
+
+    #[test]
+    fn recovery_restores_static_and_failover_converges_above_it() {
+        let mut ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        ctx.horizon = 300.0;
+        // A mid-run outage with recovery. Static's frozen queue drains
+        // *late* once the device returns, so its availability (deadline
+        // goodput) depends on the placement's drain rate — the robust
+        // claims are about ordering, not an absolute level: recovery
+        // strictly restores completions vs. the same crash left
+        // unrecovered, and failover dominates static on the identical
+        // stream while barely feeling a temporary outage at all.
+        let stat = run_one(&ctx, "static", 0.25, Some(0.5), ctx.horizon).unwrap();
+        let stat_dead = run_one(&ctx, "static", 0.25, None, ctx.horizon).unwrap();
+        let fo = run_one(&ctx, "failover", 0.25, Some(0.5), ctx.horizon).unwrap();
+        assert!(
+            stat.completed > stat_dead.completed,
+            "recovery did not drain the frozen queue: {} !> {}",
+            stat.completed,
+            stat_dead.completed
+        );
+        assert!(
+            fo.availability >= stat.availability,
+            "failover {:.3} < static {:.3}",
+            fo.availability,
+            stat.availability
+        );
+        assert!(
+            fo.availability >= 0.85,
+            "failover availability {:.3} through a temporary outage",
+            fo.availability
+        );
+        assert!(fo.failed_over > 0);
+    }
+}

@@ -13,6 +13,7 @@ pub mod fig3;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod faults;
 pub mod fig8;
 pub mod fleet;
 pub mod overload;

@@ -1,0 +1,401 @@
+//! Deterministic fault model shared by the DES and the live stack.
+//!
+//! A [`FaultPlan`] is a seedable schedule of device-level faults — hard
+//! crashes (with optional recovery), windows of transient execution
+//! errors with a fixed probability, and slow-device degradation windows.
+//! Both consumers replay the *same* plan:
+//!
+//! * the DES ([`crate::sim::SimOptions::faults`]) turns crash/recover
+//!   boundaries into `DeviceDown`/`DeviceUp` events that pause the TPU
+//!   station, samples transient failures at service completion, and
+//!   stretches TPU service times inside slowdown windows;
+//! * the live path wraps the plan in a [`FaultInjector`] (one per member
+//!   `Server`, all sharing a wall-clock origin) that the TPU worker
+//!   consults before popping work (a `Down` device is *unresponsive*:
+//!   queued jobs stay queued so failover can requeue them) and after
+//!   each execution attempt (transient sampling).
+//!
+//! Transient sampling is a pure function of `(seed, device, attempt
+//! sequence)` — not of time — so a replayed schedule makes the same
+//! keep/fail decisions regardless of wall-clock jitter. The window
+//! bounds `[from, until)` gate *whether* sampling applies at a given
+//! time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Maximum execution attempts per request under injected transient
+/// faults (first try + retries). Shared by the live TPU worker and the
+/// DES so both replay the same retry envelope.
+pub const RETRY_BUDGET: u32 = 3;
+/// Backoff before the second attempt (seconds); doubles each retry and
+/// is clipped against the request's absolute deadline.
+pub const RETRY_BACKOFF_S: f64 = 0.001;
+
+/// Observed health of one device, as the detection layer reports it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Health {
+    /// Serving normally.
+    Up,
+    /// Serving, but impaired — carries the slowdown factor (>= 1) or the
+    /// observed error streak pressure mapped to a factor.
+    Degraded(f64),
+    /// Not serving: the device is crashed/unreachable.
+    Down,
+}
+
+impl Health {
+    pub fn is_down(self) -> bool {
+        matches!(self, Health::Down)
+    }
+
+    pub fn is_up(self) -> bool {
+        matches!(self, Health::Up)
+    }
+}
+
+impl std::fmt::Display for Health {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Health::Up => write!(f, "up"),
+            Health::Degraded(k) => write!(f, "degraded(x{k:.1})"),
+            Health::Down => write!(f, "down"),
+        }
+    }
+}
+
+/// One fault on one device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Hard crash at `at`; the device recovers at `recover` (`None` =
+    /// never). While down the device is unresponsive — it neither serves
+    /// nor fails requests.
+    Crash { at: f64, recover: Option<f64> },
+    /// Each execution attempt inside `[from, until)` fails with
+    /// probability `prob` (deterministically, see [`FaultPlan::transient_fails`]).
+    Transient { from: f64, until: f64, prob: f64 },
+    /// TPU service takes `factor`x as long inside `[from, until)`.
+    SlowDown { from: f64, until: f64, factor: f64 },
+}
+
+/// A [`FaultKind`] bound to a device index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceFault {
+    pub device: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, seedable schedule of device faults. Times are in the
+/// consumer's clock: sim seconds for the DES, seconds since the serving
+/// stack started for the live path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    faults: Vec<DeviceFault>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            faults: Vec::new(),
+        }
+    }
+
+    /// Schedule a hard crash of `device` at `at`, recovering at
+    /// `recover` (`None` = stays down for the rest of the run).
+    pub fn crash(mut self, device: usize, at: f64, recover: Option<f64>) -> FaultPlan {
+        if let Some(r) = recover {
+            assert!(r > at, "recovery at {r} not after crash at {at}");
+        }
+        assert!(at >= 0.0 && at.is_finite(), "bad crash time {at}");
+        self.faults.push(DeviceFault {
+            device,
+            kind: FaultKind::Crash { at, recover },
+        });
+        self
+    }
+
+    /// Schedule transient execution errors on `device`: each attempt in
+    /// `[from, until)` fails with probability `prob`.
+    pub fn transient(mut self, device: usize, from: f64, until: f64, prob: f64) -> FaultPlan {
+        assert!((0.0..=1.0).contains(&prob), "bad probability {prob}");
+        assert!(until > from, "empty transient window [{from}, {until})");
+        self.faults.push(DeviceFault {
+            device,
+            kind: FaultKind::Transient { from, until, prob },
+        });
+        self
+    }
+
+    /// Schedule a slowdown of `device` by `factor` inside `[from, until)`.
+    pub fn slow_down(mut self, device: usize, from: f64, until: f64, factor: f64) -> FaultPlan {
+        assert!(factor >= 1.0, "slowdown factor {factor} < 1");
+        assert!(until > from, "empty slowdown window [{from}, {until})");
+        self.faults.push(DeviceFault {
+            device,
+            kind: FaultKind::SlowDown { from, until, factor },
+        });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[DeviceFault] {
+        &self.faults
+    }
+
+    /// Is `device` inside any crash window at time `t`?
+    pub fn is_down(&self, device: usize, t: f64) -> bool {
+        self.faults.iter().any(|f| {
+            if f.device != device {
+                return false;
+            }
+            match f.kind {
+                FaultKind::Crash { at, recover } => {
+                    t >= at
+                        && match recover {
+                            Some(r) => t < r,
+                            None => true,
+                        }
+                }
+                _ => false,
+            }
+        })
+    }
+
+    /// The combined slowdown factor applied to `device` at `t` (1.0 when
+    /// no window is active; overlapping windows multiply).
+    pub fn slow_factor(&self, device: usize, t: f64) -> f64 {
+        self.faults
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::SlowDown { from, until, factor }
+                    if f.device == device && t >= from && t < until =>
+                {
+                    Some(factor)
+                }
+                _ => None,
+            })
+            .product()
+    }
+
+    /// The plan's view of `device` at `t` (crash dominates slowdown).
+    pub fn health(&self, device: usize, t: f64) -> Health {
+        if self.is_down(device, t) {
+            return Health::Down;
+        }
+        let k = self.slow_factor(device, t);
+        if k > 1.0 {
+            Health::Degraded(k)
+        } else {
+            Health::Up
+        }
+    }
+
+    /// Does execution attempt number `seq` on `device` at time `t` fail
+    /// transiently? Deterministic: the decision depends only on
+    /// `(seed, device, seq)`; `t` gates the active window.
+    pub fn transient_fails(&self, device: usize, t: f64, seq: u64) -> bool {
+        let prob = self
+            .faults
+            .iter()
+            .filter_map(|f| match f.kind {
+                FaultKind::Transient { from, until, prob }
+                    if f.device == device && t >= from && t < until =>
+                {
+                    Some(prob)
+                }
+                _ => None,
+            })
+            .fold(0.0f64, f64::max);
+        if prob <= 0.0 {
+            return false;
+        }
+        // SplitMix64 over (seed, device, seq) -> uniform in [0, 1).
+        let mut z = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((device as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add(seq.wrapping_mul(0x94D0_49BB_1331_11EB));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64 < prob
+    }
+
+    /// Time-sorted health transitions of `device`: `(time, down?)` for
+    /// every crash/recover boundary — what the DES turns into
+    /// `DeviceDown`/`DeviceUp` events.
+    pub fn transitions(&self, device: usize) -> Vec<(f64, bool)> {
+        let mut out = Vec::new();
+        for f in &self.faults {
+            if f.device != device {
+                continue;
+            }
+            if let FaultKind::Crash { at, recover } = f.kind {
+                out.push((at, true));
+                if let Some(r) = recover {
+                    out.push((r, false));
+                }
+            }
+        }
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+
+    /// Highest device index any fault names (`None` for an empty plan).
+    pub fn max_device(&self) -> Option<usize> {
+        self.faults.iter().map(|f| f.device).max()
+    }
+}
+
+/// Live-path adapter: binds a [`FaultPlan`] to one device and a shared
+/// wall-clock origin, and hands out monotone attempt sequence numbers for
+/// transient sampling. All member servers of a fleet share one origin so
+/// the plan's timeline is consistent across devices.
+#[derive(Clone)]
+pub struct FaultInjector {
+    plan: Arc<FaultPlan>,
+    device: usize,
+    origin: Instant,
+    seq: Arc<AtomicU64>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: Arc<FaultPlan>, device: usize, origin: Instant) -> FaultInjector {
+        FaultInjector {
+            plan,
+            device,
+            origin,
+            seq: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Seconds since the shared origin — the plan's live clock.
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The plan's current view of this device.
+    pub fn health(&self) -> Health {
+        self.plan.health(self.device, self.now())
+    }
+
+    pub fn is_down(&self) -> bool {
+        self.plan.is_down(self.device, self.now())
+    }
+
+    pub fn slow_factor(&self) -> f64 {
+        self.plan.slow_factor(self.device, self.now())
+    }
+
+    /// Sample the next execution attempt: `true` = fail transiently.
+    /// Consumes one sequence number per call.
+    pub fn next_transient_fails(&self) -> bool {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.plan.transient_fails(self.device, self.now(), seq)
+    }
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector")
+            .field("device", &self.device)
+            .field("faults", &self.plan.faults.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_windows_drive_health() {
+        let plan = FaultPlan::new(7)
+            .crash(0, 10.0, Some(20.0))
+            .crash(1, 5.0, None);
+        assert_eq!(plan.health(0, 9.9), Health::Up);
+        assert_eq!(plan.health(0, 10.0), Health::Down);
+        assert_eq!(plan.health(0, 19.9), Health::Down);
+        assert_eq!(plan.health(0, 20.0), Health::Up);
+        // No recovery: down forever.
+        assert!(plan.is_down(1, 5.0) && plan.is_down(1, 1e9));
+        // Unmentioned devices are always up.
+        assert_eq!(plan.health(2, 15.0), Health::Up);
+        assert_eq!(plan.max_device(), Some(1));
+    }
+
+    #[test]
+    fn transitions_are_sorted_boundaries() {
+        let plan = FaultPlan::new(1)
+            .crash(0, 30.0, Some(40.0))
+            .crash(0, 10.0, Some(20.0));
+        assert_eq!(
+            plan.transitions(0),
+            vec![(10.0, true), (20.0, false), (30.0, true), (40.0, false)]
+        );
+        assert!(plan.transitions(1).is_empty());
+    }
+
+    #[test]
+    fn slowdown_factors_multiply_and_degrade_health() {
+        let plan = FaultPlan::new(1)
+            .slow_down(0, 0.0, 100.0, 2.0)
+            .slow_down(0, 50.0, 60.0, 3.0);
+        assert_eq!(plan.slow_factor(0, 10.0), 2.0);
+        assert_eq!(plan.slow_factor(0, 55.0), 6.0);
+        assert_eq!(plan.slow_factor(0, 100.0), 1.0);
+        assert_eq!(plan.health(0, 10.0), Health::Degraded(2.0));
+        assert_eq!(plan.health(1, 10.0), Health::Up);
+    }
+
+    #[test]
+    fn transient_sampling_is_deterministic_and_calibrated() {
+        let plan = FaultPlan::new(42).transient(0, 0.0, 100.0, 0.3);
+        let a: Vec<bool> = (0..1000).map(|s| plan.transient_fails(0, 1.0, s)).collect();
+        let b: Vec<bool> = (0..1000).map(|s| plan.transient_fails(0, 1.0, s)).collect();
+        assert_eq!(a, b, "same (seed, device, seq) must decide identically");
+        let rate = a.iter().filter(|x| **x).count() as f64 / 1000.0;
+        assert!((rate - 0.3).abs() < 0.05, "empirical rate {rate}");
+        // Outside the window nothing fails; other devices unaffected.
+        assert!((0..100).all(|s| !plan.transient_fails(0, 100.0, s)));
+        assert!((0..100).all(|s| !plan.transient_fails(1, 1.0, s)));
+        // Different seeds decide differently somewhere.
+        let other = FaultPlan::new(43).transient(0, 0.0, 100.0, 0.3);
+        assert!((0..1000).any(|s| other.transient_fails(0, 1.0, s) != a[s as usize]));
+    }
+
+    #[test]
+    fn injector_tracks_plan_on_the_shared_clock() {
+        // Crash "in the past" relative to the origin: down immediately.
+        let plan = Arc::new(FaultPlan::new(3).crash(1, 0.0, None));
+        let origin = Instant::now();
+        let up = FaultInjector::new(plan.clone(), 0, origin);
+        let down = FaultInjector::new(plan, 1, origin);
+        assert!(up.health().is_up());
+        assert!(down.is_down());
+        // Sequence numbers are monotone per injector.
+        assert!(!up.next_transient_fails());
+        assert!(!up.next_transient_fails());
+        assert_eq!(up.seq.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not after crash")]
+    fn crash_rejects_inverted_window() {
+        let _ = FaultPlan::new(0).crash(0, 10.0, Some(5.0));
+    }
+}

@@ -27,7 +27,7 @@
 //! executes the migrations it implies.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -39,9 +39,12 @@ use crate::coordinator::{
     AttachError, AttachOptions, ConfigError, Request, RequestError, ServeStats, Server,
     ServerBuilder, ServerOptions, TenantStats, Ticket,
 };
+use crate::fault::{FaultPlan, Health};
 use crate::model::Manifest;
 use crate::runtime::service::ExecBackend;
+use crate::sched::SloClass;
 use crate::sim::reconfig::{ReconfigPolicy, SwapLessPolicy};
+use crate::util::sync::lock_or_recover;
 
 use super::Fleet;
 
@@ -109,6 +112,15 @@ impl FleetServerBuilder {
         self
     }
 
+    /// Inject a deterministic fleet-wide fault schedule: every member
+    /// server gets a [`FaultInjector`](crate::fault::FaultInjector) for
+    /// its device, all anchored at one shared wall-clock origin so the
+    /// plan replays consistently across the fleet.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.opts.faults = Some(Arc::new(plan));
+        self
+    }
+
     pub fn build(self) -> Result<FleetServer> {
         FleetServer::new(self.manifest, self.fleet, self.opts, self.placement)
     }
@@ -119,10 +131,17 @@ struct FleetTenant {
     handle: TenantHandle,
     /// Model + declared rate hint (what placement scoring plans with).
     tenant: Tenant,
-    class: crate::sched::SloClass,
+    class: SloClass,
     device: usize,
     /// The tenant's handle on `servers[device]`.
     inner: TenantHandle,
+    /// The device its current *intended* placement chose (attach or
+    /// policy-driven migration). `device != home` means the tenant is
+    /// running on a failover target.
+    home: usize,
+    /// Requests routed away from `home` (served by a failover target) —
+    /// the live half of the sim-vs-live failed-over parity accounting.
+    failed_over: u64,
 }
 
 /// Aggregated fleet statistics: the per-device [`ServeStats`] (with
@@ -133,6 +152,17 @@ pub struct FleetStats {
     pub per_device: Vec<ServeStats>,
     /// Tenant moves completed (each drain-then-move counts once).
     pub migrations: u64,
+    /// Forced failovers executed (one per handled device outage).
+    pub failovers: u64,
+    /// Queued tickets requeued from a crashed device onto a survivor
+    /// with their completion senders intact.
+    pub requeued: u64,
+    /// Requests routed away from their tenant's home placement, i.e.
+    /// served by a failover target.
+    pub failed_over: u64,
+    /// Tenants shed during failover because no surviving capacity
+    /// remained even for a CPU-only degrade placement.
+    pub shed_tenants: u64,
 }
 
 impl FleetStats {
@@ -183,6 +213,14 @@ pub struct FleetServer {
     /// detaching (stragglers past it fail with typed errors). Scaled up
     /// under real-time emulation, where one service spans many polls.
     drain_budget: Duration,
+    /// Devices whose current outage has already been failed over —
+    /// [`poll_health`](Self::poll_health) triggers once per outage and
+    /// re-arms when the device comes back up.
+    down_handled: Mutex<Vec<bool>>,
+    failovers: AtomicU64,
+    requeued: AtomicU64,
+    failed_over: AtomicU64,
+    shed_tenants: AtomicU64,
     started: Instant,
 }
 
@@ -190,9 +228,14 @@ impl FleetServer {
     fn new(
         manifest: Manifest,
         fleet: Fleet,
-        opts: ServerOptions,
+        mut opts: ServerOptions,
         placement: Option<Box<dyn ReconfigPolicy + Send>>,
     ) -> Result<FleetServer> {
+        // One shared origin anchors the fault plan's timeline for every
+        // member, so crash/recovery windows line up fleet-wide.
+        if opts.faults.is_some() && opts.fault_origin.is_none() {
+            opts.fault_origin = Some(Instant::now());
+        }
         let mut servers = Vec::with_capacity(fleet.len());
         for (d, dev) in fleet.devices().iter().enumerate() {
             let member_opts = ServerOptions {
@@ -241,6 +284,11 @@ impl FleetServer {
             migrations: AtomicU64::new(0),
             per_device_migrations: Mutex::new(vec![0; n_devices]),
             drain_budget,
+            down_handled: Mutex::new(vec![false; n_devices]),
+            failovers: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            failed_over: AtomicU64::new(0),
+            shed_tenants: AtomicU64::new(0),
             started: Instant::now(),
         })
     }
@@ -261,9 +309,7 @@ impl FleetServer {
 
     /// The device currently serving `handle`, if attached.
     pub fn device_of(&self, handle: TenantHandle) -> Option<usize> {
-        self.state
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.state)
             .iter()
             .find(|t| t.handle == handle)
             .map(|t| t.device)
@@ -271,7 +317,7 @@ impl FleetServer {
 
     /// Fleet-scoped handles in attach order.
     pub fn handles(&self) -> Vec<TenantHandle> {
-        self.state.lock().unwrap().iter().map(|t| t.handle).collect()
+        lock_or_recover(&self.state).iter().map(|t| t.handle).collect()
     }
 
     /// Manually install a (P, K) configuration on one device (parity
@@ -288,7 +334,7 @@ impl FleetServer {
     /// Snapshot each device's current member tenants (placement-scoring
     /// input) without holding the state lock any longer than the copy.
     fn members_by_device(&self) -> Vec<Vec<Tenant>> {
-        let st = self.state.lock().unwrap();
+        let st = lock_or_recover(&self.state);
         (0..self.servers.len())
             .map(|d| {
                 st.iter()
@@ -409,7 +455,7 @@ impl FleetServer {
         let inner = self.servers[device].attach(model, opts)?;
         let handle = TenantHandle(self.next_handle.fetch_add(1, Ordering::SeqCst));
         let index = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             st.push(FleetTenant {
                 handle,
                 tenant: Tenant {
@@ -419,11 +465,13 @@ impl FleetServer {
                 class,
                 device,
                 inner,
+                home: device,
+                failed_over: 0,
             });
             st.len() - 1
         };
         self.flush_arrivals();
-        self.placement.lock().unwrap().on_attach(self.now(), index);
+        lock_or_recover(&self.placement).on_attach(self.now(), index);
         Ok(handle)
     }
 
@@ -431,7 +479,7 @@ impl FleetServer {
     /// queued jobs fail typed, stats retire under the device handle).
     pub fn detach(&self, handle: TenantHandle) -> Result<TenantStats> {
         let (index, device, inner) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             let Some(i) = st.iter().position(|t| t.handle == handle) else {
                 return Err(anyhow::anyhow!("{handle} is not attached to the fleet"));
             };
@@ -439,7 +487,7 @@ impl FleetServer {
             (i, t.device, t.inner)
         };
         self.flush_arrivals();
-        self.placement.lock().unwrap().on_detach(self.now(), index);
+        lock_or_recover(&self.placement).on_detach(self.now(), index);
         self.servers[device].detach(inner)
     }
 
@@ -450,10 +498,21 @@ impl FleetServer {
     pub fn submit(&self, handle: TenantHandle, request: impl Into<Request>) -> Ticket {
         let request = request.into();
         let routed = {
-            let st = self.state.lock().unwrap();
-            st.iter()
-                .position(|t| t.handle == handle)
-                .map(|i| (i, st[i].device, st[i].inner))
+            let mut st = lock_or_recover(&self.state);
+            match st.iter().position(|t| t.handle == handle) {
+                Some(i) => {
+                    let t = &mut st[i];
+                    // Routed off its home placement = served by a
+                    // failover target; counted for the sim-vs-live
+                    // failed-over parity accounting.
+                    if t.device != t.home {
+                        t.failed_over += 1;
+                        self.failed_over.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Some((i, t.device, t.inner))
+                }
+                None => None,
+            }
         };
         match routed {
             Some((index, device, inner)) => {
@@ -469,7 +528,7 @@ impl FleetServer {
                     // server accepts: at worst one monitor window of one
                     // tenant's arrivals credited to a shifted peer, and
                     // out-of-range indices are ignored by the monitor.
-                    let mut buf = self.arrivals.lock().unwrap();
+                    let mut buf = lock_or_recover(&self.arrivals);
                     if buf.len() >= 100_000 {
                         buf.drain(..50_000);
                     }
@@ -489,11 +548,11 @@ impl FleetServer {
     /// Drain buffered submit observations into the placement policy's
     /// rate monitor. Caller must NOT hold the placement lock.
     fn flush_arrivals(&self) {
-        let batch: Vec<(f64, usize)> = std::mem::take(&mut *self.arrivals.lock().unwrap());
+        let batch: Vec<(f64, usize)> = std::mem::take(&mut *lock_or_recover(&self.arrivals));
         if batch.is_empty() {
             return;
         }
-        let mut policy = self.placement.lock().unwrap();
+        let mut policy = lock_or_recover(&self.placement);
         for (t, i) in batch {
             policy.observe_arrival(t, i);
         }
@@ -513,7 +572,7 @@ impl FleetServer {
             ));
         }
         let Some((src, old_inner, name, rate_hint, class)) = ({
-            let st = self.state.lock().unwrap();
+            let st = lock_or_recover(&self.state);
             st.iter().find(|t| t.handle == handle).map(|t| {
                 (
                     t.device,
@@ -535,7 +594,7 @@ impl FleetServer {
             .map_err(|e| anyhow::anyhow!("migration to device {to_device} refused: {e}"))?;
         // 2. Reroute — new submits flow to the target from here on.
         let rerouted = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_or_recover(&self.state);
             match st
                 .iter_mut()
                 .find(|t| t.handle == handle && t.device == src && t.inner == old_inner)
@@ -543,6 +602,10 @@ impl FleetServer {
                 Some(t) => {
                     t.device = to_device;
                     t.inner = new_inner;
+                    // A policy-driven move re-homes the tenant (unlike a
+                    // forced failover, which keeps `home` pointing at the
+                    // intended placement).
+                    t.home = to_device;
                     true
                 }
                 None => false,
@@ -569,10 +632,14 @@ impl FleetServer {
         }
         // 4. Move: detach from the source. Stragglers past the drain
         // window fail with the same typed errors a plain detach produces.
-        self.servers[src].detach(old_inner)?;
+        // A concurrent fleet-level detach that won the race detaches the
+        // TARGET handle, never this source handle, so a failure here is
+        // tolerated rather than propagated — the reroute above is already
+        // effective and every source-side ticket has resolved typed.
+        let _ = self.servers[src].detach(old_inner);
         self.migrations.fetch_add(1, Ordering::SeqCst);
         {
-            let mut per = self.per_device_migrations.lock().unwrap();
+            let mut per = lock_or_recover(&self.per_device_migrations);
             per[src] += 1;
             per[to_device] += 1;
         }
@@ -586,7 +653,7 @@ impl FleetServer {
     /// continues.
     pub fn rebalance(&self) -> usize {
         let (handles, tenants, current) = {
-            let st = self.state.lock().unwrap();
+            let st = lock_or_recover(&self.state);
             (
                 st.iter().map(|t| t.handle).collect::<Vec<_>>(),
                 st.iter().map(|t| t.tenant.clone()).collect::<Vec<_>>(),
@@ -597,7 +664,7 @@ impl FleetServer {
             return 0;
         }
         self.flush_arrivals();
-        let target = self.placement.lock().unwrap().decide_placement(
+        let target = lock_or_recover(&self.placement).decide_placement(
             self.now(),
             &tenants,
             &self.fleet,
@@ -618,10 +685,243 @@ impl FleetServer {
         moved
     }
 
+    /// Health of every member device, indexed by device: the injected
+    /// fault plan's view (a plan-driven `Down` dominates) combined with
+    /// each worker's consecutive-execution-failure streak.
+    pub fn health(&self) -> Vec<Health> {
+        self.servers.iter().map(|s| s.health()).collect()
+    }
+
+    /// Requests `handle` has had routed away from its home placement
+    /// (served by a failover target) — the live half of the sim-vs-live
+    /// failed-over parity accounting.
+    pub fn failed_over_of(&self, handle: TenantHandle) -> u64 {
+        lock_or_recover(&self.state)
+            .iter()
+            .find(|t| t.handle == handle)
+            .map(|t| t.failed_over)
+            .unwrap_or(0)
+    }
+
+    /// Heartbeat hook: scan member health and run a forced failover for
+    /// every device newly observed `Down`. Triggers once per outage (a
+    /// recovered device re-arms the trigger). Deployments call this from
+    /// their driver/control loop at heartbeat period — the CLI's serve
+    /// driver does, as do the chaos tests. Returns tenants moved.
+    pub fn poll_health(&self) -> usize {
+        let mut moved = 0;
+        for d in 0..self.servers.len() {
+            let down = self.servers[d].health().is_down();
+            let newly = {
+                let mut seen = lock_or_recover(&self.down_handled);
+                let newly = down && !seen[d];
+                seen[d] = down;
+                newly
+            };
+            if newly {
+                moved += self.fail_over(d);
+            }
+        }
+        moved
+    }
+
+    /// Forced failover of every tenant on a crashed device: extract its
+    /// queued tickets (senders intact), re-place each tenant on the best
+    /// surviving device through the normal admission path — highest SLO
+    /// classes first, so they claim surviving capacity before lower
+    /// classes — degrade to a CPU-only placement (partition 0) when no
+    /// survivor admits the declared rate, and shed with typed errors
+    /// only when even that fails. Requeued tickets get their deadlines
+    /// translated onto the target's clock. Returns tenants re-placed.
+    pub fn fail_over(&self, device: usize) -> usize {
+        assert!(device < self.servers.len(), "device {device} out of range");
+        let mut victims: Vec<(TenantHandle, TenantHandle, String, f64, SloClass)> = {
+            let st = lock_or_recover(&self.state);
+            st.iter()
+                .filter(|t| t.device == device)
+                .map(|t| {
+                    (
+                        t.handle,
+                        t.inner,
+                        t.tenant.model.name.clone(),
+                        t.tenant.rate,
+                        t.class,
+                    )
+                })
+                .collect()
+        };
+        victims.sort_by_key(|v| v.4.priority());
+        let mut moved = 0;
+        for (handle, old_inner, name, rate, class) in victims {
+            // Extract queued tickets BEFORE the detach below, whose purge
+            // would resolve them with `Detached` instead of requeueing.
+            let drained = self.servers[device].drain_for_failover(old_inner);
+            match self.place_survivor(device, &name, rate, class) {
+                Some((to, new_inner)) => {
+                    // Reroute; tolerate a racing fleet-level detach.
+                    let rerouted = {
+                        let mut st = lock_or_recover(&self.state);
+                        match st
+                            .iter_mut()
+                            .find(|t| t.handle == handle && t.inner == old_inner)
+                        {
+                            Some(t) => {
+                                t.device = to;
+                                t.inner = new_inner;
+                                true
+                            }
+                            None => false,
+                        }
+                    };
+                    if !rerouted {
+                        let _ = self.servers[to].detach(new_inner);
+                        for job in drained {
+                            let _ = job.done.send(Err(RequestError::Detached(handle)));
+                        }
+                        let _ = self.servers[device].detach(old_inner);
+                        continue;
+                    }
+                    let src_now = self.servers[device].now_s();
+                    let dst_now = self.servers[to].now_s();
+                    for job in drained {
+                        let deadline = match job.deadline {
+                            Some(d) => Some(d - src_now + dst_now),
+                            None => None,
+                        };
+                        self.servers[to].resubmit_failover(new_inner, job, deadline);
+                        self.requeued.fetch_add(1, Ordering::SeqCst);
+                    }
+                    let _ = self.servers[device].detach(old_inner);
+                    moved += 1;
+                }
+                None => {
+                    // No capacity anywhere, not even degraded: shed the
+                    // tenant — every stranded ticket resolves typed.
+                    {
+                        let mut st = lock_or_recover(&self.state);
+                        if let Some(i) = st
+                            .iter()
+                            .position(|t| t.handle == handle && t.inner == old_inner)
+                        {
+                            st.remove(i);
+                        }
+                    }
+                    for job in drained {
+                        let _ = job.done.send(Err(RequestError::Shed {
+                            station: "fleet".to_string(),
+                        }));
+                    }
+                    let _ = self.servers[device].detach(old_inner);
+                    self.shed_tenants.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+        self.failovers.fetch_add(1, Ordering::SeqCst);
+        moved
+    }
+
+    /// Failover target selection: the normal admission scoring
+    /// (incremental two-level criterion) restricted to devices that are
+    /// not `Down`. Falls back to a zero-rate attach pinned to partition
+    /// 0 on the emptiest survivor — CPU-only degrade — when no survivor
+    /// admits the declared rate; `None` = shed (no survivors, or even
+    /// the degrade attach refused).
+    fn place_survivor(
+        &self,
+        dead: usize,
+        name: &str,
+        rate: f64,
+        class: SloClass,
+    ) -> Option<(usize, TenantHandle)> {
+        let survivors: Vec<usize> = (0..self.servers.len())
+            .filter(|&d| d != dead && !self.servers[d].health().is_down())
+            .collect();
+        if survivors.is_empty() {
+            return None;
+        }
+        let members = self.members_by_device();
+        let current = self.device_objectives(&members);
+        let meta = match self.manifest.get(name) {
+            Ok(m) => m.clone(),
+            Err(_) => return None,
+        };
+        let newcomer = Tenant { model: meta, rate };
+        let mut best: Option<(f64, f64, usize)> = None;
+        for &d in &survivors {
+            let dev = self.fleet.device(d);
+            let mut cand: Vec<Tenant> = members[d].clone();
+            cand.push(newcomer.clone());
+            let plan = alloc::hill_climb(&dev.am, &cand, dev.k_max());
+            if !plan.predicted_objective.is_finite() {
+                continue;
+            }
+            let mut objs = current.clone();
+            objs[d] = plan.predicted_objective;
+            let max = objs.iter().cloned().fold(0.0f64, f64::max);
+            let better = match best {
+                None => true,
+                Some((bm, bd, _)) => (max, plan.predicted_objective) < (bm, bd),
+            };
+            if better {
+                best = Some((max, plan.predicted_objective, d));
+            }
+        }
+        if let Some((_, _, d)) = best {
+            if let Ok(inner) = self.servers[d].attach(
+                name,
+                AttachOptions {
+                    rate_hint: rate,
+                    class,
+                },
+            ) {
+                return Some((d, inner));
+            }
+        }
+        // CPU-only degrade: land a zero-rate attach on the emptiest
+        // survivor and pin the newcomer to partition 0 (its requests
+        // bypass the TPU entirely and run on the CPU pools), granting it
+        // one core if the budget allows or can be rebalanced.
+        let emptiest = survivors.iter().copied().min_by_key(|&d| members[d].len())?;
+        let inner = self.servers[emptiest]
+            .attach(
+                name,
+                AttachOptions {
+                    rate_hint: 0.0,
+                    class,
+                },
+            )
+            .ok()?;
+        let mut cfg = self.servers[emptiest].current_config();
+        let idx = self.servers[emptiest]
+            .handles()
+            .iter()
+            .position(|&h| h == inner)?;
+        cfg.partitions[idx] = 0;
+        if cfg.cores[idx] == 0 {
+            let k_max = self.fleet.device(emptiest).k_max();
+            let total: usize = cfg.cores.iter().sum();
+            if total < k_max {
+                cfg.cores[idx] = 1;
+            } else {
+                let rich = (0..cfg.cores.len())
+                    .filter(|&i| i != idx)
+                    .max_by_key(|&i| cfg.cores[i]);
+                if let Some(rich) = rich {
+                    if cfg.cores[rich] > 1 {
+                        cfg.cores[rich] -= 1;
+                        cfg.cores[idx] = 1;
+                    }
+                }
+            }
+        }
+        let _ = self.servers[emptiest].set_config(cfg);
+        Some((emptiest, inner))
+    }
+
     /// Aggregated statistics: per-device [`ServeStats`] with their
     /// `migrations` counters filled in, plus the fleet totals.
     pub fn stats(&self) -> FleetStats {
-        let per = self.per_device_migrations.lock().unwrap().clone();
+        let per = lock_or_recover(&self.per_device_migrations).clone();
         let per_device: Vec<ServeStats> = self
             .servers
             .iter()
@@ -635,6 +935,10 @@ impl FleetServer {
         FleetStats {
             per_device,
             migrations: self.migrations.load(Ordering::SeqCst),
+            failovers: self.failovers.load(Ordering::SeqCst),
+            requeued: self.requeued.load(Ordering::SeqCst),
+            failed_over: self.failed_over.load(Ordering::SeqCst),
+            shed_tenants: self.shed_tenants.load(Ordering::SeqCst),
         }
     }
 }
@@ -784,5 +1088,113 @@ mod tests {
         assert!(moved >= 1, "no migration despite conflicting colocation");
         assert_ne!(fs.device_of(ha), fs.device_of(hb));
         assert_eq!(fs.stats().migrations, moved as u64);
+    }
+
+    #[test]
+    fn detach_racing_migration_never_loses_tickets() {
+        // Regression: a fleet-level detach racing a drain-then-move
+        // migration used to strand the source device's queued tickets —
+        // the migration rerouted state to the target, the detach removed
+        // the target handle, and nothing ever purged the source queue.
+        // Every ticket must resolve (completion or typed error), never
+        // hang or drop its channel.
+        let fs = Arc::new(builder(2).build().unwrap());
+        for _ in 0..5 {
+            let h = fs
+                .attach_on("squeezenet", AttachOptions::default(), 0)
+                .unwrap();
+            let input = input_for(&fs, 0, "squeezenet");
+            let mut tickets = Vec::new();
+            for _ in 0..8 {
+                tickets.push(fs.submit(h, input.clone()));
+            }
+            let fs_mig = fs.clone();
+            let mig = std::thread::spawn(move || {
+                let _ = fs_mig.migrate(h, 1);
+            });
+            let fs_det = fs.clone();
+            let det = std::thread::spawn(move || {
+                let _ = fs_det.detach(h);
+            });
+            mig.join().unwrap();
+            det.join().unwrap();
+            for mut t in tickets {
+                match t.wait_timeout(Duration::from_secs(5)) {
+                    Some(Ok(_)) => {}
+                    Some(Err(e)) => {
+                        assert_ne!(e, RequestError::ChannelClosed, "ticket lost its sender");
+                    }
+                    None => panic!("ticket unresolved after a detach/migrate race"),
+                }
+            }
+            // Whichever side won, the handle is gone from the fleet.
+            assert_eq!(fs.device_of(h), None);
+        }
+    }
+
+    #[test]
+    fn failover_requeues_queued_work_onto_a_survivor() {
+        // Device 0 is down from t=0 with no recovery: its worker parks,
+        // submits queue, and poll_health must move the tenant (and its
+        // queued tickets, senders intact) onto device 1.
+        let fs = builder(2)
+            .faults(FaultPlan::new(1).crash(0, 0.0, None))
+            .build()
+            .unwrap();
+        let ha = fs
+            .attach_on("mobilenetv2", AttachOptions::default(), 0)
+            .unwrap();
+        // Pin a TPU-resident config so submits queue at the (parked) TPU
+        // worker instead of bypassing it through the CPU pools.
+        fs.set_device_config(0, Config::all_tpu(&fs.server(0).tenants()))
+            .unwrap();
+        let ia = input_for(&fs, 0, "mobilenetv2");
+        let mut pending = Vec::new();
+        for _ in 0..5 {
+            pending.push(fs.submit(ha, ia.clone()));
+        }
+        assert!(fs.health()[0].is_down());
+        assert_eq!(fs.poll_health(), 1);
+        assert_eq!(fs.device_of(ha), Some(1));
+        for t in pending {
+            t.wait().unwrap();
+        }
+        // Post-failover traffic routes to the survivor and is counted as
+        // failed-over (the tenant is off its home placement).
+        for _ in 0..3 {
+            fs.submit(ha, ia.clone()).wait().unwrap();
+        }
+        let stats = fs.stats();
+        assert_eq!(stats.failovers, 1);
+        assert_eq!(stats.requeued, 5);
+        assert_eq!(stats.failed_over, 3);
+        assert_eq!(stats.shed_tenants, 0);
+        assert_eq!(fs.failed_over_of(ha), 3);
+        // The outage is ongoing: a second poll must not re-trigger.
+        assert_eq!(fs.poll_health(), 0);
+        assert_eq!(fs.stats().failovers, 1);
+    }
+
+    #[test]
+    fn failover_with_no_survivors_sheds_typed() {
+        let fs = builder(1)
+            .faults(FaultPlan::new(3).crash(0, 0.0, None))
+            .build()
+            .unwrap();
+        let h = fs
+            .attach_on("squeezenet", AttachOptions::default(), 0)
+            .unwrap();
+        fs.set_device_config(0, Config::all_tpu(&fs.server(0).tenants()))
+            .unwrap();
+        let input = input_for(&fs, 0, "squeezenet");
+        let t = fs.submit(h, input);
+        assert_eq!(fs.poll_health(), 0);
+        match t.wait() {
+            Err(RequestError::Shed { station }) => assert_eq!(station, "fleet"),
+            other => panic!("expected a typed shed, got {other:?}"),
+        }
+        let stats = fs.stats();
+        assert_eq!(stats.shed_tenants, 1);
+        assert_eq!(fs.device_of(h), None);
     }
 }

@@ -45,18 +45,32 @@ pub struct FleetSimResult {
     pub max_device_mean: f64,
     /// Arrivals in the global stream (pre-split, pre-warmup).
     pub total_arrivals: usize,
+    /// Per global tenant: arrivals rerouted away from a Down home device
+    /// by [`run_fleet_failover`] (all zero under [`run_fleet`]).
+    pub failed_over: Vec<u64>,
+    /// Arrivals dropped because their home device was Down and no
+    /// surviving device could take them (all zero under [`run_fleet`]).
+    pub shed: u64,
 }
 
 impl FleetSimResult {
-    /// Completions of global tenant `i` on the device its placement
-    /// routed it to (0 if the tenant is unknown to every device).
+    /// Completions of global tenant `i`, summed over every device that
+    /// served it — under failover a tenant completes on both its home
+    /// device (pre-crash) and its landing device (post-crash).
     pub fn tenant_completed(&self, i: usize) -> u64 {
+        let mut n = 0u64;
         for dev in &self.per_device {
             if let Some(pos) = dev.tenants.iter().position(|&t| t == i) {
-                return dev.result.per_model[pos].completed;
+                n += dev.result.per_model[pos].completed;
             }
         }
-        0
+        n
+    }
+
+    /// Arrivals of global tenant `i` that were rerouted off a Down home
+    /// device (0 when the tenant is unknown or never failed over).
+    pub fn tenant_failed_over(&self, i: usize) -> u64 {
+        self.failed_over.get(i).copied().unwrap_or(0)
     }
 }
 
@@ -123,6 +137,161 @@ pub fn run_fleet(
         },
         max_device_mean,
         total_arrivals: arrivals.len(),
+        failed_over: vec![0; tenants.len()],
+        shed: 0,
+    }
+}
+
+/// Failover-mode replay: like [`run_fleet`], but arrivals whose home
+/// device is Down (per `opts.faults`) at their arrival instant are
+/// rerouted to the tenant's failover target — the least-populated device
+/// the plan never crashes — and counted in
+/// [`FleetSimResult::failed_over`]. The landing device gains the foreign
+/// tenant as an extra full-TPU member station, mirroring the live
+/// [`super::FleetServer::fail_over`] re-placement; what the scenarios
+/// and `tests/fleet_parity.rs` pin is the per-tenant *count* accounting,
+/// not the landing latency. The crashed device still replays its own
+/// fault schedule, so pre-crash service is identical to [`run_fleet`]
+/// and work queued there at crash time stays frozen until recovery.
+///
+/// Without `opts.faults` this is exactly [`run_fleet`].
+pub fn run_fleet_failover(
+    fleet: &Fleet,
+    tenants: &[Tenant],
+    plan: &FleetPlan,
+    arrivals: &[Arrival],
+    opts: &SimOptions,
+) -> FleetSimResult {
+    let faults = match opts.faults.clone() {
+        Some(f) => f,
+        None => return run_fleet(fleet, tenants, plan, arrivals, opts),
+    };
+    assert_eq!(plan.assignment.len(), tenants.len());
+    assert_eq!(plan.devices.len(), fleet.len());
+    let n_dev = fleet.len();
+
+    // Devices the plan ever takes Down inside the horizon.
+    let ever_down: Vec<bool> = (0..n_dev)
+        .map(|d| {
+            faults
+                .transitions(d)
+                .iter()
+                .any(|&(t, down)| down && t < opts.horizon)
+        })
+        .collect();
+    // One failover target per tenant: the never-crashing device with the
+    // fewest planned tenants (lowest index on ties). Tenants homed on an
+    // always-up device need no target; `None` with a crashing home means
+    // every other device also crashes — those arrivals are shed.
+    let target: Vec<Option<usize>> = plan
+        .assignment
+        .iter()
+        .map(|&home| {
+            if !ever_down[home] {
+                return None;
+            }
+            (0..n_dev)
+                .filter(|&d| d != home && !ever_down[d])
+                .min_by_key(|&d| (plan.devices[d].tenants.len(), d))
+        })
+        .collect();
+
+    // Per-device member lists: the planned tenants, then foreign
+    // failover landings appended in ascending global order, each landing
+    // added to the device config as a full-TPU station.
+    let mut members_of: Vec<Vec<usize>> = (0..n_dev)
+        .map(|d| plan.devices[d].tenants.clone())
+        .collect();
+    let mut configs: Vec<Config> = (0..n_dev).map(|d| plan.devices[d].config.clone()).collect();
+    for (i, t) in target.iter().enumerate() {
+        if let Some(d) = *t {
+            members_of[d].push(i);
+            configs[d].partitions.push(tenants[i].model.partition_points);
+            configs[d].cores.push(0);
+        }
+    }
+    let mut local_of: Vec<Vec<Option<usize>>> = vec![vec![None; tenants.len()]; n_dev];
+    for (d, members) in members_of.iter().enumerate() {
+        for (pos, &i) in members.iter().enumerate() {
+            local_of[d][i] = Some(pos);
+        }
+    }
+
+    // Route: home while up, failover target while Down.
+    let mut streams: Vec<Vec<Arrival>> = (0..n_dev).map(|_| Vec::new()).collect();
+    let mut failed_over = vec![0u64; tenants.len()];
+    let mut shed = 0u64;
+    for a in arrivals {
+        let home = plan.assignment[a.model];
+        let dev = if faults.is_down(home, a.time) {
+            match target[a.model] {
+                Some(t) => {
+                    failed_over[a.model] += 1;
+                    t
+                }
+                None => {
+                    shed += 1;
+                    continue;
+                }
+            }
+        } else {
+            home
+        };
+        let mut routed = *a;
+        routed.model = local_of[dev][a.model].expect("routed to a non-member device");
+        streams[dev].push(routed);
+    }
+
+    let mut per_device = Vec::with_capacity(n_dev);
+    let mut completed = 0u64;
+    let mut lat_weighted = 0.0f64;
+    let mut max_device_mean = 0.0f64;
+    for d in 0..n_dev {
+        let members: Vec<Tenant> = members_of[d].iter().map(|&i| tenants[i].clone()).collect();
+        let dev_opts = SimOptions {
+            device: d,
+            ..opts.clone()
+        };
+        let result = if members.is_empty() {
+            let empty = Config {
+                partitions: Vec::new(),
+                cores: Vec::new(),
+            };
+            Simulator::new(&fleet.device(d).cost, &[], empty, dev_opts).run(&[], None)
+        } else {
+            let mut sim = Simulator::new(
+                &fleet.device(d).cost,
+                &members,
+                configs[d].clone(),
+                dev_opts,
+            );
+            sim.run(&streams[d], None)
+        };
+        let dev_completed: u64 = result.per_model.iter().map(|m| m.completed).sum();
+        completed += dev_completed;
+        if dev_completed > 0 {
+            lat_weighted += result.mean_latency * dev_completed as f64;
+            max_device_mean = max_device_mean.max(result.mean_latency);
+        }
+        per_device.push(DeviceSimResult {
+            device: d,
+            tenants: members_of[d].clone(),
+            result,
+        });
+    }
+
+    FleetSimResult {
+        per_device,
+        completed,
+        mean_latency: if completed > 0 {
+            lat_weighted / completed as f64
+        } else {
+            0.0
+        },
+        max_device_mean,
+        total_arrivals: arrivals.len(),
+        failed_over,
+        shed,
     }
 }
 
@@ -250,6 +419,101 @@ mod tests {
         // Observed fleet objective tracks the planner's prediction
         // direction too.
         assert!(plan2.objective < plan1.objective);
+    }
+
+    #[test]
+    fn failover_reroutes_post_crash_arrivals() {
+        use crate::fault::FaultPlan;
+        let ts = tenants();
+        let fleet = Fleet::uniform(2, &HardwareSpec::default());
+        let plan = place(&fleet, &ts);
+        let dead = plan.assignment[0];
+        let schedules: Vec<RateSchedule> =
+            ts.iter().map(|t| RateSchedule::constant(t.rate)).collect();
+        let arrivals = generate_arrivals(&schedules, 300.0, &mut Rng::new(17));
+        let mut o = opts(300.0, 17);
+        o.faults = Some(FaultPlan::new(5).crash(dead, 100.0, None));
+        let static_res = run_fleet(&fleet, &ts, &plan, &arrivals, &o);
+        let failover = run_fleet_failover(&fleet, &ts, &plan, &arrivals, &o);
+        // Static: the crashed device freezes and its tenants stop
+        // completing; failover keeps serving them on the survivor.
+        assert!(
+            failover.completed > static_res.completed,
+            "failover {} !> static {}",
+            failover.completed,
+            static_res.completed
+        );
+        assert_eq!(failover.shed, 0);
+        for (i, &home) in plan.assignment.iter().enumerate() {
+            if home == dead {
+                assert!(
+                    failover.tenant_failed_over(i) > 0,
+                    "tenant {i} homed on crashed device never failed over"
+                );
+            } else {
+                assert_eq!(failover.tenant_failed_over(i), 0, "tenant {i}");
+            }
+        }
+        // Static accounting stays all-zero.
+        assert!(static_res.failed_over.iter().all(|&n| n == 0));
+        // Per-tenant completions (home + landing) sum to the fleet total.
+        let by_tenant: u64 = (0..ts.len()).map(|i| failover.tenant_completed(i)).sum();
+        assert_eq!(by_tenant, failover.completed);
+    }
+
+    #[test]
+    fn failover_without_faults_matches_static() {
+        let ts = tenants();
+        let fleet = Fleet::uniform(2, &HardwareSpec::default());
+        let plan = place(&fleet, &ts);
+        let schedules: Vec<RateSchedule> =
+            ts.iter().map(|t| RateSchedule::constant(t.rate)).collect();
+        let arrivals = generate_arrivals(&schedules, 150.0, &mut Rng::new(29));
+        let o = opts(150.0, 29);
+        let a = run_fleet(&fleet, &ts, &plan, &arrivals, &o);
+        let b = run_fleet_failover(&fleet, &ts, &plan, &arrivals, &o);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.mean_latency, b.mean_latency);
+        assert!(b.failed_over.iter().all(|&n| n == 0));
+        assert_eq!(b.shed, 0);
+    }
+
+    #[test]
+    fn failover_with_no_survivors_sheds_down_arrivals() {
+        use crate::fault::FaultPlan;
+        let ts = tenants();
+        let fleet = Fleet::uniform(1, &HardwareSpec::default());
+        let plan = place(&fleet, &ts);
+        let schedules: Vec<RateSchedule> =
+            ts.iter().map(|t| RateSchedule::constant(t.rate)).collect();
+        let arrivals = generate_arrivals(&schedules, 200.0, &mut Rng::new(41));
+        let mut o = opts(200.0, 41);
+        o.faults = Some(FaultPlan::new(5).crash(0, 50.0, None));
+        let res = run_fleet_failover(&fleet, &ts, &plan, &arrivals, &o);
+        // Nowhere to land: post-crash arrivals are shed, none failed over.
+        assert!(res.shed > 0);
+        assert!(res.failed_over.iter().all(|&n| n == 0));
+        let post_crash = arrivals.iter().filter(|a| a.time >= 50.0).count() as u64;
+        assert_eq!(res.shed, post_crash);
+    }
+
+    #[test]
+    fn failover_replay_is_deterministic() {
+        use crate::fault::FaultPlan;
+        let ts = tenants();
+        let fleet = Fleet::uniform(2, &HardwareSpec::default());
+        let plan = place(&fleet, &ts);
+        let schedules: Vec<RateSchedule> =
+            ts.iter().map(|t| RateSchedule::constant(t.rate)).collect();
+        let arrivals = generate_arrivals(&schedules, 200.0, &mut Rng::new(53));
+        let mut o = opts(200.0, 53);
+        o.faults = Some(FaultPlan::new(9).crash(0, 80.0, Some(140.0)));
+        let a = run_fleet_failover(&fleet, &ts, &plan, &arrivals, &o);
+        let b = run_fleet_failover(&fleet, &ts, &plan, &arrivals, &o);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.failed_over, b.failed_over);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.mean_latency, b.mean_latency);
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub mod analytic;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fault;
 pub mod fleet;
 pub mod metrics;
 pub mod model;

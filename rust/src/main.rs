@@ -31,10 +31,10 @@ use swapless::experiments::common::save_result;
 use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 22] = [
+const VALUE_OPTS: [&str; 25] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
     "trace", "policy", "duration", "attach-at", "detach-at", "backend", "discipline", "classes",
-    "queue-cap", "overload", "deadline-ms", "devices",
+    "queue-cap", "overload", "deadline-ms", "devices", "crash-device", "crash-at", "recover-at",
 ];
 
 fn main() {
@@ -64,6 +64,10 @@ fn usage() -> String {
        fleet                       multi-device placement sweep: 1/2/4 devices x\n\
                                    Table-II mixes x rho, equal total load per group\n\
                                    (results/fleet.json)\n\
+       faults                      fault sweep: crash schedules x {static, failover}\n\
+                                   routing on the 2-device quad mix; reports\n\
+                                   completed-within-deadline availability\n\
+                                   (results/faults.json)\n\
        profile [--models a,b] [--iters N] [--out FILE]\n\
                                    offline profiling phase -> profiles.json\n\
        plan --models a,b --rates x,y\n\
@@ -78,6 +82,7 @@ fn usage() -> String {
              [--queue-cap N] [--overload block|reject|shed|deadline]\n\
              [--deadline-ms D] [--attach-at name@t[:rate],...]\n\
              [--detach-at name@t,...] [--backend auto|pjrt|emulated]\n\
+             [--crash-device D --crash-at S [--recover-at S]]\n\
                                    live serving with a dynamic tenant set; classes\n\
                                    (interactive|standard|batch) align with --models;\n\
                                    --rho drives open-loop load at a TPU load factor\n\
@@ -86,7 +91,9 @@ fn usage() -> String {
                                    every request with a relative deadline;\n\
                                    --devices N routes through the fleet layer\n\
                                    (placement-aware dispatch + migration;\n\
-                                   --attach-at/--detach-at not supported there)\n\
+                                   --attach-at/--detach-at not supported there);\n\
+                                   --crash-device/--crash-at inject a chaos crash\n\
+                                   into a fleet run (failover requeues its work)\n\
        trace --models a,b --rates x,y [--horizon S] [--seed N] [--out FILE]\n\
                                    record a Poisson arrival trace (JSON)\n\
        replay --trace FILE [--policy swapless|compiler|threshold]\n\
@@ -137,9 +144,8 @@ fn run(raw: &[String]) -> Result<(), String> {
             run_named(&ctx, "sensitivity")?;
             run_named(&ctx, "schedulers")
         }
-        "ablation" | "sensitivity" | "churn" | "schedulers" | "overload" | "fleet" => {
-            run_named(&ctx, cmd)
-        }
+        "ablation" | "sensitivity" | "churn" | "schedulers" | "overload" | "fleet"
+        | "faults" => run_named(&ctx, cmd),
         "profile" => {
             let models = if args.opt("models").is_some() {
                 args.opt_list("models")
@@ -219,6 +225,13 @@ fn run(raw: &[String]) -> Result<(), String> {
             let devices = args.opt_usize("devices", 1)?;
             if devices > 1 {
                 serve_fleet(&ctx, &args, &hw, devices)
+            } else if args.opt("crash-device").is_some()
+                || args.opt("crash-at").is_some()
+                || args.opt("recover-at").is_some()
+            {
+                Err("--crash-device/--crash-at/--recover-at require --devices > 1 \
+                     (chaos injection exercises the fleet failover path)"
+                    .into())
             } else {
                 serve(&ctx, &args, &hw)
             }
@@ -478,6 +491,11 @@ fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
             r.print();
             save_result("fleet", &r.to_json())
         }
+        "faults" => {
+            let r = exp::faults::run(ctx)?;
+            r.print();
+            save_result("faults", &r.to_json())
+        }
         _ => Err(format!("unknown experiment {which}")),
     }
 }
@@ -664,6 +682,43 @@ fn serve_fleet(
         "emulated" => ExecBackend::Emulated,
         other => return Err(format!("unknown --backend {other}")),
     };
+    // Chaos injection: --crash-device D --crash-at S [--recover-at S]
+    // builds a one-crash FaultPlan against the run's wall clock.
+    let crash = match args.opt("crash-device") {
+        Some(v) => {
+            let d: usize = v
+                .parse()
+                .map_err(|_| format!("bad --crash-device {v}"))?;
+            if d >= devices {
+                return Err(format!(
+                    "--crash-device {d} out of range for {devices} devices"
+                ));
+            }
+            let at = match args.opt("crash-at") {
+                Some(t) => t.parse::<f64>().map_err(|_| format!("bad --crash-at {t}"))?,
+                None => return Err("--crash-device needs --crash-at S".into()),
+            };
+            let recover = match args.opt("recover-at") {
+                Some(t) => {
+                    let r: f64 = t
+                        .parse()
+                        .map_err(|_| format!("bad --recover-at {t}"))?;
+                    if r <= at {
+                        return Err(format!("--recover-at {r} must be after --crash-at {at}"));
+                    }
+                    Some(r)
+                }
+                None => None,
+            };
+            Some((d, at, recover))
+        }
+        None => {
+            if args.opt("crash-at").is_some() || args.opt("recover-at").is_some() {
+                return Err("--crash-at/--recover-at need --crash-device D".into());
+            }
+            None
+        }
+    };
 
     let fleet = Fleet::uniform(devices, hw);
     let mut builder = FleetServerBuilder::new(&ctx.manifest, fleet)
@@ -675,11 +730,24 @@ fn serve_fleet(
     if let Some(cap) = queue_cap {
         builder = builder.queue_capacity(cap);
     }
+    if let Some((d, at, recover)) = crash {
+        builder = builder.faults(
+            swapless::fault::FaultPlan::new(args.opt_u64("seed", 42)?).crash(d, at, recover),
+        );
+    }
     let server = builder.build().map_err(|e| e.to_string())?;
     println!(
         "fleet: {devices} devices | discipline: {discipline} | overload: {overload}{}",
         queue_cap.map(|c| format!(" cap {c}")).unwrap_or_default()
     );
+    if let Some((d, at, recover)) = crash {
+        println!(
+            "chaos: crash device {d} at t={at:.1}s{}",
+            recover
+                .map(|r| format!(", recover at t={r:.1}s"))
+                .unwrap_or_default()
+        );
+    }
 
     // Live tenants: (handle, name, input length, drive rate, next arrival).
     let mut live: Vec<(TenantHandle, String, usize, f64, f64)> = Vec::new();
@@ -713,10 +781,21 @@ fn serve_fleet(
         if now >= duration {
             break;
         }
+        // Heartbeat: detect a newly-Down device and force failover
+        // (requeues its queued work onto survivors).
+        let moved = server.poll_health();
+        if moved > 0 {
+            println!("t={now:.1}s failover moved {moved} tenant(s) off a down device");
+        }
         if now >= next_rebalance {
-            let moved = server.rebalance();
-            if moved > 0 {
-                println!("t={now:.1}s rebalance migrated {moved} tenant(s)");
+            // Don't counter-migrate during an outage: the placement
+            // planner doesn't see health, so let failover's layout stand
+            // until every device is back up.
+            if server.health().iter().all(|h| !h.is_down()) {
+                let moved = server.rebalance();
+                if moved > 0 {
+                    println!("t={now:.1}s rebalance migrated {moved} tenant(s)");
+                }
             }
             next_rebalance = now + rebalance_period;
             continue;
@@ -760,6 +839,10 @@ fn serve_fleet(
          typed errors; {} migrations",
         ok as f64 / wall,
         stats.migrations
+    );
+    println!(
+        "fleet faults: failovers={} requeued={} failed_over={} shed_tenants={}",
+        stats.failovers, stats.requeued, stats.failed_over, stats.shed_tenants
     );
     for (d, s) in stats.per_device.iter().enumerate() {
         println!(

@@ -217,6 +217,9 @@ impl LatencyHistogram {
 /// * `cancelled` — cancelled via the request's token before execution;
 /// * `missed` — completed (counted in the histogram) but after the
 ///   deadline; `goodput` subtracts these from the completions.
+/// * `retried` — re-executions after a transient (retryable) fault;
+///   counts extra attempts, not requests, so one request retried twice
+///   adds 2.
 #[derive(Debug, Clone)]
 pub struct PerClassLatency {
     hists: Vec<LatencyHistogram>,
@@ -226,6 +229,7 @@ pub struct PerClassLatency {
     expired: Vec<u64>,
     cancelled: Vec<u64>,
     missed: Vec<u64>,
+    retried: Vec<u64>,
 }
 
 impl Default for PerClassLatency {
@@ -240,6 +244,7 @@ impl Default for PerClassLatency {
             expired: vec![0; SloClass::COUNT],
             cancelled: vec![0; SloClass::COUNT],
             missed: vec![0; SloClass::COUNT],
+            retried: vec![0; SloClass::COUNT],
         }
     }
 }
@@ -280,6 +285,12 @@ impl PerClassLatency {
         self.missed[class.index()] += 1;
     }
 
+    /// One re-execution after a transient fault (the retry itself, not
+    /// the request — a request retried twice records 2).
+    pub fn record_retried(&mut self, class: SloClass) {
+        self.retried[class.index()] += 1;
+    }
+
     pub fn accepted(&self, class: SloClass) -> u64 {
         self.accepted[class.index()]
     }
@@ -298,6 +309,10 @@ impl PerClassLatency {
 
     pub fn cancelled(&self, class: SloClass) -> u64 {
         self.cancelled[class.index()]
+    }
+
+    pub fn retried(&self, class: SloClass) -> u64 {
+        self.retried[class.index()]
     }
 
     /// Requests dropped by the overload layer (everything but
@@ -331,6 +346,10 @@ impl PerClassLatency {
 
     pub fn cancelled_total(&self) -> u64 {
         self.cancelled.iter().sum()
+    }
+
+    pub fn retried_total(&self) -> u64 {
+        self.retried.iter().sum()
     }
 
     pub fn dropped_total(&self) -> u64 {
@@ -370,6 +389,7 @@ impl PerClassLatency {
             self.expired[i] += other.expired[i];
             self.cancelled[i] += other.cancelled[i];
             self.missed[i] += other.missed[i];
+            self.retried[i] += other.retried[i];
         }
     }
 }
@@ -554,6 +574,10 @@ mod tests {
         pc.record_expired(SloClass::Interactive);
         pc.record_reject(SloClass::Batch);
         pc.record_cancelled(SloClass::Batch);
+        pc.record_retried(SloClass::Interactive);
+        pc.record_retried(SloClass::Interactive);
+        assert_eq!(pc.retried(SloClass::Interactive), 2);
+        assert_eq!(pc.retried_total(), 2);
         assert_eq!(pc.accepted(SloClass::Interactive), 5);
         assert_eq!(pc.goodput(SloClass::Interactive), 1);
         assert_eq!(pc.dropped(SloClass::Interactive), 2);

@@ -16,6 +16,15 @@ pub enum EventKind {
     CpuDone { req: Request },
     /// Full-TPU request finished its output transfer.
     Complete { req: Request },
+    /// The TPU station's in-service request exhausted its transient-fault
+    /// retry budget (or its deadline clipped the backoff) — release the
+    /// server, count a failure.
+    TpuFault { req: Request },
+    /// The injected fault plan crashes this station set's device: the TPU
+    /// station stops starting service (queued work stays queued).
+    DeviceDown,
+    /// The device recovers: the TPU station resumes.
+    DeviceUp,
     /// Periodic invocation of the online reconfiguration policy.
     Reconfigure,
     /// Tenant lifecycle transition: apply the churn-schedule entry at

@@ -28,6 +28,7 @@
 use std::collections::BinaryHeap;
 
 use crate::analytic::{Config, Tenant, TenantHandle};
+use crate::fault::{FaultPlan, RETRY_BACKOFF_S, RETRY_BUDGET};
 use crate::metrics::{LatencyHistogram, PerClassLatency, TimeSeries, Welford};
 use crate::sched::{
     DisciplineKind, JobMeta, Offer, OverloadPolicy, RejectReason, SchedQueue, SloClass,
@@ -66,6 +67,11 @@ pub struct SimOptions {
     /// one station set per device and tags every queued job's
     /// [`JobMeta::device`] with it.
     pub device: usize,
+    /// Injected fault schedule for this device (`None` = fault-free).
+    /// Crash windows pause the TPU station (queued work stays queued),
+    /// transient windows replay the live worker's bounded retry loop in
+    /// virtual time, and slowdown windows stretch TPU service.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for SimOptions {
@@ -79,6 +85,7 @@ impl Default for SimOptions {
             capacity: None,
             overload: OverloadPolicy::Block,
             device: 0,
+            faults: None,
         }
     }
 }
@@ -169,6 +176,14 @@ pub struct SimResult {
     /// bounded by `capacity` under `Reject`, divergent under `Block` at
     /// ρ ≥ 1.
     pub max_tpu_occupancy: usize,
+    /// TPU execution attempts (retries included) — mirrors the live
+    /// `ServeStats::attempted`.
+    pub attempted: u64,
+    /// Re-executions after an injected transient fault.
+    pub retried: u64,
+    /// Requests that exhausted the retry budget (or had their backoff
+    /// clipped by the deadline) and failed terminally.
+    pub failed: u64,
 }
 
 impl SimResult {
@@ -233,6 +248,16 @@ pub struct Simulator {
     /// hot path never allocates them).
     cpu_stations: Vec<String>,
     heap: BinaryHeap<Event>,
+    /// True while the injected fault plan has this device crashed — the
+    /// TPU station stops starting service (queued work stays queued).
+    down: bool,
+    /// Monotone attempt counter feeding the plan's deterministic
+    /// transient sampling (one consumed per execution attempt, exactly
+    /// like the live injector's sequence numbers).
+    fault_seq: u64,
+    attempted: u64,
+    retried: u64,
+    failed: u64,
     // stats
     stats: Vec<ModelStats>,
     retired: Vec<ModelStats>,
@@ -282,6 +307,11 @@ impl Simulator {
                 .map(|i| format!("cpu {}", TenantHandle(i as u64)))
                 .collect(),
             heap: BinaryHeap::new(),
+            down: false,
+            fault_seq: 0,
+            attempted: 0,
+            retried: 0,
+            failed: 0,
             stats: tenants
                 .iter()
                 .enumerate()
@@ -430,7 +460,7 @@ impl Simulator {
     }
 
     fn start_tpu_if_idle(&mut self, now: f64) {
-        if self.tpu_busy {
+        if self.tpu_busy || self.down {
             return;
         }
         // Before each service start, DeadlineDrop evicts jobs that can
@@ -462,6 +492,50 @@ impl Simulator {
         let mut service = memo.tpu_service;
         if !hit {
             service += memo.load_time;
+        }
+        // Injected fault envelope: slowdown windows stretch the service,
+        // and the live worker's inline retry loop — an injected failed
+        // attempt costs its backoff (not an execution) while holding the
+        // station, bounded by the budget and clipped by the deadline —
+        // is replayed in virtual time.
+        if let Some(plan) = self.opts.faults.clone() {
+            service *= plan.slow_factor(self.opts.device, now);
+            let mut attempts: u32 = 0;
+            let mut backoffs = 0.0;
+            let exhausted = loop {
+                attempts += 1;
+                self.attempted += 1;
+                let seq = self.fault_seq;
+                self.fault_seq += 1;
+                if !plan.transient_fails(self.opts.device, now, seq) {
+                    break false;
+                }
+                if attempts >= RETRY_BUDGET {
+                    break true;
+                }
+                let backoff = RETRY_BACKOFF_S * f64::from(1u32 << (attempts - 1));
+                let hopeless = match req.deadline {
+                    Some(d) => now + backoffs + backoff >= d,
+                    None => false,
+                };
+                if hopeless {
+                    break true;
+                }
+                self.retried += 1;
+                self.class_latency.record_retried(req.class);
+                backoffs += backoff;
+            };
+            if exhausted {
+                self.tpu_busy = true;
+                self.tpu_busy_until = now + backoffs;
+                self.tpu_busy_time += backoffs;
+                self.heap
+                    .push(Event::at(now + backoffs, EventKind::TpuFault { req }));
+                return;
+            }
+            service += backoffs;
+        } else {
+            self.attempted += 1;
         }
         self.tpu_busy = true;
         self.tpu_busy_until = now + service;
@@ -661,6 +735,20 @@ impl Simulator {
             churn.into_iter().map(|e| Some(e.kind)).collect();
         let mut churn_log: Vec<(f64, String)> = Vec::new();
 
+        // Crash/recovery boundaries from the fault plan become station
+        // pause/resume events (transient and slowdown windows are read
+        // inline at service start).
+        if let Some(plan) = self.opts.faults.clone() {
+            for (t, down) in plan.transitions(self.opts.device) {
+                let kind = if down {
+                    EventKind::DeviceDown
+                } else {
+                    EventKind::DeviceUp
+                };
+                self.heap.push(Event::at(t, kind));
+            }
+        }
+
         if let Some(p) = policy.as_deref_mut() {
             if let Some(first) = p.period() {
                 self.heap
@@ -784,6 +872,24 @@ impl Simulator {
                     }
                     self.start_tpu_if_idle(now);
                 }
+                EventKind::TpuFault { req } => {
+                    self.tpu_busy = false;
+                    self.failed += 1;
+                    if self.index_of(req.tenant).is_none() {
+                        self.dropped += 1;
+                    }
+                    self.start_tpu_if_idle(now);
+                }
+                EventKind::DeviceDown => {
+                    // In-service work finishes (mirrors the live worker,
+                    // which checks the plan before popping, not mid-run);
+                    // nothing new starts until recovery.
+                    self.down = true;
+                }
+                EventKind::DeviceUp => {
+                    self.down = false;
+                    self.start_tpu_if_idle(now);
+                }
                 EventKind::CpuEnqueue { req } => {
                     self.enqueue_cpu(req, now, false);
                 }
@@ -856,6 +962,9 @@ impl Simulator {
             reconfigs,
             per_class: self.class_latency.clone(),
             max_tpu_occupancy: self.max_tpu_occupancy,
+            attempted: self.attempted,
+            retried: self.retried,
+            failed: self.failed,
         }
     }
 }
@@ -1251,6 +1360,102 @@ mod tests {
         assert!(res.dropped > 500, "dropped={}", res.dropped);
         // Totals stay consistent: stay's completions keep accruing.
         assert!(res.per_model[0].completed > 500);
+    }
+
+    #[test]
+    fn crash_without_recovery_starves_the_tpu_station() {
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let baseline = simulate(&cost, &tenants, &cfg, opts(400.0, 53));
+        let mut o = opts(400.0, 53);
+        o.faults = Some(FaultPlan::new(9).crash(0, 100.0, None));
+        let crashed = simulate(&cost, &tenants, &cfg, o);
+        // Only pre-crash arrivals complete; the rest stay queued forever.
+        assert!(crashed.per_model[0].completed > 0);
+        assert!(
+            crashed.per_model[0].completed < baseline.per_model[0].completed / 2,
+            "crash at 25% of the horizon should lose most completions: {} vs {}",
+            crashed.per_model[0].completed,
+            baseline.per_model[0].completed
+        );
+        assert!(crashed.tpu_utilization < baseline.tpu_utilization);
+
+        // With recovery the station drains its backlog: completions come
+        // back (the queue is unbounded under Block) at higher latency.
+        let mut o = opts(400.0, 53);
+        o.faults = Some(FaultPlan::new(9).crash(0, 100.0, Some(120.0)));
+        let recovered = simulate(&cost, &tenants, &cfg, o);
+        assert!(recovered.per_model[0].completed > crashed.per_model[0].completed);
+        assert!(recovered.mean_latency > baseline.mean_latency);
+    }
+
+    #[test]
+    fn transient_window_drives_retries_and_terminal_failures() {
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let mut o = opts(600.0, 59);
+        o.faults = Some(FaultPlan::new(11).transient(0, 0.0, 600.0, 0.3));
+        let res = simulate(&cost, &tenants, &cfg, o);
+        // 30% per-attempt failure: plenty of retries, and ~prob^3 of
+        // requests exhaust the budget.
+        assert!(res.retried > 0, "no retries under a 30% transient window");
+        assert!(res.failed > 0, "no budget exhaustion under 30%^3");
+        assert!(res.attempted > res.per_model[0].completed + res.retried / 2);
+        assert_eq!(res.per_class.retried_total(), res.retried);
+        assert!(res.per_model[0].completed > 0);
+
+        // Fault-free runs still count attempts, one per execution.
+        let clean = simulate(&cost, &tenants, &cfg, opts(600.0, 59));
+        assert_eq!(clean.retried, 0);
+        assert_eq!(clean.failed, 0);
+        assert!(clean.attempted >= clean.per_model[0].completed);
+    }
+
+    #[test]
+    fn slowdown_window_stretches_service_times() {
+        let (cost, tenants) = setup(2.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let baseline = simulate(&cost, &tenants, &cfg, opts(400.0, 61));
+        let mut o = opts(400.0, 61);
+        o.faults = Some(FaultPlan::new(13).slow_down(0, 0.0, 400.0, 2.0));
+        let slowed = simulate(&cost, &tenants, &cfg, o);
+        assert!(slowed.mean_latency > baseline.mean_latency);
+        assert!(slowed.tpu_utilization > baseline.tpu_utilization * 1.5);
+    }
+
+    #[test]
+    fn faulted_runs_are_deterministic_given_seed() {
+        let (cost, tenants) = setup(3.0);
+        let cfg = Config {
+            partitions: vec![6],
+            cores: vec![0],
+        };
+        let run = || {
+            let mut o = opts(300.0, 67);
+            o.faults = Some(
+                FaultPlan::new(17)
+                    .crash(0, 100.0, Some(120.0))
+                    .transient(0, 150.0, 250.0, 0.2)
+                    .slow_down(0, 50.0, 80.0, 1.5),
+            );
+            simulate(&cost, &tenants, &cfg, o)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.mean_latency, b.mean_latency);
+        assert_eq!(a.per_model[0].completed, b.per_model[0].completed);
+        assert_eq!(a.attempted, b.attempted);
+        assert_eq!(a.retried, b.retried);
+        assert_eq!(a.failed, b.failed);
     }
 
     #[test]

@@ -355,10 +355,17 @@ impl ReconfigPolicy for SwapLessPolicy {
 /// Greedily map the target's device groups onto current device labels by
 /// descending member overlap — valid only when devices are identical
 /// (relabeling is cost-free), which `Fleet::uniform` guarantees.
+///
+/// `current` labels at or beyond `devices` (stale assignments surviving a
+/// fleet shrink, e.g. after a crashed device was dropped from the
+/// registry) contribute no overlap — those tenants migrate wherever the
+/// planner put them instead of indexing out of bounds.
 fn relabel_to_minimize_moves(target: &mut [usize], current: &[usize], devices: usize) {
     let mut overlap = vec![vec![0usize; devices]; devices];
     for (i, &pd) in target.iter().enumerate() {
-        overlap[pd][current[i]] += 1;
+        if current[i] < devices {
+            overlap[pd][current[i]] += 1;
+        }
     }
     let mut used = vec![false; devices];
     let mut map = vec![usize::MAX; devices];
@@ -596,6 +603,53 @@ mod tests {
         let mut stat = StaticPolicy;
         let four = crate::fleet::Fleet::uniform(4, &HardwareSpec::default());
         assert_eq!(stat.decide_placement(1.0, &tenants, &four, &[0, 0]), None);
+    }
+
+    #[test]
+    fn relabel_ignores_stale_out_of_range_labels() {
+        // Labels from a 4-device fleet, plan computed on 2 survivors:
+        // out-of-range current labels contribute no overlap (no OOB
+        // panic), and in-range overlap still anchors its group.
+        let mut target = vec![0, 0, 1, 1];
+        let current = vec![3, 2, 0, 0];
+        relabel_to_minimize_moves(&mut target, &current, 2);
+        assert!(target.iter().all(|&d| d < 2), "{target:?}");
+        // The {2,3} group sits on current device 0 — it keeps label 0,
+        // so those two tenants do not move.
+        assert_eq!(&target[2..], &[0, 0]);
+        assert_eq!(&target[..2], &[1, 1]);
+    }
+
+    #[test]
+    fn decide_placement_survives_a_shrunken_fleet() {
+        // A crash dropped the registry from 4 devices to 2 while the
+        // tenants still carry their old device labels: decide_placement
+        // must re-place them onto the survivors, not panic.
+        let cost = CostModel::new(HardwareSpec::default());
+        let am = AnalyticModel::new(cost);
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("a", 6, 2_000_000, 800_000_000),
+                rate: 0.0,
+            },
+            Tenant {
+                model: synthetic_model("b", 6, 2_000_000, 800_000_000),
+                rate: 0.0,
+            },
+        ];
+        let mut pol = SwapLessPolicy::new(am, 4, 2, 10.0, 5.0, 0.05);
+        let mut t = 0.0;
+        while t < 10.0 {
+            pol.observe_arrival(t, 0);
+            pol.observe_arrival(t + 0.1, 1);
+            t += 0.5;
+        }
+        let fleet = crate::fleet::Fleet::uniform(2, &HardwareSpec::default());
+        let target = pol
+            .decide_placement(10.0, &tenants, &fleet, &[2, 3])
+            .expect("stale labels always differ from any in-range plan");
+        assert!(target.iter().all(|&d| d < 2), "{target:?}");
+        assert_ne!(target[0], target[1], "conflicting tenants not split");
     }
 
     #[test]

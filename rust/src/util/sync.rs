@@ -1,0 +1,71 @@
+//! Poison-tolerant locking.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking worker into a cascade:
+//! every later lock attempt on the poisoned mutex panics too, so a single
+//! bug inside a lock-holding thread aborts the whole server. Nothing this
+//! crate guards with a mutex has invariants that a panic can half-apply
+//! in a dangerous way (counters, queues of self-contained jobs, config
+//! snapshots swapped atomically), so the right recovery is to take the
+//! inner data and keep serving ([`std::sync::PoisonError::into_inner`]).
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock `m`, recovering the inner data if a previous holder panicked.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait` that recovers a poisoned guard instead of panicking.
+pub fn wait_or_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout` that recovers a poisoned guard; the timeout
+/// flag is dropped (callers here re-check their predicate regardless).
+pub fn wait_timeout_or_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_after_a_panicking_holder() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        // lock_or_recover still yields the data; writes keep working.
+        *lock_or_recover(&m) += 1;
+        assert_eq!(*lock_or_recover(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_recovers_and_returns() {
+        let m = Arc::new(Mutex::new(0usize));
+        let cv = Condvar::new();
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        let g = lock_or_recover(&m);
+        let g = wait_timeout_or_recover(&cv, g, Duration::from_millis(1));
+        assert_eq!(*g, 0);
+    }
+}

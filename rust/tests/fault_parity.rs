@@ -1,0 +1,214 @@
+//! Sim-vs-live FAULT parity: under the same crash schedule (one device
+//! crashes, no recovery) the multi-device DES failover path
+//! ([`run_fleet_failover`]) and the live fleet failover path
+//! ([`FleetServer::poll_health`] + forced failover) must agree on the
+//! per-tenant completed and failed-over counts.
+//!
+//! Construction: batch 1 is offered and fully completed while every
+//! device is up, then the home of tenant 0 crashes, then batch 2 is
+//! offered — so on both paths every tenant completes exactly
+//! `BATCH1 + BATCH2` requests, and tenants homed on the crashed device
+//! fail over exactly `BATCH2` of them. The DES replays the schedule in
+//! virtual time (crash at t = 50 s between the batches); the live side
+//! runs the same one-crash schedule against its wall clock, with a
+//! heartbeat thread driving `poll_health` the way the serve driver does.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use swapless::analytic::Tenant;
+use swapless::config::HardwareSpec;
+use swapless::coordinator::AttachOptions;
+use swapless::fault::FaultPlan;
+use swapless::fleet::{place, run_fleet_failover, Fleet, FleetServerBuilder};
+use swapless::model::Manifest;
+use swapless::runtime::service::ExecBackend;
+use swapless::sched::SloClass;
+use swapless::sim::SimOptions;
+use swapless::workload::Arrival;
+
+const MODELS: [&str; 3] = ["mobilenetv2", "squeezenet", "inceptionv4"];
+const RATES: [f64; 3] = [3.0, 2.0, 1.0];
+const BATCH1: usize = 12;
+const BATCH2: usize = 12;
+
+fn tenants() -> Vec<Tenant> {
+    let manifest = Manifest::synthetic();
+    MODELS
+        .iter()
+        .zip(&RATES)
+        .map(|(n, r)| Tenant {
+            model: manifest.get(n).unwrap().clone(),
+            rate: *r,
+        })
+        .collect()
+}
+
+/// Round-robin deterministic arrivals: `per_tenant` requests per tenant
+/// starting at `start`, 50 ms apart, time-sorted.
+fn batch(start: f64, per_tenant: usize) -> Vec<Arrival> {
+    let mut out = Vec::new();
+    for i in 0..per_tenant {
+        for m in 0..MODELS.len() {
+            out.push(Arrival {
+                time: start + 0.05 * (MODELS.len() * i + m) as f64,
+                model: m,
+                class: SloClass::Standard,
+                deadline: None,
+            });
+        }
+    }
+    out
+}
+
+#[test]
+fn fault_sim_vs_live_failover_count_parity() {
+    let ts = tenants();
+    let fleet = Fleet::uniform(2, &HardwareSpec::default());
+    let plan = place(&fleet, &ts);
+    assert!(plan.devices.iter().all(|d| !d.tenants.is_empty()));
+    let dead = plan.assignment[0];
+    let survivor = 1 - dead;
+
+    // --- DES side: crash between the batches in virtual time ---------
+    let mut arrivals = batch(0.0, BATCH1);
+    arrivals.extend(batch(60.0, BATCH2));
+    let mut opts = SimOptions {
+        horizon: 1000.0,
+        warmup: 0.0,
+        seed: 1,
+        ..SimOptions::default()
+    };
+    opts.faults = Some(FaultPlan::new(7).crash(dead, 50.0, None));
+    let res = run_fleet_failover(&fleet, &ts, &plan, &arrivals, &opts);
+    assert_eq!(res.shed, 0);
+    for i in 0..MODELS.len() {
+        assert_eq!(
+            res.tenant_completed(i),
+            (BATCH1 + BATCH2) as u64,
+            "DES lost requests of tenant {i}"
+        );
+        let expect_fo = if plan.assignment[i] == dead {
+            BATCH2 as u64
+        } else {
+            0
+        };
+        assert_eq!(
+            res.tenant_failed_over(i),
+            expect_fo,
+            "DES failed-over count of tenant {i}"
+        );
+    }
+
+    // --- live side: same schedule against the wall clock -------------
+    let fs = FleetServerBuilder::new(&Manifest::synthetic(), Fleet::uniform(2, &HardwareSpec::default()))
+        .backend(ExecBackend::Emulated)
+        .adaptive(false)
+        .faults(FaultPlan::new(7).crash(dead, 1.5, None))
+        .build()
+        .unwrap();
+    let fs = Arc::new(fs);
+    // Heartbeat: the same caller-driven health poll the serve driver
+    // runs — makes the test immune to the crash racing batch 1 (queued
+    // work on the crashed device is requeued, never stranded).
+    let stop = Arc::new(AtomicBool::new(false));
+    let poller = {
+        let fs = Arc::clone(&fs);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                fs.poll_health();
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        })
+    };
+
+    let mut handle_of = vec![None; MODELS.len()];
+    for dp in &plan.devices {
+        for &g in &dp.tenants {
+            let h = fs
+                .attach_on(
+                    MODELS[g],
+                    AttachOptions {
+                        rate_hint: RATES[g],
+                        class: SloClass::Standard,
+                    },
+                    dp.device,
+                )
+                .unwrap();
+            handle_of[g] = Some(h);
+        }
+        fs.set_device_config(dp.device, dp.config.clone()).unwrap();
+    }
+    let inputs: Vec<usize> = ts
+        .iter()
+        .map(|t| t.model.input_shape.iter().product())
+        .collect();
+
+    // Batch 1: everything up (emulated at time_scale 0 completes in
+    // milliseconds, far inside the 1.5 s pre-crash window).
+    let mut live_completed = vec![0u64; MODELS.len()];
+    let mut pending = Vec::new();
+    for _ in 0..BATCH1 {
+        for (m, h) in handle_of.iter().enumerate() {
+            pending.push((m, fs.submit(h.unwrap(), vec![0.5f32; inputs[m]])));
+        }
+    }
+    for (m, ticket) in pending {
+        ticket.wait().unwrap_or_else(|e| panic!("batch1 tenant {m}: {e}"));
+        live_completed[m] += 1;
+    }
+
+    // Wait for the injected crash and the heartbeat's forced failover:
+    // every tenant homed on the dead device lands on the survivor.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let all_moved = (0..MODELS.len()).all(|i| {
+            plan.assignment[i] != dead
+                || fs.device_of(handle_of[i].unwrap()) == Some(survivor)
+        });
+        if fs.health()[dead].is_down() && all_moved {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "failover never observed: health={:?}",
+            fs.health()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Batch 2: offered against the degraded fleet.
+    let mut pending = Vec::new();
+    for _ in 0..BATCH2 {
+        for (m, h) in handle_of.iter().enumerate() {
+            pending.push((m, fs.submit(h.unwrap(), vec![0.5f32; inputs[m]])));
+        }
+    }
+    for (m, ticket) in pending {
+        ticket.wait().unwrap_or_else(|e| panic!("batch2 tenant {m}: {e}"));
+        live_completed[m] += 1;
+    }
+    stop.store(true, Ordering::Relaxed);
+    poller.join().unwrap();
+
+    // --- parity -------------------------------------------------------
+    let stats = fs.stats();
+    assert_eq!(stats.failovers, 1, "exactly one forced failover");
+    assert_eq!(stats.shed_tenants, 0);
+    for i in 0..MODELS.len() {
+        assert_eq!(
+            live_completed[i],
+            res.tenant_completed(i),
+            "completed parity broke for tenant {i}"
+        );
+        assert_eq!(
+            fs.failed_over_of(handle_of[i].unwrap()),
+            res.tenant_failed_over(i),
+            "failed-over parity broke for tenant {i}"
+        );
+    }
+    let live_total: u64 = live_completed.iter().sum();
+    assert_eq!(live_total, res.completed);
+}

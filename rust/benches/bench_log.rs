@@ -1,0 +1,137 @@
+//! Event-log overhead bench + CI guards. Two claims back the "off the
+//! hot path" design (README §Event log & audit):
+//!
+//! 1. appending is cheap: the emit side sustains >= 1M records/s
+//!    end-to-end (encode + bounded channel + writer thread + fsync on
+//!    close), i.e. well above any serve rate the coordinator reaches;
+//! 2. logging is free at serve granularity: a logged closed-loop run
+//!    on the emulated backend stays within 5% of an unlogged one.
+
+use std::time::Instant;
+
+use swapless::config::HardwareSpec;
+use swapless::coordinator::{AttachOptions, ServerBuilder};
+use swapless::eventlog::{Event, EventKind, EventLog};
+use swapless::model::Manifest;
+use swapless::runtime::service::ExecBackend;
+use swapless::sched::SloClass;
+use swapless::tpu::CostModel;
+use swapless::util::bench::{bench, print_header, print_row};
+
+const BURST: u64 = 1_000_000;
+const REQS: usize = 2_000;
+const ROUNDS: usize = 5;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("swapless-bench-{name}-{}.log", std::process::id()))
+}
+
+/// One closed-loop serve round; returns requests/second.
+fn serve_round(log: Option<&EventLog>) -> f64 {
+    let mut b = ServerBuilder::new(
+        &Manifest::synthetic(),
+        CostModel::new(HardwareSpec::default()),
+    )
+    .backend(ExecBackend::Emulated)
+    .adaptive(false);
+    if let Some(l) = log {
+        b = b.log(l.clone());
+    }
+    let server = b.build().unwrap();
+    let h = server.attach("mobilenetv2", AttachOptions::default()).unwrap();
+    let n: usize = server.model_meta(h).unwrap().input_shape.iter().product();
+    let input = vec![0.5f32; n];
+    for _ in 0..50 {
+        server.submit(h, input.clone()).wait().unwrap();
+    }
+    let t0 = Instant::now();
+    for _ in 0..REQS {
+        server.submit(h, input.clone()).wait().unwrap();
+    }
+    REQS as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    print_header("event log append path");
+
+    // Per-record emit cost on the caller's thread (the hot-path side).
+    let path = tmp("emit");
+    let log = EventLog::create(&path).unwrap();
+    let mut i = 0u64;
+    let s = bench("emit (encode + channel send)", 20, 400, || {
+        i += 1;
+        let ev = Event::new(EventKind::Complete, i as f64 * 1e-6, 0, i % 8, SloClass::Standard);
+        log.emit(ev);
+    });
+    print_row(&s);
+    log.close();
+    let _ = std::fs::remove_file(&path);
+    assert!(
+        s.mean_ns < 1_000.0,
+        "emit hot-path regressed: {:.0} ns/record (need < 1 us for 1M/s)",
+        s.mean_ns
+    );
+
+    // End-to-end burst: emit BURST records, close (drain + fsync).
+    let path = tmp("burst");
+    let log = EventLog::create(&path).unwrap();
+    let t0 = Instant::now();
+    for i in 0..BURST {
+        let mut ev = Event::new(
+            EventKind::Admit,
+            i as f64 * 1e-6,
+            (i % 4) as usize,
+            i % 16,
+            SloClass::Interactive,
+        );
+        ev.entry = true;
+        log.emit(ev);
+    }
+    log.close();
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = BURST as f64 / dt;
+    println!(
+        "burst: {BURST} records in {:.3} s = {:.2} M records/s (appended {}, dropped {})",
+        dt,
+        rate / 1e6,
+        log.appended(),
+        log.dropped()
+    );
+    let _ = std::fs::remove_file(&path);
+    assert!(
+        rate >= 1e6,
+        "append throughput regressed: {:.2} M records/s < 1 M records/s",
+        rate / 1e6
+    );
+
+    // Serve-path guard: best-of-N alternating logged/unlogged rounds.
+    print_header("logged vs unlogged closed-loop serve (emulated)");
+    let path = tmp("serve");
+    let (mut best_plain, mut best_logged) = (0f64, 0f64);
+    for round in 0..ROUNDS {
+        let plain = serve_round(None);
+        let log = EventLog::create(&path).unwrap();
+        let logged = serve_round(Some(&log));
+        println!(
+            "round {round}: unlogged {:.0} req/s, logged {:.0} req/s ({} records)",
+            plain,
+            logged,
+            log.appended()
+        );
+        best_plain = best_plain.max(plain);
+        best_logged = best_logged.max(logged);
+    }
+    let _ = std::fs::remove_file(&path);
+    println!(
+        "best: unlogged {:.0} req/s, logged {:.0} req/s ({:+.1}%)",
+        best_plain,
+        best_logged,
+        (best_logged / best_plain - 1.0) * 100.0
+    );
+    assert!(
+        best_logged >= best_plain / 1.05,
+        "logging costs more than 5% serve throughput: {:.0} vs {:.0} req/s",
+        best_logged,
+        best_plain
+    );
+}

@@ -30,6 +30,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::analytic::TenantHandle;
+use crate::eventlog::{Event as LogEvent, EventKind as LogKind, EventLog};
 use crate::model::ModelMeta;
 use crate::sched::{
     DisciplineKind, JobMeta, Offer, OverloadPolicy, RejectReason, SchedQueue, StationLoad,
@@ -66,6 +67,10 @@ struct PoolShared {
     /// Station label for typed rejections (computed once per pool — the
     /// submit hot path never allocates it).
     station: String,
+    /// Event log shared with the server (service-start records).
+    log: Option<EventLog>,
+    /// Fleet device index stamped on emitted records.
+    device: usize,
 }
 
 struct PoolEntry {
@@ -82,6 +87,10 @@ pub struct CpuPools {
     capacity: Option<usize>,
     policy: OverloadPolicy,
     started: Instant,
+    /// Event log shared with the server (`None` = logging off).
+    log: Option<EventLog>,
+    /// Fleet device index stamped on emitted records.
+    device: usize,
     exec: Arc<ExecFn>,
     pools: Mutex<HashMap<TenantHandle, PoolEntry>>,
     /// Worker threads of removed pools, joined on drop.
@@ -93,13 +102,18 @@ impl CpuPools {
     /// executor-service thread); `k_max` workers are spawned per attached
     /// tenant, each pool's queue ordered by `discipline` and admission
     /// bounded by `capacity`/`policy`. `started` is the clock origin that
-    /// absolute job deadlines are measured against (the server's).
+    /// absolute job deadlines are measured against (the server's);
+    /// `log`/`device` mirror the server's event-log attachment (workers
+    /// emit service-start records).
+    #[allow(clippy::too_many_arguments)]
     pub fn new<F>(
         k_max: usize,
         discipline: DisciplineKind,
         capacity: Option<usize>,
         policy: OverloadPolicy,
         started: Instant,
+        log: Option<EventLog>,
+        device: usize,
         exec: F,
     ) -> CpuPools
     where
@@ -111,6 +125,8 @@ impl CpuPools {
             capacity,
             policy,
             started,
+            log,
+            device,
             exec: Arc::new(exec),
             pools: Mutex::new(HashMap::new()),
             retired: Mutex::new(Vec::new()),
@@ -128,6 +144,8 @@ impl CpuPools {
             started: self.started,
             policy: self.policy,
             station: format!("cpu {h}"),
+            log: self.log.clone(),
+            device: self.device,
         });
         let mut workers = Vec::new();
         for w in 0..self.k_max.max(1) {
@@ -306,7 +324,7 @@ fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
                 let allowed = s.allowed.load(Ordering::SeqCst).max(usize::from(!q.is_empty()));
                 if !q.is_empty() && s.active.load(Ordering::SeqCst) < allowed {
                     s.active.fetch_add(1, Ordering::SeqCst);
-                    break (Some(q.pop().unwrap().1), expired_jobs);
+                    break (q.pop(), expired_jobs);
                 }
                 if !expired_jobs.is_empty() {
                     break (None, expired_jobs);
@@ -323,7 +341,7 @@ fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
                 }));
             }
         }
-        let Some(job) = job else { continue };
+        let Some((jmeta, job)) = job else { continue };
         let CpuJob {
             meta,
             p,
@@ -334,6 +352,16 @@ fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
         if cancel.is_cancelled() {
             done(Err(RequestError::Cancelled));
         } else {
+            if let Some(log) = &s.log {
+                let now = s.started.elapsed().as_secs_f64();
+                log.emit(LogEvent::new(
+                    LogKind::Start,
+                    now,
+                    s.device,
+                    jmeta.tenant.0,
+                    jmeta.class,
+                ));
+            }
             let result = exec(&meta, p, input)
                 .map_err(|e| RequestError::Execution(e.to_string()));
             done(result);
@@ -400,6 +428,8 @@ mod tests {
             None,
             OverloadPolicy::Block,
             Instant::now(),
+            None,
+            0,
             |_meta, _p, input| Ok(input),
         );
         for h in handles {
@@ -454,6 +484,8 @@ mod tests {
             None,
             OverloadPolicy::Block,
             Instant::now(),
+            None,
+            0,
             |_meta, _p, input| {
                 let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
                 PEAK.fetch_max(c, Ordering::SeqCst);
@@ -525,6 +557,8 @@ mod tests {
             Some(2),
             OverloadPolicy::Reject,
             Instant::now(),
+            None,
+            0,
             move |_meta, _p, input| {
                 while !g.load(Ordering::SeqCst) {
                     std::thread::sleep(Duration::from_millis(1));
@@ -587,6 +621,8 @@ mod tests {
             None,
             OverloadPolicy::Block,
             Instant::now(),
+            None,
+            0,
             move |_meta, _p, input| {
                 ran2.fetch_add(1, Ordering::SeqCst);
                 while !g.load(Ordering::SeqCst) {
@@ -652,6 +688,8 @@ mod tests {
             None,
             OverloadPolicy::Block,
             Instant::now(),
+            None,
+            0,
             move |_meta, _p, input| {
                 if input[0] < 0.0 {
                     s.store(true, Ordering::SeqCst);
@@ -704,6 +742,8 @@ mod tests {
             None,
             OverloadPolicy::Block,
             Instant::now(),
+            None,
+            0,
             |_meta, _p, input| {
                 std::thread::sleep(Duration::from_millis(5));
                 Ok(input)

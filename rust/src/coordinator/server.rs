@@ -54,6 +54,7 @@ use anyhow::Result;
 use crate::alloc::{self, AdmissionError};
 use crate::analytic::{AnalyticModel, Config, Tenant, TenantHandle};
 use crate::config::RuntimeConfig;
+use crate::eventlog::{Event as LogEvent, EventKind as LogKind, EventLog};
 use crate::fault::{FaultInjector, FaultPlan, Health, RETRY_BACKOFF_S, RETRY_BUDGET};
 use crate::metrics::{LatencyHistogram, PerClassLatency};
 use crate::model::{Manifest, ModelMeta};
@@ -107,6 +108,14 @@ pub struct ServerOptions {
     /// passes one shared origin to every member so a single plan replays
     /// consistently across the fleet; `None` = this server's start.
     pub fault_origin: Option<Instant>,
+    /// Append every request-lifecycle transition to this event log
+    /// (admit/reject/shed/expire/start/complete/cancel). Emission is
+    /// off the hot path — see [`crate::eventlog`].
+    pub log: Option<EventLog>,
+    /// Whether this server closes the log on drop (fsync + torn-tail
+    /// truncate). True standalone; the fleet router sets it false on its
+    /// members and closes the shared log itself.
+    pub log_owned: bool,
 }
 
 impl Default for ServerOptions {
@@ -123,6 +132,8 @@ impl Default for ServerOptions {
             device: 0,
             faults: None,
             fault_origin: None,
+            log: None,
+            log_owned: true,
         }
     }
 }
@@ -209,6 +220,14 @@ impl ServerBuilder {
     /// fleet's members so one plan replays consistently fleet-wide).
     pub fn fault_origin(mut self, origin: Instant) -> Self {
         self.opts.fault_origin = Some(origin);
+        self
+    }
+
+    /// Append every request-lifecycle transition to `log` (off the hot
+    /// path; the log is closed — fsynced, torn tail truncated — when the
+    /// server drops).
+    pub fn log(mut self, log: EventLog) -> Self {
+        self.opts.log = Some(log);
         self
     }
 
@@ -535,6 +554,11 @@ struct Shared {
     expired: AtomicU64,
     cancelled: AtomicU64,
     started: Instant,
+    /// Event log shared with every counting path (lock-free emission;
+    /// `None` = logging off).
+    log: Option<EventLog>,
+    /// Fleet device index stamped on every emitted record.
+    device: usize,
 }
 
 /// How a request left the system (everything but completion/failure);
@@ -549,9 +573,36 @@ enum Outcome {
 }
 
 /// Count `outcome` against the tenant's row (live or retired), the
-/// per-class counters, and the global counters. Lock order: state, then
+/// per-class counters, and the global counters, and append the matching
+/// record to the event log (if one is attached). `entry` marks the
+/// request's entry event (admit, or a refusal at the entry station) —
+/// what `trace::load_log` reconstructs arrivals from; `deadline` is the
+/// absolute deadline the record carries. Lock order: state, then
 /// retired, then class_hists — each taken and released in turn.
-fn count(shared: &Shared, handle: TenantHandle, class: SloClass, outcome: Outcome) {
+fn count(
+    shared: &Shared,
+    handle: TenantHandle,
+    class: SloClass,
+    outcome: Outcome,
+    entry: bool,
+    deadline: Option<f64>,
+) {
+    if let Some(log) = &shared.log {
+        let kind = match outcome {
+            Outcome::Accept => LogKind::Admit,
+            Outcome::Reject => LogKind::Reject,
+            Outcome::Shed => LogKind::Shed,
+            Outcome::Expired => LogKind::Expire,
+            Outcome::Cancelled => LogKind::Cancel,
+        };
+        let t = shared.started.elapsed().as_secs_f64();
+        let mut ev = LogEvent::new(kind, t, shared.device, handle.0, class);
+        ev.entry = entry;
+        if let Some(d) = deadline {
+            ev.value = d;
+        }
+        log.emit(ev);
+    }
     let counted_live = {
         let mut st = lock_or_recover(&shared.state);
         if let Some(e) = st.entries.iter_mut().find(|e| e.handle == handle) {
@@ -617,6 +668,9 @@ pub struct Server {
     overload: OverloadPolicy,
     device: usize,
     injector: Option<FaultInjector>,
+    /// Close the event log on drop (standalone servers own their log;
+    /// fleet members share the router's and leave closing to it).
+    log_owned: bool,
     next_handle: AtomicU64,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
@@ -673,6 +727,8 @@ impl Server {
             expired: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             started,
+            log: opts.log.clone(),
+            device: opts.device,
         });
 
         // CPU pools execute suffixes through the executor thread; their
@@ -688,6 +744,8 @@ impl Server {
             opts.queue_capacity,
             opts.overload,
             started,
+            opts.log.clone(),
+            opts.device,
             move |meta, p, input| {
                 let t0 = Instant::now();
                 let out = h.execute_range(&meta.name, p, meta.partition_points, input)?;
@@ -768,6 +826,7 @@ impl Server {
             overload: opts.overload,
             device: opts.device,
             injector,
+            log_owned: opts.log_owned,
             next_handle: AtomicU64::new(0),
             threads,
             stop,
@@ -1034,7 +1093,7 @@ impl Server {
             };
             match outcome {
                 Offer::Admitted { shed, expired } => {
-                    count(&self.shared, handle, class, Outcome::Accept);
+                    count(&self.shared, handle, class, Outcome::Accept, true, deadline);
                     self.tpu.cv.notify_one();
                     self.resolve_tpu_evictions(now, shed, expired);
                 }
@@ -1047,11 +1106,11 @@ impl Server {
                     self.resolve_tpu_evictions(now, Vec::new(), expired);
                     match reason {
                         RejectReason::Overloaded(o) => {
-                            count(&self.shared, handle, class, Outcome::Reject);
+                            count(&self.shared, handle, class, Outcome::Reject, true, deadline);
                             let _ = job.done.send(Err(RequestError::Overloaded(o)));
                         }
                         RejectReason::Expired => {
-                            count(&self.shared, handle, class, Outcome::Expired);
+                            count(&self.shared, handle, class, Outcome::Expired, true, deadline);
                             let _ = job.done.send(Err(RequestError::DeadlineExceeded {
                                 deadline_s: m.deadline.unwrap_or(now),
                                 now_s: now,
@@ -1089,13 +1148,13 @@ impl Server {
         expired: Vec<(JobMeta, TpuJob)>,
     ) {
         for (m, j) in shed {
-            count(&self.shared, m.tenant, m.class, Outcome::Shed);
+            count(&self.shared, m.tenant, m.class, Outcome::Shed, false, m.deadline);
             let _ = j.done.send(Err(RequestError::Shed {
                 station: "tpu".to_string(),
             }));
         }
         for (m, j) in expired {
-            count(&self.shared, m.tenant, m.class, Outcome::Expired);
+            count(&self.shared, m.tenant, m.class, Outcome::Expired, false, m.deadline);
             let _ = j.done.send(Err(RequestError::DeadlineExceeded {
                 deadline_s: m.deadline.unwrap_or(now),
                 now_s: now,
@@ -1335,6 +1394,13 @@ fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64, 
         }
     }
     if counted {
+        if let Some(log) = &shared.log {
+            let t = shared.started.elapsed().as_secs_f64();
+            let mut ev = LogEvent::new(LogKind::Complete, t, shared.device, handle.0, class);
+            ev.missed = missed;
+            ev.value = latency;
+            log.emit(ev);
+        }
         shared.completed.fetch_add(1, Ordering::SeqCst);
         let mut pc = lock_or_recover(&shared.class_hists);
         pc.record(class, latency);
@@ -1346,13 +1412,16 @@ fn record(shared: &Shared, handle: TenantHandle, class: SloClass, latency: f64, 
 
 /// Classify a typed failure into the lifecycle counters. `entry` = the
 /// job was refused at its entry station (an overload refusal there is a
-/// `rejected`, mid-pipeline it counts as `shed`).
+/// `rejected`, mid-pipeline it counts as `shed`). The entry marker on
+/// the emitted record follows the same distinction: only entry-station
+/// refusals (reject / deadline refusal) are entry events.
 fn count_failure(
     shared: &Shared,
     handle: TenantHandle,
     class: SloClass,
     e: &RequestError,
     entry: bool,
+    deadline: Option<f64>,
 ) {
     match e {
         RequestError::Overloaded(_) => count(
@@ -1360,10 +1429,18 @@ fn count_failure(
             handle,
             class,
             if entry { Outcome::Reject } else { Outcome::Shed },
+            entry,
+            deadline,
         ),
-        RequestError::Shed { .. } => count(shared, handle, class, Outcome::Shed),
-        RequestError::DeadlineExceeded { .. } => count(shared, handle, class, Outcome::Expired),
-        RequestError::Cancelled => count(shared, handle, class, Outcome::Cancelled),
+        RequestError::Shed { .. } => {
+            count(shared, handle, class, Outcome::Shed, false, deadline)
+        }
+        RequestError::DeadlineExceeded { .. } => {
+            count(shared, handle, class, Outcome::Expired, entry, deadline)
+        }
+        RequestError::Cancelled => {
+            count(shared, handle, class, Outcome::Cancelled, false, deadline)
+        }
         _ => {
             shared.failed.fetch_add(1, Ordering::SeqCst);
         }
@@ -1388,6 +1465,11 @@ fn dispatch_cpu(
     tx: mpsc::Sender<Result<Completion, RequestError>>,
 ) {
     let shared2 = shared.clone();
+    // Set after a successful offer: lets the completion callback tell a
+    // synchronous entry refusal (an entry event on the log) from a
+    // post-admission eviction (not one).
+    let admitted_flag = Arc::new(AtomicBool::new(false));
+    let flag2 = admitted_flag.clone();
     let admitted = pools.submit(
         handle,
         JobMeta {
@@ -1417,7 +1499,8 @@ fn dispatch_cpu(
                         })
                     }
                     Err(e) => {
-                        count_failure(&shared2, handle, class, &e, entry);
+                        let at_entry = entry && !flag2.load(Ordering::SeqCst);
+                        count_failure(&shared2, handle, class, &e, at_entry, deadline);
                         Err(e)
                     }
                 };
@@ -1425,8 +1508,11 @@ fn dispatch_cpu(
             }),
         },
     );
+    if admitted {
+        admitted_flag.store(true, Ordering::SeqCst);
+    }
     if entry && admitted {
-        count(shared, handle, class, Outcome::Accept);
+        count(shared, handle, class, Outcome::Accept, true, deadline);
     }
 }
 
@@ -1489,7 +1575,7 @@ fn tpu_worker_loop(
         if !expired.is_empty() {
             let now = shared.started.elapsed().as_secs_f64();
             for (m, j) in expired {
-                count(&shared, m.tenant, m.class, Outcome::Expired);
+                count(&shared, m.tenant, m.class, Outcome::Expired, false, m.deadline);
                 let _ = j.done.send(Err(RequestError::DeadlineExceeded {
                     deadline_s: m.deadline.unwrap_or(now),
                     now_s: now,
@@ -1500,7 +1586,7 @@ fn tpu_worker_loop(
         *lock_or_recover(&tpu.active_tenant) = Some(job.handle);
         // A cancelled request is refused before touching the device.
         if job.cancel.is_cancelled() {
-            count(&shared, job.handle, job.class, Outcome::Cancelled);
+            count(&shared, job.handle, job.class, Outcome::Cancelled, false, job.deadline);
             let _ = job.done.send(Err(RequestError::Cancelled));
             *lock_or_recover(&tpu.active_tenant) = None;
             tpu.active.store(0, Ordering::SeqCst);
@@ -1529,6 +1615,19 @@ fn tpu_worker_loop(
             *lock_or_recover(&tpu.active_tenant) = None;
             tpu.active.store(0, Ordering::SeqCst);
             continue;
+        }
+        // Service starts here — past the cancel and liveness gates, about
+        // to touch the device (the DES's TPU station emits at the same
+        // point in its lifecycle).
+        if let Some(log) = &shared.log {
+            let t = shared.started.elapsed().as_secs_f64();
+            log.emit(LogEvent::new(
+                LogKind::Start,
+                t,
+                device,
+                job.handle.0,
+                job.class,
+            ));
         }
         let meta = job.meta.clone();
         let t0 = Instant::now();
@@ -1717,6 +1816,14 @@ impl Drop for Server {
         self.tpu.cv.notify_all();
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+        // With the workers joined, flush + fsync the event log and cut
+        // any torn tail (the CPU pools drained during field drop only
+        // send typed Shutdown errors, which are never logged).
+        if self.log_owned {
+            if let Some(log) = &self.shared.log {
+                log.close();
+            }
         }
     }
 }

@@ -1,0 +1,521 @@
+//! Append-only binary request event log.
+//!
+//! Every request-lifecycle transition the serving stack counts —
+//! admit/reject/shed/expire/start/complete/cancel plus the fleet's
+//! migrate/failover moves — can additionally be written as a compact
+//! fixed-width record to an append-only file. The log is the durable,
+//! lossless counterpart of the in-memory aggregates: a logged run can be
+//! audited after the fact ([`views::Rollup`] re-materializes the same
+//! `ServeStats`-shaped counters from the file), replayed from any record
+//! offset, and loaded back as an arrival trace
+//! (`workload::trace::load_log`).
+//!
+//! Writing is **off the hot path**: [`EventLog::emit`] pushes the record
+//! onto a bounded channel and returns; a dedicated writer thread encodes
+//! and appends. When the channel is full the record is dropped and
+//! counted ([`EventLog::dropped`]) — the serving path never blocks on
+//! the log. On [`EventLog::close`] (or the last clone dropping) the
+//! writer flushes, truncates any torn tail to a whole-record boundary,
+//! and fsyncs, so a reader never sees a partial record it cannot detect:
+//! [`read_from`] additionally ignores a trailing partial record, which
+//! covers a crash that kills the process before the clean shutdown runs.
+//!
+//! Record layout (fixed 40 bytes, little-endian):
+//!
+//! | bytes | field  | meaning                                              |
+//! |-------|--------|------------------------------------------------------|
+//! | 0     | kind   | [`EventKind`] discriminant (0..=8)                   |
+//! | 1     | class  | [`SloClass`] dense index                             |
+//! | 2     | flags  | bit0 missed, bit1 entry, bit2 outage marker          |
+//! | 3     | magic  | `0xE7` (format guard / corruption detector)          |
+//! | 4..6  | device | fleet device index (u16)                             |
+//! | 6..8  | aux    | migrate/failover target device (u16)                 |
+//! | 8..16 | seq    | record index in this file (writer-assigned, u64)     |
+//! | 16..24| tenant | tenant handle (live) or tenant index (DES) (u64)     |
+//! | 24..32| t      | event time, seconds on the producer's clock (f64)    |
+//! | 32..40| value  | deadline on entry events (NaN = none); latency on    |
+//! |       |        | `Complete`; NaN otherwise                            |
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::sched::SloClass;
+use crate::util::sync::lock_or_recover;
+
+pub mod views;
+
+/// Fixed record width in bytes.
+pub const RECORD_BYTES: usize = 40;
+/// Byte 3 of every record — a cheap format guard.
+pub const MAGIC: u8 = 0xE7;
+/// Bounded channel depth between emitters and the writer thread. Sized
+/// so a burst of ~64k records (a few hundred ms of saturated serving)
+/// absorbs without drops; overflow drops-and-counts rather than blocks.
+const CHANNEL_CAPACITY: usize = 65_536;
+
+/// The request-lifecycle transition a record describes. Discriminants
+/// are the on-disk byte values — append-only, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Admitted at its entry station (the `accepted` counter).
+    Admit = 0,
+    /// Refused at its entry station by a bounded queue.
+    Reject = 1,
+    /// Dropped by overload control after acceptance.
+    Shed = 2,
+    /// Dropped because the deadline could no longer be met.
+    Expire = 3,
+    /// Service started at a station (TPU or CPU pool).
+    Start = 4,
+    /// Completed; `value` carries the end-to-end latency.
+    Complete = 5,
+    /// Cancelled via the request's token before execution.
+    Cancel = 6,
+    /// A tenant migrated between devices (`device` = source, `aux` =
+    /// destination).
+    Migrate = 7,
+    /// Failover: with the marker flag set, one device outage being
+    /// handled (`device` = the crashed device); without it, one request
+    /// served off its home device (`device` = home, `aux` = serving
+    /// device, `tenant` = the fleet-level handle).
+    Failover = 8,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; 9] = [
+        EventKind::Admit,
+        EventKind::Reject,
+        EventKind::Shed,
+        EventKind::Expire,
+        EventKind::Start,
+        EventKind::Complete,
+        EventKind::Cancel,
+        EventKind::Migrate,
+        EventKind::Failover,
+    ];
+
+    pub fn from_u8(b: u8) -> Option<EventKind> {
+        EventKind::ALL.get(b as usize).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Reject => "reject",
+            EventKind::Shed => "shed",
+            EventKind::Expire => "expire",
+            EventKind::Start => "start",
+            EventKind::Complete => "complete",
+            EventKind::Cancel => "cancel",
+            EventKind::Migrate => "migrate",
+            EventKind::Failover => "failover",
+        }
+    }
+}
+
+/// One decoded log record. Emitters leave `seq` at 0 — the writer thread
+/// assigns the file-local record index, so `seq` is strictly monotone
+/// within a file regardless of emitter interleaving.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub class: SloClass,
+    /// Completion delivered after its deadline (`Complete` only).
+    pub missed: bool,
+    /// The record describes the request's *entry* into the system —
+    /// `Admit` always, `Reject` always, and an `Expire` refused at the
+    /// entry station (vs. one evicted from a queue post-admission).
+    /// Entry records are what `trace::load_log` reconstructs arrivals
+    /// from.
+    pub entry: bool,
+    /// On `Failover`: this record is the per-outage marker, not a
+    /// per-request reroute.
+    pub marker: bool,
+    pub device: u16,
+    /// Migrate/failover target device; 0 otherwise.
+    pub aux: u16,
+    pub seq: u64,
+    pub tenant: u64,
+    /// Event time in seconds — wall-clock since server start for live
+    /// producers, virtual sim time for the DES.
+    pub t: f64,
+    /// Deadline (entry events, NaN = none) or latency (`Complete`).
+    pub value: f64,
+}
+
+impl Event {
+    pub fn new(kind: EventKind, t: f64, device: usize, tenant: u64, class: SloClass) -> Event {
+        Event {
+            kind,
+            class,
+            missed: false,
+            entry: false,
+            marker: false,
+            device: device.min(u16::MAX as usize) as u16,
+            aux: 0,
+            seq: 0,
+            tenant,
+            t,
+            value: f64::NAN,
+        }
+    }
+
+    /// The deadline this record carries (`None` encoded as NaN).
+    pub fn deadline(&self) -> Option<f64> {
+        if self.value.is_nan() {
+            None
+        } else {
+            Some(self.value)
+        }
+    }
+
+    pub fn encode(&self, buf: &mut [u8; RECORD_BYTES]) {
+        buf[0] = self.kind as u8;
+        buf[1] = self.class.index() as u8;
+        buf[2] = u8::from(self.missed)
+            | u8::from(self.entry) << 1
+            | u8::from(self.marker) << 2;
+        buf[3] = MAGIC;
+        buf[4..6].copy_from_slice(&self.device.to_le_bytes());
+        buf[6..8].copy_from_slice(&self.aux.to_le_bytes());
+        buf[8..16].copy_from_slice(&self.seq.to_le_bytes());
+        buf[16..24].copy_from_slice(&self.tenant.to_le_bytes());
+        buf[24..32].copy_from_slice(&self.t.to_le_bytes());
+        buf[32..40].copy_from_slice(&self.value.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Event, String> {
+        if buf.len() < RECORD_BYTES {
+            return Err(format!(
+                "short record: {} bytes (need {RECORD_BYTES})",
+                buf.len()
+            ));
+        }
+        if buf[3] != MAGIC {
+            return Err(format!("bad record magic {:#04x}", buf[3]));
+        }
+        let kind = EventKind::from_u8(buf[0])
+            .ok_or_else(|| format!("unknown event kind {}", buf[0]))?;
+        let class = SloClass::from_index(buf[1] as usize)
+            .ok_or_else(|| format!("unknown SLO class index {}", buf[1]))?;
+        Ok(Event {
+            kind,
+            class,
+            missed: buf[2] & 1 != 0,
+            entry: buf[2] & 2 != 0,
+            marker: buf[2] & 4 != 0,
+            device: u16::from_le_bytes([buf[4], buf[5]]),
+            aux: u16::from_le_bytes([buf[6], buf[7]]),
+            seq: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            tenant: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            t: f64::from_le_bytes(buf[24..32].try_into().unwrap()),
+            value: f64::from_le_bytes(buf[32..40].try_into().unwrap()),
+        })
+    }
+}
+
+struct LogInner {
+    tx: Mutex<Option<SyncSender<Event>>>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+    appended: AtomicU64,
+    dropped: AtomicU64,
+    path: PathBuf,
+}
+
+impl LogInner {
+    fn close(&self) {
+        // Dropping the sender closes the channel; the writer drains the
+        // backlog, flushes, truncates to a whole-record boundary, and
+        // fsyncs before exiting. Idempotent: a second call finds both
+        // slots empty.
+        drop(lock_or_recover(&self.tx).take());
+        if let Some(t) = lock_or_recover(&self.thread).take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for LogInner {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Handle to an open event log. Cheap to clone (all clones feed the same
+/// writer); emission never blocks. Closed explicitly via
+/// [`close`](EventLog::close) or implicitly when the last clone drops.
+#[derive(Clone)]
+pub struct EventLog {
+    inner: Arc<LogInner>,
+}
+
+impl std::fmt::Debug for EventLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventLog")
+            .field("path", &self.inner.path)
+            .field("appended", &self.appended())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl EventLog {
+    /// Create (truncating any existing file) and start the writer thread.
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<EventLog, String> {
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| format!("create {}: {e}", path.display()))?;
+        let (tx, rx) = sync_channel::<Event>(CHANNEL_CAPACITY);
+        let inner = Arc::new(LogInner {
+            tx: Mutex::new(Some(tx)),
+            thread: Mutex::new(None),
+            appended: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            path,
+        });
+        let writer_inner = inner.clone();
+        let handle = std::thread::Builder::new()
+            .name("eventlog-writer".into())
+            .spawn(move || writer_loop(file, rx, &writer_inner))
+            .map_err(|e| format!("spawn eventlog writer: {e}"))?;
+        *lock_or_recover(&inner.thread) = Some(handle);
+        Ok(EventLog { inner })
+    }
+
+    /// Queue a record for the writer thread. Never blocks: a full channel
+    /// (or a closed log) drops the record and bumps
+    /// [`dropped`](Self::dropped).
+    pub fn emit(&self, ev: Event) {
+        let tx = lock_or_recover(&self.inner.tx);
+        match tx.as_ref() {
+            Some(tx) => match tx.try_send(ev) {
+                Ok(()) => {}
+                Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                    self.inner.dropped.fetch_add(1, Ordering::SeqCst);
+                }
+            },
+            None => {
+                self.inner.dropped.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Drain the backlog, fsync, truncate any torn tail, and stop the
+    /// writer. Safe to call more than once; later [`emit`](Self::emit)s
+    /// count as dropped.
+    pub fn close(&self) {
+        self.inner.close();
+    }
+
+    /// Records durably appended by the writer thread.
+    pub fn appended(&self) -> u64 {
+        self.inner.appended.load(Ordering::SeqCst)
+    }
+
+    /// Records dropped (channel overflow or emission after close).
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::SeqCst)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.inner.path
+    }
+}
+
+fn writer_loop(file: File, rx: std::sync::mpsc::Receiver<Event>, inner: &LogInner) {
+    let mut w = std::io::BufWriter::new(file);
+    let mut written: u64 = 0;
+    let mut buf = [0u8; RECORD_BYTES];
+    while let Ok(mut ev) = rx.recv() {
+        ev.seq = written;
+        ev.encode(&mut buf);
+        if w.write_all(&buf).is_ok() {
+            written += 1;
+            inner.appended.fetch_add(1, Ordering::SeqCst);
+        } else {
+            inner.dropped.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+    // Clean shutdown: whatever actually reached the file, cut to a
+    // whole-record boundary and make it durable.
+    let file = match w.into_inner() {
+        Ok(f) => f,
+        Err(e) => e.into_inner(),
+    };
+    if let Ok(meta) = file.metadata() {
+        let len = meta.len();
+        let _ = file.set_len(len - len % RECORD_BYTES as u64);
+    }
+    let _ = file.sync_all();
+}
+
+/// Read every record from byte 0. See [`read_from`].
+pub fn read_all<P: AsRef<Path>>(path: P) -> Result<Vec<Event>, String> {
+    read_from(path, 0)
+}
+
+/// Read records starting at byte `offset` (must be a whole-record
+/// boundary). A trailing partial record — a torn tail from a crash that
+/// outran the clean shutdown — is detected by length and skipped;
+/// mid-file corruption (bad magic / unknown kind) is an error.
+pub fn read_from<P: AsRef<Path>>(path: P, offset: u64) -> Result<Vec<Event>, String> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let usable = bytes.len() - bytes.len() % RECORD_BYTES;
+    if offset % RECORD_BYTES as u64 != 0 {
+        return Err(format!(
+            "offset {offset} is not a multiple of the {RECORD_BYTES}-byte record size"
+        ));
+    }
+    let offset = offset as usize;
+    if offset > usable {
+        return Err(format!(
+            "offset {offset} past the last whole record (usable bytes: {usable})"
+        ));
+    }
+    let mut events = Vec::with_capacity((usable - offset) / RECORD_BYTES);
+    for (i, chunk) in bytes[offset..usable].chunks_exact(RECORD_BYTES).enumerate() {
+        let ev = Event::decode(chunk).map_err(|e| {
+            format!(
+                "{} at byte {}: {e}",
+                path.display(),
+                offset + i * RECORD_BYTES
+            )
+        })?;
+        events.push(ev);
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "swapless-eventlog-{tag}-{}.bin",
+            std::process::id()
+        ))
+    }
+
+    fn sample(kind: EventKind, seq: u64) -> Event {
+        let mut ev = Event::new(kind, 1.5 + seq as f64, 3, 42, SloClass::Interactive);
+        ev.seq = seq;
+        ev.aux = 7;
+        ev.entry = kind == EventKind::Admit;
+        ev.value = 2.25;
+        ev
+    }
+
+    #[test]
+    fn encode_decode_round_trip_every_kind() {
+        for (i, kind) in EventKind::ALL.into_iter().enumerate() {
+            let mut ev = sample(kind, i as u64);
+            ev.missed = i % 2 == 0;
+            ev.marker = kind == EventKind::Failover;
+            let mut buf = [0u8; RECORD_BYTES];
+            ev.encode(&mut buf);
+            assert_eq!(buf[3], MAGIC);
+            let back = Event::decode(&buf).unwrap();
+            assert_eq!(back, ev);
+        }
+        // NaN deadline round-trips to None.
+        let ev = Event::new(EventKind::Admit, 0.0, 0, 0, SloClass::Standard);
+        let mut buf = [0u8; RECORD_BYTES];
+        ev.encode(&mut buf);
+        assert_eq!(Event::decode(&buf).unwrap().deadline(), None);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let mut buf = [0u8; RECORD_BYTES];
+        sample(EventKind::Admit, 0).encode(&mut buf);
+        let mut bad_magic = buf;
+        bad_magic[3] = 0x00;
+        assert!(Event::decode(&bad_magic).is_err());
+        let mut bad_kind = buf;
+        bad_kind[0] = 99;
+        assert!(Event::decode(&bad_kind).is_err());
+        let mut bad_class = buf;
+        bad_class[1] = 17;
+        assert!(Event::decode(&bad_class).is_err());
+        assert!(Event::decode(&buf[..10]).is_err());
+    }
+
+    #[test]
+    fn write_close_read_round_trip_with_writer_assigned_seq() {
+        let path = temp_path("roundtrip");
+        let log = EventLog::create(&path).unwrap();
+        for i in 0..100u64 {
+            let mut ev = sample(EventKind::ALL[(i % 9) as usize], 0);
+            ev.tenant = i;
+            log.emit(ev);
+        }
+        log.close();
+        assert_eq!(log.appended(), 100);
+        assert_eq!(log.dropped(), 0);
+        let events = read_all(&path).unwrap();
+        assert_eq!(events.len(), 100);
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.seq, i as u64, "writer assigns file-order seq");
+            assert_eq!(ev.tenant, i as u64);
+        }
+        // Emission after close is drop-and-count, not an error.
+        log.emit(sample(EventKind::Admit, 0));
+        assert_eq!(log.dropped(), 1);
+        // close() is idempotent.
+        log.close();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reader_skips_a_torn_tail_and_replays_from_offsets() {
+        let path = temp_path("torn");
+        let log = EventLog::create(&path).unwrap();
+        for i in 0..10u64 {
+            let mut ev = sample(EventKind::Complete, 0);
+            ev.tenant = i;
+            log.emit(ev);
+        }
+        log.close();
+        // Simulate a crash mid-append: a partial 17-byte record at the
+        // tail. The reader must skip it, not fail.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[0xAB; 17]).unwrap();
+        }
+        let events = read_all(&path).unwrap();
+        assert_eq!(events.len(), 10);
+        // Replay from a mid-file record boundary.
+        let tail = read_from(&path, 4 * RECORD_BYTES as u64).unwrap();
+        assert_eq!(tail.len(), 6);
+        assert_eq!(tail[0].tenant, 4);
+        // Misaligned or out-of-range offsets are errors.
+        assert!(read_from(&path, 13).is_err());
+        assert!(read_from(&path, 11 * RECORD_BYTES as u64).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn dropping_the_last_clone_closes_cleanly() {
+        let path = temp_path("drop");
+        let log = EventLog::create(&path).unwrap();
+        let clone = log.clone();
+        clone.emit(sample(EventKind::Admit, 0));
+        drop(clone);
+        drop(log);
+        assert_eq!(read_all(&path).unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,290 @@
+//! Incremental materialized views over an event log.
+//!
+//! [`Rollup`] consumes records one at a time ([`Rollup::apply`]) and
+//! maintains the same counters the live path keeps in memory: per-tenant
+//! outcome counts, per-class counts plus latency histograms
+//! ([`PerClassLatency`], the exact type `ServeStats` exposes), and
+//! per-device totals. Because every counter is integral and `apply` is
+//! a pure fold, replaying a log from offset 0 reproduces the live
+//! counts bit-exactly, and a full replay equals a prefix rollup plus a
+//! suffix rollup — the property the `audit` experiment and the parity
+//! tests pin.
+//!
+//! Float aggregates (latency means) are intentionally *not* part of the
+//! parity contract: emission order into the log is not the live
+//! aggregation order, and Welford means are order-dependent. Counts and
+//! histogram totals are order-free; means agree to float noise only.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::PerClassLatency;
+
+use super::{Event, EventKind};
+
+/// Integral outcome counters for one tenant (or one device).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Counts {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub expired: u64,
+    pub cancelled: u64,
+    pub completed: u64,
+}
+
+impl Counts {
+    /// Post-admission drops — the live path's combined `dropped` counter
+    /// (shed + expired + cancelled).
+    pub fn dropped(&self) -> u64 {
+        self.shed + self.expired + self.cancelled
+    }
+}
+
+/// `ServeStats`-shaped counters materialized incrementally from records.
+#[derive(Debug, Clone, Default)]
+pub struct Rollup {
+    /// Keyed by `(device, tenant handle)`: each member server numbers
+    /// its handles from 0, so the handle alone collides across devices.
+    pub per_tenant: BTreeMap<(u16, u64), Counts>,
+    /// Per-class counts, latency histograms, and deadline misses.
+    pub per_class: PerClassLatency,
+    /// Indexed by device; grown on demand.
+    pub per_device: Vec<Counts>,
+    /// `Start` records (station service starts).
+    pub started: u64,
+    /// Tenant migrations between devices.
+    pub migrations: u64,
+    /// Device outages handled (marker `Failover` records).
+    pub failovers: u64,
+    /// Requests served off their home device (non-marker `Failover`).
+    pub failed_over: u64,
+    /// Off-home requests per *fleet-level* tenant handle. A separate
+    /// namespace from `per_tenant`'s member-server handles: the fleet
+    /// assigns its own handles, and failover records carry those.
+    pub per_tenant_failed_over: BTreeMap<u64, u64>,
+    /// Records consumed.
+    pub records: u64,
+}
+
+impl Rollup {
+    pub fn new() -> Rollup {
+        Rollup::default()
+    }
+
+    /// Fold all of `events` into the rollup.
+    pub fn replay(events: &[Event]) -> Rollup {
+        let mut r = Rollup::new();
+        for ev in events {
+            r.apply(ev);
+        }
+        r
+    }
+
+    fn tenant_mut(&mut self, ev: &Event) -> &mut Counts {
+        self.per_tenant.entry((ev.device, ev.tenant)).or_default()
+    }
+
+    fn device_mut(&mut self, device: u16) -> &mut Counts {
+        let d = device as usize;
+        if self.per_device.len() <= d {
+            self.per_device.resize(d + 1, Counts::default());
+        }
+        &mut self.per_device[d]
+    }
+
+    /// Consume one record.
+    pub fn apply(&mut self, ev: &Event) {
+        self.records += 1;
+        match ev.kind {
+            EventKind::Admit => {
+                self.tenant_mut(ev).accepted += 1;
+                self.device_mut(ev.device).accepted += 1;
+                self.per_class.record_accept(ev.class);
+            }
+            EventKind::Reject => {
+                self.tenant_mut(ev).rejected += 1;
+                self.device_mut(ev.device).rejected += 1;
+                self.per_class.record_reject(ev.class);
+            }
+            EventKind::Shed => {
+                self.tenant_mut(ev).shed += 1;
+                self.device_mut(ev.device).shed += 1;
+                self.per_class.record_shed(ev.class);
+            }
+            EventKind::Expire => {
+                self.tenant_mut(ev).expired += 1;
+                self.device_mut(ev.device).expired += 1;
+                self.per_class.record_expired(ev.class);
+            }
+            EventKind::Start => {
+                self.started += 1;
+            }
+            EventKind::Complete => {
+                self.tenant_mut(ev).completed += 1;
+                self.device_mut(ev.device).completed += 1;
+                if ev.value.is_finite() {
+                    self.per_class.record(ev.class, ev.value);
+                }
+                if ev.missed {
+                    self.per_class.record_miss(ev.class);
+                }
+            }
+            EventKind::Cancel => {
+                self.tenant_mut(ev).cancelled += 1;
+                self.device_mut(ev.device).cancelled += 1;
+                self.per_class.record_cancelled(ev.class);
+            }
+            EventKind::Migrate => {
+                self.migrations += 1;
+            }
+            EventKind::Failover => {
+                if ev.marker {
+                    self.failovers += 1;
+                } else {
+                    self.failed_over += 1;
+                    *self.per_tenant_failed_over.entry(ev.tenant).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+
+    /// Totals across tenants — the shape of the live `overload:` line.
+    pub fn totals(&self) -> Counts {
+        let mut t = Counts::default();
+        for c in self.per_tenant.values() {
+            t.accepted += c.accepted;
+            t.rejected += c.rejected;
+            t.shed += c.shed;
+            t.expired += c.expired;
+            t.cancelled += c.cancelled;
+            t.completed += c.completed;
+        }
+        t
+    }
+
+    /// Completions that met their deadline, per the class histograms.
+    pub fn goodput(&self) -> u64 {
+        self.per_class.goodput_total()
+    }
+
+    /// Merge another rollup (e.g. a suffix) into this one. Counts add;
+    /// histogram merge requires identical geometry (always true for
+    /// rollups, which use the default geometry).
+    pub fn merge(&mut self, other: &Rollup) {
+        for (k, c) in &other.per_tenant {
+            let e = self.per_tenant.entry(*k).or_default();
+            e.accepted += c.accepted;
+            e.rejected += c.rejected;
+            e.shed += c.shed;
+            e.expired += c.expired;
+            e.cancelled += c.cancelled;
+            e.completed += c.completed;
+        }
+        if self.per_device.len() < other.per_device.len() {
+            self.per_device
+                .resize(other.per_device.len(), Counts::default());
+        }
+        for (d, c) in other.per_device.iter().enumerate() {
+            let e = &mut self.per_device[d];
+            e.accepted += c.accepted;
+            e.rejected += c.rejected;
+            e.shed += c.shed;
+            e.expired += c.expired;
+            e.cancelled += c.cancelled;
+            e.completed += c.completed;
+        }
+        self.per_class.merge(&other.per_class);
+        self.started += other.started;
+        self.migrations += other.migrations;
+        self.failovers += other.failovers;
+        self.failed_over += other.failed_over;
+        for (t, n) in &other.per_tenant_failed_over {
+            *self.per_tenant_failed_over.entry(*t).or_insert(0) += n;
+        }
+        self.records += other.records;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::SloClass;
+
+    fn ev(kind: EventKind, device: usize, tenant: u64, class: SloClass) -> Event {
+        Event::new(kind, 1.0, device, tenant, class)
+    }
+
+    #[test]
+    fn rollup_materializes_per_tenant_class_device_counters() {
+        let mut events = vec![
+            ev(EventKind::Admit, 0, 0, SloClass::Interactive),
+            ev(EventKind::Start, 0, 0, SloClass::Interactive),
+            ev(EventKind::Admit, 1, 0, SloClass::Standard),
+            ev(EventKind::Reject, 0, 1, SloClass::Batch),
+            ev(EventKind::Shed, 1, 0, SloClass::Standard),
+            ev(EventKind::Expire, 0, 0, SloClass::Interactive),
+            ev(EventKind::Cancel, 1, 2, SloClass::Batch),
+            ev(EventKind::Migrate, 0, 0, SloClass::Standard),
+        ];
+        let mut done = ev(EventKind::Complete, 0, 0, SloClass::Interactive);
+        done.value = 0.004;
+        done.missed = true;
+        events.push(done);
+        let mut outage = ev(EventKind::Failover, 1, u64::MAX, SloClass::Standard);
+        outage.marker = true;
+        events.push(outage);
+        events.push(ev(EventKind::Failover, 1, 3, SloClass::Standard));
+
+        let r = Rollup::replay(&events);
+        assert_eq!(r.records, events.len() as u64);
+        let t00 = r.per_tenant[&(0, 0)];
+        assert_eq!((t00.accepted, t00.expired, t00.completed), (1, 1, 1));
+        // Same handle on another device is a different tenant.
+        let t10 = r.per_tenant[&(1, 0)];
+        assert_eq!((t10.accepted, t10.shed), (1, 1));
+        assert_eq!(r.per_tenant[&(0, 1)].rejected, 1);
+        assert_eq!(r.per_tenant[&(1, 2)].cancelled, 1);
+        assert_eq!(r.per_device[0].completed, 1);
+        assert_eq!(r.per_device[1].accepted, 1);
+        assert_eq!(r.started, 1);
+        assert_eq!(r.migrations, 1);
+        assert_eq!(r.failovers, 1);
+        assert_eq!(r.failed_over, 1);
+        assert_eq!(r.per_tenant_failed_over[&3], 1);
+        assert_eq!(r.per_class.accepted(SloClass::Interactive), 1);
+        assert_eq!(r.per_class.missed(SloClass::Interactive), 1);
+        assert_eq!(r.per_class.get(SloClass::Interactive).count(), 1);
+        let tot = r.totals();
+        assert_eq!(tot.accepted, 2);
+        assert_eq!(tot.dropped(), 3);
+    }
+
+    #[test]
+    fn prefix_plus_suffix_merge_equals_full_replay() {
+        let mut events = Vec::new();
+        for i in 0..200u64 {
+            let kind = EventKind::ALL[(i % 7) as usize]; // lifecycle kinds
+            let class = SloClass::from_index((i % 3) as usize).unwrap();
+            let mut e = ev(kind, (i % 2) as usize, i % 5, class);
+            if kind == EventKind::Complete {
+                e.value = 0.001 * (1 + i % 9) as f64;
+            }
+            events.push(e);
+        }
+        let full = Rollup::replay(&events);
+        let mid = events.len() / 2;
+        let mut merged = Rollup::replay(&events[..mid]);
+        merged.merge(&Rollup::replay(&events[mid..]));
+        assert_eq!(merged.per_tenant, full.per_tenant);
+        assert_eq!(merged.per_device, full.per_device);
+        assert_eq!(merged.records, full.records);
+        assert_eq!(merged.started, full.started);
+        for c in SloClass::ALL {
+            assert_eq!(merged.per_class.accepted(c), full.per_class.accepted(c));
+            assert_eq!(
+                merged.per_class.get(c).count(),
+                full.per_class.get(c).count()
+            );
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! Audit experiment: prove the event log is a faithful account of a
+//! live run by materializing it back into counters.
+//!
+//! A 2-device fleet serves the Table-II quad mix at nominal ρ = 1.0
+//! (rates solved on the single-device full-TPU reference, the fleet
+//! sweep's equal-total-load convention) with the event log attached and
+//! a mid-run crash of device 0 — no recovery, so the heartbeat loop
+//! fails the victims over and the log captures the outage marker, the
+//! off-home reroutes, and every requeued request's second admission.
+//!
+//! After the run drains, the log is replayed through [`Rollup`] and
+//! compared against the live [`FleetStats`] snapshot *bit-exactly*:
+//! per-tenant, per-class, and per-device outcome counts, histogram
+//! totals, deadline misses, and the fleet-level migration/failover
+//! counters must all agree, and a mid-file offset replay merged onto
+//! the prefix rollup must equal the full replay. Any divergence is a
+//! mismatch row; `swapless audit` exits non-zero on any.
+//!
+//! [`FleetStats`]: crate::fleet::FleetStats
+//! [`Rollup`]: crate::eventlog::views::Rollup
+
+use std::time::{Duration, Instant};
+
+use crate::analytic::Config;
+use crate::coordinator::{AttachOptions, Request};
+use crate::eventlog::views::Rollup;
+use crate::eventlog::{read_all, read_from, EventLog, RECORD_BYTES};
+use crate::fault::FaultPlan;
+use crate::fleet::{Fleet, FleetServerBuilder};
+use crate::runtime::service::ExecBackend;
+use crate::sched::{OverloadPolicy, SloClass};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{equal_tpu_load_shares, rates_for_load_factor};
+
+use super::common::{print_table, Ctx};
+use super::fleet::MIX_QUAD;
+
+/// Nominal full-TPU load factor the rates are solved at. Overload on
+/// the single-device reference ≈ 0.5 per device before the crash, and
+/// the survivor runs at the critical point afterwards — enough pressure
+/// to populate every outcome counter the parity check compares.
+pub const RHO: f64 = 1.0;
+pub const DEVICES: usize = 2;
+/// Wall-clock drive window (the run is real-time: emulated backend at
+/// time scale 1.0, open-loop Poisson arrivals).
+pub const DURATION_S: f64 = 2.5;
+/// Crash instant for device 0 (no recovery).
+pub const CRASH_AT_S: f64 = 1.0;
+/// Relative deadline stamped on every request.
+pub const DEADLINE_S: f64 = 0.5;
+pub const CRASHED_DEVICE: usize = 0;
+
+/// SLO classes for the quad mix, exercising all three classes.
+const CLASSES: [SloClass; 4] = [
+    SloClass::Interactive,
+    SloClass::Standard,
+    SloClass::Batch,
+    SloClass::Standard,
+];
+
+/// Outcome of one audited chaos run.
+#[derive(Debug, Clone)]
+pub struct AuditResult {
+    pub submitted: usize,
+    /// Live completions (fleet-wide), after the drain.
+    pub completed: u64,
+    /// Tickets resolved with typed errors.
+    pub failed: usize,
+    /// Records the full replay consumed.
+    pub records: u64,
+    /// Records the writer durably appended.
+    pub appended: u64,
+    /// Records lost to channel overflow (must be 0 for parity to hold).
+    pub dropped: u64,
+    pub failovers: u64,
+    pub failed_over: u64,
+    pub requeued: u64,
+    /// Records consumed by the mid-file offset replay (the suffix).
+    pub suffix_records: u64,
+    /// Human-readable divergences; empty on a clean audit.
+    pub mismatches: Vec<String>,
+    pub passed: bool,
+}
+
+fn check(mismatches: &mut Vec<String>, label: &str, live: u64, log: u64) {
+    if live != log {
+        mismatches.push(format!("{label}: live {live} != log {log}"));
+    }
+}
+
+/// Run the audited chaos serve against a temp log file, then clean up.
+pub fn run(ctx: &Ctx) -> Result<AuditResult, String> {
+    let name = format!("swapless-audit-{}.log", std::process::id());
+    let path = std::env::temp_dir().join(name);
+    let res = run_at(ctx, &path);
+    let _ = std::fs::remove_file(&path);
+    res
+}
+
+/// Run the audited chaos serve, logging to `path` (kept on disk).
+pub fn run_at(ctx: &Ctx, path: &std::path::Path) -> Result<AuditResult, String> {
+    let models = &MIX_QUAD[..];
+    let zero = vec![0.0; models.len()];
+    let tenants0 = ctx.tenants(models, &zero)?;
+    let full_cfg = Config::all_tpu(&tenants0);
+    let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+    let rates = rates_for_load_factor(&ctx.am, &tenants0, &full_cfg, &shares, RHO);
+
+    let log = EventLog::create(path)?;
+    let fleet = Fleet::uniform(DEVICES, &ctx.cost.hw);
+    let server = FleetServerBuilder::new(&ctx.manifest, fleet)
+        .backend(ExecBackend::Emulated)
+        .time_scale(1.0)
+        .overload(OverloadPolicy::DeadlineDrop)
+        .adaptive(true)
+        .faults(FaultPlan::new(ctx.seed).crash(CRASHED_DEVICE, CRASH_AT_S, None))
+        .log(log.clone())
+        .build()
+        .map_err(|e| e.to_string())?;
+
+    // Attach the mix; placement-aware admission spreads it over both
+    // devices. Live tenants: (fleet handle, input length, rate, next).
+    let mut rng = Rng::new(ctx.seed);
+    let mut live = Vec::new();
+    for ((name, rate), class) in models.iter().zip(&rates).zip(&CLASSES) {
+        let opts = AttachOptions { rate_hint: *rate, class: *class };
+        let h = server
+            .attach(name, opts)
+            .map_err(|e| format!("attach {name}: {e}"))?;
+        let n_in: usize = ctx.manifest.get(name)?.input_shape.iter().product();
+        live.push((h, n_in, *rate, rng.exponential(*rate)));
+    }
+
+    // Open-loop Poisson drive with the heartbeat failover check — the
+    // serve CLI's loop, minus rebalancing (migrations stay log-visible
+    // but zero here, keeping the parity row exact and deterministic).
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= DURATION_S {
+            break;
+        }
+        let _ = server.poll_health();
+        let next_arrival = live
+            .iter()
+            .map(|l| l.3)
+            .fold(f64::INFINITY, f64::min)
+            .min(DURATION_S);
+        if next_arrival > now {
+            std::thread::sleep(Duration::from_secs_f64((next_arrival - now).min(0.02)));
+            continue;
+        }
+        let idx = live
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .3.partial_cmp(&b.1 .3).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let (h, n_in, rate, _) = live[idx];
+        let dl = Duration::from_secs_f64(DEADLINE_S);
+        let req = Request::new(vec![0.5; n_in]).with_deadline(dl);
+        pending.push(server.submit(h, req));
+        live[idx].3 = now + rng.exponential(rate);
+    }
+    let submitted = pending.len();
+    let mut failed = 0usize;
+    for ticket in pending {
+        if ticket.wait().is_err() {
+            failed += 1;
+        }
+    }
+
+    // Quiescent snapshot, then drop the server: members wind down first,
+    // then the fleet closes the shared log (drain + fsync + truncate).
+    let stats = server.stats();
+    let live_pc = stats.per_class();
+    drop(server);
+    let appended = log.appended();
+    let dropped = log.dropped();
+
+    let events = read_all(path)?;
+    let full = Rollup::replay(&events);
+    let mut m: Vec<String> = Vec::new();
+
+    if dropped > 0 {
+        m.push(format!("writer dropped {dropped} records — parity void"));
+    }
+    check(&mut m, "records read vs appended", appended, full.records);
+    check(&mut m, "handled outages", stats.failovers, 1);
+
+    // Per-device outcome counters.
+    if full.per_device.len() > stats.per_device.len() {
+        m.push(format!(
+            "log names {} devices, fleet has {}",
+            full.per_device.len(),
+            stats.per_device.len()
+        ));
+    }
+    for (d, s) in stats.per_device.iter().enumerate() {
+        let c = full.per_device.get(d).copied().unwrap_or_default();
+        check(&mut m, &format!("device {d} accepted"), s.accepted, c.accepted);
+        check(&mut m, &format!("device {d} rejected"), s.rejected, c.rejected);
+        check(&mut m, &format!("device {d} shed"), s.shed, c.shed);
+        check(&mut m, &format!("device {d} expired"), s.expired, c.expired);
+        check(&mut m, &format!("device {d} cancelled"), s.cancelled, c.cancelled);
+        check(&mut m, &format!("device {d} completed"), s.completed, c.completed);
+    }
+
+    // Per-tenant (member-server handle namespace, keyed with the device).
+    let mut live_keys = std::collections::BTreeSet::new();
+    for (d, s) in stats.per_device.iter().enumerate() {
+        for t in &s.per_tenant {
+            let key = (d as u16, t.handle.0);
+            live_keys.insert(key);
+            let c = full.per_tenant.get(&key).copied().unwrap_or_default();
+            let label = format!("tenant {}@{d}", t.handle.0);
+            check(&mut m, &format!("{label} accepted"), t.accepted, c.accepted);
+            check(&mut m, &format!("{label} rejected"), t.rejected, c.rejected);
+            check(&mut m, &format!("{label} dropped"), t.dropped, c.dropped());
+            check(&mut m, &format!("{label} completed"), t.latency.count(), c.completed);
+        }
+    }
+    for key in full.per_tenant.keys() {
+        if !live_keys.contains(key) {
+            m.push(format!("log-only tenant {}@{}", key.1, key.0));
+        }
+    }
+
+    // Per-class counters, histogram totals, misses, and goodput.
+    for c in SloClass::ALL {
+        let n = c.name();
+        let (a, b) = (&live_pc, &full.per_class);
+        check(&mut m, &format!("class {n} accepted"), a.accepted(c), b.accepted(c));
+        check(&mut m, &format!("class {n} rejected"), a.rejected(c), b.rejected(c));
+        check(&mut m, &format!("class {n} shed"), a.shed(c), b.shed(c));
+        check(&mut m, &format!("class {n} expired"), a.expired(c), b.expired(c));
+        check(&mut m, &format!("class {n} cancelled"), a.cancelled(c), b.cancelled(c));
+        check(&mut m, &format!("class {n} missed"), a.missed(c), b.missed(c));
+        check(&mut m, &format!("class {n} histogram"), a.get(c).count(), b.get(c).count());
+        check(&mut m, &format!("class {n} goodput"), a.goodput(c), b.goodput(c));
+    }
+
+    // Fleet-level counters.
+    check(&mut m, "migrations", stats.migrations, full.migrations);
+    check(&mut m, "failovers", stats.failovers, full.failovers);
+    check(&mut m, "failed_over", stats.failed_over, full.failed_over);
+    check(&mut m, "completed total", stats.completed(), full.totals().completed);
+
+    // Offset property: a replay from a mid-file record boundary merged
+    // onto the prefix rollup equals the full replay.
+    let half = events.len() / 2;
+    let suffix_events = read_from(path, (half * RECORD_BYTES) as u64)?;
+    let suffix_n = suffix_events.len() as u64;
+    check(&mut m, "suffix record count", (events.len() - half) as u64, suffix_n);
+    let mut merged = Rollup::replay(&events[..half]);
+    merged.merge(&Rollup::replay(&suffix_events));
+    if merged.per_tenant != full.per_tenant {
+        m.push("offset replay: per-tenant counts diverge from full replay".to_string());
+    }
+    if merged.per_device != full.per_device {
+        m.push("offset replay: per-device counts diverge from full replay".to_string());
+    }
+    check(&mut m, "offset replay records", full.records, merged.records);
+    for c in SloClass::ALL {
+        let n = c.name();
+        let (a, b) = (&full.per_class, &merged.per_class);
+        check(&mut m, &format!("offset {n} accepted"), a.accepted(c), b.accepted(c));
+        check(&mut m, &format!("offset {n} histogram"), a.get(c).count(), b.get(c).count());
+    }
+
+    let passed = m.is_empty();
+    Ok(AuditResult {
+        submitted,
+        completed: stats.completed(),
+        failed,
+        records: full.records,
+        appended,
+        dropped,
+        failovers: stats.failovers,
+        failed_over: stats.failed_over,
+        requeued: stats.requeued,
+        suffix_records: suffix_n,
+        mismatches: m,
+        passed,
+    })
+}
+
+impl AuditResult {
+    pub fn print(&self) {
+        let row = vec![vec![
+            self.submitted.to_string(),
+            self.completed.to_string(),
+            self.records.to_string(),
+            self.dropped.to_string(),
+            self.failovers.to_string(),
+            self.failed_over.to_string(),
+            self.requeued.to_string(),
+            self.mismatches.len().to_string(),
+            if self.passed { "ok" } else { "FAIL" }.to_string(),
+        ]];
+        print_table(
+            "Audit: 2-device chaos serve vs log-derived rollup (quad mix, rho 1.0)",
+            &[
+                "submitted",
+                "completed",
+                "records",
+                "dropped",
+                "failovers",
+                "failed over",
+                "requeued",
+                "mismatches",
+                "verdict",
+            ],
+            &row,
+        );
+        for m in &self.mismatches {
+            println!("  mismatch: {m}");
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("records", Json::Num(self.records as f64)),
+            ("appended", Json::Num(self.appended as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("failed_over", Json::Num(self.failed_over as f64)),
+            ("requeued", Json::Num(self.requeued as f64)),
+            ("suffix_records", Json::Num(self.suffix_records as f64)),
+            (
+                "mismatches",
+                Json::Arr(
+                    self.mismatches
+                        .iter()
+                        .map(|s| Json::Str(s.clone()))
+                        .collect(),
+                ),
+            ),
+            ("passed", Json::Bool(self.passed)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::Manifest;
+
+    /// The acceptance headline: a logged 2-device chaos run (one crash,
+    /// failover to the survivor) audits clean — the log-derived rollup
+    /// reproduces the live per-tenant/per-class/per-device counts from
+    /// offset 0 and from a mid-file offset, bit-exactly.
+    #[test]
+    fn logged_chaos_run_audits_bit_exactly() {
+        let ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        let r = run(&ctx).unwrap();
+        assert!(r.passed, "audit mismatches:\n  {}", r.mismatches.join("\n  "));
+        assert_eq!(r.dropped, 0, "bounded channel overflowed");
+        assert_eq!(r.failovers, 1, "the crash was not handled exactly once");
+        assert!(r.failed_over > 0, "no request was served off its home");
+        assert!(r.completed > 0, "nothing completed");
+        assert!(r.records > 0, "empty log");
+    }
+}

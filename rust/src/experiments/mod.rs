@@ -6,6 +6,7 @@
 //! the bench binaries reuse the same entry points.
 
 pub mod ablation;
+pub mod audit;
 pub mod common;
 pub mod fig1;
 pub mod fig2;

@@ -39,6 +39,7 @@ use crate::coordinator::{
     AttachError, AttachOptions, ConfigError, Request, RequestError, ServeStats, Server,
     ServerBuilder, ServerOptions, TenantStats, Ticket,
 };
+use crate::eventlog::{Event as LogEvent, EventKind as LogKind, EventLog};
 use crate::fault::{FaultPlan, Health};
 use crate::model::Manifest;
 use crate::runtime::service::ExecBackend;
@@ -118,6 +119,16 @@ impl FleetServerBuilder {
     /// plan replays consistently across the fleet.
     pub fn faults(mut self, plan: FaultPlan) -> Self {
         self.opts.faults = Some(Arc::new(plan));
+        self
+    }
+
+    /// Attach an append-only event log shared by every member server:
+    /// each device stamps its records with its device index, and the
+    /// fleet layer adds migration/failover records. The fleet owns the
+    /// log's lifetime — it is flushed and closed when the
+    /// [`FleetServer`] drops, after every member has wound down.
+    pub fn log(mut self, log: EventLog) -> Self {
+        self.opts.log = Some(log);
         self
     }
 
@@ -221,6 +232,8 @@ pub struct FleetServer {
     requeued: AtomicU64,
     failed_over: AtomicU64,
     shed_tenants: AtomicU64,
+    /// Shared event log (fleet-owned: members carry `log_owned: false`).
+    log: Option<EventLog>,
     started: Instant,
 }
 
@@ -241,6 +254,9 @@ impl FleetServer {
             let member_opts = ServerOptions {
                 device: d,
                 k_max: dev.k_max(),
+                // The fleet closes the shared log once, after every
+                // member has wound down — members must not.
+                log_owned: false,
                 ..opts.clone()
             };
             // Reuse the registry's per-device cost model — the single
@@ -289,6 +305,7 @@ impl FleetServer {
             requeued: AtomicU64::new(0),
             failed_over: AtomicU64::new(0),
             shed_tenants: AtomicU64::new(0),
+            log: opts.log.clone(),
             started: Instant::now(),
         })
     }
@@ -508,6 +525,21 @@ impl FleetServer {
                     if t.device != t.home {
                         t.failed_over += 1;
                         self.failed_over.fetch_add(1, Ordering::SeqCst);
+                        if let Some(log) = &self.log {
+                            // Fleet-scoped record: `tenant` is the FLEET
+                            // handle (a separate namespace from member
+                            // handles), `device` the home placement,
+                            // `aux` the serving failover target.
+                            let mut ev = LogEvent::new(
+                                LogKind::Failover,
+                                self.now(),
+                                t.home,
+                                handle.0,
+                                t.class,
+                            );
+                            ev.aux = t.device as u16;
+                            log.emit(ev);
+                        }
                     }
                     Some((i, t.device, t.inner))
                 }
@@ -642,6 +674,12 @@ impl FleetServer {
             let mut per = lock_or_recover(&self.per_device_migrations);
             per[src] += 1;
             per[to_device] += 1;
+        }
+        if let Some(log) = &self.log {
+            // `device` = source, `aux` = target, `tenant` = fleet handle.
+            let mut ev = LogEvent::new(LogKind::Migrate, self.now(), src, handle.0, class);
+            ev.aux = to_device as u16;
+            log.emit(ev);
         }
         Ok(true)
     }
@@ -817,6 +855,20 @@ impl FleetServer {
             }
         }
         self.failovers.fetch_add(1, Ordering::SeqCst);
+        if let Some(log) = &self.log {
+            // Outage marker: one record per handled device outage
+            // (`tenant` = sentinel, distinct from the per-request
+            // off-home `Failover` records emitted on the submit path).
+            let mut ev = LogEvent::new(
+                LogKind::Failover,
+                self.now(),
+                device,
+                u64::MAX,
+                SloClass::Standard,
+            );
+            ev.marker = true;
+            log.emit(ev);
+        }
         moved
     }
 
@@ -939,6 +991,19 @@ impl FleetServer {
             requeued: self.requeued.load(Ordering::SeqCst),
             failed_over: self.failed_over.load(Ordering::SeqCst),
             shed_tenants: self.shed_tenants.load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl Drop for FleetServer {
+    fn drop(&mut self) {
+        // Members share the fleet's log with `log_owned: false`; wind
+        // them down first (joining their emitting threads), then flush,
+        // fsync, and truncate the log exactly once.
+        let log = self.log.take();
+        self.servers.clear();
+        if let Some(log) = log {
+            log.close();
         }
     }
 }

@@ -14,6 +14,7 @@
 //! same construction).
 
 use crate::analytic::{Config, Tenant};
+use crate::eventlog::{Event as LogEvent, EventKind as LogKind};
 use crate::sim::{SimOptions, SimResult, Simulator};
 use crate::util::rng::Rng;
 use crate::workload::{generate_arrivals, split_by_placement, Arrival, RateSchedule};
@@ -227,6 +228,23 @@ pub fn run_fleet_failover(
             match target[a.model] {
                 Some(t) => {
                     failed_over[a.model] += 1;
+                    if a.time >= opts.warmup {
+                        if let Some(log) = &opts.log {
+                            // Same record the live submit path emits for
+                            // an off-home request: `tenant` is the GLOBAL
+                            // tenant index (the fleet-level namespace),
+                            // `device` the home, `aux` the landing device.
+                            let mut ev = LogEvent::new(
+                                LogKind::Failover,
+                                a.time,
+                                home,
+                                a.model as u64,
+                                a.class,
+                            );
+                            ev.aux = t as u16;
+                            log.emit(ev);
+                        }
+                    }
                     t
                 }
                 None => {

@@ -19,6 +19,7 @@ pub mod alloc;
 pub mod analytic;
 pub mod config;
 pub mod coordinator;
+pub mod eventlog;
 pub mod experiments;
 pub mod fault;
 pub mod fleet;

@@ -14,9 +14,13 @@
 //!   placement                run the two-level fleet allocator, print the
 //!                            tenant→device assignment + per-device plans
 //!   serve                    live serving demo with a dynamic tenant set
-//!                            (--devices N serves through the fleet router)
+//!                            (--devices N serves through the fleet router;
+//!                            --log FILE records the binary event log)
 //!   trace                    record a Poisson arrival trace for replay
-//!   replay                   plan + simulate a recorded trace
+//!   replay                   plan + simulate a recorded trace (JSON trace
+//!                            or a binary event log with --models)
+//!   audit [FILE]             replay an event log into materialized views
+//!                            (no FILE: run the audit experiment)
 //!
 //! Common options: --artifacts DIR --hw FILE --seed N --horizon S
 //!                 --models a,b --rates x,y --rho R
@@ -31,10 +35,11 @@ use swapless::experiments::common::save_result;
 use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 25] = [
+const VALUE_OPTS: [&str; 27] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
     "trace", "policy", "duration", "attach-at", "detach-at", "backend", "discipline", "classes",
     "queue-cap", "overload", "deadline-ms", "devices", "crash-device", "crash-at", "recover-at",
+    "log", "offset",
 ];
 
 fn main() {
@@ -76,6 +81,15 @@ fn usage() -> String {
                                    run the two-level fleet allocator: print the\n\
                                    tenant->device assignment, each device's (P, K)\n\
                                    plan, and the predicted fleet objective\n\
+       audit [FILE] [--offset BYTES]\n\
+                                   replay a binary event log into the incremental\n\
+                                   view layer and print the materialized rollup\n\
+                                   (per-tenant/class/device counters); --offset\n\
+                                   starts mid-file at a record boundary; without\n\
+                                   FILE, runs the audit experiment: a logged\n\
+                                   2-device chaos run whose log-derived rollup\n\
+                                   must match the live ServeStats bit-exactly\n\
+                                   (results/audit.json; non-zero exit on drift)\n\
        serve [--models a,b] [--rates x,y | --rho R] [--classes c1,c2]\n\
              [--devices N] [--duration S] [--time-scale S]\n\
              [--discipline fifo|priority|wfq|spsf]\n\
@@ -83,6 +97,7 @@ fn usage() -> String {
              [--deadline-ms D] [--attach-at name@t[:rate],...]\n\
              [--detach-at name@t,...] [--backend auto|pjrt|emulated]\n\
              [--crash-device D --crash-at S [--recover-at S]]\n\
+             [--log FILE]\n\
                                    live serving with a dynamic tenant set; classes\n\
                                    (interactive|standard|batch) align with --models;\n\
                                    --rho drives open-loop load at a TPU load factor\n\
@@ -93,15 +108,21 @@ fn usage() -> String {
                                    (placement-aware dispatch + migration;\n\
                                    --attach-at/--detach-at not supported there);\n\
                                    --crash-device/--crash-at inject a chaos crash\n\
-                                   into a fleet run (failover requeues its work)\n\
+                                   into a fleet run (failover requeues its work);\n\
+                                   --log FILE appends the binary request event\n\
+                                   log off the hot path (audit/replay it later)\n\
        trace --models a,b --rates x,y [--horizon S] [--seed N] [--out FILE]\n\
                                    record a Poisson arrival trace (JSON)\n\
        replay --trace FILE [--policy swapless|compiler|threshold]\n\
               [--discipline fifo|priority|wfq|spsf] [--queue-cap N]\n\
               [--overload block|reject|shed|deadline] [--deadline-ms D]\n\
+              [--models a,b]\n\
                                    plan from the trace's empirical rates, then\n\
                                    simulate the exact recorded arrivals (deadlines\n\
-                                   from a v3 trace, or --deadline-ms for all)\n\
+                                   from a v3 trace, or --deadline-ms for all);\n\
+                                   FILE may be a binary event log (v4) — its\n\
+                                   entry records become the arrivals, --models\n\
+                                   names the tenant handles in attach order\n\
      common options: --artifacts DIR (default artifacts; synthetic manifest if\n\
      missing) --hw FILE --seed N --horizon S --rho R"
         .to_string()
@@ -238,6 +259,10 @@ fn run(raw: &[String]) -> Result<(), String> {
         }
         "trace" => trace_record(&ctx, &args),
         "replay" => trace_replay(&ctx, &args),
+        "audit" => match args.positional.get(1) {
+            Some(path) => audit_log(path, &args),
+            None => run_named(&ctx, "audit"),
+        },
         // Unknown commands print the full usage and exit non-zero via
         // main's error path.
         _ => Err(usage()),
@@ -354,7 +379,22 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
     let path = args
         .opt("trace")
         .ok_or_else(|| "replay needs --trace FILE".to_string())?;
-    let (mut arrivals, names) = trace::load(path)?;
+    // A binary event log (v4) replays its entry records; tenant handles
+    // carry no model names, so --models must supply them in attach order.
+    let (mut arrivals, names) = if trace::is_event_log(path) {
+        let (arrivals, n_models) = trace::load_log(path)?;
+        let names = args.opt_list("models");
+        if names.len() != n_models {
+            return Err(format!(
+                "replaying an event log needs --models naming its {n_models} \
+                 tenant handle(s) in attach order (got {})",
+                names.len()
+            ));
+        }
+        (arrivals, names)
+    } else {
+        trace::load(path)?
+    };
     // --deadline-ms D annotates every arrival with a relative deadline
     // (overriding any recorded in a v3 trace).
     if let Some(ms) = args.opt("deadline-ms") {
@@ -459,6 +499,66 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `swapless audit FILE [--offset BYTES]` — replay a binary event log
+/// through the incremental view layer and print the materialized rollup.
+/// `--offset` starts mid-file (must land on a record boundary); the
+/// resulting rollup equals a full replay minus the skipped prefix.
+fn audit_log(path: &str, args: &cli::Args) -> Result<(), String> {
+    use swapless::eventlog::{read_from, views::Rollup, RECORD_BYTES};
+    let offset = args.opt_u64("offset", 0)?;
+    if offset % RECORD_BYTES as u64 != 0 {
+        return Err(format!(
+            "--offset {offset} is not a record boundary (records are {RECORD_BYTES} bytes)"
+        ));
+    }
+    let events = read_from(path, offset)?;
+    let r = Rollup::replay(&events);
+    let t = r.totals();
+    println!("audit {path} from byte {offset}: {} records", r.records);
+    println!(
+        "rollup: accepted={} rejected={} shed={} expired={} cancelled={} \
+         dropped={} goodput={} started={} completed={}",
+        t.accepted,
+        t.rejected,
+        t.shed,
+        t.expired,
+        t.cancelled,
+        t.dropped(),
+        r.goodput(),
+        r.started,
+        t.completed,
+    );
+    println!(
+        "fleet: migrations={} failovers={} failed_over={}",
+        r.migrations, r.failovers, r.failed_over
+    );
+    for (d, c) in r.per_device.iter().enumerate() {
+        println!(
+            "device {d}: completed={} accepted={} rejected={} shed={} expired={} cancelled={}",
+            c.completed, c.accepted, c.rejected, c.shed, c.expired, c.cancelled
+        );
+    }
+    for ((d, h), c) in &r.per_tenant {
+        println!(
+            "  tenant {h} @ device {d}: accepted={} completed={} rejected={} dropped={}",
+            c.accepted,
+            c.completed,
+            c.rejected,
+            c.dropped()
+        );
+    }
+    for (class, hist) in r.per_class.non_empty() {
+        println!(
+            "  class {:<11}: n={} mean {:.1} ms p99 {:.1} ms",
+            class.name(),
+            hist.count(),
+            hist.mean() * 1e3,
+            hist.percentile(99.0) * 1e3
+        );
+    }
+    Ok(())
+}
+
 fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
     match which {
         "ablation" => {
@@ -495,6 +595,15 @@ fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
             let r = exp::faults::run(ctx)?;
             r.print();
             save_result("faults", &r.to_json())
+        }
+        "audit" => {
+            let r = exp::audit::run(ctx)?;
+            r.print();
+            save_result("audit", &r.to_json())?;
+            if !r.passed {
+                return Err("audit: log-derived rollup diverged from live stats".into());
+            }
+            Ok(())
         }
         _ => Err(format!("unknown experiment {which}")),
     }
@@ -594,7 +703,9 @@ fn serve_fleet(
 ) -> Result<(), String> {
     use swapless::analytic::TenantHandle;
     use swapless::coordinator::{AttachOptions, Request};
+    use swapless::eventlog::EventLog;
     use swapless::fleet::{Fleet, FleetServerBuilder};
+    use swapless::metrics::{fmt_device_line, fmt_fleet_faults_line, fmt_log_line};
     use swapless::runtime::service::ExecBackend;
     use swapless::sched::{DisciplineKind, OverloadPolicy, SloClass};
     use swapless::util::rng::Rng;
@@ -682,6 +793,12 @@ fn serve_fleet(
         "emulated" => ExecBackend::Emulated,
         other => return Err(format!("unknown --backend {other}")),
     };
+    // --log FILE records every request lifecycle transition (including
+    // fleet-level migrate/failover records) to a binary append-only log.
+    let log = match args.opt("log") {
+        Some(path) => Some(EventLog::create(path)?),
+        None => None,
+    };
     // Chaos injection: --crash-device D --crash-at S [--recover-at S]
     // builds a one-crash FaultPlan against the run's wall clock.
     let crash = match args.opt("crash-device") {
@@ -734,6 +851,9 @@ fn serve_fleet(
         builder = builder.faults(
             swapless::fault::FaultPlan::new(args.opt_u64("seed", 42)?).crash(d, at, recover),
         );
+    }
+    if let Some(l) = &log {
+        builder = builder.log(l.clone());
     }
     let server = builder.build().map_err(|e| e.to_string())?;
     println!(
@@ -841,21 +961,28 @@ fn serve_fleet(
         stats.migrations
     );
     println!(
-        "fleet faults: failovers={} requeued={} failed_over={} shed_tenants={}",
-        stats.failovers, stats.requeued, stats.failed_over, stats.shed_tenants
+        "{}",
+        fmt_fleet_faults_line(
+            stats.failovers,
+            stats.requeued,
+            stats.failed_over,
+            stats.shed_tenants
+        )
     );
     for (d, s) in stats.per_device.iter().enumerate() {
         println!(
-            "device {d}: completed={} accepted={} rejected={} shed={} expired={} \
-             failed={} reconfigs={} migrations={}",
-            s.completed,
-            s.accepted,
-            s.rejected,
-            s.shed,
-            s.expired,
-            s.failed,
-            s.reconfigs,
-            s.migrations
+            "{}",
+            fmt_device_line(
+                d,
+                s.completed,
+                s.accepted,
+                s.rejected,
+                s.shed,
+                s.expired,
+                s.failed,
+                s.reconfigs,
+                s.migrations
+            )
         );
         for t in &s.per_tenant {
             if t.latency.count() > 0 {
@@ -880,6 +1007,13 @@ fn serve_fleet(
             hist.percentile(99.0) * 1e3
         );
     }
+    if let Some(log) = log {
+        // Dropping the fleet server winds down every member, then closes
+        // the shared log (drain + fsync + truncate). Report the writer's
+        // accounting once the file is final.
+        drop(server);
+        println!("{}", fmt_log_line(log.appended(), log.dropped()));
+    }
     Ok(())
 }
 
@@ -890,6 +1024,8 @@ fn serve_fleet(
 fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), String> {
     use swapless::analytic::{Config, TenantHandle};
     use swapless::coordinator::{AttachOptions, Request, ServerBuilder};
+    use swapless::eventlog::EventLog;
+    use swapless::metrics::{fmt_log_line, fmt_overload_line};
     use swapless::model::ModelMeta;
     use swapless::runtime::service::ExecBackend;
     use swapless::sched::{DisciplineKind, OverloadPolicy, SloClass};
@@ -981,6 +1117,12 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         "emulated" => ExecBackend::Emulated,
         other => return Err(format!("unknown --backend {other}")),
     };
+    // --log FILE records every request lifecycle transition to a binary
+    // append-only log off the hot path (audit / replay it afterwards).
+    let log = match args.opt("log") {
+        Some(path) => Some(EventLog::create(path)?),
+        None => None,
+    };
 
     let mut schedule: Vec<LifecycleEvent> = parse_lifecycle(args, "attach-at", true, 2.0)?;
     schedule.extend(parse_lifecycle(args, "detach-at", false, 0.0)?);
@@ -998,6 +1140,9 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         .adaptive(true);
     if let Some(cap) = queue_cap {
         builder = builder.queue_capacity(cap);
+    }
+    if let Some(l) = &log {
+        builder = builder.log(l.clone());
     }
     let server = builder.build().map_err(|e| e.to_string())?;
     println!(
@@ -1125,16 +1270,17 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
         stats.decision_micros.len()
     );
     println!(
-        "overload: accepted={} rejected={} shed={} expired={} cancelled={} \
-         dropped={} goodput={} failed={}",
-        stats.accepted,
-        stats.rejected,
-        stats.shed,
-        stats.expired,
-        stats.cancelled,
-        stats.dropped(),
-        stats.goodput(),
-        stats.failed,
+        "{}",
+        fmt_overload_line(
+            stats.accepted,
+            stats.rejected,
+            stats.shed,
+            stats.expired,
+            stats.cancelled,
+            stats.dropped(),
+            stats.goodput(),
+            stats.failed,
+        )
     );
     for t in &stats.per_tenant {
         if t.latency.count() > 0 {
@@ -1160,6 +1306,14 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
             stats.per_class.dropped(class),
             stats.per_class.goodput(class),
         );
+    }
+    if let Some(log) = log {
+        // Dropping the server closes the log (drain + fsync + truncate);
+        // the attach closure borrows it, so that goes first. Report the
+        // writer's accounting once the file is final.
+        drop(attach);
+        drop(server);
+        println!("{}", fmt_log_line(log.appended(), log.dropped()));
     }
     Ok(())
 }

@@ -315,6 +315,11 @@ impl PerClassLatency {
         self.retried[class.index()]
     }
 
+    /// Completions delivered after their deadline.
+    pub fn missed(&self, class: SloClass) -> u64 {
+        self.missed[class.index()]
+    }
+
     /// Requests dropped by the overload layer (everything but
     /// completions and substrate failures).
     pub fn dropped(&self, class: SloClass) -> u64 {
@@ -346,6 +351,10 @@ impl PerClassLatency {
 
     pub fn cancelled_total(&self) -> u64 {
         self.cancelled.iter().sum()
+    }
+
+    pub fn missed_total(&self) -> u64 {
+        self.missed.iter().sum()
     }
 
     pub fn retried_total(&self) -> u64 {
@@ -392,6 +401,67 @@ impl PerClassLatency {
             self.retried[i] += other.retried[i];
         }
     }
+}
+
+/// Shared formatters for the greppable end-of-run stats lines. The CLI
+/// (serve / serve --devices N) and the audit path all print outcome
+/// summaries with the same `key=value` grammar; CI greps these tokens
+/// (`fleet faults:`, `device N:`, `log:`), so the format lives in one
+/// place instead of being hand-rolled per call site.
+#[allow(clippy::too_many_arguments)]
+pub fn fmt_overload_line(
+    accepted: u64,
+    rejected: u64,
+    shed: u64,
+    expired: u64,
+    cancelled: u64,
+    dropped: u64,
+    goodput: u64,
+    failed: u64,
+) -> String {
+    format!(
+        "overload: accepted={accepted} rejected={rejected} shed={shed} \
+         expired={expired} cancelled={cancelled} dropped={dropped} \
+         goodput={goodput} failed={failed}"
+    )
+}
+
+/// The chaos-CI anchor line — the `fleet faults:` token must stay stable.
+pub fn fmt_fleet_faults_line(
+    failovers: u64,
+    requeued: u64,
+    failed_over: u64,
+    shed_tenants: u64,
+) -> String {
+    format!(
+        "fleet faults: failovers={failovers} requeued={requeued} \
+         failed_over={failed_over} shed_tenants={shed_tenants}"
+    )
+}
+
+/// One per-device outcome line of a fleet run.
+#[allow(clippy::too_many_arguments)]
+pub fn fmt_device_line(
+    device: usize,
+    completed: u64,
+    accepted: u64,
+    rejected: u64,
+    shed: u64,
+    expired: u64,
+    failed: u64,
+    reconfigs: u64,
+    migrations: u64,
+) -> String {
+    format!(
+        "device {device}: completed={completed} accepted={accepted} \
+         rejected={rejected} shed={shed} expired={expired} failed={failed} \
+         reconfigs={reconfigs} migrations={migrations}"
+    )
+}
+
+/// Event-log accounting for a logged run (appended vs drop-and-count).
+pub fn fmt_log_line(appended: u64, dropped: u64) -> String {
+    format!("log: appended={appended} dropped={dropped}")
 }
 
 /// Mean absolute percentage error — the paper's model-validation metric.
@@ -602,6 +672,27 @@ mod tests {
         assert_eq!(pc.accepted(SloClass::Interactive), 6);
         assert_eq!(pc.rejected(SloClass::Interactive), 1);
         assert_eq!(pc.goodput_total(), 1);
+    }
+
+    #[test]
+    fn stats_line_formatters_keep_grep_tokens_stable() {
+        assert_eq!(
+            fmt_overload_line(10, 2, 3, 4, 1, 8, 9, 0),
+            "overload: accepted=10 rejected=2 shed=3 expired=4 cancelled=1 \
+             dropped=8 goodput=9 failed=0"
+        );
+        let faults = fmt_fleet_faults_line(1, 5, 37, 0);
+        assert!(faults.starts_with("fleet faults: "), "{faults}");
+        assert_eq!(
+            faults,
+            "fleet faults: failovers=1 requeued=5 failed_over=37 shed_tenants=0"
+        );
+        assert_eq!(
+            fmt_device_line(1, 100, 120, 3, 2, 1, 0, 4, 2),
+            "device 1: completed=100 accepted=120 rejected=3 shed=2 expired=1 \
+             failed=0 reconfigs=4 migrations=2"
+        );
+        assert_eq!(fmt_log_line(1234, 0), "log: appended=1234 dropped=0");
     }
 
     #[test]

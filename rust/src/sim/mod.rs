@@ -28,6 +28,7 @@
 use std::collections::BinaryHeap;
 
 use crate::analytic::{Config, Tenant, TenantHandle};
+use crate::eventlog::{Event as LogEvent, EventKind as LogKind, EventLog};
 use crate::fault::{FaultPlan, RETRY_BACKOFF_S, RETRY_BUDGET};
 use crate::metrics::{LatencyHistogram, PerClassLatency, TimeSeries, Welford};
 use crate::sched::{
@@ -72,6 +73,12 @@ pub struct SimOptions {
     /// transient windows replay the live worker's bounded retry loop in
     /// virtual time, and slowdown windows stretch TPU service.
     pub faults: Option<FaultPlan>,
+    /// Append-only event log (`None` = off). The DES emits the same
+    /// binary records as the live server, timestamped in *virtual* time
+    /// (entry records carry the request's arrival instant, so a logged
+    /// run doubles as a replayable trace). The multi-device DES shares
+    /// one log across its per-device simulators via `..opts.clone()`.
+    pub log: Option<EventLog>,
 }
 
 impl Default for SimOptions {
@@ -86,6 +93,7 @@ impl Default for SimOptions {
             overload: OverloadPolicy::Block,
             device: 0,
             faults: None,
+            log: None,
         }
     }
 }
@@ -412,12 +420,25 @@ impl Simulator {
             return;
         }
         let latency = now - req.arrived;
+        let missed = req.deadline.map(|d| now > d).unwrap_or(false);
         self.stats[i].completed += 1;
         self.stats[i].latency.record(latency);
         self.weighted_latency.add(latency);
         self.class_latency.record(req.class, latency);
-        if req.deadline.map(|d| now > d).unwrap_or(false) {
+        if missed {
             self.class_latency.record_miss(req.class);
+        }
+        if let Some(log) = &self.opts.log {
+            let mut ev = LogEvent::new(
+                LogKind::Complete,
+                now,
+                self.opts.device,
+                req.tenant.0,
+                req.class,
+            );
+            ev.value = latency;
+            ev.missed = missed;
+            log.emit(ev);
         }
         if let Some(ts) = &mut self.timeline {
             ts.record(now, latency);
@@ -427,25 +448,47 @@ impl Simulator {
     /// Count a request the overload layer resolved short of completion —
     /// identical bucket semantics to the live server's `count`. Warmup
     /// arrivals are excluded (same per-request filter as completions).
-    fn count_drop(&mut self, req: &Request, kind: DropKind) {
+    /// `entry` marks a refusal at the request's entry station (the
+    /// request never entered the system) — entry-marked records are what
+    /// trace extraction replays as arrivals.
+    fn count_drop(&mut self, req: &Request, kind: DropKind, entry: bool) {
         if req.arrived < self.opts.warmup {
             return;
         }
         match self.index_of(req.tenant) {
-            Some(i) => match kind {
-                DropKind::Rejected => {
-                    self.stats[i].rejected += 1;
-                    self.class_latency.record_reject(req.class);
+            Some(i) => {
+                let log_kind = match kind {
+                    DropKind::Rejected => {
+                        self.stats[i].rejected += 1;
+                        self.class_latency.record_reject(req.class);
+                        LogKind::Reject
+                    }
+                    DropKind::Shed => {
+                        self.stats[i].shed += 1;
+                        self.class_latency.record_shed(req.class);
+                        LogKind::Shed
+                    }
+                    DropKind::Expired => {
+                        self.stats[i].expired += 1;
+                        self.class_latency.record_expired(req.class);
+                        LogKind::Expire
+                    }
+                };
+                if let Some(log) = &self.opts.log {
+                    let mut ev = LogEvent::new(
+                        log_kind,
+                        req.arrived,
+                        self.opts.device,
+                        req.tenant.0,
+                        req.class,
+                    );
+                    ev.entry = entry;
+                    if let Some(d) = req.deadline {
+                        ev.value = d;
+                    }
+                    log.emit(ev);
                 }
-                DropKind::Shed => {
-                    self.stats[i].shed += 1;
-                    self.class_latency.record_shed(req.class);
-                }
-                DropKind::Expired => {
-                    self.stats[i].expired += 1;
-                    self.class_latency.record_expired(req.class);
-                }
-            },
+            }
             // Detached while queued: the churn counter owns it.
             None => self.dropped += 1,
         }
@@ -457,6 +500,23 @@ impl Simulator {
         }
         self.stats[i].accepted += 1;
         self.class_latency.record_accept(req.class);
+        if let Some(log) = &self.opts.log {
+            // Timestamped at the ARRIVAL instant: replaying the log's
+            // entry records reconstructs this run's arrival process
+            // exactly (trace format v4).
+            let mut ev = LogEvent::new(
+                LogKind::Admit,
+                req.arrived,
+                self.opts.device,
+                req.tenant.0,
+                req.class,
+            );
+            ev.entry = true;
+            if let Some(d) = req.deadline {
+                ev.value = d;
+            }
+            log.emit(ev);
+        }
     }
 
     fn start_tpu_if_idle(&mut self, now: f64) {
@@ -467,7 +527,7 @@ impl Simulator {
         // no longer meet their deadline — same rule as the live workers.
         if self.opts.overload == OverloadPolicy::DeadlineDrop {
             for (_, req) in self.tpu_queue.drain_expired(now) {
-                self.count_drop(&req, DropKind::Expired);
+                self.count_drop(&req, DropKind::Expired, false);
             }
         }
         let Some((_, req)) = self.tpu_queue.pop() else {
@@ -484,6 +544,19 @@ impl Simulator {
             self.enqueue_cpu(req, now, false);
             self.start_tpu_if_idle(now);
             return;
+        }
+        if req.arrived >= self.opts.warmup {
+            if let Some(log) = &self.opts.log {
+                // Same service-start point as the live TPU worker (after
+                // the eviction/liveness gates, before the cache access).
+                log.emit(LogEvent::new(
+                    LogKind::Start,
+                    now,
+                    self.opts.device,
+                    req.tenant.0,
+                    req.class,
+                ));
+            }
         }
         let memo = &self.memo[i];
         let hit = self
@@ -580,10 +653,10 @@ impl Simulator {
                     self.count_accept(i, &req);
                 }
                 for (_, victim) in shed {
-                    self.count_drop(&victim, DropKind::Shed);
+                    self.count_drop(&victim, DropKind::Shed, false);
                 }
                 for (_, victim) in expired {
-                    self.count_drop(&victim, DropKind::Expired);
+                    self.count_drop(&victim, DropKind::Expired, false);
                 }
             }
             Offer::Rejected {
@@ -593,14 +666,17 @@ impl Simulator {
                 ..
             } => {
                 for (_, victim) in expired {
-                    self.count_drop(&victim, DropKind::Expired);
+                    self.count_drop(&victim, DropKind::Expired, false);
                 }
                 match reason {
                     RejectReason::Overloaded(_) => self.count_drop(
                         &refused,
                         if entry { DropKind::Rejected } else { DropKind::Shed },
+                        entry,
                     ),
-                    RejectReason::Expired => self.count_drop(&refused, DropKind::Expired),
+                    RejectReason::Expired => {
+                        self.count_drop(&refused, DropKind::Expired, entry)
+                    }
                 }
             }
         }
@@ -610,7 +686,7 @@ impl Simulator {
     fn start_cpu_if_possible(&mut self, m: usize, now: f64) {
         if self.opts.overload == OverloadPolicy::DeadlineDrop {
             for (_, req) in self.cpu_queues[m].drain_expired(now) {
-                self.count_drop(&req, DropKind::Expired);
+                self.count_drop(&req, DropKind::Expired, false);
             }
         }
         let k = self.cfg.cores[m];
@@ -622,6 +698,17 @@ impl Simulator {
             let Some((_, req)) = self.cpu_queues[m].pop() else {
                 return;
             };
+            if req.arrived >= self.opts.warmup {
+                if let Some(log) = &self.opts.log {
+                    log.emit(LogEvent::new(
+                        LogKind::Start,
+                        now,
+                        self.opts.device,
+                        req.tenant.0,
+                        req.class,
+                    ));
+                }
+            }
             let service = self.memo[m].cpu_service;
             self.cpu_busy[m] += 1;
             self.heap.push(Event::at(
@@ -817,10 +904,10 @@ impl Simulator {
                         Offer::Admitted { shed, expired } => {
                             self.count_accept(i, &req);
                             for (_, victim) in shed {
-                                self.count_drop(&victim, DropKind::Shed);
+                                self.count_drop(&victim, DropKind::Shed, false);
                             }
                             for (_, victim) in expired {
-                                self.count_drop(&victim, DropKind::Expired);
+                                self.count_drop(&victim, DropKind::Expired, false);
                             }
                         }
                         Offer::Rejected {
@@ -830,14 +917,14 @@ impl Simulator {
                             ..
                         } => {
                             for (_, victim) in expired {
-                                self.count_drop(&victim, DropKind::Expired);
+                                self.count_drop(&victim, DropKind::Expired, false);
                             }
                             match reason {
                                 RejectReason::Overloaded(_) => {
-                                    self.count_drop(&refused, DropKind::Rejected)
+                                    self.count_drop(&refused, DropKind::Rejected, true)
                                 }
                                 RejectReason::Expired => {
-                                    self.count_drop(&refused, DropKind::Expired)
+                                    self.count_drop(&refused, DropKind::Expired, true)
                                 }
                             }
                         }

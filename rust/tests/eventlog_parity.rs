@@ -1,0 +1,318 @@
+//! Event-log parity: the append-only binary log must be a *sufficient
+//! statistic* for a run's outcome counters. These tests pin it four ways:
+//!
+//! 1. across random workloads × disciplines × overload policies, a
+//!    rollup replayed from the log reproduces the DES's per-tenant and
+//!    per-class counts bit-exactly (property test);
+//! 2. a replay from any mid-file record boundary merged onto the prefix
+//!    rollup equals the full replay (incremental-view property);
+//! 3. a torn tail (a crash mid-append) is detected by length and
+//!    skipped, while 40-byte-aligned corruption is a loud error;
+//! 4. a logged run round-trips as a trace (format v4): the entry
+//!    records reconstruct the arrival stream exactly, and re-simulating
+//!    them reproduces the original per-tenant completion counts.
+
+use std::path::PathBuf;
+
+use swapless::analytic::{Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::eventlog::views::Rollup;
+use swapless::eventlog::{read_all, read_from, Event, EventKind, EventLog, RECORD_BYTES};
+use swapless::model::synthetic_model;
+use swapless::sched::{DisciplineKind, OverloadPolicy, SloClass};
+use swapless::sim::{SimOptions, Simulator};
+use swapless::tpu::CostModel;
+use swapless::util::rng::Rng;
+use swapless::workload::{generate_arrivals_annotated, trace, RateSchedule};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("swapless-{name}-{}.log", std::process::id()))
+}
+
+fn random_tenants(rng: &mut Rng) -> Vec<Tenant> {
+    let n = 2 + rng.below(3);
+    (0..n)
+        .map(|i| {
+            let segs = 2 + rng.below(8);
+            let mb_total = rng.range_f64(1.0, 30.0);
+            let gflops = rng.range_f64(0.2, 8.0);
+            Tenant {
+                model: synthetic_model(
+                    &format!("m{i}"),
+                    segs,
+                    (mb_total * 1e6 / segs as f64) as u64,
+                    (gflops * 1e9 / segs as f64) as u64,
+                ),
+                rate: rng.range_f64(0.5, 5.0),
+            }
+        })
+        .collect()
+}
+
+/// Build a random annotated workload and run it through a logged DES.
+/// Returns the sim result and the closed log's events.
+fn logged_run(
+    seed: u64,
+    discipline: DisciplineKind,
+    policy: OverloadPolicy,
+    warmup: f64,
+    device: usize,
+    path: &std::path::Path,
+) -> (swapless::sim::SimResult, Vec<Event>) {
+    const ARRIVAL_SPAN: f64 = 20.0;
+    let cost = CostModel::new(HardwareSpec::default());
+    let mut rng = Rng::new(seed);
+    let tenants = random_tenants(&mut rng);
+    let n = tenants.len();
+    // Constraint-consistent split: a CPU suffix needs cores, full-TPU
+    // holds none (analytic::check_constraints (8)).
+    let partitions: Vec<usize> = tenants
+        .iter()
+        .map(|t| rng.below(t.model.partition_points + 1))
+        .collect();
+    let cores: Vec<usize> = partitions
+        .iter()
+        .zip(&tenants)
+        .map(|(&p, t)| {
+            if p == t.model.partition_points {
+                0
+            } else {
+                1 + rng.below(2)
+            }
+        })
+        .collect();
+    let cfg = Config { partitions, cores };
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+    let classes: Vec<SloClass> = (0..n)
+        .map(|_| SloClass::from_index(rng.below(3)).unwrap())
+        .collect();
+    let deadlines: Vec<Option<f64>> = (0..n)
+        .map(|_| {
+            if rng.f64() < 0.5 {
+                Some(rng.range_f64(0.005, 0.5))
+            } else {
+                None
+            }
+        })
+        .collect();
+    let mut arr_rng = Rng::new(seed ^ 0xABCD);
+    let arrivals =
+        generate_arrivals_annotated(&schedules, &classes, &deadlines, ARRIVAL_SPAN, &mut arr_rng);
+
+    let log = EventLog::create(path).unwrap();
+    let mut sim = Simulator::new(
+        &cost,
+        &tenants,
+        cfg,
+        SimOptions {
+            horizon: 5000.0,
+            warmup,
+            seed,
+            discipline,
+            capacity: Some(1 + rng.below(8)),
+            overload: policy,
+            device,
+            log: Some(log.clone()),
+            ..SimOptions::default()
+        },
+    );
+    let res = sim.run(&arrivals, None);
+    log.close();
+    assert_eq!(log.dropped(), 0, "seed {seed}: bounded channel overflowed");
+    let events = read_all(path).unwrap();
+    assert_eq!(events.len() as u64, log.appended(), "seed {seed}");
+    (res, events)
+}
+
+/// Property: the log-derived rollup reproduces the DES's per-tenant and
+/// per-class outcome counters bit-exactly, for every discipline and
+/// overload policy, with and without a warmup filter.
+#[test]
+fn prop_log_rollup_matches_sim_counts() {
+    let path = tmp("parity");
+    for (case, policy) in
+        (0..6u64).flat_map(|c| OverloadPolicy::ALL.into_iter().map(move |p| (c, p)))
+    {
+        let seed = 9000 + case;
+        let discipline = DisciplineKind::ALL[case as usize % DisciplineKind::ALL.len()];
+        let warmup = if case % 3 == 0 { 5.0 } else { 0.0 };
+        let device = (case % 3) as usize;
+        let (res, events) = logged_run(seed, discipline, policy, warmup, device, &path);
+        let r = Rollup::replay(&events);
+        let tag = format!("seed {seed} {discipline} {policy}");
+
+        for (m, stats) in res.per_model.iter().enumerate() {
+            let key = (device as u16, m as u64);
+            let c = r.per_tenant.get(&key).copied().unwrap_or_default();
+            assert_eq!(stats.accepted, c.accepted, "{tag} model {m} accepted");
+            assert_eq!(stats.rejected, c.rejected, "{tag} model {m} rejected");
+            assert_eq!(stats.shed, c.shed, "{tag} model {m} shed");
+            assert_eq!(stats.expired, c.expired, "{tag} model {m} expired");
+            assert_eq!(stats.completed, c.completed, "{tag} model {m} completed");
+            assert_eq!(stats.latency.count(), c.completed, "{tag} model {m} histogram");
+        }
+        for class in SloClass::ALL {
+            let (live, log) = (&res.per_class, &r.per_class);
+            assert_eq!(live.accepted(class), log.accepted(class), "{tag} {class} accepted");
+            assert_eq!(live.rejected(class), log.rejected(class), "{tag} {class} rejected");
+            assert_eq!(live.shed(class), log.shed(class), "{tag} {class} shed");
+            assert_eq!(live.expired(class), log.expired(class), "{tag} {class} expired");
+            assert_eq!(live.missed(class), log.missed(class), "{tag} {class} missed");
+            assert_eq!(live.get(class).count(), log.get(class).count(), "{tag} {class} hist");
+            assert_eq!(live.goodput(class), log.goodput(class), "{tag} {class} goodput");
+        }
+        // Every record lands on the device this sim instance models.
+        assert!(
+            r.per_device
+                .iter()
+                .enumerate()
+                .all(|(d, c)| d == device || *c == Default::default()),
+            "{tag}: records leaked onto a foreign device"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A replay from any mid-file record boundary, merged onto the prefix
+/// rollup, equals the full replay — the incremental-view property that
+/// lets an auditor resume from a checkpoint offset.
+#[test]
+fn mid_file_offset_replay_equals_full_minus_prefix() {
+    let path = tmp("offsets");
+    let (_, events) = logged_run(71, DisciplineKind::Fifo, OverloadPolicy::Reject, 0.0, 0, &path);
+    assert!(events.len() > 16, "workload too small to slice");
+    let full = Rollup::replay(&events);
+    for k in [0, 1, events.len() / 2, events.len() - 1, events.len()] {
+        let suffix = read_from(&path, (k * RECORD_BYTES) as u64).unwrap();
+        assert_eq!(suffix.len(), events.len() - k, "offset {k}");
+        let mut merged = Rollup::replay(&events[..k]);
+        merged.merge(&Rollup::replay(&suffix));
+        assert_eq!(merged.per_tenant, full.per_tenant, "offset {k} per-tenant");
+        assert_eq!(merged.per_device, full.per_device, "offset {k} per-device");
+        assert_eq!(merged.records, full.records, "offset {k} records");
+        for class in SloClass::ALL {
+            assert_eq!(
+                merged.per_class.accepted(class),
+                full.per_class.accepted(class),
+                "offset {k} {class} accepted"
+            );
+            assert_eq!(
+                merged.per_class.get(class).count(),
+                full.per_class.get(class).count(),
+                "offset {k} {class} histogram"
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A torn tail — a crash mid-append leaves a partial trailing record —
+/// is detected by length and skipped. Aligned garbage is NOT a torn
+/// tail and must be a loud error, not a silent skip.
+#[test]
+fn torn_tail_is_detected_and_skipped() {
+    use std::io::Write;
+    let path = tmp("torn");
+    let log = EventLog::create(&path).unwrap();
+    for i in 0..10u64 {
+        let mut ev = Event::new(EventKind::Admit, 0.1 * i as f64, 0, i % 3, SloClass::Standard);
+        ev.entry = true;
+        log.emit(ev);
+    }
+    log.close();
+    assert_eq!(log.appended(), 10);
+
+    // Tear the tail: a partial record (crash mid-write).
+    let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+    f.write_all(&[0xAB; RECORD_BYTES - 1]).unwrap();
+    drop(f);
+    let events = read_all(&path).unwrap();
+    assert_eq!(events.len(), 10, "torn tail not skipped");
+    assert_eq!(events[3].tenant, 3 % 3);
+
+    // A full-length corrupt record is mid-file corruption, not a tear.
+    let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+    f.write_all(&[0xAB; RECORD_BYTES + 1]).unwrap();
+    drop(f);
+    assert!(
+        read_all(&path).is_err(),
+        "aligned corruption must not be silently skipped"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Trace format v4: a logged run's entry records reconstruct the
+/// arrival stream exactly — timestamps, tenants, classes, and absolute
+/// deadlines — and re-simulating the loaded trace reproduces the
+/// original per-tenant completion counts.
+#[test]
+fn logged_sim_run_round_trips_as_trace_v4() {
+    const ARRIVAL_SPAN: f64 = 20.0;
+    let path = tmp("roundtrip");
+    let cost = CostModel::new(HardwareSpec::default());
+    let tenants = vec![
+        Tenant {
+            model: synthetic_model("a", 4, 800_000, 300_000_000),
+            rate: 3.0,
+        },
+        Tenant {
+            model: synthetic_model("b", 5, 900_000, 350_000_000),
+            rate: 2.0,
+        },
+    ];
+    let cfg = Config::all_tpu(&tenants);
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+    let classes = vec![SloClass::Interactive, SloClass::Batch];
+    let deadlines = vec![Some(0.25), None];
+    let mut rng = Rng::new(4242);
+    let arrivals =
+        generate_arrivals_annotated(&schedules, &classes, &deadlines, ARRIVAL_SPAN, &mut rng);
+    let opts = SimOptions {
+        horizon: 5000.0,
+        warmup: 0.0,
+        seed: 4242,
+        discipline: DisciplineKind::Fifo,
+        capacity: Some(4),
+        overload: OverloadPolicy::Reject,
+        ..SimOptions::default()
+    };
+
+    let log = EventLog::create(&path).unwrap();
+    let mut sim = Simulator::new(
+        &cost,
+        &tenants,
+        cfg.clone(),
+        SimOptions {
+            log: Some(log.clone()),
+            ..opts.clone()
+        },
+    );
+    let first = sim.run(&arrivals, None);
+    log.close();
+    assert_eq!(log.dropped(), 0);
+
+    // The binary log sniffs as a log, a JSON trace does not (covered in
+    // the unit tests); entry records reconstruct the arrivals exactly.
+    let p = path.to_str().unwrap();
+    assert!(trace::is_event_log(p));
+    let (loaded, n_models) = trace::load_log(p).unwrap();
+    assert_eq!(n_models, tenants.len());
+    let msg = "entry records must reconstruct the arrival stream bit-exactly";
+    assert_eq!(loaded, arrivals, "{msg}");
+
+    // Replaying the loaded trace pins the original per-tenant outcome.
+    let mut resim = Simulator::new(&cost, &tenants, cfg, opts);
+    let second = resim.run(&loaded, None);
+    for (m, (a, b)) in first.per_model.iter().zip(&second.per_model).enumerate() {
+        assert_eq!(a.completed, b.completed, "model {m} completed");
+        assert_eq!(a.accepted, b.accepted, "model {m} accepted");
+        assert_eq!(a.rejected, b.rejected, "model {m} rejected");
+    }
+    let _ = std::fs::remove_file(&path);
+}

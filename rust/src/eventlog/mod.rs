@@ -39,8 +39,8 @@
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -220,21 +220,50 @@ impl Event {
     }
 }
 
-struct LogInner {
-    tx: Mutex<Option<SyncSender<Event>>>,
-    thread: Mutex<Option<JoinHandle<()>>>,
+/// Channel payload: records, plus the shutdown sentinel `close` enqueues
+/// so the writer can exit even while per-handle senders are still alive.
+enum Msg {
+    Record(Event),
+    Shutdown,
+}
+
+/// Counters shared between the handles and the writer thread. The writer
+/// holds only this `Arc` — never `LogInner` itself — so the last
+/// external handle dropping really does run `LogInner::drop` (a strong
+/// reference from the writer would keep the inner alive forever and the
+/// implicit close-on-last-drop would never fire).
+struct Counters {
     appended: AtomicU64,
     dropped: AtomicU64,
+}
+
+struct LogInner {
+    /// Sender reserved for the shutdown sentinel. Only `close` touches
+    /// this lock — emission goes through each handle's own sender clone.
+    tx: Mutex<Option<SyncSender<Msg>>>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+    /// Set before the sentinel is sent; emission checks it so records
+    /// emitted after close are counted dropped instead of piling up in
+    /// the (now unconsumed) channel.
+    closed: AtomicBool,
+    counters: Arc<Counters>,
     path: PathBuf,
 }
 
 impl LogInner {
     fn close(&self) {
-        // Dropping the sender closes the channel; the writer drains the
-        // backlog, flushes, truncates to a whole-record boundary, and
-        // fsyncs before exiting. Idempotent: a second call finds both
-        // slots empty.
-        drop(lock_or_recover(&self.tx).take());
+        self.closed.store(true, Ordering::SeqCst);
+        // The sentinel (a blocking send — close is allowed to wait while
+        // the backlog drains) tells the writer to stop: it cannot rely
+        // on channel disconnection because every live handle still owns
+        // a sender clone. The writer drains everything queued ahead of
+        // the sentinel, flushes, truncates to a whole-record boundary,
+        // and fsyncs before exiting. Idempotent: a second call finds
+        // both slots empty.
+        let tx = lock_or_recover(&self.tx).take();
+        if let Some(tx) = tx {
+            let _ = tx.send(Msg::Shutdown);
+        }
         if let Some(t) = lock_or_recover(&self.thread).take() {
             let _ = t.join();
         }
@@ -252,6 +281,9 @@ impl Drop for LogInner {
 /// [`close`](EventLog::close) or implicitly when the last clone drops.
 #[derive(Clone)]
 pub struct EventLog {
+    /// Per-handle sender clone: emission is lock-free; the Mutex inside
+    /// `LogInner` only coordinates `close`.
+    tx: SyncSender<Msg>,
     inner: Arc<LogInner>,
 }
 
@@ -275,38 +307,34 @@ impl EventLog {
             .truncate(true)
             .open(&path)
             .map_err(|e| format!("create {}: {e}", path.display()))?;
-        let (tx, rx) = sync_channel::<Event>(CHANNEL_CAPACITY);
-        let inner = Arc::new(LogInner {
-            tx: Mutex::new(Some(tx)),
-            thread: Mutex::new(None),
+        let (tx, rx) = sync_channel::<Msg>(CHANNEL_CAPACITY);
+        let counters = Arc::new(Counters {
             appended: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
-            path,
         });
-        let writer_inner = inner.clone();
+        let writer_counters = counters.clone();
         let handle = std::thread::Builder::new()
             .name("eventlog-writer".into())
-            .spawn(move || writer_loop(file, rx, &writer_inner))
+            .spawn(move || writer_loop(file, rx, &writer_counters))
             .map_err(|e| format!("spawn eventlog writer: {e}"))?;
-        *lock_or_recover(&inner.thread) = Some(handle);
-        Ok(EventLog { inner })
+        let inner = Arc::new(LogInner {
+            tx: Mutex::new(Some(tx.clone())),
+            thread: Mutex::new(Some(handle)),
+            closed: AtomicBool::new(false),
+            counters,
+            path,
+        });
+        Ok(EventLog { tx, inner })
     }
 
-    /// Queue a record for the writer thread. Never blocks: a full channel
-    /// (or a closed log) drops the record and bumps
+    /// Queue a record for the writer thread. Lock-free and never blocks:
+    /// a full channel (or a closed log) drops the record and bumps
     /// [`dropped`](Self::dropped).
     pub fn emit(&self, ev: Event) {
-        let tx = lock_or_recover(&self.inner.tx);
-        match tx.as_ref() {
-            Some(tx) => match tx.try_send(ev) {
-                Ok(()) => {}
-                Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
-                    self.inner.dropped.fetch_add(1, Ordering::SeqCst);
-                }
-            },
-            None => {
-                self.inner.dropped.fetch_add(1, Ordering::SeqCst);
-            }
+        if self.inner.closed.load(Ordering::SeqCst)
+            || self.tx.try_send(Msg::Record(ev)).is_err()
+        {
+            self.inner.counters.dropped.fetch_add(1, Ordering::SeqCst);
         }
     }
 
@@ -319,12 +347,12 @@ impl EventLog {
 
     /// Records durably appended by the writer thread.
     pub fn appended(&self) -> u64 {
-        self.inner.appended.load(Ordering::SeqCst)
+        self.inner.counters.appended.load(Ordering::SeqCst)
     }
 
     /// Records dropped (channel overflow or emission after close).
     pub fn dropped(&self) -> u64 {
-        self.inner.dropped.load(Ordering::SeqCst)
+        self.inner.counters.dropped.load(Ordering::SeqCst)
     }
 
     pub fn path(&self) -> &Path {
@@ -332,19 +360,32 @@ impl EventLog {
     }
 }
 
-fn writer_loop(file: File, rx: std::sync::mpsc::Receiver<Event>, inner: &LogInner) {
+fn writer_loop(file: File, rx: Receiver<Msg>, counters: &Counters) {
     let mut w = std::io::BufWriter::new(file);
     let mut written: u64 = 0;
     let mut buf = [0u8; RECORD_BYTES];
-    while let Ok(mut ev) = rx.recv() {
+    let mut append = |mut ev: Event, w: &mut std::io::BufWriter<File>| {
         ev.seq = written;
         ev.encode(&mut buf);
         if w.write_all(&buf).is_ok() {
             written += 1;
-            inner.appended.fetch_add(1, Ordering::SeqCst);
+            counters.appended.fetch_add(1, Ordering::SeqCst);
         } else {
-            inner.dropped.fetch_add(1, Ordering::SeqCst);
+            counters.dropped.fetch_add(1, Ordering::SeqCst);
         }
+    };
+    loop {
+        match rx.recv() {
+            Ok(Msg::Record(ev)) => append(ev, &mut w),
+            // Shutdown sentinel from close(), or (defensively) every
+            // sender gone. Records queued ahead of the sentinel were
+            // already drained by FIFO order; sweep any that raced in
+            // behind it before finalizing the file.
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+    }
+    while let Ok(Msg::Record(ev)) = rx.try_recv() {
+        append(ev, &mut w);
     }
     // Clean shutdown: whatever actually reached the file, cut to a
     // whole-record boundary and make it durable.

@@ -122,7 +122,7 @@ fn usage() -> String {
                                    from a v3 trace, or --deadline-ms for all);\n\
                                    FILE may be a binary event log (v4) — its\n\
                                    entry records become the arrivals, --models\n\
-                                   names the tenant handles in attach order\n\
+                                   names the tenants in (device, handle) order\n\
      common options: --artifacts DIR (default artifacts; synthetic manifest if\n\
      missing) --hw FILE --seed N --horizon S --rho R"
         .to_string()
@@ -380,14 +380,15 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
         .opt("trace")
         .ok_or_else(|| "replay needs --trace FILE".to_string())?;
     // A binary event log (v4) replays its entry records; tenant handles
-    // carry no model names, so --models must supply them in attach order.
+    // carry no model names, so --models must supply them in the log's
+    // (device, handle) order — attach order on a single-device log.
     let (mut arrivals, names) = if trace::is_event_log(path) {
         let (arrivals, n_models) = trace::load_log(path)?;
         let names = args.opt_list("models");
         if names.len() != n_models {
             return Err(format!(
                 "replaying an event log needs --models naming its {n_models} \
-                 tenant handle(s) in attach order (got {})",
+                 tenant(s) in (device, handle) order (got {})",
                 names.len()
             ));
         }

@@ -450,8 +450,10 @@ impl Simulator {
     /// arrivals are excluded (same per-request filter as completions).
     /// `entry` marks a refusal at the request's entry station (the
     /// request never entered the system) — entry-marked records are what
-    /// trace extraction replays as arrivals.
-    fn count_drop(&mut self, req: &Request, kind: DropKind, entry: bool) {
+    /// trace extraction replays as arrivals, so they are logged at the
+    /// arrival instant; post-admission drops are logged at `now`, the
+    /// virtual time the drop happens, matching the live server's stamps.
+    fn count_drop(&mut self, req: &Request, kind: DropKind, entry: bool, now: f64) {
         if req.arrived < self.opts.warmup {
             return;
         }
@@ -477,7 +479,7 @@ impl Simulator {
                 if let Some(log) = &self.opts.log {
                     let mut ev = LogEvent::new(
                         log_kind,
-                        req.arrived,
+                        if entry { req.arrived } else { now },
                         self.opts.device,
                         req.tenant.0,
                         req.class,
@@ -527,7 +529,7 @@ impl Simulator {
         // no longer meet their deadline — same rule as the live workers.
         if self.opts.overload == OverloadPolicy::DeadlineDrop {
             for (_, req) in self.tpu_queue.drain_expired(now) {
-                self.count_drop(&req, DropKind::Expired, false);
+                self.count_drop(&req, DropKind::Expired, false, now);
             }
         }
         let Some((_, req)) = self.tpu_queue.pop() else {
@@ -653,10 +655,10 @@ impl Simulator {
                     self.count_accept(i, &req);
                 }
                 for (_, victim) in shed {
-                    self.count_drop(&victim, DropKind::Shed, false);
+                    self.count_drop(&victim, DropKind::Shed, false, now);
                 }
                 for (_, victim) in expired {
-                    self.count_drop(&victim, DropKind::Expired, false);
+                    self.count_drop(&victim, DropKind::Expired, false, now);
                 }
             }
             Offer::Rejected {
@@ -666,16 +668,17 @@ impl Simulator {
                 ..
             } => {
                 for (_, victim) in expired {
-                    self.count_drop(&victim, DropKind::Expired, false);
+                    self.count_drop(&victim, DropKind::Expired, false, now);
                 }
                 match reason {
                     RejectReason::Overloaded(_) => self.count_drop(
                         &refused,
                         if entry { DropKind::Rejected } else { DropKind::Shed },
                         entry,
+                        now,
                     ),
                     RejectReason::Expired => {
-                        self.count_drop(&refused, DropKind::Expired, entry)
+                        self.count_drop(&refused, DropKind::Expired, entry, now)
                     }
                 }
             }
@@ -686,7 +689,7 @@ impl Simulator {
     fn start_cpu_if_possible(&mut self, m: usize, now: f64) {
         if self.opts.overload == OverloadPolicy::DeadlineDrop {
             for (_, req) in self.cpu_queues[m].drain_expired(now) {
-                self.count_drop(&req, DropKind::Expired, false);
+                self.count_drop(&req, DropKind::Expired, false, now);
             }
         }
         let k = self.cfg.cores[m];
@@ -904,10 +907,10 @@ impl Simulator {
                         Offer::Admitted { shed, expired } => {
                             self.count_accept(i, &req);
                             for (_, victim) in shed {
-                                self.count_drop(&victim, DropKind::Shed, false);
+                                self.count_drop(&victim, DropKind::Shed, false, now);
                             }
                             for (_, victim) in expired {
-                                self.count_drop(&victim, DropKind::Expired, false);
+                                self.count_drop(&victim, DropKind::Expired, false, now);
                             }
                         }
                         Offer::Rejected {
@@ -917,14 +920,14 @@ impl Simulator {
                             ..
                         } => {
                             for (_, victim) in expired {
-                                self.count_drop(&victim, DropKind::Expired, false);
+                                self.count_drop(&victim, DropKind::Expired, false, now);
                             }
                             match reason {
                                 RejectReason::Overloaded(_) => {
-                                    self.count_drop(&refused, DropKind::Rejected, true)
+                                    self.count_drop(&refused, DropKind::Rejected, true, now)
                                 }
                                 RejectReason::Expired => {
-                                    self.count_drop(&refused, DropKind::Expired, true)
+                                    self.count_drop(&refused, DropKind::Expired, true, now)
                                 }
                             }
                         }

@@ -142,30 +142,40 @@ pub fn is_event_log(path: &str) -> bool {
 /// Load the arrival stream recorded in a binary event log (trace format
 /// v4): the entry-marked records (`Admit`, plus entry refusals) map
 /// one-to-one onto the run's post-warmup arrivals — timestamp is the
-/// arrival instant, the tenant handle is the model index, and the value
-/// field carries the deadline. Returns the arrivals (stably re-sorted
-/// by time: per-device writer order interleaves across devices) and the
-/// model count (max handle + 1).
+/// arrival instant and the value field carries the deadline. Tenant
+/// handles are ambiguous on their own: member servers in a fleet number
+/// handles from 0 *per device* (the same collision
+/// `eventlog::views::Rollup` keys `per_tenant` by `(device, handle)`
+/// for), so the model identity is the `(device, handle)` pair, densely
+/// renumbered in `(device, handle)` order. A single-device log with
+/// contiguous handles keeps `model == handle` (attach order); a
+/// multi-device log orders models by device first, then handle. Returns
+/// the arrivals (stably re-sorted by time: per-device writer order
+/// interleaves across devices) and the distinct tenant count.
 pub fn load_log(path: &str) -> Result<(Vec<Arrival>, usize), String> {
     let events = eventlog::read_all(path)?;
-    let mut arrivals: Vec<Arrival> = events
-        .iter()
-        .filter(|e| e.entry)
-        .map(|e| Arrival {
-            time: e.t,
-            model: e.tenant as usize,
-            class: e.class,
-            deadline: e.deadline(),
-        })
-        .collect();
-    if arrivals.is_empty() {
+    let entries: Vec<&eventlog::Event> = events.iter().filter(|e| e.entry).collect();
+    if entries.is_empty() {
         return Err(format!(
             "{path}: no entry records — not a logged workload (or logging began mid-run)"
         ));
     }
+    let mut keys: Vec<(u16, u64)> = entries.iter().map(|e| (e.device, e.tenant)).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    let index: std::collections::BTreeMap<(u16, u64), usize> =
+        keys.iter().copied().zip(0..).collect();
+    let mut arrivals: Vec<Arrival> = entries
+        .iter()
+        .map(|e| Arrival {
+            time: e.t,
+            model: index[&(e.device, e.tenant)],
+            class: e.class,
+            deadline: e.deadline(),
+        })
+        .collect();
     arrivals.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap());
-    let n_models = arrivals.iter().map(|a| a.model).max().unwrap_or(0) + 1;
-    Ok((arrivals, n_models))
+    Ok((arrivals, keys.len()))
 }
 
 /// Empirical per-model rates over a trace (for planning from a recording).
@@ -314,15 +324,42 @@ mod tests {
         let (back, n_models) = load_log(&lpath).unwrap();
         assert_eq!(n_models, 2);
         assert_eq!(back.len(), 2);
-        // Re-sorted by time across devices.
+        // Re-sorted by time across devices; models are dense indices in
+        // (device, handle) order: (0,1) -> 0, (1,0) -> 1.
         assert_eq!(back[0].time, 0.125);
-        assert_eq!(back[0].model, 0);
+        assert_eq!(back[0].model, 1);
         assert_eq!(back[0].deadline, None);
-        assert_eq!(back[1].model, 1);
+        assert_eq!(back[1].model, 0);
         assert_eq!(back[1].class, SloClass::Interactive);
         assert_eq!(back[1].deadline, Some(0.75));
         let _ = std::fs::remove_file(&jpath);
         let _ = std::fs::remove_file(&lpath);
+    }
+
+    #[test]
+    fn load_log_keeps_same_handle_on_different_devices_distinct() {
+        use crate::eventlog::{Event, EventKind, EventLog};
+        let path = std::env::temp_dir().join(format!(
+            "swapless-trace-collide-{}.log",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        // Member servers number handles from 0 per device: handle 0 on
+        // device 0 and handle 0 on device 1 are different tenants.
+        let log = EventLog::create(&path).unwrap();
+        for (t, device) in [(0.1, 0), (0.2, 1), (0.3, 0), (0.4, 1)] {
+            let mut ev = Event::new(EventKind::Admit, t, device, 0, SloClass::Standard);
+            ev.entry = true;
+            log.emit(ev);
+        }
+        log.close();
+        let (back, n_models) = load_log(&path).unwrap();
+        assert_eq!(n_models, 2, "same handle on two devices = two tenants");
+        assert_eq!(
+            back.iter().map(|a| a.model).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1]
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

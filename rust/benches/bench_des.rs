@@ -1,0 +1,196 @@
+//! DES raw-speed bench: ≥1M-request workloads through the simulator on
+//! both event-queue implementations, reporting wall-clock events/sec and
+//! simulated requests per wall-minute. CI runs this as the throughput
+//! guard: the calendar queue must sustain at least
+//! [`TARGET_REQ_PER_MIN`] simulated requests per minute on the
+//! single-device workload, or the bench exits non-zero.
+
+use std::time::Instant;
+
+use swapless::analytic::{Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::fleet::{place, run_fleet, Fleet};
+use swapless::model::synthetic_model;
+use swapless::sim::{QueueKind, SimOptions, Simulator};
+use swapless::tpu::{CostModel, SramCache};
+use swapless::util::bench::{bench, black_box, print_header, print_row};
+use swapless::util::rng::Rng;
+use swapless::workload::{generate_arrivals, RateSchedule};
+
+/// The CI floor: simulated requests per wall-clock minute the calendar
+/// queue must sustain on the 1M-request single-device workload.
+const TARGET_REQ_PER_MIN: f64 = 10_000_000.0;
+
+struct RunStats {
+    completed: u64,
+    events: u64,
+    wall_s: f64,
+}
+
+impl RunStats {
+    fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_s
+    }
+
+    fn req_per_min(&self) -> f64 {
+        self.completed as f64 * 60.0 / self.wall_s
+    }
+}
+
+/// 1M-request single-tenant workload (full-TPU config, ρ ≈ 0.7),
+/// arrivals pre-generated outside the timed region.
+fn single_device(kind: QueueKind) -> RunStats {
+    let cost = CostModel::new(HardwareSpec::default());
+    let model = synthetic_model("m", 6, 1_000_000, 500_000_000);
+    let service = cost.tpu_service(&model, 6);
+    let rate = 0.6 / service;
+    let horizon = 1_000_000.0 / rate;
+    let tenants = vec![Tenant { model, rate }];
+    let cfg = Config::all_tpu(&tenants);
+    let schedules = vec![RateSchedule::constant(rate)];
+    let mut rng = Rng::new(7);
+    let arrivals = generate_arrivals(&schedules, horizon, &mut rng);
+
+    let opts = SimOptions {
+        horizon,
+        warmup: 0.0,
+        seed: 7,
+        queue: kind,
+        ..SimOptions::default()
+    };
+    let t0 = Instant::now();
+    let mut sim = Simulator::new(&cost, &tenants, cfg, opts);
+    let res = sim.run(&arrivals, None);
+    let wall_s = t0.elapsed().as_secs_f64();
+    RunStats {
+        completed: res.per_model.iter().map(|m| m.completed).sum(),
+        events: res.events,
+        wall_s,
+    }
+}
+
+/// ~1M requests across a 4-device fleet (8 tenants, two-level placement),
+/// replayed through the multi-device DES.
+fn fleet_scale(kind: QueueKind) -> RunStats {
+    let hw = HardwareSpec::default();
+    let cost = CostModel::new(hw.clone());
+    let tenants: Vec<Tenant> = (0..8)
+        .map(|i| {
+            let model = synthetic_model(&format!("m{i}"), 6, 1_000_000, 500_000_000);
+            let service = cost.tpu_service(&model, 6);
+            // Two tenants per device at ρ ≈ 0.7 once placed.
+            Tenant {
+                model,
+                rate: 0.35 / service,
+            }
+        })
+        .collect();
+    let total_rate: f64 = tenants.iter().map(|t| t.rate).sum();
+    let horizon = 1_000_000.0 / total_rate;
+    let fleet = Fleet::uniform(4, &hw);
+    let plan = place(&fleet, &tenants);
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+    let mut rng = Rng::new(11);
+    let arrivals = generate_arrivals(&schedules, horizon, &mut rng);
+
+    let opts = SimOptions {
+        horizon,
+        warmup: 0.0,
+        seed: 11,
+        queue: kind,
+        ..SimOptions::default()
+    };
+    let t0 = Instant::now();
+    let res = run_fleet(&fleet, &tenants, &plan, &arrivals, &opts);
+    let wall_s = t0.elapsed().as_secs_f64();
+    RunStats {
+        completed: res.completed,
+        events: res.per_device.iter().map(|d| d.result.events).sum(),
+        wall_s,
+    }
+}
+
+fn print_run(label: &str, kind: QueueKind, s: &RunStats) {
+    println!(
+        "  {label} [{kind:<8}]  {:>9} req in {:>6.2} s | {:>12.0} events/s | {:>12.0} sim-req/min",
+        s.completed,
+        s.wall_s,
+        s.events_per_sec(),
+        s.req_per_min()
+    );
+}
+
+fn main() {
+    println!("== DES raw speed (1M-request workloads) ==");
+    let mut calendar_rpm = 0.0;
+    for kind in QueueKind::ALL {
+        let s = single_device(kind);
+        print_run("single-device", kind, &s);
+        if kind == QueueKind::Calendar {
+            calendar_rpm = s.req_per_min();
+        }
+    }
+    for kind in QueueKind::ALL {
+        let s = fleet_scale(kind);
+        print_run("4-device fleet", kind, &s);
+    }
+
+    // Carried over from the old bench_sim: the small-mix steady-state
+    // run (virtual-seconds per wall-second) and the cache microbenches.
+    let cost = CostModel::new(HardwareSpec::default());
+    let tenants: Vec<Tenant> = (0..3)
+        .map(|i| Tenant {
+            model: synthetic_model(&format!("m{i}"), 8, 3_000_000, 900_000_000),
+            rate: 4.0,
+        })
+        .collect();
+    let cfg = Config {
+        partitions: vec![4, 4, 4],
+        cores: vec![2, 1, 1],
+    };
+    print_header("discrete-event simulator (small mix)");
+    let opts = SimOptions {
+        horizon: 300.0,
+        warmup: 10.0,
+        seed: 3,
+        ..SimOptions::default()
+    };
+    let s = bench("simulate 300s x3 models (~18k events)", 5, 1500, || {
+        swapless::sim::simulate(&cost, &tenants, &cfg, opts.clone())
+    });
+    print_row(&s);
+    let virt_per_wall = 300.0 / (s.mean_ns / 1e9);
+    println!("  -> {virt_per_wall:.0} virtual-seconds per wall-second");
+
+    let s = bench("sram_cache access (hit)", 1000, 200, || {
+        let mut c = SramCache::new(8 * 1024 * 1024);
+        c.access(1, 4_000_000);
+        for _ in 0..100 {
+            black_box(c.access(1, 4_000_000));
+        }
+        c
+    });
+    print_row(&s);
+
+    let s = bench("sram_cache interleave (miss+evict)", 1000, 200, || {
+        let mut c = SramCache::new(8 * 1024 * 1024);
+        for i in 0..100 {
+            black_box(c.access(i % 2, 6_000_000));
+        }
+        c
+    });
+    print_row(&s);
+
+    assert!(
+        calendar_rpm >= TARGET_REQ_PER_MIN,
+        "throughput regression: calendar queue sustained {calendar_rpm:.0} \
+         sim-req/min on the single-device workload (floor {TARGET_REQ_PER_MIN:.0})"
+    );
+    println!(
+        "\nthroughput guard: calendar {calendar_rpm:.0} sim-req/min >= \
+         {TARGET_REQ_PER_MIN:.0} floor"
+    );
+}

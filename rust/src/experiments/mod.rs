@@ -18,6 +18,7 @@ pub mod faults;
 pub mod fig8;
 pub mod fleet;
 pub mod overload;
+pub mod scenarios;
 pub mod sched_ablation;
 pub mod sensitivity;
 pub mod table2;

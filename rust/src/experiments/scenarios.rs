@@ -1,0 +1,451 @@
+//! Fleet-scale scenario suite: the dynamic workloads the DES speedup
+//! pays for (ROADMAP item 5; scenario shapes after arXiv 2201.07312's
+//! edge-cluster traces and the multi-tenant dynamics of arXiv
+//! 2107.12486).
+//!
+//! Four scenarios run on the octo Table-II mix over a 4-device fleet,
+//! every policy replaying the *same* pre-generated arrival stream:
+//!
+//! * **diurnal** — every tenant's rate follows a stepped sinusoid
+//!   (two cycles over the horizon, ±60%);
+//! * **flash** — tenant 0's rate spikes ×6 for a tenth of the horizon;
+//! * **crash** — device 0 crashes at 30% of the horizon and recovers at
+//!   60%, forcing migration under the failover policy;
+//! * **drift** — total load is constant but the per-model popularity
+//!   split linearly reverses (the paper's model-popularity drift).
+//!
+//! Three policies per scenario:
+//!
+//! * `static` — the initial placement + per-device config, untouched;
+//! * `swapless` — the same placement, but each device runs the online
+//!   [`SwapLessPolicy`] re-partitioner (reported as `reconfigs`);
+//! * `rebalance` — cross-device movement: the failover router for the
+//!   crash scenario (migrations = tenants rerouted off the dead
+//!   device), and epoch-based re-placement for the load scenarios
+//!   (the horizon splits into [`EPOCHS`] epochs; each epoch re-runs the
+//!   two-level placement on the previous epoch's observed rates, and
+//!   `migrations` counts assignment changes). Epoch boundaries reset
+//!   the queues, so the epoch path slightly *undercounts* completions
+//!   — the comparison is conservative for `rebalance`.
+
+use crate::analytic::{AnalyticModel, Tenant};
+use crate::fault::FaultPlan;
+use crate::fleet::{place, run_fleet, run_fleet_failover, run_fleet_with, Fleet, FleetSimResult};
+use crate::sim::reconfig::SwapLessPolicy;
+use crate::sim::SimOptions;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{
+    drift_schedules, equal_tpu_load_shares, generate_arrivals, rates_for_load_factor, Arrival,
+    RateSchedule,
+};
+
+use super::common::{print_table, Ctx};
+use super::fleet::MIX_OCTO;
+
+pub const SCENARIOS: [&str; 4] = ["diurnal", "flash", "crash", "drift"];
+const DEVICES: usize = 4;
+/// Nominal single-device full-TPU load factor the base rates are solved
+/// at (≈ 0.75 per device once spread over the 4-device fleet).
+const BASE_RHO: f64 = 3.0;
+/// Re-placement epochs for the `rebalance` policy on load scenarios.
+const EPOCHS: usize = 8;
+
+#[derive(Debug, Clone)]
+pub struct ScenarioRow {
+    pub scenario: &'static str,
+    pub policy: &'static str,
+    pub completed: u64,
+    pub dropped: u64,
+    pub mean_ms: f64,
+    /// Tenants moved across devices (failover reroutes or epoch
+    /// re-placements). Always 0 for `static` and `swapless`.
+    pub migrations: u64,
+    /// Per-device online reconfigurations taken (SwapLess only).
+    pub reconfigs: u64,
+}
+
+pub struct ScenariosResult {
+    pub rows: Vec<ScenarioRow>,
+}
+
+/// The shared fixture: octo mix, base rates solved at [`BASE_RHO`] on
+/// the single-device full-TPU reference, placed over a uniform 4-device
+/// fleet.
+struct Setting {
+    fleet: Fleet,
+    tenants: Vec<Tenant>,
+    plan: crate::fleet::FleetPlan,
+}
+
+fn setting(ctx: &Ctx) -> Result<Setting, String> {
+    let zero = vec![0.0; MIX_OCTO.len()];
+    let tenants0 = ctx.tenants(&MIX_OCTO, &zero)?;
+    let full = crate::analytic::Config::all_tpu(&tenants0);
+    let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+    let rates = rates_for_load_factor(&ctx.am, &tenants0, &full, &shares, BASE_RHO);
+    let tenants = ctx.tenants(&MIX_OCTO, &rates)?;
+    let fleet = Fleet::uniform(DEVICES, &ctx.cost.hw);
+    let plan = place(&fleet, &tenants);
+    Ok(Setting {
+        fleet,
+        tenants,
+        plan,
+    })
+}
+
+/// Per-tenant rate schedules for a scenario (None = the crash scenario,
+/// which runs the constant base rates and injects faults instead).
+fn schedules_for(name: &str, tenants: &[Tenant], horizon: f64) -> Vec<RateSchedule> {
+    match name {
+        "diurnal" => tenants
+            .iter()
+            .map(|t| RateSchedule::diurnal(t.rate, 0.6, horizon / 2.0, 24, horizon))
+            .collect(),
+        "flash" => tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                if i == 0 {
+                    RateSchedule::flash_crowd(t.rate, t.rate * 6.0, 0.4 * horizon, 0.5 * horizon)
+                } else {
+                    RateSchedule::constant(t.rate)
+                }
+            })
+            .collect(),
+        "drift" => {
+            let total: f64 = tenants.iter().map(|t| t.rate).sum();
+            let from: Vec<f64> = tenants.iter().map(|t| t.rate).collect();
+            let to: Vec<f64> = from.iter().rev().copied().collect();
+            drift_schedules(total, &from, &to, horizon, EPOCHS)
+        }
+        // crash: steady load, the fault plan is the perturbation.
+        _ => tenants
+            .iter()
+            .map(|t| RateSchedule::constant(t.rate))
+            .collect(),
+    }
+}
+
+fn fault_plan_for(name: &str, horizon: f64, seed: u64) -> Option<FaultPlan> {
+    if name == "crash" {
+        Some(FaultPlan::new(seed).crash(0, 0.3 * horizon, Some(0.6 * horizon)))
+    } else {
+        None
+    }
+}
+
+/// Dropped + reconfig totals across a fleet result.
+fn summarize(r: &FleetSimResult) -> (u64, u64) {
+    let mut dropped = r.shed;
+    let mut reconfigs = 0u64;
+    for dev in &r.per_device {
+        for m in &dev.result.per_model {
+            dropped += m.dropped();
+        }
+        dropped += dev.result.dropped;
+        reconfigs += dev.result.reconfigs.len() as u64;
+    }
+    (dropped, reconfigs)
+}
+
+fn row(scenario: &'static str, policy: &'static str, r: &FleetSimResult, migrations: u64) -> ScenarioRow {
+    let (dropped, reconfigs) = summarize(r);
+    ScenarioRow {
+        scenario,
+        policy,
+        completed: r.completed,
+        dropped,
+        mean_ms: r.mean_latency * 1e3,
+        migrations,
+        reconfigs,
+    }
+}
+
+/// The `rebalance` policy for load scenarios: split the horizon into
+/// [`EPOCHS`] epochs, re-run the two-level placement between epochs on
+/// the previous epoch's observed per-tenant rates, and replay each
+/// epoch's arrival slice under its plan.
+fn run_epoch_rebalance(
+    s: &Setting,
+    arrivals: &[Arrival],
+    opts: &SimOptions,
+    horizon: f64,
+) -> (FleetSimResultAgg, u64) {
+    let elen = horizon / EPOCHS as f64;
+    let mut plan = s.plan.clone();
+    let mut migrations = 0u64;
+    let mut agg = FleetSimResultAgg::default();
+    for e in 0..EPOCHS {
+        let t0 = e as f64 * elen;
+        let t1 = t0 + elen;
+        let slice: Vec<Arrival> = arrivals
+            .iter()
+            .filter(|a| a.time >= t0 && a.time < t1)
+            .map(|a| Arrival {
+                time: a.time - t0,
+                deadline: a.deadline.map(|d| d - t0),
+                ..*a
+            })
+            .collect();
+        if e > 0 {
+            // Reactive estimate: last epoch's observed counts.
+            let mut counts = vec![0u64; s.tenants.len()];
+            for a in arrivals {
+                if a.time >= t0 - elen && a.time < t0 {
+                    counts[a.model] += 1;
+                }
+            }
+            let est: Vec<Tenant> = s
+                .tenants
+                .iter()
+                .zip(&counts)
+                .map(|(t, &c)| Tenant {
+                    model: t.model.clone(),
+                    rate: (c as f64 / elen).max(0.05),
+                })
+                .collect();
+            let next = place(&s.fleet, &est);
+            migrations += plan
+                .assignment
+                .iter()
+                .zip(&next.assignment)
+                .filter(|(a, b)| a != b)
+                .count() as u64;
+            plan = next;
+        }
+        let epoch_opts = SimOptions {
+            horizon: elen,
+            ..opts.clone()
+        };
+        let r = run_fleet(&s.fleet, &s.tenants, &plan, &slice, &epoch_opts);
+        agg.add(&r);
+    }
+    (agg, migrations)
+}
+
+/// Counter aggregation across epoch runs (completion-weighted mean).
+#[derive(Default)]
+struct FleetSimResultAgg {
+    completed: u64,
+    dropped: u64,
+    reconfigs: u64,
+    lat_weighted: f64,
+}
+
+impl FleetSimResultAgg {
+    fn add(&mut self, r: &FleetSimResult) {
+        let (dropped, reconfigs) = summarize(r);
+        self.completed += r.completed;
+        self.dropped += dropped;
+        self.reconfigs += reconfigs;
+        self.lat_weighted += r.mean_latency * r.completed as f64;
+    }
+
+    fn mean_ms(&self) -> f64 {
+        if self.completed > 0 {
+            self.lat_weighted / self.completed as f64 * 1e3
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run one scenario: all three policies over the same arrival stream.
+pub fn run_scenario(ctx: &Ctx, name: &'static str) -> Result<Vec<ScenarioRow>, String> {
+    let s = setting(ctx)?;
+    let horizon = ctx.horizon;
+    let schedules = schedules_for(name, &s.tenants, horizon);
+    let faults = fault_plan_for(name, horizon, ctx.seed);
+    let mut rng = Rng::new(ctx.seed);
+    let arrivals = generate_arrivals(&schedules, horizon, &mut rng);
+    // warmup 0: the transients ARE the phenomenon under study, and all
+    // policies share the stream, so cold-start bias cancels.
+    let opts = SimOptions {
+        horizon,
+        warmup: 0.0,
+        seed: ctx.seed,
+        faults: faults.clone(),
+        ..SimOptions::default()
+    };
+
+    let mut rows = Vec::new();
+    let st = run_fleet(&s.fleet, &s.tenants, &s.plan, &arrivals, &opts);
+    rows.push(row(name, "static", &st, 0));
+
+    let k_max = ctx.k_max;
+    let sw = run_fleet_with(&s.fleet, &s.tenants, &s.plan, &arrivals, &opts, |d, members| {
+        Some(Box::new(SwapLessPolicy::new(
+            AnalyticModel::new(s.fleet.device(d).cost.clone()),
+            k_max,
+            members.len(),
+            20.0,
+            5.0,
+            0.10,
+        )))
+    });
+    rows.push(row(name, "swapless", &sw, 0));
+
+    if name == "crash" {
+        let fo = run_fleet_failover(&s.fleet, &s.tenants, &s.plan, &arrivals, &opts);
+        let migrations = (0..s.tenants.len())
+            .filter(|&i| fo.tenant_failed_over(i) > 0)
+            .count() as u64;
+        rows.push(row(name, "rebalance", &fo, migrations));
+    } else {
+        let (agg, migrations) = run_epoch_rebalance(&s, &arrivals, &opts, horizon);
+        rows.push(ScenarioRow {
+            scenario: name,
+            policy: "rebalance",
+            completed: agg.completed,
+            dropped: agg.dropped,
+            mean_ms: agg.mean_ms(),
+            migrations,
+            reconfigs: agg.reconfigs,
+        });
+    }
+    Ok(rows)
+}
+
+/// Run the suite; `only` filters to a single scenario (the CI smoke).
+pub fn run_filtered(ctx: &Ctx, only: Option<&str>) -> Result<ScenariosResult, String> {
+    let mut rows = Vec::new();
+    for name in SCENARIOS {
+        if let Some(f) = only {
+            if f != name {
+                continue;
+            }
+        }
+        rows.push(run_scenario(ctx, name)?);
+    }
+    if rows.is_empty() {
+        return Err(format!(
+            "unknown scenario {:?} (expected one of {:?})",
+            only.unwrap_or(""),
+            SCENARIOS
+        ));
+    }
+    Ok(ScenariosResult {
+        rows: rows.into_iter().flatten().collect(),
+    })
+}
+
+pub fn run(ctx: &Ctx) -> Result<ScenariosResult, String> {
+    run_filtered(ctx, None)
+}
+
+impl ScenariosResult {
+    pub fn print(&self) {
+        // Greppable one-liners (CI smoke asserts on these).
+        for r in &self.rows {
+            println!(
+                "scenario {} policy={} completed={} dropped={} mean_ms={:.1} migrations={} reconfigs={}",
+                r.scenario, r.policy, r.completed, r.dropped, r.mean_ms, r.migrations, r.reconfigs
+            );
+        }
+        let table: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.scenario.to_string(),
+                    r.policy.to_string(),
+                    r.completed.to_string(),
+                    r.dropped.to_string(),
+                    format!("{:.1}", r.mean_ms),
+                    r.migrations.to_string(),
+                    r.reconfigs.to_string(),
+                ]
+            })
+            .collect();
+        print_table(
+            "Scenario suite (octo mix, 4 devices, shared arrival stream per scenario)",
+            &[
+                "scenario",
+                "policy",
+                "completed",
+                "dropped",
+                "mean (ms)",
+                "migrations",
+                "reconfigs",
+            ],
+            &table,
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| {
+                        Json::from_pairs(vec![
+                            ("scenario", Json::Str(r.scenario.to_string())),
+                            ("policy", Json::Str(r.policy.to_string())),
+                            ("completed", Json::Num(r.completed as f64)),
+                            ("dropped", Json::Num(r.dropped as f64)),
+                            ("mean_ms", Json::Num(r.mean_ms)),
+                            ("migrations", Json::Num(r.migrations as f64)),
+                            ("reconfigs", Json::Num(r.reconfigs as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::Manifest;
+
+    /// Abbreviated end-to-end smoke: the crash scenario at a short
+    /// horizon must produce completions under every policy, and the
+    /// failover path must actually migrate tenants off the dead device.
+    #[test]
+    fn crash_scenario_migrates_and_completes() {
+        let mut ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        ctx.horizon = 120.0;
+        let rows = run_scenario(&ctx, "crash").unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.completed > 0, "{} completed nothing", r.policy);
+        }
+        let rebalance = rows.iter().find(|r| r.policy == "rebalance").unwrap();
+        assert!(
+            rebalance.migrations > 0,
+            "crash + failover must migrate tenants"
+        );
+        // The crash freezes device 0 for 30% of the run; rerouting its
+        // tenants must not complete less than leaving them stranded.
+        let stat = rows.iter().find(|r| r.policy == "static").unwrap();
+        assert!(
+            rebalance.completed >= stat.completed,
+            "failover {} < static {}",
+            rebalance.completed,
+            stat.completed
+        );
+    }
+
+    #[test]
+    fn flash_scenario_runs_all_policies() {
+        let mut ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        ctx.horizon = 100.0;
+        let rows = run_scenario(&ctx, "flash").unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.completed > 0, "{} completed nothing", r.policy);
+        }
+        let sw = rows.iter().find(|r| r.policy == "swapless").unwrap();
+        assert!(sw.reconfigs > 0, "swapless never reconfigured");
+    }
+
+    #[test]
+    fn unknown_scenario_is_an_error() {
+        let ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        assert!(run_filtered(&ctx, Some("nope")).is_err());
+    }
+}

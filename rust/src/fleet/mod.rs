@@ -44,7 +44,9 @@ pub mod sim;
 
 pub use place::{place, DevicePlan, FleetPlan};
 pub use server::{FleetServer, FleetServerBuilder, FleetStats};
-pub use sim::{run_fleet, run_fleet_failover, simulate_fleet, DeviceSimResult, FleetSimResult};
+pub use sim::{
+    run_fleet, run_fleet_failover, run_fleet_with, simulate_fleet, DeviceSimResult, FleetSimResult,
+};
 
 use crate::analytic::AnalyticModel;
 use crate::config::HardwareSpec;

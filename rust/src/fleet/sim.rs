@@ -84,6 +84,24 @@ pub fn run_fleet(
     arrivals: &[Arrival],
     opts: &SimOptions,
 ) -> FleetSimResult {
+    run_fleet_with(fleet, tenants, plan, arrivals, opts, |_, _| None)
+}
+
+/// Like [`run_fleet`], but each device's simulator runs under a
+/// reconfiguration policy built by `make_policy(device, members)` —
+/// `None` keeps the device static. This is how the scenario suite runs
+/// per-device SwapLess re-planning inside a fleet replay.
+pub fn run_fleet_with<F>(
+    fleet: &Fleet,
+    tenants: &[Tenant],
+    plan: &FleetPlan,
+    arrivals: &[Arrival],
+    opts: &SimOptions,
+    mut make_policy: F,
+) -> FleetSimResult
+where
+    F: FnMut(usize, &[Tenant]) -> Option<Box<dyn crate::sim::ReconfigPolicy>>,
+{
     assert_eq!(plan.assignment.len(), tenants.len());
     assert_eq!(plan.devices.len(), fleet.len());
     let streams = split_by_placement(arrivals, &plan.assignment, fleet.len());
@@ -113,7 +131,8 @@ pub fn run_fleet(
                 dplan.config.clone(),
                 dev_opts,
             );
-            sim.run(&streams[d], None)
+            let mut policy = make_policy(d, &members);
+            sim.run(&streams[d], policy.as_deref_mut())
         };
         let dev_completed: u64 = result.per_model.iter().map(|m| m.completed).sum();
         completed += dev_completed;

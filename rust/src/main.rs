@@ -9,6 +9,9 @@
 //!   overload                 overload-policy × load-factor sweep
 //!   churn                    dynamic experiment with tenant attach/detach
 //!   fleet                    multi-device placement sweep (1/2/4 TPUs × ρ)
+//!   scenarios                fleet-scale scenario suite (diurnal, flash
+//!                            crowd, crash, popularity drift) comparing
+//!                            static vs SwapLess vs rebalance policies
 //!   profile                  offline profiling phase → profiles.json
 //!   plan                     run the allocator on a workload, print config
 //!   placement                run the two-level fleet allocator, print the
@@ -35,11 +38,11 @@ use swapless::experiments::common::save_result;
 use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 27] = [
+const VALUE_OPTS: [&str; 29] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
     "trace", "policy", "duration", "attach-at", "detach-at", "backend", "discipline", "classes",
     "queue-cap", "overload", "deadline-ms", "devices", "crash-device", "crash-at", "recover-at",
-    "log", "offset",
+    "log", "offset", "queue", "scenario",
 ];
 
 fn main() {
@@ -73,6 +76,11 @@ fn usage() -> String {
                                    routing on the 2-device quad mix; reports\n\
                                    completed-within-deadline availability\n\
                                    (results/faults.json)\n\
+       scenarios [--scenario diurnal|flash|crash|drift]\n\
+                                   fleet-scale scenario suite on the octo mix over\n\
+                                   4 devices: static vs swapless vs rebalance per\n\
+                                   scenario, shared arrival stream\n\
+                                   (results/scenarios.json)\n\
        profile [--models a,b] [--iters N] [--out FILE]\n\
                                    offline profiling phase -> profiles.json\n\
        plan --models a,b --rates x,y\n\
@@ -116,7 +124,7 @@ fn usage() -> String {
        replay --trace FILE [--policy swapless|compiler|threshold]\n\
               [--discipline fifo|priority|wfq|spsf] [--queue-cap N]\n\
               [--overload block|reject|shed|deadline] [--deadline-ms D]\n\
-              [--models a,b]\n\
+              [--models a,b] [--queue heap|calendar]\n\
                                    plan from the trace's empirical rates, then\n\
                                    simulate the exact recorded arrivals (deadlines\n\
                                    from a v3 trace, or --deadline-ms for all);\n\
@@ -167,6 +175,11 @@ fn run(raw: &[String]) -> Result<(), String> {
         }
         "ablation" | "sensitivity" | "churn" | "schedulers" | "overload" | "fleet"
         | "faults" => run_named(&ctx, cmd),
+        "scenarios" => {
+            let r = exp::scenarios::run_filtered(&ctx, args.opt("scenario"))?;
+            r.print();
+            save_result("scenarios", &r.to_json())
+        }
         "profile" => {
             let models = if args.opt("models").is_some() {
                 args.opt_list("models")
@@ -427,6 +440,7 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
     };
     let discipline = swapless::sched::DisciplineKind::parse(&args.opt_or("discipline", "fifo"))?;
     let overload = swapless::sched::OverloadPolicy::parse(&args.opt_or("overload", "block"))?;
+    let queue = swapless::sim::QueueKind::parse(&args.opt_or("queue", "calendar"))?;
     let capacity = match args.opt("queue-cap") {
         Some(v) => Some(v.parse::<usize>().map_err(|_| format!("bad --queue-cap {v}"))?),
         None => None,
@@ -460,6 +474,7 @@ fn trace_replay(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
             discipline,
             capacity,
             overload,
+            queue,
             ..SimOptions::default()
         },
     );

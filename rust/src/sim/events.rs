@@ -41,18 +41,14 @@ pub struct Event {
     pub kind: EventKind,
 }
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
-static SEQ: AtomicU64 = AtomicU64::new(0);
-
 impl Event {
-    pub fn at(time: f64, kind: EventKind) -> Event {
+    /// `seq` is the per-`Simulator` scheduling counter (see
+    /// `Simulator::schedule`) — keeping it per-run makes event order
+    /// independent of whatever other simulators the process has run,
+    /// and contention-free across parallel replications.
+    pub fn new(time: f64, seq: u64, kind: EventKind) -> Event {
         assert!(time.is_finite(), "event scheduled at non-finite time");
-        Event {
-            time,
-            seq: SEQ.fetch_add(1, Ordering::Relaxed),
-            kind,
-        }
+        Event { time, seq, kind }
     }
 }
 
@@ -89,9 +85,9 @@ mod tests {
     #[test]
     fn heap_pops_earliest_first() {
         let mut h = BinaryHeap::new();
-        h.push(Event::at(3.0, EventKind::Reconfigure));
-        h.push(Event::at(1.0, EventKind::Reconfigure));
-        h.push(Event::at(2.0, EventKind::Reconfigure));
+        h.push(Event::new(3.0, 0, EventKind::Reconfigure));
+        h.push(Event::new(1.0, 1, EventKind::Reconfigure));
+        h.push(Event::new(2.0, 2, EventKind::Reconfigure));
         assert_eq!(h.pop().unwrap().time, 1.0);
         assert_eq!(h.pop().unwrap().time, 2.0);
         assert_eq!(h.pop().unwrap().time, 3.0);
@@ -100,10 +96,8 @@ mod tests {
     #[test]
     fn equal_times_preserve_fifo() {
         let mut h = BinaryHeap::new();
-        let a = Event::at(1.0, EventKind::Reconfigure);
-        let b = Event::at(1.0, EventKind::Reconfigure);
-        h.push(b);
-        h.push(a);
+        h.push(Event::new(1.0, 1, EventKind::Reconfigure));
+        h.push(Event::new(1.0, 0, EventKind::Reconfigure));
         let first = h.pop().unwrap();
         let second = h.pop().unwrap();
         assert!(first.seq < second.seq);
@@ -112,6 +106,6 @@ mod tests {
     #[test]
     #[should_panic]
     fn non_finite_time_panics() {
-        Event::at(f64::NAN, EventKind::Reconfigure);
+        Event::new(f64::NAN, 0, EventKind::Reconfigure);
     }
 }

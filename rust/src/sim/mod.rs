@@ -25,7 +25,7 @@
 //!
 //! Virtual-clock simulation: a 900 s Fig.-8 timeline runs in milliseconds.
 
-use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 use crate::analytic::{Config, Tenant, TenantHandle};
 use crate::eventlog::{Event as LogEvent, EventKind as LogKind, EventLog};
@@ -40,10 +40,16 @@ use crate::util::rng::Rng;
 use crate::workload::{generate_arrivals, Arrival, RateSchedule};
 
 mod events;
+pub mod queue;
 pub mod reconfig;
+pub mod replicate;
 
 pub use events::{Event, EventKind};
+pub use queue::{CalendarQueue, EventQueue, HeapQueue, QueueKind};
 pub use reconfig::ReconfigPolicy;
+pub use replicate::{
+    merge_replications, replication_seed, simulate_replicated, ReplicatedResult,
+};
 
 #[derive(Debug, Clone)]
 pub struct SimOptions {
@@ -79,6 +85,10 @@ pub struct SimOptions {
     /// run doubles as a replayable trace). The multi-device DES shares
     /// one log across its per-device simulators via `..opts.clone()`.
     pub log: Option<EventLog>,
+    /// Pending-event structure for the DES hot loop. The calendar queue
+    /// is the fast default; the heap is the reference implementation.
+    /// Results are bit-exact across kinds (`tests/queue_parity.rs`).
+    pub queue: QueueKind,
 }
 
 impl Default for SimOptions {
@@ -94,6 +104,7 @@ impl Default for SimOptions {
             device: 0,
             faults: None,
             log: None,
+            queue: QueueKind::Calendar,
         }
     }
 }
@@ -192,6 +203,9 @@ pub struct SimResult {
     /// Requests that exhausted the retry budget (or had their backoff
     /// clipped by the deadline) and failed terminally.
     pub failed: u64,
+    /// Total events scheduled over the run (the event-queue traffic —
+    /// `bench_des` reports wall-clock events/sec from this).
+    pub events: u64,
 }
 
 impl SimResult {
@@ -238,6 +252,9 @@ pub struct Simulator {
     cost: CostModel,
     tenants: Vec<Tenant>,
     handles: Vec<TenantHandle>,
+    /// O(1) handle → position map (indexed by `TenantHandle.0`); rebuilt
+    /// on churn only, so the per-event lookup never scans.
+    index_by_handle: Vec<Option<usize>>,
     next_handle: u64,
     cfg: Config,
     /// One prefix-sum cost table per tenant (immutable across reconfigs).
@@ -255,7 +272,13 @@ pub struct Simulator {
     /// Station labels for typed rejections (precomputed — the enqueue
     /// hot path never allocates them).
     cpu_stations: Vec<String>,
-    heap: BinaryHeap<Event>,
+    events: Box<dyn EventQueue>,
+    /// Per-run event sequence counter (tie-break for equal times) —
+    /// local to this simulator so runs are deterministic in isolation.
+    next_seq: u64,
+    /// The fault plan by `Arc` — the hot loop bumps a refcount instead of
+    /// deep-cloning the window vectors on every service start.
+    faults: Option<Arc<FaultPlan>>,
     /// True while the injected fault plan has this device crashed — the
     /// TPU station stops starting service (queued work stays queued).
     down: bool,
@@ -300,6 +323,7 @@ impl Simulator {
             cost: cost.clone(),
             tenants: tenants.to_vec(),
             handles: (0..n as u64).map(TenantHandle).collect(),
+            index_by_handle: (0..n).map(Some).collect(),
             next_handle: n as u64,
             cfg,
             tables,
@@ -314,7 +338,9 @@ impl Simulator {
             cpu_stations: (0..n)
                 .map(|i| format!("cpu {}", TenantHandle(i as u64)))
                 .collect(),
-            heap: BinaryHeap::new(),
+            events: opts.queue.build(),
+            next_seq: 0,
+            faults: opts.faults.clone().map(Arc::new),
             down: false,
             fault_seq: 0,
             attempted: 0,
@@ -343,8 +369,27 @@ impl Simulator {
     }
 
     /// Positional index of a handle, `None` if the tenant detached.
+    #[inline]
     fn index_of(&self, h: TenantHandle) -> Option<usize> {
-        self.handles.iter().position(|x| *x == h)
+        self.index_by_handle.get(h.0 as usize).copied().flatten()
+    }
+
+    /// Rebuild the handle → position map after churn shifts positions.
+    fn rebuild_handle_index(&mut self) {
+        self.index_by_handle.clear();
+        self.index_by_handle.resize(self.next_handle as usize, None);
+        for (i, h) in self.handles.iter().enumerate() {
+            self.index_by_handle[h.0 as usize] = Some(i);
+        }
+    }
+
+    /// Schedule an event, stamping it with this run's next sequence
+    /// number — the single entry point to the pending-event set.
+    #[inline]
+    fn schedule(&mut self, time: f64, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.events.push(Event::new(time, seq, kind));
     }
 
     /// Swap in a new configuration (online reconfiguration). Queued and
@@ -385,6 +430,7 @@ impl Simulator {
         self.cpu_busy.push(0);
         self.cpu_stations.push(format!("cpu {h}"));
         self.memo = build_memo(&self.tables, &self.cfg);
+        self.rebuild_handle_index();
         h
     }
 
@@ -403,6 +449,7 @@ impl Simulator {
         self.cpu_stations.remove(i);
         self.dropped += self.tpu_queue.drain_tenant(h).len() as u64;
         self.cache.invalidate(h.0 as usize);
+        self.rebuild_handle_index();
         h
     }
 
@@ -573,7 +620,8 @@ impl Simulator {
         // attempt costs its backoff (not an execution) while holding the
         // station, bounded by the budget and clipped by the deadline —
         // is replayed in virtual time.
-        if let Some(plan) = self.opts.faults.clone() {
+        // `Arc` clone: refcount bump only, no deep copy per service start.
+        if let Some(plan) = self.faults.clone() {
             service *= plan.slow_factor(self.opts.device, now);
             let mut attempts: u32 = 0;
             let mut backoffs = 0.0;
@@ -604,8 +652,7 @@ impl Simulator {
                 self.tpu_busy = true;
                 self.tpu_busy_until = now + backoffs;
                 self.tpu_busy_time += backoffs;
-                self.heap
-                    .push(Event::at(now + backoffs, EventKind::TpuFault { req }));
+                self.schedule(now + backoffs, EventKind::TpuFault { req });
                 return;
             }
             service += backoffs;
@@ -615,10 +662,7 @@ impl Simulator {
         self.tpu_busy = true;
         self.tpu_busy_until = now + service;
         self.tpu_busy_time += service;
-        self.heap.push(Event::at(
-            now + service,
-            EventKind::TpuDone { req },
-        ));
+        self.schedule(now + service, EventKind::TpuDone { req });
     }
 
     /// Offer a request to its tenant's CPU station through the bounded
@@ -714,10 +758,7 @@ impl Simulator {
             }
             let service = self.memo[m].cpu_service;
             self.cpu_busy[m] += 1;
-            self.heap.push(Event::at(
-                now + service,
-                EventKind::CpuDone { req },
-            ));
+            self.schedule(now + service, EventKind::CpuDone { req });
         }
     }
 
@@ -764,7 +805,7 @@ impl Simulator {
     ) -> SimResult {
         // Initial tenants hold handles 0..n in positional order.
         for a in arrivals {
-            self.heap.push(Event::at(
+            self.schedule(
                 a.time,
                 EventKind::Arrival {
                     req: Request {
@@ -774,7 +815,7 @@ impl Simulator {
                         deadline: a.deadline,
                     },
                 },
-            ));
+            );
         }
 
         // Sort churn by time; handles for attaches are pre-assigned in
@@ -787,7 +828,7 @@ impl Simulator {
         let mut churn_rng = Rng::new(self.opts.seed.wrapping_mul(0x9E37_79B9).wrapping_add(7));
         let mut planned = self.next_handle;
         for (idx, ev) in churn.iter().enumerate() {
-            self.heap.push(Event::at(ev.time, EventKind::Churn { idx }));
+            self.schedule(ev.time, EventKind::Churn { idx });
             if let ChurnKind::Attach { tenant, schedule } = &ev.kind {
                 let h = TenantHandle(planned);
                 planned += 1;
@@ -807,7 +848,7 @@ impl Simulator {
                 let mut r = churn_rng.fork(idx as u64 + 1);
                 for a in generate_arrivals(std::slice::from_ref(schedule), span, &mut r) {
                     let t = ev.time + a.time;
-                    self.heap.push(Event::at(
+                    self.schedule(
                         t,
                         EventKind::Arrival {
                             req: Request {
@@ -817,7 +858,7 @@ impl Simulator {
                                 deadline: a.deadline.map(|d| ev.time + d),
                             },
                         },
-                    ));
+                    );
                 }
             }
         }
@@ -828,26 +869,25 @@ impl Simulator {
         // Crash/recovery boundaries from the fault plan become station
         // pause/resume events (transient and slowdown windows are read
         // inline at service start).
-        if let Some(plan) = self.opts.faults.clone() {
+        if let Some(plan) = self.faults.clone() {
             for (t, down) in plan.transitions(self.opts.device) {
                 let kind = if down {
                     EventKind::DeviceDown
                 } else {
                     EventKind::DeviceUp
                 };
-                self.heap.push(Event::at(t, kind));
+                self.schedule(t, kind);
             }
         }
 
         if let Some(p) = policy.as_deref_mut() {
             if let Some(first) = p.period() {
-                self.heap
-                    .push(Event::at(first, EventKind::Reconfigure));
+                self.schedule(first, EventKind::Reconfigure);
             }
         }
         let mut reconfigs: Vec<(f64, Config, f64)> = Vec::new();
 
-        while let Some(ev) = self.heap.pop() {
+        while let Some(ev) = self.events.pop() {
             let now = ev.time;
             if now > self.opts.horizon {
                 break;
@@ -867,10 +907,7 @@ impl Simulator {
                     if part > 0 {
                         // d_in/B transfer precedes TPU queueing.
                         let delay = self.memo[i].input_transfer;
-                        self.heap.push(Event::at(
-                            now + delay,
-                            EventKind::TpuEnqueue { req },
-                        ));
+                        self.schedule(now + delay, EventKind::TpuEnqueue { req });
                     } else {
                         self.enqueue_cpu(req, now, true);
                     }
@@ -945,15 +982,9 @@ impl Simulator {
                         let d_out = self.memo[i].output_transfer;
                         if p >= model.partition_points {
                             // full-TPU: output returns to host, request done
-                            self.heap.push(Event::at(
-                                now + d_out,
-                                EventKind::Complete { req },
-                            ));
+                            self.schedule(now + d_out, EventKind::Complete { req });
                         } else {
-                            self.heap.push(Event::at(
-                                now + d_out,
-                                EventKind::CpuEnqueue { req },
-                            ));
+                            self.schedule(now + d_out, EventKind::CpuEnqueue { req });
                         }
                     } else {
                         // Tenant detached while its request held the TPU:
@@ -1002,7 +1033,7 @@ impl Simulator {
                         if let Some(per) = p.period() {
                             let next = now + per;
                             if next <= self.opts.horizon {
-                                self.heap.push(Event::at(next, EventKind::Reconfigure));
+                                self.schedule(next, EventKind::Reconfigure);
                             }
                         }
                     }
@@ -1040,9 +1071,11 @@ impl Simulator {
         }
 
         let measured = self.opts.horizon.max(1e-9);
+        // Move the accumulated stats out instead of cloning them — the
+        // simulator is spent after `run` returns.
         SimResult {
-            per_model: self.stats.clone(),
-            retired: self.retired.clone(),
+            per_model: std::mem::take(&mut self.stats),
+            retired: std::mem::take(&mut self.retired),
             dropped: self.dropped,
             churn_log,
             mean_latency: self.weighted_latency.mean(),
@@ -1050,11 +1083,12 @@ impl Simulator {
             cache_hit_rate: self.cache.hit_rate(),
             timeline: self.timeline.take(),
             reconfigs,
-            per_class: self.class_latency.clone(),
+            per_class: std::mem::take(&mut self.class_latency),
             max_tpu_occupancy: self.max_tpu_occupancy,
             attempted: self.attempted,
             retried: self.retried,
             failed: self.failed,
+            events: self.next_seq,
         }
     }
 }

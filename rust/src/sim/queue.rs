@@ -1,0 +1,378 @@
+//! Pluggable pending-event set for the DES hot loop.
+//!
+//! Two implementations sit behind [`EventQueue`]:
+//!
+//! * [`HeapQueue`] — the original `BinaryHeap<Event>`, kept as the
+//!   reference implementation;
+//! * [`CalendarQueue`] — a classic calendar queue (Brown 1988): events
+//!   hash into bucket "days" of width `w` by `floor(time / w)`, each day
+//!   holds a short sorted list, and `pop` scans forward from the current
+//!   day. With the width adapted to the pending-event density, both push
+//!   and pop are O(1) amortized versus the heap's O(log n) — the win
+//!   that matters when a million pre-generated arrivals sit in the queue.
+//!
+//! Both orderings are the *same strict total order* — ascending
+//! `(time, seq)`, `seq` being the per-run scheduling sequence — so any
+//! simulation result is bit-exact across implementations
+//! (`tests/queue_parity.rs` pins this across workloads, disciplines,
+//! overload policies, and fault plans).
+//!
+//! Calendar correctness does not depend on the bucket geometry: the scan
+//! compares integer day indices (`floor(time / width)`, computed the same
+//! way on push and pop — no accumulated float drift), and a full fruitless
+//! lap falls back to a direct search for the globally minimal bucket tail,
+//! so a degenerate width only costs speed, never order.
+
+use std::collections::BinaryHeap;
+
+use super::events::Event;
+
+/// Which pending-event structure the simulator runs on
+/// ([`crate::sim::SimOptions::queue`], `--queue` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// `BinaryHeap<Event>` — the reference implementation.
+    Heap,
+    /// Calendar queue — the fast default.
+    Calendar,
+}
+
+impl QueueKind {
+    pub const ALL: [QueueKind; 2] = [QueueKind::Heap, QueueKind::Calendar];
+
+    pub fn parse(s: &str) -> Result<QueueKind, String> {
+        match s {
+            "heap" => Ok(QueueKind::Heap),
+            "calendar" => Ok(QueueKind::Calendar),
+            other => Err(format!("unknown --queue {other} (heap|calendar)")),
+        }
+    }
+
+    pub fn build(self) -> Box<dyn EventQueue> {
+        match self {
+            QueueKind::Heap => Box::new(HeapQueue::new()),
+            QueueKind::Calendar => Box::new(CalendarQueue::new()),
+        }
+    }
+}
+
+impl std::fmt::Display for QueueKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueueKind::Heap => write!(f, "heap"),
+            QueueKind::Calendar => write!(f, "calendar"),
+        }
+    }
+}
+
+/// The pending-event set: `pop` must return events in strictly ascending
+/// `(time, seq)` order regardless of push order. Times are finite and
+/// non-negative (the simulator's `schedule` asserts this).
+pub trait EventQueue: Send {
+    fn push(&mut self, ev: Event);
+    fn pop(&mut self) -> Option<Event>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Reference implementation: the original max-heap over the inverted
+/// [`Event`] ordering.
+#[derive(Debug, Default)]
+pub struct HeapQueue {
+    heap: BinaryHeap<Event>,
+}
+
+impl HeapQueue {
+    pub fn new() -> HeapQueue {
+        HeapQueue::default()
+    }
+}
+
+impl EventQueue for HeapQueue {
+    fn push(&mut self, ev: Event) {
+        self.heap.push(ev);
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Strictly-before in the queue's total order: ascending `(time, seq)`.
+#[inline]
+fn before(a: &Event, b: &Event) -> bool {
+    a.time < b.time || (a.time == b.time && a.seq < b.seq)
+}
+
+const MIN_BUCKETS: usize = 64;
+
+/// Calendar queue: `buckets[day % n]` holds day `day`'s events sorted
+/// *descending* by `(time, seq)`, so the bucket minimum pops from the
+/// tail in O(1).
+#[derive(Debug)]
+pub struct CalendarQueue {
+    buckets: Vec<Vec<Event>>,
+    len: usize,
+    /// Bucket-day width in simulated seconds.
+    width: f64,
+    /// Absolute day index (`floor(time / width)`) the scan cursor is on.
+    cur_day: u64,
+}
+
+impl Default for CalendarQueue {
+    fn default() -> Self {
+        CalendarQueue::new()
+    }
+}
+
+impl CalendarQueue {
+    pub fn new() -> CalendarQueue {
+        CalendarQueue {
+            buckets: vec![Vec::new(); MIN_BUCKETS],
+            len: 0,
+            width: 1.0,
+            cur_day: 0,
+        }
+    }
+
+    #[inline]
+    fn day_of(width: f64, t: f64) -> u64 {
+        // `as` saturates, so far-future times all land on the last day —
+        // they merely scan slower, order is still exact.
+        (t / width) as u64
+    }
+
+    fn insert(buckets: &mut [Vec<Event>], width: f64, ev: Event) {
+        let day = Self::day_of(width, ev.time);
+        let b = &mut buckets[(day % buckets.len() as u64) as usize];
+        // Keep the bucket descending by (time, seq): everything greater
+        // than `ev` forms the prefix, so this binary search is valid.
+        let pos = b.partition_point(|e| before(&ev, e));
+        b.insert(pos, ev);
+    }
+
+    /// Rehash into `n_new` buckets, re-estimating the day width from the
+    /// pending span (targeting a few events per day so the scan stays
+    /// O(1) per pop).
+    fn resize(&mut self, n_new: usize) {
+        let mut events: Vec<Event> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            events.append(b);
+        }
+        let mut min_t = f64::INFINITY;
+        let mut max_t = f64::NEG_INFINITY;
+        for e in &events {
+            min_t = min_t.min(e.time);
+            max_t = max_t.max(e.time);
+        }
+        if events.len() >= 2 && max_t > min_t {
+            let w = 4.0 * (max_t - min_t) / events.len() as f64;
+            if w.is_finite() && w > 0.0 {
+                self.width = w;
+            }
+        }
+        self.buckets = vec![Vec::new(); n_new];
+        if !events.is_empty() {
+            // The cursor must not start past the earliest pending event.
+            self.cur_day = Self::day_of(self.width, min_t);
+        }
+        for ev in events {
+            Self::insert(&mut self.buckets, self.width, ev);
+        }
+    }
+
+    fn maybe_shrink(&mut self) {
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 2 {
+            let n = (self.buckets.len() / 2).max(MIN_BUCKETS);
+            self.resize(n);
+        }
+    }
+}
+
+impl EventQueue for CalendarQueue {
+    fn push(&mut self, ev: Event) {
+        // A push earlier than the cursor (never happens in the DES, which
+        // only schedules at or after `now`) rewinds the scan — always
+        // safe, it only costs extra scanning.
+        let day = Self::day_of(self.width, ev.time);
+        if day < self.cur_day {
+            self.cur_day = day;
+        }
+        Self::insert(&mut self.buckets, self.width, ev);
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            let n = self.buckets.len() * 2;
+            self.resize(n);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len() as u64;
+        for _ in 0..self.buckets.len() {
+            let b = &mut self.buckets[(self.cur_day % n) as usize];
+            if let Some(tail) = b.last() {
+                // Only the bucket's current-day events are eligible:
+                // events of day `d` live in bucket `d % n`, and all
+                // pending events have day >= the last popped day, so the
+                // minimal tail of the cursor's day is the global minimum.
+                if Self::day_of(self.width, tail.time) <= self.cur_day {
+                    let ev = b.pop().unwrap();
+                    self.len -= 1;
+                    self.maybe_shrink();
+                    return Some(ev);
+                }
+            }
+            self.cur_day = self.cur_day.saturating_add(1);
+        }
+        // A full fruitless lap (sparse far-future events): direct-search
+        // the globally minimal bucket tail and jump the cursor to it.
+        // This also guarantees progress for any bucket geometry.
+        let bi = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.last().map(|e| (i, e)))
+            .min_by(|a, b| {
+                if before(a.1, b.1) {
+                    std::cmp::Ordering::Less
+                } else {
+                    std::cmp::Ordering::Greater
+                }
+            })
+            .map(|(i, _)| i)
+            .expect("calendar len > 0 with every bucket empty");
+        let ev = self.buckets[bi].pop().unwrap();
+        self.len -= 1;
+        self.cur_day = Self::day_of(self.width, ev.time);
+        self.maybe_shrink();
+        Some(ev)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::events::EventKind;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ev(time: f64, seq: u64) -> Event {
+        Event::new(time, seq, EventKind::Reconfigure)
+    }
+
+    fn drain(q: &mut dyn EventQueue) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push((e.time, e.seq));
+        }
+        out
+    }
+
+    #[test]
+    fn kinds_parse_and_display() {
+        for k in QueueKind::ALL {
+            assert_eq!(QueueKind::parse(&k.to_string()).unwrap(), k);
+        }
+        assert!(QueueKind::parse("splay").is_err());
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_random_streams() {
+        let mut rng = Rng::new(99);
+        for case in 0..20 {
+            let mut heap = HeapQueue::new();
+            let mut cal = CalendarQueue::new();
+            // Random pre-load, then interleaved pop/push with the DES
+            // invariant (pushes never before the last popped time).
+            let mut seq = 0u64;
+            for _ in 0..rng.below(400) + 1 {
+                let t = rng.f64() * 1000.0;
+                heap.push(ev(t, seq));
+                cal.push(ev(t, seq));
+                seq += 1;
+            }
+            let mut now = 0.0;
+            while heap.len() > 0 {
+                let a = heap.pop().unwrap();
+                let b = cal.pop().unwrap();
+                assert_eq!(
+                    (a.time, a.seq),
+                    (b.time, b.seq),
+                    "case {case}: divergence at seq {seq}"
+                );
+                now = a.time;
+                if rng.f64() < 0.3 {
+                    // Schedule ahead, sometimes at exactly `now` (the
+                    // zero-delay events the DES emits constantly).
+                    let t = now + if rng.f64() < 0.2 { 0.0 } else { rng.f64() * 50.0 };
+                    heap.push(ev(t, seq));
+                    cal.push(ev(t, seq));
+                    seq += 1;
+                }
+            }
+            assert_eq!(cal.len(), 0);
+        }
+    }
+
+    #[test]
+    fn equal_times_pop_in_seq_order() {
+        for kind in QueueKind::ALL {
+            let mut q = kind.build();
+            for seq in [3u64, 1, 0, 2] {
+                q.push(ev(5.0, seq));
+            }
+            let order: Vec<u64> = drain(q.as_mut()).iter().map(|(_, s)| *s).collect();
+            assert_eq!(order, vec![0, 1, 2, 3], "{kind}");
+        }
+    }
+
+    #[test]
+    fn calendar_survives_resize_cycles() {
+        let mut cal = CalendarQueue::new();
+        // Far more events than MIN_BUCKETS forces growth; draining
+        // forces shrink. Order must stay exact throughout.
+        let n = 10_000u64;
+        for seq in 0..n {
+            // Insertion order deliberately scrambled vs time order.
+            let t = ((seq * 7919) % n) as f64 * 0.01;
+            cal.push(ev(t, seq));
+        }
+        assert!(cal.buckets.len() > MIN_BUCKETS);
+        let popped = drain(&mut cal);
+        assert_eq!(popped.len(), n as usize);
+        for w in popped.windows(2) {
+            assert!(
+                w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].1 < w[1].1),
+                "order violated: {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn calendar_handles_sparse_far_future_events() {
+        let mut cal = CalendarQueue::new();
+        // Events separated by many empty "days" exercise the lap +
+        // direct-search fallback.
+        cal.push(ev(1e6, 0));
+        cal.push(ev(3.0, 1));
+        cal.push(ev(5e8, 2));
+        assert_eq!(cal.pop().unwrap().time, 3.0);
+        assert_eq!(cal.pop().unwrap().time, 1e6);
+        cal.push(ev(1e6 + 1.0, 3));
+        assert_eq!(cal.pop().unwrap().time, 1e6 + 1.0);
+        assert_eq!(cal.pop().unwrap().time, 5e8);
+        assert!(cal.pop().is_none());
+    }
+}

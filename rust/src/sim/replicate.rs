@@ -1,0 +1,247 @@
+//! Parallel independent replications of the DES.
+//!
+//! Experiments that want confidence intervals used to hand-roll seed
+//! loops; [`simulate_replicated`] owns that pattern: it fans `n_reps`
+//! seeds out across OS threads (`std::thread::scope` — replications
+//! share nothing, so this is embarrassingly parallel), merges the
+//! per-replication [`SimResult`]s through the exact parallel-merge
+//! operators the metrics layer already provides
+//! ([`crate::metrics::LatencyHistogram::merge`],
+//! [`crate::metrics::Welford::merge`], counter addition), and reports
+//! the across-replication mean latency with a 95% confidence interval.
+//!
+//! Replication `i` runs at seed [`replication_seed`]`(opts.seed, i)`;
+//! replication 0 is *exactly* `opts.seed`, so a single-replication call
+//! reproduces a plain [`simulate`] run bit-for-bit (pinned by
+//! `tests/queue_parity.rs`).
+
+use std::thread;
+
+use crate::analytic::{Config, Tenant};
+use crate::metrics::PerClassLatency;
+use crate::tpu::CostModel;
+
+use super::{simulate, ModelStats, SimOptions, SimResult};
+
+/// Seed for replication `rep` of a run based at `base`: a golden-ratio
+/// stride keeps the seeds well separated for the SplitMix64-seeded
+/// generator, and `rep = 0` is the base seed itself.
+pub fn replication_seed(base: u64, rep: usize) -> u64 {
+    base.wrapping_add((rep as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Merged statistics over `n` independent replications.
+#[derive(Debug)]
+pub struct ReplicatedResult {
+    /// Per-replication results, in replication order (rep 0 first).
+    pub reps: Vec<SimResult>,
+    /// Per-tenant stats pooled across replications (counters summed,
+    /// histograms merged).
+    pub per_model: Vec<ModelStats>,
+    /// Per-class latency + lifecycle counters pooled across replications.
+    pub per_class: PerClassLatency,
+    /// Mean of the per-replication request-weighted mean latencies.
+    pub mean_latency: f64,
+    /// 95% confidence half-width on `mean_latency` (Student-t over the
+    /// replication means; 0 when `n < 2`).
+    pub ci95: f64,
+    /// Per-replication mean latencies (the CI's sample).
+    pub rep_means: Vec<f64>,
+    /// Mean TPU utilization across replications.
+    pub tpu_utilization: f64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub attempted: u64,
+    pub retried: u64,
+    pub failed: u64,
+}
+
+/// Two-sided 95% Student-t critical value for `df` degrees of freedom.
+fn t95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        0.0
+    } else if df <= TABLE.len() {
+        TABLE[df - 1]
+    } else {
+        1.96
+    }
+}
+
+/// Merge `b`'s per-tenant stats into `a` (positional — replications of
+/// the same static run always agree on the tenant set).
+fn merge_models(a: &mut [ModelStats], b: &[ModelStats]) {
+    assert_eq!(a.len(), b.len(), "replications disagree on tenant count");
+    for (x, y) in a.iter_mut().zip(b) {
+        x.completed += y.completed;
+        x.accepted += y.accepted;
+        x.rejected += y.rejected;
+        x.shed += y.shed;
+        x.expired += y.expired;
+        x.latency.merge(&y.latency);
+        x.tpu_share.merge(&y.tpu_share);
+    }
+}
+
+/// Pool replication results into a [`ReplicatedResult`]. Exposed so the
+/// parity suite can compare a sequential loop against the threaded path.
+pub fn merge_replications(results: Vec<SimResult>) -> ReplicatedResult {
+    assert!(!results.is_empty(), "need at least one replication");
+    let mut per_model: Vec<ModelStats> = results[0].per_model.clone();
+    let mut per_class = results[0].per_class.clone();
+    for r in &results[1..] {
+        merge_models(&mut per_model, &r.per_model);
+        per_class.merge(&r.per_class);
+    }
+    let rep_means: Vec<f64> = results.iter().map(|r| r.mean_latency).collect();
+    let n = rep_means.len() as f64;
+    let mean = rep_means.iter().sum::<f64>() / n;
+    let ci95 = if rep_means.len() >= 2 {
+        let var = rep_means.iter().map(|m| (m - mean).powi(2)).sum::<f64>() / (n - 1.0);
+        t95(rep_means.len() - 1) * (var / n).sqrt()
+    } else {
+        0.0
+    };
+    ReplicatedResult {
+        per_class,
+        mean_latency: mean,
+        ci95,
+        tpu_utilization: results.iter().map(|r| r.tpu_utilization).sum::<f64>() / n,
+        completed: per_model.iter().map(|m| m.completed).sum(),
+        dropped: results.iter().map(|r| r.dropped).sum(),
+        attempted: results.iter().map(|r| r.attempted).sum(),
+        retried: results.iter().map(|r| r.retried).sum(),
+        failed: results.iter().map(|r| r.failed).sum(),
+        per_model,
+        rep_means,
+        reps: results,
+    }
+}
+
+/// Run `n_reps` independent replications of the static-configuration DES
+/// in parallel and pool the results. `opts.seed` seeds replication 0;
+/// see [`replication_seed`] for the rest. The event log (if any) is
+/// dropped per replication — replications must not interleave into one
+/// trace.
+pub fn simulate_replicated(
+    cost: &CostModel,
+    tenants: &[Tenant],
+    cfg: &Config,
+    opts: &SimOptions,
+    n_reps: usize,
+) -> ReplicatedResult {
+    assert!(n_reps >= 1, "need at least one replication");
+    let workers = thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(n_reps);
+    let mut slots: Vec<Option<SimResult>> = (0..n_reps).map(|_| None).collect();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut out: Vec<(usize, SimResult)> = Vec::new();
+                    let mut rep = w;
+                    while rep < n_reps {
+                        let rep_opts = SimOptions {
+                            seed: replication_seed(opts.seed, rep),
+                            log: None,
+                            timeline_window: None,
+                            ..opts.clone()
+                        };
+                        out.push((rep, simulate(cost, tenants, cfg, rep_opts)));
+                        rep += workers;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (rep, result) in h.join().expect("replication thread panicked") {
+                slots[rep] = Some(result);
+            }
+        }
+    });
+    let results: Vec<SimResult> = slots
+        .into_iter()
+        .map(|s| s.expect("replication missing"))
+        .collect();
+    merge_replications(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::Config;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+    use crate::tpu::CostModel;
+
+    fn setup() -> (CostModel, Vec<Tenant>, Config) {
+        let cost = CostModel::new(HardwareSpec::default());
+        let tenants = vec![
+            Tenant {
+                model: synthetic_model("a", 6, 1_000_000, 500_000_000),
+                rate: 20.0,
+            },
+            Tenant {
+                model: synthetic_model("b", 6, 1_000_000, 500_000_000),
+                rate: 15.0,
+            },
+        ];
+        let cfg = Config::all_tpu(&tenants);
+        (cost, tenants, cfg)
+    }
+
+    fn opts() -> SimOptions {
+        SimOptions {
+            horizon: 60.0,
+            warmup: 3.0,
+            seed: 7,
+            ..SimOptions::default()
+        }
+    }
+
+    #[test]
+    fn rep_zero_is_base_seed() {
+        assert_eq!(replication_seed(42, 0), 42);
+        assert_ne!(replication_seed(42, 1), replication_seed(42, 2));
+    }
+
+    #[test]
+    fn replicated_is_deterministic() {
+        let (cost, tenants, cfg) = setup();
+        let a = simulate_replicated(&cost, &tenants, &cfg, &opts(), 4);
+        let b = simulate_replicated(&cost, &tenants, &cfg, &opts(), 4);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.mean_latency.to_bits(), b.mean_latency.to_bits());
+        assert_eq!(a.ci95.to_bits(), b.ci95.to_bits());
+    }
+
+    #[test]
+    fn merged_counters_are_sums() {
+        let (cost, tenants, cfg) = setup();
+        let r = simulate_replicated(&cost, &tenants, &cfg, &opts(), 3);
+        assert_eq!(r.reps.len(), 3);
+        let total: u64 = r.reps.iter().flat_map(|rep| &rep.per_model).map(|m| m.completed).sum();
+        assert_eq!(r.completed, total);
+        assert!(r.completed > 0);
+        assert!(r.ci95 >= 0.0);
+        // Replications differ (different seeds) but not wildly.
+        assert!(r.rep_means.iter().all(|m| *m > 0.0));
+    }
+
+    #[test]
+    fn single_replication_matches_simulate() {
+        let (cost, tenants, cfg) = setup();
+        let r = simulate_replicated(&cost, &tenants, &cfg, &opts(), 1);
+        let plain = simulate(&cost, &tenants, &cfg, opts());
+        assert_eq!(r.completed, plain.per_model.iter().map(|m| m.completed).sum::<u64>());
+        assert_eq!(r.mean_latency.to_bits(), plain.mean_latency.to_bits());
+        assert_eq!(r.ci95, 0.0);
+    }
+}

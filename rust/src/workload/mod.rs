@@ -69,6 +69,76 @@ impl RateSchedule {
         }
         rate
     }
+
+    /// Stepped approximation of a diurnal load curve:
+    /// `base · (1 + amplitude · sin(2π t / period))`, sampled at the
+    /// center of `steps_per_period` windows per period over `[0,
+    /// horizon)` and clamped at zero. The scenario suite's "daily" load
+    /// shape (arXiv 2201.07312 §workloads).
+    pub fn diurnal(
+        base: f64,
+        amplitude: f64,
+        period: f64,
+        steps_per_period: usize,
+        horizon: f64,
+    ) -> RateSchedule {
+        assert!(base >= 0.0 && period > 0.0 && steps_per_period > 0);
+        let dt = period / steps_per_period as f64;
+        let mut steps = Vec::new();
+        let mut t = 0.0;
+        while t < horizon {
+            let mid = t + 0.5 * dt;
+            let r = base * (1.0 + amplitude * (2.0 * std::f64::consts::PI * mid / period).sin());
+            steps.push((t, r.max(0.0)));
+            t += dt;
+        }
+        RateSchedule::stepped(steps)
+    }
+
+    /// A flash crowd: `base` everywhere except `[from, until)`, where the
+    /// rate jumps to `spike`.
+    pub fn flash_crowd(base: f64, spike: f64, from: f64, until: f64) -> RateSchedule {
+        assert!(from < until, "flash crowd window is empty");
+        RateSchedule::stepped(vec![(0.0, base), (from, spike), (until, base)])
+    }
+}
+
+/// Popularity-drift schedules: the total request rate stays `total`, but
+/// the per-model split linearly interpolates from `from_weights` to
+/// `to_weights` over `[0, horizon)` in `steps` piecewise-constant
+/// segments (weights are normalized internally). Returns one schedule
+/// per model, positionally aligned with the weight slices.
+pub fn drift_schedules(
+    total: f64,
+    from_weights: &[f64],
+    to_weights: &[f64],
+    horizon: f64,
+    steps: usize,
+) -> Vec<RateSchedule> {
+    assert_eq!(from_weights.len(), to_weights.len());
+    assert!(steps > 0 && horizon > 0.0 && total >= 0.0);
+    let norm = |w: &[f64]| -> Vec<f64> {
+        let s: f64 = w.iter().sum();
+        assert!(s > 0.0, "weights sum to zero");
+        w.iter().map(|x| x / s).collect()
+    };
+    let from = norm(from_weights);
+    let to = norm(to_weights);
+    let dt = horizon / steps as f64;
+    (0..from.len())
+        .map(|m| {
+            let steps_m: Vec<(f64, f64)> = (0..steps)
+                .map(|k| {
+                    // Fraction at the segment center: step 0 leans on
+                    // `from`, the last step on `to`.
+                    let frac = (k as f64 + 0.5) / steps as f64;
+                    let w = from[m] + (to[m] - from[m]) * frac;
+                    (k as f64 * dt, total * w)
+                })
+                .collect();
+            RateSchedule::stepped(steps_m)
+        })
+        .collect()
 }
 
 /// Generate a merged Poisson arrival stream for `schedules` over
@@ -336,6 +406,42 @@ mod tests {
         let late = arr.iter().filter(|a| a.time >= 500.0).count() as f64 / 500.0;
         assert!((early - 1.0).abs() < 0.3, "early={early}");
         assert!((late - 8.0).abs() < 1.0, "late={late}");
+    }
+
+    #[test]
+    fn diurnal_schedule_oscillates_around_base() {
+        let s = RateSchedule::diurnal(10.0, 0.5, 100.0, 20, 200.0);
+        // Peak near t = 25 (sin max), trough near t = 75 (sin min).
+        assert!(s.rate_at(25.0) > 14.0, "peak={}", s.rate_at(25.0));
+        assert!(s.rate_at(75.0) < 6.0, "trough={}", s.rate_at(75.0));
+        // Never negative even with amplitude > 1.
+        let deep = RateSchedule::diurnal(10.0, 1.5, 100.0, 20, 100.0);
+        for k in 0..40 {
+            assert!(deep.rate_at(k as f64 * 2.5) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn flash_crowd_spikes_only_in_window() {
+        let s = RateSchedule::flash_crowd(2.0, 12.0, 40.0, 60.0);
+        assert_eq!(s.rate_at(0.0), 2.0);
+        assert_eq!(s.rate_at(39.9), 2.0);
+        assert_eq!(s.rate_at(40.0), 12.0);
+        assert_eq!(s.rate_at(59.9), 12.0);
+        assert_eq!(s.rate_at(60.0), 2.0);
+    }
+
+    #[test]
+    fn drift_conserves_total_and_moves_mass() {
+        let scheds = drift_schedules(10.0, &[3.0, 1.0], &[1.0, 3.0], 100.0, 8);
+        assert_eq!(scheds.len(), 2);
+        for t in [5.0, 30.0, 55.0, 90.0] {
+            let sum = scheds[0].rate_at(t) + scheds[1].rate_at(t);
+            assert!((sum - 10.0).abs() < 1e-9, "total at {t} = {sum}");
+        }
+        // Model 0 starts dominant and ends minor; model 1 the reverse.
+        assert!(scheds[0].rate_at(1.0) > scheds[1].rate_at(1.0));
+        assert!(scheds[0].rate_at(99.0) < scheds[1].rate_at(99.0));
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Bit-exactness of the calendar event queue against the reference heap.
+//!
+//! Both [`QueueKind`]s implement the same strict total order — ascending
+//! `(time, seq)` — so a simulation must produce *identical* results on
+//! either, down to the last bit of every float. This suite pins that
+//! across workload shapes, scheduling disciplines, overload policies,
+//! fault plans, online reconfiguration, and tenant churn, plus the
+//! parallel-replication merge path against a sequential seed loop.
+
+use swapless::analytic::{AnalyticModel, Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::fault::FaultPlan;
+use swapless::metrics::LatencyHistogram;
+use swapless::model::synthetic_model;
+use swapless::sched::{DisciplineKind, OverloadPolicy, SloClass};
+use swapless::sim::reconfig::SwapLessPolicy;
+use swapless::sim::{
+    merge_replications, replication_seed, simulate, simulate_churn, simulate_dynamic,
+    simulate_replicated, ChurnEvent, ChurnKind, ModelStats, QueueKind, SimOptions, SimResult,
+    Simulator,
+};
+use swapless::tpu::CostModel;
+use swapless::util::rng::Rng;
+use swapless::workload::{generate_arrivals_annotated, Arrival, RateSchedule};
+
+fn assert_hist_eq(a: &LatencyHistogram, b: &LatencyHistogram, what: &str) {
+    assert_eq!(a.count(), b.count(), "{what}: sample count");
+    if a.count() == 0 {
+        return;
+    }
+    assert_eq!(a.mean().to_bits(), b.mean().to_bits(), "{what}: mean");
+    assert_eq!(a.std_dev().to_bits(), b.std_dev().to_bits(), "{what}: std_dev");
+    assert_eq!(a.max().to_bits(), b.max().to_bits(), "{what}: max");
+    for p in [50.0, 90.0, 95.0, 99.0] {
+        assert_eq!(
+            a.percentile(p).to_bits(),
+            b.percentile(p).to_bits(),
+            "{what}: p{p}"
+        );
+    }
+}
+
+fn assert_stats_eq(a: &ModelStats, b: &ModelStats, what: &str) {
+    assert_eq!(a.handle, b.handle, "{what}: handle");
+    assert_eq!(a.name, b.name, "{what}: name");
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.accepted, b.accepted, "{what}: accepted");
+    assert_eq!(a.rejected, b.rejected, "{what}: rejected");
+    assert_eq!(a.shed, b.shed, "{what}: shed");
+    assert_eq!(a.expired, b.expired, "{what}: expired");
+    assert_hist_eq(&a.latency, &b.latency, what);
+    assert_eq!(a.tpu_share.count(), b.tpu_share.count(), "{what}: tpu_share n");
+    if a.tpu_share.count() > 0 {
+        assert_eq!(
+            a.tpu_share.mean().to_bits(),
+            b.tpu_share.mean().to_bits(),
+            "{what}: tpu_share mean"
+        );
+    }
+}
+
+/// Full bitwise comparison of two [`SimResult`]s. Reconfiguration
+/// entries compare `(time, config)` only — the third element is the
+/// wall-clock decision cost, which legitimately differs between runs.
+fn assert_result_eq(a: &SimResult, b: &SimResult, what: &str) {
+    assert_eq!(a.per_model.len(), b.per_model.len(), "{what}: tenant count");
+    for (i, (x, y)) in a.per_model.iter().zip(&b.per_model).enumerate() {
+        assert_stats_eq(x, y, &format!("{what}: per_model[{i}]"));
+    }
+    assert_eq!(a.retired.len(), b.retired.len(), "{what}: retired count");
+    for (i, (x, y)) in a.retired.iter().zip(&b.retired).enumerate() {
+        assert_stats_eq(x, y, &format!("{what}: retired[{i}]"));
+    }
+    assert_eq!(a.dropped, b.dropped, "{what}: dropped");
+    assert_eq!(a.churn_log, b.churn_log, "{what}: churn_log");
+    assert_eq!(
+        a.mean_latency.to_bits(),
+        b.mean_latency.to_bits(),
+        "{what}: mean_latency"
+    );
+    assert_eq!(
+        a.tpu_utilization.to_bits(),
+        b.tpu_utilization.to_bits(),
+        "{what}: tpu_utilization"
+    );
+    assert_eq!(
+        a.cache_hit_rate.to_bits(),
+        b.cache_hit_rate.to_bits(),
+        "{what}: cache_hit_rate"
+    );
+    assert_eq!(a.reconfigs.len(), b.reconfigs.len(), "{what}: reconfig count");
+    for (i, ((ta, ca, _), (tb, cb, _))) in a.reconfigs.iter().zip(&b.reconfigs).enumerate() {
+        assert_eq!(ta.to_bits(), tb.to_bits(), "{what}: reconfig[{i}] time");
+        assert_eq!(ca, cb, "{what}: reconfig[{i}] config");
+    }
+    for class in SloClass::ALL {
+        let tag = format!("{what}: class {}", class.name());
+        assert_eq!(a.per_class.accepted(class), b.per_class.accepted(class), "{tag} accepted");
+        assert_eq!(a.per_class.rejected(class), b.per_class.rejected(class), "{tag} rejected");
+        assert_eq!(a.per_class.shed(class), b.per_class.shed(class), "{tag} shed");
+        assert_eq!(a.per_class.expired(class), b.per_class.expired(class), "{tag} expired");
+        assert_eq!(a.per_class.missed(class), b.per_class.missed(class), "{tag} missed");
+        assert_eq!(a.per_class.retried(class), b.per_class.retried(class), "{tag} retried");
+        assert_hist_eq(a.per_class.get(class), b.per_class.get(class), &tag);
+    }
+    assert_eq!(a.max_tpu_occupancy, b.max_tpu_occupancy, "{what}: occupancy");
+    assert_eq!(a.attempted, b.attempted, "{what}: attempted");
+    assert_eq!(a.retried, b.retried, "{what}: retried");
+    assert_eq!(a.failed, b.failed, "{what}: failed");
+    assert_eq!(a.events, b.events, "{what}: events");
+}
+
+fn setup() -> (CostModel, Vec<Tenant>, Config) {
+    let cost = CostModel::new(HardwareSpec::default());
+    let tenants = vec![
+        Tenant {
+            model: synthetic_model("a", 6, 1_000_000, 500_000_000),
+            rate: 40.0,
+        },
+        Tenant {
+            model: synthetic_model("b", 6, 2_000_000, 700_000_000),
+            rate: 25.0,
+        },
+        Tenant {
+            model: synthetic_model("c", 6, 500_000, 300_000_000),
+            rate: 15.0,
+        },
+    ];
+    // Mixed placement: one split tenant with CPU suffix, one all-TPU,
+    // one mostly-CPU — exercises every station type.
+    let cfg = Config {
+        partitions: vec![4, 6, 3],
+        cores: vec![1, 0, 2],
+    };
+    (cost, tenants, cfg)
+}
+
+/// Class- and deadline-annotated arrivals for the tenant mix.
+fn arrivals(tenants: &[Tenant], horizon: f64, seed: u64) -> Vec<Arrival> {
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+    let classes = [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+    let deadlines = [Some(0.08), None, Some(0.25)];
+    let mut rng = Rng::new(seed);
+    generate_arrivals_annotated(&schedules, &classes, &deadlines, horizon, &mut rng)
+}
+
+fn opts(kind: QueueKind) -> SimOptions {
+    SimOptions {
+        horizon: 40.0,
+        warmup: 2.0,
+        seed: 9,
+        queue: kind,
+        ..SimOptions::default()
+    }
+}
+
+#[test]
+fn bit_exact_across_disciplines_and_overload_policies() {
+    let (cost, tenants, cfg) = setup();
+    let arrivals = arrivals(&tenants, 40.0, 9);
+    for discipline in DisciplineKind::ALL {
+        for overload in OverloadPolicy::ALL {
+            let capacity = if overload == OverloadPolicy::Block {
+                None
+            } else {
+                Some(8)
+            };
+            let what = format!("{}/{}", discipline.name(), overload.name());
+            let mut results = Vec::new();
+            for kind in QueueKind::ALL {
+                let o = SimOptions {
+                    discipline,
+                    overload,
+                    capacity,
+                    ..opts(kind)
+                };
+                let mut sim = Simulator::new(&cost, &tenants, cfg.clone(), o);
+                results.push(sim.run(&arrivals, None));
+            }
+            assert_result_eq(&results[0], &results[1], &what);
+            // The matrix must exercise real traffic, not degenerate runs.
+            assert!(results[0].per_model.iter().any(|m| m.completed > 0), "{what}: no completions");
+        }
+    }
+}
+
+#[test]
+fn bit_exact_under_fault_plans() {
+    let (cost, tenants, cfg) = setup();
+    let plan = FaultPlan::new(5)
+        .crash(0, 10.0, Some(18.0))
+        .transient(0, 22.0, 30.0, 0.3)
+        .slow_down(0, 32.0, 38.0, 3.0);
+    let arrivals = arrivals(&tenants, 40.0, 13);
+    let mut results = Vec::new();
+    for kind in QueueKind::ALL {
+        let o = SimOptions {
+            faults: Some(plan.clone()),
+            ..opts(kind)
+        };
+        let mut sim = Simulator::new(&cost, &tenants, cfg.clone(), o);
+        results.push(sim.run(&arrivals, None));
+    }
+    assert_result_eq(&results[0], &results[1], "faulty run");
+    assert!(results[0].retried > 0, "transient window never fired");
+}
+
+#[test]
+fn bit_exact_under_online_reconfiguration() {
+    let (cost, tenants, cfg) = setup();
+    let am = AnalyticModel::new(cost.clone());
+    // Rates swing enough to trip the SwapLess re-planner repeatedly.
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            RateSchedule::stepped(vec![
+                (0.0, t.rate),
+                (20.0, t.rate * if i == 0 { 2.5 } else { 0.4 }),
+                (40.0, t.rate),
+            ])
+        })
+        .collect();
+    let mut results = Vec::new();
+    for kind in QueueKind::ALL {
+        let mut policy = SwapLessPolicy::new(am.clone(), 4, tenants.len(), 10.0, 5.0, 0.10);
+        let o = SimOptions {
+            horizon: 60.0,
+            ..opts(kind)
+        };
+        results.push(simulate_dynamic(
+            &cost, &tenants, &cfg, &schedules, &mut policy, o,
+        ));
+    }
+    assert_result_eq(&results[0], &results[1], "dynamic run");
+    assert!(!results[0].reconfigs.is_empty(), "policy never reconfigured");
+}
+
+#[test]
+fn bit_exact_under_tenant_churn() {
+    let (cost, tenants, cfg) = setup();
+    let am = AnalyticModel::new(cost.clone());
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+    let mut results = Vec::new();
+    for kind in QueueKind::ALL {
+        let churn = vec![
+            ChurnEvent {
+                time: 15.0,
+                kind: ChurnKind::Attach {
+                    tenant: Tenant {
+                        model: synthetic_model("d", 6, 1_500_000, 400_000_000),
+                        rate: 12.0,
+                    },
+                    schedule: RateSchedule::constant(12.0),
+                },
+            },
+            ChurnEvent {
+                time: 35.0,
+                kind: ChurnKind::Detach { name: "b".into() },
+            },
+        ];
+        let mut policy = SwapLessPolicy::new(am.clone(), 4, tenants.len(), 10.0, 5.0, 0.10);
+        let o = SimOptions {
+            horizon: 50.0,
+            ..opts(kind)
+        };
+        results.push(simulate_churn(
+            &cost, &tenants, &cfg, &schedules, churn, &mut policy, o,
+        ));
+    }
+    assert_result_eq(&results[0], &results[1], "churn run");
+    assert_eq!(results[0].retired.len(), 1, "detach never retired a tenant");
+}
+
+/// The threaded replication path must equal a plain sequential seed loop
+/// pushed through the same merge operator.
+#[test]
+fn replicated_merge_matches_sequential_loop() {
+    let (cost, tenants, cfg) = setup();
+    let base = SimOptions {
+        horizon: 30.0,
+        warmup: 2.0,
+        seed: 21,
+        ..SimOptions::default()
+    };
+    let n_reps = 4;
+    let sequential: Vec<SimResult> = (0..n_reps)
+        .map(|rep| {
+            simulate(
+                &cost,
+                &tenants,
+                &cfg,
+                SimOptions {
+                    seed: replication_seed(base.seed, rep),
+                    ..base.clone()
+                },
+            )
+        })
+        .collect();
+    let merged = merge_replications(sequential);
+    let threaded = simulate_replicated(&cost, &tenants, &cfg, &base, n_reps);
+
+    assert_eq!(merged.completed, threaded.completed);
+    assert_eq!(merged.dropped, threaded.dropped);
+    assert_eq!(merged.attempted, threaded.attempted);
+    assert_eq!(
+        merged.mean_latency.to_bits(),
+        threaded.mean_latency.to_bits()
+    );
+    assert_eq!(merged.ci95.to_bits(), threaded.ci95.to_bits());
+    assert_eq!(merged.rep_means.len(), threaded.rep_means.len());
+    for (a, b) in merged.rep_means.iter().zip(&threaded.rep_means) {
+        assert_eq!(a.to_bits(), b.to_bits(), "rep mean order");
+    }
+    for (i, (a, b)) in merged.per_model.iter().zip(&threaded.per_model).enumerate() {
+        assert_stats_eq(a, b, &format!("merged per_model[{i}]"));
+    }
+    for (a, b) in merged.reps.iter().zip(&threaded.reps) {
+        assert_result_eq(a, b, "replication");
+    }
+    assert!(threaded.ci95 > 0.0, "4 distinct seeds must spread the means");
+}

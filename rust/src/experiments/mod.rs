@@ -22,5 +22,6 @@ pub mod scenarios;
 pub mod sched_ablation;
 pub mod sensitivity;
 pub mod table2;
+pub mod wire;
 
 pub use common::Ctx;

@@ -1,0 +1,253 @@
+//! The wire experiment: what does the socket edge cost?
+//!
+//! Brings up a real `NetListener` on a loopback ephemeral port in front
+//! of an emulated single-device server, then sweeps offered rate ×
+//! connection count with the open-loop load generator, measuring
+//! **client-observed** latency (framing + TCP + queueing + service).
+//! Each rate point also gets an in-process baseline — the same Poisson
+//! stream submitted directly through `Server::submit` with a collector
+//! thread timing submit → ticket resolution — so the table reads as
+//! "the socket path adds X ms at rate R" (`results/wire.json`).
+
+use super::common::{print_table, Ctx};
+use crate::coordinator::{AttachOptions, Request, ServerBuilder, Ticket};
+use crate::metrics::LatencyHistogram;
+use crate::net::loadgen::{self, LoadgenMode, LoadgenOptions, TenantSpec};
+use crate::net::{NetListener, NetOptions};
+use crate::runtime::service::ExecBackend;
+use crate::sched::SloClass;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::RateSchedule;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const MODELS: [&str; 2] = ["mobilenetv2", "squeezenet"];
+const RATES: [f64; 2] = [20.0, 60.0];
+const CONNECTIONS: [usize; 2] = [1, 4];
+const DURATION_S: f64 = 1.5;
+
+#[derive(Debug, Clone)]
+pub struct WireRow {
+    /// "wire" or "direct" (the in-process baseline).
+    pub path: &'static str,
+    /// Total offered rate across tenants (req/s).
+    pub offered: f64,
+    /// 0 for the direct path.
+    pub connections: usize,
+    pub sent: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub unanswered: u64,
+    pub achieved: f64,
+    pub mean_ms: f64,
+    pub p99_ms: f64,
+}
+
+pub struct WireResult {
+    pub rows: Vec<WireRow>,
+}
+
+impl WireResult {
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.path.to_string(),
+                    format!("{:.0}", r.offered),
+                    if r.connections == 0 {
+                        "-".to_string()
+                    } else {
+                        r.connections.to_string()
+                    },
+                    r.sent.to_string(),
+                    r.completed.to_string(),
+                    r.errors.to_string(),
+                    format!("{:.1}", r.achieved),
+                    format!("{:.2}", r.mean_ms),
+                    format!("{:.2}", r.p99_ms),
+                ]
+            })
+            .collect();
+        print_table(
+            "Wire: loopback socket path vs in-process submission (open loop, emulated)",
+            &[
+                "path", "offered", "conns", "sent", "completed", "errors", "rate", "mean ms",
+                "p99 ms",
+            ],
+            &rows,
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("path", Json::Str(r.path.to_string())),
+                        ("offered", Json::Num(r.offered)),
+                        ("connections", Json::Num(r.connections as f64)),
+                        ("sent", Json::Num(r.sent as f64)),
+                        ("completed", Json::Num(r.completed as f64)),
+                        ("errors", Json::Num(r.errors as f64)),
+                        ("unanswered", Json::Num(r.unanswered as f64)),
+                        ("achieved", Json::Num(r.achieved)),
+                        ("mean_ms", Json::Num(r.mean_ms)),
+                        ("p99_ms", Json::Num(r.p99_ms)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Split a total offered rate across the driven tenants.
+fn per_tenant_rates(total: f64) -> Vec<f64> {
+    vec![total / MODELS.len() as f64; MODELS.len()]
+}
+
+pub fn run(ctx: &Ctx) -> Result<WireResult, String> {
+    let mut rows = Vec::new();
+
+    // One server + listener serves the whole sweep, like a real
+    // deployment; per-point metrics come from the client side.
+    let mut builder = ServerBuilder::new(&ctx.manifest, ctx.cost.clone())
+        .k_max(ctx.k_max)
+        .backend(ExecBackend::Emulated)
+        .adaptive(false);
+    builder = builder.time_scale(0.0);
+    let server = Arc::new(builder.build().map_err(|e| e.to_string())?);
+    let mut input_lens = Vec::new();
+    for name in MODELS {
+        let h = server
+            .attach(
+                name,
+                AttachOptions {
+                    rate_hint: 40.0,
+                    class: SloClass::Standard,
+                },
+            )
+            .map_err(|e| e.to_string())?;
+        let n: usize = server
+            .model_meta(h)
+            .expect("just attached")
+            .input_shape
+            .iter()
+            .product();
+        input_lens.push((h, n));
+    }
+    let listener = NetListener::bind(server.clone(), "127.0.0.1:0", NetOptions::default())?;
+    let addr = listener.local_addr().to_string();
+
+    for &offered in &RATES {
+        for &conns in &CONNECTIONS {
+            let report = loadgen::run(&LoadgenOptions {
+                addr: addr.clone(),
+                connections: conns,
+                duration_s: DURATION_S,
+                mode: LoadgenMode::Open,
+                tenants: input_lens
+                    .iter()
+                    .zip(per_tenant_rates(offered))
+                    .map(|((h, _), r)| TenantSpec {
+                        handle: h.0,
+                        schedule: RateSchedule::constant(r),
+                        class: None,
+                        deadline_ms: 0,
+                    })
+                    .collect(),
+                window: 8,
+                seed: ctx.seed,
+            })?;
+            rows.push(WireRow {
+                path: "wire",
+                offered,
+                connections: conns,
+                sent: report.sent,
+                completed: report.completed,
+                errors: report.errors,
+                unanswered: report.unanswered,
+                achieved: report.rate(),
+                mean_ms: report.latency.mean() * 1e3,
+                p99_ms: report.latency.percentile(99.0) * 1e3,
+            });
+        }
+        rows.push(direct_baseline(&server, &input_lens, offered, ctx.seed));
+    }
+
+    let net = listener.shutdown();
+    println!("{}", net.line());
+    Ok(WireResult { rows })
+}
+
+/// The in-process baseline: same Poisson stream, `Server::submit`
+/// directly, a collector thread timing submit → resolution.
+fn direct_baseline(
+    server: &Arc<crate::coordinator::Server>,
+    tenants: &[(crate::analytic::TenantHandle, usize)],
+    offered: f64,
+    seed: u64,
+) -> WireRow {
+    let (tx, rx) = mpsc::channel::<(Instant, Ticket)>();
+    let collector = std::thread::spawn(move || {
+        let mut hist = LatencyHistogram::default();
+        let mut completed = 0u64;
+        let mut errors = 0u64;
+        while let Ok((sent_at, ticket)) = rx.recv() {
+            match ticket.wait() {
+                Ok(_) => {
+                    completed += 1;
+                    hist.record(sent_at.elapsed().as_secs_f64());
+                }
+                Err(_) => errors += 1,
+            }
+        }
+        (hist, completed, errors)
+    });
+
+    let rates = per_tenant_rates(offered);
+    let mut rng = Rng::new(seed ^ 0x5157);
+    let mut next_at: Vec<f64> = rates.iter().map(|r| rng.exponential(*r)).collect();
+    let mut sent = 0u64;
+    let t0 = Instant::now();
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= DURATION_S {
+            break;
+        }
+        let (idx, at) = next_at
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("tenants non-empty");
+        if at > now {
+            std::thread::sleep(Duration::from_secs_f64((at.min(DURATION_S) - now).min(0.05)));
+            continue;
+        }
+        let (h, n_in) = tenants[idx];
+        let ticket = server.submit(h, Request::new(vec![0.5; n_in]));
+        let _ = tx.send((Instant::now(), ticket));
+        sent += 1;
+        next_at[idx] = now + rng.exponential(rates[idx]);
+    }
+    drop(tx);
+    let wall = t0.elapsed().as_secs_f64();
+    let (hist, completed, errors) = collector.join().expect("collector thread");
+    WireRow {
+        path: "direct",
+        offered,
+        connections: 0,
+        sent,
+        completed,
+        errors,
+        unanswered: sent - completed - errors,
+        achieved: completed as f64 / wall,
+        mean_ms: hist.mean() * 1e3,
+        p99_ms: hist.percentile(99.0) * 1e3,
+    }
+}

@@ -337,6 +337,15 @@ impl FleetServer {
         lock_or_recover(&self.state).iter().map(|t| t.handle).collect()
     }
 
+    /// Input tensor length (f32 count) `handle`'s model expects per
+    /// request; `None` when not attached (the wire handshake).
+    pub fn input_len(&self, handle: TenantHandle) -> Option<usize> {
+        lock_or_recover(&self.state)
+            .iter()
+            .find(|t| t.handle == handle)
+            .map(|t| t.tenant.model.input_shape.iter().product())
+    }
+
     /// Manually install a (P, K) configuration on one device (parity
     /// tests, static baselines). Dimensions are validated against the
     /// device's live tenant count.

@@ -25,6 +25,7 @@ pub mod fault;
 pub mod fleet;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod profiler;
 pub mod runtime;
 pub mod sched;

@@ -38,11 +38,12 @@ use swapless::experiments::common::save_result;
 use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 29] = [
+const VALUE_OPTS: [&str; 35] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
     "trace", "policy", "duration", "attach-at", "detach-at", "backend", "discipline", "classes",
     "queue-cap", "overload", "deadline-ms", "devices", "crash-device", "crash-at", "recover-at",
-    "log", "offset", "queue", "scenario",
+    "log", "offset", "queue", "scenario", "listen", "connect", "connections", "mode", "window",
+    "tenants",
 ];
 
 fn main() {
@@ -99,7 +100,7 @@ fn usage() -> String {
                                    must match the live ServeStats bit-exactly\n\
                                    (results/audit.json; non-zero exit on drift)\n\
        serve [--models a,b] [--rates x,y | --rho R] [--classes c1,c2]\n\
-             [--devices N] [--duration S] [--time-scale S]\n\
+             [--devices N] [--duration S] [--time-scale S] [--listen ADDR]\n\
              [--discipline fifo|priority|wfq|spsf]\n\
              [--queue-cap N] [--overload block|reject|shed|deadline]\n\
              [--deadline-ms D] [--attach-at name@t[:rate],...]\n\
@@ -118,7 +119,21 @@ fn usage() -> String {
                                    --crash-device/--crash-at inject a chaos crash\n\
                                    into a fleet run (failover requeues its work);\n\
                                    --log FILE appends the binary request event\n\
-                                   log off the hot path (audit/replay it later)\n\
+                                   log off the hot path (audit/replay it later);\n\
+                                   --listen ADDR additionally serves the binary\n\
+                                   wire protocol on a TCP socket (loadgen drives\n\
+                                   it; GET /stats over HTTP for a snapshot)\n\
+       loadgen --connect HOST:PORT [--tenants N] [--rates x,y]\n\
+               [--classes c1,c2] [--deadline-ms D] [--mode open|closed]\n\
+               [--connections N] [--window W] [--duration S] [--seed N]\n\
+                                   drive a serve --listen edge over real sockets:\n\
+                                   open loop (Poisson at --rates, split across\n\
+                                   connections) or closed loop (--window in\n\
+                                   flight per connection); prints the greppable\n\
+                                   loadgen: client-side summary line\n\
+       wire                        loopback sweep: offered rate x connections\n\
+                                   through the socket edge vs direct in-process\n\
+                                   submission (results/wire.json)\n\
        trace --models a,b --rates x,y [--horizon S] [--seed N] [--out FILE]\n\
                                    record a Poisson arrival trace (JSON)\n\
        replay --trace FILE [--policy swapless|compiler|threshold]\n\
@@ -174,7 +189,8 @@ fn run(raw: &[String]) -> Result<(), String> {
             run_named(&ctx, "schedulers")
         }
         "ablation" | "sensitivity" | "churn" | "schedulers" | "overload" | "fleet"
-        | "faults" => run_named(&ctx, cmd),
+        | "faults" | "wire" => run_named(&ctx, cmd),
+        "loadgen" => loadgen_cmd(&args),
         "scenarios" => {
             let r = exp::scenarios::run_filtered(&ctx, args.opt("scenario"))?;
             r.print();
@@ -621,8 +637,76 @@ fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
             }
             Ok(())
         }
+        "wire" => {
+            let r = exp::wire::run(ctx)?;
+            r.print();
+            save_result("wire", &r.to_json())
+        }
         _ => Err(format!("unknown experiment {which}")),
     }
+}
+
+/// `swapless loadgen --connect HOST:PORT` — drive a `serve --listen`
+/// edge over real sockets and print the client-observed summary.
+fn loadgen_cmd(args: &cli::Args) -> Result<(), String> {
+    use swapless::net::loadgen;
+    use swapless::net::{LoadgenMode, LoadgenOptions, TenantSpec};
+    use swapless::sched::SloClass;
+    use swapless::workload::RateSchedule;
+
+    let addr = args
+        .opt("connect")
+        .ok_or("loadgen needs --connect HOST:PORT")?
+        .to_string();
+    let n_tenants = args.opt_usize("tenants", 1)?;
+    if n_tenants == 0 {
+        return Err("--tenants must be at least 1".into());
+    }
+    let rates: Vec<f64> = if args.opt("rates").is_some() {
+        args.opt_list("rates")
+            .iter()
+            .map(|r| r.parse::<f64>().map_err(|_| format!("bad rate {r}")))
+            .collect::<Result<_, _>>()?
+    } else {
+        vec![5.0; n_tenants]
+    };
+    if rates.len() != n_tenants {
+        return Err("--rates must match --tenants".into());
+    }
+    let classes: Vec<Option<SloClass>> = if args.opt("classes").is_some() {
+        args.opt_list("classes")
+            .iter()
+            .map(|c| SloClass::parse(c).map(Some))
+            .collect::<Result<_, _>>()?
+    } else {
+        vec![None; n_tenants]
+    };
+    if classes.len() != n_tenants {
+        return Err("--classes must match --tenants".into());
+    }
+    let deadline_ms = args.opt_u64("deadline-ms", 0)? as u32;
+    let mode = LoadgenMode::parse(&args.opt_or("mode", "open"))?;
+    let report = loadgen::run(&LoadgenOptions {
+        addr,
+        connections: args.opt_usize("connections", 1)?,
+        duration_s: args.opt_f64("duration", 4.0)?,
+        mode,
+        tenants: rates
+            .iter()
+            .zip(&classes)
+            .enumerate()
+            .map(|(handle, (rate, class))| TenantSpec {
+                handle: handle as u64,
+                schedule: RateSchedule::constant(*rate),
+                class: *class,
+                deadline_ms,
+            })
+            .collect(),
+        window: args.opt_usize("window", 8)?,
+        seed: args.opt_u64("seed", 42)?,
+    })?;
+    report.print();
+    Ok(())
 }
 
 fn run_figure(ctx: &exp::Ctx, n: &str) -> Result<(), String> {
@@ -871,7 +955,21 @@ fn serve_fleet(
     if let Some(l) = &log {
         builder = builder.log(l.clone());
     }
-    let server = builder.build().map_err(|e| e.to_string())?;
+    let server = std::sync::Arc::new(builder.build().map_err(|e| e.to_string())?);
+    // --listen ADDR: serve the binary wire protocol in front of the
+    // fleet router (socket requests share the same submit path).
+    let listener = match args.opt("listen") {
+        Some(addr) => {
+            let l = swapless::net::NetListener::bind(
+                server.clone(),
+                addr,
+                swapless::net::NetOptions::default(),
+            )?;
+            println!("listening on {}", l.local_addr());
+            Some(l)
+        }
+        None => None,
+    };
     println!(
         "fleet: {devices} devices | discipline: {discipline} | overload: {overload}{}",
         queue_cap.map(|c| format!(" cap {c}")).unwrap_or_default()
@@ -900,7 +998,14 @@ fn serve_fleet(
                 let d = server.device_of(h).expect("just attached");
                 println!("attach {n} @ {r:.2} rps ({c}) -> {h} on device {d}");
                 let n_in: usize = ctx.manifest.get(n)?.input_shape.iter().product();
-                live.push((h, n.clone(), n_in, *r, rng.exponential(*r)));
+                // Rate 0 = attach but don't drive locally (wire-only
+                // traffic via --listen).
+                let next = if *r > 0.0 {
+                    rng.exponential(*r)
+                } else {
+                    f64::INFINITY
+                };
+                live.push((h, n.clone(), n_in, *r, next));
             }
             Err(e) => println!("attach {n} REFUSED: {e}"),
         }
@@ -967,6 +1072,11 @@ fn serve_fleet(
             Ok(_) => ok += 1,
             Err(_) => failed += 1,
         }
+    }
+    // Graceful wire drain: every accepted socket request resolves and
+    // its response is written before the counters are read.
+    if let Some(l) = listener {
+        println!("{}", l.shutdown().line());
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
@@ -1160,7 +1270,21 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
     if let Some(l) = &log {
         builder = builder.log(l.clone());
     }
-    let server = builder.build().map_err(|e| e.to_string())?;
+    let server = Arc::new(builder.build().map_err(|e| e.to_string())?);
+    // --listen ADDR: serve the binary wire protocol alongside the local
+    // open-loop drive (socket requests share the same submit path).
+    let listener = match args.opt("listen") {
+        Some(addr) => {
+            let l = swapless::net::NetListener::bind(
+                server.clone(),
+                addr,
+                swapless::net::NetOptions::default(),
+            )?;
+            println!("listening on {}", l.local_addr());
+            Some(l)
+        }
+        None => None,
+    };
     println!(
         "backend: {:?} | discipline: {} | overload: {}{}{}",
         server.backend(),
@@ -1193,7 +1317,14 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
                     "t={at:.1}s attach {name} @ {rate:.2} rps ({class}) -> {h}  plan P={:?} K={:?}",
                     cfg.partitions, cfg.cores
                 );
-                live.push((h, name.to_string(), meta, rate, at + rng.exponential(rate)));
+                // Rate 0 = attach but don't drive locally (wire-only
+                // traffic via --listen).
+                let next = if rate > 0.0 {
+                    at + rng.exponential(rate)
+                } else {
+                    f64::INFINITY
+                };
+                live.push((h, name.to_string(), meta, rate, next));
             }
             Err(e) => println!("t={at:.1}s attach {name} REFUSED: {e}"),
         }
@@ -1274,6 +1405,11 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
             Ok(_) => ok += 1,
             Err(_) => failed += 1,
         }
+    }
+    // Graceful wire drain: every accepted socket request resolves and
+    // its response is written before the counters are read.
+    if let Some(l) = listener {
+        println!("{}", l.shutdown().line());
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();

@@ -464,6 +464,46 @@ pub fn fmt_log_line(appended: u64, dropped: u64) -> String {
     format!("log: appended={appended} dropped={dropped}")
 }
 
+/// Network-edge accounting printed when `serve --listen` shuts down.
+/// `frames_in = responses_ok + responses_err` on a graceful drain —
+/// the wire-path "no silent drops" invariant, pinned by CI greps.
+#[allow(clippy::too_many_arguments)]
+pub fn fmt_net_line(
+    conns: u64,
+    shed_conns: u64,
+    http: u64,
+    frames_in: u64,
+    responses_ok: u64,
+    responses_err: u64,
+    malformed: u64,
+) -> String {
+    format!(
+        "net: conns={conns} shed_conns={shed_conns} http={http} \
+         frames_in={frames_in} responses_ok={responses_ok} \
+         responses_err={responses_err} malformed={malformed}"
+    )
+}
+
+/// The load generator's client-side summary (the `loadgen:` CI anchor).
+#[allow(clippy::too_many_arguments)]
+pub fn fmt_loadgen_line(
+    mode: &str,
+    conns: usize,
+    sent: u64,
+    completed: u64,
+    errors: u64,
+    unanswered: u64,
+    rate: f64,
+    mean_ms: f64,
+    p99_ms: f64,
+) -> String {
+    format!(
+        "loadgen: mode={mode} conns={conns} sent={sent} completed={completed} \
+         errors={errors} unanswered={unanswered} rate={rate:.1} \
+         mean_ms={mean_ms:.2} p99_ms={p99_ms:.2}"
+    )
+}
+
 /// Mean absolute percentage error — the paper's model-validation metric.
 pub fn mape(observed: &[f64], predicted: &[f64]) -> f64 {
     assert_eq!(observed.len(), predicted.len());
@@ -693,6 +733,16 @@ mod tests {
              failed=0 reconfigs=4 migrations=2"
         );
         assert_eq!(fmt_log_line(1234, 0), "log: appended=1234 dropped=0");
+        assert_eq!(
+            fmt_net_line(3, 1, 2, 500, 480, 20, 0),
+            "net: conns=3 shed_conns=1 http=2 frames_in=500 responses_ok=480 \
+             responses_err=20 malformed=0"
+        );
+        assert_eq!(
+            fmt_loadgen_line("open", 2, 100, 90, 10, 0, 45.25, 3.141, 9.5),
+            "loadgen: mode=open conns=2 sent=100 completed=90 errors=10 \
+             unanswered=0 rate=45.2 mean_ms=3.14 p99_ms=9.50"
+        );
     }
 
     #[test]

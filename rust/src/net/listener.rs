@@ -1,0 +1,516 @@
+//! Bounded thread-per-connection TCP listener in front of the servers.
+//!
+//! Accepted connections run a reader thread (frame parse →
+//! `submit` → ticket) and a writer thread (ticket resolve → response
+//! frame), so a slow backend never stops the socket from accepting
+//! pipelined frames and responses flow as soon as tickets resolve.
+//! Buffers are per-connection and reused: after warmup the framing
+//! layer allocates nothing per request (`bench_net` pins this with the
+//! counting allocator); the only per-request allocation is the input
+//! tensor the backend contract requires (`Request` owns its `Vec<f32>`,
+//! exactly as in-process submitters allocate).
+//!
+//! Overload at the edge is handled the same way the admission layer
+//! handles it: a connection cap with accept-time shedding (the refused
+//! client gets a typed `Overloaded` Error frame, not a hang). Shutdown
+//! is graceful: readers stop consuming new frames, writers drain every
+//! in-flight `Ticket` and deliver its response (or typed error) before
+//! the socket closes — no stranded clients. After shutdown,
+//! `frames_in == responses_ok + responses_err`.
+//!
+//! A connection whose first bytes are `GET ` is served as minimal
+//! HTTP/1.1 instead: `GET /stats` returns the same greppable stats
+//! lines the CLI prints, so the edge can be scraped with `curl`.
+
+use super::proto::{
+    decode_payload, encode_payload, write_frame, ErrorCode, FrameHeader, FrameKind, FrameReader,
+    WireError,
+};
+use super::WireBackend;
+use crate::coordinator::{Request, Ticket};
+use crate::metrics::fmt_net_line;
+use crate::util::sync::lock_or_recover;
+use std::io::{BufWriter, ErrorKind, Write};
+use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Tuning knobs for [`NetListener::bind`].
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Concurrent-connection cap; further accepts are shed with a typed
+    /// `Overloaded` Error frame.
+    pub max_connections: usize,
+    /// Read-timeout granularity at which blocked readers poll the stop
+    /// flag — the upper bound on how long shutdown waits for an idle
+    /// connection to notice.
+    pub read_poll: Duration,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            max_connections: 64,
+            read_poll: Duration::from_millis(25),
+        }
+    }
+}
+
+/// Live counters shared by the accept loop and connection threads.
+#[derive(Default)]
+struct NetCounters {
+    accepted_conns: AtomicU64,
+    shed_conns: AtomicU64,
+    http_requests: AtomicU64,
+    /// Submit frames parsed and handed to the backend.
+    frames_in: AtomicU64,
+    /// Submit tickets resolved Ok.
+    responses_ok: AtomicU64,
+    /// Submit tickets resolved with a typed error (Error frame written).
+    responses_err: AtomicU64,
+    /// Frames the edge refused to parse (typed Error frame, then close).
+    malformed: AtomicU64,
+}
+
+/// Snapshot of a listener's lifetime counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetStats {
+    pub accepted_conns: u64,
+    pub shed_conns: u64,
+    pub http_requests: u64,
+    pub frames_in: u64,
+    pub responses_ok: u64,
+    pub responses_err: u64,
+    pub malformed: u64,
+}
+
+impl NetStats {
+    /// The greppable `net:` summary line (pinned in `metrics`).
+    pub fn line(&self) -> String {
+        fmt_net_line(
+            self.accepted_conns,
+            self.shed_conns,
+            self.http_requests,
+            self.frames_in,
+            self.responses_ok,
+            self.responses_err,
+            self.malformed,
+        )
+    }
+}
+
+/// What the reader hands the writer, in arrival order. A `Malformed`
+/// entry is always the reader's last word on a connection — the byte
+/// stream can't be resynchronized, so the reader returns right after
+/// sending it and the writer closes once the queue drains.
+enum Pending {
+    Submit { seq: u64, tenant: u64, ticket: Ticket },
+    Info { seq: u64, tenant: u64, input_len: Option<u32> },
+    Malformed { seq: u64 },
+}
+
+/// Handle to a running listener. Dropping it (or calling
+/// [`shutdown`](NetListener::shutdown)) drains every connection.
+pub struct NetListener {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    counters: Arc<NetCounters>,
+}
+
+impl NetListener {
+    /// Bind `addr` (e.g. `127.0.0.1:7431`; port 0 picks a free port —
+    /// see [`local_addr`](Self::local_addr)) and start accepting.
+    pub fn bind(
+        backend: Arc<dyn WireBackend>,
+        addr: &str,
+        opts: NetOptions,
+    ) -> Result<NetListener, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let counters = Arc::new(NetCounters::default());
+        let active = Arc::new(AtomicUsize::new(0));
+
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let counters = counters.clone();
+            std::thread::spawn(move || loop {
+                let (stream, _) = match listener.accept() {
+                    Ok(pair) => pair,
+                    Err(_) => {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        continue;
+                    }
+                };
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if active.load(Ordering::SeqCst) >= opts.max_connections {
+                    counters.shed_conns.fetch_add(1, Ordering::SeqCst);
+                    shed_connection(stream);
+                    continue;
+                }
+                counters.accepted_conns.fetch_add(1, Ordering::SeqCst);
+                active.fetch_add(1, Ordering::SeqCst);
+                let conn = spawn_connection(
+                    stream,
+                    backend.clone(),
+                    stop.clone(),
+                    counters.clone(),
+                    active.clone(),
+                    opts.read_poll,
+                );
+                let mut held = lock_or_recover(&conns);
+                held.retain(|h| !h.is_finished());
+                held.push(conn);
+            })
+        };
+
+        Ok(NetListener {
+            addr: local,
+            stop,
+            accept: Some(accept),
+            conns,
+            counters,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Point-in-time counter snapshot.
+    pub fn stats(&self) -> NetStats {
+        NetStats {
+            accepted_conns: self.counters.accepted_conns.load(Ordering::SeqCst),
+            shed_conns: self.counters.shed_conns.load(Ordering::SeqCst),
+            http_requests: self.counters.http_requests.load(Ordering::SeqCst),
+            frames_in: self.counters.frames_in.load(Ordering::SeqCst),
+            responses_ok: self.counters.responses_ok.load(Ordering::SeqCst),
+            responses_err: self.counters.responses_err.load(Ordering::SeqCst),
+            malformed: self.counters.malformed.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Stop accepting, drain every connection (each in-flight `Ticket`
+    /// resolves and its response or typed error is written), and return
+    /// the final counters.
+    pub fn shutdown(mut self) -> NetStats {
+        self.wind_down();
+        self.stats()
+    }
+
+    fn wind_down(&mut self) {
+        let Some(accept) = self.accept.take() else {
+            return;
+        };
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept() call: connect once to our own port.
+        let wake = if self.addr.ip().is_unspecified() {
+            SocketAddr::new(IpAddr::V4(Ipv4Addr::LOCALHOST), self.addr.port())
+        } else {
+            self.addr
+        };
+        let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+        let _ = accept.join();
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *lock_or_recover(&self.conns));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetListener {
+    fn drop(&mut self) {
+        self.wind_down();
+    }
+}
+
+/// Refuse a connection over the cap with a typed Error frame.
+fn shed_connection(mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = write_frame(
+        &mut stream,
+        &FrameHeader::error(0, 0, ErrorCode::Overloaded),
+        &[],
+    );
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn spawn_connection(
+    stream: TcpStream,
+    backend: Arc<dyn WireBackend>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+    active: Arc<AtomicUsize>,
+    read_poll: Duration,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(read_poll));
+        let writer_stream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => {
+                active.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
+        };
+        let (tx, rx) = channel::<Pending>();
+        let writer = {
+            let counters = counters.clone();
+            std::thread::spawn(move || run_writer(writer_stream, rx, counters))
+        };
+        run_reader(stream, backend, tx, stop, counters);
+        // tx dropped above: the writer drains every pending ticket,
+        // writes its frame, flushes, and exits.
+        let _ = writer.join();
+        active.fetch_sub(1, Ordering::SeqCst);
+    })
+}
+
+/// True for transient read errors that just mean "poll again".
+fn is_poll(err: &WireError) -> bool {
+    matches!(
+        err,
+        WireError::Io(ErrorKind::WouldBlock) | WireError::Io(ErrorKind::TimedOut)
+    )
+}
+
+fn run_reader(
+    mut stream: TcpStream,
+    backend: Arc<dyn WireBackend>,
+    tx: Sender<Pending>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+) {
+    let mut reader = FrameReader::new();
+
+    // Sniff the first bytes: a browser/curl speaks HTTP, not frames.
+    loop {
+        match reader.fill_at_least(&mut stream, 4) {
+            Ok(0) => return, // closed before sending anything
+            Ok(_) => break,
+            Err(e) if is_poll(&e) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    if reader.buffered().starts_with(b"GET ") {
+        counters.http_requests.fetch_add(1, Ordering::SeqCst);
+        serve_http(stream, reader, backend, stop);
+        return;
+    }
+
+    loop {
+        match reader.next_frame(&mut stream) {
+            Ok(Some((header, payload))) => match header.kind {
+                FrameKind::Submit => {
+                    // The input tensor is the backend's per-request
+                    // allocation contract (`Request` owns its buffer) —
+                    // the framing layer itself stays allocation-free.
+                    let mut input = Vec::with_capacity(payload.len() / 4);
+                    // Header validation already pinned the alignment,
+                    // but never panic on wire data regardless.
+                    if decode_payload(payload, &mut input).is_err() {
+                        counters.malformed.fetch_add(1, Ordering::SeqCst);
+                        let _ = tx.send(Pending::Malformed { seq: header.seq });
+                        return;
+                    }
+                    counters.frames_in.fetch_add(1, Ordering::SeqCst);
+                    let mut req = Request::new(input);
+                    if let Some(class) = header.class {
+                        req = req.with_class(class);
+                    }
+                    if header.arg > 0 {
+                        req = req.with_deadline(Duration::from_millis(u64::from(header.arg)));
+                    }
+                    let ticket = backend.submit(crate::analytic::TenantHandle(header.tenant), req);
+                    if tx
+                        .send(Pending::Submit {
+                            seq: header.seq,
+                            tenant: header.tenant,
+                            ticket,
+                        })
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                FrameKind::Query => {
+                    let input_len = backend
+                        .input_len(crate::analytic::TenantHandle(header.tenant))
+                        .map(|n| n as u32);
+                    if tx
+                        .send(Pending::Info {
+                            seq: header.seq,
+                            tenant: header.tenant,
+                            input_len,
+                        })
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                // A client must not send server-side kinds; treat as a
+                // protocol violation and close with a typed error.
+                FrameKind::Response | FrameKind::Error | FrameKind::Info => {
+                    counters.malformed.fetch_add(1, Ordering::SeqCst);
+                    let _ = tx.send(Pending::Malformed { seq: header.seq });
+                    return;
+                }
+            },
+            Ok(None) => return, // clean EOF at a frame boundary
+            Err(e) if is_poll(&e) => {
+                if stop.load(Ordering::SeqCst) {
+                    // Graceful drain: stop consuming new frames; the
+                    // writer resolves what was already accepted.
+                    return;
+                }
+            }
+            Err(WireError::Io(_)) => return, // peer reset etc.
+            Err(_) => {
+                counters.malformed.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(Pending::Malformed { seq: 0 });
+                return;
+            }
+        }
+    }
+}
+
+fn run_writer(stream: TcpStream, rx: Receiver<Pending>, counters: Arc<NetCounters>) {
+    let mut w = BufWriter::with_capacity(64 * 1024, stream);
+    let mut payload: Vec<u8> = Vec::new();
+    // The client may already be gone (reset mid-drain); tickets must
+    // still be resolved so the backend's accounting closes out, but
+    // further writes are pointless.
+    let mut dead = false;
+
+    let mut handle = |p: Pending, w: &mut BufWriter<TcpStream>, dead: &mut bool| {
+        let outcome = match p {
+            Pending::Submit {
+                seq,
+                tenant,
+                ticket,
+            } => match ticket.wait() {
+                Ok(done) => {
+                    counters.responses_ok.fetch_add(1, Ordering::SeqCst);
+                    if *dead {
+                        return;
+                    }
+                    encode_payload(&done.output, &mut payload);
+                    let latency_us = (done.latency_s * 1e6).min(u32::MAX as f64) as u32;
+                    let h = FrameHeader::response(tenant, seq, latency_us, payload.len() as u32);
+                    write_frame(w, &h, &payload)
+                }
+                Err(e) => {
+                    counters.responses_err.fetch_add(1, Ordering::SeqCst);
+                    if *dead {
+                        return;
+                    }
+                    write_frame(w, &FrameHeader::error(tenant, seq, ErrorCode::of(&e)), &[])
+                }
+            },
+            Pending::Info {
+                seq,
+                tenant,
+                input_len,
+            } => {
+                if *dead {
+                    return;
+                }
+                match input_len {
+                    Some(n) => write_frame(w, &FrameHeader::info(tenant, seq, n), &[]),
+                    None => write_frame(
+                        w,
+                        &FrameHeader::error(tenant, seq, ErrorCode::NotAttached),
+                        &[],
+                    ),
+                }
+            }
+            Pending::Malformed { seq } => {
+                if *dead {
+                    return;
+                }
+                write_frame(w, &FrameHeader::error(0, seq, ErrorCode::Malformed), &[])
+            }
+        };
+        if outcome.is_err() {
+            *dead = true;
+        }
+    };
+
+    // Block for the next pending item, then drain whatever else is
+    // already queued before flushing once — write coalescing under
+    // pipelined load. `recv` fails only when the reader is gone AND the
+    // queue is empty, so every accepted request is resolved.
+    while let Ok(p) = rx.recv() {
+        handle(p, &mut w, &mut dead);
+        while let Ok(p) = rx.try_recv() {
+            handle(p, &mut w, &mut dead);
+        }
+        if !dead && w.flush().is_err() {
+            dead = true;
+        }
+    }
+    let _ = w.flush();
+    if let Ok(stream) = w.into_inner() {
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// Minimal HTTP/1.1: `GET /stats` returns the greppable stats lines.
+fn serve_http(
+    mut stream: TcpStream,
+    mut reader: FrameReader,
+    backend: Arc<dyn WireBackend>,
+    stop: Arc<AtomicBool>,
+) {
+    // Read to the end of the request headers (bounded).
+    loop {
+        let have = reader.buffered().len();
+        if reader.buffered().windows(4).any(|win| win == b"\r\n\r\n") || have > 8192 {
+            break;
+        }
+        match reader.fill_at_least(&mut stream, have + 1) {
+            Ok(n) if n == have => break, // EOF
+            Ok(_) => {}
+            Err(e) if is_poll(&e) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    let head = String::from_utf8_lossy(reader.buffered()).into_owned();
+    let path = head.split_whitespace().nth(1).unwrap_or("");
+    let (status, body) = if path == "/stats" || path.starts_with("/stats?") {
+        ("200 OK", backend.stats_text())
+    } else {
+        ("404 Not Found", "not found; try GET /stats\n".to_string())
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+    let _ = stream.shutdown(Shutdown::Both);
+}

@@ -1,0 +1,548 @@
+//! Load-generator client over real sockets (`loadgen` CLI command).
+//!
+//! Two drive modes against a `serve --listen` edge:
+//!
+//! - **Open loop**: per-tenant Poisson arrivals at rates taken from a
+//!   [`RateSchedule`] (split evenly across connections), submitted
+//!   without waiting — offered load is independent of server speed,
+//!   which is what exposes queueing and overload behavior.
+//! - **Closed loop**: a fixed window of in-flight requests per
+//!   connection; a new request departs only when a response lands —
+//!   the throughput-probe mode (`bench_net` drives it).
+//!
+//! Latency is **client-observed** (send → response frame, including
+//! the wire and framing), recorded in the same
+//! [`LatencyHistogram`](crate::metrics::LatencyHistogram) geometry the
+//! server uses so wire and in-process numbers compare directly
+//! (`experiments::wire`). The summary is one greppable `loadgen:` line
+//! (pinned in `metrics`): every sent request is accounted as completed,
+//! typed-error, or unanswered — an unanswered request means the
+//! connection died before its response, never a silent drop.
+
+use super::proto::{
+    encode_payload, write_frame, ErrorCode, FrameHeader, FrameKind, FrameReader, WireError,
+};
+use crate::metrics::{fmt_loadgen_line, LatencyHistogram};
+use crate::sched::SloClass;
+use crate::util::rng::Rng;
+use crate::util::sync::lock_or_recover;
+use crate::workload::RateSchedule;
+use std::io::ErrorKind;
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How the generator paces requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadgenMode {
+    Open,
+    Closed,
+}
+
+impl LoadgenMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadgenMode::Open => "open",
+            LoadgenMode::Closed => "closed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<LoadgenMode, String> {
+        match s {
+            "open" => Ok(LoadgenMode::Open),
+            "closed" => Ok(LoadgenMode::Closed),
+            other => Err(format!("unknown --mode {other:?} (have open, closed)")),
+        }
+    }
+}
+
+/// One driven tenant: the wire handle plus its offered-load shape.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub handle: u64,
+    /// Open-loop offered rate over time (total across connections).
+    pub schedule: RateSchedule,
+    /// Explicit SLO class per request; `None` = the tenant's default.
+    pub class: Option<SloClass>,
+    /// Relative deadline tagged on every request; 0 = none.
+    pub deadline_ms: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Server address, e.g. `127.0.0.1:7431`.
+    pub addr: String,
+    pub connections: usize,
+    pub duration_s: f64,
+    pub mode: LoadgenMode,
+    pub tenants: Vec<TenantSpec>,
+    /// Closed loop: in-flight requests per connection.
+    pub window: usize,
+    pub seed: u64,
+}
+
+/// Aggregated client-side outcome of a run.
+pub struct LoadgenReport {
+    pub mode: LoadgenMode,
+    pub connections: usize,
+    pub sent: u64,
+    pub completed: u64,
+    pub errors: u64,
+    /// Requests whose connection closed before a response frame — the
+    /// "no silent drops" residual (0 on a healthy run).
+    pub unanswered: u64,
+    /// Typed-error counts indexed by [`ErrorCode`] byte.
+    pub errors_by_code: [u64; 16],
+    /// Per tenant (in `tenants` order): (handle, completed, errors).
+    pub per_tenant: Vec<(u64, u64, u64)>,
+    /// Client-observed latency of completed requests.
+    pub latency: LatencyHistogram,
+    pub wall_s: f64,
+    /// Connections refused by accept-time shedding.
+    pub shed_conns: u64,
+}
+
+impl LoadgenReport {
+    /// Completed requests per wall-clock second.
+    pub fn rate(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.completed as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// The greppable summary line (pinned in `metrics`).
+    pub fn line(&self) -> String {
+        fmt_loadgen_line(
+            self.mode.name(),
+            self.connections,
+            self.sent,
+            self.completed,
+            self.errors,
+            self.unanswered,
+            self.rate(),
+            self.latency.mean() * 1e3,
+            self.latency.percentile(99.0) * 1e3,
+        )
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.line());
+        for (handle, completed, errors) in &self.per_tenant {
+            println!("  tenant {handle}: completed={completed} errors={errors}");
+        }
+        for (code, n) in self.errors_by_code.iter().enumerate() {
+            if *n > 0 {
+                let name = ErrorCode::from_u8(code as u8)
+                    .map(ErrorCode::name)
+                    .unwrap_or("unknown");
+                println!("  error {name}: {n}");
+            }
+        }
+        if self.shed_conns > 0 {
+            println!("  shed connections: {}", self.shed_conns);
+        }
+    }
+}
+
+/// Per-connection accumulator, merged at the end.
+struct ConnOutcome {
+    sent: u64,
+    completed: u64,
+    errors: u64,
+    unanswered: u64,
+    errors_by_code: [u64; 16],
+    per_tenant: Vec<(u64, u64)>,
+    latency: LatencyHistogram,
+    shed: bool,
+}
+
+impl ConnOutcome {
+    fn new(tenants: usize) -> ConnOutcome {
+        ConnOutcome {
+            sent: 0,
+            completed: 0,
+            errors: 0,
+            unanswered: 0,
+            errors_by_code: [0; 16],
+            per_tenant: vec![(0, 0); tenants],
+            latency: LatencyHistogram::default(),
+            shed: false,
+        }
+    }
+}
+
+/// An in-flight request: (seq, tenant index, send instant).
+type Outstanding = Vec<(u64, usize, Instant)>;
+
+fn is_poll(err: &WireError) -> bool {
+    matches!(
+        err,
+        WireError::Io(ErrorKind::WouldBlock) | WireError::Io(ErrorKind::TimedOut)
+    )
+}
+
+/// Classify one response frame against the outstanding set. Returns
+/// `false` when the frame is a connection-level GOAWAY (accept-time
+/// shed), which aborts the connection.
+fn settle(
+    header: &FrameHeader,
+    outstanding: &mut Outstanding,
+    out: &mut ConnOutcome,
+) -> bool {
+    let pos = outstanding.iter().position(|(seq, _, _)| *seq == header.seq);
+    let Some(pos) = pos else {
+        // Unknown seq: the listener's accept-time shed frame is
+        // (kind=Error, seq=0, code=Overloaded) before anything was sent.
+        if header.kind == FrameKind::Error && header.seq == 0 {
+            out.shed = true;
+            return false;
+        }
+        return true;
+    };
+    let (_, tenant_idx, sent_at) = outstanding.swap_remove(pos);
+    match header.kind {
+        FrameKind::Response => {
+            out.completed += 1;
+            out.per_tenant[tenant_idx].0 += 1;
+            out.latency.record(sent_at.elapsed().as_secs_f64());
+        }
+        _ => {
+            out.errors += 1;
+            out.per_tenant[tenant_idx].1 += 1;
+            out.errors_by_code[(header.code as usize).min(15)] += 1;
+        }
+    }
+    true
+}
+
+/// Query the server for each tenant's input length (typed handshake).
+fn probe_input_lens(addr: &str, tenants: &[TenantSpec]) -> Result<Vec<usize>, String> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    for (i, t) in tenants.iter().enumerate() {
+        write_frame(&mut stream, &FrameHeader::query(t.handle, i as u64), &[])
+            .map_err(|e| format!("query tenant {}: {e}", t.handle))?;
+    }
+    let mut lens = vec![0usize; tenants.len()];
+    let mut got = 0usize;
+    let mut reader = FrameReader::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while got < tenants.len() {
+        match reader.next_frame(&mut stream) {
+            Ok(Some((h, _))) => {
+                let idx = h.seq as usize;
+                if idx >= tenants.len() {
+                    return Err(format!("probe: unexpected seq {}", h.seq));
+                }
+                match h.kind {
+                    FrameKind::Info => {
+                        lens[idx] = h.arg as usize;
+                        got += 1;
+                    }
+                    FrameKind::Error => {
+                        let code = ErrorCode::from_u8(h.code)
+                            .map(ErrorCode::name)
+                            .unwrap_or("unknown");
+                        return Err(format!(
+                            "tenant {} refused: {code} (is the server attached?)",
+                            h.tenant
+                        ));
+                    }
+                    _ => return Err("probe: unexpected frame kind".into()),
+                }
+            }
+            Ok(None) => return Err("probe: server closed the connection".into()),
+            Err(e) if is_poll(&e) => {
+                if Instant::now() > deadline {
+                    return Err("probe: timed out waiting for Info frames".into());
+                }
+            }
+            Err(e) => return Err(format!("probe: {e}")),
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    Ok(lens)
+}
+
+/// Drive the configured load and return the merged client-side report.
+pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport, String> {
+    if opts.tenants.is_empty() {
+        return Err("loadgen needs at least one tenant".into());
+    }
+    if opts.connections == 0 {
+        return Err("loadgen needs at least one connection".into());
+    }
+    let input_lens = probe_input_lens(&opts.addr, &opts.tenants)?;
+    // Pre-encoded submit payloads, one per tenant (reused across sends).
+    let payloads: Arc<Vec<Vec<u8>>> = Arc::new(
+        input_lens
+            .iter()
+            .map(|n| {
+                let mut bytes = Vec::new();
+                encode_payload(&vec![0.5f32; *n], &mut bytes);
+                bytes
+            })
+            .collect(),
+    );
+
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for conn_id in 0..opts.connections {
+        let opts = opts.clone();
+        let payloads = payloads.clone();
+        workers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(opts.seed).fork(conn_id as u64 + 1);
+            match opts.mode {
+                LoadgenMode::Open => run_open_conn(&opts, &payloads, &mut rng),
+                LoadgenMode::Closed => run_closed_conn(&opts, &payloads, conn_id),
+            }
+        }));
+    }
+
+    let mut report = LoadgenReport {
+        mode: opts.mode,
+        connections: opts.connections,
+        sent: 0,
+        completed: 0,
+        errors: 0,
+        unanswered: 0,
+        errors_by_code: [0; 16],
+        per_tenant: opts.tenants.iter().map(|t| (t.handle, 0, 0)).collect(),
+        latency: LatencyHistogram::default(),
+        wall_s: 0.0,
+        shed_conns: 0,
+    };
+    for w in workers {
+        let out = match w.join() {
+            Ok(Ok(out)) => out,
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err("loadgen connection thread panicked".into()),
+        };
+        report.sent += out.sent;
+        report.completed += out.completed;
+        report.errors += out.errors;
+        report.unanswered += out.unanswered;
+        for (a, b) in report.errors_by_code.iter_mut().zip(&out.errors_by_code) {
+            *a += b;
+        }
+        for (agg, per) in report.per_tenant.iter_mut().zip(&out.per_tenant) {
+            agg.1 += per.0;
+            agg.2 += per.1;
+        }
+        report.latency.merge(&out.latency);
+        report.shed_conns += u64::from(out.shed);
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+fn connect(addr: &str) -> Result<TcpStream, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(20)));
+    Ok(stream)
+}
+
+/// Closed loop: keep `window` requests in flight, tenants round-robin.
+fn run_closed_conn(
+    opts: &LoadgenOptions,
+    payloads: &[Vec<u8>],
+    conn_id: usize,
+) -> Result<ConnOutcome, String> {
+    let mut stream = connect(&opts.addr)?;
+    let mut out = ConnOutcome::new(opts.tenants.len());
+    let mut outstanding: Outstanding = Vec::with_capacity(opts.window);
+    let mut reader = FrameReader::new();
+    let mut seq = 1u64;
+    // Stagger round-robin start so connections don't sync on tenant 0.
+    let mut next_tenant = conn_id % opts.tenants.len();
+    let t_end = Instant::now() + Duration::from_secs_f64(opts.duration_s);
+    let window = opts.window.max(1);
+
+    let send_one = |stream: &mut TcpStream,
+                        outstanding: &mut Outstanding,
+                        out: &mut ConnOutcome,
+                        seq: &mut u64,
+                        next_tenant: &mut usize|
+     -> bool {
+        let i = *next_tenant;
+        *next_tenant = (*next_tenant + 1) % opts.tenants.len();
+        let t = &opts.tenants[i];
+        let h = FrameHeader::submit(
+            t.handle,
+            *seq,
+            t.class,
+            t.deadline_ms,
+            payloads[i].len() as u32,
+        );
+        if write_frame(stream, &h, &payloads[i]).is_err() {
+            return false;
+        }
+        outstanding.push((*seq, i, Instant::now()));
+        out.sent += 1;
+        *seq += 1;
+        true
+    };
+
+    let mut writable = true;
+    for _ in 0..window {
+        if !send_one(&mut stream, &mut outstanding, &mut out, &mut seq, &mut next_tenant) {
+            writable = false;
+            break;
+        }
+    }
+    // Settle responses; refill the window while time remains.
+    let drain_deadline = t_end + Duration::from_secs(30);
+    while !outstanding.is_empty() {
+        match reader.next_frame(&mut stream) {
+            Ok(Some((h, _payload))) => {
+                if !settle(&h, &mut outstanding, &mut out) {
+                    break; // shed by the listener
+                }
+                if writable && Instant::now() < t_end {
+                    writable = send_one(
+                        &mut stream,
+                        &mut outstanding,
+                        &mut out,
+                        &mut seq,
+                        &mut next_tenant,
+                    );
+                }
+            }
+            Ok(None) => break, // server closed
+            Err(e) if is_poll(&e) => {
+                if Instant::now() > drain_deadline {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    out.unanswered += outstanding.len() as u64;
+    let _ = stream.shutdown(Shutdown::Both);
+    Ok(out)
+}
+
+/// Open loop: Poisson arrivals per tenant at `schedule.rate_at(t) /
+/// connections`, a paired receiver thread settling responses.
+fn run_open_conn(
+    opts: &LoadgenOptions,
+    payloads: &[Vec<u8>],
+    rng: &mut Rng,
+) -> Result<ConnOutcome, String> {
+    let stream = connect(&opts.addr)?;
+    let mut write_half = stream
+        .try_clone()
+        .map_err(|e| format!("clone socket: {e}"))?;
+    let outstanding: Arc<Mutex<Outstanding>> = Arc::new(Mutex::new(Vec::new()));
+    let shared_out: Arc<Mutex<ConnOutcome>> =
+        Arc::new(Mutex::new(ConnOutcome::new(opts.tenants.len())));
+
+    // Receiver: settle response frames until EOF (the server closes
+    // once our write half shuts down and its drain completes).
+    let receiver = {
+        let outstanding = outstanding.clone();
+        let shared_out = shared_out.clone();
+        let mut stream = stream;
+        std::thread::spawn(move || {
+            let mut reader = FrameReader::new();
+            let hard_stop = Instant::now() + Duration::from_secs(600);
+            loop {
+                match reader.next_frame(&mut stream) {
+                    Ok(Some((h, _payload))) => {
+                        let mut pend = lock_or_recover(&outstanding);
+                        let mut out = lock_or_recover(&shared_out);
+                        if !settle(&h, &mut pend, &mut out) {
+                            return;
+                        }
+                    }
+                    Ok(None) => return,
+                    Err(e) if is_poll(&e) => {
+                        if Instant::now() > hard_stop {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+        })
+    };
+
+    // Sender: merged per-tenant Poisson streams, rate split across
+    // connections. Time-varying schedules are sampled at the current
+    // instant (piecewise-constant thinning).
+    let share = 1.0 / opts.connections as f64;
+    // A zero-rate window parks the tenant for 50 ms and re-samples —
+    // `Rng::exponential` requires a positive rate.
+    let gap = |rng: &mut Rng, rate: f64| {
+        if rate > 0.0 {
+            rng.exponential(rate)
+        } else {
+            0.05
+        }
+    };
+    let t0 = Instant::now();
+    let mut seq = 1u64;
+    let mut next_at: Vec<f64> = opts
+        .tenants
+        .iter()
+        .map(|t| gap(rng, t.schedule.rate_at(0.0) * share))
+        .collect();
+    loop {
+        let now = t0.elapsed().as_secs_f64();
+        if now >= opts.duration_s {
+            break;
+        }
+        let (idx, at) = next_at
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("at least one tenant");
+        let fire_at = at.min(opts.duration_s);
+        if fire_at > now {
+            std::thread::sleep(Duration::from_secs_f64((fire_at - now).min(0.05)));
+            continue;
+        }
+        let t = &opts.tenants[idx];
+        if t.schedule.rate_at(now) * share <= 0.0 {
+            // Arrival sampled under an earlier rate landed in a
+            // zero-rate window: thin it out.
+            next_at[idx] = now + 0.05;
+            continue;
+        }
+        let h = FrameHeader::submit(
+            t.handle,
+            seq,
+            t.class,
+            t.deadline_ms,
+            payloads[idx].len() as u32,
+        );
+        {
+            // Register before writing so the response can't race us.
+            lock_or_recover(&outstanding).push((seq, idx, Instant::now()));
+        }
+        if write_frame(&mut write_half, &h, &payloads[idx]).is_err() {
+            lock_or_recover(&outstanding).retain(|(s, _, _)| *s != seq);
+            break;
+        }
+        lock_or_recover(&shared_out).sent += 1;
+        seq += 1;
+        next_at[idx] = now + gap(rng, t.schedule.rate_at(now) * share);
+    }
+    // Half-close: the server reads EOF, drains every accepted request,
+    // responds, and closes — then the receiver sees EOF and exits.
+    let _ = write_half.shutdown(Shutdown::Write);
+    let _ = receiver.join();
+
+    let mut out = std::mem::replace(
+        &mut *lock_or_recover(&shared_out),
+        ConnOutcome::new(opts.tenants.len()),
+    );
+    out.unanswered += lock_or_recover(&outstanding).len() as u64;
+    Ok(out)
+}

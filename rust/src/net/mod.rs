@@ -1,0 +1,143 @@
+//! The network serving edge — the layer that makes "serves heavy
+//! traffic" literal (ROADMAP open item 3).
+//!
+//! ```text
+//!   loadgen ──TCP──► NetListener ──submit──► Server / FleetServer
+//!     │                  │ Ticket resolves            │
+//!     ◄──Response/Error──┘                     event log, stats
+//! ```
+//!
+//! - [`proto`]: the length-prefixed binary wire protocol — fixed
+//!   32-byte headers, zero-allocation encode/decode in caller buffers,
+//!   typed [`WireError`](proto::WireError)s on arbitrary bytes.
+//! - [`listener`]: bounded thread-per-connection TCP listener
+//!   (`serve --listen ADDR`) with reusable per-connection buffers,
+//!   accept-time shedding, graceful drain-on-shutdown, and a minimal
+//!   HTTP/1.1 `GET /stats` endpoint.
+//! - [`loadgen`]: open-/closed-loop load generator over real sockets
+//!   (`loadgen` CLI command) measuring client-observed latency.
+//!
+//! The edge fronts either server through [`WireBackend`], and every
+//! socket request flows through the same `submit` path as in-process
+//! traffic — identical admission, identical counters, identical event
+//! log records (`tests/net_parity.rs` pins the equality).
+
+pub mod listener;
+pub mod loadgen;
+pub mod proto;
+
+pub use listener::{NetListener, NetOptions, NetStats};
+pub use loadgen::{LoadgenMode, LoadgenOptions, LoadgenReport, TenantSpec};
+
+use crate::analytic::TenantHandle;
+use crate::coordinator::{Request, Server, Ticket};
+use crate::fleet::FleetServer;
+use crate::metrics::{fmt_device_line, fmt_fleet_faults_line, fmt_overload_line};
+
+/// What the listener needs from a backend: fire-and-resolve submission
+/// (refusals come back as typed errors on the `Ticket`, never as a
+/// failed call), the input-length handshake, and a stats rendering for
+/// `GET /stats`.
+pub trait WireBackend: Send + Sync {
+    fn submit(&self, handle: TenantHandle, request: Request) -> Ticket;
+    /// Input tensor length (f32 count) the model behind `handle`
+    /// expects per request; `None` when not attached.
+    fn input_len(&self, handle: TenantHandle) -> Option<usize>;
+    /// The greppable stats lines, one per row (for `GET /stats`).
+    fn stats_text(&self) -> String;
+}
+
+impl WireBackend for Server {
+    fn submit(&self, handle: TenantHandle, request: Request) -> Ticket {
+        Server::submit(self, handle, request)
+    }
+
+    fn input_len(&self, handle: TenantHandle) -> Option<usize> {
+        self.model_meta(handle)
+            .map(|m| m.input_shape.iter().product())
+    }
+
+    fn stats_text(&self) -> String {
+        let s = self.stats();
+        let mut out = String::new();
+        out.push_str(&fmt_overload_line(
+            s.accepted,
+            s.rejected,
+            s.shed,
+            s.expired,
+            s.cancelled,
+            s.dropped(),
+            s.goodput(),
+            s.failed,
+        ));
+        out.push('\n');
+        for t in &s.per_tenant {
+            if t.latency.count() > 0 {
+                out.push_str(&format!(
+                    "  {} {}: n={} mean {:.1} ms p95 {:.1} ms\n",
+                    t.name,
+                    t.handle,
+                    t.latency.count(),
+                    t.latency.mean() * 1e3,
+                    t.latency.percentile(95.0) * 1e3
+                ));
+            }
+        }
+        for (class, hist) in s.per_class.non_empty() {
+            out.push_str(&format!(
+                "  class {}: n={} mean {:.1} ms p99 {:.1} ms\n",
+                class.name(),
+                hist.count(),
+                hist.mean() * 1e3,
+                hist.percentile(99.0) * 1e3
+            ));
+        }
+        out
+    }
+}
+
+impl WireBackend for FleetServer {
+    fn submit(&self, handle: TenantHandle, request: Request) -> Ticket {
+        FleetServer::submit(self, handle, request)
+    }
+
+    fn input_len(&self, handle: TenantHandle) -> Option<usize> {
+        FleetServer::input_len(self, handle)
+    }
+
+    fn stats_text(&self) -> String {
+        let s = self.stats();
+        let mut out = String::new();
+        out.push_str(&fmt_fleet_faults_line(
+            s.failovers,
+            s.requeued,
+            s.failed_over,
+            s.shed_tenants,
+        ));
+        out.push('\n');
+        for (d, dev) in s.per_device.iter().enumerate() {
+            out.push_str(&fmt_device_line(
+                d,
+                dev.completed,
+                dev.accepted,
+                dev.rejected,
+                dev.shed,
+                dev.expired,
+                dev.failed,
+                dev.reconfigs,
+                dev.migrations,
+            ));
+            out.push('\n');
+        }
+        for (class, hist) in s.per_class().non_empty() {
+            out.push_str(&format!(
+                "  class {}: n={} mean {:.1} ms p99 {:.1} ms\n",
+                class.name(),
+                hist.count(),
+                hist.mean() * 1e3,
+                hist.percentile(99.0) * 1e3
+            ));
+        }
+        out
+    }
+}

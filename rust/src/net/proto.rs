@@ -1,0 +1,742 @@
+//! Length-prefixed binary wire protocol for the serving edge.
+//!
+//! Every frame is a fixed 32-byte little-endian header followed by
+//! `payload_len` bytes of raw `f32` data (Submit/Response only — control
+//! frames carry none):
+//!
+//! ```text
+//!   off  size  field
+//!   0    2     magic        0x53 0x57 ("SW")
+//!   2    1     version      1
+//!   3    1     kind         0 Submit | 1 Response | 2 Error | 3 Query | 4 Info
+//!   4    1     class        SloClass index, 0xFF = tenant default
+//!   5    1     code         ErrorCode (Error frames), 0 otherwise
+//!   6    2     flags        reserved, must be 0
+//!   8    8     tenant       TenantHandle
+//!   16   8     seq          client-chosen id, echoed in the reply
+//!   24   4     arg          Submit: deadline ms (0 = none)
+//!                           Response: server latency µs (saturating)
+//!                           Info: model input length (f32 count)
+//!   28   4     payload_len  bytes of f32 payload (multiple of 4)
+//! ```
+//!
+//! Encode/decode work entirely in caller-provided buffers — no heap
+//! allocation and no panics on arbitrary bytes (`bench_net` pins the
+//! zero-allocation claim with a counting allocator). Malformed input
+//! returns typed [`WireError`]s; server-side refusals travel as Error
+//! frames whose [`ErrorCode`] mirrors
+//! [`RequestError`](crate::coordinator::RequestError), so a socket
+//! client sees the same typed outcomes an in-process caller does.
+
+use crate::coordinator::RequestError;
+use crate::sched::SloClass;
+use std::io::{Read, Write};
+
+/// First two bytes of every frame.
+pub const MAGIC: [u8; 2] = [0x53, 0x57];
+/// Protocol version (bumped on any layout change).
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 32;
+/// Upper bound on `payload_len` — larger than any manifest input tensor,
+/// small enough that a hostile length can't balloon the read buffer.
+pub const MAX_PAYLOAD_BYTES: u32 = 4 << 20;
+
+/// Frame discriminator (byte 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Client → server: one inference request.
+    Submit = 0,
+    /// Server → client: the completed output tensor.
+    Response = 1,
+    /// Server → client: a typed refusal (see [`ErrorCode`]).
+    Error = 2,
+    /// Client → server: describe a tenant (input length handshake).
+    Query = 3,
+    /// Server → client: Query reply; `arg` carries the input length.
+    Info = 4,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<FrameKind> {
+        match b {
+            0 => Some(FrameKind::Submit),
+            1 => Some(FrameKind::Response),
+            2 => Some(FrameKind::Error),
+            3 => Some(FrameKind::Query),
+            4 => Some(FrameKind::Info),
+            _ => None,
+        }
+    }
+}
+
+/// Typed refusal codes carried by Error frames — the wire image of
+/// [`RequestError`], plus [`Malformed`](ErrorCode::Malformed) for frames
+/// the edge itself refused to parse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// The frame itself failed to parse (bad magic/kind/length…).
+    Malformed = 1,
+    NotAttached = 2,
+    Detached = 3,
+    Cancelled = 4,
+    /// Deadline expired before service (`RequestError::DeadlineExceeded`).
+    Expired = 5,
+    Overloaded = 6,
+    Shed = 7,
+    Execution = 8,
+    Retryable = 9,
+    Shutdown = 10,
+    ChannelClosed = 11,
+}
+
+impl ErrorCode {
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        match b {
+            1 => Some(ErrorCode::Malformed),
+            2 => Some(ErrorCode::NotAttached),
+            3 => Some(ErrorCode::Detached),
+            4 => Some(ErrorCode::Cancelled),
+            5 => Some(ErrorCode::Expired),
+            6 => Some(ErrorCode::Overloaded),
+            7 => Some(ErrorCode::Shed),
+            8 => Some(ErrorCode::Execution),
+            9 => Some(ErrorCode::Retryable),
+            10 => Some(ErrorCode::Shutdown),
+            11 => Some(ErrorCode::ChannelClosed),
+            _ => None,
+        }
+    }
+
+    /// The wire code for a server-side refusal.
+    pub fn of(err: &RequestError) -> ErrorCode {
+        match err {
+            RequestError::NotAttached(_) => ErrorCode::NotAttached,
+            RequestError::Detached(_) => ErrorCode::Detached,
+            RequestError::Cancelled => ErrorCode::Cancelled,
+            RequestError::DeadlineExceeded { .. } => ErrorCode::Expired,
+            RequestError::Overloaded(_) => ErrorCode::Overloaded,
+            RequestError::Shed { .. } => ErrorCode::Shed,
+            RequestError::Execution(_) => ErrorCode::Execution,
+            RequestError::Retryable { .. } => ErrorCode::Retryable,
+            RequestError::Shutdown => ErrorCode::Shutdown,
+            RequestError::ChannelClosed => ErrorCode::ChannelClosed,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::NotAttached => "not-attached",
+            ErrorCode::Detached => "detached",
+            ErrorCode::Cancelled => "cancelled",
+            ErrorCode::Expired => "expired",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Shed => "shed",
+            ErrorCode::Execution => "execution",
+            ErrorCode::Retryable => "retryable",
+            ErrorCode::Shutdown => "shutdown",
+            ErrorCode::ChannelClosed => "channel-closed",
+        }
+    }
+}
+
+/// Everything that can go wrong parsing bytes off the wire. Every
+/// variant is `Copy` — carrying scalars only keeps the error path as
+/// allocation-free as the happy path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    BadMagic([u8; 2]),
+    BadVersion(u8),
+    UnknownKind(u8),
+    UnknownClass(u8),
+    /// Reserved flag bits were set.
+    BadFlags(u16),
+    /// `payload_len` exceeds [`MAX_PAYLOAD_BYTES`].
+    Oversized { len: u32, max: u32 },
+    /// `payload_len` is not a multiple of 4 (raw f32 data).
+    Misaligned(u32),
+    /// A control frame (Error/Query/Info) declared a payload.
+    StrayPayload { kind: u8, len: u32 },
+    /// The peer closed mid-frame.
+    Truncated { have: usize, need: usize },
+    /// The transport failed (includes read timeouts, which the listener
+    /// uses as its stop-flag poll).
+    Io(std::io::ErrorKind),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad magic {m:02x?}"),
+            WireError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::UnknownClass(c) => write!(f, "unknown class byte {c}"),
+            WireError::BadFlags(x) => write!(f, "reserved flags set: {x:#06x}"),
+            WireError::Oversized { len, max } => {
+                write!(f, "payload {len} bytes exceeds max {max}")
+            }
+            WireError::Misaligned(len) => {
+                write!(f, "payload {len} bytes is not a whole number of f32s")
+            }
+            WireError::StrayPayload { kind, len } => {
+                write!(f, "control frame kind {kind} carries {len} payload bytes")
+            }
+            WireError::Truncated { have, need } => {
+                write!(f, "peer closed mid-frame ({have} of {need} bytes)")
+            }
+            WireError::Io(kind) => write!(f, "transport: {kind:?}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e.kind())
+    }
+}
+
+/// Decoded frame header. `Copy`, so readers can hand it around without
+/// touching the heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    /// Submit only: explicit SLO class, `None` = the tenant's default.
+    pub class: Option<SloClass>,
+    /// Error frames: the refusal code (as u8 so unknown future codes
+    /// round-trip); 0 everywhere else.
+    pub code: u8,
+    pub tenant: u64,
+    pub seq: u64,
+    /// Per-kind argument — see the module docs.
+    pub arg: u32,
+    pub payload_len: u32,
+}
+
+impl FrameHeader {
+    pub fn submit(
+        tenant: u64,
+        seq: u64,
+        class: Option<SloClass>,
+        deadline_ms: u32,
+        payload_len: u32,
+    ) -> FrameHeader {
+        FrameHeader {
+            kind: FrameKind::Submit,
+            class,
+            code: 0,
+            tenant,
+            seq,
+            arg: deadline_ms,
+            payload_len,
+        }
+    }
+
+    pub fn response(tenant: u64, seq: u64, latency_us: u32, payload_len: u32) -> FrameHeader {
+        FrameHeader {
+            kind: FrameKind::Response,
+            class: None,
+            code: 0,
+            tenant,
+            seq,
+            arg: latency_us,
+            payload_len,
+        }
+    }
+
+    pub fn error(tenant: u64, seq: u64, code: ErrorCode) -> FrameHeader {
+        FrameHeader {
+            kind: FrameKind::Error,
+            class: None,
+            code: code as u8,
+            tenant,
+            seq,
+            arg: 0,
+            payload_len: 0,
+        }
+    }
+
+    pub fn query(tenant: u64, seq: u64) -> FrameHeader {
+        FrameHeader {
+            kind: FrameKind::Query,
+            class: None,
+            code: 0,
+            tenant,
+            seq,
+            arg: 0,
+            payload_len: 0,
+        }
+    }
+
+    pub fn info(tenant: u64, seq: u64, input_len: u32) -> FrameHeader {
+        FrameHeader {
+            kind: FrameKind::Info,
+            class: None,
+            code: 0,
+            tenant,
+            seq,
+            arg: input_len,
+            payload_len: 0,
+        }
+    }
+
+    /// Serialize into a caller-provided buffer (no allocation).
+    pub fn encode(&self, buf: &mut [u8; HEADER_BYTES]) {
+        buf[0] = MAGIC[0];
+        buf[1] = MAGIC[1];
+        buf[2] = VERSION;
+        buf[3] = self.kind as u8;
+        buf[4] = self.class.map(|c| c.index() as u8).unwrap_or(0xFF);
+        buf[5] = self.code;
+        buf[6] = 0;
+        buf[7] = 0;
+        buf[8..16].copy_from_slice(&self.tenant.to_le_bytes());
+        buf[16..24].copy_from_slice(&self.seq.to_le_bytes());
+        buf[24..28].copy_from_slice(&self.arg.to_le_bytes());
+        buf[28..32].copy_from_slice(&self.payload_len.to_le_bytes());
+    }
+
+    /// Parse and validate a header from a caller-provided buffer. Never
+    /// panics on arbitrary bytes; every refusal is a typed [`WireError`].
+    pub fn decode(buf: &[u8; HEADER_BYTES]) -> Result<FrameHeader, WireError> {
+        if buf[0] != MAGIC[0] || buf[1] != MAGIC[1] {
+            return Err(WireError::BadMagic([buf[0], buf[1]]));
+        }
+        if buf[2] != VERSION {
+            return Err(WireError::BadVersion(buf[2]));
+        }
+        let kind = FrameKind::from_u8(buf[3]).ok_or(WireError::UnknownKind(buf[3]))?;
+        let class = match buf[4] {
+            0xFF => None,
+            b => Some(SloClass::from_index(b as usize).ok_or(WireError::UnknownClass(b))?),
+        };
+        let flags = u16::from_le_bytes([buf[6], buf[7]]);
+        if flags != 0 {
+            return Err(WireError::BadFlags(flags));
+        }
+        let tenant = u64::from_le_bytes(buf[8..16].try_into().expect("8 bytes"));
+        let seq = u64::from_le_bytes(buf[16..24].try_into().expect("8 bytes"));
+        let arg = u32::from_le_bytes(buf[24..28].try_into().expect("4 bytes"));
+        let payload_len = u32::from_le_bytes(buf[28..32].try_into().expect("4 bytes"));
+        if payload_len > MAX_PAYLOAD_BYTES {
+            return Err(WireError::Oversized {
+                len: payload_len,
+                max: MAX_PAYLOAD_BYTES,
+            });
+        }
+        match kind {
+            FrameKind::Submit | FrameKind::Response => {
+                if payload_len % 4 != 0 {
+                    return Err(WireError::Misaligned(payload_len));
+                }
+            }
+            _ => {
+                if payload_len != 0 {
+                    return Err(WireError::StrayPayload {
+                        kind: kind as u8,
+                        len: payload_len,
+                    });
+                }
+            }
+        }
+        Ok(FrameHeader {
+            kind,
+            class,
+            code: buf[5],
+            tenant,
+            seq,
+            arg,
+            payload_len,
+        })
+    }
+}
+
+/// Serialize an f32 tensor into a reusable byte buffer (clear + extend:
+/// after the first frame at a given size, no allocation).
+pub fn encode_payload(values: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(values.len() * 4);
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Deserialize raw payload bytes into a reusable f32 buffer.
+pub fn decode_payload(bytes: &[u8], out: &mut Vec<f32>) -> Result<(), WireError> {
+    if bytes.len() % 4 != 0 {
+        return Err(WireError::Misaligned(bytes.len() as u32));
+    }
+    out.clear();
+    out.reserve(bytes.len() / 4);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes(chunk.try_into().expect("4 bytes")));
+    }
+    Ok(())
+}
+
+/// Write one frame: header from a stack buffer, payload straight from
+/// the caller's slice. `header.payload_len` must equal `payload.len()`.
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    header: &FrameHeader,
+    payload: &[u8],
+) -> Result<(), WireError> {
+    debug_assert_eq!(header.payload_len as usize, payload.len());
+    let mut buf = [0u8; HEADER_BYTES];
+    header.encode(&mut buf);
+    w.write_all(&buf)?;
+    if !payload.is_empty() {
+        w.write_all(payload)?;
+    }
+    Ok(())
+}
+
+/// Incremental frame parser over a reusable buffer: handles partial
+/// reads (a frame arriving in arbitrarily small pieces) and coalesced
+/// reads (many frames in one `read`) without copying payloads or — once
+/// the buffer has grown to the connection's largest frame — allocating.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Parse cursor: `buf[start..end]` is unconsumed wire data.
+    start: usize,
+    end: usize,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        FrameReader::new()
+    }
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader {
+            buf: vec![0u8; 16 * 1024],
+            start: 0,
+            end: 0,
+        }
+    }
+
+    /// Unconsumed bytes (peeking, e.g. the listener's HTTP sniff).
+    pub fn buffered(&self) -> &[u8] {
+        &self.buf[self.start..self.end]
+    }
+
+    /// Decode the header at the cursor (requires `HEADER_BYTES` buffered).
+    fn peek_header(&self) -> Result<FrameHeader, WireError> {
+        let hdr: &[u8; HEADER_BYTES] = self.buf[self.start..self.start + HEADER_BYTES]
+            .try_into()
+            .expect("sized slice");
+        FrameHeader::decode(hdr)
+    }
+
+    /// Compact consumed bytes to the front and read once into the tail.
+    /// Returns the number of bytes read (0 = EOF).
+    fn fill<R: Read>(&mut self, r: &mut R) -> Result<usize, WireError> {
+        if self.start > 0 {
+            self.buf.copy_within(self.start..self.end, 0);
+            self.end -= self.start;
+            self.start = 0;
+        }
+        if self.end == self.buf.len() {
+            // Warmup-only growth: doubles until the largest frame fits.
+            self.buf.resize(self.buf.len() * 2, 0);
+        }
+        loop {
+            match r.read(&mut self.buf[self.end..]) {
+                Ok(n) => {
+                    self.end += n;
+                    return Ok(n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(WireError::Io(e.kind())),
+            }
+        }
+    }
+
+    /// Buffer at least `n` bytes (or until EOF). Returns the buffered
+    /// length; timeouts surface as `WireError::Io` with the cursor
+    /// intact, so callers can poll a stop flag and retry.
+    pub fn fill_at_least<R: Read>(&mut self, r: &mut R, n: usize) -> Result<usize, WireError> {
+        while self.end - self.start < n {
+            if self.fill(r)? == 0 {
+                break;
+            }
+        }
+        Ok(self.end - self.start)
+    }
+
+    /// Pull the next complete frame, reading as needed. `Ok(None)` is a
+    /// clean EOF at a frame boundary; EOF mid-frame is
+    /// [`WireError::Truncated`]. The returned payload borrows this
+    /// reader's buffer — consume it before the next call.
+    pub fn next_frame<R: Read>(
+        &mut self,
+        r: &mut R,
+    ) -> Result<Option<(FrameHeader, &[u8])>, WireError> {
+        let need = loop {
+            if self.end - self.start >= HEADER_BYTES {
+                let h = self.peek_header()?;
+                let need = HEADER_BYTES + h.payload_len as usize;
+                if self.end - self.start >= need {
+                    break need;
+                }
+                if self.buf.len() < need {
+                    self.buf.resize(need.next_power_of_two(), 0);
+                }
+            }
+            if self.fill(r)? == 0 {
+                let have = self.end - self.start;
+                if have == 0 {
+                    return Ok(None);
+                }
+                let need = if have >= HEADER_BYTES {
+                    HEADER_BYTES + self.peek_header()?.payload_len as usize
+                } else {
+                    HEADER_BYTES
+                };
+                return Err(WireError::Truncated { have, need });
+            }
+        };
+        let header = self.peek_header()?;
+        let frame_start = self.start;
+        self.start += need;
+        Ok(Some((
+            header,
+            &self.buf[frame_start + HEADER_BYTES..frame_start + need],
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn round_trip(h: FrameHeader) -> FrameHeader {
+        let mut buf = [0u8; HEADER_BYTES];
+        h.encode(&mut buf);
+        FrameHeader::decode(&buf).expect("round trip")
+    }
+
+    #[test]
+    fn header_round_trips_every_kind() {
+        let cases = [
+            FrameHeader::submit(7, 99, Some(SloClass::Interactive), 250, 2048),
+            FrameHeader::submit(0, 0, None, 0, 0),
+            FrameHeader::response(7, 99, 1234, 2048),
+            FrameHeader::error(7, 99, ErrorCode::Overloaded),
+            FrameHeader::query(3, 1),
+            FrameHeader::info(3, 1, 512),
+        ];
+        for h in cases {
+            assert_eq!(round_trip(h), h);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_headers_typed() {
+        let good = FrameHeader::submit(1, 2, None, 0, 8);
+        let mut buf = [0u8; HEADER_BYTES];
+
+        good.encode(&mut buf);
+        buf[0] = 0xAA;
+        assert!(matches!(
+            FrameHeader::decode(&buf),
+            Err(WireError::BadMagic(_))
+        ));
+
+        good.encode(&mut buf);
+        buf[2] = 9;
+        assert_eq!(FrameHeader::decode(&buf), Err(WireError::BadVersion(9)));
+
+        good.encode(&mut buf);
+        buf[3] = 200;
+        assert_eq!(FrameHeader::decode(&buf), Err(WireError::UnknownKind(200)));
+
+        good.encode(&mut buf);
+        buf[4] = 3;
+        assert_eq!(FrameHeader::decode(&buf), Err(WireError::UnknownClass(3)));
+
+        good.encode(&mut buf);
+        buf[6] = 1;
+        assert_eq!(FrameHeader::decode(&buf), Err(WireError::BadFlags(1)));
+
+        good.encode(&mut buf);
+        buf[28..32].copy_from_slice(&(MAX_PAYLOAD_BYTES + 1).to_le_bytes());
+        assert!(matches!(
+            FrameHeader::decode(&buf),
+            Err(WireError::Oversized { .. })
+        ));
+
+        good.encode(&mut buf);
+        buf[28..32].copy_from_slice(&3u32.to_le_bytes());
+        assert_eq!(FrameHeader::decode(&buf), Err(WireError::Misaligned(3)));
+
+        FrameHeader::query(1, 2).encode(&mut buf);
+        buf[28..32].copy_from_slice(&4u32.to_le_bytes());
+        assert!(matches!(
+            FrameHeader::decode(&buf),
+            Err(WireError::StrayPayload { .. })
+        ));
+    }
+
+    #[test]
+    fn decode_never_panics_on_arbitrary_bytes() {
+        // Exhaustive over each byte position at a handful of values, plus
+        // a seeded random sweep — decode must always return, never panic.
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..10_000 {
+            let mut buf = [0u8; HEADER_BYTES];
+            for b in buf.iter_mut() {
+                *b = rng.below(256) as u8;
+            }
+            let _ = FrameHeader::decode(&buf);
+        }
+    }
+
+    #[test]
+    fn payload_round_trips() {
+        let values: Vec<f32> = (0..513).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let mut bytes = Vec::new();
+        encode_payload(&values, &mut bytes);
+        assert_eq!(bytes.len(), values.len() * 4);
+        let mut back = Vec::new();
+        decode_payload(&bytes, &mut back).expect("aligned");
+        assert_eq!(back, values);
+        assert_eq!(
+            decode_payload(&bytes[..7], &mut back),
+            Err(WireError::Misaligned(7))
+        );
+    }
+
+    #[test]
+    fn frame_reader_handles_partial_and_coalesced_reads() {
+        // Three frames in one stream; feed through a reader that returns
+        // 3 bytes per read (partial), then all-at-once (coalesced).
+        let payloads: [Vec<f32>; 3] = [
+            (0..4).map(|i| i as f32).collect(),
+            vec![],
+            (0..100).map(|i| -(i as f32)).collect(),
+        ];
+        let mut stream = Vec::new();
+        for (i, p) in payloads.iter().enumerate() {
+            let mut bytes = Vec::new();
+            encode_payload(p, &mut bytes);
+            let h = FrameHeader::submit(i as u64, 10 + i as u64, None, 0, bytes.len() as u32);
+            write_frame(&mut stream, &h, &bytes).unwrap();
+        }
+
+        struct Trickle<'a>(&'a [u8], usize);
+        impl Read for Trickle<'_> {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                let n = 3.min(self.0.len() - self.1).min(out.len());
+                out[..n].copy_from_slice(&self.0[self.1..self.1 + n]);
+                self.1 += n;
+                Ok(n)
+            }
+        }
+
+        for trickle in [false, true] {
+            let mut reader = FrameReader::new();
+            let mut got = Vec::new();
+            let mut scratch = Vec::new();
+            if trickle {
+                let mut r = Trickle(&stream, 0);
+                while let Some((h, pay)) = reader.next_frame(&mut r).unwrap() {
+                    decode_payload(pay, &mut scratch).unwrap();
+                    got.push((h.tenant, h.seq, scratch.clone()));
+                }
+            } else {
+                let mut r = Cursor::new(&stream);
+                while let Some((h, pay)) = reader.next_frame(&mut r).unwrap() {
+                    decode_payload(pay, &mut scratch).unwrap();
+                    got.push((h.tenant, h.seq, scratch.clone()));
+                }
+            }
+            assert_eq!(got.len(), 3);
+            for (i, (tenant, seq, pay)) in got.iter().enumerate() {
+                assert_eq!(*tenant, i as u64);
+                assert_eq!(*seq, 10 + i as u64);
+                assert_eq!(pay, &payloads[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn frame_reader_reports_truncation() {
+        let mut stream = Vec::new();
+        let mut bytes = Vec::new();
+        encode_payload(&[1.0, 2.0, 3.0], &mut bytes);
+        let h = FrameHeader::submit(0, 1, None, 0, bytes.len() as u32);
+        write_frame(&mut stream, &h, &bytes).unwrap();
+
+        // Cut mid-payload and mid-header.
+        for cut in [HEADER_BYTES + 5, 10] {
+            let mut reader = FrameReader::new();
+            let mut r = Cursor::new(&stream[..cut]);
+            assert!(matches!(
+                reader.next_frame(&mut r),
+                Err(WireError::Truncated { .. })
+            ));
+        }
+        // A clean close at a frame boundary is Ok(None).
+        let mut reader = FrameReader::new();
+        let mut r = Cursor::new(&stream);
+        assert!(reader.next_frame(&mut r).unwrap().is_some());
+        assert!(reader.next_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_reader_rejects_garbage_typed() {
+        let mut reader = FrameReader::new();
+        let garbage = vec![0xABu8; 200];
+        let mut r = Cursor::new(&garbage);
+        assert!(matches!(
+            reader.next_frame(&mut r),
+            Err(WireError::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn error_codes_cover_every_request_error() {
+        use crate::analytic::TenantHandle;
+        use crate::sched::Overloaded;
+        let errs = [
+            RequestError::NotAttached(TenantHandle(1)),
+            RequestError::Detached(TenantHandle(1)),
+            RequestError::Cancelled,
+            RequestError::DeadlineExceeded {
+                deadline_s: 1.0,
+                now_s: 2.0,
+            },
+            RequestError::Overloaded(Overloaded {
+                station: "tpu".into(),
+                queue_depth: 3,
+                capacity: 2,
+                estimated_wait_s: 0.1,
+            }),
+            RequestError::Shed {
+                station: "tpu".into(),
+            },
+            RequestError::Execution("x".into()),
+            RequestError::Retryable {
+                reason: "y".into(),
+                attempts: 2,
+            },
+            RequestError::Shutdown,
+            RequestError::ChannelClosed,
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &errs {
+            let code = ErrorCode::of(e);
+            assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
+            seen.insert(code as u8);
+        }
+        assert_eq!(seen.len(), errs.len(), "codes must be distinct");
+    }
+}

@@ -1,0 +1,72 @@
+//! Counting allocator for zero-allocation proofs.
+//!
+//! A thin wrapper over the system allocator that counts allocations —
+//! globally and per thread — so tests and benches can *prove* a hot
+//! path performs no heap allocation after warmup instead of asserting
+//! it in a comment. The library never installs it; a bench or test
+//! binary opts in at its own crate root:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: swapless::util::count_alloc::CountingAlloc = CountingAlloc;
+//!
+//! let before = thread_allocs();
+//! hot_loop();
+//! assert_eq!(thread_allocs() - before, 0);
+//! ```
+//!
+//! The per-thread counter is the one to assert on: a server running on
+//! background threads allocates concurrently, and only the measured
+//! thread's count says anything about the measured loop. The counter is
+//! a `const`-initialized `thread_local` `Cell`, so reading or bumping
+//! it never allocates (no lazy init, no destructor registration).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide allocation count (all threads).
+static GLOBAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocations observed on the calling thread since it started.
+pub fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+/// Allocations observed process-wide since start.
+pub fn global_allocs() -> u64 {
+    GLOBAL_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// `#[global_allocator]`-installable wrapper over [`System`] that
+/// counts every `alloc`/`realloc` (frees are not counted: a loop that
+/// only ever frees warmup buffers is still allocation-free).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        GLOBAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        GLOBAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        GLOBAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        THREAD_ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod count_alloc;
 pub mod json;
 pub mod rng;
 pub mod sync;

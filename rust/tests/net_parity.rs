@@ -1,0 +1,563 @@
+//! Socket-path parity: a request submitted over the wire protocol must
+//! land in exactly the same admission/accounting machinery as one
+//! submitted in-process. Two identically-configured servers driven with
+//! the same deterministic request sequence — one through
+//! `Server::submit`, one through a `NetListener` TCP connection — must
+//! end with identical per-tenant accepted/completed counts and
+//! per-class counters, on a single device and through the fleet router.
+//!
+//! Alongside parity: typed-error handling for malformed/truncated/
+//! oversized frames (no panic, no hang, server survives), graceful
+//! drain-on-shutdown under live socket load, and the HTTP stats
+//! endpoint.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use swapless::analytic::TenantHandle;
+use swapless::config::HardwareSpec;
+use swapless::coordinator::{AttachOptions, Request, Server, ServerBuilder};
+use swapless::eventlog::EventLog;
+use swapless::fleet::{Fleet, FleetServer, FleetServerBuilder};
+use swapless::model::Manifest;
+use swapless::net::loadgen::{self, LoadgenMode, LoadgenOptions, TenantSpec};
+use swapless::net::proto::{
+    encode_payload, write_frame, ErrorCode, FrameHeader, FrameKind, FrameReader, HEADER_BYTES,
+    MAGIC, VERSION, WireError,
+};
+use swapless::net::{NetListener, NetOptions, WireBackend};
+use swapless::runtime::service::ExecBackend;
+use swapless::sched::{OverloadPolicy, SloClass};
+use swapless::tpu::CostModel;
+use swapless::util::rng::Rng;
+use swapless::workload::RateSchedule;
+
+/// Models with comfortably multi-ms service estimates: a 1 ms relative
+/// deadline is below either hint, so `DeadlineDrop` rejects it at entry
+/// deterministically (no timing involved).
+const MODELS: [&str; 2] = ["mobilenetv2", "inceptionv4"];
+const STEPS: usize = 60;
+
+/// One deterministic request: tenant round-robin, class cycling through
+/// {default, Interactive, Batch}, every 5th carrying the 1 ms deadline
+/// that must expire at admission.
+struct Step {
+    tenant: usize,
+    class: Option<SloClass>,
+    deadline_ms: u32,
+}
+
+fn steps() -> Vec<Step> {
+    (0..STEPS)
+        .map(|i| Step {
+            tenant: i % MODELS.len(),
+            class: match i % 3 {
+                0 => None,
+                1 => Some(SloClass::Interactive),
+                _ => Some(SloClass::Batch),
+            },
+            deadline_ms: if i % 5 == 4 { 1 } else { 0 },
+        })
+        .collect()
+}
+
+fn expired_steps() -> u64 {
+    steps().iter().filter(|s| s.deadline_ms > 0).count() as u64
+}
+
+fn build_server(log: Option<EventLog>) -> Arc<Server> {
+    let manifest = Manifest::synthetic();
+    let mut b = ServerBuilder::new(&manifest, CostModel::new(HardwareSpec::default()))
+        .backend(ExecBackend::Emulated)
+        .adaptive(false)
+        .overload(OverloadPolicy::DeadlineDrop);
+    if let Some(l) = log {
+        b = b.log(l);
+    }
+    Arc::new(b.build().expect("build server"))
+}
+
+fn attach_all(server: &Server) -> Vec<(TenantHandle, usize)> {
+    let manifest = Manifest::synthetic();
+    MODELS
+        .iter()
+        .map(|name| {
+            let h = server
+                .attach(
+                    name,
+                    AttachOptions {
+                        rate_hint: 4.0,
+                        class: SloClass::Standard,
+                    },
+                )
+                .expect("attach");
+            let n: usize = manifest.get(name).unwrap().input_shape.iter().product();
+            (h, n)
+        })
+        .collect()
+}
+
+/// Read the next frame, polling through read timeouts, with a hard
+/// bound so a protocol bug fails the test instead of hanging it.
+fn read_frame(reader: &mut FrameReader, stream: &mut TcpStream) -> Option<(FrameHeader, Vec<u8>)> {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match reader.next_frame(stream) {
+            Ok(Some((h, payload))) => return Some((h, payload.to_vec())),
+            Ok(None) => return None,
+            Err(WireError::Io(_)) => {
+                assert!(Instant::now() < deadline, "timed out waiting for a frame");
+            }
+            Err(e) => panic!("client-side parse error: {e}"),
+        }
+    }
+}
+
+/// Drive the deterministic sequence over an established wire connection
+/// (closed loop: next request only after this one's frame came back).
+fn drive_wire(addr: &str, tenants: &[(TenantHandle, usize)]) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(20)))
+        .unwrap();
+    let mut reader = FrameReader::new();
+    let mut payload = Vec::new();
+
+    // Typed handshake: every handle answers Query with its input length.
+    for (i, (h, n_in)) in tenants.iter().enumerate() {
+        write_frame(&mut stream, &FrameHeader::query(h.0, i as u64), &[]).unwrap();
+        let (info, _) = read_frame(&mut reader, &mut stream).expect("info frame");
+        assert_eq!(info.kind, FrameKind::Info);
+        assert_eq!(info.seq, i as u64);
+        assert_eq!(info.arg as usize, *n_in);
+    }
+    // An unknown handle gets a typed NotAttached, not a hang or close.
+    write_frame(&mut stream, &FrameHeader::query(9999, 77), &[]).unwrap();
+    let (refused, _) = read_frame(&mut reader, &mut stream).expect("error frame");
+    assert_eq!(refused.kind, FrameKind::Error);
+    assert_eq!(refused.code, ErrorCode::NotAttached as u8);
+
+    for (i, s) in steps().iter().enumerate() {
+        let (h, n_in) = tenants[s.tenant];
+        encode_payload(&vec![0.5f32; n_in], &mut payload);
+        let header =
+            FrameHeader::submit(h.0, i as u64, s.class, s.deadline_ms, payload.len() as u32);
+        write_frame(&mut stream, &header, &payload).unwrap();
+        let (resp, body) = read_frame(&mut reader, &mut stream).expect("response frame");
+        assert_eq!(resp.seq, i as u64, "responses come back in closed loop");
+        assert_eq!(resp.tenant, h.0);
+        if s.deadline_ms > 0 {
+            assert_eq!(resp.kind, FrameKind::Error, "1 ms deadline must expire");
+            assert_eq!(resp.code, ErrorCode::Expired as u8);
+        } else {
+            assert_eq!(resp.kind, FrameKind::Response);
+            assert!(!body.is_empty(), "completion carries the output tensor");
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Drive the identical sequence through `submit` directly.
+fn drive_direct<F>(tenants: &[(TenantHandle, usize)], submit: F)
+where
+    F: Fn(TenantHandle, Request) -> swapless::coordinator::Ticket,
+{
+    for s in steps() {
+        let (h, n_in) = tenants[s.tenant];
+        let mut req = Request::new(vec![0.5f32; n_in]);
+        if let Some(c) = s.class {
+            req = req.with_class(c);
+        }
+        if s.deadline_ms > 0 {
+            req = req.with_deadline(Duration::from_millis(u64::from(s.deadline_ms)));
+        }
+        let outcome = submit(h, req).wait();
+        if s.deadline_ms > 0 {
+            assert!(outcome.is_err(), "1 ms deadline must expire at admission");
+        } else {
+            outcome.expect("deadline-free request completes");
+        }
+    }
+}
+
+/// The parity claim: identical counts, not just similar ones.
+fn assert_stats_parity(
+    direct: &swapless::coordinator::ServeStats,
+    wire: &swapless::coordinator::ServeStats,
+    label: &str,
+) {
+    assert_eq!(direct.accepted, wire.accepted, "{label}: accepted");
+    assert_eq!(direct.completed, wire.completed, "{label}: completed");
+    assert_eq!(direct.rejected, wire.rejected, "{label}: rejected");
+    assert_eq!(direct.shed, wire.shed, "{label}: shed");
+    assert_eq!(direct.expired, wire.expired, "{label}: expired");
+    assert_eq!(direct.cancelled, wire.cancelled, "{label}: cancelled");
+    assert_eq!(direct.failed, wire.failed, "{label}: failed");
+    assert_eq!(
+        direct.per_tenant.len(),
+        wire.per_tenant.len(),
+        "{label}: tenant rows"
+    );
+    for (d, w) in direct.per_tenant.iter().zip(&wire.per_tenant) {
+        assert_eq!(d.name, w.name, "{label}: tenant order");
+        assert_eq!(d.handle, w.handle, "{label}: {} handle", d.name);
+        assert_eq!(d.accepted, w.accepted, "{label}: {} accepted", d.name);
+        assert_eq!(
+            d.latency.count(),
+            w.latency.count(),
+            "{label}: {} completed",
+            d.name
+        );
+    }
+    for c in SloClass::ALL {
+        assert_eq!(
+            direct.per_class.get(c).count(),
+            wire.per_class.get(c).count(),
+            "{label}: class {c} completions"
+        );
+        assert_eq!(
+            direct.per_class.accepted(c),
+            wire.per_class.accepted(c),
+            "{label}: class {c} accepted"
+        );
+        assert_eq!(
+            direct.per_class.dropped(c),
+            wire.per_class.dropped(c),
+            "{label}: class {c} dropped"
+        );
+        assert_eq!(
+            direct.per_class.goodput(c),
+            wire.per_class.goodput(c),
+            "{label}: class {c} goodput"
+        );
+    }
+}
+
+#[test]
+fn single_device_socket_matches_direct_submission() {
+    // Direct path.
+    let direct = build_server(None);
+    let direct_tenants = attach_all(&direct);
+    drive_direct(&direct_tenants, |h, req| direct.submit(h, req));
+
+    // Wire path — same server build, plus the event log satellite: wire
+    // admits/rejects/completes flow into the append-only log because
+    // they share the submit path.
+    let log_path = std::env::temp_dir().join(format!("net_parity_{}.evlog", std::process::id()));
+    let log = EventLog::create(log_path.to_str().unwrap()).expect("event log");
+    let wire = build_server(Some(log.clone()));
+    let wire_tenants = attach_all(&wire);
+    let listener =
+        NetListener::bind(wire.clone(), "127.0.0.1:0", NetOptions::default()).expect("bind");
+    drive_wire(&listener.local_addr().to_string(), &wire_tenants);
+
+    let net = listener.shutdown();
+    assert_eq!(net.accepted_conns, 1);
+    assert_eq!(net.malformed, 0);
+    assert_eq!(net.frames_in, STEPS as u64);
+    // responses_* count Submit tickets only (the NotAttached probe reply
+    // rides the Info path).
+    assert_eq!(net.responses_err, expired_steps());
+    assert_eq!(
+        net.frames_in,
+        net.responses_ok + net.responses_err,
+        "every parsed submit got exactly one response"
+    );
+
+    assert_stats_parity(&direct.stats(), &wire.stats(), "single-device");
+    let expected = expired_steps();
+    assert_eq!(wire.stats().expired, expected);
+    assert_eq!(wire.stats().completed, STEPS as u64 - expected);
+
+    // Closing the server finalizes the log; the wire traffic is in it.
+    drop(wire);
+    assert!(log.appended() > 0, "wire requests reached the event log");
+    assert_eq!(log.dropped(), 0);
+    let _ = std::fs::remove_file(&log_path);
+}
+
+fn build_fleet() -> Arc<FleetServer> {
+    let fleet = Fleet::uniform(2, &HardwareSpec::default());
+    Arc::new(
+        FleetServerBuilder::new(&Manifest::synthetic(), fleet)
+            .backend(ExecBackend::Emulated)
+            .adaptive(false)
+            .overload(OverloadPolicy::DeadlineDrop)
+            .build()
+            .expect("build fleet"),
+    )
+}
+
+/// Pin each tenant to its own device so both fleet instances share a
+/// placement and per-device counters are comparable.
+fn attach_fleet(fs: &FleetServer) -> Vec<(TenantHandle, usize)> {
+    let manifest = Manifest::synthetic();
+    MODELS
+        .iter()
+        .enumerate()
+        .map(|(device, name)| {
+            let h = fs
+                .attach_on(
+                    name,
+                    AttachOptions {
+                        rate_hint: 4.0,
+                        class: SloClass::Standard,
+                    },
+                    device,
+                )
+                .expect("attach_on");
+            assert_eq!(fs.device_of(h), Some(device));
+            let n: usize = manifest.get(name).unwrap().input_shape.iter().product();
+            (h, n)
+        })
+        .collect()
+}
+
+#[test]
+fn fleet_socket_matches_direct_submission() {
+    let direct = build_fleet();
+    let direct_tenants = attach_fleet(&direct);
+    drive_direct(&direct_tenants, |h, req| direct.submit(h, req));
+
+    let wire = build_fleet();
+    let wire_tenants = attach_fleet(&wire);
+    // The wire handshake resolves input lengths through the fleet's own
+    // attachment table.
+    for (h, n_in) in &wire_tenants {
+        assert_eq!(WireBackend::input_len(wire.as_ref(), *h), Some(*n_in));
+    }
+    let listener =
+        NetListener::bind(wire.clone(), "127.0.0.1:0", NetOptions::default()).expect("bind");
+    drive_wire(&listener.local_addr().to_string(), &wire_tenants);
+    let net = listener.shutdown();
+    assert_eq!(net.malformed, 0);
+    assert_eq!(net.frames_in, STEPS as u64);
+
+    let (ds, ws) = (direct.stats(), wire.stats());
+    assert_eq!(ds.per_device.len(), ws.per_device.len());
+    for (d, (dd, wd)) in ds.per_device.iter().zip(&ws.per_device).enumerate() {
+        assert_stats_parity(dd, wd, &format!("fleet device {d}"));
+        // Both devices saw traffic — the placement pinned one tenant on
+        // each, and the router kept it there.
+        assert!(wd.completed > 0, "device {d} idle on the wire path");
+    }
+    assert_eq!(ds.completed(), ws.completed());
+    for c in SloClass::ALL {
+        assert_eq!(
+            ds.per_class().get(c).count(),
+            ws.per_class().get(c).count(),
+            "fleet class {c}"
+        );
+    }
+}
+
+/// Build a raw frame-shaped byte buffer with targeted corruption.
+fn raw_header(mutate: impl Fn(&mut [u8; HEADER_BYTES])) -> Vec<u8> {
+    let mut buf = [0u8; HEADER_BYTES];
+    FrameHeader::submit(0, 1, None, 0, 0).encode(&mut buf);
+    mutate(&mut buf);
+    buf.to_vec()
+}
+
+/// Write `bytes`, half-close, and collect the typed reply: `Some(code)`
+/// when an Error frame came back, `None` on a bare close. Bounded.
+fn poke(addr: &str, bytes: &[u8]) -> Option<u8> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(20)))
+        .unwrap();
+    stream.write_all(bytes).expect("write");
+    let _ = stream.shutdown(Shutdown::Write);
+    let mut reader = FrameReader::new();
+    let frame = read_frame(&mut reader, &mut stream);
+    frame.map(|(h, _)| {
+        assert_eq!(h.kind, FrameKind::Error, "server replies are typed errors");
+        h.code
+    })
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_never_kill_the_server() {
+    let server = build_server(None);
+    let tenants = attach_all(&server);
+    let listener =
+        NetListener::bind(server.clone(), "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = listener.local_addr().to_string();
+
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("bad magic", raw_header(|b| b[0] = 0x00)),
+        ("bad version", raw_header(|b| b[2] = VERSION + 9)),
+        ("unknown kind", raw_header(|b| b[3] = 0x2A)),
+        ("unknown class", raw_header(|b| b[4] = 7)),
+        ("nonzero flags", raw_header(|b| b[6] = 1)),
+        (
+            "oversized payload",
+            raw_header(|b| b[28..32].copy_from_slice(&(64u32 << 20).to_le_bytes())),
+        ),
+        (
+            "misaligned payload",
+            raw_header(|b| b[28..32].copy_from_slice(&6u32.to_le_bytes())),
+        ),
+        (
+            "stray payload on query",
+            raw_header(|b| {
+                b[3] = FrameKind::Query as u8;
+                b[28..32].copy_from_slice(&8u32.to_le_bytes());
+            }),
+        ),
+        (
+            "server-side kind from client",
+            raw_header(|b| b[3] = FrameKind::Response as u8),
+        ),
+        (
+            "truncated mid-payload",
+            {
+                let mut bytes = raw_header(|b| b[28..32].copy_from_slice(&2048u32.to_le_bytes()));
+                bytes.extend_from_slice(&[0u8; 100]); // 100 of 2048 payload bytes
+                bytes
+            },
+        ),
+        ("truncated mid-header", vec![MAGIC[0], MAGIC[1], VERSION]),
+    ];
+    for (label, bytes) in cases {
+        assert_eq!(
+            poke(&addr, &bytes),
+            Some(ErrorCode::Malformed as u8),
+            "case {label:?}"
+        );
+    }
+
+    // Seeded arbitrary bytes: typed error or clean close, never a hang.
+    let mut rng = Rng::new(0xF00D);
+    for _ in 0..16 {
+        let n = 1 + rng.below(128);
+        let blob: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let _ = poke(&addr, &blob); // read_frame bounds the wait; poke types any reply
+    }
+
+    // A frame-shaped lie: well-formed Submit header whose payload is a
+    // length the model rejects — typed Execution error, no panic.
+    let empty_input = raw_header(|_| {});
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(20)))
+        .unwrap();
+    stream.write_all(&empty_input).unwrap();
+    let mut reader = FrameReader::new();
+    let (h, _) = read_frame(&mut reader, &mut stream).expect("typed reply");
+    assert_eq!(h.kind, FrameKind::Error);
+    assert_eq!(h.code, ErrorCode::Execution as u8);
+    drop(stream);
+
+    // The server survived all of it: a well-formed request still works.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(20)))
+        .unwrap();
+    let (th, n_in) = tenants[0];
+    let mut payload = Vec::new();
+    encode_payload(&vec![0.5f32; n_in], &mut payload);
+    write_frame(
+        &mut stream,
+        &FrameHeader::submit(th.0, 1, None, 0, payload.len() as u32),
+        &payload,
+    )
+    .unwrap();
+    let mut reader = FrameReader::new();
+    let (ok, body) = read_frame(&mut reader, &mut stream).expect("response");
+    assert_eq!(ok.kind, FrameKind::Response);
+    assert!(!body.is_empty());
+    drop(stream);
+
+    let net = listener.shutdown();
+    assert!(net.malformed >= 10, "every corrupt case counted");
+    assert_eq!(
+        net.frames_in,
+        net.responses_ok + net.responses_err,
+        "accounting stays exact under hostile input"
+    );
+}
+
+#[test]
+fn shutdown_mid_load_resolves_every_accepted_request() {
+    let server = build_server(None);
+    let tenants = attach_all(&server);
+    let listener =
+        NetListener::bind(server.clone(), "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = listener.local_addr().to_string();
+
+    // Closed-loop load from two connections, nominally for 60 s — the
+    // shutdown below cuts it off after ~0.4 s.
+    let opts = LoadgenOptions {
+        addr,
+        connections: 2,
+        duration_s: 60.0,
+        mode: LoadgenMode::Closed,
+        tenants: tenants
+            .iter()
+            .map(|(h, _)| TenantSpec {
+                handle: h.0,
+                schedule: RateSchedule::constant(1.0),
+                class: None,
+                deadline_ms: 0,
+            })
+            .collect(),
+        window: 4,
+        seed: 7,
+    };
+    let client = std::thread::spawn(move || loadgen::run(&opts).expect("loadgen"));
+    std::thread::sleep(Duration::from_millis(400));
+    let net = listener.shutdown();
+    let report = client.join().expect("client thread");
+
+    // Server side: every frame it parsed was answered — response or
+    // typed error, no silent drops.
+    assert!(net.frames_in > 0, "load reached the server");
+    assert_eq!(net.frames_in, net.responses_ok + net.responses_err);
+    // Client side: full accounting. Requests the listener never parsed
+    // (in flight in the socket when it stopped reading) are the only
+    // unanswered ones — bounded by the in-flight windows.
+    assert_eq!(
+        report.sent,
+        report.completed + report.errors + report.unanswered
+    );
+    assert!(report.completed > 0);
+    assert!(
+        report.unanswered <= 2 * 4,
+        "unanswered {} exceeds the outstanding windows",
+        report.unanswered
+    );
+    assert_eq!(report.completed + report.errors, net.responses_ok + net.responses_err);
+}
+
+#[test]
+fn http_stats_endpoint_serves_the_grep_lines() {
+    use std::io::Read;
+    let server = build_server(None);
+    let _tenants = attach_all(&server);
+    let listener =
+        NetListener::bind(server.clone(), "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let mut stream = TcpStream::connect(listener.local_addr()).unwrap();
+    stream
+        .write_all(b"GET /stats HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut body = String::new();
+    stream.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.1 200 OK"), "{body}");
+    assert!(body.contains("overload: accepted="), "{body}");
+
+    let mut stream = TcpStream::connect(listener.local_addr()).unwrap();
+    stream
+        .write_all(b"GET /nope HTTP/1.1\r\nHost: t\r\n\r\n")
+        .unwrap();
+    let mut body = String::new();
+    stream.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.1 404"), "{body}");
+
+    let net = listener.shutdown();
+    assert_eq!(net.http_requests, 2);
+}

@@ -35,6 +35,7 @@ use crate::model::ModelMeta;
 use crate::sched::{
     DisciplineKind, JobMeta, Offer, OverloadPolicy, RejectReason, SchedQueue, StationLoad,
 };
+use crate::telemetry::{emit_burst, SpanCollector, SpanTrace};
 
 use super::request::{CancelToken, RequestError};
 
@@ -49,6 +50,9 @@ pub struct CpuJob {
     /// Cancellation token of the originating request; checked before
     /// execution starts.
     pub cancel: CancelToken,
+    /// Sampled stage timeline riding the request (None = unsampled);
+    /// the worker flushes it as one `Span*` burst on success.
+    pub trace: Option<SpanTrace>,
     /// Called with the final output on completion (or the typed failure).
     pub done: Box<dyn FnOnce(Result<Vec<f32>, RequestError>) + Send>,
 }
@@ -71,6 +75,9 @@ struct PoolShared {
     log: Option<EventLog>,
     /// Fleet device index stamped on emitted records.
     device: usize,
+    /// Span-duration sink shared with the server (`None` = standalone
+    /// pools, e.g. in unit tests).
+    collector: Option<Arc<SpanCollector>>,
 }
 
 struct PoolEntry {
@@ -91,6 +98,8 @@ pub struct CpuPools {
     log: Option<EventLog>,
     /// Fleet device index stamped on emitted records.
     device: usize,
+    /// Span-duration sink shared with the server's collector.
+    collector: Option<Arc<SpanCollector>>,
     exec: Arc<ExecFn>,
     pools: Mutex<HashMap<TenantHandle, PoolEntry>>,
     /// Worker threads of removed pools, joined on drop.
@@ -104,7 +113,9 @@ impl CpuPools {
     /// bounded by `capacity`/`policy`. `started` is the clock origin that
     /// absolute job deadlines are measured against (the server's);
     /// `log`/`device` mirror the server's event-log attachment (workers
-    /// emit service-start records).
+    /// emit service-start records); `collector` is the server's span
+    /// sink — workers flush each sampled request's stage timeline there
+    /// (and to `log`) at completion.
     #[allow(clippy::too_many_arguments)]
     pub fn new<F>(
         k_max: usize,
@@ -114,6 +125,7 @@ impl CpuPools {
         started: Instant,
         log: Option<EventLog>,
         device: usize,
+        collector: Option<Arc<SpanCollector>>,
         exec: F,
     ) -> CpuPools
     where
@@ -127,6 +139,7 @@ impl CpuPools {
             started,
             log,
             device,
+            collector,
             exec: Arc::new(exec),
             pools: Mutex::new(HashMap::new()),
             retired: Mutex::new(Vec::new()),
@@ -146,6 +159,7 @@ impl CpuPools {
             station: format!("cpu {h}"),
             log: self.log.clone(),
             device: self.device,
+            collector: self.collector.clone(),
         });
         let mut workers = Vec::new();
         for w in 0..self.k_max.max(1) {
@@ -347,16 +361,22 @@ fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
             p,
             input,
             cancel,
+            mut trace,
             done,
         } = job;
         if cancel.is_cancelled() {
             done(Err(RequestError::Cancelled));
         } else {
+            let start = s.started.elapsed().as_secs_f64();
+            if let Some(tr) = &mut trace {
+                // The CPU-queue wait ends here: service is starting.
+                tr.queued += (start - tr.mark).max(0.0);
+                tr.mark = start;
+            }
             if let Some(log) = &s.log {
-                let now = s.started.elapsed().as_secs_f64();
                 log.emit(LogEvent::new(
                     LogKind::Start,
-                    now,
+                    start,
                     s.device,
                     jmeta.tenant.0,
                     jmeta.class,
@@ -364,6 +384,25 @@ fn worker_loop(s: Arc<PoolShared>, exec: Arc<ExecFn>) {
             }
             let result = exec(&meta, p, input)
                 .map_err(|e| RequestError::Execution(e.to_string()));
+            if result.is_ok() {
+                if let Some(tr) = &trace {
+                    // Completion: flush the whole stage timeline in one
+                    // burst (failed requests emit nothing — span
+                    // conservation counts completed timelines only).
+                    let end = s.started.elapsed().as_secs_f64();
+                    emit_burst(
+                        s.log.as_ref(),
+                        s.device,
+                        jmeta.tenant.0,
+                        jmeta.class,
+                        tr,
+                        end - tr.mark,
+                        end,
+                        meta.partition_points,
+                        s.collector.as_deref(),
+                    );
+                }
+            }
             done(result);
         }
         s.active.fetch_sub(1, Ordering::SeqCst);
@@ -430,6 +469,7 @@ mod tests {
             Instant::now(),
             None,
             0,
+            None,
             |_meta, _p, input| Ok(input),
         );
         for h in handles {
@@ -444,6 +484,7 @@ mod tests {
             p: 0,
             input,
             cancel: CancelToken::new(),
+            trace: None,
             done,
         }
     }
@@ -486,6 +527,7 @@ mod tests {
             Instant::now(),
             None,
             0,
+            None,
             |_meta, _p, input| {
                 let c = CUR.fetch_add(1, Ordering::SeqCst) + 1;
                 PEAK.fetch_max(c, Ordering::SeqCst);
@@ -559,6 +601,7 @@ mod tests {
             Instant::now(),
             None,
             0,
+            None,
             move |_meta, _p, input| {
                 while !g.load(Ordering::SeqCst) {
                     std::thread::sleep(Duration::from_millis(1));
@@ -623,6 +666,7 @@ mod tests {
             Instant::now(),
             None,
             0,
+            None,
             move |_meta, _p, input| {
                 ran2.fetch_add(1, Ordering::SeqCst);
                 while !g.load(Ordering::SeqCst) {
@@ -657,6 +701,7 @@ mod tests {
                 p: 0,
                 input: vec![2.0],
                 cancel: cancel.clone(),
+                trace: None,
                 done: Box::new(move |r| {
                     tx2.send(matches!(r, Err(RequestError::Cancelled))).unwrap()
                 }),
@@ -690,6 +735,7 @@ mod tests {
             Instant::now(),
             None,
             0,
+            None,
             move |_meta, _p, input| {
                 if input[0] < 0.0 {
                     s.store(true, Ordering::SeqCst);
@@ -744,6 +790,7 @@ mod tests {
             Instant::now(),
             None,
             0,
+            None,
             |_meta, _p, input| {
                 std::thread::sleep(Duration::from_millis(5));
                 Ok(input)

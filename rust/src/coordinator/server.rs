@@ -64,6 +64,10 @@ use crate::sched::{
     StationLoad,
 };
 use crate::sim::reconfig::{ReconfigPolicy, StaticPolicy, SwapLessPolicy};
+use crate::telemetry::{
+    drift_ratio, emit_burst, ProfiledCostModel, PromWriter, SpanCollector, SpanSampler,
+    SpanTrace, Stage, DEFAULT_SPAN_SAMPLE,
+};
 use crate::tpu::{CostModel, PrefixTables, SramCache};
 use crate::util::sync::{lock_or_recover, wait_or_recover, wait_timeout_or_recover};
 
@@ -116,6 +120,15 @@ pub struct ServerOptions {
     /// truncate). True standalone; the fleet router sets it false on its
     /// members and closes the shared log itself.
     pub log_owned: bool,
+    /// Span sampling cadence: every N-th admitted request carries a
+    /// stage timeline (emitted as `Span*` records at completion and
+    /// folded into the drift estimates behind `GET /metrics`). 0
+    /// disables tracing entirely.
+    pub span_sample: usize,
+    /// Span-calibrated cost model: when set, tenant prefix tables built
+    /// at attach use its measured per-prefix overrides instead of pure
+    /// analytic values (`--cost profiled` on the CLI).
+    pub profile: Option<Arc<ProfiledCostModel>>,
 }
 
 impl Default for ServerOptions {
@@ -134,6 +147,8 @@ impl Default for ServerOptions {
             fault_origin: None,
             log: None,
             log_owned: true,
+            span_sample: DEFAULT_SPAN_SAMPLE,
+            profile: None,
         }
     }
 }
@@ -228,6 +243,20 @@ impl ServerBuilder {
     /// server drops).
     pub fn log(mut self, log: EventLog) -> Self {
         self.opts.log = Some(log);
+        self
+    }
+
+    /// Trace every N-th admitted request with a stage timeline (0
+    /// disables; default [`DEFAULT_SPAN_SAMPLE`]).
+    pub fn span_sample(mut self, every: usize) -> Self {
+        self.opts.span_sample = every;
+        self
+    }
+
+    /// Build tenant prefix tables from a span-calibrated profiled cost
+    /// model instead of the pure analytic one.
+    pub fn profile(mut self, pm: Arc<ProfiledCostModel>) -> Self {
+        self.opts.profile = Some(pm);
         self
     }
 
@@ -355,6 +384,9 @@ struct TpuJob {
     input: Vec<f32>,
     submitted: Instant,
     done: mpsc::Sender<Result<Completion, RequestError>>,
+    /// Sampled stage timeline (None = unsampled). Filled in by the
+    /// stations and flushed as one `Span*` burst at completion.
+    trace: Option<SpanTrace>,
 }
 
 /// A queued TPU job extracted from a crashed device with its completion
@@ -559,6 +591,15 @@ struct Shared {
     log: Option<EventLog>,
     /// Fleet device index stamped on every emitted record.
     device: usize,
+    /// 1-in-N span sampling decision + id allocation (admission path).
+    sampler: SpanSampler,
+    /// Lock-free fold of span durations into per-(device, tenant, p,
+    /// stage) estimates — the source of the `/metrics` drift gauges and
+    /// the live `ProfiledCostModel` calibration.
+    collector: Arc<SpanCollector>,
+    /// TPU SRAM prefix-cache outcomes (worker-side).
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
 }
 
 /// How a request left the system (everything but completion/failure);
@@ -671,6 +712,9 @@ pub struct Server {
     /// Close the event log on drop (standalone servers own their log;
     /// fleet members share the router's and leave closing to it).
     log_owned: bool,
+    /// Span-calibrated cost model driving attach-time prefix tables
+    /// (`None` = pure analytic).
+    profile: Option<Arc<ProfiledCostModel>>,
     next_handle: AtomicU64,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
@@ -729,6 +773,10 @@ impl Server {
             started,
             log: opts.log.clone(),
             device: opts.device,
+            sampler: SpanSampler::new(opts.span_sample),
+            collector: Arc::new(SpanCollector::new()),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
         });
 
         // CPU pools execute suffixes through the executor thread; their
@@ -746,6 +794,7 @@ impl Server {
             started,
             opts.log.clone(),
             opts.device,
+            Some(shared.collector.clone()),
             move |meta, p, input| {
                 let t0 = Instant::now();
                 let out = h.execute_range(&meta.name, p, meta.partition_points, input)?;
@@ -827,6 +876,7 @@ impl Server {
             device: opts.device,
             injector,
             log_owned: opts.log_owned,
+            profile: opts.profile.clone(),
             next_handle: AtomicU64::new(0),
             threads,
             stop,
@@ -886,8 +936,16 @@ impl Server {
             st.entries.iter().map(|e| e.tenant.clone()).collect();
         candidate.push(newcomer.clone());
         // Extend the standing prefix-table set with the newcomer's table;
-        // existing tenants' tables are reused as-is.
-        let new_table = PrefixTables::new(&self.cost, &meta);
+        // existing tenants' tables are reused as-is. Handles are
+        // allocated under this state lock (concurrent attaches
+        // serialize on it), so the pre-read next_handle is exactly the
+        // handle this tenant will get — the key the profiled model's
+        // span estimates are filed under.
+        let next = self.next_handle.load(Ordering::SeqCst);
+        let new_table = match &self.profile {
+            Some(pm) => pm.tables(self.device, next, &meta),
+            None => PrefixTables::new(&self.cost, &meta),
+        };
         let mut tables = st.tables.clone();
         tables.push(new_table.clone());
         let plan = alloc::admit_with_tables(&self.am, &candidate, &tables, self.k_max)
@@ -1055,6 +1113,11 @@ impl Server {
         if self.shared.buffer_arrivals {
             lock_or_recover(&self.shared.arrivals).push((now, index));
         }
+        // Sampled BEFORE the admission offer: a refused request emits no
+        // spans (dropped timelines would break span conservation), but
+        // the sampler's modular counter must tick for every offered
+        // request so the cadence stays 1-in-N of offered load.
+        let trace = self.shared.sampler.try_begin(p, now);
         if p > 0 {
             let sched_meta = JobMeta {
                 tenant: handle,
@@ -1074,6 +1137,7 @@ impl Server {
                 input,
                 submitted,
                 done: tx,
+                trace,
             };
             let outcome = {
                 let mut q = lock_or_recover(&self.tpu.queue);
@@ -1135,6 +1199,7 @@ impl Server {
                 input,
                 submitted,
                 tx,
+                trace,
             );
         }
     }
@@ -1275,6 +1340,244 @@ impl Server {
     /// The fleet device index this server drives (0 standalone).
     pub fn device(&self) -> usize {
         self.device
+    }
+
+    /// Snapshot of the live span-estimate table — the calibration input
+    /// of [`ProfiledCostModel::from_estimates`] and the observed side of
+    /// the drift gauges.
+    pub fn span_estimates(&self) -> crate::telemetry::EstimateMap {
+        self.shared.collector.estimates()
+    }
+
+    /// The server's span-duration sink (shared with the CPU pools).
+    pub fn span_collector(&self) -> Arc<SpanCollector> {
+        self.shared.collector.clone()
+    }
+
+    /// This server's whole telemetry plane in Prometheus text exposition
+    /// format (what `GET /metrics` serves on a standalone deployment).
+    pub fn metrics_text(&self) -> String {
+        let mut w = PromWriter::new();
+        self.render_metrics(&mut w);
+        w.finish()
+    }
+
+    /// Append this server's metrics to `w`. The fleet router renders
+    /// every member into ONE shared writer so HELP/TYPE headers stay
+    /// unique across devices (scrapers reject repeated headers).
+    pub fn render_metrics(&self, w: &mut PromWriter) {
+        let dev = self.device.to_string();
+        let stats = self.stats();
+        w.header(
+            "swapless_requests_total",
+            "Request outcomes per tenant",
+            "counter",
+        );
+        for t in &stats.per_tenant {
+            let tenant = t.handle.0.to_string();
+            for (outcome, v) in [
+                ("accepted", t.accepted),
+                ("rejected", t.rejected),
+                ("dropped", t.dropped),
+                ("completed", t.latency.count()),
+            ] {
+                w.counter(
+                    "swapless_requests_total",
+                    &[
+                        ("device", dev.as_str()),
+                        ("tenant", tenant.as_str()),
+                        ("model", t.name.as_str()),
+                        ("outcome", outcome),
+                    ],
+                    v,
+                );
+            }
+        }
+        w.header(
+            "swapless_class_requests_total",
+            "Request outcomes per SLO class",
+            "counter",
+        );
+        w.header(
+            "swapless_request_latency_seconds",
+            "End-to-end latency per SLO class",
+            "summary",
+        );
+        for class in SloClass::ALL {
+            let c = class.name();
+            for (outcome, v) in [
+                ("accepted", stats.per_class.accepted(class)),
+                ("rejected", stats.per_class.rejected(class)),
+                ("shed", stats.per_class.shed(class)),
+                ("expired", stats.per_class.expired(class)),
+                ("cancelled", stats.per_class.cancelled(class)),
+                ("missed", stats.per_class.missed(class)),
+                ("retried", stats.per_class.retried(class)),
+            ] {
+                w.counter(
+                    "swapless_class_requests_total",
+                    &[("device", dev.as_str()), ("class", c), ("outcome", outcome)],
+                    v,
+                );
+            }
+            w.summary(
+                "swapless_request_latency_seconds",
+                &[("device", dev.as_str()), ("class", c)],
+                stats.per_class.get(class),
+            );
+        }
+        w.header(
+            "swapless_server_events_total",
+            "Server-level lifecycle totals",
+            "counter",
+        );
+        for (event, v) in [
+            ("completed", stats.completed),
+            ("failed", stats.failed),
+            ("attempted", stats.attempted),
+            ("retried", stats.retried),
+            ("reconfigs", stats.reconfigs),
+        ] {
+            w.counter(
+                "swapless_server_events_total",
+                &[("device", dev.as_str()), ("event", event)],
+                v,
+            );
+        }
+        // Station occupancy. The TPU queue's running service-hint sum
+        // also feeds the analytic O(1) wait estimate — the prediction
+        // the queued-stage drift gauge compares against.
+        let (tpu_depth, tpu_queued_service) = {
+            let q = lock_or_recover(&self.tpu.queue);
+            (q.len(), q.queued_service_s())
+        };
+        let predicted_wait = self.am.station_wait_estimate(tpu_queued_service, 1);
+        let mut cpu_depth = 0usize;
+        let mut cpu_active = 0usize;
+        for h in self.handles() {
+            cpu_depth += self.pools.queue_len(h);
+            cpu_active += self.pools.active(h);
+        }
+        w.header("swapless_queue_depth", "Queued jobs per station", "gauge");
+        w.header("swapless_in_service", "Jobs in service per station", "gauge");
+        for (station, depth, active) in [
+            ("tpu", tpu_depth, self.tpu.active.load(Ordering::SeqCst)),
+            ("cpu", cpu_depth, cpu_active),
+        ] {
+            let labels = [("device", dev.as_str()), ("station", station)];
+            w.gauge("swapless_queue_depth", &labels, depth as f64);
+            w.gauge("swapless_in_service", &labels, active as f64);
+        }
+        w.header(
+            "swapless_station_wait_estimate_seconds",
+            "Analytic O(1) wait estimate for the current TPU backlog",
+            "gauge",
+        );
+        w.gauge(
+            "swapless_station_wait_estimate_seconds",
+            &[("device", dev.as_str()), ("station", "tpu")],
+            predicted_wait,
+        );
+        w.header(
+            "swapless_sram_cache_total",
+            "TPU prefix-cache outcomes",
+            "counter",
+        );
+        for (result, v) in [
+            ("hit", self.shared.cache_hits.load(Ordering::Relaxed)),
+            ("miss", self.shared.cache_misses.load(Ordering::Relaxed)),
+        ] {
+            w.counter(
+                "swapless_sram_cache_total",
+                &[("device", dev.as_str()), ("result", result)],
+                v,
+            );
+        }
+        if let Some(log) = &self.shared.log {
+            w.header(
+                "swapless_event_log_records_total",
+                "Event-log writer accounting",
+                "counter",
+            );
+            for (state, v) in [("appended", log.appended()), ("dropped", log.dropped())] {
+                w.counter(
+                    "swapless_event_log_records_total",
+                    &[("device", dev.as_str()), ("state", state)],
+                    v,
+                );
+            }
+        }
+        w.header(
+            "swapless_spans_total",
+            "Span sampling pipeline accounting",
+            "counter",
+        );
+        for (state, v) in [
+            ("offered", self.shared.sampler.offered()),
+            ("sampled", self.shared.sampler.sampled()),
+            ("overflowed", self.shared.collector.overflowed() as u64),
+        ] {
+            w.counter(
+                "swapless_spans_total",
+                &[("device", dev.as_str()), ("state", state)],
+                v,
+            );
+        }
+        // Prediction drift: observed span estimates vs the standing
+        // prefix-table hints (the exact values the admission path
+        // schedules by). Keys of other devices (a fleet-shared
+        // collector) and detached tenants are skipped.
+        w.header(
+            "swapless_observed_stage_seconds",
+            "Observed mean stage duration from sampled spans",
+            "gauge",
+        );
+        w.header(
+            "swapless_drift_ratio",
+            "Observed/predicted service-time drift per stage",
+            "gauge",
+        );
+        let est = self.shared.collector.estimates();
+        let st = lock_or_recover(&self.shared.state);
+        for ((d, tenant, p), e) in &est {
+            if *d as usize != self.device {
+                continue;
+            }
+            let Some(i) = st
+                .entries
+                .iter()
+                .position(|en| en.handle.0 & 0xFFFF_FFFF == *tenant)
+            else {
+                continue;
+            };
+            let tables = &st.tables[i];
+            let p_us = *p as usize;
+            if p_us > tables.partition_points {
+                continue;
+            }
+            let tenant_s = tenant.to_string();
+            let p_s = p.to_string();
+            for stage in Stage::ALL {
+                let Some(s) = e.stage(stage) else { continue };
+                let labels = [
+                    ("device", dev.as_str()),
+                    ("tenant", tenant_s.as_str()),
+                    ("p", p_s.as_str()),
+                    ("stage", stage.name()),
+                ];
+                w.gauge("swapless_observed_stage_seconds", &labels, s.estimate());
+                let predicted = match stage {
+                    Stage::Tpu if p_us > 0 => tables.tpu_service(p_us),
+                    Stage::Cpu if p_us < tables.partition_points => tables.cpu_service(p_us),
+                    Stage::Swap if p_us > 0 => tables.load_time(p_us),
+                    Stage::Queued => predicted_wait,
+                    _ => 0.0,
+                };
+                if let Some(r) = drift_ratio(s.estimate(), predicted) {
+                    w.gauge("swapless_drift_ratio", &labels, r);
+                }
+            }
+        }
     }
 
     /// Work still in the system for `handle`: jobs queued at or
@@ -1463,6 +1766,7 @@ fn dispatch_cpu(
     input: Vec<f32>,
     submitted: Instant,
     tx: mpsc::Sender<Result<Completion, RequestError>>,
+    trace: Option<SpanTrace>,
 ) {
     let shared2 = shared.clone();
     // Set after a successful offer: lets the completion callback tell a
@@ -1484,6 +1788,7 @@ fn dispatch_cpu(
             p,
             input,
             cancel,
+            trace,
             done: Box::new(move |result| {
                 let completion = match result {
                     Ok(output) => {
@@ -1582,7 +1887,7 @@ fn tpu_worker_loop(
                 }));
             }
         }
-        let Some(job) = job else { continue };
+        let Some(mut job) = job else { continue };
         *lock_or_recover(&tpu.active_tenant) = Some(job.handle);
         // A cancelled request is refused before touching the device.
         if job.cancel.is_cancelled() {
@@ -1630,11 +1935,22 @@ fn tpu_worker_loop(
             ));
         }
         let meta = job.meta.clone();
+        // The queue-wait stage ends here: service is starting.
+        let service_start = shared.started.elapsed().as_secs_f64();
+        if let Some(tr) = &mut job.trace {
+            tr.queued += (service_start - tr.mark).max(0.0);
+            tr.mark = service_start;
+        }
         let t0 = Instant::now();
         let hit = cache.access(
             job.handle.0 as usize,
             cost.resident_bytes(&meta, job.p),
         );
+        if hit {
+            shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            shared.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
         // Execute with a bounded retry budget against injected transient
         // faults. The backoff doubles per retry and is clipped against
         // the request's absolute deadline: a retry that could not finish
@@ -1693,6 +2009,27 @@ fn tpu_worker_loop(
                 std::thread::sleep(Duration::from_secs_f64(budget - spent));
             }
         }
+        // Split the device occupancy into swap-in vs pure TPU service
+        // for the stage timeline: the swap share is the modeled reload
+        // budget actually enforced above (zero on a hit, or when no
+        // budget is emulated — then nothing slept on behalf of a swap).
+        if let Some(tr) = &mut job.trace {
+            let end_s = shared.started.elapsed().as_secs_f64();
+            let swap_part = if hit || time_scale <= 0.0 {
+                0.0
+            } else {
+                let slow = match &injector {
+                    Some(inj) => inj.slow_factor(),
+                    None => 1.0,
+                };
+                cost.load_time(&meta, job.p) * time_scale * slow
+            };
+            tr.swap = swap_part;
+            tr.tpu = (end_s - tr.mark - swap_part).max(0.0);
+            tr.tpu_end = end_s;
+            // The CPU-queue wait (if the request forwards) starts now.
+            tr.mark = end_s;
+        }
         match result {
             Ok(boundary) => {
                 tpu.fail_streak.store(0, Ordering::SeqCst);
@@ -1703,6 +2040,19 @@ fn tpu_worker_loop(
                         .map(|d| shared.started.elapsed().as_secs_f64() > d)
                         .unwrap_or(false);
                     record(&shared, job.handle, job.class, latency, missed);
+                    if let Some(tr) = &job.trace {
+                        emit_burst(
+                            shared.log.as_ref(),
+                            device,
+                            job.handle.0,
+                            job.class,
+                            tr,
+                            0.0,
+                            tr.tpu_end,
+                            meta.partition_points,
+                            Some(&shared.collector),
+                        );
+                    }
                     let _ = job.done.send(Ok(Completion {
                         tenant: job.handle,
                         latency_s: latency,
@@ -1727,6 +2077,7 @@ fn tpu_worker_loop(
                         boundary,
                         job.submitted,
                         job.done,
+                        job.trace,
                     );
                 }
             }
@@ -1877,6 +2228,32 @@ mod tests {
         let stats = server.stats();
         assert_eq!(stats.completed, 1);
         assert!(server.detach(h).is_ok());
+    }
+
+    #[test]
+    fn metrics_text_renders_prometheus_plane_with_drift() {
+        let server = test_server(|b| b.span_sample(1));
+        let h = server
+            .attach("mobilenetv2", AttachOptions::default())
+            .unwrap();
+        for _ in 0..8 {
+            server.submit(h, input_for(&server, h)).wait().unwrap();
+        }
+        let text = server.metrics_text();
+        assert!(text.contains("# HELP swapless_requests_total"));
+        assert!(text.contains("# TYPE swapless_requests_total counter"));
+        assert!(text.contains("outcome=\"completed\"} 8"));
+        assert!(text.contains("swapless_spans_total{device=\"0\",state=\"sampled\"} 8"));
+        // Every completed request was traced, so the executed partition
+        // has observed stages and at least one drift gauge against the
+        // standing prefix-table hints.
+        assert!(text.contains("swapless_observed_stage_seconds{"), "{text}");
+        assert!(text.contains("swapless_drift_ratio{"), "{text}");
+        // Headers are unique and every sample line is well-formed.
+        assert_eq!(text.matches("# HELP swapless_requests_total").count(), 1);
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.rsplit_once(' ').is_some(), "malformed: {line}");
+        }
     }
 
     #[test]

@@ -24,17 +24,21 @@
 //!
 //! | bytes | field  | meaning                                              |
 //! |-------|--------|------------------------------------------------------|
-//! | 0     | kind   | [`EventKind`] discriminant (0..=8)                   |
+//! | 0     | kind   | [`EventKind`] discriminant (0..=12)                  |
 //! | 1     | class  | [`SloClass`] dense index                             |
 //! | 2     | flags  | bit0 missed, bit1 entry, bit2 outage marker          |
 //! | 3     | magic  | `0xE7` (format guard / corruption detector)          |
 //! | 4..6  | device | fleet device index (u16)                             |
-//! | 6..8  | aux    | migrate/failover target device (u16)                 |
+//! | 6..8  | aux    | migrate/failover target device (u16); partition `p`  |
+//! |       |        | on `Span*` records                                   |
 //! | 8..16 | seq    | record index in this file (writer-assigned, u64)     |
-//! | 16..24| tenant | tenant handle (live) or tenant index (DES) (u64)     |
+//! | 16..24| tenant | tenant handle (live) or tenant index (DES) (u64);    |
+//! |       |        | on `Span*` records the high 32 bits carry the span   |
+//! |       |        | id ([`Event::span_id`]) and the low 32 bits the      |
+//! |       |        | (truncated) tenant ([`Event::span_tenant`])          |
 //! | 24..32| t      | event time, seconds on the producer's clock (f64)    |
 //! | 32..40| value  | deadline on entry events (NaN = none); latency on    |
-//! |       |        | `Complete`; NaN otherwise                            |
+//! |       |        | `Complete`; stage duration on `Span*`; NaN otherwise |
 
 use std::fs::{File, OpenOptions};
 use std::io::Write;
@@ -85,10 +89,24 @@ pub enum EventKind {
     /// served off its home device (`device` = home, `aux` = serving
     /// device, `tenant` = the fleet-level handle).
     Failover = 8,
+    /// Span stage: total time the request spent queued across every
+    /// station. `t` is the *admission* time, so the span burst alone
+    /// reconstructs end-to-end latency (`last.t - span_queue.t`).
+    SpanQueue = 9,
+    /// Span stage: swap-in (prefix load) time. Emitted only on a cache
+    /// miss, so calibration never averages in hit-path zeros.
+    SpanSwap = 10,
+    /// Span stage: pure TPU service time for the request's prefix
+    /// (excludes swap-in and transfers). Emitted iff the partition has a
+    /// TPU segment (`p > 0`).
+    SpanTpu = 11,
+    /// Span stage: CPU suffix execution time. Emitted iff the partition
+    /// leaves CPU work (`p < P`).
+    SpanCpu = 12,
 }
 
 impl EventKind {
-    pub const ALL: [EventKind; 9] = [
+    pub const ALL: [EventKind; 13] = [
         EventKind::Admit,
         EventKind::Reject,
         EventKind::Shed,
@@ -98,7 +116,22 @@ impl EventKind {
         EventKind::Cancel,
         EventKind::Migrate,
         EventKind::Failover,
+        EventKind::SpanQueue,
+        EventKind::SpanSwap,
+        EventKind::SpanTpu,
+        EventKind::SpanCpu,
     ];
+
+    /// True for the sampled per-stage span records (9..=12).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            EventKind::SpanQueue
+                | EventKind::SpanSwap
+                | EventKind::SpanTpu
+                | EventKind::SpanCpu
+        )
+    }
 
     pub fn from_u8(b: u8) -> Option<EventKind> {
         EventKind::ALL.get(b as usize).copied()
@@ -115,6 +148,10 @@ impl EventKind {
             EventKind::Cancel => "cancel",
             EventKind::Migrate => "migrate",
             EventKind::Failover => "failover",
+            EventKind::SpanQueue => "span_queue",
+            EventKind::SpanSwap => "span_swap",
+            EventKind::SpanTpu => "span_tpu",
+            EventKind::SpanCpu => "span_cpu",
         }
     }
 }
@@ -164,6 +201,46 @@ impl Event {
             t,
             value: f64::NAN,
         }
+    }
+
+    /// Build a `Span*` stage record. The tenant field packs the span id
+    /// into its high 32 bits (`(id << 32) | (tenant & 0xFFFF_FFFF)`) so
+    /// a multi-record timeline can be regrouped after interleaved
+    /// emission; tenants are truncated to 32 bits, which every producer
+    /// in this crate satisfies. `aux` carries the partition point `p`
+    /// and `value` the stage duration in seconds.
+    pub fn span(
+        kind: EventKind,
+        t: f64,
+        device: usize,
+        tenant: u64,
+        class: SloClass,
+        span_id: u32,
+        p: usize,
+        duration: f64,
+    ) -> Event {
+        debug_assert!(kind.is_span());
+        let mut ev = Event::new(
+            kind,
+            t,
+            device,
+            (u64::from(span_id) << 32) | (tenant & 0xFFFF_FFFF),
+            class,
+        );
+        ev.aux = p.min(u16::MAX as usize) as u16;
+        ev.value = duration;
+        ev
+    }
+
+    /// The span id a `Span*` record's tenant field packs.
+    pub fn span_id(&self) -> u32 {
+        (self.tenant >> 32) as u32
+    }
+
+    /// The (32-bit truncated) tenant a `Span*` record's tenant field
+    /// packs.
+    pub fn span_tenant(&self) -> u64 {
+        self.tenant & 0xFFFF_FFFF
     }
 
     /// The deadline this record carries (`None` encoded as NaN).
@@ -479,6 +556,31 @@ mod tests {
     }
 
     #[test]
+    fn span_records_pack_id_partition_and_duration() {
+        let ev = Event::span(
+            EventKind::SpanTpu,
+            3.5,
+            2,
+            0xDEAD_BEEF_0000_0042, // high bits beyond 32 are truncated
+            SloClass::Batch,
+            7,
+            5,
+            0.012,
+        );
+        assert!(ev.kind.is_span());
+        assert_eq!(ev.span_id(), 7);
+        assert_eq!(ev.span_tenant(), 0x42);
+        assert_eq!(ev.aux, 5);
+        assert_eq!(ev.value, 0.012);
+        let mut buf = [0u8; RECORD_BYTES];
+        ev.encode(&mut buf);
+        let back = Event::decode(&buf).unwrap();
+        assert_eq!(back, ev);
+        assert_eq!(back.span_id(), 7);
+        assert_eq!(back.span_tenant(), 0x42);
+    }
+
+    #[test]
     fn decode_rejects_corruption() {
         let mut buf = [0u8; RECORD_BYTES];
         sample(EventKind::Admit, 0).encode(&mut buf);
@@ -499,7 +601,7 @@ mod tests {
         let path = temp_path("roundtrip");
         let log = EventLog::create(&path).unwrap();
         for i in 0..100u64 {
-            let mut ev = sample(EventKind::ALL[(i % 9) as usize], 0);
+            let mut ev = sample(EventKind::ALL[i as usize % EventKind::ALL.len()], 0);
             ev.tenant = i;
             log.emit(ev);
         }

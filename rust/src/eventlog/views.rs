@@ -62,6 +62,10 @@ pub struct Rollup {
     /// namespace from `per_tenant`'s member-server handles: the fleet
     /// assigns its own handles, and failover records carry those.
     pub per_tenant_failed_over: BTreeMap<u64, u64>,
+    /// Sampled span stage records (`Span*` kinds). Outcome counters are
+    /// untouched by spans, so audit parity with the live `ServeStats`
+    /// holds whether or not a run sampled spans.
+    pub spans: u64,
     /// Records consumed.
     pub records: u64,
 }
@@ -145,6 +149,12 @@ impl Rollup {
                     *self.per_tenant_failed_over.entry(ev.tenant).or_insert(0) += 1;
                 }
             }
+            EventKind::SpanQueue
+            | EventKind::SpanSwap
+            | EventKind::SpanTpu
+            | EventKind::SpanCpu => {
+                self.spans += 1;
+            }
         }
     }
 
@@ -201,6 +211,7 @@ impl Rollup {
         for (t, n) in &other.per_tenant_failed_over {
             *self.per_tenant_failed_over.entry(*t).or_insert(0) += n;
         }
+        self.spans += other.spans;
         self.records += other.records;
     }
 }
@@ -234,6 +245,18 @@ mod tests {
         outage.marker = true;
         events.push(outage);
         events.push(ev(EventKind::Failover, 1, 3, SloClass::Standard));
+        // Span records bump only `spans`/`records` — outcome counters
+        // must be identical with or without sampling.
+        events.push(Event::span(
+            EventKind::SpanQueue,
+            1.0,
+            0,
+            0,
+            SloClass::Interactive,
+            1,
+            3,
+            0.002,
+        ));
 
         let r = Rollup::replay(&events);
         assert_eq!(r.records, events.len() as u64);
@@ -247,6 +270,7 @@ mod tests {
         assert_eq!(r.per_device[0].completed, 1);
         assert_eq!(r.per_device[1].accepted, 1);
         assert_eq!(r.started, 1);
+        assert_eq!(r.spans, 1);
         assert_eq!(r.migrations, 1);
         assert_eq!(r.failovers, 1);
         assert_eq!(r.failed_over, 1);

@@ -22,6 +22,7 @@ pub mod scenarios;
 pub mod sched_ablation;
 pub mod sensitivity;
 pub mod table2;
+pub mod telemetry;
 pub mod wire;
 
 pub use common::Ctx;

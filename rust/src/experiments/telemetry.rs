@@ -1,0 +1,323 @@
+//! Telemetry experiment — what stage-span tracing costs and what it
+//! buys: sweep span sampling cadence × load factor on the DES and
+//! measure (a) log-volume overhead (span records as a share of the
+//! log), (b) calibration coverage (distinct (device, tenant, partition)
+//! estimate keys), and (c) prediction drift — the observed stage
+//! durations against the analytic cost model's predictions.
+//!
+//! The DES serves as its own oracle: virtual-time service draws *are*
+//! the analytic values, so every swap/tpu/cpu span estimate must
+//! reproduce its prediction bit-exactly (drift ratio exactly 1), and a
+//! [`ProfiledCostModel`] calibrated from the log must rebuild every
+//! tenant's [`PrefixTables`] identical to the analytic tables — the
+//! closing-the-loop parity `--cost profiled` relies on. Sampling must
+//! also be *inert*: for a fixed arrival stream, every outcome counter
+//! is identical whether spans are off, 1-in-64, or traced exhaustively.
+//!
+//! [`ProfiledCostModel`]: crate::telemetry::ProfiledCostModel
+//! [`PrefixTables`]: crate::tpu::PrefixTables
+
+use std::time::Instant;
+
+use crate::alloc;
+use crate::analytic::Config;
+use crate::eventlog::{read_all, views::Rollup, EventLog};
+use crate::sim::{SimOptions, Simulator};
+use crate::telemetry::{drift_ratio, ProfiledCostModel, SpanCollector, Stage};
+use crate::tpu::PrefixTables;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{
+    equal_tpu_load_shares, generate_arrivals, rates_for_load_factor, RateSchedule,
+};
+
+use super::common::{print_table, Ctx};
+use super::sched_ablation::MODELS;
+
+/// Swept sampling cadences; 0 = spans off (the baseline row).
+pub const SAMPLES: [usize; 4] = [0, 1, 16, 64];
+/// Swept TPU load factors (sub-critical and near-critical).
+pub const RHOS: [f64; 2] = [0.6, 0.9];
+
+#[derive(Debug, Clone)]
+pub struct TelemetryRow {
+    pub rho: f64,
+    /// Sampling cadence (1-in-N); 0 = off.
+    pub sample: usize,
+    pub completed: u64,
+    pub accepted: u64,
+    /// Total log records (lifecycle + spans).
+    pub records: u64,
+    /// Span records among them.
+    pub spans: u64,
+    /// Span share of the log — the telemetry volume overhead.
+    pub span_share: f64,
+    /// Distinct (device, tenant, partition) calibration keys observed.
+    pub keys: usize,
+    /// Max |observed/predicted − 1| over every swap/tpu/cpu estimate;
+    /// 0.0 when every stage reproduced its analytic prediction exactly.
+    pub max_rel_err: f64,
+    /// Every tenant's span-calibrated prefix table equals the analytic
+    /// table bit-for-bit.
+    pub tables_exact: bool,
+    /// Wall-clock of the DES run (informational; the virtual-time engine
+    /// plus log writer, not a serving-path overhead bound — that is
+    /// `bench_telemetry`'s job).
+    pub wall_ms: f64,
+}
+
+pub struct TelemetrySweep {
+    pub models: Vec<String>,
+    pub config: Config,
+    pub rows: Vec<TelemetryRow>,
+}
+
+pub fn run(ctx: &Ctx) -> Result<TelemetrySweep, String> {
+    let names: Vec<&str> = MODELS.to_vec();
+    let zero = vec![0.0; names.len()];
+    let tenants0 = ctx.tenants(&names, &zero)?;
+    let full = Config::all_tpu(&tenants0);
+    let shares = equal_tpu_load_shares(&ctx.am, &tenants0);
+
+    // Plan once at the sub-critical point and hold the configuration
+    // across the sweep, so every cell calibrates the same partitions.
+    let base_rates = rates_for_load_factor(&ctx.am, &tenants0, &full, &shares, RHOS[0]);
+    let base_tenants = ctx.tenants(&names, &base_rates)?;
+    let config = alloc::hill_climb(&ctx.am, &base_tenants, ctx.k_max).config;
+
+    let horizon = ctx.horizon;
+    let mut rows = Vec::new();
+    for rho in RHOS {
+        let rates = rates_for_load_factor(&ctx.am, &tenants0, &full, &shares, rho);
+        let schedules: Vec<RateSchedule> =
+            rates.iter().map(|r| RateSchedule::constant(*r)).collect();
+        let tenants = ctx.tenants(&names, &rates)?;
+        // One arrival stream per rho, replayed under every cadence:
+        // sampling must not perturb a single outcome counter.
+        let mut rng = Rng::new(ctx.seed);
+        let arrivals = generate_arrivals(&schedules, horizon, &mut rng);
+
+        for sample in SAMPLES {
+            let path = std::env::temp_dir().join(format!(
+                "swapless-telemetry-{}-{}-{}.log",
+                std::process::id(),
+                (rho * 100.0) as u32,
+                sample
+            ));
+            let log = EventLog::create(&path)?;
+            let mut sim = Simulator::new(
+                &ctx.cost,
+                &tenants,
+                config.clone(),
+                SimOptions {
+                    horizon,
+                    warmup: horizon * 0.05,
+                    seed: ctx.seed,
+                    span_sample: sample,
+                    log: Some(log.clone()),
+                    ..SimOptions::default()
+                },
+            );
+            let t0 = Instant::now();
+            let res = sim.run(&arrivals, None);
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            log.close();
+            if log.dropped() > 0 {
+                return Err(format!(
+                    "telemetry rho {rho} sample {sample}: log writer dropped {} records",
+                    log.dropped()
+                ));
+            }
+            let events = read_all(&path)?;
+            let _ = std::fs::remove_file(&path);
+            let roll = Rollup::replay(&events);
+
+            // Fold the spans back and compare every estimate against the
+            // analytic prediction it should reproduce.
+            let collector = SpanCollector::new();
+            for ev in &events {
+                collector.fold_event(ev);
+            }
+            let estimates = collector.estimates();
+            let mut max_rel_err = 0.0f64;
+            for (&(_, tenant, p), est) in &estimates {
+                let model = &tenants[tenant as usize].model;
+                let p = p as usize;
+                for (stage, predicted) in [
+                    (Stage::Swap, ctx.cost.load_time(model, p)),
+                    (Stage::Tpu, ctx.cost.tpu_service(model, p)),
+                    (Stage::Cpu, ctx.cost.cpu_service(model, p)),
+                ] {
+                    if let Some(s) = est.stage(stage) {
+                        if let Some(r) = drift_ratio(s.estimate(), predicted) {
+                            max_rel_err = max_rel_err.max((r - 1.0).abs());
+                        }
+                    }
+                }
+            }
+
+            // Closing the loop: tables rebuilt from the log must equal
+            // the analytic tables bit-for-bit.
+            let pm = ProfiledCostModel::from_events(ctx.cost.clone(), &events);
+            let tables_exact = tenants.iter().enumerate().all(|(i, t)| {
+                let analytic = PrefixTables::new(&ctx.cost, &t.model);
+                let profiled = pm.tables(0, i as u64, &t.model);
+                (0..=t.model.partition_points).all(|p| {
+                    profiled.tpu_service(p) == analytic.tpu_service(p)
+                        && profiled.cpu_service(p) == analytic.cpu_service(p)
+                        && profiled.load_time(p) == analytic.load_time(p)
+                })
+            });
+
+            rows.push(TelemetryRow {
+                rho,
+                sample,
+                completed: res.per_model.iter().map(|m| m.completed).sum(),
+                accepted: res.per_class.accepted_total(),
+                records: roll.records,
+                spans: roll.spans,
+                span_share: if roll.records > 0 {
+                    roll.spans as f64 / roll.records as f64
+                } else {
+                    0.0
+                },
+                keys: estimates.len(),
+                max_rel_err,
+                tables_exact,
+                wall_ms,
+            });
+        }
+    }
+    Ok(TelemetrySweep {
+        models: MODELS.iter().map(|m| m.to_string()).collect(),
+        config,
+        rows,
+    })
+}
+
+impl TelemetrySweep {
+    /// The row for (rho, sample), if present.
+    pub fn row(&self, rho: f64, sample: usize) -> Option<&TelemetryRow> {
+        self.rows
+            .iter()
+            .find(|r| (r.rho - rho).abs() < 1e-9 && r.sample == sample)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "\ntelemetry sweep: {} P={:?} K={:?}",
+            self.models.join("+"),
+            self.config.partitions,
+            self.config.cores
+        );
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{:.1}", r.rho),
+                    if r.sample == 0 {
+                        "off".to_string()
+                    } else {
+                        format!("1/{}", r.sample)
+                    },
+                    r.completed.to_string(),
+                    r.records.to_string(),
+                    r.spans.to_string(),
+                    format!("{:.1}%", r.span_share * 100.0),
+                    r.keys.to_string(),
+                    format!("{:.1e}", r.max_rel_err),
+                    if r.tables_exact { "exact" } else { "DRIFT" }.to_string(),
+                    format!("{:.1}", r.wall_ms),
+                ]
+            })
+            .collect();
+        print_table(
+            "Span sampling x load factor (drift vs analytic, log overhead)",
+            &[
+                "rho", "sample", "done", "records", "spans", "share", "keys", "max err",
+                "tables", "wall ms",
+            ],
+            &rows,
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            (
+                "models",
+                Json::Arr(self.models.iter().map(|m| Json::Str(m.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::from_pairs(vec![
+                                ("rho", Json::Num(r.rho)),
+                                ("sample", Json::Num(r.sample as f64)),
+                                ("completed", Json::Num(r.completed as f64)),
+                                ("accepted", Json::Num(r.accepted as f64)),
+                                ("records", Json::Num(r.records as f64)),
+                                ("spans", Json::Num(r.spans as f64)),
+                                ("span_share", Json::Num(r.span_share)),
+                                ("keys", Json::Num(r.keys as f64)),
+                                ("max_rel_err", Json::Num(r.max_rel_err)),
+                                ("tables_exact", Json::Bool(r.tables_exact)),
+                                ("wall_ms", Json::Num(r.wall_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::Manifest;
+
+    #[test]
+    fn sampling_is_inert_and_drift_free_against_the_des_oracle() {
+        let mut ctx = Ctx::new(Manifest::synthetic(), HardwareSpec::default());
+        ctx.horizon = 150.0;
+        let r = run(&ctx).unwrap();
+        assert_eq!(r.rows.len(), RHOS.len() * SAMPLES.len());
+
+        for rho in RHOS {
+            let off = r.row(rho, 0).unwrap();
+            assert_eq!(off.spans, 0, "rho {rho}: spans emitted while disabled");
+            assert_eq!(off.keys, 0);
+
+            for sample in SAMPLES {
+                let row = r.row(rho, sample).unwrap();
+                // Sampling must not perturb the simulation: identical
+                // arrivals give identical outcome counters at every
+                // cadence, and the log grows only by the span records.
+                assert_eq!(row.completed, off.completed, "rho {rho} 1/{sample}");
+                assert_eq!(row.accepted, off.accepted, "rho {rho} 1/{sample}");
+                assert_eq!(
+                    row.records - row.spans,
+                    off.records,
+                    "rho {rho} 1/{sample}: lifecycle record count changed"
+                );
+                if sample > 0 {
+                    assert!(row.spans > 0, "rho {rho} 1/{sample}: no spans");
+                    // Virtual-time spans reproduce the analytic service
+                    // times exactly, so the calibrated tables are the
+                    // analytic tables.
+                    assert_eq!(row.max_rel_err, 0.0, "rho {rho} 1/{sample}");
+                    assert!(row.tables_exact, "rho {rho} 1/{sample}");
+                }
+            }
+            // Coarser cadence, fewer spans.
+            let exhaustive = r.row(rho, 1).unwrap();
+            let coarse = r.row(rho, 64).unwrap();
+            assert!(exhaustive.spans > coarse.spans);
+        }
+    }
+}

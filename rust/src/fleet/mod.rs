@@ -42,7 +42,7 @@ pub mod place;
 pub mod server;
 pub mod sim;
 
-pub use place::{place, DevicePlan, FleetPlan};
+pub use place::{place, place_with_tables, DevicePlan, FleetPlan};
 pub use server::{FleetServer, FleetServerBuilder, FleetStats};
 pub use sim::{
     run_fleet, run_fleet_failover, run_fleet_with, simulate_fleet, DeviceSimResult, FleetSimResult,

@@ -124,6 +124,14 @@ impl<'a> Inner<'a> {
             .iter()
             .map(|dev| PrefixTables::for_tenants(&dev.cost, tenants))
             .collect();
+        Inner::with_tables(fleet, tenants, tables)
+    }
+
+    fn with_tables(
+        fleet: &'a Fleet,
+        tenants: &'a [Tenant],
+        tables: Vec<Vec<PrefixTables>>,
+    ) -> Inner<'a> {
         Inner {
             fleet,
             tenants,
@@ -204,9 +212,32 @@ fn insert_sorted(v: &mut Vec<usize>, x: usize) {
 /// The two-level placement search. Deterministic: iteration orders are
 /// fixed, ties break toward the lower device index.
 pub fn place(fleet: &Fleet, tenants: &[Tenant]) -> FleetPlan {
+    search(Inner::new(fleet, tenants))
+}
+
+/// The same two-level search over caller-supplied per-device prefix
+/// tables (`tables[d][i]` = tenant `i`'s tables under device `d`'s cost
+/// model) — the `--cost profiled` placement path, where span-calibrated
+/// tables replace the analytic ones that [`place`] builds internally.
+/// TPU-utilization and load-ordering estimates stay analytic (spans do
+/// not measure bus occupancy).
+pub fn place_with_tables(
+    fleet: &Fleet,
+    tenants: &[Tenant],
+    tables: Vec<Vec<PrefixTables>>,
+) -> FleetPlan {
+    assert_eq!(tables.len(), fleet.len(), "one table set per device");
+    for per_device in &tables {
+        assert_eq!(per_device.len(), tenants.len(), "one table per tenant");
+    }
+    search(Inner::with_tables(fleet, tenants, tables))
+}
+
+fn search(mut inner: Inner<'_>) -> FleetPlan {
+    let fleet = inner.fleet;
+    let tenants = inner.tenants;
     let n = tenants.len();
     let d_count = fleet.len();
-    let mut inner = Inner::new(fleet, tenants);
 
     // Outer pass 1 — greedy bin-pack in descending predicted TPU load on
     // the reference device (heaviest tenants choose first, so they end up
@@ -364,6 +395,31 @@ mod tests {
         assert_eq!(plan.devices[0].config, direct.config);
         let rate: f64 = tenants.iter().map(|t| t.rate).sum();
         assert!((plan.objective - direct.predicted_objective / rate).abs() < 1e-9);
+    }
+
+    #[test]
+    fn place_with_analytic_tables_matches_place() {
+        // `place` is `place_with_tables` over analytic tables — feeding
+        // those tables in explicitly must reproduce the search exactly.
+        let fleet = Fleet::uniform(2, &HardwareSpec::default());
+        let tenants = vec![
+            tenant("big", 10, 40.0, 12.0, 2.0),
+            tenant("small", 5, 4.0, 0.5, 2.0),
+            tenant("mid", 7, 14.0, 3.0, 1.0),
+        ];
+        let tables: Vec<Vec<PrefixTables>> = fleet
+            .devices()
+            .iter()
+            .map(|dev| PrefixTables::for_tenants(&dev.cost, &tenants))
+            .collect();
+        let a = place(&fleet, &tenants);
+        let b = place_with_tables(&fleet, &tenants, tables);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.evaluations, b.evaluations);
+        for (da, db) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(da.config, db.config);
+        }
     }
 
     #[test]

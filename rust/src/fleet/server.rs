@@ -45,6 +45,7 @@ use crate::model::Manifest;
 use crate::runtime::service::ExecBackend;
 use crate::sched::SloClass;
 use crate::sim::reconfig::{ReconfigPolicy, SwapLessPolicy};
+use crate::telemetry::{ProfiledCostModel, PromWriter};
 use crate::util::sync::lock_or_recover;
 
 use super::Fleet;
@@ -101,6 +102,21 @@ impl FleetServerBuilder {
 
     pub fn queue_capacity(mut self, cap: usize) -> Self {
         self.opts.queue_capacity = Some(cap);
+        self
+    }
+
+    /// Stage-span sampling cadence (1-in-`every`; 0 disables) applied to
+    /// every member server.
+    pub fn span_sample(mut self, every: usize) -> Self {
+        self.opts.span_sample = every;
+        self
+    }
+
+    /// Span-calibrated profiled cost model shared by every member
+    /// server: each member keys its tenants' tables with its own device
+    /// index, so per-device calibration points land on the right device.
+    pub fn profile(mut self, pm: Arc<ProfiledCostModel>) -> Self {
+        self.opts.profile = Some(pm);
         self
     }
 
@@ -1001,6 +1017,57 @@ impl FleetServer {
             failed_over: self.failed_over.load(Ordering::SeqCst),
             shed_tenants: self.shed_tenants.load(Ordering::SeqCst),
         }
+    }
+
+    /// Fleet-wide Prometheus exposition: every member server renders
+    /// into ONE writer (`# HELP`/`# TYPE` headers dedup across devices,
+    /// the `device` label keeps the series distinct), then the fleet
+    /// control plane appends its own counters.
+    pub fn metrics_text(&self) -> String {
+        let mut w = PromWriter::new();
+        for s in &self.servers {
+            s.render_metrics(&mut w);
+        }
+        w.header(
+            "swapless_fleet_migrations_total",
+            "Policy-driven tenant migrations executed, by source device.",
+            "counter",
+        );
+        let per = lock_or_recover(&self.per_device_migrations).clone();
+        for (d, m) in per.iter().enumerate() {
+            w.counter(
+                "swapless_fleet_migrations_total",
+                &[("device", &d.to_string())],
+                *m,
+            );
+        }
+        w.header(
+            "swapless_fleet_events_total",
+            "Fleet control-plane event totals by kind.",
+            "counter",
+        );
+        for (kind, v) in [
+            ("migrations", self.migrations.load(Ordering::SeqCst)),
+            ("failovers", self.failovers.load(Ordering::SeqCst)),
+            ("requeued", self.requeued.load(Ordering::SeqCst)),
+            ("failed_over", self.failed_over.load(Ordering::SeqCst)),
+            ("shed_tenants", self.shed_tenants.load(Ordering::SeqCst)),
+        ] {
+            w.counter("swapless_fleet_events_total", &[("event", kind)], v);
+        }
+        w.header(
+            "swapless_fleet_device_up",
+            "1 while the member device is serving, 0 while crashed.",
+            "gauge",
+        );
+        for (d, s) in self.servers.iter().enumerate() {
+            w.gauge(
+                "swapless_fleet_device_up",
+                &[("device", &d.to_string())],
+                if s.health().is_down() { 0.0 } else { 1.0 },
+            );
+        }
+        w.finish()
     }
 }
 

@@ -30,6 +30,7 @@ pub mod profiler;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod tpu;
 pub mod util;
 pub mod workload;

@@ -38,12 +38,12 @@ use swapless::experiments::common::save_result;
 use swapless::model::Manifest;
 use swapless::util::cli;
 
-const VALUE_OPTS: [&str; 35] = [
+const VALUE_OPTS: [&str; 38] = [
     "artifacts", "hw", "seed", "horizon", "models", "rates", "rho", "iters", "out", "time-scale",
     "trace", "policy", "duration", "attach-at", "detach-at", "backend", "discipline", "classes",
     "queue-cap", "overload", "deadline-ms", "devices", "crash-device", "crash-at", "recover-at",
     "log", "offset", "queue", "scenario", "listen", "connect", "connections", "mode", "window",
-    "tenants",
+    "tenants", "sample", "cost", "profile",
 ];
 
 fn main() {
@@ -87,18 +87,30 @@ fn usage() -> String {
        plan --models a,b --rates x,y\n\
                                    run the allocator, print the (P, K) config\n\
        placement --models a,b --rates x,y [--devices N]\n\
+                 [--cost analytic|profiled --profile LOG]\n\
                                    run the two-level fleet allocator: print the\n\
                                    tenant->device assignment, each device's (P, K)\n\
-                                   plan, and the predicted fleet objective\n\
-       audit [FILE] [--offset BYTES]\n\
+                                   plan, and the predicted fleet objective;\n\
+                                   --cost profiled calibrates the prefix tables\n\
+                                   from a span-sampled event log (--profile),\n\
+                                   keyed by (device, attach-order handle)\n\
+       telemetry                   sampling-rate x rho sweep on the DES: span\n\
+                                   conservation, log-volume overhead, and the\n\
+                                   profiled-vs-analytic drift ratios per stage\n\
+                                   (results/telemetry.json)\n\
+       audit [FILE] [--offset BYTES] [--follow]\n\
                                    replay a binary event log into the incremental\n\
                                    view layer and print the materialized rollup\n\
                                    (per-tenant/class/device counters); --offset\n\
-                                   starts mid-file at a record boundary; without\n\
-                                   FILE, runs the audit experiment: a logged\n\
-                                   2-device chaos run whose log-derived rollup\n\
-                                   must match the live ServeStats bit-exactly\n\
-                                   (results/audit.json; non-zero exit on drift)\n\
+                                   starts mid-file at a record boundary; --follow\n\
+                                   tails a live log from its current end instead,\n\
+                                   printing rolling rollup deltas every second\n\
+                                   (--duration S bounds the tail; ctrl-c stops);\n\
+                                   without FILE, runs the audit experiment: a\n\
+                                   logged 2-device chaos run whose log-derived\n\
+                                   rollup must match the live ServeStats bit-\n\
+                                   exactly (results/audit.json; non-zero exit on\n\
+                                   drift)\n\
        serve [--models a,b] [--rates x,y | --rho R] [--classes c1,c2]\n\
              [--devices N] [--duration S] [--time-scale S] [--listen ADDR]\n\
              [--discipline fifo|priority|wfq|spsf]\n\
@@ -106,7 +118,8 @@ fn usage() -> String {
              [--deadline-ms D] [--attach-at name@t[:rate],...]\n\
              [--detach-at name@t,...] [--backend auto|pjrt|emulated]\n\
              [--crash-device D --crash-at S [--recover-at S]]\n\
-             [--log FILE]\n\
+             [--log FILE] [--sample N]\n\
+             [--cost analytic|profiled --profile LOG]\n\
                                    live serving with a dynamic tenant set; classes\n\
                                    (interactive|standard|batch) align with --models;\n\
                                    --rho drives open-loop load at a TPU load factor\n\
@@ -122,7 +135,12 @@ fn usage() -> String {
                                    log off the hot path (audit/replay it later);\n\
                                    --listen ADDR additionally serves the binary\n\
                                    wire protocol on a TCP socket (loadgen drives\n\
-                                   it; GET /stats over HTTP for a snapshot)\n\
+                                   it; GET /stats over HTTP for a snapshot,\n\
+                                   GET /metrics for Prometheus text exposition);\n\
+                                   --sample N traces 1-in-N requests with stage\n\
+                                   spans into the event log (default 16; 0 off);\n\
+                                   --cost profiled rebuilds every tenant's prefix\n\
+                                   tables from span estimates in --profile LOG\n\
        loadgen --connect HOST:PORT [--tenants N] [--rates x,y]\n\
                [--classes c1,c2] [--deadline-ms D] [--mode open|closed]\n\
                [--connections N] [--window W] [--duration S] [--seed N]\n\
@@ -189,7 +207,7 @@ fn run(raw: &[String]) -> Result<(), String> {
             run_named(&ctx, "schedulers")
         }
         "ablation" | "sensitivity" | "churn" | "schedulers" | "overload" | "fleet"
-        | "faults" | "wire" => run_named(&ctx, cmd),
+        | "faults" | "wire" | "telemetry" => run_named(&ctx, cmd),
         "loadgen" => loadgen_cmd(&args),
         "scenarios" => {
             let r = exp::scenarios::run_filtered(&ctx, args.opt("scenario"))?;
@@ -289,6 +307,7 @@ fn run(raw: &[String]) -> Result<(), String> {
         "trace" => trace_record(&ctx, &args),
         "replay" => trace_replay(&ctx, &args),
         "audit" => match args.positional.get(1) {
+            Some(path) if args.flag("follow") => audit_follow(path, &args),
             Some(path) => audit_log(path, &args),
             None => run_named(&ctx, "audit"),
         },
@@ -301,7 +320,7 @@ fn run(raw: &[String]) -> Result<(), String> {
 /// `swapless placement --models a,b --rates x,y --devices N` — run the
 /// two-level fleet allocator and print the assignment + per-device plans.
 fn placement(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
-    use swapless::fleet::{place, Fleet};
+    use swapless::fleet::{place, place_with_tables, Fleet};
     let names = args.opt_list("models");
     if names.is_empty() {
         return Err("placement needs --models a,b".into());
@@ -329,8 +348,27 @@ fn placement(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
         })
         .collect::<Result<_, String>>()?;
     let fleet = Fleet::uniform(devices, &ctx.cost.hw);
+    // --cost profiled --profile LOG: the span estimates are keyed by
+    // (device, attach-order handle), so --models must list the tenants
+    // in the profiled run's attach order. Calibration (log replay)
+    // happens before the timer so `dt` stays pure search time.
+    let pm = profiled_cost(args, &ctx.cost.hw)?;
     let t0 = std::time::Instant::now();
-    let plan = place(&fleet, &tenants);
+    let plan = match pm {
+        Some(pm) => {
+            let tables = (0..devices)
+                .map(|d| {
+                    tenants
+                        .iter()
+                        .enumerate()
+                        .map(|(i, t)| pm.tables(d, i as u64, &t.model))
+                        .collect()
+                })
+                .collect();
+            place_with_tables(&fleet, &tenants, tables)
+        }
+        None => place(&fleet, &tenants),
+    };
     let dt = t0.elapsed();
     println!("two-level placement over {devices} device(s):");
     for (i, n) in names.iter().enumerate() {
@@ -367,6 +405,48 @@ fn placement(ctx: &exp::Ctx, args: &cli::Args) -> Result<(), String> {
         println!("warning: no stable configuration on at least one device (rho >= 1)");
     }
     Ok(())
+}
+
+/// Resolve `--cost analytic|profiled [--profile LOG]` into an optional
+/// profiled cost model: replay the span-sampled log, fold its `Span*`
+/// records into per-(device, tenant, partition) stage estimates, and
+/// calibrate the analytic model with them (uncalibrated prefix-table
+/// entries stay analytic).
+fn profiled_cost(
+    args: &cli::Args,
+    hw: &HardwareSpec,
+) -> Result<Option<std::sync::Arc<swapless::telemetry::ProfiledCostModel>>, String> {
+    use swapless::telemetry::ProfiledCostModel;
+    use swapless::tpu::CostModel;
+    match args.opt_or("cost", "analytic").as_str() {
+        "analytic" => {
+            if args.opt("profile").is_some() {
+                return Err("--profile needs --cost profiled".into());
+            }
+            Ok(None)
+        }
+        "profiled" => {
+            let path = args
+                .opt("profile")
+                .ok_or("--cost profiled needs --profile LOG (a span-sampled event log)")?;
+            let events = swapless::eventlog::read_all(path)?;
+            let pm = ProfiledCostModel::from_events(CostModel::new(hw.clone()), &events);
+            if pm.calibrated_points() == 0 {
+                return Err(format!(
+                    "--profile {path} holds no span records (was the run sampled? \
+                     see --sample); a zero-point profiled model is just the \
+                     analytic model"
+                ));
+            }
+            println!(
+                "profiled cost model: {} calibration point(s) from {} record(s) in {path}",
+                pm.calibrated_points(),
+                events.len()
+            );
+            Ok(Some(std::sync::Arc::new(pm)))
+        }
+        other => Err(format!("unknown --cost {other} (analytic|profiled)")),
+    }
 }
 
 /// `swapless trace --models a,b --rates x,y --horizon S --out trace.json`
@@ -591,6 +671,91 @@ fn audit_log(path: &str, args: &cli::Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `swapless audit FILE --follow` — tail a live event log: start at the
+/// current end (or `--offset`), poll once a second, fold every newly
+/// appended record into a rolling [`Rollup`], and print a delta line per
+/// poll that saw records. Stops after `--duration S` (default: runs
+/// until ctrl-c) or when the writer's close-time truncate shrinks the
+/// file below the tail offset.
+///
+/// [`Rollup`]: swapless::eventlog::views::Rollup
+fn audit_follow(path: &str, args: &cli::Args) -> Result<(), String> {
+    use swapless::eventlog::{read_from, views::Rollup, RECORD_BYTES};
+    use std::time::{Duration, Instant};
+
+    let rec = RECORD_BYTES as u64;
+    // Whole-record clamp: the writer appends records atomically from the
+    // reader's perspective only at record granularity, so a torn
+    // in-flight tail is never handed to the decoder.
+    let file_end = || -> Result<u64, String> {
+        std::fs::metadata(path)
+            .map(|m| m.len() / rec * rec)
+            .map_err(|e| format!("stat {path}: {e}"))
+    };
+    let mut offset = match args.opt("offset") {
+        Some(_) => {
+            let o = args.opt_u64("offset", 0)?;
+            if o % rec != 0 {
+                return Err(format!(
+                    "--offset {o} is not a record boundary (records are {RECORD_BYTES} bytes)"
+                ));
+            }
+            o
+        }
+        None => file_end()?,
+    };
+    let duration = args.opt_f64("duration", f64::INFINITY)?;
+    println!("following {path} from byte {offset} (ctrl-c to stop)");
+    let mut roll = Rollup::new();
+    let t0 = Instant::now();
+    while t0.elapsed().as_secs_f64() < duration {
+        std::thread::sleep(Duration::from_secs_f64(
+            1.0f64.min(duration - t0.elapsed().as_secs_f64()).max(0.0),
+        ));
+        let end = file_end()?;
+        if end < offset {
+            println!("log shrank below the tail offset (writer closed); stopping");
+            break;
+        }
+        if end == offset {
+            continue;
+        }
+        let events = read_from(path, offset)?;
+        let n = events.len() as u64;
+        if n == 0 {
+            continue;
+        }
+        offset += n * rec;
+        let delta = Rollup::replay(&events);
+        roll.merge(&delta);
+        let (t, dt) = (roll.totals(), delta.totals());
+        println!(
+            "t={:>6.1}s +{n} records: accepted +{} completed +{} dropped +{} spans +{} | \
+             totals accepted={} completed={} dropped={} goodput={} spans={}",
+            t0.elapsed().as_secs_f64(),
+            dt.accepted,
+            dt.completed,
+            dt.dropped(),
+            delta.spans,
+            t.accepted,
+            t.completed,
+            t.dropped(),
+            roll.goodput(),
+            roll.spans,
+        );
+    }
+    println!(
+        "followed {} record(s): accepted={} completed={} dropped={} goodput={} spans={}",
+        roll.records,
+        roll.totals().accepted,
+        roll.totals().completed,
+        roll.totals().dropped(),
+        roll.goodput(),
+        roll.spans,
+    );
+    Ok(())
+}
+
 fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
     match which {
         "ablation" => {
@@ -641,6 +806,11 @@ fn run_named(ctx: &exp::Ctx, which: &str) -> Result<(), String> {
             let r = exp::wire::run(ctx)?;
             r.print();
             save_result("wire", &r.to_json())
+        }
+        "telemetry" => {
+            let r = exp::telemetry::run(ctx)?;
+            r.print();
+            save_result("telemetry", &r.to_json())
         }
         _ => Err(format!("unknown experiment {which}")),
     }
@@ -946,6 +1116,16 @@ fn serve_fleet(
         .adaptive(true);
     if let Some(cap) = queue_cap {
         builder = builder.queue_capacity(cap);
+    }
+    // --sample N: stage-span cadence for every member server (1-in-N;
+    // 0 disables); the default DEFAULT_SPAN_SAMPLE applies otherwise.
+    if args.opt("sample").is_some() {
+        builder = builder.span_sample(args.opt_usize("sample", 0)?);
+    }
+    // --cost profiled --profile LOG: span-calibrated prefix tables,
+    // keyed per (device, attach-order handle).
+    if let Some(pm) = profiled_cost(args, hw)? {
+        builder = builder.profile(pm);
     }
     if let Some((d, at, recover)) = crash {
         builder = builder.faults(
@@ -1269,6 +1449,17 @@ fn serve(ctx: &exp::Ctx, args: &cli::Args, hw: &HardwareSpec) -> Result<(), Stri
     }
     if let Some(l) = &log {
         builder = builder.log(l.clone());
+    }
+    // --sample N: stage-span cadence (1-in-N; 0 disables). The default
+    // stays DEFAULT_SPAN_SAMPLE, so /metrics drift gauges populate even
+    // without the flag.
+    if args.opt("sample").is_some() {
+        builder = builder.span_sample(args.opt_usize("sample", 0)?);
+    }
+    // --cost profiled --profile LOG: rebuild every tenant's prefix
+    // tables from span estimates instead of the analytic model.
+    if let Some(pm) = profiled_cost(args, hw)? {
+        builder = builder.profile(pm);
     }
     let server = Arc::new(builder.build().map_err(|e| e.to_string())?);
     // --listen ADDR: serve the binary wire protocol alongside the local

@@ -20,7 +20,10 @@
 //!
 //! A connection whose first bytes are `GET ` is served as minimal
 //! HTTP/1.1 instead: `GET /stats` returns the same greppable stats
-//! lines the CLI prints, so the edge can be scraped with `curl`.
+//! lines the CLI prints, and `GET /metrics` the Prometheus exposition
+//! (backend serving-plane series plus this edge's `swapless_net_*`
+//! section), so the edge can be scraped with `curl` or a Prometheus
+//! agent.
 
 use super::proto::{
     decode_payload, encode_payload, write_frame, ErrorCode, FrameHeader, FrameKind, FrameReader,
@@ -29,6 +32,7 @@ use super::proto::{
 use super::WireBackend;
 use crate::coordinator::{Request, Ticket};
 use crate::metrics::fmt_net_line;
+use crate::telemetry::PromWriter;
 use crate::util::sync::lock_or_recover;
 use std::io::{BufWriter, ErrorKind, Write};
 use std::net::{IpAddr, Ipv4Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -88,6 +92,18 @@ pub struct NetStats {
 }
 
 impl NetStats {
+    fn snapshot(counters: &NetCounters) -> NetStats {
+        NetStats {
+            accepted_conns: counters.accepted_conns.load(Ordering::SeqCst),
+            shed_conns: counters.shed_conns.load(Ordering::SeqCst),
+            http_requests: counters.http_requests.load(Ordering::SeqCst),
+            frames_in: counters.frames_in.load(Ordering::SeqCst),
+            responses_ok: counters.responses_ok.load(Ordering::SeqCst),
+            responses_err: counters.responses_err.load(Ordering::SeqCst),
+            malformed: counters.malformed.load(Ordering::SeqCst),
+        }
+    }
+
     /// The greppable `net:` summary line (pinned in `metrics`).
     pub fn line(&self) -> String {
         fmt_net_line(
@@ -99,6 +115,38 @@ impl NetStats {
             self.responses_err,
             self.malformed,
         )
+    }
+
+    /// The edge's own Prometheus section, appended to the backend's
+    /// exposition on `GET /metrics`.
+    pub fn render_metrics(&self, w: &mut PromWriter) {
+        w.header(
+            "swapless_net_connections_total",
+            "TCP connections by accept-time outcome.",
+            "counter",
+        );
+        for (state, v) in [("accepted", self.accepted_conns), ("shed", self.shed_conns)] {
+            w.counter("swapless_net_connections_total", &[("state", state)], v);
+        }
+        w.header(
+            "swapless_net_http_requests_total",
+            "HTTP requests served on the wire port (stats/metrics scrapes).",
+            "counter",
+        );
+        w.counter("swapless_net_http_requests_total", &[], self.http_requests);
+        w.header(
+            "swapless_net_frames_total",
+            "Wire frames by outcome: parsed submits, ok/error responses, refused parses.",
+            "counter",
+        );
+        for (kind, v) in [
+            ("in", self.frames_in),
+            ("ok", self.responses_ok),
+            ("err", self.responses_err),
+            ("malformed", self.malformed),
+        ] {
+            w.counter("swapless_net_frames_total", &[("kind", kind)], v);
+        }
     }
 }
 
@@ -193,15 +241,7 @@ impl NetListener {
 
     /// Point-in-time counter snapshot.
     pub fn stats(&self) -> NetStats {
-        NetStats {
-            accepted_conns: self.counters.accepted_conns.load(Ordering::SeqCst),
-            shed_conns: self.counters.shed_conns.load(Ordering::SeqCst),
-            http_requests: self.counters.http_requests.load(Ordering::SeqCst),
-            frames_in: self.counters.frames_in.load(Ordering::SeqCst),
-            responses_ok: self.counters.responses_ok.load(Ordering::SeqCst),
-            responses_err: self.counters.responses_err.load(Ordering::SeqCst),
-            malformed: self.counters.malformed.load(Ordering::SeqCst),
-        }
+        NetStats::snapshot(&self.counters)
     }
 
     /// Stop accepting, drain every connection (each in-flight `Ticket`
@@ -313,7 +353,7 @@ fn run_reader(
     }
     if reader.buffered().starts_with(b"GET ") {
         counters.http_requests.fetch_add(1, Ordering::SeqCst);
-        serve_http(stream, reader, backend, stop);
+        serve_http(stream, reader, backend, stop, &counters);
         return;
     }
 
@@ -474,12 +514,17 @@ fn run_writer(stream: TcpStream, rx: Receiver<Pending>, counters: Arc<NetCounter
     }
 }
 
-/// Minimal HTTP/1.1: `GET /stats` returns the greppable stats lines.
+/// Minimal HTTP/1.1: `GET /stats` returns the greppable stats lines,
+/// `GET /metrics` the Prometheus exposition (backend serving-plane
+/// series + the listener's own `swapless_net_*` section). Anything else
+/// — including a request line with no path at all — is a well-formed
+/// 404 naming both endpoints, never a dead connection thread.
 fn serve_http(
     mut stream: TcpStream,
     mut reader: FrameReader,
     backend: Arc<dyn WireBackend>,
     stop: Arc<AtomicBool>,
+    counters: &NetCounters,
 ) {
     // Read to the end of the request headers (bounded).
     loop {
@@ -499,11 +544,22 @@ fn serve_http(
         }
     }
     let head = String::from_utf8_lossy(reader.buffered()).into_owned();
+    // `nth(1)` is safe on any junk ("GET\r\n\r\n" has no path token —
+    // the empty default falls through to the 404 arm below).
     let path = head.split_whitespace().nth(1).unwrap_or("");
     let (status, body) = if path == "/stats" || path.starts_with("/stats?") {
         ("200 OK", backend.stats_text())
+    } else if path == "/metrics" || path.starts_with("/metrics?") {
+        let mut body = backend.metrics_text();
+        let mut w = PromWriter::new();
+        NetStats::snapshot(counters).render_metrics(&mut w);
+        body.push_str(&w.finish());
+        ("200 OK", body)
     } else {
-        ("404 Not Found", "not found; try GET /stats\n".to_string())
+        (
+            "404 Not Found",
+            "not found; try GET /stats or GET /metrics\n".to_string(),
+        )
     };
     let response = format!(
         "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
@@ -513,4 +569,114 @@ fn serve_http(
     let _ = stream.write_all(response.as_bytes());
     let _ = stream.flush();
     let _ = stream.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    /// HTTP-path tests never reach `submit`; the mock only renders text.
+    struct MockBackend;
+
+    impl WireBackend for MockBackend {
+        fn submit(&self, _h: crate::analytic::TenantHandle, _r: Request) -> Ticket {
+            unreachable!("HTTP-path tests never submit")
+        }
+
+        fn input_len(&self, _h: crate::analytic::TenantHandle) -> Option<usize> {
+            None
+        }
+
+        fn stats_text(&self) -> String {
+            "overload: accepted=0 rejected=0\n".to_string()
+        }
+
+        fn metrics_text(&self) -> String {
+            let mut w = PromWriter::new();
+            w.header("swapless_requests_total", "Requests by outcome.", "counter");
+            w.counter(
+                "swapless_requests_total",
+                &[("device", "0"), ("outcome", "completed")],
+                7,
+            );
+            w.finish()
+        }
+    }
+
+    fn get(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn stats_endpoint_returns_200_with_body() {
+        let l = NetListener::bind(Arc::new(MockBackend), "127.0.0.1:0", NetOptions::default())
+            .unwrap();
+        let resp = get(l.local_addr(), "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("overload: accepted=0"), "{resp}");
+        let st = l.shutdown();
+        assert_eq!(st.http_requests, 1);
+    }
+
+    #[test]
+    fn metrics_endpoint_renders_backend_plus_edge_sections() {
+        let l = NetListener::bind(Arc::new(MockBackend), "127.0.0.1:0", NetOptions::default())
+            .unwrap();
+        let resp = get(l.local_addr(), "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        // Backend serving-plane section, verbatim.
+        assert!(
+            resp.contains("# TYPE swapless_requests_total counter"),
+            "{resp}"
+        );
+        assert!(
+            resp.contains("swapless_requests_total{device=\"0\",outcome=\"completed\"} 7"),
+            "{resp}"
+        );
+        // The edge appends its own live counters — this scrape's own
+        // connection is already in them (counted before rendering).
+        assert!(
+            resp.contains("swapless_net_connections_total{state=\"accepted\"} 1"),
+            "{resp}"
+        );
+        assert!(resp.contains("swapless_net_http_requests_total 1"), "{resp}");
+        assert!(
+            resp.contains("swapless_net_frames_total{kind=\"in\"} 0"),
+            "{resp}"
+        );
+        l.shutdown();
+    }
+
+    #[test]
+    fn unknown_path_404_names_both_endpoints() {
+        let l = NetListener::bind(Arc::new(MockBackend), "127.0.0.1:0", NetOptions::default())
+            .unwrap();
+        let resp = get(l.local_addr(), "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404 Not Found"), "{resp}");
+        assert!(resp.contains("/stats"), "{resp}");
+        assert!(resp.contains("/metrics"), "{resp}");
+        l.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_line_gets_404_and_listener_survives() {
+        let l = NetListener::bind(Arc::new(MockBackend), "127.0.0.1:0", NetOptions::default())
+            .unwrap();
+        // "GET " sniffs as HTTP but carries no path token at all.
+        let resp = get(l.local_addr(), "GET \r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404 Not Found"), "{resp}");
+        // The handler answered instead of dying — and the NEXT
+        // connection is served normally.
+        let resp = get(l.local_addr(), "GET /stats HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        let st = l.shutdown();
+        assert_eq!(st.http_requests, 2);
+        assert_eq!(st.accepted_conns, 2);
+        assert_eq!(st.malformed, 0);
+    }
 }

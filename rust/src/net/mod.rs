@@ -45,6 +45,10 @@ pub trait WireBackend: Send + Sync {
     fn input_len(&self, handle: TenantHandle) -> Option<usize>;
     /// The greppable stats lines, one per row (for `GET /stats`).
     fn stats_text(&self) -> String;
+    /// Prometheus text exposition (for `GET /metrics`). The listener
+    /// appends its own `swapless_net_*` section, so backends render only
+    /// the serving-plane series.
+    fn metrics_text(&self) -> String;
 }
 
 impl WireBackend for Server {
@@ -94,6 +98,10 @@ impl WireBackend for Server {
         }
         out
     }
+
+    fn metrics_text(&self) -> String {
+        Server::metrics_text(self)
+    }
 }
 
 impl WireBackend for FleetServer {
@@ -139,5 +147,9 @@ impl WireBackend for FleetServer {
             ));
         }
         out
+    }
+
+    fn metrics_text(&self) -> String {
+        FleetServer::metrics_text(self)
     }
 }

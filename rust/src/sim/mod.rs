@@ -35,6 +35,7 @@ use crate::sched::{
     DisciplineKind, JobMeta, Offer, OverloadPolicy, RejectReason, SchedQueue, SloClass,
     StationLoad,
 };
+use crate::telemetry::{emit_burst, SpanSampler, SpanTrace, DEFAULT_SPAN_SAMPLE};
 use crate::tpu::{CostModel, PrefixTables, SramCache};
 use crate::util::rng::Rng;
 use crate::workload::{generate_arrivals, Arrival, RateSchedule};
@@ -89,6 +90,14 @@ pub struct SimOptions {
     /// is the fast default; the heap is the reference implementation.
     /// Results are bit-exact across kinds (`tests/queue_parity.rs`).
     pub queue: QueueKind,
+    /// Span sampling cadence: every N-th offered request carries a stage
+    /// timeline, flushed at completion as the same `Span*` record burst
+    /// the live server emits — timestamped in *virtual* time, so
+    /// sim-vs-live stage-timing parity is directly testable. `0`
+    /// disables. Spans are only sampled when a `log` is attached (they
+    /// have nowhere to go otherwise), so the default-path hot loop is
+    /// untouched.
+    pub span_sample: usize,
 }
 
 impl Default for SimOptions {
@@ -105,6 +114,7 @@ impl Default for SimOptions {
             faults: None,
             log: None,
             queue: QueueKind::Calendar,
+            span_sample: DEFAULT_SPAN_SAMPLE,
         }
     }
 }
@@ -227,6 +237,11 @@ pub struct Request {
     /// requests that can no longer meet it; under every policy a late
     /// completion is excluded from goodput.
     pub deadline: Option<f64>,
+    /// Sampled stage timeline (virtual-time spans). `Copy` like the rest
+    /// of the request, so it rides through the shared `SchedQueue` and
+    /// the event set unchanged; stations fill it exactly where the live
+    /// workers do, and `record_completion` flushes the burst.
+    pub trace: Option<SpanTrace>,
 }
 
 /// Per-model service-time memo for the current configuration — the DES
@@ -297,6 +312,9 @@ pub struct Simulator {
     weighted_latency: Welford,
     class_latency: PerClassLatency,
     timeline: Option<TimeSeries>,
+    /// 1-in-N span sampling — the same decision/allocation logic the live
+    /// server runs (single-threaded here, the atomics are uncontended).
+    sampler: SpanSampler,
     opts: SimOptions,
 }
 
@@ -359,6 +377,11 @@ impl Simulator {
             weighted_latency: Welford::new(),
             class_latency: PerClassLatency::new(),
             timeline: opts.timeline_window.map(TimeSeries::new),
+            sampler: SpanSampler::new(if opts.log.is_some() {
+                opts.span_sample
+            } else {
+                0
+            }),
             opts,
         }
     }
@@ -487,6 +510,24 @@ impl Simulator {
             ev.missed = missed;
             log.emit(ev);
         }
+        if let Some(tr) = &req.trace {
+            // Same burst the live CPU pool / TPU worker flushes, in
+            // virtual time. For a CPU-leg completion `now - mark` is the
+            // CPU service exactly (mark was set at service start); a
+            // full-TPU completion has `trace.p == P`, so `emit_burst`
+            // skips the CPU record and the value is moot.
+            emit_burst(
+                self.opts.log.as_ref(),
+                self.opts.device,
+                req.tenant.0,
+                req.class,
+                tr,
+                (now - tr.mark).max(0.0),
+                now,
+                self.tenants[i].model.partition_points,
+                None,
+            );
+        }
         if let Some(ts) = &mut self.timeline {
             ts.record(now, latency);
         }
@@ -579,7 +620,7 @@ impl Simulator {
                 self.count_drop(&req, DropKind::Expired, false, now);
             }
         }
-        let Some((_, req)) = self.tpu_queue.pop() else {
+        let Some((_, mut req)) = self.tpu_queue.pop() else {
             return;
         };
         let Some(i) = self.index_of(req.tenant) else {
@@ -587,6 +628,13 @@ impl Simulator {
             self.start_tpu_if_idle(now);
             return;
         };
+        if let Some(tr) = &mut req.trace {
+            // Same accumulation point as the live TPU worker: wait ends
+            // when service starts (or when a p=0 reroute hands the
+            // request to its CPU station, which re-marks on entry).
+            tr.queued += (now - tr.mark).max(0.0);
+            tr.mark = now;
+        }
         let p = self.cfg.partitions[i];
         // Admission under a p=0 config (post-reconfig): route to CPU.
         if p == 0 {
@@ -612,6 +660,10 @@ impl Simulator {
             .cache
             .access(req.tenant.0 as usize, memo.resident_bytes);
         let mut service = memo.tpu_service;
+        // Swap share of the slept service (slowdown-stretched below) —
+        // the exact split the live TPU worker computes, so a virtual
+        // `SpanSwap` calibrates identically to a wall-clock one.
+        let mut swap_part = if hit { 0.0 } else { memo.load_time };
         if !hit {
             service += memo.load_time;
         }
@@ -622,7 +674,9 @@ impl Simulator {
         // is replayed in virtual time.
         // `Arc` clone: refcount bump only, no deep copy per service start.
         if let Some(plan) = self.faults.clone() {
-            service *= plan.slow_factor(self.opts.device, now);
+            let slow = plan.slow_factor(self.opts.device, now);
+            service *= slow;
+            swap_part *= slow;
             let mut attempts: u32 = 0;
             let mut backoffs = 0.0;
             let exhausted = loop {
@@ -662,6 +716,15 @@ impl Simulator {
         self.tpu_busy = true;
         self.tpu_busy_until = now + service;
         self.tpu_busy_time += service;
+        if let Some(tr) = &mut req.trace {
+            // Stage split mirrors the live worker: the reload share is
+            // the swap stage, everything else slept on the station —
+            // compute, dispatch, retry backoffs — is the TPU stage.
+            tr.swap = swap_part;
+            tr.tpu = service - swap_part;
+            tr.tpu_end = now + service;
+            tr.mark = now + service;
+        }
         self.schedule(now + service, EventKind::TpuDone { req });
     }
 
@@ -669,11 +732,18 @@ impl Simulator {
     /// admission layer. `entry` marks the CPU station as the request's
     /// entry point (p = 0 routes), which decides the counter an overload
     /// refusal lands in (`rejected` at entry, `shed` mid-pipeline).
-    fn enqueue_cpu(&mut self, req: Request, now: f64, entry: bool) {
+    fn enqueue_cpu(&mut self, mut req: Request, now: f64, entry: bool) {
         let Some(i) = self.index_of(req.tenant) else {
             self.dropped += 1;
             return;
         };
+        if let Some(tr) = &mut req.trace {
+            // CPU-queue entry: the output transfer between the stations
+            // is a transfer, not queue wait — re-mark so `queued` stays
+            // pure (a no-op on the p=0 entry and reroute paths, where
+            // `mark` is already `now`).
+            tr.mark = now;
+        }
         let meta = JobMeta {
             tenant: req.tenant,
             class: req.class,
@@ -742,9 +812,14 @@ impl Simulator {
         // deadlock (counts as best-effort cleanup, negligible in steady state).
         let k_eff = k.max(if self.cpu_queues[m].is_empty() { 0 } else { 1 });
         while self.cpu_busy[m] < k_eff {
-            let Some((_, req)) = self.cpu_queues[m].pop() else {
+            let Some((_, mut req)) = self.cpu_queues[m].pop() else {
                 return;
             };
+            if let Some(tr) = &mut req.trace {
+                // Same accumulation point as the live CPU pool worker.
+                tr.queued += (now - tr.mark).max(0.0);
+                tr.mark = now;
+            }
             if req.arrived >= self.opts.warmup {
                 if let Some(log) = &self.opts.log {
                     log.emit(LogEvent::new(
@@ -813,6 +888,7 @@ impl Simulator {
                         arrived: a.time,
                         class: a.class,
                         deadline: a.deadline,
+                        trace: None,
                     },
                 },
             );
@@ -856,6 +932,7 @@ impl Simulator {
                                 arrived: t,
                                 class: a.class,
                                 deadline: a.deadline.map(|d| ev.time + d),
+                                trace: None,
                             },
                         },
                     );
@@ -893,7 +970,7 @@ impl Simulator {
                 break;
             }
             match ev.kind {
-                EventKind::Arrival { req } => {
+                EventKind::Arrival { mut req } => {
                     let Some(i) = self.index_of(req.tenant) else {
                         // Arrival for a tenant that already detached (or
                         // attaches later — cannot happen by construction).
@@ -904,6 +981,10 @@ impl Simulator {
                         p.observe_arrival(now, i);
                     }
                     let part = self.cfg.partitions[i];
+                    // Sampled BEFORE the admission offer — the same
+                    // cadence contract as the live server (1-in-N of
+                    // offered load; a refused request emits nothing).
+                    req.trace = self.sampler.try_begin(part, now);
                     if part > 0 {
                         // d_in/B transfer precedes TPU queueing.
                         let delay = self.memo[i].input_transfer;
@@ -912,7 +993,7 @@ impl Simulator {
                         self.enqueue_cpu(req, now, true);
                     }
                 }
-                EventKind::TpuEnqueue { req } => {
+                EventKind::TpuEnqueue { mut req } => {
                     // Hint = the deterministic prefix service under the
                     // *current* partition (stale after a reconfig only
                     // for already-queued jobs — advisory, not load-bearing).
@@ -921,6 +1002,13 @@ impl Simulator {
                         self.dropped += 1;
                         continue;
                     };
+                    if let Some(tr) = &mut req.trace {
+                        // Queue entry: the d_in/B transfer that preceded
+                        // it is a transfer, not queue wait — `queued`
+                        // stays pure so the stage-sum residual equals
+                        // the boundary transfers exactly.
+                        tr.mark = now;
+                    }
                     let meta = JobMeta {
                         tenant: req.tenant,
                         class: req.class,
@@ -1609,5 +1697,77 @@ mod tests {
         assert_eq!(a.mean_latency, b.mean_latency);
         assert_eq!(a.per_model[0].completed, b.per_model[0].completed);
         assert_eq!(a.per_model[1].completed, b.per_model[1].completed);
+    }
+
+    #[test]
+    fn spans_conserve_one_timeline_per_completion_in_virtual_time() {
+        // Sample-everything logged run on a split config: every completed
+        // request must flush exactly one Queued/Tpu/Cpu triplet, and the
+        // stage sums must account for the end-to-end latency up to the
+        // boundary transfers (which spans deliberately exclude).
+        let (cost, tenants) = setup(2.0);
+        let p = 3usize;
+        let cfg = Config {
+            partitions: vec![p],
+            cores: vec![2],
+        };
+        let path = std::env::temp_dir().join(format!(
+            "swapless-sim-span-{}.log",
+            std::process::id()
+        ));
+        let log = EventLog::create(&path).unwrap();
+        let res = simulate(
+            &cost,
+            &tenants,
+            &cfg,
+            SimOptions {
+                horizon: 50.0,
+                warmup: 0.0,
+                seed: 9,
+                log: Some(log.clone()),
+                span_sample: 1,
+                ..SimOptions::default()
+            },
+        );
+        log.close();
+        assert_eq!(log.dropped(), 0);
+        let events = crate::eventlog::read_all(&path).unwrap();
+        let count = |k: LogKind| events.iter().filter(|e| e.kind == k).count() as u64;
+        let completed = res.per_model[0].completed;
+        assert!(completed > 50, "workload too small");
+        assert_eq!(count(LogKind::SpanQueue), completed);
+        assert_eq!(count(LogKind::SpanTpu), completed);
+        assert_eq!(count(LogKind::SpanCpu), completed);
+        // Single resident model: exactly one cold miss pays a swap.
+        assert_eq!(count(LogKind::SpanSwap), 1);
+
+        // Stage sums + boundary transfers == end-to-end, per timeline.
+        let tables = PrefixTables::new(&cost, &tenants[0].model);
+        let transfers = tables.input_transfer() + tables.output_transfer(p);
+        let mut by_id: std::collections::BTreeMap<u32, (f64, f64, f64)> =
+            std::collections::BTreeMap::new();
+        for e in &events {
+            if let Some(stage) = crate::telemetry::Stage::from_kind(e.kind) {
+                assert_eq!(e.aux as usize, p, "span p mislabelled");
+                assert_eq!(e.span_tenant(), 0);
+                let slot = by_id.entry(e.span_id()).or_insert((f64::NAN, 0.0, 0.0));
+                match stage {
+                    crate::telemetry::Stage::Queued => slot.0 = e.t,
+                    crate::telemetry::Stage::Cpu => slot.1 = e.t,
+                    _ => {}
+                }
+                slot.2 += e.value;
+            }
+        }
+        assert_eq!(by_id.len() as u64, completed);
+        for (id, (start, end, stage_sum)) in &by_id {
+            assert!(start.is_finite(), "span {id}: no SpanQueue anchor");
+            let e2e = end - start;
+            assert!(
+                (stage_sum + transfers - e2e).abs() < 1e-9,
+                "span {id}: stages {stage_sum} + transfers {transfers} != e2e {e2e}"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

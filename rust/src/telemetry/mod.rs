@@ -1,0 +1,954 @@
+//! Request-stage tracing, the /metrics telemetry plane, and the
+//! span-calibrated profiled cost model.
+//!
+//! Three cooperating pieces:
+//!
+//! * **Stage spans** — a sampled (1-in-N, [`SpanSampler`]) request carries
+//!   a [`SpanTrace`] through the pipeline; at completion the producer
+//!   emits one burst of `Span*` records ([`emit_burst`]) through the
+//!   existing [`EventLog`] writer: `SpanQueue` (total cross-station
+//!   queue wait, stamped at the *admission* instant), `SpanSwap`
+//!   (prefix swap-in, misses only), `SpanTpu` (pure TPU service) and
+//!   `SpanCpu` (CPU suffix execution). Dropped requests emit nothing, so
+//!   "exactly one complete timeline per sampled completed request" is a
+//!   testable conservation property. The DES emits the identical burst
+//!   in virtual time, which makes sim-vs-live stage-timing comparable
+//!   record-for-record.
+//! * **[`SpanCollector`]** — a fixed-size, lock-free (atomics-only)
+//!   open-addressing table folding span durations into per-(device,
+//!   tenant, partition, stage) running estimates, fed inline at emission
+//!   on the live path and foldable offline from a log
+//!   ([`SpanCollector::fold_event`]). Estimates surface as
+//!   predicted-vs-observed drift gauges on `GET /metrics`.
+//! * **[`ProfiledCostModel`]** — the measured alternative to the analytic
+//!   [`CostModel`]: collector estimates override per-prefix entries of
+//!   [`PrefixTables`] via [`PrefixTables::with_measured`] (values are
+//!   copied, never re-accumulated), so a model calibrated from spans the
+//!   analytic model itself generated reproduces the analytic tables
+//!   **bit-for-bit** — the closing-the-loop parity the acceptance tests
+//!   pin.
+//!
+//! [`PromWriter`] renders everything in Prometheus text exposition
+//! format (HELP/TYPE headers deduplicated, label values escaped), reusing
+//! [`LatencyHistogram`](crate::metrics::LatencyHistogram) quantiles as
+//! summary series rather than dumping 1024 raw buckets.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::eventlog::{Event, EventKind, EventLog};
+use crate::metrics::LatencyHistogram;
+use crate::model::ModelMeta;
+use crate::sched::SloClass;
+use crate::tpu::{CostModel, PrefixTables};
+
+/// Default sampling cadence: one request in 16.
+pub const DEFAULT_SPAN_SAMPLE: usize = 16;
+
+/// The pipeline stage a span duration belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Total queue wait accumulated across every station.
+    Queued,
+    /// Prefix swap-in (SRAM cache miss) time.
+    Swap,
+    /// Pure TPU prefix service time.
+    Tpu,
+    /// CPU suffix execution time.
+    Cpu,
+}
+
+impl Stage {
+    pub const COUNT: usize = 4;
+    pub const ALL: [Stage; 4] = [Stage::Queued, Stage::Swap, Stage::Tpu, Stage::Cpu];
+
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Queued => 0,
+            Stage::Swap => 1,
+            Stage::Tpu => 2,
+            Stage::Cpu => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queued => "queued",
+            Stage::Swap => "swap",
+            Stage::Tpu => "tpu",
+            Stage::Cpu => "cpu",
+        }
+    }
+
+    /// The stage a `Span*` record kind carries; `None` for lifecycle kinds.
+    pub fn from_kind(kind: EventKind) -> Option<Stage> {
+        match kind {
+            EventKind::SpanQueue => Some(Stage::Queued),
+            EventKind::SpanSwap => Some(Stage::Swap),
+            EventKind::SpanTpu => Some(Stage::Tpu),
+            EventKind::SpanCpu => Some(Stage::Cpu),
+            _ => None,
+        }
+    }
+
+    fn kind(self) -> EventKind {
+        match self {
+            Stage::Queued => EventKind::SpanQueue,
+            Stage::Swap => EventKind::SpanSwap,
+            Stage::Tpu => EventKind::SpanTpu,
+            Stage::Cpu => EventKind::SpanCpu,
+        }
+    }
+}
+
+/// Per-request stage timeline under construction. `Copy` and fixed-size
+/// so it rides inside job structs and the DES request without allocating;
+/// everything is filled in by the stations and flushed in one burst at
+/// completion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanTrace {
+    /// Producer-local span id (regroups interleaved records; unique per
+    /// `(device, id)`).
+    pub id: u32,
+    /// The partition point the request executed under.
+    pub p: u16,
+    /// Admission time (producer clock) — `SpanQueue.t`, the timeline
+    /// anchor end-to-end latency is derived from.
+    pub start: f64,
+    /// Scratch: when the request last entered a queue; stations turn it
+    /// into `queued` increments at pop time.
+    pub mark: f64,
+    /// Accumulated cross-station queue wait.
+    pub queued: f64,
+    /// Swap-in duration (0.0 = cache hit or no TPU prefix).
+    pub swap: f64,
+    /// Pure TPU stage duration.
+    pub tpu: f64,
+    /// When the TPU stage finished — the stamp `SpanSwap`/`SpanTpu`
+    /// records carry. Stays `start` until a TPU stage completes, so the
+    /// trace can ride through the CPU leg without extra plumbing.
+    pub tpu_end: f64,
+}
+
+impl SpanTrace {
+    pub fn new(id: u32, p: usize, now: f64) -> SpanTrace {
+        SpanTrace {
+            id,
+            p: p.min(u16::MAX as usize) as u16,
+            start: now,
+            mark: now,
+            queued: 0.0,
+            swap: 0.0,
+            tpu: 0.0,
+            tpu_end: now,
+        }
+    }
+}
+
+/// Lock-free 1-in-N sampling decision + span-id allocation. `every == 0`
+/// disables sampling entirely.
+#[derive(Debug)]
+pub struct SpanSampler {
+    every: u64,
+    counter: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl SpanSampler {
+    pub fn new(every: usize) -> SpanSampler {
+        SpanSampler {
+            every: every as u64,
+            counter: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn every(&self) -> usize {
+        self.every as usize
+    }
+
+    /// Admission counter — total requests offered to the sampler.
+    pub fn offered(&self) -> u64 {
+        self.counter.load(Ordering::Relaxed)
+    }
+
+    /// Spans started (sampled admissions).
+    pub fn sampled(&self) -> u64 {
+        self.next_id.load(Ordering::Relaxed)
+    }
+
+    /// Decide at admission: every N-th offer starts a trace.
+    pub fn try_begin(&self, p: usize, now: f64) -> Option<SpanTrace> {
+        if self.every == 0 {
+            return None;
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        if n % self.every != 0 {
+            return None;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) as u32;
+        Some(SpanTrace::new(id, p, now))
+    }
+}
+
+/// Flush a completed trace as one burst of `Span*` records (when a log
+/// is attached) and fold the durations into the live estimates (when a
+/// collector is attached). Either sink may be absent — `/metrics` drift
+/// works without a log file, and offline replay works without a
+/// collector.
+///
+/// Emission rules (what the conservation property pins):
+/// * exactly one `SpanQueue`, stamped at the admission instant with the
+///   *total* cross-station queue wait;
+/// * one `SpanTpu` iff the partition has a TPU prefix (`p > 0`), stamped
+///   at `trace.tpu_end`;
+/// * at most one `SpanSwap` (misses only — hit-path zeros would corrupt
+///   swap-time calibration), same stamp;
+/// * one `SpanCpu` iff a CPU suffix ran (`p < p_max`), stamped at
+///   completion.
+#[allow(clippy::too_many_arguments)]
+pub fn emit_burst(
+    log: Option<&EventLog>,
+    device: usize,
+    tenant: u64,
+    class: SloClass,
+    trace: &SpanTrace,
+    cpu: f64,
+    end: f64,
+    p_max: usize,
+    collector: Option<&SpanCollector>,
+) {
+    let p = trace.p as usize;
+    let mut emit = |stage: Stage, t: f64, v: f64| {
+        if let Some(log) = log {
+            log.emit(Event::span(
+                stage.kind(),
+                t,
+                device,
+                tenant,
+                class,
+                trace.id,
+                p,
+                v,
+            ));
+        }
+        if let Some(c) = collector {
+            c.observe(device, tenant, p, stage, v);
+        }
+    };
+    emit(Stage::Queued, trace.start, trace.queued);
+    if p > 0 {
+        if trace.swap > 0.0 {
+            emit(Stage::Swap, trace.tpu_end, trace.swap);
+        }
+        emit(Stage::Tpu, trace.tpu_end, trace.tpu);
+    }
+    if p < p_max {
+        emit(Stage::Cpu, end, cpu);
+    }
+}
+
+/// Lock-free f64 accumulator: CAS loops over bit-cast atomics. Reads are
+/// monitoring-grade (sum and count may be one observation apart under
+/// concurrency), which is exactly what a scrape needs.
+struct StageAcc {
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl StageAcc {
+    fn new() -> StageAcc {
+        StageAcc {
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    fn add(&self, v: f64) {
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        let mut cur = self.min_bits.load(Ordering::Relaxed);
+        while v < f64::from_bits(cur) {
+            match self
+                .min_bits
+                .compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        let mut cur = self.max_bits.load(Ordering::Relaxed);
+        while v > f64::from_bits(cur) {
+            match self
+                .max_bits
+                .compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn stats(&self) -> Option<StageStats> {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return None;
+        }
+        Some(StageStats {
+            count,
+            mean: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)) / count as f64,
+            min: f64::from_bits(self.min_bits.load(Ordering::Relaxed)),
+            max: f64::from_bits(self.max_bits.load(Ordering::Relaxed)),
+        })
+    }
+}
+
+/// Snapshot of one (device, tenant, partition, stage) accumulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageStats {
+    pub count: u64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl StageStats {
+    /// The calibration value: when every observation was identical
+    /// (`min == max` — e.g. the DES's deterministic virtual times) the
+    /// exact observed f64 is returned, preserving bit-identity through
+    /// the mean division; otherwise the mean.
+    pub fn estimate(&self) -> f64 {
+        if self.min == self.max {
+            self.min
+        } else {
+            self.mean
+        }
+    }
+}
+
+/// Per-(device, tenant, partition) stage snapshots keyed for the
+/// profiled cost model: `(device, tenant-low-32, p)`.
+pub type EstimateMap = BTreeMap<(u16, u64, u16), SpanEstimate>;
+
+/// All four stage snapshots of one key.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpanEstimate {
+    stages: [Option<StageStats>; Stage::COUNT],
+}
+
+impl SpanEstimate {
+    pub fn stage(&self, s: Stage) -> Option<StageStats> {
+        self.stages[s.index()]
+    }
+}
+
+const COLLECTOR_SLOTS: usize = 1024;
+
+/// Fixed-size, allocation-free, lock-free fold of span durations into
+/// per-(device, tenant, partition, stage) running estimates.
+///
+/// Open addressing over [`COLLECTOR_SLOTS`] slots: the key packs
+/// `(device, tenant-low-32, p)` into a u64 (stored +1 so 0 means empty),
+/// placed by Fibonacci hashing with linear probing. A full table drops
+/// the observation and counts it ([`overflowed`](Self::overflowed)) —
+/// the span path never blocks and never allocates.
+pub struct SpanCollector {
+    slots: Vec<Slot>,
+    overflow: AtomicUsize,
+}
+
+struct Slot {
+    /// `packed_key + 1`; 0 = empty.
+    key: AtomicU64,
+    accs: [StageAcc; Stage::COUNT],
+}
+
+fn pack_key(device: usize, tenant: u64, p: usize) -> u64 {
+    ((device as u64 & 0xFFFF) << 48) | ((tenant & 0xFFFF_FFFF) << 16) | (p as u64 & 0xFFFF)
+}
+
+impl Default for SpanCollector {
+    fn default() -> Self {
+        SpanCollector::new()
+    }
+}
+
+impl SpanCollector {
+    pub fn new() -> SpanCollector {
+        SpanCollector {
+            slots: (0..COLLECTOR_SLOTS)
+                .map(|_| Slot {
+                    key: AtomicU64::new(0),
+                    accs: std::array::from_fn(|_| StageAcc::new()),
+                })
+                .collect(),
+            overflow: AtomicUsize::new(0),
+        }
+    }
+
+    /// Observations dropped because every slot was taken by other keys.
+    pub fn overflowed(&self) -> usize {
+        self.overflow.load(Ordering::Relaxed)
+    }
+
+    /// Fold one stage duration. Lock-free; drops (and counts) on table
+    /// overflow instead of blocking or allocating.
+    pub fn observe(&self, device: usize, tenant: u64, p: usize, stage: Stage, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let key = pack_key(device, tenant, p) + 1;
+        // Fibonacci hashing spreads the low-entropy packed keys.
+        let start = (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 54) as usize % COLLECTOR_SLOTS;
+        for i in 0..COLLECTOR_SLOTS {
+            let slot = &self.slots[(start + i) % COLLECTOR_SLOTS];
+            let cur = slot.key.load(Ordering::Acquire);
+            let owned = if cur == key {
+                true
+            } else if cur == 0 {
+                match slot.key.compare_exchange(
+                    0,
+                    key,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => true,
+                    Err(won) => won == key,
+                }
+            } else {
+                false
+            };
+            if owned {
+                slot.accs[stage.index()].add(v);
+                return;
+            }
+        }
+        self.overflow.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one decoded log record (offline counterpart of the inline
+    /// feed). Non-span records are ignored.
+    pub fn fold_event(&self, ev: &Event) {
+        if let Some(stage) = Stage::from_kind(ev.kind) {
+            self.observe(
+                ev.device as usize,
+                ev.span_tenant(),
+                ev.aux as usize,
+                stage,
+                ev.value,
+            );
+        }
+    }
+
+    /// Snapshot every populated key.
+    pub fn estimates(&self) -> EstimateMap {
+        let mut out = EstimateMap::new();
+        for slot in &self.slots {
+            let key = slot.key.load(Ordering::Acquire);
+            if key == 0 {
+                continue;
+            }
+            let packed = key - 1;
+            let device = (packed >> 48) as u16;
+            let tenant = (packed >> 16) & 0xFFFF_FFFF;
+            let p = (packed & 0xFFFF) as u16;
+            let mut est = SpanEstimate::default();
+            let mut any = false;
+            for stage in Stage::ALL {
+                est.stages[stage.index()] = slot.accs[stage.index()].stats();
+                any |= est.stages[stage.index()].is_some();
+            }
+            if any {
+                out.insert((device, tenant, p), est);
+            }
+        }
+        out
+    }
+}
+
+/// Measured alternative to the analytic [`CostModel`]: per-prefix span
+/// estimates override the analytic [`PrefixTables`] entries wherever a
+/// calibration point exists; every uncalibrated entry stays analytic.
+#[derive(Debug, Clone)]
+pub struct ProfiledCostModel {
+    analytic: CostModel,
+    estimates: BTreeMap<(u16, u64, u16), [Option<f64>; Stage::COUNT]>,
+}
+
+impl ProfiledCostModel {
+    /// No calibration points: behaves exactly like the analytic model.
+    pub fn new(analytic: CostModel) -> ProfiledCostModel {
+        ProfiledCostModel {
+            analytic,
+            estimates: BTreeMap::new(),
+        }
+    }
+
+    /// Calibrate from a live collector snapshot.
+    pub fn from_collector(analytic: CostModel, collector: &SpanCollector) -> ProfiledCostModel {
+        Self::from_estimates(analytic, &collector.estimates())
+    }
+
+    /// Calibrate from decoded log records (the offline path `--profile`
+    /// uses: replay a span-sampled log, fold, calibrate).
+    pub fn from_events(analytic: CostModel, events: &[Event]) -> ProfiledCostModel {
+        let c = SpanCollector::new();
+        for ev in events {
+            c.fold_event(ev);
+        }
+        Self::from_collector(analytic, &c)
+    }
+
+    pub fn from_estimates(analytic: CostModel, est: &EstimateMap) -> ProfiledCostModel {
+        let estimates = est
+            .iter()
+            .map(|(k, e)| {
+                let mut vals = [None; Stage::COUNT];
+                for stage in Stage::ALL {
+                    vals[stage.index()] = e.stage(stage).map(|s| s.estimate());
+                }
+                (*k, vals)
+            })
+            .collect();
+        ProfiledCostModel {
+            analytic,
+            estimates,
+        }
+    }
+
+    pub fn analytic(&self) -> &CostModel {
+        &self.analytic
+    }
+
+    /// Calibrated (device, tenant, partition) points.
+    pub fn calibrated_points(&self) -> usize {
+        self.estimates.len()
+    }
+
+    /// Build prefix tables for `(device, tenant)`: analytic base, then
+    /// measured overrides copied in verbatim. `SpanTpu` calibrates
+    /// `tpu_service(p)` (p > 0), `SpanCpu` calibrates `cpu_service(p)`
+    /// (p < P), `SpanSwap` calibrates `load_time(p)` (p > 0). Transfer
+    /// and residency columns stay analytic (spans do not measure bus
+    /// occupancy).
+    pub fn tables(&self, device: usize, tenant: u64, meta: &ModelMeta) -> PrefixTables {
+        let base = PrefixTables::new(&self.analytic, meta);
+        let pp = meta.partition_points;
+        let mut tpu = vec![None; pp + 1];
+        let mut cpu = vec![None; pp + 1];
+        let mut load = vec![None; pp + 1];
+        for (p, ((t, c), l)) in tpu.iter_mut().zip(cpu.iter_mut()).zip(load.iter_mut()).enumerate()
+        {
+            let key = (
+                device.min(u16::MAX as usize) as u16,
+                tenant & 0xFFFF_FFFF,
+                p as u16,
+            );
+            if let Some(vals) = self.estimates.get(&key) {
+                if p > 0 {
+                    *t = vals[Stage::Tpu.index()];
+                    *l = vals[Stage::Swap.index()];
+                }
+                if p < pp {
+                    *c = vals[Stage::Cpu.index()];
+                }
+            }
+        }
+        base.with_measured(&tpu, &cpu, &load)
+    }
+}
+
+/// `observed / predicted` drift ratio; `None` when the prediction is
+/// degenerate (zero/non-finite) or the observation is non-finite.
+pub fn drift_ratio(observed: f64, predicted: f64) -> Option<f64> {
+    if predicted > 0.0 && predicted.is_finite() && observed.is_finite() {
+        Some(observed / predicted)
+    } else {
+        None
+    }
+}
+
+/// Prometheus text-exposition writer: HELP/TYPE headers deduplicated by
+/// metric name (scrapers reject repeated headers), label values escaped
+/// per the spec, histograms rendered as quantile summaries.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+    seen: std::collections::BTreeSet<String>,
+}
+
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    /// Emit `# HELP` / `# TYPE` once per metric name.
+    pub fn header(&mut self, name: &str, help: &str, kind: &str) {
+        if self.seen.insert(name.to_string()) {
+            self.out.push_str(&format!("# HELP {name} {help}\n"));
+            self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+        }
+    }
+
+    fn labels(pairs: &[(&str, &str)]) -> String {
+        if pairs.is_empty() {
+            return String::new();
+        }
+        let inner: Vec<String> = pairs
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+            .collect();
+        format!("{{{}}}", inner.join(","))
+    }
+
+    /// One integer-valued sample line.
+    pub fn counter(&mut self, name: &str, pairs: &[(&str, &str)], v: u64) {
+        self.out
+            .push_str(&format!("{name}{} {v}\n", Self::labels(pairs)));
+    }
+
+    /// One float-valued sample line (Rust's shortest-roundtrip `Display`).
+    pub fn gauge(&mut self, name: &str, pairs: &[(&str, &str)], v: f64) {
+        self.out
+            .push_str(&format!("{name}{} {v}\n", Self::labels(pairs)));
+    }
+
+    /// Render a latency histogram as a Prometheus summary: p50/p90/p99
+    /// quantile series plus `_sum`/`_count`. Empty histograms emit only
+    /// the zero `_count` (NaN quantiles are not useful series).
+    pub fn summary(&mut self, name: &str, pairs: &[(&str, &str)], hist: &LatencyHistogram) {
+        let count = hist.count();
+        if count > 0 {
+            for (q, pct) in [("0.5", 50.0), ("0.9", 90.0), ("0.99", 99.0)] {
+                let mut with_q: Vec<(&str, &str)> = pairs.to_vec();
+                with_q.push(("quantile", q));
+                self.gauge(name, &with_q, hist.percentile(pct));
+            }
+            self.gauge(
+                &format!("{name}_sum"),
+                pairs,
+                hist.mean() * count as f64,
+            );
+        }
+        self.counter(&format!("{name}_count"), pairs, count);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareSpec;
+    use crate::model::synthetic_model;
+
+    #[test]
+    fn sampler_samples_one_in_n_and_allocates_ids() {
+        let s = SpanSampler::new(4);
+        let traces: Vec<SpanTrace> =
+            (0..16).filter_map(|i| s.try_begin(3, i as f64)).collect();
+        assert_eq!(traces.len(), 4);
+        for (i, t) in traces.iter().enumerate() {
+            assert_eq!(t.id, i as u32);
+            assert_eq!(t.p, 3);
+            assert_eq!(t.queued, 0.0);
+            assert_eq!(t.mark, t.start);
+        }
+        assert_eq!(s.offered(), 16);
+        assert_eq!(s.sampled(), 4);
+    }
+
+    #[test]
+    fn sampler_zero_disables() {
+        let s = SpanSampler::new(0);
+        assert!(s.try_begin(1, 0.0).is_none());
+        assert_eq!(s.offered(), 0);
+    }
+
+    #[test]
+    fn collector_exact_for_constant_observations_mean_otherwise() {
+        let c = SpanCollector::new();
+        // The awkward f64 0.1 must round-trip exactly when constant.
+        for _ in 0..3 {
+            c.observe(1, 7, 2, Stage::Tpu, 0.1);
+        }
+        c.observe(1, 7, 2, Stage::Cpu, 1.0);
+        c.observe(1, 7, 2, Stage::Cpu, 3.0);
+        let est = c.estimates();
+        let e = est[&(1, 7, 2)];
+        let tpu = e.stage(Stage::Tpu).unwrap();
+        assert_eq!(tpu.count, 3);
+        assert_eq!(tpu.estimate(), 0.1, "constant observations are bit-exact");
+        let cpu = e.stage(Stage::Cpu).unwrap();
+        assert_eq!(cpu.estimate(), 2.0);
+        assert_eq!(cpu.min, 1.0);
+        assert_eq!(cpu.max, 3.0);
+        assert!(e.stage(Stage::Swap).is_none());
+        assert_eq!(c.overflowed(), 0);
+    }
+
+    #[test]
+    fn collector_overflow_drops_and_counts() {
+        let c = SpanCollector::new();
+        for i in 0..(COLLECTOR_SLOTS + 10) as u64 {
+            c.observe(0, i, 1, Stage::Queued, 0.5);
+        }
+        assert_eq!(c.overflowed(), 10);
+        assert_eq!(c.estimates().len(), COLLECTOR_SLOTS);
+    }
+
+    #[test]
+    fn collector_folds_log_records() {
+        let c = SpanCollector::new();
+        let ev = Event::span(
+            EventKind::SpanTpu,
+            5.0,
+            2,
+            9,
+            SloClass::Standard,
+            0,
+            4,
+            0.25,
+        );
+        c.fold_event(&ev);
+        // Lifecycle records are ignored.
+        c.fold_event(&Event::new(EventKind::Complete, 1.0, 2, 9, SloClass::Standard));
+        let est = c.estimates();
+        assert_eq!(est.len(), 1);
+        assert_eq!(est[&(2, 9, 4)].stage(Stage::Tpu).unwrap().estimate(), 0.25);
+    }
+
+    #[test]
+    fn emit_burst_produces_one_ordered_timeline() {
+        let path = std::env::temp_dir().join(format!(
+            "swapless-telemetry-burst-{}.log",
+            std::process::id()
+        ));
+        let log = EventLog::create(&path).unwrap();
+        let mut tr = SpanTrace::new(5, 3, 10.0);
+        tr.queued = 0.004;
+        tr.swap = 0.002;
+        tr.tpu = 0.006;
+        tr.tpu_end = 10.012;
+        let c = SpanCollector::new();
+        emit_burst(
+            Some(&log),
+            1,
+            2,
+            SloClass::Interactive,
+            &tr,
+            0.008,
+            10.020,
+            6,
+            Some(&c),
+        );
+        log.close();
+        let events = crate::eventlog::read_all(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let kinds: Vec<EventKind> = events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::SpanQueue,
+                EventKind::SpanSwap,
+                EventKind::SpanTpu,
+                EventKind::SpanCpu
+            ]
+        );
+        for ev in &events {
+            assert_eq!(ev.span_id(), 5);
+            assert_eq!(ev.span_tenant(), 2);
+            assert_eq!(ev.aux, 3);
+        }
+        // Monotone stamps, anchored at admission.
+        assert_eq!(events[0].t, 10.0);
+        assert!(events.windows(2).all(|w| w[0].t <= w[1].t));
+        // Stage sum vs e2e: the residual is the transfer time.
+        let e2e = events.last().unwrap().t - events[0].t;
+        let sum: f64 = events.iter().map(|e| e.value).sum();
+        assert!((e2e - sum).abs() < 0.05);
+        // Inline fold observed all four stages.
+        assert_eq!(c.estimates()[&(1, 2, 3)].stage(Stage::Swap).unwrap().count, 1);
+    }
+
+    #[test]
+    fn emit_burst_edge_partitions_skip_absent_stages() {
+        let path = std::env::temp_dir().join(format!(
+            "swapless-telemetry-edge-{}.log",
+            std::process::id()
+        ));
+        let log = EventLog::create(&path).unwrap();
+        // p = 0: no TPU stage, no swap.
+        let tr0 = SpanTrace::new(0, 0, 1.0);
+        emit_burst(Some(&log), 0, 0, SloClass::Batch, &tr0, 0.5, 1.5, 4, None);
+        // p = P on a cache hit: no CPU stage, no swap record.
+        let mut trp = SpanTrace::new(1, 4, 2.0);
+        trp.tpu = 0.25;
+        trp.tpu_end = 2.3;
+        emit_burst(Some(&log), 0, 0, SloClass::Batch, &trp, 0.0, 2.3, 4, None);
+        log.close();
+        let events = crate::eventlog::read_all(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let kinds: Vec<EventKind> = events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::SpanQueue,
+                EventKind::SpanCpu,
+                EventKind::SpanQueue,
+                EventKind::SpanTpu
+            ]
+        );
+    }
+
+    #[test]
+    fn profiled_model_identity_without_calibration_and_verbatim_with() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let m = synthetic_model("m", 4, 1_000_000, 100_000_000);
+        let base = PrefixTables::new(&cost, &m);
+        let pm = ProfiledCostModel::new(cost.clone());
+        assert_eq!(pm.calibrated_points(), 0);
+        let t = pm.tables(0, 0, &m);
+        for p in 0..=4 {
+            assert_eq!(t.tpu_service(p), base.tpu_service(p));
+            assert_eq!(t.cpu_service(p), base.cpu_service(p));
+            assert_eq!(t.load_time(p), base.load_time(p));
+        }
+        // One measured point lands verbatim; other keys unaffected.
+        let c = SpanCollector::new();
+        c.observe(0, 0, 2, Stage::Tpu, 0.125);
+        let pm = ProfiledCostModel::from_collector(cost, &c);
+        assert_eq!(pm.calibrated_points(), 1);
+        let t = pm.tables(0, 0, &m);
+        assert_eq!(t.tpu_service(2), 0.125);
+        assert_eq!(t.tpu_service(1), base.tpu_service(1));
+        // A different tenant/device sees pure analytic tables.
+        let other = pm.tables(1, 0, &m);
+        assert_eq!(other.tpu_service(2), base.tpu_service(2));
+    }
+
+    #[test]
+    fn closing_the_loop_parity_from_analytic_spans() {
+        // Spans whose durations are the analytic model's own table
+        // values must calibrate a ProfiledCostModel whose tables are
+        // bit-identical to the analytic ones — for every prefix.
+        let cost = CostModel::new(HardwareSpec::default());
+        let m = synthetic_model("loop", 6, 2_000_000, 400_000_000);
+        let base = PrefixTables::new(&cost, &m);
+        let mut events = Vec::new();
+        for p in 0..=6usize {
+            for rep in 0..3u32 {
+                // Two spans per p with identical (analytic) durations —
+                // min == max keeps the estimate bit-exact.
+                if p > 0 {
+                    events.push(Event::span(
+                        EventKind::SpanTpu,
+                        rep as f64,
+                        0,
+                        0,
+                        SloClass::Standard,
+                        rep,
+                        p,
+                        base.tpu_service(p),
+                    ));
+                    events.push(Event::span(
+                        EventKind::SpanSwap,
+                        rep as f64,
+                        0,
+                        0,
+                        SloClass::Standard,
+                        rep,
+                        p,
+                        base.load_time(p),
+                    ));
+                }
+                if p < 6 {
+                    events.push(Event::span(
+                        EventKind::SpanCpu,
+                        rep as f64,
+                        0,
+                        0,
+                        SloClass::Standard,
+                        rep,
+                        p,
+                        base.cpu_service(p),
+                    ));
+                }
+            }
+        }
+        let pm = ProfiledCostModel::from_events(cost, &events);
+        let t = pm.tables(0, 0, &m);
+        for p in 0..=6 {
+            assert_eq!(t.tpu_service(p), base.tpu_service(p), "tpu p={p}");
+            assert_eq!(t.cpu_service(p), base.cpu_service(p), "cpu p={p}");
+            assert_eq!(t.load_time(p), base.load_time(p), "load p={p}");
+            assert_eq!(t.output_transfer(p), base.output_transfer(p));
+        }
+        assert_eq!(t.input_transfer(), base.input_transfer());
+    }
+
+    #[test]
+    fn drift_ratio_guards_degenerate_predictions() {
+        assert_eq!(drift_ratio(0.2, 0.1), Some(2.0));
+        assert_eq!(drift_ratio(0.2, 0.0), None);
+        assert_eq!(drift_ratio(f64::NAN, 0.1), None);
+        assert_eq!(drift_ratio(0.2, f64::INFINITY), None);
+    }
+
+    #[test]
+    fn prom_writer_escapes_labels_and_dedupes_headers() {
+        let mut w = PromWriter::new();
+        w.header("m_total", "a counter", "counter");
+        w.header("m_total", "a counter", "counter"); // deduped
+        w.counter("m_total", &[("name", "we\"ird\\mo\ndel")], 3);
+        w.gauge("g", &[], 0.5);
+        let mut h = LatencyHistogram::default();
+        h.record(0.010);
+        h.record(0.020);
+        w.summary("lat_seconds", &[("class", "interactive")], &h);
+        let empty = LatencyHistogram::default();
+        w.summary("lat_seconds", &[("class", "batch")], &empty);
+        let text = w.finish();
+        assert_eq!(text.matches("# HELP m_total").count(), 1);
+        assert!(text.contains("m_total{name=\"we\\\"ird\\\\mo\\ndel\"} 3"));
+        assert!(text.contains("g 0.5"));
+        assert!(text.contains("lat_seconds{class=\"interactive\",quantile=\"0.5\"}"));
+        assert!(text.contains("lat_seconds_count{class=\"interactive\"} 2"));
+        // Empty histogram: count line only, no NaN quantiles.
+        assert!(text.contains("lat_seconds_count{class=\"batch\"} 0"));
+        assert!(!text.contains("quantile=\"0.5\"} NaN"));
+        // Every non-comment line is `name{labels} value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.rsplit_once(' ').is_some(), "malformed line: {line}");
+        }
+    }
+}

@@ -99,6 +99,34 @@ impl PrefixTables {
         }
     }
 
+    /// Clone with per-prefix *measured* overrides (from the telemetry
+    /// span collector). Each slice is indexed `0..=P`; `None` keeps the
+    /// analytic entry. Values are **copied verbatim, never
+    /// re-accumulated**, so a table calibrated with the analytic model's
+    /// own values is bit-for-bit identical to the uncalibrated one — the
+    /// parity contract `ProfiledCostModel` relies on. Transfer and
+    /// residency columns stay analytic: spans measure service stages,
+    /// not bus occupancy.
+    pub fn with_measured(
+        &self,
+        tpu_service: &[Option<f64>],
+        cpu_service: &[Option<f64>],
+        load_time: &[Option<f64>],
+    ) -> PrefixTables {
+        let mut t = self.clone();
+        let apply = |col: &mut [f64], over: &[Option<f64>]| {
+            for (slot, o) in col.iter_mut().zip(over) {
+                if let Some(v) = o {
+                    *slot = *v;
+                }
+            }
+        };
+        apply(&mut t.tpu_service, tpu_service);
+        apply(&mut t.cpu_service, cpu_service);
+        apply(&mut t.load_time, load_time);
+        t
+    }
+
     /// Build one table per tenant model (the common call site).
     pub fn for_tenants(cost: &CostModel, tenants: &[crate::analytic::Tenant]) -> Vec<PrefixTables> {
         tenants
@@ -188,6 +216,30 @@ mod tests {
     #[test]
     fn bitexact_single_segment() {
         check_model("tiny", 1, 500_000, 10_000_000);
+    }
+
+    #[test]
+    fn with_measured_copies_overrides_and_keeps_the_rest() {
+        let cost = CostModel::new(HardwareSpec::default());
+        let m = synthetic_model("m", 4, 1_000_000, 100_000_000);
+        let t = PrefixTables::new(&cost, &m);
+        let none = vec![None; 5];
+        // All-None calibration is the identity (bit-exact clone).
+        let same = t.with_measured(&none, &none, &none);
+        for p in 0..=4 {
+            assert_eq!(same.tpu_service(p), t.tpu_service(p));
+            assert_eq!(same.cpu_service(p), t.cpu_service(p));
+            assert_eq!(same.load_time(p), t.load_time(p));
+        }
+        // A single override lands verbatim; neighbors untouched.
+        let mut tpu = none.clone();
+        tpu[2] = Some(0.125);
+        let cal = t.with_measured(&tpu, &none, &none);
+        assert_eq!(cal.tpu_service(2), 0.125);
+        assert_eq!(cal.tpu_service(1), t.tpu_service(1));
+        assert_eq!(cal.tpu_service(3), t.tpu_service(3));
+        assert_eq!(cal.cpu_service(2), t.cpu_service(2));
+        assert_eq!(cal.output_transfer(2), t.output_transfer(2));
     }
 
     #[test]

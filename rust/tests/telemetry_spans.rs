@@ -1,0 +1,505 @@
+//! Span conservation + profiled-cost-model parity, live and simulated.
+//!
+//! The tracing contract (telemetry module docs) pinned four ways:
+//!
+//! 1. DES property: across disciplines × overload policies on random
+//!    workloads, every completed request of a sample-everything run
+//!    flushes exactly one well-formed timeline — one `SpanQueue`,
+//!    `SpanTpu` iff the partition has a TPU prefix, at most one
+//!    `SpanSwap` (misses only), `SpanCpu` iff a CPU suffix ran — with
+//!    monotone stamps, and the stage durations plus the boundary
+//!    transfers (which spans deliberately exclude) reproduce the
+//!    end-to-end latency exactly;
+//! 2. live property: the wall-clock server upholds the same
+//!    conservation across the same matrix, where the stage sum itself
+//!    telescopes to the end-to-end time (the live path has no separate
+//!    transfer stations — every instant between admission and
+//!    completion lands in exactly one stage);
+//! 3. live calibration: collector estimates from a sampled run override
+//!    exactly the observed (device, tenant, partition) prefix-table
+//!    entries, verbatim, and leave every unobserved entry analytic;
+//! 4. closing the loop: a [`ProfiledCostModel`] calibrated from spans
+//!    the DES generated (whose virtual service draws ARE the analytic
+//!    values) rebuilds every tenant's tables bit-identically to the
+//!    analytic [`PrefixTables`], across full-TPU, split, and all-CPU
+//!    partition shapes.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use swapless::analytic::{Config, Tenant};
+use swapless::config::HardwareSpec;
+use swapless::coordinator::{AttachOptions, ServerBuilder};
+use swapless::eventlog::{read_all, Event, EventLog};
+use swapless::model::{synthetic_model, Manifest};
+use swapless::runtime::service::ExecBackend;
+use swapless::sched::{DisciplineKind, OverloadPolicy, SloClass};
+use swapless::sim::{SimOptions, Simulator};
+use swapless::telemetry::{ProfiledCostModel, Stage};
+use swapless::tpu::{CostModel, PrefixTables};
+use swapless::util::rng::Rng;
+use swapless::workload::{generate_arrivals_annotated, RateSchedule};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("swapless-{name}-{}.log", std::process::id()))
+}
+
+/// One reassembled span timeline: per-stage record counts, stamps, and
+/// the stage-duration sum.
+#[derive(Debug)]
+struct Timeline {
+    tenant: u64,
+    p: usize,
+    count: [usize; Stage::COUNT],
+    stamp: [f64; Stage::COUNT],
+    sum: f64,
+}
+
+/// Regroup `Span*` records by (device, span id), checking per-record
+/// invariants (non-negative durations, stable tenant/partition labels)
+/// along the way.
+fn collect_timelines(events: &[Event]) -> BTreeMap<(u16, u32), Timeline> {
+    let mut out: BTreeMap<(u16, u32), Timeline> = BTreeMap::new();
+    for e in events {
+        let Some(stage) = Stage::from_kind(e.kind) else {
+            continue;
+        };
+        assert!(e.value >= 0.0, "negative {} duration {}", stage.name(), e.value);
+        let tl = out.entry((e.device, e.span_id())).or_insert(Timeline {
+            tenant: e.span_tenant(),
+            p: e.aux as usize,
+            count: [0; Stage::COUNT],
+            stamp: [f64::NAN; Stage::COUNT],
+            sum: 0.0,
+        });
+        assert_eq!(tl.tenant, e.span_tenant(), "span id regrouped across tenants");
+        assert_eq!(tl.p, e.aux as usize, "span id regrouped across partitions");
+        tl.count[stage.index()] += 1;
+        tl.stamp[stage.index()] = e.t;
+        tl.sum += e.value;
+    }
+    out
+}
+
+impl Timeline {
+    fn count_of(&self, s: Stage) -> usize {
+        self.count[s.index()]
+    }
+
+    fn stamp_of(&self, s: Stage) -> f64 {
+        self.stamp[s.index()]
+    }
+
+    /// Structural emission rules + stamp monotonicity for a timeline
+    /// executed at partition `self.p` of a model with `p_max` points.
+    fn check_structure(&self, p_max: usize, tag: &str) {
+        assert_eq!(self.count_of(Stage::Queued), 1, "{tag}: SpanQueue count");
+        if self.p > 0 {
+            assert_eq!(self.count_of(Stage::Tpu), 1, "{tag}: SpanTpu count (p > 0)");
+            assert!(self.count_of(Stage::Swap) <= 1, "{tag}: multiple SpanSwap");
+        } else {
+            assert_eq!(self.count_of(Stage::Tpu), 0, "{tag}: SpanTpu on p = 0");
+            assert_eq!(self.count_of(Stage::Swap), 0, "{tag}: SpanSwap on p = 0");
+        }
+        let want_cpu = usize::from(self.p < p_max);
+        assert_eq!(self.count_of(Stage::Cpu), want_cpu, "{tag}: SpanCpu count");
+
+        let start = self.stamp_of(Stage::Queued);
+        assert!(start.is_finite(), "{tag}: no admission anchor");
+        if self.count_of(Stage::Tpu) == 1 {
+            let tpu_end = self.stamp_of(Stage::Tpu);
+            assert!(start <= tpu_end, "{tag}: TPU stamp precedes admission");
+            if self.count_of(Stage::Swap) == 1 {
+                assert_eq!(
+                    self.stamp_of(Stage::Swap),
+                    tpu_end,
+                    "{tag}: swap and tpu must share the service-end stamp"
+                );
+            }
+            if self.count_of(Stage::Cpu) == 1 {
+                assert!(tpu_end <= self.stamp_of(Stage::Cpu), "{tag}: CPU before TPU");
+            }
+        }
+        if self.count_of(Stage::Cpu) == 1 {
+            assert!(
+                start <= self.stamp_of(Stage::Cpu),
+                "{tag}: completion precedes admission"
+            );
+        }
+    }
+}
+
+fn random_tenants(rng: &mut Rng) -> Vec<Tenant> {
+    let n = 2 + rng.below(3);
+    (0..n)
+        .map(|i| {
+            let segs = 2 + rng.below(8);
+            let mb_total = rng.range_f64(1.0, 30.0);
+            let gflops = rng.range_f64(0.2, 8.0);
+            Tenant {
+                model: synthetic_model(
+                    &format!("m{i}"),
+                    segs,
+                    (mb_total * 1e6 / segs as f64) as u64,
+                    (gflops * 1e9 / segs as f64) as u64,
+                ),
+                rate: rng.range_f64(0.5, 5.0),
+            }
+        })
+        .collect()
+}
+
+/// DES conservation property: one exact timeline per completion, for
+/// every discipline × overload policy, on random workloads and random
+/// (constraint-consistent) configurations.
+#[test]
+fn prop_des_span_conservation_across_disciplines_and_policies() {
+    const ARRIVAL_SPAN: f64 = 20.0;
+    let path = tmp("span-des");
+    let cost = CostModel::new(HardwareSpec::default());
+    for (case, (discipline, policy)) in DisciplineKind::ALL
+        .into_iter()
+        .flat_map(|d| OverloadPolicy::ALL.into_iter().map(move |p| (d, p)))
+        .enumerate()
+    {
+        let seed = 5600 + case as u64;
+        let tag = format!("seed {seed} {discipline} {policy}");
+        let mut rng = Rng::new(seed);
+        let tenants = random_tenants(&mut rng);
+        let partitions: Vec<usize> = tenants
+            .iter()
+            .map(|t| rng.below(t.model.partition_points + 1))
+            .collect();
+        let cores: Vec<usize> = partitions
+            .iter()
+            .zip(&tenants)
+            .map(|(&p, t)| {
+                if p == t.model.partition_points {
+                    0
+                } else {
+                    1 + rng.below(2)
+                }
+            })
+            .collect();
+        let cfg = Config { partitions: partitions.clone(), cores };
+        let schedules: Vec<RateSchedule> = tenants
+            .iter()
+            .map(|t| RateSchedule::constant(t.rate))
+            .collect();
+        let classes: Vec<SloClass> = (0..tenants.len())
+            .map(|_| SloClass::from_index(rng.below(3)).unwrap())
+            .collect();
+        let deadlines: Vec<Option<f64>> = (0..tenants.len())
+            .map(|_| {
+                if rng.f64() < 0.5 {
+                    Some(rng.range_f64(0.005, 0.5))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let mut arr_rng = Rng::new(seed ^ 0x5AA5);
+        let arrivals = generate_arrivals_annotated(
+            &schedules,
+            &classes,
+            &deadlines,
+            ARRIVAL_SPAN,
+            &mut arr_rng,
+        );
+
+        let log = EventLog::create(&path).unwrap();
+        let mut sim = Simulator::new(
+            &cost,
+            &tenants,
+            cfg,
+            SimOptions {
+                horizon: 5000.0,
+                warmup: 0.0,
+                seed,
+                discipline,
+                capacity: Some(1 + rng.below(8)),
+                overload: policy,
+                span_sample: 1,
+                log: Some(log.clone()),
+                ..SimOptions::default()
+            },
+        );
+        let res = sim.run(&arrivals, None);
+        log.close();
+        assert_eq!(log.dropped(), 0, "{tag}: bounded channel overflowed");
+        let events = read_all(&path).unwrap();
+
+        let completed: u64 = res.per_model.iter().map(|m| m.completed).sum();
+        assert!(completed > 0, "{tag}: workload too small");
+        let timelines = collect_timelines(&events);
+        assert_eq!(
+            timelines.len() as u64,
+            completed,
+            "{tag}: one timeline per completion"
+        );
+
+        let tables: Vec<PrefixTables> = tenants
+            .iter()
+            .map(|t| PrefixTables::new(&cost, &t.model))
+            .collect();
+        for ((_, id), tl) in &timelines {
+            let i = tl.tenant as usize;
+            let p_max = tenants[i].model.partition_points;
+            let tag = format!("{tag} span {id}");
+            assert_eq!(tl.p, partitions[i], "{tag}: partition label");
+            tl.check_structure(p_max, &tag);
+            // Exact accounting: stage sum + the boundary transfers the
+            // spans deliberately exclude == the timeline's extent, in
+            // all three partition shapes. Full-TPU timelines end at the
+            // TPU stamp (the output transfer back to the host happens
+            // after it), CPU-leg timelines at the completion stamp.
+            let start = tl.stamp_of(Stage::Queued);
+            let (end, transfers) = if tl.p == 0 {
+                (tl.stamp_of(Stage::Cpu), 0.0)
+            } else if tl.p < p_max {
+                (
+                    tl.stamp_of(Stage::Cpu),
+                    tables[i].input_transfer() + tables[i].output_transfer(tl.p),
+                )
+            } else {
+                (tl.stamp_of(Stage::Tpu), tables[i].input_transfer())
+            };
+            let extent = end - start;
+            assert!(
+                (tl.sum + transfers - extent).abs() < 1e-9,
+                "{tag}: stages {} + transfers {transfers} != extent {extent}",
+                tl.sum
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Live conservation property: the wall-clock server upholds the same
+/// contract across the same discipline × policy matrix. Here the stage
+/// sum telescopes to the full end-to-end time — queue waits run from
+/// each push to the matching pop and services from pop to their end
+/// stamp, so no instant between admission and the last stamp is
+/// unaccounted.
+#[test]
+fn live_span_conservation_across_disciplines_and_policies() {
+    const BURSTS: usize = 8;
+    const BURST: usize = 12;
+    let path = tmp("span-live");
+    for (discipline, policy) in DisciplineKind::ALL
+        .into_iter()
+        .flat_map(|d| OverloadPolicy::ALL.into_iter().map(move |p| (d, p)))
+    {
+        let tag = format!("{discipline} {policy}");
+        let log = EventLog::create(&path).unwrap();
+        let server = ServerBuilder::new(
+            &Manifest::synthetic(),
+            CostModel::new(HardwareSpec::default()),
+        )
+        .backend(ExecBackend::Emulated)
+        .adaptive(false)
+        .discipline(discipline)
+        .overload(policy)
+        .queue_capacity(6)
+        .span_sample(1)
+        .log(log.clone())
+        .build()
+        .unwrap();
+        let handles = [
+            server.attach("mobilenetv2", AttachOptions::default()).unwrap(),
+            server.attach("squeezenet", AttachOptions::default()).unwrap(),
+        ];
+        let p_max: Vec<usize> = handles
+            .iter()
+            .map(|&h| server.model_meta(h).unwrap().partition_points)
+            .collect();
+        let inputs: Vec<Vec<f32>> = handles
+            .iter()
+            .map(|&h| {
+                let n: usize = server.model_meta(h).unwrap().input_shape.iter().product();
+                vec![0.5f32; n]
+            })
+            .collect();
+
+        // Bursts wider than the queue bound, so every policy actually
+        // exercises its refusal path while completions accumulate.
+        let mut ok = 0u64;
+        for round in 0..BURSTS {
+            let tickets: Vec<_> = (0..BURST)
+                .map(|i| {
+                    let which = (round + i) % 2;
+                    server.submit(handles[which], inputs[which].clone())
+                })
+                .collect();
+            for t in tickets {
+                if t.wait().is_ok() {
+                    ok += 1;
+                }
+            }
+        }
+        let stats = server.stats();
+        drop(server);
+        log.close();
+        assert_eq!(log.dropped(), 0, "{tag}: bounded channel overflowed");
+        assert_eq!(stats.completed, ok, "{tag}: ticket/counter mismatch");
+        assert!(ok > 0, "{tag}: nothing completed");
+
+        let events = read_all(&path).unwrap();
+        let timelines = collect_timelines(&events);
+        assert_eq!(
+            timelines.len() as u64,
+            ok,
+            "{tag}: one timeline per completed request"
+        );
+        for ((_, id), tl) in &timelines {
+            let tag = format!("{tag} span {id}");
+            let pm = p_max[tl.tenant as usize];
+            tl.check_structure(pm, &tag);
+            let start = tl.stamp_of(Stage::Queued);
+            let end = if tl.p < pm {
+                tl.stamp_of(Stage::Cpu)
+            } else {
+                tl.stamp_of(Stage::Tpu)
+            };
+            let e2e = end - start;
+            assert!(
+                (tl.sum - e2e).abs() < 1e-6,
+                "{tag}: stage sum {} leaves a gap against e2e {e2e}",
+                tl.sum
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Live calibration: collector estimates from a sample-everything run
+/// override exactly the observed prefix-table entries (verbatim copies
+/// of the estimates) and leave every unobserved entry analytic.
+#[test]
+fn live_spans_calibrate_profiled_tables() {
+    let cost = CostModel::new(HardwareSpec::default());
+    let server = ServerBuilder::new(&Manifest::synthetic(), cost.clone())
+        .backend(ExecBackend::Emulated)
+        .adaptive(false)
+        .span_sample(1)
+        .build()
+        .unwrap();
+    let h = server.attach("mobilenetv2", AttachOptions::default()).unwrap();
+    let meta = server.model_meta(h).unwrap();
+    let n: usize = meta.input_shape.iter().product();
+    let input = vec![0.5f32; n];
+    for _ in 0..60 {
+        server.submit(h, input.clone()).wait().unwrap();
+    }
+
+    let est = server.span_estimates();
+    assert!(!est.is_empty(), "sample-everything run produced no estimates");
+    let pm = ProfiledCostModel::from_collector(cost.clone(), &server.span_collector());
+    assert_eq!(pm.calibrated_points(), est.len());
+
+    let analytic = PrefixTables::new(&cost, &meta);
+    let profiled = pm.tables(0, h.0, &meta);
+    let mut overridden = 0usize;
+    for p in 0..=meta.partition_points {
+        match est.get(&(0u16, h.0 & 0xFFFF_FFFF, p as u16)) {
+            Some(e) => {
+                if p > 0 {
+                    if let Some(s) = e.stage(Stage::Tpu) {
+                        assert_eq!(profiled.tpu_service(p), s.estimate(), "tpu p={p}");
+                        overridden += 1;
+                    }
+                    if let Some(s) = e.stage(Stage::Swap) {
+                        assert_eq!(profiled.load_time(p), s.estimate(), "swap p={p}");
+                    }
+                }
+                if p < meta.partition_points {
+                    if let Some(s) = e.stage(Stage::Cpu) {
+                        assert_eq!(profiled.cpu_service(p), s.estimate(), "cpu p={p}");
+                        overridden += 1;
+                    }
+                }
+            }
+            None => {
+                assert_eq!(profiled.tpu_service(p), analytic.tpu_service(p));
+                assert_eq!(profiled.cpu_service(p), analytic.cpu_service(p));
+                assert_eq!(profiled.load_time(p), analytic.load_time(p));
+            }
+        }
+    }
+    assert!(overridden > 0, "no measured override landed in the tables");
+}
+
+/// Closing the loop: a profiled model calibrated from DES-generated
+/// spans — whose virtual service draws ARE the analytic values —
+/// rebuilds every tenant's prefix tables bit-identically to the
+/// analytic ones, across full-TPU, split, and all-CPU shapes.
+#[test]
+fn profiled_model_rebuilds_analytic_tables_from_des_spans() {
+    const ARRIVAL_SPAN: f64 = 30.0;
+    let path = tmp("span-oracle");
+    let cost = CostModel::new(HardwareSpec::default());
+    let tenants = vec![
+        Tenant {
+            model: synthetic_model("full", 4, 800_000, 300_000_000),
+            rate: 3.0,
+        },
+        Tenant {
+            model: synthetic_model("split", 5, 900_000, 350_000_000),
+            rate: 2.0,
+        },
+        Tenant {
+            model: synthetic_model("cpu", 3, 600_000, 250_000_000),
+            rate: 2.0,
+        },
+    ];
+    let cfg = Config {
+        partitions: vec![4, 2, 0],
+        cores: vec![0, 2, 2],
+    };
+    let schedules: Vec<RateSchedule> = tenants
+        .iter()
+        .map(|t| RateSchedule::constant(t.rate))
+        .collect();
+    let classes = vec![SloClass::Standard; 3];
+    let deadlines = vec![None; 3];
+    let mut rng = Rng::new(77);
+    let arrivals =
+        generate_arrivals_annotated(&schedules, &classes, &deadlines, ARRIVAL_SPAN, &mut rng);
+
+    let log = EventLog::create(&path).unwrap();
+    let mut sim = Simulator::new(
+        &cost,
+        &tenants,
+        cfg,
+        SimOptions {
+            horizon: 5000.0,
+            warmup: 0.0,
+            seed: 77,
+            span_sample: 1,
+            log: Some(log.clone()),
+            ..SimOptions::default()
+        },
+    );
+    let res = sim.run(&arrivals, None);
+    log.close();
+    assert_eq!(log.dropped(), 0);
+    assert!(res.per_model.iter().all(|m| m.completed > 10), "undertrained oracle");
+    let events = read_all(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let pm = ProfiledCostModel::from_events(cost.clone(), &events);
+    assert!(
+        pm.calibrated_points() >= tenants.len(),
+        "expected at least one calibration point per tenant, got {}",
+        pm.calibrated_points()
+    );
+    for (i, t) in tenants.iter().enumerate() {
+        let analytic = PrefixTables::new(&cost, &t.model);
+        let profiled = pm.tables(0, i as u64, &t.model);
+        for p in 0..=t.model.partition_points {
+            assert_eq!(profiled.tpu_service(p), analytic.tpu_service(p), "tenant {i} tpu p={p}");
+            assert_eq!(profiled.cpu_service(p), analytic.cpu_service(p), "tenant {i} cpu p={p}");
+            assert_eq!(profiled.load_time(p), analytic.load_time(p), "tenant {i} load p={p}");
+        }
+    }
+}
